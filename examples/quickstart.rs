@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts, run one GCN inference through the
+//! full stack (CPU-side PreG preprocessing → PJRT execution), check the
+//! accuracy, and show a GrAd dynamic update — all in ~40 lines of API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use grannite::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.toml").exists() {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+
+    // 1. open the coordinator: PJRT runtime + dataset + trained weights
+    let mut c = Coordinator::open(artifacts, "cora")?;
+    println!(
+        "loaded cora twin: {} nodes / {} edges / {} classes",
+        c.state.dataset.num_nodes(),
+        c.state.dataset.graph.num_edges(),
+        c.state.dataset.num_classes()
+    );
+
+    // 2. one StaGr inference (static graph, norm mask precomputed on CPU)
+    let (logits, us) = grannite::util::timing::time_once(|| c.infer("gcn_stagr_cora"));
+    let logits = logits?;
+    let mask = c.state.dataset.test_mask.clone();
+    println!(
+        "gcn_stagr: test accuracy {:.3} in {} (first call includes XLA compile)",
+        c.state.dataset.accuracy(&logits, &mask),
+        grannite::util::human_us(us)
+    );
+    let (_, warm_us) = grannite::util::timing::time_once(|| c.infer("gcn_stagr_cora"));
+    println!("warm inference: {}", grannite::util::human_us(warm_us));
+
+    // 3. QuantGr INT8 variant — same API, quantized artifact
+    let qacc = c.evaluate("gcn_quant_cora")?;
+    println!("gcn_quant (INT8): test accuracy {qacc:.3}");
+
+    // 4. GrAd: mutate the graph, re-infer through the NodePad artifact —
+    //    no recompilation, just a CPU-side mask refresh
+    c.state.add_edge(0, 1000)?;
+    c.state.add_node()?;
+    let (logits, us) = grannite::util::timing::time_once(|| c.infer("gcn_grad_cora"));
+    let _ = logits?;
+    println!(
+        "gcn_grad after AddEdge+AddNode: re-inferred in {} (graph v{})",
+        grannite::util::human_us(us),
+        c.state.graph_version()
+    );
+
+    // 5. what would this cost on the Series-2 NPU? (simulator)
+    let hw = grannite::config::HardwareConfig::npu_series2();
+    let r = c.simulate_variant("gcn", "stagr", &hw, &Default::default())?;
+    println!(
+        "simulated NPU latency: {} ({:.0} inf/s)",
+        grannite::util::human_us(r.total_us),
+        r.throughput()
+    );
+    Ok(())
+}

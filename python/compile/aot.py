@@ -1,0 +1,340 @@
+"""AOT export: lower every model variant to HLO text + pack .gnnt artifacts.
+
+This is the single build-time entry point (`make artifacts`). It:
+
+1. builds the synthetic dataset twins and packs them into
+   `artifacts/<dataset>.gnnt` (features/labels/masks/edges — derived
+   matrices like the PreG norm are computed *in rust*, on the CPU side of
+   GraphSplit, which is exactly where the paper puts them);
+2. trains all four models per dataset, runs QuantGr calibration, and packs
+   weights + scales into `artifacts/weights_<model>_<dataset>.gnnt`;
+3. lowers every (model, variant) pair to `artifacts/<name>.hlo.txt` via the
+   HLO-text interchange (xla_extension 0.5.1 rejects jax≥0.5 serialized
+   protos — see /opt/xla-example/README.md);
+4. writes `artifacts/manifest.toml` describing every artifact (inputs,
+   shapes, dtypes) for the rust runtime's registry.
+
+All big tensors (norm matrix, features, weights) are runtime *inputs* to
+the lowered computations, never baked constants: HLO text constants at
+2708² scale would be ~100 MB, and — more importantly — mask-as-input is
+GrAd itself. The StaGr/GrAd distinction (precompute-once vs per-request
+mask) lives in the rust coordinator's state manager.
+
+Python never runs on the request path: after this script completes, the
+rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, gnnt, quantize, train
+from .models import HIDDEN, gat, gcn, sage_net
+
+# NodePad capacities (paper §V: Cora padded +292 nodes to a static 3000).
+CAPACITY = {"cora": 3000, "citeseer": 3500}
+DATASETS = ("cora", "citeseer")
+
+
+# ---------------------------------------------------------------------------
+# HLO-text lowering (the aot_recipe / load_hlo bridge).
+# ---------------------------------------------------------------------------
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def i8(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Model-variant export table.
+# ---------------------------------------------------------------------------
+def gcn_exports(n: int, f: int, c: int, cap: int, scales: dict):
+    """(name, fn, specs, input names) for every GCN variant."""
+    h = HIDDEN
+    w_specs = [f32(f, h), f32(h), f32(h, c), f32(c)]
+    w_names = ["w1", "b1", "w2", "b2"]
+
+    def stagr(norm, x, w1, b1, w2, b2):
+        return gcn.apply_stagr({"w1": w1, "b1": b1, "w2": w2, "b2": b2},
+                               norm, x)
+
+    def baseline(edges, x, w1, b1, w2, b2):
+        return gcn.apply_baseline({"w1": w1, "b1": b1, "w2": w2, "b2": b2},
+                                  edges, x)
+
+    def quant(norm, x, w1q, b1, w2q, b2):
+        # Weights arrive pre-quantized (int8); activations are quantized
+        # in-graph with the baked static scales — QuantGr's static scheme.
+        from .kernels import quant as quant_k
+        from .kernels import ref
+        from .kernels import stagr as stagr_k
+        xq = ref.quantize(x, scales["act1"])
+        hw = quant_k.quant_matmul(xq, w1q, scales["act1"], scales["w1"])
+        h1 = jax.nn.relu(stagr_k.stagr_aggregate(norm, hw) + b1)
+        h1q = ref.quantize(h1, scales["act2"])
+        hw2 = quant_k.quant_matmul(h1q, w2q, scales["act2"], scales["w2"])
+        return stagr_k.stagr_aggregate(norm, hw2) + b2
+
+    m = 5429 if n == 2708 else 4732
+    qw_specs = [i8(f, h), f32(h), i8(h, c), f32(c)]
+    qw_names = ["w1q", "b1", "w2q", "b2"]
+    return [
+        ("gcn_stagr", stagr, [f32(n, n), f32(n, f)] + w_specs,
+         ["norm", "x"] + w_names),
+        ("gcn_grad", stagr, [f32(cap, cap), f32(cap, f)] + w_specs,
+         ["norm_pad", "x_pad"] + w_names),
+        ("gcn_baseline", baseline, [i32(m, 2), f32(n, f)] + w_specs,
+         ["edges", "x"] + w_names),
+        ("gcn_quant", quant, [f32(n, n), f32(n, f)] + qw_specs,
+         ["norm", "x"] + qw_names),
+        ("gcn_quant_grad", quant, [f32(cap, cap), f32(cap, f)] + qw_specs,
+         ["norm_pad", "x_pad"] + qw_names),
+    ]
+
+
+def gat_exports(n: int, f: int, c: int):
+    h = HIDDEN
+    w_specs = [f32(f, h), f32(h), f32(h), f32(h),
+               f32(h, c), f32(c), f32(c), f32(c)]
+    w_names = ["w1", "a1_src", "a1_dst", "b1",
+               "w2", "a2_src", "a2_dst", "b2"]
+
+    def pack(w1, a1s, a1d, b1, w2, a2s, a2d, b2):
+        return {"w1": w1, "a1_src": a1s, "a1_dst": a1d, "b1": b1,
+                "w2": w2, "a2_src": a2s, "a2_dst": a2d, "b2": b2}
+
+    def baseline(adj, x, *w):
+        return gat.apply_baseline(pack(*w), adj, x)
+
+    def effop(adj, x, *w):
+        return gat.apply_effop(pack(*w), adj, x)
+
+    def grax(neg_bias, x, *w):
+        return gat.apply_grax(pack(*w), neg_bias, x)
+
+    return [
+        ("gat_baseline", baseline, [f32(n, n), f32(n, f)] + w_specs,
+         ["adj", "x"] + w_names),
+        ("gat_effop", effop, [f32(n, n), f32(n, f)] + w_specs,
+         ["adj", "x"] + w_names),
+        ("gat_grax", grax, [f32(n, n), f32(n, f)] + w_specs,
+         ["neg_bias", "x"] + w_names),
+    ]
+
+
+def sage_exports(n: int, f: int, c: int, k: int):
+    """SAGE variants over the gathered (n, k+1) neighbor-index input.
+
+    The dense-mask Pallas sage_max kernel is exported separately at
+    event-vision scale (``sage_exports_small``); at Cora scale the gathered
+    formulation is numerically identical (kernels/ref.py) and avoids n²·f
+    intermediates in the lowered HLO.
+    """
+    h = HIDDEN
+    w_specs = [f32(f, h), f32(f, h), f32(h),
+               f32(h, c), f32(h, c), f32(c)]
+    w_names = ["w1_self", "w1_neigh", "b1", "w2_self", "w2_neigh", "b2"]
+
+    def pack(w1s, w1n, b1, w2s, w2n, b2):
+        return {"w1_self": w1s, "w1_neigh": w1n, "b1": b1,
+                "w2_self": w2s, "w2_neigh": w2n, "b2": b2}
+
+    def mean(idx, x, *w):
+        return sage_net.apply_mean_gathered(pack(*w), idx, x)
+
+    def max_base(idx, x, *w):
+        return sage_net.apply_max_baseline_gathered(pack(*w), idx, x)
+
+    def max_grax3(idx, x, *w):
+        return sage_net.apply_max_grax3_gathered(pack(*w), idx, x)
+
+    specs = [i32(n, k + 1), f32(n, f)] + w_specs
+    names = ["nbr_idx", "x"] + w_names
+    return [
+        ("sage_mean", mean, specs, names),
+        ("sage_max_baseline", max_base, specs, names),
+        ("sage_max_grax3", max_grax3, specs, names),
+    ]
+
+
+# Event-vision example scale (examples/event_vision.rs): small sliding
+# graphs where the dense-mask Pallas kernels are the right mapping.
+EV_NODES, EV_FEATURES, EV_CLASSES = 1024, 16, 4
+
+
+def sage_exports_small():
+    """Dense-mask SAGE-max via the real Pallas GrAx3 kernel (small scale)."""
+    n, f, c = EV_NODES, EV_FEATURES, EV_CLASSES
+    h = HIDDEN
+    w_specs = [f32(f, h), f32(f, h), f32(h),
+               f32(h, c), f32(h, c), f32(c)]
+    w_names = ["w1_self", "w1_neigh", "b1", "w2_self", "w2_neigh", "b2"]
+
+    def pack(w1s, w1n, b1, w2s, w2n, b2):
+        return {"w1_self": w1s, "w1_neigh": w1n, "b1": b1,
+                "w2_self": w2s, "w2_neigh": w2n, "b2": b2}
+
+    def max_grax3(mask, x, *w):
+        return sage_net.apply_max_grax3(pack(*w), mask, x)
+
+    specs = [f32(n, n), f32(n, f)] + w_specs
+    names = ["mask", "x"] + w_names
+    return [("sage_max_grax3_ev", max_grax3, specs, names)]
+
+
+# ---------------------------------------------------------------------------
+# Driver.
+# ---------------------------------------------------------------------------
+def export_dataset(ds, out_dir: str) -> dict:
+    path = os.path.join(out_dir, f"{ds.name}.gnnt")
+    gnnt.write(path, {
+        "features": ds.features,
+        "labels": ds.labels.astype(np.int32),
+        "edges": ds.edges.astype(np.int32),
+        "train_mask": ds.train_mask.astype(np.uint8),
+        "val_mask": ds.val_mask.astype(np.uint8),
+        "test_mask": ds.test_mask.astype(np.uint8),
+        # The exact neighbor sample used at train/export time, so the rust
+        # coordinator feeds byte-identical gather indices to the artifacts.
+        "nbr_idx": ds.sampled_neighbors(train.SAGE_MAX_NEIGHBORS),
+    })
+    return {"path": os.path.basename(path), "nodes": ds.num_nodes,
+            "edges": ds.num_edges, "features": ds.num_features,
+            "classes": ds.num_classes,
+            "capacity": CAPACITY.get(ds.name, ds.num_nodes)}
+
+
+def run(out_dir: str, names: list[str], epochs: int,
+        skip_hlo: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = ["# generated by python -m compile.aot", ""]
+
+    for ds_name in names:
+        t0 = time.time()
+        ds = datasets.load(ds_name)
+        info = export_dataset(ds, out_dir)
+        n, f, c, cap = (ds.num_nodes, ds.num_features, ds.num_classes,
+                        CAPACITY.get(ds_name, ds.num_nodes))
+        manifest += [f"[dataset.{ds_name}]"] + [
+            f"{k} = {v!r}" if isinstance(v, str) else f"{k} = {v}"
+            for k, v in info.items()] + [""]
+        print(f"[{ds_name}] dataset packed ({time.time() - t0:.1f}s)")
+
+        # --- training + calibration ------------------------------------
+        norm = jnp.asarray(ds.norm_adjacency())
+        x = jnp.asarray(ds.features)
+        trained: dict[str, dict] = {}
+        for model in ("gcn", "gat", "sage_mean", "sage_max"):
+            t1 = time.time()
+            params, report = train.TRAINERS[model](ds, epochs=epochs)
+            trained[model] = params
+            tensors = {k: np.asarray(v) for k, v in params.items()}
+            tensors["loss_history"] = np.asarray(report["loss"], np.float32)
+            tensors["test_acc"] = np.asarray([report["test_acc"]], np.float32)
+            if model == "gcn":
+                scales = quantize.calibrate_gcn(params, norm, x)
+                qw = quantize.quantize_weights(params, scales)
+                tensors.update(qw)
+                tensors["scales"] = np.asarray(
+                    [scales["act1"], scales["w1"], scales["act2"],
+                     scales["w2"]], np.float32)
+                err = quantize.quant_error(params, norm, x, scales)
+                print(f"[{ds_name}] quant: rel_err={err['rel_err']:.4f} "
+                      f"argmax_agree={err['argmax_agreement']:.3f}")
+            wpath = os.path.join(out_dir, f"weights_{model}_{ds_name}.gnnt")
+            gnnt.write(wpath, tensors)
+            manifest += [f"[weights.{model}_{ds_name}]",
+                         f"path = {os.path.basename(wpath)!r}",
+                         f"test_acc = {report['test_acc']:.4f}", ""]
+            print(f"[{ds_name}] trained {model}: "
+                  f"test_acc={report['test_acc']:.3f} "
+                  f"({time.time() - t1:.1f}s)")
+
+        if skip_hlo:
+            continue
+
+        # --- HLO lowering ------------------------------------------------
+        gcn_scales = quantize.calibrate_gcn(trained["gcn"], norm, x)
+        exports = (gcn_exports(n, f, c, cap, gcn_scales)
+                   + gat_exports(n, f, c)
+                   + sage_exports(n, f, c, train.SAGE_MAX_NEIGHBORS))
+        if ds_name == names[0]:
+            exports = exports + sage_exports_small()
+            # Random-init weights for the event-vision demo model (the demo
+            # measures latency/throughput, not accuracy).
+            ev_params = sage_net.init_params(
+                jax.random.key(42), EV_FEATURES, HIDDEN, EV_CLASSES)
+            gnnt.write(os.path.join(out_dir, "weights_sage_ev.gnnt"),
+                       {k: np.asarray(v) for k, v in ev_params.items()})
+            manifest += ["[weights.sage_ev]",
+                         "path = 'weights_sage_ev.gnnt'", ""]
+        for name, fn, specs, input_names in exports:
+            t1 = time.time()
+            text = lower(fn, *specs)
+            fname = f"{name}_{ds_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as fh:
+                fh.write(text)
+            manifest += [
+                f"[artifact.{name}_{ds_name}]",
+                f"path = {fname!r}",
+                "model = " + repr(
+                    "sage_mean" if name.startswith("sage_mean")
+                    else "sage_max" if name.startswith("sage_max")
+                    else name.split("_")[0]),
+                f"dataset = {ds_name!r}",
+                "inputs = " + repr(",".join(input_names)),
+                "shapes = " + repr(";".join(
+                    "x".join(str(d) for d in s.shape) for s in specs)),
+                "dtypes = " + repr(",".join(
+                    str(s.dtype.name) for s in specs)),
+                "",
+            ]
+            print(f"[{ds_name}] lowered {name} "
+                  f"({len(text) / 1e6:.2f} MB, {time.time() - t1:.1f}s)")
+
+    with open(os.path.join(out_dir, "manifest.toml"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"manifest written: {os.path.join(out_dir, 'manifest.toml')}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--datasets", default="cora,citeseer")
+    p.add_argument("--epochs", type=int,
+                   default=int(os.environ.get("GRANNITE_EPOCHS", train.EPOCHS)))
+    p.add_argument("--skip-hlo", action="store_true",
+                   help="only datasets + weights (fast test mode)")
+    args = p.parse_args()
+    run(args.out, args.datasets.split(","), args.epochs, args.skip_hlo)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,274 @@
+"""Synthetic dataset twins for Cora and Citeseer.
+
+The paper evaluates on Cora (2708 nodes, 5429 edges, 7 classes, 1433
+features) and Citeseer (3327 nodes, 4732 edges, 6 classes, 3703 features),
+fetched by PyG over the network. This environment is offline, so we build
+*deterministic synthetic twins* with matched statistics:
+
+- planted-partition topology (intra-class edge preference) with exactly the
+  published node/edge counts,
+- class-correlated sparse bag-of-words features at Cora-like density
+  (~1.3% of entries non-zero),
+- Planetoid-style splits (140/500/1000 for Cora; 120/500/1000 for Citeseer).
+
+Every GraNNite result depends on the datasets only through size, sparsity,
+degree structure and class separability — all of which are matched. See
+DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Published statistics we mirror (paper §V).
+CORA_SPEC = dict(name="cora", n=2708, m=5429, classes=7, features=1433,
+                 train=140, val=500, test=1000, seed=0x5EED_C08A)
+CITESEER_SPEC = dict(name="citeseer", n=3327, m=4732, classes=6,
+                     features=3703, train=120, val=500, test=1000,
+                     seed=0x5EED_C17E)
+
+# Fraction of candidate edges drawn within the same class, and the
+# signature-word likelihood boost. Tuned (see EXPERIMENTS.md §Datasets)
+# so a 2-layer GCN lands in the paper's 75-82% Top-1 band: homophily 0.72
+# + boost 3.0 gives GCN ≈ 0.815 vs the paper's 0.808 on real Cora.
+HOMOPHILY = 0.72
+# Feature density of Cora's bag-of-words matrix (~1.27% non-zeros).
+FEATURE_DENSITY = 0.0127
+# Number of "signature" words per class; signature words fire ~3x more.
+SIGNATURE_WORDS_FRAC = 0.08
+SIGNATURE_BOOST = 3.0
+
+
+@dataclasses.dataclass
+class GraphDataset:
+    """An attributed graph for node classification.
+
+    Attributes:
+        name: dataset identifier ("cora", "citeseer", ...).
+        edges: (m, 2) int32 array of undirected edges, each stored once
+            with src < dst; no self loops, no duplicates.
+        features: (n, f) float32 row-normalized bag-of-words matrix.
+        labels: (n,) int32 class ids in [0, classes).
+        train_mask / val_mask / test_mask: (n,) bool Planetoid-style splits.
+    """
+
+    name: str
+    edges: np.ndarray
+    features: np.ndarray
+    labels: np.ndarray
+    train_mask: np.ndarray
+    val_mask: np.ndarray
+    test_mask: np.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def num_features(self) -> int:
+        return self.features.shape[1]
+
+    @property
+    def num_classes(self) -> int:
+        return int(self.labels.max()) + 1
+
+    # ------------------------------------------------------------------
+    # Derived matrices used by the GraNNite techniques.
+    # ------------------------------------------------------------------
+    def adjacency(self, pad_to: int | None = None) -> np.ndarray:
+        """Dense symmetric adjacency with self loops (A + I).
+
+        ``pad_to`` implements NodePad: absent nodes contribute all-zero
+        rows/cols ("0" = no edge, per the paper), and crucially do NOT get
+        self loops — a padded node must stay disconnected.
+        """
+        n = self.num_nodes
+        cap = pad_to if pad_to is not None else n
+        if cap < n:
+            raise ValueError(f"pad_to={cap} < num_nodes={n}")
+        a = np.zeros((cap, cap), dtype=np.float32)
+        s, d = self.edges[:, 0], self.edges[:, 1]
+        a[s, d] = 1.0
+        a[d, s] = 1.0
+        a[np.arange(n), np.arange(n)] = 1.0  # self loops on real nodes only
+        return a
+
+    def norm_adjacency(self, pad_to: int | None = None) -> np.ndarray:
+        """PreG: the precomputed GraphConv normalization matrix.
+
+        D^{-1/2} (A + I) D^{-1/2}, computed once on the CPU so the NPU only
+        sees a dense MatMul (paper Fig. 14). Zero-degree (padded) nodes get
+        a zero normalization row instead of a division by zero.
+        """
+        a = self.adjacency(pad_to)
+        deg = a.sum(axis=1)
+        inv_sqrt = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-12)), 0.0)
+        return (a * inv_sqrt[:, None] * inv_sqrt[None, :]).astype(np.float32)
+
+    def padded_features(self, pad_to: int) -> np.ndarray:
+        """NodePad: zero-pad the feature matrix to the compiled capacity."""
+        n, f = self.features.shape
+        if pad_to < n:
+            raise ValueError(f"pad_to={pad_to} < num_nodes={n}")
+        out = np.zeros((pad_to, f), dtype=np.float32)
+        out[:n] = self.features
+        return out
+
+    def neighbor_lists(self) -> list[list[int]]:
+        """Adjacency lists (undirected, no self entry)."""
+        n = self.num_nodes
+        neighbors: list[list[int]] = [[] for _ in range(n)]
+        for s, d in self.edges:
+            neighbors[int(s)].append(int(d))
+            neighbors[int(d)].append(int(s))
+        return neighbors
+
+    def sampled_neighbors(self, max_neighbors: int, seed: int = 7) -> np.ndarray:
+        """GraphSAGE sampled neighborhood as a gather-index matrix.
+
+        Returns (n, max_neighbors + 1) int32: column 0 is the node itself,
+        the rest are ≤ max_neighbors sampled neighbors; unused slots hold
+        the sentinel index ``n`` (callers append a phantom row to ``h``).
+        The same (seed-deterministic) sample backs the dense
+        ``sampled_adjacency`` mask, so the two formulations agree exactly.
+        """
+        n = self.num_nodes
+        rng = np.random.default_rng(seed)
+        idx = np.full((n, max_neighbors + 1), n, dtype=np.int32)
+        for i, nbrs in enumerate(self.neighbor_lists()):
+            if len(nbrs) > max_neighbors:
+                nbrs = list(rng.choice(nbrs, size=max_neighbors,
+                                       replace=False))
+            idx[i, 0] = i
+            idx[i, 1:1 + len(nbrs)] = nbrs
+        return idx
+
+    def sampled_adjacency(self, max_neighbors: int, seed: int = 7,
+                          pad_to: int | None = None) -> np.ndarray:
+        """GraphSAGE sampled adjacency mask (paper: ≤10 random neighbors).
+
+        Row i has ones at up to ``max_neighbors`` sampled neighbors plus
+        itself. Used by SAGE mean/max aggregation and by GrAx3.
+        """
+        n = self.num_nodes
+        cap = pad_to if pad_to is not None else n
+        idx = self.sampled_neighbors(max_neighbors, seed)
+        mask = np.zeros((cap, cap + 1), dtype=np.float32)
+        rows = np.repeat(np.arange(n), idx.shape[1])
+        cols = idx.reshape(-1)
+        # route sentinel entries (== n) into the scratch column cap, then drop
+        cols = np.where(cols == n, cap, cols)
+        mask[rows, cols] = 1.0
+        return mask[:, :cap]
+
+
+def _planted_partition_edges(n: int, m: int, classes: int, labels: np.ndarray,
+                             rng: np.random.Generator) -> np.ndarray:
+    """Draw exactly ``m`` distinct undirected edges with planted homophily."""
+    by_class = [np.flatnonzero(labels == c) for c in range(classes)]
+    seen: set[tuple[int, int]] = set()
+    edges = np.empty((m, 2), dtype=np.int32)
+    count = 0
+    # Rejection-sample; expected acceptance is high because the graph is
+    # extremely sparse (5429 edges over ~3.7M candidate pairs).
+    while count < m:
+        if rng.random() < HOMOPHILY:
+            c = int(rng.integers(classes))
+            members = by_class[c]
+            if len(members) < 2:
+                continue
+            u, v = rng.choice(members, size=2, replace=False)
+        else:
+            u, v = rng.integers(n, size=2)
+        u, v = int(u), int(v)
+        if u == v:
+            continue
+        key = (min(u, v), max(u, v))
+        if key in seen:
+            continue
+        seen.add(key)
+        edges[count] = key
+        count += 1
+    return edges
+
+
+def _class_features(n: int, f: int, classes: int, labels: np.ndarray,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Sparse bag-of-words features with per-class signature words."""
+    sig_words = max(4, int(f * SIGNATURE_WORDS_FRAC))
+    # Disjoint signature vocabularies per class, carved from the front.
+    signatures = [
+        np.arange(c * sig_words, (c + 1) * sig_words) % f
+        for c in range(classes)
+    ]
+    base_p = FEATURE_DENSITY
+    feats = np.zeros((n, f), dtype=np.float32)
+    for i in range(n):
+        c = int(labels[i])
+        # Keep overall density ≈ base_p: boost signature words, damp the rest.
+        p = np.full(f, base_p * 0.55)
+        p[signatures[c]] = min(0.9, base_p * SIGNATURE_BOOST)
+        feats[i] = (rng.random(f) < p).astype(np.float32)
+    # Row-normalize like PyG's NormalizeFeatures transform.
+    row_sum = feats.sum(axis=1, keepdims=True)
+    feats = np.where(row_sum > 0, feats / np.maximum(row_sum, 1e-12), 0.0)
+    return feats.astype(np.float32)
+
+
+def _planetoid_splits(n: int, classes: int, labels: np.ndarray, train: int,
+                      val: int, test: int, rng: np.random.Generator):
+    """Planetoid-style split: balanced train nodes, then val/test blocks."""
+    train_mask = np.zeros(n, dtype=bool)
+    per_class = train // classes
+    for c in range(classes):
+        members = np.flatnonzero(labels == c)
+        pick = rng.choice(members, size=min(per_class, len(members)),
+                          replace=False)
+        train_mask[pick] = True
+    remaining = np.flatnonzero(~train_mask)
+    remaining = rng.permutation(remaining)
+    val_mask = np.zeros(n, dtype=bool)
+    test_mask = np.zeros(n, dtype=bool)
+    val_mask[remaining[:val]] = True
+    test_mask[remaining[val:val + test]] = True
+    return train_mask, val_mask, test_mask
+
+
+def make_twin(spec: dict) -> GraphDataset:
+    """Build a deterministic synthetic twin from a published-stats spec."""
+    rng = np.random.default_rng(spec["seed"])
+    n, m, classes = spec["n"], spec["m"], spec["classes"]
+    # Slightly unbalanced class sizes, like real citation data.
+    raw = rng.dirichlet(np.full(classes, 8.0))
+    sizes = np.maximum((raw * n).astype(int), 2)
+    while sizes.sum() != n:  # fix rounding drift
+        sizes[int(rng.integers(classes))] += 1 if sizes.sum() < n else -1
+    labels = np.repeat(np.arange(classes, dtype=np.int32), sizes)
+    labels = rng.permutation(labels)
+    edges = _planted_partition_edges(n, m, classes, labels, rng)
+    feats = _class_features(n, spec["features"], classes, labels, rng)
+    tr, va, te = _planetoid_splits(n, classes, labels, spec["train"],
+                                   spec["val"], spec["test"], rng)
+    return GraphDataset(spec["name"], edges, feats, labels, tr, va, te)
+
+
+def cora_twin() -> GraphDataset:
+    return make_twin(CORA_SPEC)
+
+
+def citeseer_twin() -> GraphDataset:
+    return make_twin(CITESEER_SPEC)
+
+
+def load(name: str) -> GraphDataset:
+    if name == "cora":
+        return cora_twin()
+    if name == "citeseer":
+        return citeseer_twin()
+    raise KeyError(f"unknown dataset {name!r}")

@@ -1,0 +1,94 @@
+"""`.gnnt` — the flat tensor container shared between python and rust.
+
+`aot.py` writes model weights, dataset twins, masks and quantization scales
+into this format; `rust/src/runtime/io.rs` implements the mirror reader (and
+a writer, used by rust-side tests). Keep the two in sync.
+
+Layout (little-endian):
+
+    magic   : 4 bytes  b"GNNT"
+    version : u32      (currently 1)
+    count   : u32      number of tensors
+    then per tensor:
+        name_len : u16
+        name     : utf-8 bytes
+        dtype    : u8   (0=f32, 1=i8, 2=i32, 3=u8, 4=f16-as-u16)
+        ndim     : u8
+        dims     : ndim * u32
+        data     : prod(dims) * sizeof(dtype) bytes
+
+No alignment padding; readers stream sequentially.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GNNT"
+VERSION = 1
+
+_DTYPES: dict[int, np.dtype] = {
+    0: np.dtype("<f4"),
+    1: np.dtype("i1"),
+    2: np.dtype("<i4"),
+    3: np.dtype("u1"),
+    4: np.dtype("<u2"),  # raw f16 bits
+}
+_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+def _code_for(arr: np.ndarray) -> int:
+    dt = arr.dtype
+    if dt == np.float32:
+        return 0
+    if dt == np.int8:
+        return 1
+    if dt == np.int32:
+        return 2
+    if dt == np.uint8:
+        return 3
+    if dt == np.float16 or dt == np.uint16:
+        return 4
+    raise TypeError(f"unsupported dtype {dt} for .gnnt")
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write named tensors to ``path`` in .gnnt format."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _code_for(arr)
+            if code == 4 and arr.dtype == np.float16:
+                arr = arr.view(np.uint16)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<"), copy=False).tobytes())
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    """Read a .gnnt file back into named numpy arrays."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = _DTYPES[code]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims).copy()
+    return out

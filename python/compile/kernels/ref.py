@@ -1,0 +1,198 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal for Layer 1: `python/tests/` sweeps
+shapes and dtypes with hypothesis and asserts `assert_allclose` between each
+Pallas kernel (interpret=True) and its oracle here. The oracles are also
+used by the L2 model code when a variant does not route through a kernel
+(e.g. the control-heavy *baseline* mappings, kept for accuracy parity).
+
+Numerics conventions shared with the rust reference executor
+(`rust/src/ops/exec.rs`):
+- LeakyReLU slope 0.2 (GAT paper default).
+- GrAx1 additive mask constant −1e9.
+- SAGE-max assumes non-negative features (post-ReLU), per paper Fig. 18.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2
+NEG_MASK = -1.0e9
+
+
+# ---------------------------------------------------------------------------
+# StaGr / PreG: aggregation as dense MatMul against the precomputed mask.
+# ---------------------------------------------------------------------------
+def stagr_aggregate(norm: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """StaGr aggregation: ``norm @ x`` (norm = D^-1/2 (A+I) D^-1/2)."""
+    return norm @ x
+
+
+def gcn_layer(norm: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> jnp.ndarray:
+    """One GraphConv layer with PreG folding: ``norm @ (x @ w) + b``.
+
+    Combination first (x@w shrinks the feature dim from f to f'), then
+    aggregation — the cheaper association order for f >> f'.
+    """
+    return norm @ (x @ w) + b
+
+
+# ---------------------------------------------------------------------------
+# GAT attention (single head, as in the paper's GraphAttn layer).
+# ---------------------------------------------------------------------------
+def gat_scores(h: jnp.ndarray, a_src: jnp.ndarray,
+               a_dst: jnp.ndarray) -> jnp.ndarray:
+    """Raw pre-mask attention logits e[i, j] = LeakyReLU(s_i + t_j)."""
+    s = h @ a_src  # (n,)
+    t = h @ a_dst  # (n,)
+    e = s[:, None] + t[None, :]
+    return jnp.where(e > 0, e, LEAKY_SLOPE * e)
+
+
+def gat_attention_baseline(h: jnp.ndarray, a_src: jnp.ndarray,
+                           a_dst: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """Baseline mapping: Select(adj, e, -inf) → SoftMax → aggregate.
+
+    The Select/where is the control-heavy op that lands on the DSP in the
+    out-of-the-box NPU mapping (paper Fig. 5). Rows with no edges (padded
+    nodes) would produce NaN through softmax(-inf row); real graphs always
+    have self loops, and padded rows are sliced away by the caller.
+    """
+    e = gat_scores(h, a_src, a_dst)
+    e = jnp.where(adj > 0, e, -jnp.inf)
+    attn = jnp.exp(e - e.max(axis=1, keepdims=True))
+    attn = jnp.where(jnp.isnan(attn), 0.0, attn)
+    denom = attn.sum(axis=1, keepdims=True)
+    attn = attn / jnp.maximum(denom, 1e-30)
+    return attn @ h
+
+
+def gat_attention_effop(h: jnp.ndarray, a_src: jnp.ndarray,
+                        a_dst: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """EffOp mapping: Select replaced by mask-multiply + complement bias.
+
+    e_masked = e * adj + (1 - adj) * (−1e9): pure elementwise DPU ops.
+    """
+    e = gat_scores(h, a_src, a_dst)
+    e = e * adj + (1.0 - adj) * NEG_MASK
+    attn = jnp.exp(e - e.max(axis=1, keepdims=True))
+    attn = attn / attn.sum(axis=1, keepdims=True)
+    return attn @ h
+
+
+def gat_attention_grax(h: jnp.ndarray, a_src: jnp.ndarray,
+                       a_dst: jnp.ndarray, neg_bias: jnp.ndarray) -> jnp.ndarray:
+    """GrAx1 (+GrAx2) mapping: additive mask, no masking multiplications.
+
+    ``neg_bias`` is the precomputed (1 − adj) * (−1e9) matrix; masking is a
+    single elementwise add (paper Fig. 16). GrAx2 restructures the
+    broadcast-add of s_i + t_j to add-then-broadcast (paper Fig. 17) — the
+    same arithmetic with fewer transposes/copies, so the oracle differs
+    from EffOp only in using the additive mask. Note the approximation:
+    on-edge logits keep their raw value instead of e*1, and off-edge logits
+    become e − 1e9 instead of exactly −1e9 — negligible after SoftMax.
+    """
+    e = gat_scores(h, a_src, a_dst)
+    e = e + neg_bias
+    attn = jnp.exp(e - e.max(axis=1, keepdims=True))
+    attn = attn / attn.sum(axis=1, keepdims=True)
+    return attn @ h
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE aggregation.
+# ---------------------------------------------------------------------------
+def sage_mean(mask: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Mean over the sampled neighborhood: rows of ``mask`` are 0/1."""
+    deg = mask.sum(axis=1, keepdims=True)
+    return (mask @ h) / jnp.maximum(deg, 1.0)
+
+
+def sage_max_baseline(mask: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Baseline SAGE-max: per-row select of neighbor features, then max.
+
+    Mirrors the sequential DSP gather: non-neighbors are masked to −inf so
+    they never win the max; rows with no neighbors yield 0.
+    """
+    sel = jnp.where(mask[:, :, None] > 0, h[None, :, :], -jnp.inf)
+    out = sel.max(axis=1)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def sage_max_grax3(mask: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """GrAx3: mask-multiply + max-pool on the DPU (paper Fig. 18).
+
+    out[i] = max_j mask[i,j] * h[j].  Exact when features are ≥ 0 (the
+    layer input is post-ReLU); a node with no sampled neighbors yields 0,
+    and any negative maxima are clipped to 0 — this is the approximation.
+    """
+    prod = mask[:, :, None] * h[None, :, :]
+    return prod.max(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE, gathered formulation (the ≤10-sampled-neighbor structure).
+#
+# ``idx`` is (n, k+1) int32 from datasets.sampled_neighbors: column 0 = self,
+# sentinel ``n`` marks unused slots. These are numerically *exactly* related
+# to the dense-mask forms above (same sample): in particular
+#     sage_max_grax3(mask, h) == maximum(sage_max_gathered(idx, h), 0)
+# because every row of the sampled mask has at least one zero entry at
+# Cora-scale sparsity, so the mask-multiply's zero always competes in the
+# row max. The equivalence is asserted in python/tests/test_kernels.py and
+# lets full-scale exports avoid n²·f intermediates.
+# ---------------------------------------------------------------------------
+def _gathered(idx: jnp.ndarray, h: jnp.ndarray,
+              fill: float) -> jnp.ndarray:
+    """(n, k+1, f) neighbor features with sentinel rows set to ``fill``."""
+    phantom = jnp.full((1, h.shape[1]), fill, h.dtype)
+    h_ext = jnp.concatenate([h, phantom], axis=0)
+    return h_ext[idx]
+
+
+def sage_max_gathered(idx: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Exact SAGE-max over the sampled neighborhood (baseline numerics)."""
+    g = _gathered(idx, h, -jnp.inf)
+    out = g.max(axis=1)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def sage_max_grax3_gathered(idx: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """GrAx3 numerics via gather: max(sage_max, 0). See block comment."""
+    return jnp.maximum(sage_max_gathered(idx, h), 0.0)
+
+
+def sage_mean_gathered(idx: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Mean over the sampled neighborhood, sentinel slots excluded."""
+    g = _gathered(idx, h, 0.0)
+    valid = (idx < h.shape[0]).astype(h.dtype)  # (n, k+1)
+    cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1.0)
+    return g.sum(axis=1) / cnt
+
+
+# ---------------------------------------------------------------------------
+# QuantGr: symmetric static INT8.
+# ---------------------------------------------------------------------------
+def quant_scale(x_absmax: float) -> float:
+    """Symmetric scale mapping |x| ≤ absmax onto int8 [−127, 127]."""
+    return float(x_absmax) / 127.0 if x_absmax > 0 else 1.0
+
+
+def quantize(x: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Symmetric static quantization to int8 with round-to-nearest."""
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: float,
+                 w_scale: float) -> jnp.ndarray:
+    """INT8×INT8 → INT32 accumulate → FP32 dequantize (QuantGr datapath)."""
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (x_scale * w_scale)

@@ -1,0 +1,78 @@
+"""GraphSAGE aggregation Pallas kernels (GrAx3 + mean).
+
+SAGE-max traditionally gathers each node's sampled neighbors sequentially
+on the DSP. GrAx3 (paper Fig. 18) replaces this with a mask-multiply
+followed by max-pooling — dense, branch-free DPU work. The mean aggregator
+is a MatMul against the row-normalized sampled adjacency (StaGr-style).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _sage_max_kernel(mask_ref, h_ref, o_ref):
+    """Running max over neighbor blocks.
+
+    Grid is (row blocks, neighbor blocks); for each (i, k):
+      o[i] = max(o[i], max_j mask[i, jk] * h[jk])
+    The first neighbor block initializes o directly, so the result equals
+    max over *all* j of mask * h — exactly the GrAx3 oracle, including its
+    clipping behaviour for all-non-positive rows.
+    """
+    prod = mask_ref[...][:, :, None] * h_ref[...][None, :, :]
+    blk_max = prod.max(axis=1)  # (bm, f)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = blk_max
+
+    @pl.when(pl.program_id(1) != 0)
+    def _fold():
+        o_ref[...] = jnp.maximum(o_ref[...], blk_max)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def sage_max(mask: jnp.ndarray, h: jnp.ndarray, bm: int = tiling.BM,
+             bk: int = tiling.BK) -> jnp.ndarray:
+    """GrAx3 max aggregation: out[i] = max_j mask[i,j] * h[j].
+
+    Padded (phantom) neighbor columns carry mask 0 and features 0, so the
+    padded blocks contribute ``0`` to the running max — identical to the
+    oracle's behaviour on the unpadded mask, whose every row contains a
+    self-loop zero-or-positive entry.
+    """
+    n, f = h.shape
+    maskp = tiling.pad_to(mask, (bm, bk))
+    hp = tiling.pad_to(h, (bk, 1))
+    np_, kp = maskp.shape
+    out = pl.pallas_call(
+        _sage_max_kernel,
+        grid=(np_ // bm, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, f), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, f), h.dtype),
+        interpret=True,
+    )(maskp, hp)
+    return out[:n]
+
+
+def sage_mean(mask: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Mean aggregation as a StaGr MatMul against the normalized mask.
+
+    The row normalization (divide by sampled degree) happens *outside* the
+    MatMul on precomputed degrees — PreG's trick applied to SAGE — so the
+    NPU never executes a division per element.
+    """
+    deg = mask.sum(axis=1, keepdims=True)
+    norm_mask = mask / jnp.maximum(deg, 1.0)
+    return tiling.matmul(norm_mask, h)

@@ -1,0 +1,78 @@
+"""StaGr / PreG / GrAd Pallas kernels: aggregation as dense MatMul.
+
+StaGr (paper Fig. 9) turns node aggregation into a MatMul against a
+precomputed mask; PreG (Fig. 14) folds the D^-1/2 normalization into that
+mask so no sqrt/div ever reaches the DSP. GrAd (Fig. 11) is the same kernel
+with the mask arriving as a runtime *input* instead of a baked constant —
+at kernel level the two are identical; the difference lives in how aot.py
+closes over the mask when lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def stagr_aggregate(norm: jnp.ndarray, x: jnp.ndarray, *, bm: int = tiling.BM,
+                    bn: int = tiling.BN, bk: int = tiling.BK) -> jnp.ndarray:
+    """StaGr aggregation ``norm @ x`` as an output-stationary tiled kernel."""
+    return tiling.matmul(norm, x, bm=bm, bn=bn, bk=bk)
+
+
+def _gcn_fused_kernel(norm_ref, xw_ref, b_ref, o_ref, *, nk: int):
+    """Aggregate + bias in one pass: o = norm_blk @ xw_blk (+ b on last k).
+
+    The norm tile is the stationary operand (the CacheG insight at kernel
+    scale: the normalization matrix is reused across every feature column
+    block, so it earns VMEM residency).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(norm_ref[...], xw_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _bias():
+        o_ref[...] += b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gcn_layer(norm: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray, bm: int = tiling.BM, bn: int = tiling.BN,
+              bk: int = tiling.BK) -> jnp.ndarray:
+    """One PreG-folded GraphConv layer: ``norm @ (x @ w) + b``.
+
+    Combination (x @ w) runs first through the shared tiled MatMul —
+    shrinking features from f to f' before the n×n aggregation — then the
+    fused aggregate+bias kernel applies ``norm`` and the bias.
+    """
+    xw = tiling.matmul(x, w, bm=bm, bn=bn, bk=bk)  # (n, f')
+    n, fp = xw.shape
+    normp = tiling.pad_to(norm, (bm, bk))
+    xwp = tiling.pad_to(xw, (bk, bn))
+    bp = tiling.pad_to(b.reshape(1, -1), (1, bn))
+    np_, kp = normp.shape
+    _, fpp = xwp.shape
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_gcn_fused_kernel, nk=nk),
+        grid=(np_ // bm, fpp // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, fpp), x.dtype),
+        interpret=True,
+    )(normp, xwp, bp)
+    return out[:n, :fp]

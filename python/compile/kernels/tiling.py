@@ -1,0 +1,98 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels run with ``interpret=True`` (the CPU PJRT client cannot execute
+Mosaic custom-calls — see /opt/xla-example/README.md), so these helpers are
+about *structure*, not wall-clock: block shapes are chosen for the VMEM /
+MXU analysis recorded in DESIGN.md §8, and the same tilings drive the NPU
+simulator's DMA model on the rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# NPU/TPU analysis tiling: 128 matches both the MXU systolic tile and the
+# DPU tile width of the FlexNN-like NPU (M*N = 4*32 = 128 MACs per row).
+# DESIGN.md §8's VMEM-budget analysis uses these.
+NPU_BM = NPU_BN = NPU_BK = 128
+
+# Default execution tiling: artifacts run through the CPU PJRT client in
+# interpret mode, where per-grid-step overhead dominates — 512-cube tiles
+# (L2-resident on the host) cut the grid iteration count ~64x with
+# identical numerics. The NPU mapping keeps the 128-cube analysis above.
+BM = 512
+BN = 512
+BK = 512
+
+
+def pad_to(x: jnp.ndarray, multiples: tuple[int, ...]) -> jnp.ndarray:
+    """Zero-pad each dim of ``x`` up to the next multiple (NodePad-style)."""
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        target = -(-dim // mult) * mult
+        pads.append((0, target - dim))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Output-stationary tiled MatMul: accumulate k-blocks into o_ref."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, bm: int = BM, bn: int = BN,
+           bk: int = BK) -> jnp.ndarray:
+    """Tiled Pallas MatMul ``x @ w`` with zero-padding to block multiples.
+
+    The grid order (m, n, k) with the k-accumulate pattern mirrors the
+    output-stationary dataflow of the paper's DPU: each output tile stays
+    resident while operand tiles stream through.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    xp = pad_to(x, (bm, bk))
+    wp = pad_to(w, (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_shapes: list[tuple[int, ...]], dtype_bytes: int = 4) -> int:
+    """VMEM footprint of a set of resident blocks — used by DESIGN.md §8
+    analysis and asserted against the 2 MiB budget in tests."""
+    total = 0
+    for shape in block_shapes:
+        size = dtype_bytes
+        for d in shape:
+            size *= d
+        total += size
+    return total

@@ -1,0 +1,16 @@
+"""Layer-2 JAX model definitions (build-time only).
+
+Each model module exposes:
+    init_params(rng, num_features, hidden, num_classes) -> dict[str, array]
+    apply_<variant>(params, inputs...) -> logits
+
+Variants mirror the paper's optimization ladder: ``baseline`` is the
+out-of-the-box mapping (control-heavy ops kept); the optimized variants
+route through the Layer-1 Pallas kernels. All variants of a model are
+numerically interchangeable up to the documented approximations, which is
+asserted in python/tests/test_models.py.
+"""
+
+from . import gat, gcn, sage_net  # noqa: F401
+
+HIDDEN = 64  # paper's layer config: 1433 -> 64 -> classes

@@ -1,0 +1,83 @@
+"""2-layer single-head GAT — baseline, EffOp, and GrAx1/GrAx2 variants.
+
+    h1     = ELU( attn(norm-mask, x @ W1) + b1 )
+    logits =      attn(norm-mask, h1 @ W2) + b2
+
+where ``attn`` is masked-softmax attention with LeakyReLU(0.2) logits.
+
+Variant ladder (paper Figs. 12, 16, 17):
+- ``apply_baseline``: Select(adj, e, −inf) masking — the DSP-bound mapping.
+- ``apply_effop``:    mask-multiply + complement bias (DPU elementwise).
+- ``apply_grax``:     additive −1e9 mask (GrAx1) with add-then-broadcast
+                      score assembly (GrAx2), fused in the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import attention as attn_k
+from ..kernels import ref
+
+
+def init_params(rng: jax.Array, num_features: int, hidden: int,
+                num_classes: int) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
+    s1 = jnp.sqrt(6.0 / (num_features + hidden))
+    s2 = jnp.sqrt(6.0 / (hidden + num_classes))
+
+    def u(key, shape, s):
+        return jax.random.uniform(key, shape, jnp.float32, -s, s)
+
+    return {
+        "w1": u(k1, (num_features, hidden), s1),
+        "a1_src": u(k2, (hidden,), 0.1),
+        "a1_dst": u(k3, (hidden,), 0.1),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": u(k4, (hidden, num_classes), s2),
+        "a2_src": u(k5, (num_classes,), 0.1),
+        "a2_dst": u(k6, (num_classes,), 0.1),
+        "b2": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def _forward(params: dict, x: jnp.ndarray, attn_fn) -> jnp.ndarray:
+    h = x @ params["w1"]
+    h = attn_fn(h, params["a1_src"], params["a1_dst"]) + params["b1"]
+    h = jax.nn.elu(h)
+    g = h @ params["w2"]
+    return attn_fn(g, params["a2_src"], params["a2_dst"]) + params["b2"]
+
+
+def apply_baseline(params: dict, adj: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    return _forward(
+        params, x,
+        lambda h, a_s, a_d: ref.gat_attention_baseline(h, a_s, a_d, adj))
+
+
+def apply_effop(params: dict, adj: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    return _forward(
+        params, x,
+        lambda h, a_s, a_d: ref.gat_attention_effop(h, a_s, a_d, adj))
+
+
+def apply_grax(params: dict, neg_bias: jnp.ndarray,
+               x: jnp.ndarray) -> jnp.ndarray:
+    """GrAx1+GrAx2 via the fused Pallas kernel.
+
+    ``neg_bias = (1 − adj) * (−1e9)`` is precomputed on the CPU
+    (GraphSplit places it there) and fed as a runtime input (GrAd).
+    """
+    return _forward(
+        params, x,
+        lambda h, a_s, a_d: attn_k.gat_attention(h, a_s, a_d, neg_bias))
+
+
+def apply_grax_ref(params: dict, neg_bias: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    return _forward(
+        params, x,
+        lambda h, a_s, a_d: ref.gat_attention_grax(h, a_s, a_d, neg_bias))

@@ -1,0 +1,133 @@
+"""2-layer GCN (Kipf & Welling) — baseline and StaGr/PreG/GrAd variants.
+
+    h1     = ReLU( norm @ x @ W1 + b1 )
+    logits =       norm @ h1 @ W2 + b2
+
+- ``apply_baseline``: edge-list scatter aggregation + on-device degree
+  normalization (sqrt/div per node) — the control-heavy out-of-the-box
+  mapping that lands on the DSP (paper Figs. 4/5).
+- ``apply_stagr``: dense MatMul against the precomputed PreG norm matrix,
+  via the Layer-1 Pallas kernel. With the matrix baked as a constant this
+  is StaGr; passed as a runtime input it is GrAd (+NodePad when padded).
+- ``apply_quant``: QuantGr — INT8 symmetric static quantization of both
+  MatMul operands in each layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import quant as quant_k
+from ..kernels import ref
+from ..kernels import stagr as stagr_k
+
+
+def init_params(rng: jax.Array, num_features: int, hidden: int,
+                num_classes: int) -> dict:
+    k1, k2 = jax.random.split(rng)
+    # Glorot init, as in the Kipf reference implementation.
+    s1 = jnp.sqrt(6.0 / (num_features + hidden))
+    s2 = jnp.sqrt(6.0 / (hidden + num_classes))
+    return {
+        "w1": jax.random.uniform(k1, (num_features, hidden), jnp.float32, -s1, s1),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.uniform(k2, (hidden, num_classes), jnp.float32, -s2, s2),
+        "b2": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Baseline: scatter aggregation + on-device normalization.
+# ---------------------------------------------------------------------------
+def _scatter_aggregate(edges: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Sum neighbor features via Gather/Scatter over the edge list.
+
+    ``edges`` is (m, 2) undirected; both directions plus self loops are
+    accumulated. This is the irregular-memory-access pattern the paper's
+    Fig. 3 preprocessing produces, kept here for numerical parity checks.
+    """
+    n = x.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    agg = jnp.zeros_like(x)
+    agg = agg.at[dst].add(x[src])
+    agg = agg.at[src].add(x[dst])
+    return agg + x  # self loops
+
+
+def _degrees(edges: jnp.ndarray, n: int) -> jnp.ndarray:
+    deg = jnp.ones((n,), jnp.float32)  # self loop
+    deg = deg.at[edges[:, 0]].add(1.0)
+    deg = deg.at[edges[:, 1]].add(1.0)
+    return deg
+
+
+def apply_baseline(params: dict, edges: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """Out-of-the-box mapping: normalization computed on device per layer."""
+    n = x.shape[0]
+    deg = _degrees(edges, n)
+    inv_sqrt = 1.0 / jnp.sqrt(deg)  # the DSP sqrt/div PreG eliminates
+
+    def layer(h, w, b):
+        h = h * inv_sqrt[:, None]
+        h = _scatter_aggregate(edges, h)
+        h = h * inv_sqrt[:, None]
+        return h @ w + b
+
+    h1 = jax.nn.relu(layer(x, params["w1"], params["b1"]))
+    return layer(h1, params["w2"], params["b2"])
+
+
+# ---------------------------------------------------------------------------
+# StaGr / PreG / GrAd: dense precomputed-mask aggregation (Pallas kernel).
+# ---------------------------------------------------------------------------
+def apply_stagr(params: dict, norm: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    h1 = jax.nn.relu(stagr_k.gcn_layer(norm, x, params["w1"], params["b1"]))
+    return stagr_k.gcn_layer(norm, h1, params["w2"], params["b2"])
+
+
+def apply_stagr_ref(params: dict, norm: jnp.ndarray,
+                    x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle-path twin of ``apply_stagr`` (pure jnp, no Pallas)."""
+    h1 = jax.nn.relu(ref.gcn_layer(norm, x, params["w1"], params["b1"]))
+    return ref.gcn_layer(norm, h1, params["w2"], params["b2"])
+
+
+# ---------------------------------------------------------------------------
+# QuantGr: INT8 symmetric static quantization.
+# ---------------------------------------------------------------------------
+def apply_quant(params: dict, norm: jnp.ndarray, x: jnp.ndarray,
+                scales: dict) -> jnp.ndarray:
+    """QuantGr datapath with calibration-time static scales.
+
+    Combination MatMuls run INT8×INT8→INT32 on quantized activations and
+    weights; aggregation keeps the FP norm matrix (its values are ≤1 and
+    dominated by memory, not MACs). Scales come from `quantize.calibrate`.
+    """
+
+    def qlayer(h, w, b, s_act, s_w):
+        hq = ref.quantize(h, s_act)
+        wq = ref.quantize(w, s_w)
+        hw = quant_k.quant_matmul(hq, wq, s_act, s_w)
+        return stagr_k.stagr_aggregate(norm, hw) + b
+
+    h1 = jax.nn.relu(qlayer(x, params["w1"], params["b1"],
+                            scales["act1"], scales["w1"]))
+    return qlayer(h1, params["w2"], params["b2"],
+                  scales["act2"], scales["w2"])
+
+
+def apply_quant_ref(params: dict, norm: jnp.ndarray, x: jnp.ndarray,
+                    scales: dict) -> jnp.ndarray:
+    def qlayer(h, w, b, s_act, s_w):
+        hq = ref.quantize(h, s_act)
+        wq = ref.quantize(w, s_w)
+        hw = ref.quant_matmul(hq, wq, s_act, s_w)
+        return ref.stagr_aggregate(norm, hw) + b
+
+    h1 = jax.nn.relu(qlayer(x, params["w1"], params["b1"],
+                            scales["act1"], scales["w1"]))
+    return qlayer(h1, params["w2"], params["b2"],
+                  scales["act2"], scales["w2"])

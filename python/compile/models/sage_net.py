@@ -1,0 +1,99 @@
+"""2-layer GraphSAGE — mean and max aggregators, baseline and GrAx3.
+
+    h1     = ReLU( x  @ W1_self + agg(mask, x)  @ W1_neigh + b1 )
+    logits =       h1 @ W2_self + agg(mask, h1) @ W2_neigh + b2
+
+``mask`` is the sampled adjacency (≤10 random neighbors + self, paper §V),
+precomputed on the CPU and reused across inferences (StaGr for SAGE).
+
+- mean: agg = row-normalized mask MatMul (always DPU-friendly).
+- max, baseline: per-row neighbor select + max — sequential DSP work.
+- max, GrAx3:    mask-multiply + max-pool Pallas kernel (paper Fig. 18);
+                 exact for the post-ReLU (≥0) features of layer 2, and for
+                 layer 1 whenever raw features are non-negative (bag-of-
+                 words features are), else a documented approximation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from ..kernels import sage as sage_k
+
+
+def init_params(rng: jax.Array, num_features: int, hidden: int,
+                num_classes: int) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s1 = jnp.sqrt(6.0 / (num_features + hidden))
+    s2 = jnp.sqrt(6.0 / (hidden + num_classes))
+
+    def u(key, shape, s):
+        return jax.random.uniform(key, shape, jnp.float32, -s, s)
+
+    return {
+        "w1_self": u(k1, (num_features, hidden), s1),
+        "w1_neigh": u(k2, (num_features, hidden), s1),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2_self": u(k3, (hidden, num_classes), s2),
+        "w2_neigh": u(k4, (hidden, num_classes), s2),
+        "b2": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def _forward(params: dict, x: jnp.ndarray, agg_fn) -> jnp.ndarray:
+    h1 = jax.nn.relu(x @ params["w1_self"] + agg_fn(x) @ params["w1_neigh"]
+                     + params["b1"])
+    return (h1 @ params["w2_self"] + agg_fn(h1) @ params["w2_neigh"]
+            + params["b2"])
+
+
+def apply_mean(params: dict, mask: jnp.ndarray,
+               x: jnp.ndarray) -> jnp.ndarray:
+    """SAGE-mean via the StaGr-style normalized-mask MatMul kernel."""
+    return _forward(params, x, lambda h: sage_k.sage_mean(mask, h))
+
+
+def apply_mean_ref(params: dict, mask: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    return _forward(params, x, lambda h: ref.sage_mean(mask, h))
+
+
+def apply_max_baseline(params: dict, mask: jnp.ndarray,
+                       x: jnp.ndarray) -> jnp.ndarray:
+    """Sequential select-then-max mapping (DSP-bound out of the box)."""
+    return _forward(params, x, lambda h: ref.sage_max_baseline(mask, h))
+
+
+def apply_max_grax3(params: dict, mask: jnp.ndarray,
+                    x: jnp.ndarray) -> jnp.ndarray:
+    """GrAx3 mask-multiply + max-pool via the Pallas kernel."""
+    return _forward(params, x, lambda h: sage_k.sage_max(mask, h))
+
+
+def apply_max_grax3_ref(params: dict, mask: jnp.ndarray,
+                        x: jnp.ndarray) -> jnp.ndarray:
+    return _forward(params, x, lambda h: ref.sage_max_grax3(mask, h))
+
+
+# ---------------------------------------------------------------------------
+# Gathered (index-matrix) forms — the full-scale/deployment formulation.
+# ``idx`` is (n, k+1) int32 from datasets.sampled_neighbors; numerically
+# equivalent to the dense-mask forms above (see kernels/ref.py).
+# ---------------------------------------------------------------------------
+def apply_mean_gathered(params: dict, idx: jnp.ndarray,
+                        x: jnp.ndarray) -> jnp.ndarray:
+    return _forward(params, x, lambda h: ref.sage_mean_gathered(idx, h))
+
+
+def apply_max_baseline_gathered(params: dict, idx: jnp.ndarray,
+                                x: jnp.ndarray) -> jnp.ndarray:
+    """Gather + sequential max — the control-heavy DSP mapping."""
+    return _forward(params, x, lambda h: ref.sage_max_gathered(idx, h))
+
+
+def apply_max_grax3_gathered(params: dict, idx: jnp.ndarray,
+                             x: jnp.ndarray) -> jnp.ndarray:
+    """GrAx3 numerics at deployment scale (= max(baseline, 0))."""
+    return _forward(params, x, lambda h: ref.sage_max_grax3_gathered(idx, h))

@@ -1,0 +1,68 @@
+"""QuantGr calibration: symmetric static INT8 scales (build-time).
+
+Static quantization precomputes scale/zero-point during model calibration
+(paper §IV-C): we run the FP32 model once over the calibration inputs,
+record per-tensor absolute maxima for weights and activations, and derive
+symmetric scales (zero point 0, equal positive/negative range). The scales
+ship with the weights in the `.gnnt` artifact and stay fixed at runtime.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def absmax_scale(x: np.ndarray, percentile: float = 100.0) -> float:
+    """Symmetric scale from the |x| distribution.
+
+    ``percentile < 100`` clips outliers — the standard calibration trick;
+    the default keeps exact absmax, which suffices at GNN scale.
+    """
+    a = np.abs(np.asarray(x, dtype=np.float32)).reshape(-1)
+    if a.size == 0:
+        return 1.0
+    m = float(np.percentile(a, percentile)) if percentile < 100.0 \
+        else float(a.max())
+    return ref.quant_scale(m)
+
+
+def calibrate_gcn(params: dict, norm: jnp.ndarray, x: jnp.ndarray,
+                  percentile: float = 100.0) -> dict[str, float]:
+    """Record activation/weight scales for both GCN layers."""
+    from .models import gcn
+
+    # Layer-1 activation input is x itself; layer-2's is the post-ReLU h1.
+    h1 = jnp.maximum(ref.gcn_layer(norm, x, params["w1"], params["b1"]), 0.0)
+    return {
+        "act1": absmax_scale(np.asarray(x), percentile),
+        "w1": absmax_scale(np.asarray(params["w1"]), percentile),
+        "act2": absmax_scale(np.asarray(h1), percentile),
+        "w2": absmax_scale(np.asarray(params["w2"]), percentile),
+    }
+
+
+def quantize_weights(params: dict, scales: dict[str, float]) -> dict:
+    """INT8 weight tensors for the .gnnt artifact (w1/w2 only)."""
+    return {
+        "w1q": np.asarray(ref.quantize(params["w1"], scales["w1"])),
+        "w2q": np.asarray(ref.quantize(params["w2"], scales["w2"])),
+    }
+
+
+def quant_error(params: dict, norm: jnp.ndarray, x: jnp.ndarray,
+                scales: dict[str, float]) -> dict[str, float]:
+    """Logit-level error of the INT8 path vs FP32 — sanity telemetry."""
+    from .models import gcn
+
+    fp = np.asarray(gcn.apply_stagr_ref(params, norm, x))
+    q = np.asarray(gcn.apply_quant_ref(params, norm, x, scales))
+    denom = float(np.abs(fp).max()) or 1.0
+    agree = float((fp.argmax(-1) == q.argmax(-1)).mean())
+    return {
+        "max_abs_err": float(np.abs(fp - q).max()),
+        "rel_err": float(np.abs(fp - q).max()) / denom,
+        "argmax_agreement": agree,
+    }

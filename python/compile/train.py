@@ -1,0 +1,167 @@
+"""Train the GNN models on the synthetic dataset twins (build-time only).
+
+The paper deploys *pre-trained* models (PyTorch + PyG, lr 0.01, weight
+decay 5e-4, 100 epochs — §V); GraNNite itself never retrains. This module
+is our stand-in for that training step: pure-JAX full-batch training with
+a hand-rolled Adam (optax is unavailable offline). Trained weights are
+serialized to `.gnnt` by aot.py and consumed by the rust runtime.
+
+Training always goes through the *reference* (pure-jnp) forward paths —
+gradients through interpret-mode Pallas are slow and pointless at build
+time; kernel/oracle agreement is separately enforced by the test suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .models import HIDDEN, gat, gcn, sage_net
+
+LR = 0.01
+WEIGHT_DECAY = 5e-4
+EPOCHS = 100
+SAGE_MAX_NEIGHBORS = 10  # paper §V
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam (the optimizer substrate — no optax offline).
+# ---------------------------------------------------------------------------
+def adam_init(params: dict) -> dict:
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_step(params: dict, grads: dict, state: dict, lr: float = LR,
+              b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    scale = lr * jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - scale * m_ / (jnp.sqrt(v_) + eps), params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def accuracy(logits: np.ndarray, labels: np.ndarray,
+             mask: np.ndarray) -> float:
+    pred = np.asarray(logits).argmax(axis=-1)
+    sel = np.asarray(mask, bool)
+    return float((pred[sel] == np.asarray(labels)[sel]).mean())
+
+
+# ---------------------------------------------------------------------------
+# Per-model training drivers.
+# ---------------------------------------------------------------------------
+def _train(apply_fn, params: dict, inputs: tuple, labels: np.ndarray,
+           train_mask: np.ndarray, val_mask: np.ndarray,
+           epochs: int = EPOCHS, verbose: bool = False):
+    labels_j = jnp.asarray(labels)
+    tr = jnp.asarray(train_mask, jnp.float32)
+
+    def loss_fn(p):
+        logits = apply_fn(p, *inputs)
+        l2 = sum(jnp.sum(w * w) for w in jax.tree.leaves(p))
+        return cross_entropy(logits, labels_j, tr) + WEIGHT_DECAY * l2
+
+    @jax.jit
+    def step(p, s):
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, s = adam_step(p, grads, s)
+        return p, s, loss
+
+    state = adam_init(params)
+    history = []
+    for epoch in range(epochs):
+        params, state, loss = step(params, state)
+        if verbose and (epoch % 10 == 0 or epoch == epochs - 1):
+            logits = apply_fn(params, *inputs)
+            va = accuracy(np.asarray(logits), labels, val_mask)
+            print(f"  epoch {epoch:3d} loss {float(loss):.4f} val_acc {va:.3f}")
+        history.append(float(loss))
+    return params, history
+
+
+def train_gcn(ds: datasets.GraphDataset, seed: int = 0, epochs: int = EPOCHS,
+              verbose: bool = False):
+    norm = jnp.asarray(ds.norm_adjacency())
+    x = jnp.asarray(ds.features)
+    params = gcn.init_params(jax.random.key(seed), ds.num_features, HIDDEN,
+                             ds.num_classes)
+    params, hist = _train(gcn.apply_stagr_ref, params, (norm, x), ds.labels,
+                          ds.train_mask, ds.val_mask, epochs, verbose)
+    logits = gcn.apply_stagr_ref(params, norm, x)
+    return params, {
+        "loss": hist,
+        "test_acc": accuracy(np.asarray(logits), ds.labels, ds.test_mask),
+    }
+
+
+# single-head GAT needs a longer schedule than GCN to escape the uniform-
+# attention plateau (see EXPERIMENTS.md §Datasets)
+GAT_EPOCHS = 300
+
+
+def train_gat(ds: datasets.GraphDataset, seed: int = 0, epochs: int = EPOCHS,
+              verbose: bool = False):
+    if epochs == EPOCHS:
+        epochs = GAT_EPOCHS
+    adj = jnp.asarray(ds.adjacency())
+    x = jnp.asarray(ds.features)
+    params = gat.init_params(jax.random.key(seed), ds.num_features, HIDDEN,
+                             ds.num_classes)
+    params, hist = _train(gat.apply_effop, params, (adj, x), ds.labels,
+                          ds.train_mask, ds.val_mask, epochs, verbose)
+    logits = gat.apply_effop(params, adj, x)
+    return params, {
+        "loss": hist,
+        "test_acc": accuracy(np.asarray(logits), ds.labels, ds.test_mask),
+    }
+
+
+def train_sage(ds: datasets.GraphDataset, aggregator: str = "mean",
+               seed: int = 0, epochs: int = EPOCHS, verbose: bool = False):
+    idx = jnp.asarray(ds.sampled_neighbors(SAGE_MAX_NEIGHBORS))
+    x = jnp.asarray(ds.features)
+    params = sage_net.init_params(jax.random.key(seed), ds.num_features,
+                                  HIDDEN, ds.num_classes)
+    apply_fn = (sage_net.apply_mean_gathered if aggregator == "mean"
+                else sage_net.apply_max_grax3_gathered)
+    params, hist = _train(apply_fn, params, (idx, x), ds.labels,
+                          ds.train_mask, ds.val_mask, epochs, verbose)
+    logits = apply_fn(params, idx, x)
+    return params, {
+        "loss": hist,
+        "test_acc": accuracy(np.asarray(logits), ds.labels, ds.test_mask),
+    }
+
+
+TRAINERS = {
+    "gcn": train_gcn,
+    "gat": train_gat,
+    "sage_mean": functools.partial(train_sage, aggregator="mean"),
+    "sage_max": functools.partial(train_sage, aggregator="max"),
+}
+
+
+if __name__ == "__main__":
+    ds = datasets.cora_twin()
+    for name, trainer in TRAINERS.items():
+        print(f"training {name} on {ds.name}")
+        _, report = trainer(ds, verbose=True)
+        print(f"  {name}: test_acc={report['test_acc']:.3f}")

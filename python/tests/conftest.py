@@ -1,0 +1,37 @@
+"""Shared fixtures for the L1/L2 test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is run from python/ or the repo root.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+@pytest.fixture(scope="session")
+def cora():
+    from compile import datasets
+    return datasets.cora_twin()
+
+
+@pytest.fixture(scope="session")
+def citeseer():
+    from compile import datasets
+    return datasets.citeseer_twin()
+
+
+def small_graph(rng, n=40, p=0.12):
+    """Random small graph fixture pieces: adjacency with self loops."""
+    adj = (rng.random((n, n)) < p).astype(np.float32)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 1.0)
+    return adj

@@ -1,0 +1,97 @@
+"""AOT export path: HLO lowering sanity + artifact/manifest coherence.
+
+Full `make artifacts` output is exercised end-to-end by the rust
+integration tests; here we lower small-scale twins of each export and
+verify the HLO text is loadable-shaped (entry computation, parameter
+count, no serialized-proto interchange).
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, datasets, quantize, train
+from compile.models import HIDDEN, gcn
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    spec = dict(name="tiny", n=30, m=70, classes=3, features=24,
+                train=12, val=9, test=9, seed=5)
+    return datasets.make_twin(spec)
+
+
+@pytest.fixture(scope="module")
+def tiny_scales(tiny):
+    import jax.numpy as jnp
+    params = gcn.init_params(jax.random.key(0), tiny.num_features, HIDDEN,
+                             tiny.num_classes)
+    return quantize.calibrate_gcn(params, jnp.asarray(tiny.norm_adjacency()),
+                                  jnp.asarray(tiny.features))
+
+
+def _check_hlo(text: str, n_params: int):
+    assert "ENTRY" in text, "missing entry computation"
+    assert "parameter(" in text
+    found = max(int(tok.split("parameter(")[1].split(")")[0])
+                for tok in text.split("\n") if "parameter(" in tok)
+    assert found == n_params - 1, f"expected {n_params} params, max id {found}"
+
+
+class TestLowering:
+    def test_gcn_exports_lower(self, tiny, tiny_scales):
+        n, f, c = tiny.num_nodes, tiny.num_features, tiny.num_classes
+        for name, fn, specs, inames in aot.gcn_exports(n, f, c, n + 10,
+                                                       tiny_scales):
+            text = aot.lower(fn, *specs)
+            _check_hlo(text, len(specs))
+            assert len(inames) == len(specs)
+
+    def test_gat_exports_lower(self, tiny):
+        n, f, c = tiny.num_nodes, tiny.num_features, tiny.num_classes
+        for name, fn, specs, inames in aot.gat_exports(n, f, c):
+            text = aot.lower(fn, *specs)
+            _check_hlo(text, len(specs))
+
+    def test_sage_exports_lower(self, tiny):
+        n, f, c = tiny.num_nodes, tiny.num_features, tiny.num_classes
+        for name, fn, specs, inames in aot.sage_exports(n, f, c, 5):
+            text = aot.lower(fn, *specs)
+            _check_hlo(text, len(specs))
+
+    def test_lowered_text_is_hlo_not_proto(self, tiny, tiny_scales):
+        """Interchange must be HLO text (xla_extension 0.5.1 gotcha)."""
+        n, f, c = tiny.num_nodes, tiny.num_features, tiny.num_classes
+        name, fn, specs, _ = aot.gcn_exports(n, f, c, n, tiny_scales)[0]
+        text = aot.lower(fn, *specs)
+        assert text.startswith("HloModule"), "expected textual HLO module"
+        assert "\x00" not in text
+
+
+class TestManifestRun:
+    def test_skip_hlo_run_writes_dataset_weights_manifest(self, tmp_path,
+                                                          monkeypatch):
+        """A fast (--skip-hlo, tiny-epochs) run of the full driver."""
+        monkeypatch.setattr(aot, "CAPACITY", {"cora": 3000})
+        out = str(tmp_path)
+        aot.run(out, ["cora"], epochs=2, skip_hlo=True)
+        assert os.path.exists(os.path.join(out, "cora.gnnt"))
+        assert os.path.exists(os.path.join(out, "weights_gcn_cora.gnnt"))
+        assert os.path.exists(os.path.join(out, "manifest.toml"))
+        manifest = open(os.path.join(out, "manifest.toml")).read()
+        assert "[dataset.cora]" in manifest
+        assert "[weights.gcn_cora]" in manifest
+
+    def test_dataset_gnnt_contents(self, tmp_path):
+        from compile import gnnt
+        spec = dict(name="tiny2", n=25, m=40, classes=3, features=12,
+                    train=9, val=8, test=8, seed=11)
+        ds = datasets.make_twin(spec)
+        aot.export_dataset(ds, str(tmp_path))
+        back = gnnt.read(str(tmp_path / "tiny2.gnnt"))
+        assert back["features"].shape == (25, 12)
+        assert back["edges"].shape == (40, 2)
+        assert back["nbr_idx"].shape == (25, train.SAGE_MAX_NEIGHBORS + 1)
+        assert back["labels"].dtype == np.int32

@@ -1,0 +1,130 @@
+"""Dataset twin properties: matched statistics, determinism, derived masks."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+class TestSpecs:
+    def test_cora_matches_published_stats(self, cora):
+        assert cora.num_nodes == 2708
+        assert cora.num_edges == 5429
+        assert cora.num_features == 1433
+        assert cora.num_classes == 7
+        assert cora.train_mask.sum() == 140
+        assert cora.val_mask.sum() == 500
+        assert cora.test_mask.sum() == 1000
+
+    def test_citeseer_matches_published_stats(self, citeseer):
+        assert citeseer.num_nodes == 3327
+        assert citeseer.num_edges == 4732
+        assert citeseer.num_features == 3703
+        assert citeseer.num_classes == 6
+
+    def test_deterministic(self, cora):
+        again = datasets.cora_twin()
+        np.testing.assert_array_equal(cora.edges, again.edges)
+        np.testing.assert_array_equal(cora.features, again.features)
+        np.testing.assert_array_equal(cora.labels, again.labels)
+
+    def test_feature_density_cora_like(self, cora):
+        density = float((cora.features > 0).mean())
+        assert 0.005 < density < 0.03  # Cora's ~1.27%
+
+    def test_splits_disjoint(self, cora):
+        overlap = (cora.train_mask & cora.val_mask) | \
+                  (cora.train_mask & cora.test_mask) | \
+                  (cora.val_mask & cora.test_mask)
+        assert not overlap.any()
+
+    def test_homophily_planted(self, cora):
+        s, d = cora.edges[:, 0], cora.edges[:, 1]
+        same = (cora.labels[s] == cora.labels[d]).mean()
+        assert same > 0.6  # planted at 0.72 + random intra hits
+
+    def test_edges_canonical(self, cora):
+        s, d = cora.edges[:, 0], cora.edges[:, 1]
+        assert (s < d).all()  # src < dst, no self loops
+        keys = set(map(tuple, cora.edges.tolist()))
+        assert len(keys) == cora.num_edges  # no duplicates
+
+    def test_unknown_dataset_raises(self):
+        with pytest.raises(KeyError):
+            datasets.load("pubmed")
+
+
+class TestDerivedMatrices:
+    def test_adjacency_symmetric_with_self_loops(self, cora):
+        a = cora.adjacency()
+        assert (a == a.T).all()
+        assert (np.diag(a) == 1.0).all()
+        # m undirected edges → 2m off-diagonal ones + n self loops
+        assert int(a.sum()) == 2 * cora.num_edges + cora.num_nodes
+
+    def test_norm_rows_match_symmetric_normalization(self, cora):
+        norm = cora.norm_adjacency()
+        a = cora.adjacency()
+        deg = a.sum(axis=1)
+        i, j = 17, int(np.flatnonzero(a[17])[0])
+        expected = a[i, j] / np.sqrt(deg[i] * deg[j])
+        assert abs(norm[i, j] - expected) < 1e-6
+
+    def test_nodepad_padding_isolated(self, cora):
+        cap = 3000
+        a = cora.adjacency(pad_to=cap)
+        assert a.shape == (cap, cap)
+        assert a[cora.num_nodes:, :].sum() == 0  # padded rows disconnected
+        assert a[:, cora.num_nodes:].sum() == 0
+        norm = cora.norm_adjacency(pad_to=cap)
+        assert np.isfinite(norm).all()  # no div-by-zero on degree-0 rows
+        assert norm[cora.num_nodes:, :].sum() == 0
+
+    def test_padded_features_zero_tail(self, cora):
+        xp = cora.padded_features(3000)
+        assert xp.shape == (3000, cora.num_features)
+        assert np.abs(xp[cora.num_nodes:]).sum() == 0
+
+    def test_pad_below_n_raises(self, cora):
+        with pytest.raises(ValueError):
+            cora.adjacency(pad_to=10)
+        with pytest.raises(ValueError):
+            cora.padded_features(10)
+
+    def test_sampled_neighbors_structure(self, cora):
+        k = 10
+        idx = cora.sampled_neighbors(k)
+        n = cora.num_nodes
+        assert idx.shape == (n, k + 1)
+        assert (idx[:, 0] == np.arange(n)).all()  # self first
+        assert idx.max() <= n  # sentinel is n
+        # every non-sentinel entry is a real neighbor
+        nbrs = cora.neighbor_lists()
+        for i in [0, 5, 100, n - 1]:
+            for j in idx[i, 1:]:
+                if j < n:
+                    assert int(j) in nbrs[i]
+
+    def test_sampled_neighbors_capped(self, cora):
+        idx = cora.sampled_neighbors(10)
+        valid = (idx < cora.num_nodes).sum(axis=1)
+        assert valid.max() <= 11
+
+    def test_sampled_adjacency_consistent_with_idx(self, cora):
+        k = 10
+        idx = cora.sampled_neighbors(k)
+        mask = cora.sampled_adjacency(k)
+        n = cora.num_nodes
+        rebuilt = np.zeros((n, n), np.float32)
+        for i in range(n):
+            for j in idx[i]:
+                if j < n:
+                    rebuilt[i, j] = 1.0
+        np.testing.assert_array_equal(mask, rebuilt)
+
+    def test_sampled_adjacency_deterministic_per_seed(self, cora):
+        a = cora.sampled_adjacency(5, seed=3)
+        b = cora.sampled_adjacency(5, seed=3)
+        np.testing.assert_array_equal(a, b)
+        c = cora.sampled_adjacency(5, seed=4)
+        assert (a != c).any()

@@ -1,0 +1,67 @@
+"""`.gnnt` container: roundtrip across all dtypes, format errors."""
+
+import numpy as np
+import pytest
+
+from compile import gnnt
+
+
+class TestRoundtrip:
+    def test_all_dtypes(self, tmp_path, rng):
+        path = str(tmp_path / "t.gnnt")
+        tensors = {
+            "f32": rng.standard_normal((3, 4)).astype(np.float32),
+            "i8": rng.integers(-127, 127, (5,)).astype(np.int8),
+            "i32": rng.integers(-1000, 1000, (2, 2, 2)).astype(np.int32),
+            "u8": rng.integers(0, 2, (7,)).astype(np.uint8),
+            "scalar": np.float32(3.25).reshape(()),
+        }
+        gnnt.write(path, tensors)
+        back = gnnt.read(path)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_f16_via_u16_bits(self, tmp_path):
+        path = str(tmp_path / "h.gnnt")
+        x = np.array([1.5, -2.25], np.float16)
+        gnnt.write(path, {"h": x})
+        back = gnnt.read(path)["h"]
+        np.testing.assert_array_equal(back.view(np.float16), x)
+
+    def test_empty_file(self, tmp_path):
+        path = str(tmp_path / "e.gnnt")
+        gnnt.write(path, {})
+        assert gnnt.read(path) == {}
+
+    def test_unicode_names(self, tmp_path):
+        path = str(tmp_path / "u.gnnt")
+        gnnt.write(path, {"wéights/λ1": np.zeros(2, np.float32)})
+        assert "wéights/λ1" in gnnt.read(path)
+
+    def test_large_tensor_preserved(self, tmp_path, rng):
+        path = str(tmp_path / "big.gnnt")
+        x = rng.standard_normal((500, 300)).astype(np.float32)
+        gnnt.write(path, {"x": x})
+        np.testing.assert_array_equal(gnnt.read(path)["x"], x)
+
+
+class TestErrors:
+    def test_bad_magic(self, tmp_path):
+        path = tmp_path / "bad.gnnt"
+        path.write_bytes(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(ValueError, match="magic"):
+            gnnt.read(str(path))
+
+    def test_bad_version(self, tmp_path):
+        path = tmp_path / "v.gnnt"
+        path.write_bytes(b"GNNT" + (99).to_bytes(4, "little")
+                         + (0).to_bytes(4, "little"))
+        with pytest.raises(ValueError, match="version"):
+            gnnt.read(str(path))
+
+    def test_unsupported_dtype_write(self, tmp_path):
+        with pytest.raises(TypeError):
+            gnnt.write(str(tmp_path / "d.gnnt"),
+                       {"x": np.zeros(3, np.float64)})

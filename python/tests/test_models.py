@@ -1,0 +1,174 @@
+"""L2 model-variant equivalence: the optimization ladder must preserve
+numerics up to the documented approximations (paper: "negligible loss")."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import datasets
+from compile.models import HIDDEN, gat, gcn, sage_net
+
+N, F, C = 60, 33, 5
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """A small synthetic graph exercising all derived matrices."""
+    spec = dict(name="tiny", n=N, m=140, classes=C, features=F,
+                train=20, val=15, test=15, seed=99)
+    return datasets.make_twin(spec)
+
+
+@pytest.fixture(scope="module")
+def gcn_params():
+    return gcn.init_params(jax.random.key(0), F, HIDDEN, C)
+
+
+@pytest.fixture(scope="module")
+def gat_params():
+    return gat.init_params(jax.random.key(1), F, HIDDEN, C)
+
+
+@pytest.fixture(scope="module")
+def sage_params():
+    return sage_net.init_params(jax.random.key(2), F, HIDDEN, C)
+
+
+class TestGCNVariants:
+    def test_baseline_equals_stagr(self, tiny, gcn_params):
+        """Scatter aggregation + on-device norm == PreG dense MatMul."""
+        x = jnp.asarray(tiny.features)
+        base = gcn.apply_baseline(gcn_params, jnp.asarray(tiny.edges), x)
+        stag = gcn.apply_stagr_ref(gcn_params, jnp.asarray(tiny.norm_adjacency()), x)
+        assert_allclose(np.asarray(base), np.asarray(stag),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_pallas_path_equals_ref(self, tiny, gcn_params):
+        norm = jnp.asarray(tiny.norm_adjacency())
+        x = jnp.asarray(tiny.features)
+        kern = gcn.apply_stagr(gcn_params, norm, x)
+        ref_ = gcn.apply_stagr_ref(gcn_params, norm, x)
+        assert_allclose(np.asarray(kern), np.asarray(ref_),
+                        rtol=1e-4, atol=1e-4)
+
+    def test_nodepad_preserves_real_nodes(self, tiny, gcn_params):
+        """NodePad: padded execution == unpadded on the real rows."""
+        cap = N + 17
+        norm = jnp.asarray(tiny.norm_adjacency())
+        x = jnp.asarray(tiny.features)
+        normp = jnp.asarray(tiny.norm_adjacency(pad_to=cap))
+        xp = jnp.asarray(tiny.padded_features(cap))
+        out = gcn.apply_stagr_ref(gcn_params, norm, x)
+        outp = gcn.apply_stagr_ref(gcn_params, normp, xp)
+        assert_allclose(np.asarray(outp)[:N], np.asarray(out),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_quant_argmax_mostly_agrees(self, tiny, gcn_params):
+        from compile import quantize
+        norm = jnp.asarray(tiny.norm_adjacency())
+        x = jnp.asarray(tiny.features)
+        scales = quantize.calibrate_gcn(gcn_params, norm, x)
+        err = quantize.quant_error(gcn_params, norm, x, scales)
+        assert err["argmax_agreement"] > 0.9
+        assert err["rel_err"] < 0.1
+
+    def test_quant_kernel_path_equals_ref(self, tiny, gcn_params):
+        from compile import quantize
+        norm = jnp.asarray(tiny.norm_adjacency())
+        x = jnp.asarray(tiny.features)
+        scales = quantize.calibrate_gcn(gcn_params, norm, x)
+        kern = gcn.apply_quant(gcn_params, norm, x, scales)
+        ref_ = gcn.apply_quant_ref(gcn_params, norm, x, scales)
+        assert_allclose(np.asarray(kern), np.asarray(ref_),
+                        rtol=1e-4, atol=1e-4)
+
+
+class TestGATVariants:
+    def test_effop_equals_baseline(self, tiny, gat_params):
+        adj = jnp.asarray(tiny.adjacency())
+        x = jnp.asarray(tiny.features)
+        base = gat.apply_baseline(gat_params, adj, x)
+        eff = gat.apply_effop(gat_params, adj, x)
+        assert_allclose(np.asarray(base), np.asarray(eff),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_grax_close_to_baseline(self, tiny, gat_params):
+        adj = tiny.adjacency()
+        neg_bias = jnp.asarray(((1.0 - adj) * -1e9).astype(np.float32))
+        x = jnp.asarray(tiny.features)
+        base = gat.apply_baseline(gat_params, jnp.asarray(adj), x)
+        grax = gat.apply_grax_ref(gat_params, neg_bias, x)
+        assert_allclose(np.asarray(base), np.asarray(grax),
+                        rtol=1e-3, atol=1e-4)
+
+    def test_grax_kernel_equals_ref(self, tiny, gat_params):
+        adj = tiny.adjacency()
+        neg_bias = jnp.asarray(((1.0 - adj) * -1e9).astype(np.float32))
+        x = jnp.asarray(tiny.features)
+        kern = gat.apply_grax(gat_params, neg_bias, x)
+        ref_ = gat.apply_grax_ref(gat_params, neg_bias, x)
+        assert_allclose(np.asarray(kern), np.asarray(ref_),
+                        rtol=5e-4, atol=5e-5)
+
+    def test_argmax_stable_under_grax(self, tiny, gat_params):
+        """Predictions (what accuracy measures) survive GrAx1+2."""
+        adj = tiny.adjacency()
+        neg_bias = jnp.asarray(((1.0 - adj) * -1e9).astype(np.float32))
+        x = jnp.asarray(tiny.features)
+        base = np.asarray(gat.apply_baseline(gat_params, jnp.asarray(adj), x))
+        grax = np.asarray(gat.apply_grax_ref(gat_params, neg_bias, x))
+        agree = (base.argmax(-1) == grax.argmax(-1)).mean()
+        assert agree > 0.98
+
+
+class TestSAGEVariants:
+    K = 6
+
+    def test_mean_dense_equals_gathered(self, tiny, sage_params):
+        mask = jnp.asarray(tiny.sampled_adjacency(self.K))
+        idx = jnp.asarray(tiny.sampled_neighbors(self.K))
+        x = jnp.asarray(tiny.features)
+        dense = sage_net.apply_mean_ref(sage_params, mask, x)
+        gath = sage_net.apply_mean_gathered(sage_params, idx, x)
+        assert_allclose(np.asarray(dense), np.asarray(gath),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_max_grax3_dense_equals_gathered(self, tiny, sage_params):
+        mask = jnp.asarray(tiny.sampled_adjacency(self.K))
+        idx = jnp.asarray(tiny.sampled_neighbors(self.K))
+        x = jnp.asarray(tiny.features)
+        dense = sage_net.apply_max_grax3_ref(sage_params, mask, x)
+        gath = sage_net.apply_max_grax3_gathered(sage_params, idx, x)
+        assert_allclose(np.asarray(dense), np.asarray(gath),
+                        rtol=1e-5, atol=1e-6)
+
+    def test_grax3_equals_baseline_on_nonneg_features(self, tiny, sage_params):
+        """Bag-of-words features are ≥0 and layer-2 inputs are post-ReLU,
+        so GrAx3 degrades nothing except negative layer-2 maxima clipping;
+        check argmax agreement stays high."""
+        idx = jnp.asarray(tiny.sampled_neighbors(self.K))
+        x = jnp.asarray(tiny.features)
+        base = np.asarray(sage_net.apply_max_baseline_gathered(
+            sage_params, idx, x))
+        grax = np.asarray(sage_net.apply_max_grax3_gathered(
+            sage_params, idx, x))
+        agree = (base.argmax(-1) == grax.argmax(-1)).mean()
+        assert agree > 0.9
+
+    def test_mean_kernel_equals_ref(self, tiny, sage_params):
+        mask = jnp.asarray(tiny.sampled_adjacency(self.K))
+        x = jnp.asarray(tiny.features)
+        kern = sage_net.apply_mean(sage_params, mask, x)
+        ref_ = sage_net.apply_mean_ref(sage_params, mask, x)
+        assert_allclose(np.asarray(kern), np.asarray(ref_),
+                        rtol=1e-4, atol=1e-4)
+
+    def test_max_kernel_equals_ref(self, tiny, sage_params):
+        mask = jnp.asarray(tiny.sampled_adjacency(self.K))
+        x = jnp.asarray(tiny.features)
+        kern = sage_net.apply_max_grax3(sage_params, mask, x)
+        ref_ = sage_net.apply_max_grax3_ref(sage_params, mask, x)
+        assert_allclose(np.asarray(kern), np.asarray(ref_),
+                        rtol=1e-4, atol=1e-4)

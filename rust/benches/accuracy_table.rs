@@ -1,0 +1,46 @@
+//! Accuracy table over the real PJRT artifacts: the paper's quality-loss
+//! claims (QuantGr / GrAx1-3 "negligible loss") measured on real numerics.
+//! Requires `make artifacts`; prints a skip notice otherwise.
+use grannite::bench::banner;
+use grannite::coordinator::Coordinator;
+use grannite::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    banner("Accuracy — PJRT execution of every artifact");
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.toml").exists() {
+        println!("artifacts/ missing — run `make artifacts` first (skipping)");
+        return Ok(());
+    }
+    for dataset in ["cora", "citeseer"] {
+        let mut c = Coordinator::open(dir, dataset)?;
+        let mut t = Table::new(
+            format!("accuracy on {dataset} twin"),
+            &["artifact", "test acc", "latency"],
+        );
+        let names: Vec<String> = c
+            .runtime
+            .artifact_names()
+            .iter()
+            .filter(|n| n.ends_with(dataset) && !n.contains("_ev_"))
+            .map(|s| s.to_string())
+            .collect();
+        for name in names {
+            let t0 = std::time::Instant::now();
+            match c.evaluate(&name) {
+                Ok(acc) => {
+                    t.row(&[
+                        name.clone(),
+                        format!("{acc:.3}"),
+                        grannite::util::human_us(t0.elapsed().as_secs_f64() * 1e6),
+                    ]);
+                }
+                Err(e) => {
+                    t.row(&[name.clone(), format!("error: {e:#}"), "-".into()]);
+                }
+            }
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 20: progressive optimization speedups.
+use grannite::bench::{banner, figures};
+use grannite::config::HardwareConfig;
+use grannite::graph::datasets;
+
+fn main() {
+    banner("Fig. 20 — progressive GraNNite speedups");
+    let hw = HardwareConfig::npu_series2();
+    figures::fig20(&datasets::CORA, &hw).print();
+    figures::fig20(&datasets::CITESEER, &hw).print();
+}

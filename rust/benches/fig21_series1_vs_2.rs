@@ -1,0 +1,7 @@
+//! Regenerates paper Fig. 21: Series-1 vs Series-2 NPU GCN throughput.
+use grannite::bench::{banner, figures};
+
+fn main() {
+    banner("Fig. 21 — Series 1 vs Series 2");
+    figures::fig21().print();
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Fig. 22: CPU / GPU / NPU model throughput.
+use grannite::bench::{banner, figures};
+use grannite::graph::datasets;
+
+fn main() {
+    banner("Fig. 22 — device comparison");
+    figures::fig22(&datasets::CORA).print();
+    figures::fig22(&datasets::CITESEER).print();
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 23: normalized energy per inference.
+use grannite::bench::{banner, figures};
+
+fn main() {
+    banner("Fig. 23 — energy comparison");
+    figures::fig23().print();
+    figures::graphsplit_ablation(&grannite::graph::datasets::CORA).print();
+}

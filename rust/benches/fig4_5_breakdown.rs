@@ -1,0 +1,15 @@
+//! Regenerates paper Fig. 4 (preprocess/compute × DPU/DSP breakdown) and
+//! Fig. 5 (per-op compute breakdown) — DESIGN.md §6.
+use grannite::bench::{banner, figures, run_bench};
+use grannite::config::HardwareConfig;
+
+fn main() {
+    banner("Fig. 4 / Fig. 5 — latency breakdowns (out-of-the-box mapping)");
+    let hw = HardwareConfig::npu_series2();
+    figures::fig4(&hw).print();
+    figures::fig5(&hw).print();
+    // harness overhead telemetry: how fast is one full simulation?
+    run_bench("simulate(fig4 GraphConv)", 3, 20, || {
+        figures::fig4(&hw)
+    });
+}

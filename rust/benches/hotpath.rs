@@ -1,0 +1,69 @@
+//! Hot-path profiling bench (EXPERIMENTS.md §Perf): the request-path
+//! pieces that run per inference/update, measured in isolation.
+use grannite::bench::{banner, run_bench};
+use grannite::coordinator::ModelState;
+use grannite::graph::datasets::synthesize;
+use grannite::graph::{DynamicGraph, Graph};
+use grannite::tensor::Mat;
+use grannite::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    banner("hot-path microbenchmarks (L3)");
+
+    // 1. GrAd incremental mask update at Cora scale
+    let ds = synthesize("hot", 2708, 5429, 7, 64, 1);
+    let mut dg = DynamicGraph::new(&ds.graph, 3000)?;
+    let mut rng = Rng::new(7);
+    run_bench("GrAd add+remove edge (cap 3000)", 10, 200, || {
+        let u = rng.usize(2708);
+        let v = (u + 1 + rng.usize(2706)) % 2708;
+        let _ = dg.add_edge(u.min(v), u.max(v));
+        let _ = dg.remove_edge(u.min(v), u.max(v));
+    });
+
+    // 2. full norm rebuild (what GrAd avoids)
+    let g: Graph = ds.graph.clone();
+    run_bench("full PreG norm rebuild (2708²)", 2, 20, || {
+        std::hint::black_box(g.norm_adjacency(3000));
+    });
+
+    // 3. CacheG binding hit vs miss
+    let mut state = ModelState::from_dataset(ds.clone(), 3000)?;
+    let _ = state.binding("norm_pad", "gcn"); // warm
+    run_bench("binding('norm_pad') CacheG hit", 5, 100, || {
+        state.binding("norm_pad", "gcn").unwrap()
+    });
+
+    // 4. reference-executor aggregation matmul (CPU fallback path)
+    let norm = g.norm_adjacency(2708);
+    let h = Mat::from_fn(2708, 64, |i, j| ((i * 7 + j) % 13) as f32 * 0.1);
+    run_bench("sparse-aware matmul norm@h (2708²x64)", 3, 30, || {
+        norm.matmul(&h)
+    });
+
+    // 5. ZVC codec at mask scale
+    let z = grannite::graph::sparsity::Zvc::compress_mat(&norm);
+    println!(
+        "  norm ZVC: {} -> {} ({:.1}x)",
+        grannite::util::human_bytes(z.dense_bytes()),
+        grannite::util::human_bytes(z.bytes()),
+        z.dense_bytes() as f64 / z.bytes() as f64
+    );
+    run_bench("ZVC compress norm (2708²)", 2, 20, || {
+        grannite::graph::sparsity::Zvc::compress_mat(&norm)
+    });
+
+    // 6. PJRT end-to-end (only with artifacts)
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.toml").exists() {
+        let mut c = grannite::coordinator::Coordinator::open(dir, "cora")?;
+        let name = "gcn_stagr_cora";
+        let _ = c.infer(name)?; // compile+warm
+        run_bench("PJRT infer gcn_stagr_cora e2e", 2, 10, || {
+            c.infer(name).unwrap()
+        });
+    } else {
+        println!("(skipping PJRT hot path: artifacts/ missing)");
+    }
+    Ok(())
+}

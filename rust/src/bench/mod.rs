@@ -1,0 +1,50 @@
+//! In-tree benchmark harness (criterion is unavailable offline) and the
+//! paper-figure drivers shared by `rust/benches/*` and the CLI.
+
+pub mod figures;
+
+use std::time::Instant;
+
+use crate::util::timing::Stats;
+
+/// Measure a closure: `warmup` unrecorded runs, then `iters` samples.
+pub fn run_bench<T>(name: &str, warmup: usize, iters: usize,
+                    mut f: impl FnMut() -> T) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let stats = Stats::from_samples(&samples);
+    println!("bench {name:40} {stats}");
+    stats
+}
+
+/// Pretty banner for bench binaries.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_bench_collects_iters() {
+        let mut count = 0;
+        let stats = run_bench("t", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(stats.n, 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_iters_panics() {
+        run_bench("t", 0, 0, || ());
+    }
+}

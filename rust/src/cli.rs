@@ -1,0 +1,127 @@
+//! Minimal argument parser (clap is unavailable offline): subcommand +
+//! `--flag value` / `--switch` options with typed accessors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: `prog <subcommand> [--key value|--switch] [positional…]`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str_opt(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_opt(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_opt(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig20 --dataset citeseer --iters 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig20"));
+        assert_eq!(a.str_opt("dataset", "cora"), "citeseer");
+        assert_eq!(a.usize_opt("iters", 1).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --rate=100.5");
+        assert_eq!(a.f64_opt("rate", 1.0).unwrap(), 100.5);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse("fig4");
+        assert_eq!(a.str_opt("hw", "series2"), "series2");
+        assert_eq!(a.usize_opt("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("inspect model.hlo.txt");
+        assert_eq!(a.positional, vec!["model.hlo.txt"]);
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("x --iters soon");
+        assert!(a.usize_opt("iters", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+    }
+}

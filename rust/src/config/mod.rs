@@ -1,0 +1,11 @@
+//! Configuration system: a TOML-subset parser (serde/toml are unavailable
+//! offline) plus the typed hardware & run configurations built on it.
+//!
+//! The same parser reads `artifacts/manifest.toml` (written by the python
+//! AOT path) and user-supplied run configs (see `configs/*.toml`).
+
+pub mod parse;
+pub mod schema;
+
+pub use parse::{Document, Value};
+pub use schema::{DeviceKind, HardwareConfig, RunConfig};

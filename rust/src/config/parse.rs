@@ -1,0 +1,336 @@
+//! TOML-subset parser.
+//!
+//! Supported grammar (everything the manifest and run configs need):
+//! - `[section]` / `[section.sub.sub2]` table headers
+//! - `key = value` with string (`"…"` or `'…'`), integer, float, boolean,
+//!   and flat arrays of those
+//! - `#` comments, blank lines
+//!
+//! Not supported (rejected with errors, not silently misparsed): inline
+//! tables, multi-line strings, datetimes, dotted keys, array-of-tables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`tiles = 4` as f64).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted section path → (key → value).
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut current = String::new(); // root section ""
+        doc.sections.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("line {}: {raw:?}", lineno + 1);
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    bail!("{}: array-of-tables unsupported", ctx());
+                }
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("{}: unterminated section", ctx()))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("{}: empty section name", ctx());
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| anyhow!("{}: expected key = value", ctx()))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    bail!("{}: empty key", ctx());
+                }
+                if key.contains('.') {
+                    bail!("{}: dotted keys unsupported", ctx());
+                }
+                let value = parse_value(line[eq + 1..].trim())
+                    .with_context(ctx)?;
+                let section = doc.sections.get_mut(&current).unwrap();
+                if section.insert(key.to_string(), value).is_some() {
+                    bail!("{}: duplicate key {key:?} in [{current}]", ctx());
+                }
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Document> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Document::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// All section names with the given first path component, e.g.
+    /// `sections_under("artifact")` → `["artifact.gcn_stagr_cora", …]`.
+    pub fn sections_under(&self, prefix: &str) -> Vec<&str> {
+        let dotted = format!("{prefix}.");
+        self.sections
+            .keys()
+            .filter(|k| k.starts_with(&dotted))
+            .map(|k| k.as_str())
+            .collect()
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, Value>> {
+        self.sections.get(name)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Typed accessors with good error messages.
+    pub fn str_of(&self, section: &str, key: &str) -> Result<&str> {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("missing string [{section}] {key}"))
+    }
+
+    pub fn int_of(&self, section: &str, key: &str) -> Result<i64> {
+        self.get(section, key)
+            .and_then(Value::as_int)
+            .ok_or_else(|| anyhow!("missing integer [{section}] {key}"))
+    }
+
+    pub fn float_of(&self, section: &str, key: &str) -> Result<f64> {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .ok_or_else(|| anyhow!("missing float [{section}] {key}"))
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string must not start a comment.
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (in_str, c) {
+            (None, '#') => return &line[..i],
+            (None, '"') | (None, '\'') => in_str = Some(c),
+            (Some(q), c) if c == q => in_str = None,
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    // strings
+    for quote in ['"', '\''] {
+        if let Some(rest) = s.strip_prefix(quote) {
+            let inner = rest
+                .strip_suffix(quote)
+                .ok_or_else(|| anyhow!("unterminated string: {s:?}"))?;
+            if inner.contains(quote) {
+                bail!("stray quote inside string: {s:?}");
+            }
+            return Ok(Value::Str(inner.to_string()));
+        }
+    }
+    // arrays
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array: {s:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str: Option<char> = None;
+    for (i, c) in s.char_indices() {
+        match (in_str, c) {
+            (None, ',') => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            (None, '"') | (None, '\'') => in_str = Some(c),
+            (Some(q), c) if c == q => in_str = None,
+            _ => {}
+        }
+    }
+    if in_str.is_some() {
+        bail!("unterminated string in array: {s:?}");
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let doc = Document::parse(
+            r#"
+# generated
+[dataset.cora]
+path = 'cora.gnnt'
+nodes = 2708
+capacity = 3000
+
+[artifact.gcn_stagr_cora]
+inputs = 'norm,x,w1,b1,w2,b2'
+shapes = '2708x2708;2708x1433'
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_of("dataset.cora", "path").unwrap(), "cora.gnnt");
+        assert_eq!(doc.int_of("dataset.cora", "nodes").unwrap(), 2708);
+        assert_eq!(
+            doc.sections_under("artifact"),
+            vec!["artifact.gcn_stagr_cora"]
+        );
+    }
+
+    #[test]
+    fn value_types() {
+        let doc = Document::parse(
+            "a = 1\nb = 2.5\nc = true\nd = \"x\"\ne = [1, 2, 3]\nf = -7\ng = 1_000",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int(), Some(1));
+        assert_eq!(doc.get("", "b").unwrap().as_float(), Some(2.5));
+        assert_eq!(doc.get("", "a").unwrap().as_float(), Some(1.0)); // int→float ok
+        assert_eq!(doc.get("", "c").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("", "d").unwrap().as_str(), Some("x"));
+        assert_eq!(
+            doc.get("", "e").unwrap().as_array().unwrap().len(),
+            3
+        );
+        assert_eq!(doc.get("", "f").unwrap().as_int(), Some(-7));
+        assert_eq!(doc.get("", "g").unwrap().as_int(), Some(1000));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = Document::parse("# top\n\nx = 5 # trailing\ns = \"has # inside\"\n").unwrap();
+        assert_eq!(doc.int_of("", "x").unwrap(), 5);
+        assert_eq!(doc.str_of("", "s").unwrap(), "has # inside");
+    }
+
+    #[test]
+    fn single_quoted_strings() {
+        let doc = Document::parse("p = 'a/b.gnnt'").unwrap();
+        assert_eq!(doc.str_of("", "p").unwrap(), "a/b.gnnt");
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(Document::parse("[unclosed").is_err());
+        assert!(Document::parse("novalue =").is_err());
+        assert!(Document::parse("= 3").is_err());
+        assert!(Document::parse("x = \"unterminated").is_err());
+        assert!(Document::parse("[[aot]]").is_err());
+        assert!(Document::parse("a.b = 1").is_err());
+        assert!(Document::parse("x = 1\nx = 2").is_err());
+        assert!(Document::parse("x = @nope").is_err());
+    }
+
+    #[test]
+    fn array_of_strings_with_commas() {
+        let doc = Document::parse("xs = [\"a,b\", 'c']").unwrap();
+        let arr = doc.get("", "xs").unwrap().as_array().unwrap().to_vec();
+        assert_eq!(arr[0].as_str(), Some("a,b"));
+        assert_eq!(arr[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn missing_keys_reported_with_location() {
+        let doc = Document::parse("[hw]\ntiles = 2").unwrap();
+        let err = doc.str_of("hw", "name").unwrap_err().to_string();
+        assert!(err.contains("[hw] name"), "{err}");
+    }
+}

@@ -1,0 +1,353 @@
+//! Typed hardware & run configurations.
+//!
+//! The NPU presets model the paper's two testbeds at the architectural
+//! level described in §IV (FlexNN-like: DPU tile array + DSP + local SRAM
+//! + DMA) with constants from Intel's public product briefs:
+//!
+//! - **Series 2** (Core Ultra 256V, "NPU4"): 4 NPU tiles, ~48 plat TOPS
+//!   INT8 → 4096 INT8 MACs/tile at ~1.46 GHz.
+//! - **Series 1** (Core Ultra 165H, "NPU3720"): 2 NPU tiles, ~11.5 plat
+//!   TOPS INT8 → 4096 INT8 MACs/tile at ~1.4 GHz.
+//!
+//! DSP throughput and the DMA/SRAM constants are calibrated once against
+//! the paper's own Fig. 4/5 latency-breakdown percentages and then frozen
+//! (DESIGN.md §7). CPU/GPU models cover the Fig. 22/23 comparisons.
+
+use anyhow::{bail, Result};
+
+use super::parse::Document;
+
+/// Which execution engine a device model simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// NPU: DPU tile array + DSP (the simulator's full pipeline).
+    Npu,
+    /// Host CPU cost model (control-flow friendly, lower parallelism).
+    Cpu,
+    /// Integrated GPU cost model (high FLOPs, per-op launch overhead).
+    Gpu,
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceKind::Npu => write!(f, "NPU"),
+            DeviceKind::Cpu => write!(f, "CPU"),
+            DeviceKind::Gpu => write!(f, "GPU"),
+        }
+    }
+}
+
+/// Hardware model parameters (one per simulated device).
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    pub name: String,
+    pub kind: DeviceKind,
+
+    // ---- DPU (NPU) / compute core (CPU, GPU) ----
+    /// NPU tiles (paper: Series 2 has 4, Series 1 has 2). 1 for CPU/GPU.
+    pub tiles: usize,
+    /// INT8 MACs per tile per cycle (FP16 = half, FP32 = quarter).
+    pub macs_per_tile_int8: usize,
+    /// DPU / core clock in GHz.
+    pub clock_ghz: f64,
+    /// Elementwise vector lanes per tile per cycle (f32 lanes).
+    pub vector_lanes: usize,
+
+    // ---- DSP (control-heavy ops) ----
+    /// DSP clock in GHz (paper: "runs at a lower frequency than the DPU").
+    pub dsp_clock_ghz: f64,
+    /// Elements the DSP retires per cycle for *vectorizable* ops.
+    pub dsp_lanes: usize,
+    /// Cycles per element for control-heavy ops (Select/Gather/branching):
+    /// models the serialization the paper attributes to the DSP.
+    pub dsp_control_cycles_per_elem: f64,
+
+    // ---- memory system ----
+    /// Local SRAM (activations + weights) per tile, bytes.
+    pub sram_bytes_per_tile: usize,
+    /// DRAM↔SRAM DMA bandwidth, GB/s.
+    pub dma_gbps: f64,
+    /// Fixed DMA transfer setup latency, µs.
+    pub dma_setup_us: f64,
+    /// Host→device transfer bandwidth for GraphSplit boundary crossings
+    /// GB/s (shared-memory SoC: high, but not free).
+    pub xfer_gbps: f64,
+    /// Fixed per-crossing latency (driver + fence), µs.
+    pub xfer_setup_us: f64,
+
+    // ---- per-op overheads ----
+    /// Fixed scheduling overhead per op (command issue), µs.
+    pub op_overhead_us: f64,
+
+    // ---- energy model (DESIGN.md §7) ----
+    /// Energy per INT8 MAC, picojoules (FP16 2x, FP32 4x).
+    pub pj_per_mac_int8: f64,
+    /// Energy per DSP element-op, picojoules.
+    pub pj_per_dsp_elem: f64,
+    /// Energy per byte moved over DMA (DRAM), picojoules.
+    pub pj_per_dram_byte: f64,
+    /// Energy per byte touched in SRAM, picojoules.
+    pub pj_per_sram_byte: f64,
+    /// Idle/static power, watts (charged over op latency).
+    pub static_watts: f64,
+}
+
+impl HardwareConfig {
+    /// Intel Core Ultra Series 2 NPU ("256V", NPU4-like): 4 tiles.
+    pub fn npu_series2() -> Self {
+        HardwareConfig {
+            name: "npu-series2".into(),
+            kind: DeviceKind::Npu,
+            tiles: 4,
+            macs_per_tile_int8: 4096,
+            clock_ghz: 1.46,
+            vector_lanes: 512,
+            dsp_clock_ghz: 0.97,
+            dsp_lanes: 8,
+            dsp_control_cycles_per_elem: 6.0,
+            sram_bytes_per_tile: 2 * 1024 * 1024,
+            dma_gbps: 34.0, // LPDDR5X-8533 share
+            dma_setup_us: 1.2,
+            xfer_gbps: 40.0,
+            xfer_setup_us: 12.0,
+            op_overhead_us: 2.0,
+            pj_per_mac_int8: 0.25,
+            pj_per_dsp_elem: 2.0,
+            pj_per_dram_byte: 18.0,
+            pj_per_sram_byte: 0.6,
+            static_watts: 0.25,
+        }
+    }
+
+    /// Intel Core Ultra Series 1 NPU ("165H", NPU3720-like): 2 tiles.
+    pub fn npu_series1() -> Self {
+        HardwareConfig {
+            name: "npu-series1".into(),
+            kind: DeviceKind::Npu,
+            tiles: 2,
+            macs_per_tile_int8: 4096,
+            clock_ghz: 1.40,
+            vector_lanes: 512,
+            dsp_clock_ghz: 0.85,
+            dsp_lanes: 8,
+            dsp_control_cycles_per_elem: 6.0,
+            sram_bytes_per_tile: 2 * 1024 * 1024,
+            dma_gbps: 28.0, // LPDDR5-6400 share
+            dma_setup_us: 1.4,
+            xfer_gbps: 32.0,
+            xfer_setup_us: 14.0,
+            op_overhead_us: 2.2,
+            pj_per_mac_int8: 0.30,
+            pj_per_dsp_elem: 2.2,
+            pj_per_dram_byte: 20.0,
+            pj_per_sram_byte: 0.7,
+            static_watts: 0.3,
+        }
+    }
+
+    /// Host CPU model (Core Ultra P-cores, AVX2): strong on control flow,
+    /// weak on dense MACs relative to the NPU; no DSP split.
+    pub fn cpu() -> Self {
+        HardwareConfig {
+            name: "cpu".into(),
+            kind: DeviceKind::Cpu,
+            tiles: 6, // P-cores used by the inference runtime
+            macs_per_tile_int8: 64,
+            clock_ghz: 3.8,
+            vector_lanes: 16,
+            // CPU executes "DSP-class" ops on the same cores: fast.
+            dsp_clock_ghz: 3.8,
+            dsp_lanes: 16,
+            dsp_control_cycles_per_elem: 1.0,
+            sram_bytes_per_tile: 2 * 1024 * 1024, // L2 slice
+            dma_gbps: 60.0,                       // cache-hierarchy fill
+            dma_setup_us: 0.05,
+            xfer_gbps: f64::INFINITY, // no crossing: it *is* the host
+            xfer_setup_us: 0.0,
+            op_overhead_us: 0.3,
+            pj_per_mac_int8: 6.0,
+            pj_per_dsp_elem: 6.0,
+            pj_per_dram_byte: 25.0,
+            pj_per_sram_byte: 1.0,
+            static_watts: 9.0,
+        }
+    }
+
+    /// Integrated Arc GPU model: high dense throughput, per-op launch
+    /// overhead that dominates small control-heavy graphs.
+    pub fn gpu() -> Self {
+        HardwareConfig {
+            name: "gpu".into(),
+            kind: DeviceKind::Gpu,
+            tiles: 8, // Xe cores
+            macs_per_tile_int8: 1024,
+            clock_ghz: 2.2,
+            vector_lanes: 128,
+            dsp_clock_ghz: 2.2,
+            dsp_lanes: 128,
+            dsp_control_cycles_per_elem: 2.5,
+            sram_bytes_per_tile: 192 * 1024,
+            dma_gbps: 50.0,
+            dma_setup_us: 0.8,
+            xfer_gbps: 25.0,
+            xfer_setup_us: 8.0,
+            op_overhead_us: 12.0, // kernel-launch latency
+            pj_per_mac_int8: 1.2,
+            pj_per_dsp_elem: 3.0,
+            pj_per_dram_byte: 20.0,
+            pj_per_sram_byte: 0.8,
+            static_watts: 5.0,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Result<Self> {
+        Ok(match name {
+            "npu-series2" | "series2" | "npu" => Self::npu_series2(),
+            "npu-series1" | "series1" => Self::npu_series1(),
+            "cpu" => Self::cpu(),
+            "gpu" => Self::gpu(),
+            other => bail!("unknown hardware preset {other:?}"),
+        })
+    }
+
+    /// All presets (for the device-comparison figures).
+    pub fn all_presets() -> Vec<Self> {
+        vec![
+            Self::npu_series2(),
+            Self::npu_series1(),
+            Self::cpu(),
+            Self::gpu(),
+        ]
+    }
+
+    /// MACs per cycle for a dtype across all tiles.
+    pub fn macs_per_cycle(&self, dtype_bytes: usize) -> f64 {
+        let per_tile = match dtype_bytes {
+            1 => self.macs_per_tile_int8 as f64,
+            2 => self.macs_per_tile_int8 as f64 / 2.0,
+            _ => self.macs_per_tile_int8 as f64 / 4.0,
+        };
+        per_tile * self.tiles as f64
+    }
+
+    /// Peak dense-MAC throughput in TOPS for a dtype (2 ops per MAC).
+    pub fn tops(&self, dtype_bytes: usize) -> f64 {
+        2.0 * self.macs_per_cycle(dtype_bytes) * self.clock_ghz / 1e3
+    }
+
+    /// Total SRAM bytes.
+    pub fn sram_bytes(&self) -> usize {
+        self.sram_bytes_per_tile * self.tiles
+    }
+
+    /// Apply overrides from a TOML `[hardware]` section (experiments /
+    /// ablations tune constants without recompiling).
+    pub fn with_overrides(mut self, doc: &Document, section: &str) -> Self {
+        if let Some(v) = doc.get(section, "tiles").and_then(|v| v.as_int()) {
+            self.tiles = v as usize;
+        }
+        self.clock_ghz = doc.float_or(section, "clock_ghz", self.clock_ghz);
+        self.dsp_clock_ghz = doc.float_or(section, "dsp_clock_ghz", self.dsp_clock_ghz);
+        self.dma_gbps = doc.float_or(section, "dma_gbps", self.dma_gbps);
+        self.op_overhead_us = doc.float_or(section, "op_overhead_us", self.op_overhead_us);
+        self
+    }
+}
+
+/// A full run configuration (CLI + config file).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Dataset name ("cora" | "citeseer").
+    pub dataset: String,
+    /// Model family ("gcn" | "gat" | "sage_mean" | "sage_max").
+    pub model: String,
+    /// Optimization variant (model-specific; see `ops::build`).
+    pub variant: String,
+    /// Hardware preset for the simulated timing.
+    pub hardware: HardwareConfig,
+    /// Artifacts directory.
+    pub artifacts_dir: std::path::PathBuf,
+    /// NodePad capacity override (0 = dataset default).
+    pub capacity: usize,
+    /// Iterations for latency measurements.
+    pub iters: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "cora".into(),
+            model: "gcn".into(),
+            variant: "stagr".into(),
+            hardware: HardwareConfig::npu_series2(),
+            artifacts_dir: "artifacts".into(),
+            capacity: 0,
+            iters: 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series2_tops_matches_product_brief() {
+        // Intel quotes ~48 platform TOPS INT8 for the Series 2 NPU.
+        let hw = HardwareConfig::npu_series2();
+        let tops = hw.tops(1);
+        assert!((40.0..56.0).contains(&tops), "INT8 TOPS {tops}");
+    }
+
+    #[test]
+    fn series1_tops_matches_product_brief() {
+        // Intel quotes ~11.5 NPU TOPS for Series 1 — ours is 2 tiles.
+        let hw = HardwareConfig::npu_series1();
+        let tops = hw.tops(1);
+        assert!((9.0..26.0).contains(&tops), "INT8 TOPS {tops}");
+    }
+
+    #[test]
+    fn int8_doubles_fp16_throughput() {
+        let hw = HardwareConfig::npu_series2();
+        assert_eq!(hw.macs_per_cycle(1), 2.0 * hw.macs_per_cycle(2));
+        assert_eq!(hw.macs_per_cycle(2), 2.0 * hw.macs_per_cycle(4));
+    }
+
+    #[test]
+    fn series2_has_double_tiles() {
+        assert_eq!(HardwareConfig::npu_series2().tiles, 4);
+        assert_eq!(HardwareConfig::npu_series1().tiles, 2);
+    }
+
+    #[test]
+    fn npu_dense_beats_cpu_and_gpu_beats_cpu() {
+        let npu = HardwareConfig::npu_series2().tops(2);
+        let gpu = HardwareConfig::gpu().tops(2);
+        let cpu = HardwareConfig::cpu().tops(2);
+        assert!(npu > gpu && gpu > cpu, "npu {npu} gpu {gpu} cpu {cpu}");
+    }
+
+    #[test]
+    fn dsp_slower_than_dpu_on_npu() {
+        let hw = HardwareConfig::npu_series2();
+        assert!(hw.dsp_clock_ghz < hw.clock_ghz);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(HardwareConfig::preset("npu-series2").is_ok());
+        assert!(HardwareConfig::preset("series1").is_ok());
+        assert!(HardwareConfig::preset("tpu").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let doc = Document::parse("[hardware]\ntiles = 8\ndma_gbps = 99.0").unwrap();
+        let hw = HardwareConfig::npu_series2().with_overrides(&doc, "hardware");
+        assert_eq!(hw.tiles, 8);
+        assert_eq!(hw.dma_gbps, 99.0);
+    }
+}

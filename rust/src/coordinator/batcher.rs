@@ -1,0 +1,224 @@
+//! Dynamic request batcher for the serving path.
+//!
+//! Node-classification inference over a whole graph answers *every*
+//! pending query in one pass, so the batcher's job is to coalesce query
+//! arrivals between GrAd mask updates: requests accumulate until either
+//! `max_batch` queries are waiting or the oldest has waited `max_wait`.
+//! Structure updates are sequenced *before* the queries that arrive after
+//! them (consistency: a query sees every update that preceded it).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One enqueued inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Node whose prediction the caller wants (None = full-graph).
+    pub node: Option<usize>,
+    pub enqueued: Instant,
+}
+
+/// A flushed batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// Graph version the batch must execute at (≥ all updates seen).
+    pub graph_version: u64,
+}
+
+#[derive(Debug, Default)]
+struct Queue {
+    pending: VecDeque<Request>,
+    graph_version: u64,
+    closed: bool,
+}
+
+/// Thread-safe batching queue.
+pub struct Batcher {
+    q: Mutex<Queue>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        assert!(max_batch > 0);
+        Batcher {
+            q: Mutex::new(Queue::default()),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    /// Enqueue a query.
+    pub fn submit(&self, req: Request) {
+        let mut q = self.q.lock().unwrap();
+        q.pending.push_back(req);
+        self.cv.notify_all();
+    }
+
+    /// Record that a GrAd update has been applied (bumps the version any
+    /// later batch must observe).
+    pub fn note_update(&self, version: u64) {
+        let mut q = self.q.lock().unwrap();
+        q.graph_version = q.graph_version.max(version);
+        self.cv.notify_all();
+    }
+
+    /// Close the queue; `next_batch` drains remaining requests then
+    /// returns None.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.q.lock().unwrap().pending.len()
+    }
+
+    /// Non-blocking: return a batch if the flush condition holds now.
+    pub fn try_batch(&self) -> Option<Batch> {
+        let mut q = self.q.lock().unwrap();
+        if q.pending.is_empty() {
+            return None;
+        }
+        let oldest = q.pending.front().unwrap().enqueued;
+        if q.pending.len() >= self.max_batch
+            || oldest.elapsed() >= self.max_wait
+            || q.closed
+        {
+            let take = q.pending.len().min(self.max_batch);
+            let requests: Vec<Request> = q.pending.drain(..take).collect();
+            return Some(Batch { requests, graph_version: q.graph_version });
+        }
+        None
+    }
+
+    /// Block until a batch is ready (or the queue is closed and empty).
+    pub fn next_batch(&self) -> Option<Batch> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if !q.pending.is_empty() {
+                let oldest = q.pending.front().unwrap().enqueued;
+                let full = q.pending.len() >= self.max_batch;
+                let expired = oldest.elapsed() >= self.max_wait;
+                if full || expired || q.closed {
+                    let take = q.pending.len().min(self.max_batch);
+                    let requests: Vec<Request> =
+                        q.pending.drain(..take).collect();
+                    return Some(Batch { requests, graph_version: q.graph_version });
+                }
+                // wait out the remainder of the batching window
+                let remaining = self.max_wait.saturating_sub(oldest.elapsed());
+                let (qq, _timeout) = self
+                    .cv
+                    .wait_timeout(q, remaining.min(Duration::from_millis(5)))
+                    .unwrap();
+                q = qq;
+            } else if q.closed {
+                return None;
+            } else {
+                q = self.cv.wait(q).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request { id, node: None, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let b = Batcher::new(3, Duration::from_secs(10));
+        for i in 0..3 {
+            b.submit(req(i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.requests[0].id, 0);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let b = Batcher::new(100, Duration::from_millis(20));
+        b.submit(req(1));
+        let start = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(start.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn batch_observes_latest_update_version() {
+        let b = Batcher::new(2, Duration::from_secs(10));
+        b.note_update(7);
+        b.submit(req(1));
+        b.submit(req(2));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.graph_version, 7);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = Batcher::new(10, Duration::from_secs(10));
+        b.submit(req(1));
+        b.close();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_one_consumer() {
+        let b = Arc::new(Batcher::new(16, Duration::from_millis(5)));
+        let producers: Vec<_> = (0..4)
+            .map(|t| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        b.submit(req(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut seen = 0;
+                while seen < 200 {
+                    if let Some(batch) = b.next_batch() {
+                        seen += batch.requests.len();
+                        assert!(batch.requests.len() <= 16);
+                    }
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), 200);
+    }
+
+    #[test]
+    fn max_batch_respected_under_backlog() {
+        let b = Batcher::new(4, Duration::from_millis(1));
+        for i in 0..10 {
+            b.submit(req(i));
+        }
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.requests.len(), 4);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.requests.len(), 4);
+    }
+}

@@ -1,0 +1,146 @@
+//! GraphSplit's offline cost model (paper §IV-A).
+//!
+//! "GraNNite introduces an offline profiling phase during model
+//! calibration. In this phase, we build a cost model that measures
+//! latencies of various operations on both the CPU and NPU [and] the
+//! overhead from data transfer and communication."
+//!
+//! Per op we tabulate: accelerator latency, host latency, and the
+//! transfer cost of every producer→consumer edge that would cross the
+//! boundary. The partitioner ([`super::graphsplit`]) consumes this table.
+
+use crate::config::HardwareConfig;
+use crate::npu::cost::{op_cost, CostOpts};
+use crate::ops::{OpGraph, OpKind};
+
+/// Cost table for one (graph, accelerator, host) triple.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Accelerator latency per op (µs), Input ops = 0.
+    pub accel_us: Vec<f64>,
+    /// Host latency per op (µs).
+    pub host_us: Vec<f64>,
+    /// Bytes of each op's output (for boundary-crossing costs).
+    pub out_bytes: Vec<usize>,
+    /// Link parameters (from the accelerator's config).
+    pub xfer_gbps: f64,
+    pub xfer_setup_us: f64,
+}
+
+impl CostModel {
+    /// Build the table by probing both device models.
+    pub fn profile(g: &OpGraph, accel: &HardwareConfig,
+                   host: &HardwareConfig) -> CostModel {
+        let opts = CostOpts { mask_sparsity_skip: 0.0, dense_dtype_bytes: 2 };
+        let host_opts = CostOpts { mask_sparsity_skip: 0.0, dense_dtype_bytes: 4 };
+        let mut accel_us = Vec::with_capacity(g.len());
+        let mut host_us = Vec::with_capacity(g.len());
+        let mut out_bytes = Vec::with_capacity(g.len());
+        for id in g.topo_order() {
+            let op = &g.ops[id];
+            if op.kind == OpKind::Input {
+                accel_us.push(0.0);
+                host_us.push(0.0);
+            } else {
+                let engine = op.kind.default_engine();
+                accel_us.push(op_cost(g, id, accel, engine, opts).us);
+                host_us.push(op_cost(g, id, host, engine, host_opts).us);
+            }
+            out_bytes.push(op.bytes());
+        }
+        CostModel {
+            accel_us,
+            host_us,
+            out_bytes,
+            xfer_gbps: accel.xfer_gbps,
+            xfer_setup_us: accel.xfer_setup_us,
+        }
+    }
+
+    /// Transfer cost of moving op `id`'s output across the boundary.
+    pub fn xfer_us(&self, id: usize) -> f64 {
+        self.xfer_setup_us + self.out_bytes[id] as f64 / (self.xfer_gbps * 1e3)
+    }
+
+    /// Where the cost model would run op `id` in isolation (no transfer).
+    pub fn cheaper_on_host(&self, id: usize) -> bool {
+        self.host_us[id] < self.accel_us[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::build::{gcn_baseline, GnnDims};
+    use crate::ops::Stage;
+
+    fn model() -> (OpGraph, CostModel) {
+        let g = gcn_baseline(GnnDims::fig4(512, 1500));
+        let cm = CostModel::profile(
+            &g,
+            &HardwareConfig::npu_series2(),
+            &HardwareConfig::cpu(),
+        );
+        (g, cm)
+    }
+
+    #[test]
+    fn control_heavy_preprocessing_cheaper_on_host() {
+        let (g, cm) = model();
+        // the adjacency build / norm divisions should prefer the CPU
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.stage == Stage::Preprocess
+                && matches!(op.kind, OpKind::AdjacencyFromEdges | OpKind::Div)
+            {
+                assert!(
+                    cm.cheaper_on_host(id),
+                    "{} should be cheaper on host ({} vs {})",
+                    op.kind.name(),
+                    cm.host_us[id],
+                    cm.accel_us[id]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matmul_cheaper_on_accel() {
+        let (g, cm) = model();
+        let mut found = false;
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::MatMul && g.ops[op.inputs[0]].shape[1] > 256 {
+                assert!(!cm.cheaper_on_host(id), "big matmul belongs on NPU");
+                found = true;
+            }
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn xfer_cost_scales_with_bytes() {
+        let (g, cm) = model();
+        let small = g
+            .ops
+            .iter()
+            .position(|op| op.shape == vec![512, 1])
+            .unwrap();
+        let big = g
+            .ops
+            .iter()
+            .position(|op| op.shape == vec![512, 512])
+            .unwrap();
+        assert!(cm.xfer_us(big) > cm.xfer_us(small));
+        assert!(cm.xfer_us(small) >= cm.xfer_setup_us);
+    }
+
+    #[test]
+    fn inputs_are_free() {
+        let (g, cm) = model();
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::Input {
+                assert_eq!(cm.accel_us[id], 0.0);
+                assert_eq!(cm.host_us[id], 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! GraphSplit: the CPU/NPU partitioner (paper §IV-A, Fig. 8).
+//!
+//! Control-flow tasks go to the CPU, data-parallel tasks to the NPU —
+//! *except* when a Read-after-Write dependency would force an expensive
+//! transfer back and forth. The partitioner starts from the per-op
+//! preference of the offline [`CostModel`], then runs a local search that
+//! flips placements (or whole same-stage groups) while total estimated
+//! latency — compute plus every boundary-crossing edge — keeps improving.
+//! Local search over a cost model is exactly what an offline calibration
+//! pass can afford; optimal DAG partitioning is NP-hard.
+
+use crate::npu::Placement;
+use crate::ops::{OpGraph, OpKind};
+
+use super::cost_model::CostModel;
+
+/// A partitioning decision with its estimated cost.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub placement: Vec<Placement>,
+    pub est_us: f64,
+    /// Number of producer→consumer edges crossing the boundary.
+    pub crossings: usize,
+}
+
+/// Estimated end-to-end latency of a placement: per-op device latency
+/// plus transfer for every crossing edge. Graph inputs are host-resident
+/// (they come from the application), so an accelerator op consuming a
+/// *large* input pays the upload too — this is why naive "everything on
+/// the NPU" loses, and why moving only half a RAW chain is punished.
+pub fn estimate(g: &OpGraph, cm: &CostModel, placement: &[Placement]) -> (f64, usize) {
+    let mut us = 0.0;
+    let mut crossings = 0;
+    for (id, op) in g.ops.iter().enumerate() {
+        if op.kind == OpKind::Input {
+            continue;
+        }
+        us += match placement[id] {
+            Placement::Accel => cm.accel_us[id],
+            Placement::Host => cm.host_us[id],
+        };
+        for &src in &op.inputs {
+            let src_place = if g.ops[src].kind == OpKind::Input {
+                // inputs live host-side; weights are small enough to be
+                // preloaded (not charged per inference)
+                if cm.out_bytes[src] <= 1 << 20 {
+                    continue;
+                }
+                Placement::Host
+            } else {
+                placement[src]
+            };
+            if src_place != placement[id] {
+                us += cm.xfer_us(src);
+                crossings += 1;
+            }
+        }
+    }
+    (us, crossings)
+}
+
+/// Run GraphSplit on a graph: returns the chosen placement.
+pub fn partition(g: &OpGraph, cm: &CostModel) -> Partition {
+    // seed: every op on its individually-cheaper device
+    let mut placement: Vec<Placement> = (0..g.len())
+        .map(|id| {
+            if g.ops[id].kind == OpKind::Input {
+                Placement::Host
+            } else if cm.cheaper_on_host(id) {
+                Placement::Host
+            } else {
+                Placement::Accel
+            }
+        })
+        .collect();
+
+    let (mut best, _) = estimate(g, cm, &placement);
+    // local search: single-op flips until fixpoint (bounded rounds)
+    for _round in 0..8 {
+        let mut improved = false;
+        for id in 0..g.len() {
+            if g.ops[id].kind == OpKind::Input {
+                continue;
+            }
+            let old = placement[id];
+            placement[id] = match old {
+                Placement::Accel => Placement::Host,
+                Placement::Host => Placement::Accel,
+            };
+            let (cand, _) = estimate(g, cm, &placement);
+            if cand + 1e-12 < best {
+                best = cand;
+                improved = true;
+            } else {
+                placement[id] = old;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    let (est_us, crossings) = estimate(g, cm, &placement);
+    Partition { placement, est_us, crossings }
+}
+
+/// The trivial all-accelerator placement (the out-of-the-box mapping).
+pub fn all_accel(g: &OpGraph) -> Vec<Placement> {
+    g.ops
+        .iter()
+        .map(|op| {
+            if op.kind == OpKind::Input {
+                Placement::Host
+            } else {
+                Placement::Accel
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::ops::build::{gat, gcn_baseline, gcn_stagr, GatVariant, GnnDims};
+    use crate::ops::Stage;
+
+    fn split(g: &OpGraph) -> (CostModel, Partition) {
+        let cm = CostModel::profile(
+            g,
+            &HardwareConfig::npu_series2(),
+            &HardwareConfig::cpu(),
+        );
+        let p = partition(g, &cm);
+        (cm, p)
+    }
+
+    #[test]
+    fn gcn_preprocessing_lands_on_cpu_compute_on_npu() {
+        let g = gcn_baseline(GnnDims::fig4(1354, 5429));
+        let (_, p) = split(&g);
+        // every preprocessing op (BuildAdj/Degrees/Sqrt/Div) → host
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::Input {
+                continue;
+            }
+            if op.stage == Stage::Preprocess {
+                assert_eq!(
+                    p.placement[id],
+                    crate::npu::Placement::Host,
+                    "{} should be host",
+                    op.kind.name()
+                );
+            }
+            // the big combination MatMuls stay on the accelerator
+            if op.kind == OpKind::MatMul && g.ops[op.inputs[0]].shape[1] > 256 {
+                assert_eq!(p.placement[id], crate::npu::Placement::Accel);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_beats_all_accel_baseline() {
+        let g = gcn_baseline(GnnDims::fig4(1354, 5429));
+        let (cm, p) = split(&g);
+        let (base, _) = estimate(&g, &cm, &all_accel(&g));
+        assert!(
+            p.est_us < base,
+            "GraphSplit {} must beat all-accel {}",
+            p.est_us,
+            base
+        );
+    }
+
+    #[test]
+    fn partition_beats_all_host_too() {
+        let g = gcn_baseline(GnnDims::fig4(1354, 5429));
+        let (cm, p) = split(&g);
+        let all_host: Vec<Placement> = vec![Placement::Host; g.len()];
+        let (host, _) = estimate(&g, &cm, &all_host);
+        assert!(p.est_us < host, "GraphSplit {} vs all-host {}", p.est_us, host);
+    }
+
+    #[test]
+    fn raw_dependencies_limit_crossings() {
+        // the partition shouldn't ping-pong: crossings stay small
+        let g = gat(GnnDims::fig4(1354, 5429), GatVariant::Baseline);
+        let (_, p) = split(&g);
+        assert!(
+            p.crossings <= 8,
+            "excessive boundary crossings: {}",
+            p.crossings
+        );
+    }
+
+    #[test]
+    fn stagr_graph_stays_on_npu() {
+        // with preprocessing already removed, nothing should move
+        let g = gcn_stagr(GnnDims::fig4(1354, 5429), "stagr");
+        let (_, p) = split(&g);
+        let host_ops = g
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(id, op)| {
+                op.kind != OpKind::Input && p.placement[*id] == Placement::Host
+            })
+            .count();
+        assert_eq!(host_ops, 0, "StaGr graph is all data-parallel");
+    }
+
+    #[test]
+    fn estimate_charges_crossings() {
+        let g = gcn_baseline(GnnDims::fig4(256, 600));
+        let cm = CostModel::profile(
+            &g,
+            &HardwareConfig::npu_series2(),
+            &HardwareConfig::cpu(),
+        );
+        // place one mid-chain op on the host, its neighbors on accel
+        let mut placement = all_accel(&g);
+        let mid = g
+            .ops
+            .iter()
+            .position(|op| op.kind == OpKind::MatMul)
+            .unwrap();
+        placement[mid] = Placement::Host;
+        let (_, crossings) = estimate(&g, &cm, &placement);
+        // the host op's output feeds an accel consumer → ≥1 crossing
+        // (its own inputs may be host-resident already)
+        assert!(crossings >= 1, "RAW chain must cross the boundary");
+    }
+}

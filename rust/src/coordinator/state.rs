@@ -1,0 +1,359 @@
+//! Model/graph state management: CacheG at the coordinator level.
+//!
+//! A [`ModelState`] owns the dataset, the trained weights, the dynamic
+//! graph (GrAd), and the *cached derived masks* (PreG norm, GrAx1
+//! neg-bias, SAGE sample). Masks are computed once on the CPU — the
+//! GraphSplit placement of preprocessing — and reused across every
+//! artifact execution until a GrAd update invalidates them (the CacheG
+//! reuse story, lifted from SRAM to the coordinator). NodePad variants
+//! are padded to the compiled capacity on demand and cached too.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::{datasets::Dataset, dynamic::DynamicGraph, pad_features, Graph};
+use crate::runtime::ArtifactInfo;
+use crate::tensor::Tensor;
+
+/// Cached, invalidation-tracked masks + weights for one dataset.
+pub struct ModelState {
+    pub dataset: Dataset,
+    pub capacity: usize,
+    /// Mutable graph (starts as the dataset's graph); GrAd updates land
+    /// here and bump `version`.
+    dynamic: DynamicGraph,
+    version: u64,
+    /// Weight tensors per model family ("gcn" → {w1, b1, …}).
+    weights: BTreeMap<String, BTreeMap<String, Tensor>>,
+    /// Mask cache keyed by (binding name, version).
+    cache: BTreeMap<String, (u64, Tensor)>,
+    /// Cache telemetry (CacheG hit accounting).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl ModelState {
+    /// Load dataset + all available model weights from the artifacts dir.
+    pub fn load(dir: &Path, dataset_name: &str, capacity: usize) -> Result<ModelState> {
+        let dataset = Dataset::load_gnnt(dir, dataset_name)?;
+        let capacity = if capacity == 0 {
+            crate::graph::datasets::spec(dataset_name)
+                .map(|s| s.capacity)
+                .unwrap_or(dataset.num_nodes())
+        } else {
+            capacity
+        };
+        let mut weights = BTreeMap::new();
+        for model in ["gcn", "gat", "sage_mean", "sage_max"] {
+            let path = dir.join(format!("weights_{model}_{dataset_name}.gnnt"));
+            if path.exists() {
+                weights.insert(
+                    model.to_string(),
+                    crate::runtime::io::read_gnnt(&path)
+                        .with_context(|| format!("weights for {model}"))?,
+                );
+            }
+        }
+        let dynamic = DynamicGraph::new(&dataset.graph, capacity)?;
+        Ok(ModelState {
+            dataset,
+            capacity,
+            dynamic,
+            version: 0,
+            weights,
+            cache: BTreeMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        })
+    }
+
+    /// Construct directly from an in-memory dataset (tests, examples).
+    pub fn from_dataset(dataset: Dataset, capacity: usize) -> Result<ModelState> {
+        let capacity = capacity.max(dataset.num_nodes());
+        let dynamic = DynamicGraph::new(&dataset.graph, capacity)?;
+        Ok(ModelState {
+            dataset,
+            capacity,
+            dynamic,
+            version: 0,
+            weights: BTreeMap::new(),
+            cache: BTreeMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        })
+    }
+
+    pub fn graph_version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn snapshot_graph(&self) -> Graph {
+        self.dynamic.snapshot()
+    }
+
+    pub fn weights_for(&self, model: &str) -> Result<&BTreeMap<String, Tensor>> {
+        self.weights
+            .get(model)
+            .ok_or_else(|| anyhow!("no weights loaded for model {model:?}"))
+    }
+
+    /// Test accuracy recorded at training time (from the weights file).
+    pub fn trained_accuracy(&self, model: &str) -> Option<f32> {
+        self.weights
+            .get(model)?
+            .get("test_acc")
+            .and_then(|t| t.as_f32().ok())
+            .and_then(|v| v.first().copied())
+    }
+
+    // ------------------------------------------------------------------
+    // GrAd: runtime graph updates → cheap mask invalidation, no recompile
+    // ------------------------------------------------------------------
+    pub fn add_edge(&mut self, u: usize, v: usize) -> Result<bool> {
+        let changed = self.dynamic.add_edge(u, v)?;
+        if changed {
+            self.invalidate();
+        }
+        Ok(changed)
+    }
+
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> Result<bool> {
+        let changed = self.dynamic.remove_edge(u, v)?;
+        if changed {
+            self.invalidate();
+        }
+        Ok(changed)
+    }
+
+    pub fn add_node(&mut self) -> Result<usize> {
+        let id = self.dynamic.add_node()?;
+        self.invalidate();
+        Ok(id)
+    }
+
+    pub fn num_active_nodes(&self) -> usize {
+        self.dynamic.num_nodes()
+    }
+
+    fn invalidate(&mut self) {
+        self.version += 1;
+        // masks are recomputed lazily; weights/features survive
+        self.cache.retain(|k, _| k.starts_with("x") || k == "edges");
+    }
+
+    // ------------------------------------------------------------------
+    // Bindings (CacheG-cached mask/feature construction)
+    // ------------------------------------------------------------------
+
+    /// Produce the tensor for one artifact input name.
+    pub fn binding(&mut self, name: &str, model: &str) -> Result<Tensor> {
+        // weights first (never invalidated)
+        if let Ok(w) = self.weights_for(model) {
+            if let Some(t) = w.get(name) {
+                return Ok(reshape_weight(name, t));
+            }
+        }
+        let key = name.to_string();
+        if let Some((ver, t)) = self.cache.get(&key) {
+            if *ver == self.version {
+                self.cache_hits += 1;
+                return Ok(t.clone());
+            }
+        }
+        self.cache_misses += 1;
+        let n = self.dataset.num_nodes();
+        let graph = self.dynamic.snapshot();
+        let t = match name {
+            "x" => Tensor::from_mat(&self.dataset.features),
+            "x_pad" => Tensor::from_mat(&pad_features(
+                &self.dataset.features,
+                self.capacity,
+            )),
+            "norm" => Tensor::from_mat(&graph.norm_adjacency(n)),
+            "norm_pad" => {
+                Tensor::from_mat(&graph.norm_adjacency(self.capacity))
+            }
+            "adj" => Tensor::from_mat(&graph.adjacency(n)),
+            "neg_bias" => Tensor::from_mat(&graph.neg_bias(n)),
+            "mask" => Tensor::from_mat(&graph.sampled_adjacency(
+                crate::SAGE_MAX_NEIGHBORS,
+                7,
+                n,
+            )),
+            "nbr_idx" => self.nbr_idx_tensor()?,
+            "edges" => {
+                let mut data = Vec::with_capacity(graph.num_edges() * 2);
+                for &(s, d) in graph.edges() {
+                    data.push(s as i32);
+                    data.push(d as i32);
+                }
+                Tensor::I32 { shape: vec![graph.num_edges(), 2], data }
+            }
+            other => bail!("unknown binding {other:?} for model {model:?}"),
+        };
+        self.cache.insert(key, (self.version, t.clone()));
+        Ok(t)
+    }
+
+    /// All bindings for an artifact, in its declared input order.
+    pub fn bindings_for(&mut self, info: &ArtifactInfo) -> Result<Vec<Tensor>> {
+        // older manifests recorded sage artifacts as model "sage"
+        let model = if info.name.starts_with("sage_mean") {
+            "sage_mean".to_string()
+        } else if info.name.starts_with("sage_max") {
+            "sage_max".to_string()
+        } else {
+            info.model.clone()
+        };
+        info.inputs
+            .iter()
+            .map(|name| self.binding(name, &model))
+            .collect()
+    }
+
+    fn nbr_idx_tensor(&self) -> Result<Tensor> {
+        // prefer the exact AOT-time sample (byte-identical gathers)
+        if self.version == 0 {
+            if let Some(idx) = &self.dataset.nbr_idx {
+                return Ok(Tensor::I32 {
+                    shape: vec![self.dataset.num_nodes(), self.dataset.nbr_width],
+                    data: idx.clone(),
+                });
+            }
+        }
+        // regenerate after updates
+        let graph = self.dynamic.snapshot();
+        let rows = graph.sampled_neighbors(crate::SAGE_MAX_NEIGHBORS, 7);
+        let w = crate::SAGE_MAX_NEIGHBORS + 1;
+        let mut data = Vec::with_capacity(rows.len() * w);
+        for row in rows {
+            for j in row {
+                data.push(j as i32);
+            }
+        }
+        Ok(Tensor::I32 { shape: vec![graph.num_nodes(), w], data })
+    }
+
+    /// Densities of the structure masks (drives GraSp simulation).
+    pub fn mask_densities(&self) -> BTreeMap<String, f64> {
+        let n = self.dataset.num_nodes() as f64;
+        let m = self.dynamic.num_edges() as f64;
+        let mut out = BTreeMap::new();
+        let adj_density = (2.0 * m + n) / (n * n);
+        out.insert("norm".into(), adj_density);
+        out.insert("norm_pad".into(),
+                   (2.0 * m + n) / (self.capacity as f64).powi(2));
+        out.insert("adj".into(), adj_density);
+        // neg_bias is dense-negative (non-zero where there is NO edge)
+        out.insert("neg_bias".into(), 1.0 - adj_density);
+        let k = (crate::SAGE_MAX_NEIGHBORS + 1) as f64;
+        out.insert("mask".into(), (k * n).min(2.0 * m + n) / (n * n));
+        out
+    }
+}
+
+/// Artifact inputs are 2-D; weights files store 1-D biases/vectors.
+/// Reshape on the way out so shapes match the manifest.
+fn reshape_weight(name: &str, t: &Tensor) -> Tensor {
+    match t {
+        Tensor::F32 { shape, data } if shape.len() == 1 => {
+            if name.starts_with('b') {
+                // biases bind as (1, n) in the op-graph executor but the
+                // HLO artifacts take them 1-D; keep 1-D (runtime shapes
+                // come from the manifest, which recorded 1-D).
+                Tensor::F32 { shape: shape.clone(), data: data.clone() }
+            } else {
+                t.clone()
+            }
+        }
+        _ => t.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::synthesize;
+
+    fn state() -> ModelState {
+        let ds = synthesize("t", 40, 90, 4, 16, 3);
+        ModelState::from_dataset(ds, 48).unwrap()
+    }
+
+    #[test]
+    fn cacheg_hits_on_repeat_binding() {
+        let mut s = state();
+        let a = s.binding("neg_bias", "gat").unwrap();
+        let b = s.binding("neg_bias", "gat").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+    }
+
+    #[test]
+    fn grad_update_invalidates_masks_not_features() {
+        let mut s = state();
+        let before = s.binding("norm_pad", "gcn").unwrap();
+        let x_before = s.binding("x_pad", "gcn").unwrap();
+        s.add_edge(0, 5).unwrap();
+        let after = s.binding("norm_pad", "gcn").unwrap();
+        let x_after = s.binding("x_pad", "gcn").unwrap();
+        assert_ne!(before, after, "norm must change after edge add");
+        assert_eq!(x_before, x_after, "features survive structure updates");
+    }
+
+    #[test]
+    fn duplicate_edge_does_not_invalidate() {
+        let mut s = state();
+        // edge (0,1) might not exist; add twice and compare versions
+        s.add_edge(0, 1).unwrap();
+        let v1 = s.graph_version();
+        s.add_edge(0, 1).unwrap(); // duplicate → no change
+        assert_eq!(s.graph_version(), v1);
+    }
+
+    #[test]
+    fn padded_bindings_have_capacity_shape() {
+        let mut s = state();
+        let norm = s.binding("norm_pad", "gcn").unwrap();
+        assert_eq!(norm.shape(), &[48, 48]);
+        let x = s.binding("x_pad", "gcn").unwrap();
+        assert_eq!(x.shape(), &[48, 16]);
+    }
+
+    #[test]
+    fn nodepad_capacity_enforced() {
+        let mut s = state();
+        for _ in 0..8 {
+            s.add_node().unwrap();
+        }
+        assert!(s.add_node().is_err(), "capacity 48 = 40 + 8");
+    }
+
+    #[test]
+    fn mask_densities_reflect_graph() {
+        let s = state();
+        let d = s.mask_densities();
+        let norm_d = d["norm"];
+        assert!(norm_d > 0.0 && norm_d < 0.2, "{norm_d}");
+        assert!((d["neg_bias"] - (1.0 - norm_d)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_binding_is_error() {
+        let mut s = state();
+        assert!(s.binding("nonsense", "gcn").is_err());
+    }
+
+    #[test]
+    fn edges_binding_matches_graph() {
+        let mut s = state();
+        let t = s.binding("edges", "gcn").unwrap();
+        assert_eq!(t.shape()[0], s.snapshot_graph().num_edges());
+        s.add_edge(2, 9).unwrap();
+        let t2 = s.binding("edges", "gcn").unwrap();
+        assert_eq!(t2.shape()[0], s.snapshot_graph().num_edges());
+    }
+}

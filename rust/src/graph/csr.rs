@@ -1,0 +1,135 @@
+//! Compressed Sparse Row adjacency — the memory-efficient storage the
+//! CPU side iterates over (degree math, incremental updates, streaming).
+
+use super::Graph;
+
+/// CSR over the *undirected* graph: each edge appears in both rows.
+/// Self loops are not stored (GraphConv adds them arithmetically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// Row offsets, length n+1.
+    pub indptr: Vec<u32>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    pub fn from_graph(g: &Graph) -> Csr {
+        let n = g.num_nodes();
+        let mut counts = vec![0u32; n + 1];
+        for &(s, d) in g.edges() {
+            counts[s as usize + 1] += 1;
+            counts[d as usize + 1] += 1;
+        }
+        let mut indptr = counts;
+        for i in 1..=n {
+            indptr[i] += indptr[i - 1];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; indptr[n] as usize];
+        for &(s, d) in g.edges() {
+            indices[cursor[s as usize] as usize] = d;
+            cursor[s as usize] += 1;
+            indices[cursor[d as usize] as usize] = s;
+            cursor[d as usize] += 1;
+        }
+        // sort each row for deterministic iteration + binary search
+        for i in 0..n {
+            let (a, b) = (indptr[i] as usize, indptr[i + 1] as usize);
+            indices[a..b].sort_unstable();
+        }
+        Csr { indptr, indices }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Directed entry count (2 × undirected edges).
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i] as usize..self.indptr[i + 1] as usize]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        (self.indptr[i + 1] - self.indptr[i]) as usize
+    }
+
+    pub fn has_edge(&self, s: usize, d: usize) -> bool {
+        self.neighbors(s).binary_search(&(d as u32)).is_ok()
+    }
+
+    /// Bytes of the CSR arrays — the GraphSplit cost model's measure of
+    /// what crossing the CPU→NPU boundary with raw structure would cost.
+    pub fn bytes(&self) -> usize {
+        (self.indptr.len() + self.indices.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    fn star() -> Graph {
+        Graph::new(5, &[(0, 1), (0, 2), (0, 3), (0, 4)])
+    }
+
+    #[test]
+    fn star_structure() {
+        let csr = Csr::from_graph(&star());
+        assert_eq!(csr.num_nodes(), 5);
+        assert_eq!(csr.nnz(), 8);
+        assert_eq!(csr.neighbors(0), &[1, 2, 3, 4]);
+        assert_eq!(csr.neighbors(3), &[0]);
+        assert_eq!(csr.degree(0), 4);
+        assert_eq!(csr.degree(2), 1);
+    }
+
+    #[test]
+    fn has_edge_both_directions() {
+        let csr = Csr::from_graph(&star());
+        assert!(csr.has_edge(0, 3));
+        assert!(csr.has_edge(3, 0));
+        assert!(!csr.has_edge(1, 2));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let csr = Csr::from_graph(&Graph::new(3, &[]));
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.neighbors(1), &[] as &[u32]);
+    }
+
+    #[test]
+    fn prop_csr_consistent_with_edge_list() {
+        forall("csr consistency", 50, |g| {
+            let n = g.dim(40);
+            let m = g.usize(0, 3 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.rng().usize(n) as u32, g.rng().usize(n) as u32))
+                .collect();
+            let graph = Graph::new(n, &edges);
+            let csr = Csr::from_graph(&graph);
+            // nnz == 2m
+            assert_eq!(csr.nnz(), 2 * graph.num_edges());
+            // symmetric
+            for &(s, d) in graph.edges() {
+                assert!(csr.has_edge(s as usize, d as usize));
+                assert!(csr.has_edge(d as usize, s as usize));
+            }
+            // degrees sum to nnz
+            let total: usize = (0..n).map(|i| csr.degree(i)).sum();
+            assert_eq!(total, csr.nnz());
+            // degrees_with_self agrees
+            let deg = graph.degrees_with_self();
+            for i in 0..n {
+                assert_eq!(deg[i], csr.degree(i) as f32 + 1.0);
+            }
+        });
+    }
+}

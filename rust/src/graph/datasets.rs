@@ -1,0 +1,361 @@
+//! Dataset twins and synthetic workload graphs.
+//!
+//! The *canonical* Cora/Citeseer twins (with trained weights) are built by
+//! the python AOT path and shipped in `artifacts/*.gnnt` — use
+//! [`Dataset::load_gnnt`] for anything that touches the PJRT artifacts.
+//! This module additionally provides a native generator with the same
+//! planted-partition structure for simulator benches and examples that
+//! need graphs at arbitrary scales without artifacts (the generators do
+//! not need to be bit-identical with python; the .gnnt file is the source
+//! of truth where it matters).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Graph;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Published statistics mirrored by the twins (paper §V).
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub nodes: usize,
+    pub edges: usize,
+    pub classes: usize,
+    pub features: usize,
+    /// NodePad capacity the artifacts were compiled at.
+    pub capacity: usize,
+}
+
+pub const CORA: DatasetSpec = DatasetSpec {
+    name: "cora",
+    nodes: 2708,
+    edges: 5429,
+    classes: 7,
+    features: 1433,
+    capacity: 3000,
+};
+
+pub const CITESEER: DatasetSpec = DatasetSpec {
+    name: "citeseer",
+    nodes: 3327,
+    edges: 4732,
+    classes: 6,
+    features: 3703,
+    capacity: 3500,
+};
+
+pub fn spec(name: &str) -> Result<DatasetSpec> {
+    Ok(match name {
+        "cora" => CORA,
+        "citeseer" => CITESEER,
+        other => bail!("unknown dataset {other:?} (cora|citeseer)"),
+    })
+}
+
+/// An attributed node-classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: Graph,
+    pub features: Mat,
+    pub labels: Vec<i32>,
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+    /// The exact neighbor sample exported at AOT time (rows of k+1 gather
+    /// indices, sentinel = n), if loaded from a .gnnt file.
+    pub nbr_idx: Option<Vec<i32>>,
+    /// Columns in `nbr_idx` (k+1).
+    pub nbr_width: usize,
+}
+
+impl Dataset {
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.features.cols
+    }
+
+    pub fn num_classes(&self) -> usize {
+        (self.labels.iter().copied().max().unwrap_or(-1) + 1) as usize
+    }
+
+    /// Load the canonical twin exported by `make artifacts`.
+    pub fn load_gnnt(dir: &Path, name: &str) -> Result<Dataset> {
+        let path = dir.join(format!("{name}.gnnt"));
+        let tensors = crate::runtime::io::read_gnnt(&path)
+            .with_context(|| format!("loading dataset {}", path.display()))?;
+        let features = tensors
+            .get("features")
+            .context("missing 'features'")?
+            .to_mat()?;
+        let labels = tensors.get("labels").context("missing 'labels'")?;
+        let labels = labels.as_i32()?.to_vec();
+        let edges_t = tensors.get("edges").context("missing 'edges'")?;
+        let flat = edges_t.as_i32()?;
+        let edges: Vec<(u32, u32)> = flat
+            .chunks_exact(2)
+            .map(|c| (c[0] as u32, c[1] as u32))
+            .collect();
+        let graph = Graph::new(features.rows, &edges);
+        let mask = |key: &str| -> Result<Vec<bool>> {
+            Ok(tensors
+                .get(key)
+                .with_context(|| format!("missing {key:?}"))?
+                .as_u8()?
+                .iter()
+                .map(|&b| b != 0)
+                .collect())
+        };
+        let (nbr_idx, nbr_width) = match tensors.get("nbr_idx") {
+            Some(t) => {
+                let w = t.shape().get(1).copied().unwrap_or(0);
+                (Some(t.as_i32()?.to_vec()), w)
+            }
+            None => (None, 0),
+        };
+        Ok(Dataset {
+            name: name.to_string(),
+            graph,
+            labels,
+            train_mask: mask("train_mask")?,
+            val_mask: mask("val_mask")?,
+            test_mask: mask("test_mask")?,
+            features,
+            nbr_idx,
+            nbr_width,
+        })
+    }
+
+    /// Accuracy of row-wise-argmax predictions on a node mask.
+    pub fn accuracy(&self, logits: &Mat, mask: &[bool]) -> f64 {
+        let preds = logits.argmax_rows();
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for (i, &m) in mask.iter().enumerate() {
+            if m && i < preds.len() {
+                total += 1;
+                if preds[i] as i32 == self.labels[i] {
+                    hit += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            hit as f64 / total as f64
+        }
+    }
+}
+
+/// Native planted-partition generator (simulator benches, examples).
+///
+/// Matches the twin construction: homophilous edge placement, class-
+/// signature sparse features, balanced train split.
+pub fn synthesize(
+    name: &str,
+    nodes: usize,
+    edges: usize,
+    classes: usize,
+    features: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(classes >= 2 && nodes >= classes);
+    let mut rng = Rng::new(seed);
+    const HOMOPHILY: f64 = 0.72;
+    const DENSITY: f64 = 0.0127;
+
+    // labels: roughly balanced with noise
+    let mut labels: Vec<i32> = (0..nodes).map(|i| (i % classes) as i32).collect();
+    rng.shuffle(&mut labels);
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); classes];
+    for (i, &c) in labels.iter().enumerate() {
+        by_class[c as usize].push(i as u32);
+    }
+
+    // planted-partition edges
+    let mut seen = std::collections::BTreeSet::new();
+    let mut edge_list = Vec::with_capacity(edges);
+    let max_possible = nodes * (nodes - 1) / 2;
+    let target = edges.min(max_possible);
+    while edge_list.len() < target {
+        let (u, v) = if rng.chance(HOMOPHILY) {
+            let c = rng.usize(classes);
+            let members = &by_class[c];
+            if members.len() < 2 {
+                continue;
+            }
+            let pick = rng.sample_indices(members.len(), 2);
+            (members[pick[0]], members[pick[1]])
+        } else {
+            (rng.usize(nodes) as u32, rng.usize(nodes) as u32)
+        };
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if seen.insert(key) {
+            edge_list.push(key);
+        }
+    }
+    let graph = Graph::new(nodes, &edge_list);
+
+    // class-signature features, row-normalized
+    let sig = (features as f64 * 0.08).max(4.0) as usize;
+    let mut feats = Mat::zeros(nodes, features);
+    for i in 0..nodes {
+        let c = labels[i] as usize;
+        let row = feats.row_mut(i);
+        let (sig_lo, sig_hi) = ((c * sig) % features, ((c + 1) * sig - 1) % features + 1);
+        for (j, x) in row.iter_mut().enumerate() {
+            let in_sig = if sig_lo < sig_hi {
+                j >= sig_lo && j < sig_hi
+            } else {
+                j >= sig_lo || j < sig_hi
+            };
+            let p = if in_sig { (DENSITY * 3.0).min(0.9) } else { DENSITY * 0.55 };
+            if rng.chance(p) {
+                *x = 1.0;
+            }
+        }
+        let sum: f32 = row.iter().sum();
+        if sum > 0.0 {
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        }
+    }
+
+    // balanced train split, then val/test blocks
+    let train_per_class = (20).min(nodes / classes / 2).max(1);
+    let mut train_mask = vec![false; nodes];
+    for members in &by_class {
+        let mut m = members.clone();
+        rng.shuffle(&mut m);
+        for &i in m.iter().take(train_per_class) {
+            train_mask[i as usize] = true;
+        }
+    }
+    let mut rest: Vec<usize> = (0..nodes).filter(|&i| !train_mask[i]).collect();
+    rng.shuffle(&mut rest);
+    let n_eval = rest.len() / 3;
+    let mut val_mask = vec![false; nodes];
+    let mut test_mask = vec![false; nodes];
+    for &i in rest.iter().take(n_eval) {
+        val_mask[i] = true;
+    }
+    for &i in rest.iter().skip(n_eval).take(n_eval) {
+        test_mask[i] = true;
+    }
+
+    Dataset {
+        name: name.to_string(),
+        graph,
+        features: feats,
+        labels,
+        train_mask,
+        val_mask,
+        test_mask,
+        nbr_idx: None,
+        nbr_width: 0,
+    }
+}
+
+/// The Fig. 4/5 microbenchmark graph: "1354 nodes and 5429 edges".
+pub fn fig4_graph(seed: u64) -> Dataset {
+    synthesize("fig4", 1354, 5429, 7, 1433, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_paper() {
+        assert_eq!(CORA.nodes, 2708);
+        assert_eq!(CORA.edges, 5429);
+        assert_eq!(CORA.capacity, 3000); // 2708 + 292 per paper §V
+        assert_eq!(CITESEER.features, 3703);
+        assert!(spec("pubmed").is_err());
+    }
+
+    #[test]
+    fn synthesize_matches_requested_stats() {
+        let ds = synthesize("t", 300, 600, 5, 64, 1);
+        assert_eq!(ds.num_nodes(), 300);
+        assert_eq!(ds.graph.num_edges(), 600);
+        assert_eq!(ds.num_classes(), 5);
+        assert_eq!(ds.num_features(), 64);
+    }
+
+    #[test]
+    fn synthesize_deterministic() {
+        let a = synthesize("t", 100, 200, 4, 32, 7);
+        let b = synthesize("t", 100, 200, 4, 32, 7);
+        assert_eq!(a.graph.edges(), b.graph.edges());
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn synthesize_homophilous() {
+        let ds = synthesize("t", 400, 1200, 4, 16, 3);
+        let same: usize = ds
+            .graph
+            .edges()
+            .iter()
+            .filter(|&&(s, d)| ds.labels[s as usize] == ds.labels[d as usize])
+            .count();
+        let frac = same as f64 / ds.graph.num_edges() as f64;
+        assert!(frac > 0.6, "homophily {frac}");
+    }
+
+    #[test]
+    fn features_sparse_and_normalized() {
+        let ds = synthesize("t", 200, 300, 4, 256, 5);
+        let density = 1.0 - ds.features.sparsity();
+        assert!(density < 0.08, "density {density}");
+        // non-empty rows sum to 1
+        for i in 0..20 {
+            let s: f32 = ds.features.row(i).iter().sum();
+            assert!(s == 0.0 || (s - 1.0).abs() < 1e-4, "row {i} sums {s}");
+        }
+    }
+
+    #[test]
+    fn masks_disjoint() {
+        let ds = synthesize("t", 150, 250, 3, 32, 9);
+        for i in 0..150 {
+            let c = [ds.train_mask[i], ds.val_mask[i], ds.test_mask[i]]
+                .iter()
+                .filter(|&&b| b)
+                .count();
+            assert!(c <= 1, "node {i} in {c} splits");
+        }
+        assert!(ds.train_mask.iter().filter(|&&b| b).count() > 0);
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        let ds = synthesize("t", 10, 12, 2, 8, 11);
+        // logits that perfectly one-hot the labels
+        let mut logits = Mat::zeros(10, 2);
+        for i in 0..10 {
+            logits[(i, ds.labels[i] as usize)] = 1.0;
+        }
+        let all = vec![true; 10];
+        assert_eq!(ds.accuracy(&logits, &all), 1.0);
+    }
+
+    #[test]
+    fn fig4_graph_scale() {
+        let ds = fig4_graph(0);
+        assert_eq!(ds.num_nodes(), 1354);
+        assert_eq!(ds.graph.num_edges(), 5429);
+    }
+}

@@ -1,0 +1,289 @@
+//! GrAd + NodePad: dynamic-graph support (paper Figs. 10–11).
+//!
+//! A [`DynamicGraph`] owns a mutable edge set with a fixed NodePad
+//! capacity and *incrementally* maintains the dense masks that the
+//! compiled artifacts take as runtime inputs — the whole point of GrAd is
+//! that an edge update is a cheap mask edit, not a model recompile.
+//!
+//! Norm-matrix maintenance is the subtle part: adding an edge (u,v)
+//! changes deg(u) and deg(v), which rescales *every* entry in row/col u
+//! and v. The incremental update therefore touches O((deg u + deg v) · 1)
+//! entries via the CSR neighbor lists instead of rebuilding n².
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use super::Graph;
+use crate::tensor::Mat;
+
+/// Mutable graph with incrementally-maintained GrAd masks.
+#[derive(Debug, Clone)]
+pub struct DynamicGraph {
+    capacity: usize,
+    num_nodes: usize,
+    edges: BTreeSet<(u32, u32)>,
+    /// Per-node neighbor sets (undirected, no self).
+    nbrs: Vec<BTreeSet<u32>>,
+    /// Dense norm mask (capacity × capacity), maintained incrementally.
+    norm: Mat,
+    /// Dense additive attention mask, maintained incrementally.
+    neg_bias: Mat,
+    /// Update statistics (for the serving metrics).
+    pub updates: usize,
+}
+
+impl DynamicGraph {
+    /// Start from an initial graph. `capacity` is the NodePad size every
+    /// mask is laid out at (the compiled model's static input shape).
+    pub fn new(initial: &Graph, capacity: usize) -> Result<DynamicGraph> {
+        if capacity < initial.num_nodes() {
+            bail!(
+                "NodePad capacity {} < initial nodes {}",
+                capacity,
+                initial.num_nodes()
+            );
+        }
+        let mut nbrs = vec![BTreeSet::new(); capacity];
+        for &(s, d) in initial.edges() {
+            nbrs[s as usize].insert(d);
+            nbrs[d as usize].insert(s);
+        }
+        Ok(DynamicGraph {
+            capacity,
+            num_nodes: initial.num_nodes(),
+            edges: initial.edges().iter().copied().collect(),
+            nbrs,
+            norm: initial.norm_adjacency(capacity),
+            neg_bias: initial.neg_bias(capacity),
+            updates: 0,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        let key = (u.min(v) as u32, u.max(v) as u32);
+        self.edges.contains(&key)
+    }
+
+    /// The GrAd norm mask, ready to feed the `*_grad` artifacts.
+    pub fn norm(&self) -> &Mat {
+        &self.norm
+    }
+
+    /// The GrAx1 additive mask for GAT artifacts.
+    pub fn neg_bias(&self) -> &Mat {
+        &self.neg_bias
+    }
+
+    fn deg_with_self(&self, u: usize) -> f32 {
+        self.nbrs[u].len() as f32 + 1.0
+    }
+
+    /// Recompute row/col `u` of the norm mask (and its diagonal) — called
+    /// for the two endpoints of an update and only them.
+    fn refresh_norm_node(&mut self, u: usize) {
+        let du = self.deg_with_self(u);
+        let inv_u = 1.0 / du.sqrt();
+        // clear the row & column
+        for j in 0..self.capacity {
+            self.norm[(u, j)] = 0.0;
+            self.norm[(j, u)] = 0.0;
+        }
+        let neighbors: Vec<u32> = self.nbrs[u].iter().copied().collect();
+        for &v in &neighbors {
+            let v = v as usize;
+            let inv_v = 1.0 / self.deg_with_self(v).sqrt();
+            let val = inv_u * inv_v;
+            self.norm[(u, v)] = val;
+            self.norm[(v, u)] = val;
+        }
+        self.norm[(u, u)] = inv_u * inv_u;
+    }
+
+    /// Add a node (must stay within capacity). New nodes start isolated;
+    /// NodePad guarantees the compiled shape already accommodates them.
+    pub fn add_node(&mut self) -> Result<usize> {
+        if self.num_nodes == self.capacity {
+            bail!(
+                "NodePad capacity {} exhausted — recompile with a larger \
+                 capacity (the failure mode NodePad exists to avoid)",
+                self.capacity
+            );
+        }
+        let id = self.num_nodes;
+        self.num_nodes += 1;
+        // isolated node: self-loop only
+        self.refresh_norm_node(id);
+        self.neg_bias[(id, id)] = 0.0;
+        self.updates += 1;
+        Ok(id)
+    }
+
+    /// Add an undirected edge. Returns false if it already existed.
+    pub fn add_edge(&mut self, u: usize, v: usize) -> Result<bool> {
+        self.check_nodes(u, v)?;
+        let key = (u.min(v) as u32, u.max(v) as u32);
+        if !self.edges.insert(key) {
+            return Ok(false);
+        }
+        self.nbrs[u].insert(v as u32);
+        self.nbrs[v].insert(u as u32);
+        self.refresh_norm_node(u);
+        self.refresh_norm_node(v);
+        self.neg_bias[(u, v)] = 0.0;
+        self.neg_bias[(v, u)] = 0.0;
+        self.updates += 1;
+        Ok(true)
+    }
+
+    /// Remove an undirected edge. Returns false if absent.
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> Result<bool> {
+        self.check_nodes(u, v)?;
+        let key = (u.min(v) as u32, u.max(v) as u32);
+        if !self.edges.remove(&key) {
+            return Ok(false);
+        }
+        self.nbrs[u].remove(&(v as u32));
+        self.nbrs[v].remove(&(u as u32));
+        self.refresh_norm_node(u);
+        self.refresh_norm_node(v);
+        self.neg_bias[(u, v)] = crate::ops::NEG_MASK;
+        self.neg_bias[(v, u)] = crate::ops::NEG_MASK;
+        self.updates += 1;
+        Ok(true)
+    }
+
+    fn check_nodes(&self, u: usize, v: usize) -> Result<()> {
+        if u >= self.num_nodes || v >= self.num_nodes {
+            bail!(
+                "node out of range: ({u},{v}) with {} active nodes",
+                self.num_nodes
+            );
+        }
+        if u == v {
+            bail!("self loops are implicit in GraphConv; refusing ({u},{u})");
+        }
+        Ok(())
+    }
+
+    /// Snapshot the current structure as an immutable [`Graph`].
+    pub fn snapshot(&self) -> Graph {
+        let edges: Vec<(u32, u32)> = self.edges.iter().copied().collect();
+        Graph::new(self.num_nodes, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    fn base() -> DynamicGraph {
+        let g = Graph::new(4, &[(0, 1), (1, 2)]);
+        DynamicGraph::new(&g, 6).unwrap()
+    }
+
+    #[test]
+    fn masks_match_full_rebuild_after_updates() {
+        let mut dg = base();
+        dg.add_edge(2, 3).unwrap();
+        dg.add_edge(0, 3).unwrap();
+        dg.remove_edge(1, 2).unwrap();
+        let want_norm = dg.snapshot().norm_adjacency(6);
+        assert!(
+            dg.norm().max_abs_diff(&want_norm) < 1e-6,
+            "incremental norm drifted"
+        );
+        let want_bias = dg.snapshot().neg_bias(6);
+        assert!(dg.neg_bias().max_abs_diff(&want_bias) < 1e-6);
+    }
+
+    #[test]
+    fn add_edge_idempotent() {
+        let mut dg = base();
+        assert!(dg.add_edge(0, 2).unwrap());
+        assert!(!dg.add_edge(0, 2).unwrap());
+        assert!(!dg.add_edge(2, 0).unwrap()); // either direction
+        assert_eq!(dg.num_edges(), 3);
+    }
+
+    #[test]
+    fn remove_missing_edge_is_noop() {
+        let mut dg = base();
+        assert!(!dg.remove_edge(0, 3).unwrap());
+        assert_eq!(dg.num_edges(), 2);
+    }
+
+    #[test]
+    fn add_node_until_capacity() {
+        let mut dg = base();
+        assert_eq!(dg.add_node().unwrap(), 4);
+        assert_eq!(dg.add_node().unwrap(), 5);
+        let err = dg.add_node().unwrap_err().to_string();
+        assert!(err.contains("capacity"), "{err}");
+    }
+
+    #[test]
+    fn new_node_connects_correctly() {
+        let mut dg = base();
+        let id = dg.add_node().unwrap();
+        dg.add_edge(id, 0).unwrap();
+        let want = dg.snapshot().norm_adjacency(6);
+        assert!(dg.norm().max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn rejects_self_loop_and_out_of_range() {
+        let mut dg = base();
+        assert!(dg.add_edge(1, 1).is_err());
+        assert!(dg.add_edge(0, 4).is_err()); // node 4 not active yet
+    }
+
+    #[test]
+    fn capacity_below_initial_rejected() {
+        let g = Graph::new(4, &[(0, 1)]);
+        assert!(DynamicGraph::new(&g, 3).is_err());
+    }
+
+    #[test]
+    fn prop_incremental_equals_rebuild() {
+        forall("grad incremental == rebuild", 25, |gen| {
+            let n = gen.usize(2, 12);
+            let cap = n + gen.usize(0, 4);
+            let graph = Graph::new(n, &[]);
+            let mut dg = DynamicGraph::new(&graph, cap).unwrap();
+            for _ in 0..gen.usize(1, 30) {
+                let u = gen.rng().usize(n);
+                let v = gen.rng().usize(n);
+                if u == v {
+                    continue;
+                }
+                if gen.chance(0.7) {
+                    dg.add_edge(u, v).unwrap();
+                } else {
+                    dg.remove_edge(u, v).unwrap();
+                }
+            }
+            let want = dg.snapshot().norm_adjacency(cap);
+            assert!(
+                dg.norm().max_abs_diff(&want) < 1e-5,
+                "drift {}",
+                dg.norm().max_abs_diff(&want)
+            );
+            let want_nb = dg.snapshot().neg_bias(cap);
+            assert!(dg.neg_bias().max_abs_diff(&want_nb) < 1e-5);
+        });
+    }
+}

@@ -1,0 +1,334 @@
+//! Graph substrate: storage, the paper's CPU-side preprocessing
+//! techniques, datasets, and dynamic-graph streams.
+//!
+//! Everything here is "the CPU half of GraphSplit": the control-heavy,
+//! irregular work (edge bookkeeping, degree math, normalization, padding,
+//! mask regeneration) that the paper deliberately keeps off the NPU.
+
+pub mod csr;
+pub mod datasets;
+pub mod dynamic;
+pub mod sparsity;
+pub mod stream;
+pub mod symg;
+
+use crate::tensor::Mat;
+
+pub use csr::Csr;
+pub use datasets::Dataset;
+pub use dynamic::DynamicGraph;
+pub use symg::SymG;
+
+/// An undirected graph: canonical edge list (src < dst, deduped) over `n`
+/// nodes. The shared core of datasets, dynamic graphs and streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    num_nodes: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    /// Build from an arbitrary edge list: self loops dropped, duplicates
+    /// merged, endpoints canonicalized to (min, max).
+    pub fn new(num_nodes: usize, raw_edges: &[(u32, u32)]) -> Graph {
+        let mut edges: Vec<(u32, u32)> = raw_edges
+            .iter()
+            .filter(|(s, d)| s != d)
+            .map(|&(s, d)| (s.min(d), s.max(d)))
+            .collect();
+        for &(s, d) in &edges {
+            assert!(
+                (d as usize) < num_nodes,
+                "edge ({s},{d}) out of range for n={num_nodes}"
+            );
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        Graph { num_nodes, edges }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Node degrees including the self loop (as GraphConv counts them).
+    pub fn degrees_with_self(&self) -> Vec<f32> {
+        let mut deg = vec![1.0f32; self.num_nodes];
+        for &(s, d) in &self.edges {
+            deg[s as usize] += 1.0;
+            deg[d as usize] += 1.0;
+        }
+        deg
+    }
+
+    /// Adjacency lists (undirected, no self entry), sorted.
+    pub fn neighbor_lists(&self) -> Vec<Vec<u32>> {
+        let mut nbrs = vec![Vec::new(); self.num_nodes];
+        for &(s, d) in &self.edges {
+            nbrs[s as usize].push(d);
+            nbrs[d as usize].push(s);
+        }
+        for l in &mut nbrs {
+            l.sort_unstable();
+        }
+        nbrs
+    }
+
+    // ------------------------------------------------------------------
+    // Dense derived matrices — the precomputed masks of StaGr/PreG/GrAx1.
+    // All accept a NodePad capacity: rows/cols ≥ num_nodes are zero
+    // (padded nodes get no self loop — they must stay disconnected).
+    // ------------------------------------------------------------------
+
+    /// Dense symmetric adjacency with self loops, A + I (paper Fig. 9).
+    pub fn adjacency(&self, capacity: usize) -> Mat {
+        let n = self.num_nodes;
+        assert!(capacity >= n, "NodePad capacity {capacity} < n {n}");
+        let mut a = Mat::zeros(capacity, capacity);
+        for &(s, d) in &self.edges {
+            a[(s as usize, d as usize)] = 1.0;
+            a[(d as usize, s as usize)] = 1.0;
+        }
+        for i in 0..n {
+            a[(i, i)] = 1.0;
+        }
+        a
+    }
+
+    /// PreG: the precomputed GraphConv normalization matrix
+    /// `D^{-1/2} (A + I) D^{-1/2}` (paper Fig. 14). Built directly from
+    /// the edge list — O(n + m) work instead of an n² matrix pipeline —
+    /// and identical (same f32 operations) to the python twin's
+    /// `norm_adjacency`, so PJRT artifacts see byte-equivalent masks.
+    pub fn norm_adjacency(&self, capacity: usize) -> Mat {
+        let n = self.num_nodes;
+        assert!(capacity >= n, "NodePad capacity {capacity} < n {n}");
+        let deg = self.degrees_with_self();
+        let inv_sqrt: Vec<f32> =
+            deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
+        let mut out = Mat::zeros(capacity, capacity);
+        for &(s, d) in &self.edges {
+            let (s, d) = (s as usize, d as usize);
+            let v = inv_sqrt[s] * inv_sqrt[d];
+            out[(s, d)] = v;
+            out[(d, s)] = v;
+        }
+        for i in 0..n {
+            out[(i, i)] = inv_sqrt[i] * inv_sqrt[i];
+        }
+        out
+    }
+
+    /// GrAx1: the additive attention mask `(1 - (A+I)) * (-1e9)`
+    /// (paper Fig. 16). Padded columns keep the large negative bias so
+    /// phantom nodes never attract attention mass; padded *rows* are
+    /// zero at their diagonal (softmax stays finite) and sliced away.
+    pub fn neg_bias(&self, capacity: usize) -> Mat {
+        let n = self.num_nodes;
+        let adj = self.adjacency(capacity);
+        let mut out = Mat::filled(capacity, capacity, crate::ops::NEG_MASK);
+        for i in 0..capacity {
+            for j in 0..capacity {
+                if adj[(i, j)] > 0.0 {
+                    out[(i, j)] = 0.0;
+                }
+            }
+        }
+        for i in n..capacity {
+            out[(i, i)] = 0.0;
+        }
+        out
+    }
+
+    /// GraphSAGE sampled neighborhood as a gather-index matrix:
+    /// (n, k+1) with column 0 = self and sentinel `n` for unused slots.
+    /// Deterministic per seed (mirrors `datasets.sampled_neighbors`).
+    pub fn sampled_neighbors(&self, max_neighbors: usize, seed: u64) -> Vec<Vec<u32>> {
+        let n = self.num_nodes;
+        let mut rng = crate::util::Rng::new(seed);
+        let nbrs = self.neighbor_lists();
+        let mut idx = vec![vec![n as u32; max_neighbors + 1]; n];
+        for (i, row) in idx.iter_mut().enumerate() {
+            row[0] = i as u32;
+            let candidates = &nbrs[i];
+            if candidates.len() <= max_neighbors {
+                row[1..1 + candidates.len()].copy_from_slice(candidates);
+            } else {
+                let picks = rng.sample_indices(candidates.len(), max_neighbors);
+                for (slot, &p) in picks.iter().enumerate() {
+                    row[1 + slot] = candidates[p];
+                }
+            }
+        }
+        idx
+    }
+
+    /// Dense 0/1 mask of the sampled neighborhood (for the dense GrAx3
+    /// mapping and the simulator's operand sizing).
+    pub fn sampled_adjacency(&self, max_neighbors: usize, seed: u64,
+                             capacity: usize) -> Mat {
+        let n = self.num_nodes;
+        assert!(capacity >= n);
+        let idx = self.sampled_neighbors(max_neighbors, seed);
+        let mut mask = Mat::zeros(capacity, capacity);
+        for (i, row) in idx.iter().enumerate() {
+            for &j in row {
+                if (j as usize) < n {
+                    mask[(i, j as usize)] = 1.0;
+                }
+            }
+        }
+        mask
+    }
+}
+
+/// NodePad: zero-pad a feature matrix to `capacity` rows (paper Fig. 11).
+pub fn pad_features(x: &Mat, capacity: usize) -> Mat {
+    assert!(capacity >= x.rows, "NodePad capacity {} < rows {}", capacity, x.rows);
+    let mut out = Mat::zeros(capacity, x.cols);
+    out.data[..x.rows * x.cols].copy_from_slice(&x.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        // 0 - 1 - 2
+        Graph::new(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn canonicalizes_edges() {
+        let g = Graph::new(4, &[(2, 1), (1, 2), (3, 3), (0, 1)]);
+        assert_eq!(g.edges(), &[(0, 1), (1, 2)]); // dedup + drop self + sort
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        Graph::new(2, &[(0, 5)]);
+    }
+
+    #[test]
+    fn degrees_include_self() {
+        let g = path3();
+        assert_eq!(g.degrees_with_self(), vec![2.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn adjacency_symmetric_self_looped() {
+        let g = path3();
+        let a = g.adjacency(3);
+        assert_eq!(a[(0, 1)], 1.0);
+        assert_eq!(a[(1, 0)], 1.0);
+        assert_eq!(a[(0, 0)], 1.0);
+        assert_eq!(a[(0, 2)], 0.0);
+    }
+
+    #[test]
+    fn norm_matches_hand_computation() {
+        let g = path3();
+        let norm = g.norm_adjacency(3);
+        // deg = [2, 3, 2]; norm[0][1] = 1/sqrt(2*3)
+        let want = 1.0 / (6.0f32).sqrt();
+        assert!((norm[(0, 1)] - want).abs() < 1e-6);
+        assert!((norm[(0, 0)] - 0.5).abs() < 1e-6);
+        // symmetric
+        assert_eq!(norm[(0, 1)], norm[(1, 0)]);
+    }
+
+    #[test]
+    fn norm_equals_matrix_formula() {
+        // D^{-1/2}(A+I)D^{-1/2} computed densely must match the O(m) build.
+        let g = Graph::new(5, &[(0, 1), (0, 2), (1, 3), (2, 4), (3, 4)]);
+        let a = g.adjacency(5);
+        let deg = g.degrees_with_self();
+        let dense = Mat::from_fn(5, 5, |i, j| {
+            a[(i, j)] / (deg[i].sqrt() * deg[j].sqrt())
+        });
+        assert!(g.norm_adjacency(5).max_abs_diff(&dense) < 1e-6);
+    }
+
+    #[test]
+    fn nodepad_rows_disconnected() {
+        let g = path3();
+        let a = g.adjacency(5);
+        let norm = g.norm_adjacency(5);
+        for j in 0..5 {
+            assert_eq!(a[(3, j)], 0.0);
+            assert_eq!(a[(4, j)], 0.0);
+            assert_eq!(norm[(3, j)], 0.0);
+        }
+        // no phantom self loops
+        assert_eq!(a[(4, 4)], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NodePad capacity")]
+    fn capacity_below_n_panics() {
+        path3().adjacency(2);
+    }
+
+    #[test]
+    fn neg_bias_masks_non_edges() {
+        let g = path3();
+        let nb = g.neg_bias(4);
+        assert_eq!(nb[(0, 1)], 0.0); // edge
+        assert_eq!(nb[(0, 0)], 0.0); // self loop
+        assert_eq!(nb[(0, 2)], crate::ops::NEG_MASK); // non-edge
+        assert_eq!(nb[(0, 3)], crate::ops::NEG_MASK); // phantom column
+        assert_eq!(nb[(3, 3)], 0.0); // phantom diagonal keeps softmax finite
+    }
+
+    #[test]
+    fn sampled_neighbors_deterministic_and_capped() {
+        let g = Graph::new(6, &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 2)]);
+        let a = g.sampled_neighbors(3, 9);
+        let b = g.sampled_neighbors(3, 9);
+        assert_eq!(a, b);
+        assert_eq!(a[0][0], 0); // self first
+        let valid = a[0].iter().filter(|&&j| (j as usize) < 6).count();
+        assert_eq!(valid, 4); // self + 3 sampled (node 0 has 5 neighbors)
+        for &j in &a[0][1..] {
+            if (j as usize) < 6 {
+                assert!(g.neighbor_lists()[0].contains(&j));
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_adjacency_matches_indices() {
+        let g = Graph::new(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let idx = g.sampled_neighbors(2, 3);
+        let mask = g.sampled_adjacency(2, 3, 5);
+        for (i, row) in idx.iter().enumerate() {
+            let mut want = vec![0.0f32; 5];
+            for &j in row {
+                if (j as usize) < 5 {
+                    want[j as usize] = 1.0;
+                }
+            }
+            assert_eq!(mask.row(i), &want[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn pad_features_zero_tail() {
+        let x = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32 + 1.0);
+        let p = pad_features(&x, 4);
+        assert_eq!(p.row(0), x.row(0));
+        assert_eq!(p.row(1), x.row(1));
+        assert_eq!(p.row(2), &[0.0; 3]);
+        assert_eq!(p.row(3), &[0.0; 3]);
+    }
+}

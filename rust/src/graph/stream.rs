@@ -1,0 +1,239 @@
+//! Dynamic-graph event streams — the workloads of the paper's motivating
+//! applications (Fig. 1): on-device knowledge-graph churn (RAG assistants)
+//! and event-based vision sliding windows.
+//!
+//! A stream yields [`GraphEvent`]s that the server applies through GrAd;
+//! the generators are deterministic per seed so serving benchmarks are
+//! reproducible.
+
+use crate::util::Rng;
+
+/// One structural update + an inference trigger policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphEvent {
+    AddEdge(usize, usize),
+    RemoveEdge(usize, usize),
+    AddNode,
+    /// Run inference over the current graph (a query arrival).
+    Query,
+}
+
+/// Knowledge-graph churn: entities join over time, facts (edges) are
+/// added with preferential attachment and occasionally retracted; queries
+/// arrive between update bursts (paper Fig. 10's "on-device knowledge
+/// graph" example).
+pub struct KnowledgeGraphStream {
+    rng: Rng,
+    num_nodes: usize,
+    capacity: usize,
+    /// Live edges (for retractions). Kept small by sampling.
+    live_edges: Vec<(usize, usize)>,
+    /// Degree-proportional sampling pool (preferential attachment).
+    endpoint_pool: Vec<usize>,
+    query_ratio: f64,
+}
+
+impl KnowledgeGraphStream {
+    pub fn new(initial_nodes: usize, capacity: usize, query_ratio: f64,
+               seed: u64) -> Self {
+        assert!(initial_nodes >= 2 && capacity >= initial_nodes);
+        KnowledgeGraphStream {
+            rng: Rng::new(seed),
+            num_nodes: initial_nodes,
+            capacity,
+            live_edges: Vec::new(),
+            endpoint_pool: (0..initial_nodes).collect(),
+            query_ratio: query_ratio.clamp(0.0, 1.0),
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+}
+
+impl Iterator for KnowledgeGraphStream {
+    type Item = GraphEvent;
+
+    fn next(&mut self) -> Option<GraphEvent> {
+        if self.rng.chance(self.query_ratio) {
+            return Some(GraphEvent::Query);
+        }
+        let roll = self.rng.f64();
+        if roll < 0.08 && self.num_nodes < self.capacity {
+            // new entity
+            let id = self.num_nodes;
+            self.num_nodes += 1;
+            self.endpoint_pool.push(id);
+            return Some(GraphEvent::AddNode);
+        }
+        if roll < 0.18 && !self.live_edges.is_empty() {
+            // fact retraction
+            let k = self.rng.usize(self.live_edges.len());
+            let (u, v) = self.live_edges.swap_remove(k);
+            return Some(GraphEvent::RemoveEdge(u, v));
+        }
+        // new fact with preferential attachment
+        let u = self.endpoint_pool[self.rng.usize(self.endpoint_pool.len())];
+        let mut v = self.rng.usize(self.num_nodes);
+        if v == u {
+            v = (v + 1) % self.num_nodes;
+        }
+        self.endpoint_pool.push(u); // reinforce degree
+        self.endpoint_pool.push(v);
+        if self.endpoint_pool.len() > 4096 {
+            // bound the pool; forget old mass uniformly
+            let drop = self.rng.usize(self.endpoint_pool.len());
+            self.endpoint_pool.swap_remove(drop);
+        }
+        self.live_edges.push((u, v));
+        if self.live_edges.len() > 8192 {
+            self.live_edges.swap_remove(0);
+        }
+        Some(GraphEvent::AddEdge(u, v))
+    }
+}
+
+/// Event-camera sliding-window stream: each "frame" replaces a slice of
+/// the event nodes with fresh ones connected by spatiotemporal proximity
+/// (AEGNN-style). Produces bursts of updates followed by a query — the
+/// high-rate regime GrAd's no-recompile property exists for.
+pub struct EventVisionStream {
+    rng: Rng,
+    num_nodes: usize,
+    /// how many nodes each new frame replaces
+    churn: usize,
+    /// spatial positions of live events (for locality-based wiring)
+    pos: Vec<(f64, f64)>,
+    next_replace: usize,
+    pending: Vec<GraphEvent>,
+}
+
+impl EventVisionStream {
+    pub fn new(num_nodes: usize, churn: usize, seed: u64) -> Self {
+        assert!(churn <= num_nodes && num_nodes > 4);
+        let mut rng = Rng::new(seed);
+        let pos = (0..num_nodes)
+            .map(|_| (rng.f64(), rng.f64()))
+            .collect();
+        EventVisionStream {
+            rng,
+            num_nodes,
+            churn,
+            pos,
+            next_replace: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    /// K nearest-ish neighbors for a position (approximate: samples a
+    /// candidate pool rather than exact kNN — matches the event-graph
+    /// construction used on-device where exactness is not needed).
+    fn wire(&mut self, node: usize, k: usize) -> Vec<usize> {
+        let (x, y) = self.pos[node];
+        let mut best: Vec<(f64, usize)> = Vec::new();
+        for _ in 0..32 {
+            let cand = self.rng.usize(self.num_nodes);
+            if cand == node {
+                continue;
+            }
+            let (cx, cy) = self.pos[cand];
+            let d2 = (x - cx).powi(2) + (y - cy).powi(2);
+            best.push((d2, cand));
+        }
+        best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        best.dedup_by_key(|e| e.1);
+        best.truncate(k);
+        best.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+impl Iterator for EventVisionStream {
+    type Item = GraphEvent;
+
+    fn next(&mut self) -> Option<GraphEvent> {
+        if let Some(ev) = self.pending.pop() {
+            return Some(ev);
+        }
+        // new frame: replace `churn` nodes round-robin, rewire each to
+        // 3 spatial neighbors, then query.
+        let mut events = vec![GraphEvent::Query];
+        for _ in 0..self.churn {
+            let node = self.next_replace;
+            self.next_replace = (self.next_replace + 1) % self.num_nodes;
+            self.pos[node] = (self.rng.f64(), self.rng.f64());
+            for nbr in self.wire(node, 3) {
+                events.push(GraphEvent::AddEdge(node, nbr));
+            }
+        }
+        self.pending = events;
+        self.pending.pop()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kg_stream_deterministic() {
+        let a: Vec<_> = KnowledgeGraphStream::new(10, 50, 0.3, 7).take(100).collect();
+        let b: Vec<_> = KnowledgeGraphStream::new(10, 50, 0.3, 7).take(100).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kg_stream_mixes_events() {
+        let evs: Vec<_> = KnowledgeGraphStream::new(10, 500, 0.3, 1).take(500).collect();
+        let queries = evs.iter().filter(|e| matches!(e, GraphEvent::Query)).count();
+        let adds = evs.iter().filter(|e| matches!(e, GraphEvent::AddEdge(..))).count();
+        let nodes = evs.iter().filter(|e| matches!(e, GraphEvent::AddNode)).count();
+        assert!(queries > 50, "queries {queries}");
+        assert!(adds > 100, "adds {adds}");
+        assert!(nodes > 0, "nodes {nodes}");
+        // query ratio approximately honored
+        let ratio = queries as f64 / 500.0;
+        assert!((ratio - 0.3).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn kg_stream_respects_capacity() {
+        let evs: Vec<_> = KnowledgeGraphStream::new(4, 6, 0.0, 3).take(2000).collect();
+        let nodes = evs.iter().filter(|e| matches!(e, GraphEvent::AddNode)).count();
+        assert!(nodes <= 2, "added {nodes} nodes beyond capacity 6");
+    }
+
+    #[test]
+    fn kg_edges_within_node_range() {
+        let mut n = 12;
+        for ev in KnowledgeGraphStream::new(12, 40, 0.2, 5).take(1000) {
+            match ev {
+                GraphEvent::AddNode => n += 1,
+                GraphEvent::AddEdge(u, v) | GraphEvent::RemoveEdge(u, v) => {
+                    assert!(u < n && v < n, "({u},{v}) with n={n}");
+                    assert_ne!(u, v);
+                }
+                GraphEvent::Query => {}
+            }
+        }
+    }
+
+    #[test]
+    fn ev_stream_emits_bursts_with_queries() {
+        let evs: Vec<_> = EventVisionStream::new(64, 8, 9).take(400).collect();
+        let queries = evs.iter().filter(|e| matches!(e, GraphEvent::Query)).count();
+        let adds = evs.iter().filter(|e| matches!(e, GraphEvent::AddEdge(..))).count();
+        assert!(queries >= 10, "queries {queries}");
+        assert!(adds > 5 * queries, "burst size too small: {adds}/{queries}");
+    }
+
+    #[test]
+    fn ev_stream_edges_in_range() {
+        for ev in EventVisionStream::new(32, 4, 2).take(500) {
+            if let GraphEvent::AddEdge(u, v) = ev {
+                assert!(u < 32 && v < 32);
+                assert_ne!(u, v);
+            }
+        }
+    }
+}

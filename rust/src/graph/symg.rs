@@ -1,0 +1,190 @@
+//! SymG: packed-triangular storage for the symmetric normalization matrix
+//! (paper Fig. 15).
+//!
+//! The GraphConv norm matrix is symmetric, so only the upper triangle and
+//! the diagonal need DRAM residency — n(n+1)/2 elements instead of n²,
+//! halving both the memory footprint and the DMA traffic the simulator
+//! charges for fetching it (the savings CacheG then amortizes across
+//! layers).
+
+use crate::tensor::Mat;
+
+/// Upper-triangular (row-major, including diagonal) packed symmetric matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SymG {
+    n: usize,
+    packed: Vec<f32>,
+}
+
+impl SymG {
+    /// Pack a symmetric matrix. Panics if the input is not square or not
+    /// symmetric within `tol` (catching accidental use on attention masks,
+    /// which are *not* symmetric after sampling).
+    pub fn pack(m: &Mat, tol: f32) -> SymG {
+        assert_eq!(m.rows, m.cols, "SymG needs a square matrix");
+        let n = m.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert!(
+                    (m[(i, j)] - m[(j, i)]).abs() <= tol,
+                    "not symmetric at ({i},{j}): {} vs {}",
+                    m[(i, j)],
+                    m[(j, i)]
+                );
+            }
+        }
+        let mut packed = Vec::with_capacity(n * (n + 1) / 2);
+        for i in 0..n {
+            packed.extend_from_slice(&m.row(i)[i..]);
+        }
+        SymG { n, packed }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Packed index of (i ≤ j).
+    #[inline]
+    fn pidx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i <= j && j < self.n);
+        // row i starts after sum_{r<i} (n - r) = i(2n - i + 1)/2 entries
+        i * (2 * self.n - i + 1) / 2 + (j - i)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let (a, b) = if i <= j { (i, j) } else { (j, i) };
+        self.packed[self.pidx(a, b)]
+    }
+
+    /// Expand back to a dense matrix (what the DMA engine reconstructs in
+    /// SRAM after a compressed transfer).
+    pub fn unpack(&self) -> Mat {
+        Mat::from_fn(self.n, self.n, |i, j| self.get(i, j))
+    }
+
+    /// Stored bytes (the DMA-traffic win vs `4n²`).
+    pub fn bytes(&self) -> usize {
+        self.packed.len() * 4
+    }
+
+    /// Dense bytes this replaces.
+    pub fn dense_bytes(&self) -> usize {
+        self.n * self.n * 4
+    }
+
+    /// Compression ratio achieved (≈ 2 for large n).
+    pub fn ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.bytes() as f64
+    }
+
+    /// `out = self @ rhs` without unpacking — symmetric matmul reading
+    /// each packed entry once and scattering to both (i,j) and (j,i).
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.n, rhs.rows, "symg matmul dims");
+        let mut out = Mat::zeros(self.n, rhs.cols);
+        let cols = rhs.cols;
+        for i in 0..self.n {
+            // diagonal
+            let dii = self.get(i, i);
+            if dii != 0.0 {
+                let r = rhs.row(i);
+                let o = out.row_mut(i);
+                for c in 0..cols {
+                    o[c] += dii * r[c];
+                }
+            }
+            for j in (i + 1)..self.n {
+                let v = self.packed[self.pidx(i, j)];
+                if v == 0.0 {
+                    continue;
+                }
+                // out[i] += v * rhs[j]; out[j] += v * rhs[i]
+                let (ri, rj) = (i * cols, j * cols);
+                for c in 0..cols {
+                    out.data[ri + c] += v * rhs.data[rj + c];
+                }
+                for c in 0..cols {
+                    out.data[rj + c] += v * rhs.data[ri + c];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::util::propcheck::forall;
+
+    fn sym_from_graph(n: usize, edges: &[(u32, u32)]) -> (Mat, SymG) {
+        let g = Graph::new(n, edges);
+        let m = g.norm_adjacency(n);
+        let s = SymG::pack(&m, 0.0);
+        (m, s)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let (m, s) = sym_from_graph(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5)]);
+        assert_eq!(s.unpack(), m);
+    }
+
+    #[test]
+    fn halves_storage() {
+        let (_, s) = sym_from_graph(100, &[(0, 1), (5, 7)]);
+        assert_eq!(s.bytes(), 100 * 101 / 2 * 4);
+        assert!(s.ratio() > 1.9 && s.ratio() <= 2.0);
+    }
+
+    #[test]
+    fn get_is_symmetric_access() {
+        let (m, s) = sym_from_graph(5, &[(0, 4), (1, 3)]);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(s.get(i, j), m[(i, j)]);
+                assert_eq!(s.get(j, i), s.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not symmetric")]
+    fn rejects_asymmetric() {
+        let mut m = Mat::zeros(3, 3);
+        m[(0, 1)] = 1.0; // no mirror
+        SymG::pack(&m, 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn rejects_non_square() {
+        SymG::pack(&Mat::zeros(2, 3), 0.0);
+    }
+
+    #[test]
+    fn prop_packed_matmul_matches_dense() {
+        forall("symg matmul", 40, |g| {
+            let n = g.dim(24);
+            let f = g.dim(12);
+            let m = g.usize(0, 2 * n + 1);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.rng().usize(n) as u32, g.rng().usize(n) as u32))
+                .collect();
+            let graph = Graph::new(n, &edges);
+            let dense = graph.norm_adjacency(n);
+            let sym = SymG::pack(&dense, 0.0);
+            let rhs = Mat::from_vec(n, f, g.vec_f32(n * f));
+            let want = dense.matmul(&rhs);
+            let got = sym.matmul(&rhs);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "diff {}",
+                got.max_abs_diff(&want)
+            );
+        });
+    }
+}

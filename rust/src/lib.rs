@@ -1,0 +1,56 @@
+//! # GraNNite — high-performance GNN execution on resource-constrained NPUs
+//!
+//! Rust + JAX + Pallas reproduction of *GraNNite: Enabling High-Performance
+//! Execution of Graph Neural Networks on Resource-Constrained Neural
+//! Processing Units* (Das et al., 2025).
+//!
+//! This crate is Layer 3 of the three-layer stack: the request-path
+//! coordinator. Python/JAX (Layers 1–2) runs only at build time
+//! (`make artifacts`) to lower the GNN models — with their Pallas kernels —
+//! to HLO text; this crate loads those artifacts through the PJRT C API
+//! ([`runtime`]), drives them with graphs prepared by the CPU-side
+//! techniques ([`graph`]: PreG, SymG, NodePad, GrAd, GraSp), schedules them
+//! with the paper's coordination contribution ([`coordinator`]: GraphSplit
+//! cost-model partitioning, CacheG state, batching), and evaluates the
+//! hardware questions on an NPU simulator ([`npu`]) with Intel Core Ultra
+//! Series 1/2-like configurations.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | PRNG, property-testing harness, tables, timing |
+//! | [`config`] | TOML-subset parser + typed hardware/run configs |
+//! | [`graph`] | graph substrate: CSR, PreG/SymG/NodePad/GrAd/GraSp, datasets |
+//! | [`ops`] | OpenVINO-like op IR, GNN graph builders, EffOp/GrAx rewrites, reference executor |
+//! | [`npu`] | NPU simulator: DPU/DSP/SRAM/DMA/energy; CPU & GPU device models |
+//! | [`quant`] | QuantGr: symmetric static INT8 |
+//! | [`coordinator`] | GraphSplit partitioner, planner, executor, batcher, CacheG |
+//! | [`runtime`] | PJRT client, artifact registry, `.gnnt` IO |
+//! | [`server`] | dynamic-graph serving: router, workers, GrAd updates |
+//! | [`metrics`] | latency/energy/throughput accounting |
+//! | [`bench`] | the in-tree benchmark harness + paper-figure drivers |
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod npu;
+pub mod ops;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Paper-matched model dimensions: hidden width used by every 2-layer GNN.
+pub const HIDDEN: usize = 64;
+
+/// GraphSAGE neighbor-sample cap (paper §V: "maximum of 10 randomly
+/// selected neighbor nodes").
+pub const SAGE_MAX_NEIGHBORS: usize = 10;

@@ -1,0 +1,212 @@
+//! `grannite` — the leader binary: figure harnesses, accuracy evaluation,
+//! GraphSplit inspection, and the dynamic-graph server.
+//!
+//! ```text
+//! grannite fig4|fig5|fig20|fig21|fig22|fig23   # paper figures (simulator)
+//! grannite accuracy  [--dataset cora]          # PJRT accuracy table
+//! grannite infer     [--artifact NAME]         # one real inference
+//! grannite split     [--model gcn --variant baseline]  # GraphSplit report
+//! grannite serve     [--events N --query-ratio Q]      # dynamic KG demo
+//! grannite artifacts                           # list loaded artifacts
+//! ```
+
+use anyhow::{bail, Context, Result};
+use grannite::bench::figures;
+use grannite::cli::Args;
+use grannite::config::HardwareConfig;
+use grannite::coordinator::Coordinator;
+use grannite::graph::datasets;
+use grannite::util::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let hw = HardwareConfig::preset(&args.str_opt("hw", "series2"))?;
+    let artifacts = std::path::PathBuf::from(args.str_opt("artifacts", "artifacts"));
+    let dataset = args.str_opt("dataset", "cora");
+
+    match args.subcommand.as_deref() {
+        Some("fig4") => figures::fig4(&hw).print(),
+        Some("fig5") => figures::fig5(&hw).print(),
+        Some("fig20") => {
+            let spec = datasets::spec(&dataset)?;
+            figures::fig20(&spec, &hw).print();
+        }
+        Some("fig21") => figures::fig21().print(),
+        Some("fig22") => {
+            figures::fig22(&datasets::spec(&dataset)?).print();
+        }
+        Some("fig23") => figures::fig23().print(),
+        Some("ablation") => {
+            figures::graphsplit_ablation(&datasets::spec(&dataset)?).print();
+        }
+        Some("figures") => {
+            for t in figures::all_simulated()? {
+                t.print();
+            }
+        }
+        Some("artifacts") => {
+            let rt = grannite::runtime::Runtime::open(&artifacts)?;
+            let mut t = Table::new("AOT artifacts", &["name", "inputs"]);
+            for name in rt.artifact_names() {
+                let info = rt.artifact(name)?;
+                t.row(&[name.to_string(), info.inputs.join(",")]);
+            }
+            t.print();
+        }
+        Some("infer") => {
+            let mut c = Coordinator::open(&artifacts, &dataset)?;
+            let artifact = args.str_opt("artifact", &format!("gcn_stagr_{dataset}"));
+            let (logits, us) = grannite::util::timing::time_once(|| c.infer(&artifact));
+            let logits = logits?;
+            let mask = c.state.dataset.test_mask.clone();
+            let acc = c.state.dataset.accuracy(&logits, &mask);
+            println!(
+                "{artifact}: {}x{} logits in {} — test acc {:.3}",
+                logits.rows,
+                logits.cols,
+                grannite::util::human_us(us),
+                acc
+            );
+        }
+        Some("accuracy") => {
+            let mut c = Coordinator::open(&artifacts, &dataset)?;
+            accuracy_table(&mut c, &dataset)?.print();
+        }
+        Some("split") => {
+            let model = args.str_opt("model", "gcn");
+            let variant = args.str_opt("variant", "baseline");
+            let c = Coordinator::open(&artifacts, &dataset)?;
+            let (g, p) = c.graphsplit(&model, &variant, &hw)?;
+            let mut t = Table::new(
+                format!("GraphSplit — {model}/{variant} on {dataset}"),
+                &["op", "stage", "placement"],
+            );
+            for (id, op) in g.ops.iter().enumerate() {
+                if op.kind == grannite::ops::OpKind::Input {
+                    continue;
+                }
+                t.row(&[
+                    format!("#{id} {}", op.kind.name()),
+                    op.stage.to_string(),
+                    format!("{:?}", p.placement[id]),
+                ]);
+            }
+            t.print();
+            println!(
+                "estimated latency {} with {} boundary crossings",
+                grannite::util::human_us(p.est_us),
+                p.crossings
+            );
+        }
+        Some("serve") => {
+            let events = args.usize_opt("events", 2000)?;
+            let query_ratio = args.f64_opt("query-ratio", 0.3)?;
+            serve_demo(&artifacts, &dataset, events, query_ratio)?;
+        }
+        Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
+        None => println!("{}", HELP.trim()),
+    }
+    Ok(())
+}
+
+const HELP: &str = r#"
+grannite — GNN execution on resource-constrained NPUs (paper reproduction)
+
+subcommands:
+  fig4 | fig5 | fig20 | fig21 | fig22 | fig23   regenerate a paper figure
+  figures                                        all of the above
+  ablation           GraphSplit placement ablation
+  artifacts          list AOT artifacts
+  infer              run one PJRT inference (--artifact NAME)
+  accuracy           accuracy table over all artifacts (--dataset cora)
+  split              GraphSplit placement report (--model, --variant)
+  serve              dynamic knowledge-graph serving demo
+
+common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
+                --artifacts DIR
+"#;
+
+/// The per-artifact accuracy table (the paper's quality-loss claims).
+fn accuracy_table(c: &mut Coordinator, dataset: &str) -> Result<Table> {
+    let mut t = Table::new(
+        format!("Accuracy on the {dataset} twin (PJRT execution)"),
+        &["artifact", "test acc", "Δ vs reference variant"],
+    );
+    let groups: &[&[&str]] = &[
+        &["gcn_stagr", "gcn_grad", "gcn_baseline", "gcn_quant"],
+        &["gat_baseline", "gat_effop", "gat_grax"],
+        &["sage_mean"],
+        &["sage_max_baseline", "sage_max_grax3"],
+    ];
+    for artifacts in groups {
+        let mut reference: Option<f64> = None;
+        for base in *artifacts {
+            let name = format!("{base}_{dataset}");
+            if c.runtime.artifact(&name).is_err() {
+                continue;
+            }
+            let acc = c
+                .evaluate(&name)
+                .with_context(|| format!("evaluating {name}"))?;
+            let delta = match reference {
+                None => {
+                    reference = Some(acc);
+                    "(reference)".to_string()
+                }
+                Some(r) => format!("{:+.3}", acc - r),
+            };
+            t.row(&[name, format!("{acc:.3}"), delta]);
+        }
+    }
+    Ok(t)
+}
+
+/// Dynamic KG serving demo against the real PJRT artifacts.
+fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
+              query_ratio: f64) -> Result<()> {
+    use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+    use grannite::server::{CoordinatorEngine, ServerConfig, ServerHandle, Update};
+
+    let artifact = format!("gcn_grad_{dataset}");
+    let ds_name = dataset.to_string();
+    let artifacts = artifacts.to_path_buf();
+    let server = ServerHandle::spawn(
+        move || {
+            let coordinator = Coordinator::open(&artifacts, &ds_name)?;
+            Ok(CoordinatorEngine { coordinator, artifact })
+        },
+        ServerConfig::default(),
+    );
+
+    let spec = datasets::spec(dataset)?;
+    let stream = KnowledgeGraphStream::new(spec.nodes, spec.capacity, query_ratio, 42);
+    let mut responses = Vec::new();
+    for ev in stream.take(events) {
+        match ev {
+            GraphEvent::AddEdge(u, v) => server.update(Update::AddEdge(u, v))?,
+            GraphEvent::RemoveEdge(u, v) => server.update(Update::RemoveEdge(u, v))?,
+            GraphEvent::AddNode => server.update(Update::AddNode)?,
+            GraphEvent::Query => responses.push(server.query(None)?),
+        }
+    }
+    let mut ok = 0;
+    for rx in responses {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let snap = server.metrics.snapshot();
+    println!("served {ok} queries over {events} events");
+    println!(
+        "latency: {}",
+        snap.latency
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "n/a".into())
+    );
+    println!(
+        "mask updates: {}  mean batch: {:.1}  throughput: {:.1} q/s",
+        snap.mask_updates, snap.mean_batch, snap.throughput_qps
+    );
+    server.shutdown()?;
+    Ok(())
+}

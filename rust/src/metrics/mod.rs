@@ -1,0 +1,138 @@
+//! Serving metrics: latency histograms, throughput windows, energy
+//! accounting — what the server and benches report.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::timing::Stats;
+
+/// Thread-safe metrics sink for the serving path.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    queue_us: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    mask_updates: usize,
+    queries: usize,
+    rejected: usize,
+    started: Option<Instant>,
+}
+
+/// A snapshot of aggregated serving metrics.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub queries: usize,
+    pub rejected: usize,
+    pub mask_updates: usize,
+    pub latency: Option<Stats>,
+    pub queue: Option<Stats>,
+    pub mean_batch: f64,
+    pub throughput_qps: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        let m = Metrics::default();
+        m.inner.lock().unwrap().started = Some(Instant::now());
+        m
+    }
+
+    pub fn record_query(&self, latency_us: f64, queue_us: f64, batch: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.latencies_us.push(latency_us);
+        i.queue_us.push(queue_us);
+        i.batch_sizes.push(batch);
+        i.queries += 1;
+    }
+
+    pub fn record_mask_update(&self) {
+        self.inner.lock().unwrap().mask_updates += 1;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let i = self.inner.lock().unwrap();
+        let elapsed = i
+            .started
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        Snapshot {
+            queries: i.queries,
+            rejected: i.rejected,
+            mask_updates: i.mask_updates,
+            latency: if i.latencies_us.is_empty() {
+                None
+            } else {
+                Some(Stats::from_samples(&i.latencies_us))
+            },
+            queue: if i.queue_us.is_empty() {
+                None
+            } else {
+                Some(Stats::from_samples(&i.queue_us))
+            },
+            mean_batch: if i.batch_sizes.is_empty() {
+                0.0
+            } else {
+                i.batch_sizes.iter().sum::<usize>() as f64
+                    / i.batch_sizes.len() as f64
+            },
+            throughput_qps: i.queries as f64 / elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_query(100.0, 5.0, 2);
+        m.record_query(200.0, 15.0, 4);
+        m.record_mask_update();
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.queries, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.mask_updates, 1);
+        assert_eq!(s.mean_batch, 3.0);
+        assert_eq!(s.latency.unwrap().mean, 150.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.queries, 0);
+        assert!(s.latency.is_none());
+        assert_eq!(s.mean_batch, 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.record_query(50.0, 1.0, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().queries, 800);
+    }
+}

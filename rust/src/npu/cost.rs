@@ -1,0 +1,372 @@
+//! Per-op cost functions: latency (µs) and energy (pJ) of one op on one
+//! device model, given operand shapes and the engine it is placed on.
+//!
+//! Calibration: the functional forms come from the FlexNN-like
+//! architecture (paper §IV); the constants live in
+//! [`crate::config::HardwareConfig`] and were frozen after matching the
+//! paper's Fig. 4/5 breakdown percentages (DESIGN.md §7).
+
+use crate::config::{DeviceKind, HardwareConfig};
+use crate::ops::{Engine, OpGraph, OpKind};
+
+/// Cost of one op execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    pub us: f64,
+    pub pj: f64,
+    pub engine: Engine,
+    /// Dense MACs performed (telemetry / roofline accounting).
+    pub macs: usize,
+}
+
+impl OpCost {
+    pub fn zero() -> OpCost {
+        OpCost { us: 0.0, pj: 0.0, engine: Engine::Dpu, macs: 0 }
+    }
+}
+
+/// DPU systolic-array utilization for an (m,k)@(k,n) MatMul: fraction of
+/// the MAC grid kept busy. Skinny operands (attention projections, (n,1)
+/// vectors) can't fill the array — the paper's "limited parallelism
+/// inherent in the GCN" (Fig. 21 discussion) comes from exactly this.
+pub fn matmul_utilization(m: usize, k: usize, n: usize) -> f64 {
+    let fill = |d: usize, t: f64| (d as f64 / t).min(1.0);
+    // 128-wide output stationarity per tile, 64-deep accumulation pipeline
+    fill(m, 128.0) * fill(n, 64.0).max(fill(k, 64.0) * fill(n, 8.0)).min(1.0)
+}
+
+/// Dense-MAC time on the DPU (or CPU/GPU compute core).
+fn matmul_cost(hw: &HardwareConfig, m: usize, k: usize, n: usize,
+               dtype_bytes: usize, sparsity_skip: f64) -> OpCost {
+    let macs = m * k * n;
+    let effective_macs = (macs as f64) * (1.0 - sparsity_skip);
+    let util = match hw.kind {
+        DeviceKind::Npu => matmul_utilization(m, k, n),
+        // CPU microkernels lose efficiency on skinny shapes, but less
+        // sharply (no 2-D systolic fill constraint).
+        DeviceKind::Cpu => (m.min(64) as f64 / 64.0).max(0.25),
+        // integrated GPUs reach ~35% of peak on real GEMMs (driver +
+        // occupancy limits on shared-memory SoCs).
+        DeviceKind::Gpu => 0.35 * (m.min(64) as f64 / 64.0).max(0.25),
+    };
+    let peak = hw.macs_per_cycle(dtype_bytes) * hw.clock_ghz * 1e3; // MACs/µs
+    let us = effective_macs / (peak * util.max(1e-3));
+    let pj_per_mac = hw.pj_per_mac_int8 * dtype_bytes as f64;
+    OpCost {
+        us,
+        pj: effective_macs * pj_per_mac,
+        engine: Engine::Dpu,
+        macs,
+    }
+}
+
+/// Vectorizable elementwise/reduction work on the DPU vector units.
+fn vector_cost(hw: &HardwareConfig, elems: usize, passes: f64) -> OpCost {
+    let lanes = (hw.vector_lanes * hw.tiles) as f64;
+    let us = (elems as f64 * passes) / (lanes * hw.clock_ghz * 1e3);
+    OpCost {
+        us,
+        pj: elems as f64 * passes * hw.pj_per_mac_int8 * 2.0,
+        engine: Engine::Dpu,
+        macs: 0,
+    }
+}
+
+/// Control-heavy work on the DSP: `serial` irregular steps (one per row /
+/// gather / scatter target) plus `elems` of vectorizable payload moved at
+/// DSP lane width — both at the DSP's lower clock.
+fn dsp_cost(hw: &HardwareConfig, serial: usize, elems: usize) -> OpCost {
+    let cycles = serial as f64 * hw.dsp_control_cycles_per_elem
+        + elems as f64 / hw.dsp_lanes as f64;
+    let us = cycles / (hw.dsp_clock_ghz * 1e3);
+    OpCost {
+        us,
+        pj: (serial + elems) as f64 * hw.pj_per_dsp_elem,
+        engine: Engine::Dsp,
+        macs: 0,
+    }
+}
+
+/// Options a simulation threads through to op costing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostOpts {
+    /// GraSp: fraction of MACs skipped in MatMuls whose *stationary*
+    /// operand is a sparse structure mask (0 disables).
+    pub mask_sparsity_skip: f64,
+    /// Operand dtype width override for QuantGr-quantized dense ops.
+    pub dense_dtype_bytes: usize,
+}
+
+/// Compute-only cost of `op` on `hw` with the given engine placement.
+/// DMA/transfer costs are the scheduler's job ([`super::sim`]).
+pub fn op_cost(g: &OpGraph, id: usize, hw: &HardwareConfig,
+               engine: Engine, opts: CostOpts) -> OpCost {
+    let op = &g.ops[id];
+    let in_shape = |k: usize| -> &[usize] { &g.ops[op.inputs[k]].shape };
+    let elems = op.num_elements();
+    let dtype_bytes = if opts.dense_dtype_bytes > 0 {
+        opts.dense_dtype_bytes
+    } else {
+        2 // NPU default datapath: FP16
+    };
+
+    let mut cost = match &op.kind {
+        OpKind::Input => OpCost::zero(),
+
+        OpKind::MatMul => {
+            let a = in_shape(0);
+            let b = in_shape(1);
+            // GraSp zero-skip applies when the lhs is a structure mask
+            // (the n×n aggregation); detect via "mask-like" input names.
+            let lhs = &g.ops[op.inputs[0]];
+            let skip = if lhs.kind == OpKind::Input && is_mask_name(&lhs.name) {
+                opts.mask_sparsity_skip
+            } else {
+                0.0
+            };
+            matmul_cost(hw, a[0], a[1], b[1], dtype_bytes, skip)
+        }
+        OpKind::QMatMul { .. } => {
+            let a = in_shape(0);
+            let b = in_shape(1);
+            matmul_cost(hw, a[0], a[1], b[1], 1, 0.0) // INT8 datapath
+        }
+        OpKind::MaskedMaxPool => {
+            // GrAx3 maps mask-multiply + max-pool onto the MAC grid
+            // (a (×, max)-semiring MatMul — paper Fig. 18); zero mask
+            // entries are skippable exactly like GraSp MatMul zeros.
+            let m = in_shape(0)[0];
+            let n = in_shape(0)[1];
+            let f = in_shape(1)[1];
+            let lhs = &g.ops[op.inputs[0]];
+            let skip = if lhs.kind == OpKind::Input && is_mask_name(&lhs.name) {
+                opts.mask_sparsity_skip
+            } else {
+                0.0
+            };
+            matmul_cost(hw, m, n, f, dtype_bytes, skip)
+        }
+        OpKind::Transpose => vector_cost(hw, elems, 1.5), // strided copy
+        OpKind::Add | OpKind::Sub | OpKind::Mul => vector_cost(hw, elems, 1.0),
+        OpKind::Scale(_) | OpKind::AddConst(_) | OpKind::Relu
+        | OpKind::LeakyRelu(_) => vector_cost(hw, elems, 1.0),
+        OpKind::Exp => vector_cost(hw, elems, 2.0), // polynomial approx
+        OpKind::BroadcastCol | OpKind::BroadcastRow => vector_cost(hw, elems, 1.0),
+        OpKind::ReduceSumRows | OpKind::ReduceMaxRows => {
+            vector_cost(hw, in_shape(0).iter().product(), 1.0)
+        }
+        OpKind::Quantize { .. } => vector_cost(hw, elems, 1.0),
+
+        // ---- DSP-class ----
+        // Vectorizable-but-DSP-bound ops pay per-row serialization plus
+        // payload at DSP lane width (they vectorize along the row).
+        OpKind::Div => {
+            let payload: usize = in_shape(0).iter().product();
+            dsp_cost(hw, in_shape(0)[0], payload)
+        }
+        OpKind::Sqrt | OpKind::Rsqrt | OpKind::Reciprocal => {
+            dsp_cost(hw, elems, elems)
+        }
+        OpKind::Elu => dsp_cost(hw, in_shape(0)[0], elems),
+        OpKind::Greater | OpKind::Select => {
+            let payload: usize = in_shape(0).iter().product();
+            dsp_cost(hw, in_shape(0)[0], payload)
+        }
+        OpKind::Softmax => {
+            // two payload passes (fused max/exp/sum, then normalize)
+            // with per-row serialization on the reduce phase
+            let payload: usize = in_shape(0).iter().product();
+            dsp_cost(hw, in_shape(0)[0], payload * 2)
+        }
+        OpKind::DegreesFromEdges => {
+            let m = in_shape(0)[0];
+            dsp_cost(hw, 2 * m, 2 * m)
+        }
+        OpKind::AdjacencyFromEdges => {
+            let m = in_shape(0)[0];
+            // materializing a dense mask from edge tuples is serial DSP
+            // work per element (init + layout) plus 2m scattered writes —
+            // the dominant preprocessing cost of Fig. 4
+            dsp_cost(hw, elems / 4 + 2 * m, elems)
+        }
+        OpKind::ScatterAddEdges => {
+            let m = in_shape(0)[0];
+            let f = in_shape(1)[1];
+            dsp_cost(hw, 2 * m, 2 * m * f)
+        }
+        OpKind::NeighborGatherMax | OpKind::NeighborGatherMean => {
+            let n = in_shape(0)[0];
+            let k = in_shape(0)[1];
+            let f = in_shape(1)[1];
+            dsp_cost(hw, n * k, n * k * f)
+        }
+    };
+
+    // Engine override: when GraphSplit sends a DSP-class op to the CPU
+    // model, or the caller forces DPU execution of a rewritten op, the
+    // placement decides, not the op's default.
+    cost.engine = engine;
+    if hw.kind != DeviceKind::Npu {
+        // CPU/GPU have no DPU/DSP split: tag by the op's default class
+        // for reporting, but the cost above already used hw's constants.
+        cost.engine = op.kind.default_engine();
+    }
+    // fixed per-op scheduling overhead
+    cost.us += hw.op_overhead_us;
+    // static power charged over the op's latency: W · µs = 1e6 pJ
+    cost.pj += hw.static_watts * cost.us * 1e6;
+    cost
+}
+
+/// Structure-mask input names (GraSp's sparsity targets).
+pub fn is_mask_name(name: &str) -> bool {
+    matches!(name, "norm" | "adj" | "mask" | "norm_mask" | "neg_bias" | "norm_pad")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::build::{gcn_stagr, GnnDims};
+    use crate::ops::Stage;
+    use crate::tensor::DType;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::npu_series2()
+    }
+
+    fn graph_with(kind: OpKind, a: &[usize], b: Option<&[usize]>, out: &[usize]) -> OpGraph {
+        let mut g = OpGraph::new("t");
+        let x = g.input("x", a, DType::F32, Stage::Compute);
+        let inputs = match b {
+            Some(bs) => {
+                let y = g.input("y", bs, DType::F32, Stage::Compute);
+                vec![x, y]
+            }
+            None => vec![x],
+        };
+        let o = g.op(kind, &inputs, out, Stage::Compute);
+        g.set_output(o);
+        g
+    }
+
+    #[test]
+    fn big_matmul_near_peak() {
+        let g = graph_with(OpKind::MatMul, &[2048, 1433], Some(&[1433, 64]), &[2048, 64]);
+        let c = op_cost(&g, 2, &hw(), Engine::Dpu, CostOpts::default());
+        let macs = 2048 * 1433 * 64;
+        let peak_us = macs as f64 / (hw().macs_per_cycle(2) * hw().clock_ghz * 1e3);
+        assert!(c.us < peak_us * 3.0, "{} vs peak {}", c.us, peak_us);
+        assert_eq!(c.macs, macs);
+    }
+
+    #[test]
+    fn skinny_matmul_underutilizes() {
+        // (n,64)@(64,1): the GAT projection that can't fill the array
+        let g = graph_with(OpKind::MatMul, &[2048, 64], Some(&[64, 1]), &[2048, 1]);
+        let c = op_cost(&g, 2, &hw(), Engine::Dpu, CostOpts::default());
+        let peak_us = (2048.0 * 64.0) / (hw().macs_per_cycle(2) * hw().clock_ghz * 1e3);
+        assert!(c.us > peak_us * 3.0, "skinny should be inefficient");
+    }
+
+    #[test]
+    fn dsp_slower_than_dpu_for_same_elems() {
+        let n = 1_000_000;
+        let g_sel = graph_with(OpKind::Select, &[1000, 1000], Some(&[1000, 1000]), &[1000, 1000]);
+        // select needs 3 inputs; build manually
+        let mut g = OpGraph::new("sel");
+        let c0 = g.input("c", &[1000, 1000], DType::F32, Stage::Compute);
+        let a = g.input("a", &[1000, 1000], DType::F32, Stage::Compute);
+        let b = g.input("b", &[1000, 1000], DType::F32, Stage::Compute);
+        let s = g.op(OpKind::Select, &[c0, a, b], &[1000, 1000], Stage::Compute);
+        g.set_output(s);
+        let dsp = op_cost(&g, 3, &hw(), Engine::Dsp, CostOpts::default());
+
+        let g2 = graph_with(OpKind::Mul, &[1000, 1000], Some(&[1000, 1000]), &[1000, 1000]);
+        let dpu = op_cost(&g2, 2, &hw(), Engine::Dpu, CostOpts::default());
+        assert!(
+            dsp.us > 5.0 * dpu.us,
+            "DSP {} should be ≫ DPU {} for {n} elems",
+            dsp.us,
+            dpu.us
+        );
+        let _ = g_sel;
+    }
+
+    #[test]
+    fn int8_matmul_faster_than_fp16() {
+        let g = graph_with(OpKind::MatMul, &[2048, 1024], Some(&[1024, 64]), &[2048, 64]);
+        let fp16 = op_cost(&g, 2, &hw(), Engine::Dpu, CostOpts::default());
+        let mut gq = OpGraph::new("q");
+        let x = gq.input("x", &[2048, 1024], DType::I8, Stage::Compute);
+        let w = gq.input("w", &[1024, 64], DType::I8, Stage::Compute);
+        let o = gq.op(
+            OpKind::QMatMul { x_scale: 1.0, w_scale: 1.0 },
+            &[x, w],
+            &[2048, 64],
+            Stage::Compute,
+        );
+        gq.set_output(o);
+        let int8 = op_cost(&gq, 2, &hw(), Engine::Dpu, CostOpts::default());
+        assert!(
+            int8.us < fp16.us * 0.7,
+            "INT8 {} should beat FP16 {}",
+            int8.us,
+            fp16.us
+        );
+    }
+
+    #[test]
+    fn grasp_skip_reduces_masked_matmul_cost() {
+        let d = GnnDims::model(2048, 4000, 256, 8);
+        let g = gcn_stagr(d, "stagr");
+        // find the aggregation matmul (norm @ mm)
+        let agg_id = g
+            .ops
+            .iter()
+            .enumerate()
+            .find(|(_, op)| {
+                op.kind == OpKind::MatMul
+                    && g.ops[op.inputs[0]].name == "norm"
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        let dense = op_cost(&g, agg_id, &hw(), Engine::Dpu, CostOpts::default());
+        let sparse = op_cost(
+            &g,
+            agg_id,
+            &hw(),
+            Engine::Dpu,
+            CostOpts { mask_sparsity_skip: 0.99, dense_dtype_bytes: 0 },
+        );
+        assert!(sparse.us < dense.us * 0.35, "{} vs {}", sparse.us, dense.us);
+    }
+
+    #[test]
+    fn every_op_kind_has_finite_cost() {
+        // exercise via a full model graph
+        let d = GnnDims::model(64, 100, 32, 4);
+        for (m, v) in [
+            ("gcn", "baseline"),
+            ("gat", "baseline"),
+            ("gat", "grax"),
+            ("sage_max", "baseline"),
+            ("sage_max", "grax3"),
+        ] {
+            let g = crate::ops::build::build(m, v, d).unwrap();
+            for id in 0..g.len() {
+                let c = op_cost(&g, id, &hw(), g.ops[id].kind.default_engine(),
+                                CostOpts::default());
+                assert!(c.us.is_finite() && c.us >= 0.0, "{m}/{v} op {id}");
+                assert!(c.pj.is_finite() && c.pj >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_names_detected() {
+        assert!(is_mask_name("norm"));
+        assert!(is_mask_name("neg_bias"));
+        assert!(!is_mask_name("x"));
+        assert!(!is_mask_name("w1"));
+    }
+}

@@ -1,0 +1,15 @@
+//! NPU simulator — the evaluation substrate standing in for the paper's
+//! Intel Core Ultra NPUs (DESIGN.md §2).
+//!
+//! Structure (paper §IV, FlexNN-like): a DPU tile array for dense
+//! MACs/vector work, a lower-clocked DSP for control-heavy ops, local
+//! SRAM with explicit DMA from DRAM, and a host-transfer link crossed by
+//! GraphSplit boundaries. Constants live in
+//! [`crate::config::HardwareConfig`]; Series-1/Series-2/CPU/GPU presets
+//! reproduce the device comparisons of Figs. 21–23.
+
+pub mod cost;
+pub mod sim;
+
+pub use cost::{matmul_utilization, op_cost, CostOpts, OpCost};
+pub use sim::{simulate, simulate_device, OpRecord, Placement, SimOptions, SimReport};

@@ -1,0 +1,631 @@
+//! The NPU simulator: schedules an op graph on a device model, charging
+//! compute (DPU/DSP), DMA traffic (DRAM↔SRAM with optional GraSp/SymG
+//! compression and CacheG residency), and GraphSplit boundary transfers.
+//!
+//! The memory model is a per-op roofline (DESIGN.md §2): every op runs at
+//! `max(compute_time, streamed_bytes / DMA_bandwidth)`, where
+//! `streamed_bytes` covers operands that are not SRAM-resident:
+//!
+//! - *graph inputs* (weights, masks, features) live in DRAM; small
+//!   tensors (weights) are pinned in SRAM after first use;
+//! - structure masks (`norm`/`adj`/…) are re-streamed per consumer unless
+//!   **CacheG** pins them — which only fits once **SymG** (triangular
+//!   packing) and/or **GraSp** (ZVC) shrink them below the pin budget:
+//!   the three techniques compose exactly as the paper describes;
+//! - intermediates stay in SRAM when they fit the working set; larger
+//!   ones (the n×n attention matrices at Cora scale) stream to/from DRAM;
+//! - GraphSplit boundary crossings pay the host-link transfer cost.
+
+use std::collections::BTreeMap;
+
+use crate::config::{DeviceKind, HardwareConfig};
+use crate::ops::{Engine, OpGraph, OpKind, Stage};
+use crate::tensor::DType;
+
+use super::cost::{is_mask_name, op_cost, CostOpts, OpCost};
+
+/// Elementwise DPU ops that the NPU compiler fuses into streaming chains:
+/// an oversized intermediate flowing between two fusible ops never
+/// materializes in DRAM (this is why EffOp's op-count increase is free
+/// while its DSP elimination pays off).
+fn is_fusible(k: &OpKind) -> bool {
+    matches!(
+        k,
+        OpKind::Add
+            | OpKind::Sub
+            | OpKind::Mul
+            | OpKind::Scale(_)
+            | OpKind::AddConst(_)
+            | OpKind::Relu
+            | OpKind::LeakyRelu(_)
+            | OpKind::Exp
+            | OpKind::BroadcastCol
+            | OpKind::BroadcastRow
+            | OpKind::Quantize { .. }
+    )
+}
+
+/// Reductions can terminate a fused chain (they consume streamed tiles).
+fn is_reducer(k: &OpKind) -> bool {
+    matches!(k, OpKind::ReduceSumRows | OpKind::ReduceMaxRows | OpKind::MaskedMaxPool)
+}
+
+/// Which device executes each op (GraphSplit's output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Accel,
+    Host,
+}
+
+/// Simulation options: which GraNNite techniques are active.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// GraSp: ZVC-compress structure masks + zero-skip their MACs.
+    pub grasp: bool,
+    /// SymG: triangular packing for symmetric masks (`norm*` inputs).
+    pub symg: bool,
+    /// CacheG: pin structure masks in SRAM across layers (needs them to
+    /// fit — see module docs).
+    pub cacheg: bool,
+    /// Datapath width in bytes for f32 tensors (2 = FP16 default NPU
+    /// datapath; QuantGr's INT8 ops carry their own width).
+    pub dense_dtype_bytes: usize,
+    /// Density of each named mask input (from the real dataset) —
+    /// drives GraSp savings honestly.
+    pub mask_density: BTreeMap<String, f64>,
+    /// Per-op placement (None = everything on the accelerator).
+    pub placement: Option<Vec<Placement>>,
+    /// Host model used for `Placement::Host` ops + boundary transfers.
+    pub host: HardwareConfig,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            grasp: false,
+            symg: false,
+            cacheg: false,
+            dense_dtype_bytes: 2,
+            mask_density: BTreeMap::new(),
+            placement: None,
+            host: HardwareConfig::cpu(),
+        }
+    }
+}
+
+impl SimOptions {
+    /// All step-2 memory techniques on (the "full GraNNite" config).
+    pub fn optimized() -> SimOptions {
+        SimOptions { grasp: true, symg: true, cacheg: true, ..Default::default() }
+    }
+
+    /// Effective stored width of a tensor element for this run.
+    fn width(&self, dtype: DType) -> usize {
+        match dtype {
+            DType::F32 | DType::F16 => self.dense_dtype_bytes,
+            other => other.size(),
+        }
+    }
+}
+
+/// Per-op simulation record.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub id: usize,
+    pub kind: &'static str,
+    pub stage: Stage,
+    pub engine: Engine,
+    pub placement: Placement,
+    pub compute_us: f64,
+    pub dma_us: f64,
+    pub xfer_us: f64,
+    /// Wall-clock contribution: max(compute, dma) + xfer.
+    pub wall_us: f64,
+    pub energy_pj: f64,
+    pub macs: usize,
+}
+
+/// Aggregated simulation result for one inference.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub graph_name: String,
+    pub device: String,
+    pub records: Vec<OpRecord>,
+    pub total_us: f64,
+    pub energy_pj: f64,
+    pub dma_bytes: usize,
+    pub xfer_bytes: usize,
+}
+
+impl SimReport {
+    /// Latency split by (stage, engine) — the Fig. 4 view.
+    pub fn by_stage_engine(&self) -> BTreeMap<(String, String), f64> {
+        let mut m = BTreeMap::new();
+        for r in &self.records {
+            let key = (r.stage.to_string(), engine_label(r));
+            *m.entry(key).or_insert(0.0) += r.wall_us;
+        }
+        m
+    }
+
+    /// Latency split by stage only.
+    pub fn by_stage(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        for r in &self.records {
+            *m.entry(r.stage.to_string()).or_insert(0.0) += r.wall_us;
+        }
+        m
+    }
+
+    /// Latency split by op mnemonic — the Fig. 5 view (wall time).
+    pub fn by_kind(&self) -> BTreeMap<&'static str, f64> {
+        let mut m = BTreeMap::new();
+        for r in &self.records {
+            *m.entry(r.kind).or_insert(0.0) += r.wall_us;
+        }
+        m
+    }
+
+    /// Fraction of a stage's wall time attributable to DSP-placed ops
+    /// (Fig. 5's claim: ~30% of GraphAttn compute out of the box).
+    pub fn dsp_fraction(&self, stage: Stage) -> f64 {
+        let (mut dsp, mut total) = (0.0, 0.0);
+        for r in &self.records {
+            if r.stage == stage {
+                total += r.wall_us;
+                if r.engine == Engine::Dsp && r.placement == Placement::Accel {
+                    dsp += r.wall_us;
+                }
+            }
+        }
+        if total > 0.0 {
+            dsp / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Throughput in inferences/second.
+    pub fn throughput(&self) -> f64 {
+        1e6 / self.total_us
+    }
+
+    /// Energy in millijoules.
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_pj / 1e9
+    }
+}
+
+fn engine_label(r: &OpRecord) -> String {
+    match r.placement {
+        Placement::Host => "CPU".into(),
+        Placement::Accel => match r.engine {
+            Engine::Dpu => "DPU".into(),
+            Engine::Dsp => "DSP".into(),
+        },
+    }
+}
+
+/// DMA bytes a graph input occupies after the active compressions.
+fn input_stream_bytes(op: &crate::ops::Op, opts: &SimOptions) -> usize {
+    let elems = op.num_elements();
+    let width = opts.width(op.dtype);
+    let dense = elems * width;
+    // GraSp ZVC applies to structure masks AND node embeddings (paper
+    // Fig. 13: "zero elements in node embeddings and adjacency matrices
+    // are compressed").
+    let compressible = is_mask_name(&op.name) || op.name.starts_with('x');
+    if !compressible {
+        return dense;
+    }
+    let mut bytes = dense;
+    let mut eff_elems = elems;
+    if opts.symg && op.name.starts_with("norm") {
+        // triangular packing stores n(n+1)/2 of the n² entries
+        bytes /= 2;
+        eff_elems /= 2;
+    }
+    if opts.grasp {
+        let density = opts.mask_density.get(&op.name).copied().unwrap_or(0.01);
+        let zvc = eff_elems.div_ceil(8)
+            + (eff_elems as f64 * density).ceil() as usize * width;
+        // block-granular ZVC DMA engines cap out ~4x (Rhu et al., HPCA'18)
+        bytes = bytes.min(zvc.max(bytes / 4));
+    }
+    bytes
+}
+
+/// Simulate one inference of `g` on `hw`.
+pub fn simulate(g: &OpGraph, hw: &HardwareConfig, opts: &SimOptions) -> SimReport {
+    let placement = opts
+        .placement
+        .clone()
+        .unwrap_or_else(|| vec![Placement::Accel; g.len()]);
+    assert_eq!(placement.len(), g.len(), "placement length mismatch");
+
+    // SRAM budgeting: half of the total SRAM is pinning space; the
+    // streaming working set is one tile's SRAM (tensors are banked per
+    // tile, so an intermediate must fit a tile to stay resident).
+    let pin_budget = hw.sram_bytes() / 2;
+    let working_budget = hw.sram_bytes_per_tile;
+    let mut pinned: BTreeMap<usize, bool> = BTreeMap::new();
+    let mut pinned_bytes = 0usize;
+
+    let mut records = Vec::with_capacity(g.len());
+    let mut total_us = 0.0;
+    let mut energy_pj = 0.0;
+    let mut dma_bytes_total = 0usize;
+    let mut xfer_bytes_total = 0usize;
+
+    for id in g.topo_order() {
+        let op = &g.ops[id];
+        if op.kind == OpKind::Input {
+            continue;
+        }
+        let place = placement[id];
+        let dev = match place {
+            Placement::Accel => hw,
+            Placement::Host => &opts.host,
+        };
+
+        // --- compute ---
+        let mut co = CostOpts {
+            mask_sparsity_skip: 0.0,
+            dense_dtype_bytes: opts.dense_dtype_bytes,
+        };
+        if opts.grasp {
+            if matches!(op.kind, OpKind::MatMul | OpKind::MaskedMaxPool) {
+                let lhs = &g.ops[op.inputs[0]];
+                if lhs.kind == OpKind::Input && is_mask_name(&lhs.name) {
+                    let density =
+                        opts.mask_density.get(&lhs.name).copied().unwrap_or(0.01);
+                    // zero-skip pipelines keep fetch/decode busy: cap 75%
+                    co.mask_sparsity_skip = (1.0 - density).min(0.75);
+                }
+            }
+        }
+        let engine = op.kind.default_engine();
+        let c: OpCost = op_cost(g, id, dev, engine, co);
+
+        // --- memory traffic (roofline: DMA overlaps compute) ---
+        let mut stream_bytes = 0usize;
+        let mut xfer_us = 0.0;
+        let mut mem_pj = 0.0;
+        for &src in &op.inputs {
+            let sop = &g.ops[src];
+            let bytes_dense = sop.num_elements() * opts.width(sop.dtype);
+            if sop.kind == OpKind::Input {
+                if place == Placement::Host {
+                    continue; // host reads its own DRAM at host rates
+                }
+                let bytes = input_stream_bytes(sop, opts);
+                if *pinned.get(&src).unwrap_or(&false) {
+                    mem_pj += bytes as f64 * hw.pj_per_sram_byte;
+                    continue;
+                }
+                stream_bytes += bytes;
+                mem_pj += bytes as f64 * hw.pj_per_dram_byte;
+                let is_weightish = bytes <= 1 << 20; // weights, bias, vectors
+                let cacheable =
+                    is_weightish || (opts.cacheg && is_mask_name(&sop.name));
+                if cacheable && pinned_bytes + bytes <= pin_budget {
+                    pinned.insert(src, true);
+                    pinned_bytes += bytes;
+                }
+            } else if placement[src] != place {
+                // GraphSplit boundary: RAW dependency crosses devices
+                let link = match place {
+                    Placement::Accel => hw,
+                    Placement::Host => &opts.host,
+                };
+                xfer_us += link.xfer_setup_us
+                    + bytes_dense as f64 / (link.xfer_gbps * 1e3);
+                xfer_bytes_total += bytes_dense;
+                mem_pj += bytes_dense as f64 * hw.pj_per_dram_byte;
+            } else if place == Placement::Accel && bytes_dense > working_budget {
+                // Oversized intermediate: free when it flows inside a
+                // fused elementwise chain; otherwise it materializes in
+                // DRAM (one write at the barrier + one read here).
+                let host_fusible = |k: &OpKind| {
+                    hw.kind != DeviceKind::Npu
+                        && matches!(
+                            k,
+                            OpKind::Select
+                                | OpKind::Greater
+                                | OpKind::Softmax
+                                | OpKind::Div
+                                | OpKind::Elu
+                        )
+                };
+                let like_fusible =
+                    |k: &OpKind| is_fusible(k) || host_fusible(k);
+                let fused = like_fusible(&sop.kind)
+                    && (like_fusible(&op.kind)
+                        || is_reducer(&op.kind)
+                        || matches!(op.kind,
+                                    OpKind::MatMul | OpKind::QMatMul { .. }));
+                if fused {
+                    mem_pj += bytes_dense as f64 * hw.pj_per_sram_byte;
+                } else {
+                    stream_bytes += 2 * bytes_dense;
+                    mem_pj += 2.0 * bytes_dense as f64 * hw.pj_per_dram_byte;
+                }
+            } else {
+                mem_pj += bytes_dense as f64 * hw.pj_per_sram_byte;
+            }
+        }
+        let out_bytes = op.num_elements() * opts.width(op.dtype);
+        mem_pj += out_bytes as f64 * hw.pj_per_sram_byte;
+
+        let dma_us = if stream_bytes > 0 && place == Placement::Accel {
+            dma_bytes_total += stream_bytes;
+            hw.dma_setup_us + stream_bytes as f64 / (hw.dma_gbps * 1e3)
+        } else if stream_bytes > 0 {
+            // host-placed op touching big data: host memory bandwidth
+            stream_bytes as f64 / (opts.host.dma_gbps * 1e3)
+        } else {
+            0.0
+        };
+
+        // roofline: streaming overlaps compute; transfers serialize
+        let wall = c.us.max(dma_us) + xfer_us;
+        total_us += wall;
+        energy_pj += c.pj + mem_pj;
+        records.push(OpRecord {
+            id,
+            kind: op.kind.name(),
+            stage: op.stage,
+            engine: c.engine,
+            placement: place,
+            compute_us: c.us,
+            dma_us,
+            xfer_us,
+            wall_us: wall,
+            energy_pj: c.pj + mem_pj,
+            macs: c.macs,
+        });
+    }
+
+    SimReport {
+        graph_name: g.name.clone(),
+        device: hw.name.clone(),
+        records,
+        total_us,
+        energy_pj,
+        dma_bytes: dma_bytes_total,
+        xfer_bytes: xfer_bytes_total,
+    }
+}
+
+/// Simulate on a non-NPU device model (CPU/GPU rows of Figs. 22–23):
+/// everything placed on the device, no host split.
+pub fn simulate_device(g: &OpGraph, hw: &HardwareConfig) -> SimReport {
+    let opts = SimOptions {
+        // CPU runtimes execute FP32; GPUs use FP16.
+        dense_dtype_bytes: if hw.kind == DeviceKind::Cpu { 4 } else { 2 },
+        ..Default::default()
+    };
+    simulate(g, hw, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::build::{self, GatVariant, GnnDims};
+
+    fn dims() -> GnnDims {
+        // Fig. 4 scale: 1354 nodes, 5429 edges, 1433 → 64
+        GnnDims::fig4(1354, 5429)
+    }
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::npu_series2()
+    }
+
+    #[test]
+    fn fig4_gcn_preprocessing_dominates() {
+        let g = build::gcn_baseline(dims());
+        let r = simulate(&g, &hw(), &SimOptions::default());
+        let by_stage = r.by_stage();
+        let pre = by_stage.get("preprocess").copied().unwrap_or(0.0);
+        let frac = pre / r.total_us;
+        // paper Fig. 4: ~99% preprocessing for GraphConv
+        assert!(frac > 0.9, "preprocess fraction {frac:.3}");
+    }
+
+    #[test]
+    fn fig4_gat_preprocessing_large_but_not_total() {
+        let g = build::gat(dims(), GatVariant::Baseline);
+        let r = simulate(&g, &hw(), &SimOptions::default());
+        let by_stage = r.by_stage();
+        let pre = by_stage.get("preprocess").copied().unwrap_or(0.0);
+        let frac = pre / r.total_us;
+        // paper Fig. 4: ~55% for GraphAttn
+        assert!((0.3..0.8).contains(&frac), "preprocess fraction {frac:.3}");
+    }
+
+    #[test]
+    fn fig5_gat_compute_has_significant_dsp_share() {
+        let g = build::gat(dims(), GatVariant::Baseline);
+        let r = simulate(&g, &hw(), &SimOptions::default());
+        let dsp = r.dsp_fraction(Stage::Compute);
+        // paper Fig. 5: ~30% of GraphAttn compute on the DSP
+        assert!((0.15..0.6).contains(&dsp), "dsp fraction {dsp:.3}");
+    }
+
+    #[test]
+    fn fig5_gcn_compute_is_dpu_matmul() {
+        let g = build::gcn_stagr(dims(), "stagr");
+        let r = simulate(&g, &hw(), &SimOptions::default());
+        assert!(r.dsp_fraction(Stage::Compute) < 0.05);
+    }
+
+    #[test]
+    fn effop_speeds_up_gat() {
+        let d = dims();
+        let base = simulate(&build::gat(d, GatVariant::Baseline), &hw(),
+                            &SimOptions::default());
+        let eff = simulate(&build::gat(d, GatVariant::EffOp), &hw(),
+                           &SimOptions::default());
+        assert!(
+            eff.total_us < base.total_us,
+            "effop {} !< baseline {}",
+            eff.total_us,
+            base.total_us
+        );
+    }
+
+    #[test]
+    fn grax_speeds_up_effop_further() {
+        let d = dims();
+        let eff = simulate(&build::gat(d, GatVariant::EffOp), &hw(),
+                           &SimOptions::default());
+        let grax = simulate(&build::gat(d, GatVariant::Grax), &hw(),
+                            &SimOptions::default());
+        assert!(grax.total_us < eff.total_us,
+                "grax {} !< effop {}", grax.total_us, eff.total_us);
+    }
+
+    #[test]
+    fn grax3_beats_gather_baseline() {
+        let d = dims();
+        let base = simulate(&build::sage_max_baseline(d), &hw(),
+                            &SimOptions::default());
+        let gx = simulate(&build::sage_max_grax3(d), &hw(),
+                          &SimOptions::default());
+        assert!(gx.total_us < base.total_us,
+                "grax3 {} !< baseline {}", gx.total_us, base.total_us);
+    }
+
+    #[test]
+    fn quant_beats_fp16() {
+        let d = dims();
+        let fp = simulate(&build::gcn_stagr(d, "stagr"), &hw(),
+                          &SimOptions::default());
+        // QuantGr ships INT8 end to end: activations, weights and the
+        // quantized mask all halve again vs the FP16 datapath.
+        let mut qo = SimOptions::default();
+        qo.dense_dtype_bytes = 1;
+        let q = simulate(
+            &build::gcn_quant(d, build::QuantScales::default()),
+            &hw(),
+            &qo,
+        );
+        assert!(q.total_us < fp.total_us, "quant {} fp {}", q.total_us, fp.total_us);
+    }
+
+    #[test]
+    fn grasp_reduces_latency_and_dma() {
+        let d = dims();
+        let g = build::gcn_stagr(d, "stagr");
+        let base = simulate(&g, &hw(), &SimOptions::default());
+        let mut o = SimOptions::default();
+        o.grasp = true;
+        o.mask_density.insert("norm".into(), 0.004);
+        let sp = simulate(&g, &hw(), &o);
+        assert!(sp.total_us < base.total_us);
+        assert!(sp.dma_bytes < base.dma_bytes);
+    }
+
+    #[test]
+    fn cacheg_needs_compression_then_cuts_fetches() {
+        let d = GnnDims::model(2708, 5429, 1433, 7); // Cora scale, 2 layers
+        let g = build::gcn_stagr(d, "stagr");
+        // CacheG alone: the 29 MB norm cannot be pinned — no effect
+        let mut only_cache = SimOptions::default();
+        only_cache.cacheg = true;
+        let oc = simulate(&g, &hw(), &only_cache);
+        let base = simulate(&g, &hw(), &SimOptions::default());
+        assert!((oc.dma_bytes as f64 - base.dma_bytes as f64).abs() < 1e3);
+        // CacheG + GraSp + SymG: compressed mask fits and is fetched once
+        let mut full = SimOptions::optimized();
+        full.mask_density.insert("norm".into(), 0.002);
+        let f = simulate(&g, &hw(), &full);
+        assert!(f.dma_bytes < base.dma_bytes / 2,
+                "{} !< {}", f.dma_bytes, base.dma_bytes / 2);
+        assert!(f.total_us < base.total_us);
+    }
+
+    #[test]
+    fn symg_halves_norm_traffic() {
+        let d = dims();
+        let g = build::gcn_stagr(d, "stagr");
+        let base = simulate(&g, &hw(), &SimOptions::default());
+        let mut o = SimOptions::default();
+        o.symg = true;
+        let s = simulate(&g, &hw(), &o);
+        assert!(s.dma_bytes < base.dma_bytes);
+    }
+
+    #[test]
+    fn series2_beats_series1() {
+        let d = dims();
+        let g = build::gcn_stagr(d, "stagr");
+        let s2 = simulate(&g, &hw(), &SimOptions::default());
+        let s1 = simulate(&g, &HardwareConfig::npu_series1(),
+                          &SimOptions::default());
+        let ratio = s1.total_us / s2.total_us;
+        // paper Fig. 21: 1.6–1.7×, below the theoretical 2×
+        assert!(ratio > 1.0 && ratio < 2.0, "series ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn npu_beats_cpu_and_gpu_on_optimized_gcn() {
+        let d = dims();
+        let g = build::gcn_quant(d, build::QuantScales::default());
+        let mut o = SimOptions::optimized();
+        o.mask_density.insert("norm".into(), 0.004);
+        let npu = simulate(&g, &hw(), &o);
+        let plain = build::gcn_stagr(d, "stagr");
+        let cpu = simulate_device(&plain, &HardwareConfig::cpu());
+        let gpu = simulate_device(&plain, &HardwareConfig::gpu());
+        assert!(npu.total_us < gpu.total_us && gpu.total_us < cpu.total_us,
+                "npu {} gpu {} cpu {}", npu.total_us, gpu.total_us, cpu.total_us);
+    }
+
+    #[test]
+    fn npu_more_energy_efficient() {
+        let d = dims();
+        let g = build::gcn_quant(d, build::QuantScales::default());
+        let mut o = SimOptions::optimized();
+        o.mask_density.insert("norm".into(), 0.004);
+        let npu = simulate(&g, &hw(), &o);
+        let plain = build::gcn_stagr(d, "stagr");
+        let cpu = simulate_device(&plain, &HardwareConfig::cpu());
+        let gpu = simulate_device(&plain, &HardwareConfig::gpu());
+        assert!(npu.energy_pj < gpu.energy_pj && npu.energy_pj < cpu.energy_pj);
+    }
+
+    #[test]
+    fn graphsplit_placement_moves_preprocess_to_host() {
+        let g = build::gcn_baseline(dims());
+        let all_accel = simulate(&g, &hw(), &SimOptions::default());
+        let placement: Vec<Placement> = g
+            .ops
+            .iter()
+            .map(|op| {
+                if op.stage == Stage::Preprocess {
+                    Placement::Host
+                } else {
+                    Placement::Accel
+                }
+            })
+            .collect();
+        let mut o = SimOptions::default();
+        o.placement = Some(placement);
+        let split = simulate(&g, &hw(), &o);
+        assert!(split.total_us < all_accel.total_us,
+                "split {} !< accel {}", split.total_us, all_accel.total_us);
+        assert!(split.xfer_bytes > 0, "boundary crossing must be charged");
+    }
+
+    #[test]
+    fn report_shapes_are_consistent() {
+        let g = build::gcn_stagr(dims(), "stagr");
+        let r = simulate(&g, &hw(), &SimOptions::default());
+        let stage_sum: f64 = r.by_stage().values().sum();
+        assert!((stage_sum - r.total_us).abs() / r.total_us < 1e-9);
+        assert!(r.throughput() > 0.0);
+        assert!(r.energy_mj() > 0.0);
+    }
+}

@@ -1,0 +1,474 @@
+//! Reference executor for op graphs — the correctness oracle every
+//! rewrite pass is verified against, and the "CPU device" GraphSplit
+//! assigns control-heavy stages to.
+//!
+//! Numerics mirror `python/compile/kernels/ref.py` (LeakyReLU slope,
+//! NEG_MASK, sentinel-aware gathers, symmetric INT8 semantics) so results
+//! are comparable across all three layers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Op, OpGraph, OpKind};
+use crate::tensor::{Mat, Tensor};
+
+/// Runtime bindings for named graph inputs.
+pub type Bindings = BTreeMap<String, Tensor>;
+
+/// Execute the graph, returning the tensor of each output id.
+pub fn execute(g: &OpGraph, bindings: &Bindings) -> Result<Vec<Tensor>> {
+    let mut values: Vec<Option<Tensor>> = vec![None; g.ops.len()];
+    for id in g.topo_order() {
+        let op = &g.ops[id];
+        let val = eval_op(g, op, &values, bindings)
+            .with_context(|| format!("{} op#{id} {}", g.name, op.kind.name()))?;
+        values[id] = Some(val);
+    }
+    g.outputs
+        .iter()
+        .map(|&o| {
+            values[o]
+                .clone()
+                .ok_or_else(|| anyhow!("output {o} not computed"))
+        })
+        .collect()
+}
+
+/// Execute and return the single output as a matrix.
+pub fn execute_mat(g: &OpGraph, bindings: &Bindings) -> Result<Mat> {
+    let outs = execute(g, bindings)?;
+    outs[0].to_mat()
+}
+
+fn eval_op(_g: &OpGraph, op: &Op, values: &[Option<Tensor>],
+           bindings: &Bindings) -> Result<Tensor> {
+    let arg = |k: usize| -> &Tensor { values[op.inputs[k]].as_ref().unwrap() };
+    let mat = |k: usize| -> Result<Mat> { arg(k).to_mat() };
+
+    Ok(match &op.kind {
+        OpKind::Input => bindings
+            .get(&op.name)
+            .ok_or_else(|| anyhow!("unbound input {:?}", op.name))?
+            .clone(),
+
+        // ---- dense ----
+        OpKind::MatMul => Tensor::from_mat(&mat(0)?.matmul(&mat(1)?)),
+        OpKind::Transpose => Tensor::from_mat(&mat(0)?.transpose()),
+        OpKind::Add => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| a + b)?),
+        OpKind::Sub => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| a - b)?),
+        OpKind::Mul => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| a * b)?),
+        OpKind::Div => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| a / b)?),
+        OpKind::Scale(c) => Tensor::from_mat(&mat(0)?.map(|x| x * c)),
+        OpKind::AddConst(c) => Tensor::from_mat(&mat(0)?.map(|x| x + c)),
+        OpKind::Relu => Tensor::from_mat(&mat(0)?.map(|x| x.max(0.0))),
+        OpKind::LeakyRelu(s) => {
+            let s = *s;
+            Tensor::from_mat(&mat(0)?.map(move |x| if x > 0.0 { x } else { s * x }))
+        }
+        OpKind::Elu => Tensor::from_mat(&mat(0)?.map(|x| {
+            if x > 0.0 {
+                x
+            } else {
+                x.exp() - 1.0
+            }
+        })),
+        OpKind::Exp => Tensor::from_mat(&mat(0)?.map(f32::exp)),
+        OpKind::Sqrt => Tensor::from_mat(&mat(0)?.map(f32::sqrt)),
+        OpKind::Rsqrt => Tensor::from_mat(&mat(0)?.map(|x| 1.0 / x.sqrt())),
+        OpKind::Reciprocal => Tensor::from_mat(&mat(0)?.map(|x| 1.0 / x)),
+        OpKind::BroadcastCol => {
+            let a = mat(0)?;
+            let n = op.shape[1];
+            Tensor::from_mat(&Mat::from_fn(a.rows, n, |i, _| a[(i, 0)]))
+        }
+        OpKind::BroadcastRow => {
+            let a = mat(0)?;
+            let m = op.shape[0];
+            Tensor::from_mat(&Mat::from_fn(m, a.cols, |_, j| a[(0, j)]))
+        }
+        OpKind::ReduceSumRows => {
+            let a = mat(0)?;
+            Tensor::from_mat(&Mat::from_fn(a.rows, 1, |i, _| {
+                a.row(i).iter().sum()
+            }))
+        }
+        OpKind::ReduceMaxRows => {
+            let a = mat(0)?;
+            Tensor::from_mat(&Mat::from_fn(a.rows, 1, |i, _| {
+                a.row(i).iter().copied().fold(f32::NEG_INFINITY, f32::max)
+            }))
+        }
+        OpKind::MaskedMaxPool => {
+            let mask = mat(0)?;
+            let h = mat(1)?;
+            Tensor::from_mat(&Mat::from_fn(mask.rows, h.cols, |i, j| {
+                let mut best = f32::NEG_INFINITY;
+                for k in 0..mask.cols {
+                    best = best.max(mask[(i, k)] * h[(k, j)]);
+                }
+                best
+            }))
+        }
+
+        // ---- control-heavy ----
+        OpKind::Greater => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| {
+            if a > b {
+                1.0
+            } else {
+                0.0
+            }
+        })?),
+        OpKind::Select => {
+            let cond = mat(0)?;
+            let a = mat(1)?;
+            let b = mat(2)?;
+            if cond.shape() != a.shape() || a.shape() != b.shape() {
+                bail!("select shape mismatch");
+            }
+            Tensor::from_mat(&Mat::from_fn(a.rows, a.cols, |i, j| {
+                if cond[(i, j)] > 0.0 {
+                    a[(i, j)]
+                } else {
+                    b[(i, j)]
+                }
+            }))
+        }
+        OpKind::Softmax => {
+            let a = mat(0)?;
+            let mut out = Mat::zeros(a.rows, a.cols);
+            for i in 0..a.rows {
+                let row = a.row(i);
+                let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mut denom = 0.0f32;
+                // -inf rows (fully masked) → uniform-free zero row guard
+                for (o, &x) in out.row_mut(i).iter_mut().zip(row) {
+                    let e = if (x - m).is_nan() { 0.0 } else { (x - m).exp() };
+                    *o = e;
+                    denom += e;
+                }
+                if denom > 0.0 {
+                    for o in out.row_mut(i) {
+                        *o /= denom;
+                    }
+                }
+            }
+            Tensor::from_mat(&out)
+        }
+        OpKind::DegreesFromEdges => {
+            let edges = edges_of(arg(0))?;
+            let n = op.shape[0];
+            let mut deg = Mat::filled(n, 1, 1.0); // self loop
+            for (s, d) in edges {
+                deg[(s, 0)] += 1.0;
+                deg[(d, 0)] += 1.0;
+            }
+            Tensor::from_mat(&deg)
+        }
+        OpKind::AdjacencyFromEdges => {
+            let edges = edges_of(arg(0))?;
+            let n = op.shape[0];
+            let mut a = Mat::zeros(n, n);
+            for (s, d) in edges {
+                a[(s, d)] = 1.0;
+                a[(d, s)] = 1.0;
+            }
+            for i in 0..n {
+                a[(i, i)] = 1.0;
+            }
+            Tensor::from_mat(&a)
+        }
+        OpKind::ScatterAddEdges => {
+            let edges = edges_of(arg(0))?;
+            let x = mat(1)?;
+            let mut out = x.clone(); // self contribution
+            for (s, d) in edges {
+                for j in 0..x.cols {
+                    out[(d, j)] += x[(s, j)];
+                }
+                for j in 0..x.cols {
+                    out[(s, j)] += x[(d, j)];
+                }
+            }
+            Tensor::from_mat(&out)
+        }
+        OpKind::NeighborGatherMax => {
+            let (idx, w) = idx_of(arg(0))?;
+            let h = mat(1)?;
+            let n = h.rows;
+            Tensor::from_mat(&Mat::from_fn(n, h.cols, |i, j| {
+                let mut best = f32::NEG_INFINITY;
+                for k in 0..w {
+                    let t = idx[i * w + k] as usize;
+                    if t < n {
+                        best = best.max(h[(t, j)]);
+                    }
+                }
+                if best.is_finite() {
+                    best
+                } else {
+                    0.0
+                }
+            }))
+        }
+        OpKind::NeighborGatherMean => {
+            let (idx, w) = idx_of(arg(0))?;
+            let h = mat(1)?;
+            let n = h.rows;
+            Tensor::from_mat(&Mat::from_fn(n, h.cols, |i, j| {
+                let mut sum = 0.0f32;
+                let mut cnt = 0.0f32;
+                for k in 0..w {
+                    let t = idx[i * w + k] as usize;
+                    if t < n {
+                        sum += h[(t, j)];
+                        cnt += 1.0;
+                    }
+                }
+                sum / cnt.max(1.0)
+            }))
+        }
+
+        // ---- QuantGr ----
+        OpKind::Quantize { scale } => {
+            let s = *scale;
+            Tensor::from_mat(&mat(0)?.map(move |x| {
+                (x / s).round().clamp(-127.0, 127.0)
+            }))
+        }
+        OpKind::QMatMul { x_scale, w_scale } => {
+            // operands already hold rounded int values in f32; accumulate
+            // in f64 to model the INT32 accumulator exactly.
+            let a = mat(0)?;
+            let b = mat(1)?;
+            if a.cols != b.rows {
+                bail!("qmatmul dims");
+            }
+            let s = x_scale * w_scale;
+            let mut out = Mat::zeros(a.rows, b.cols);
+            for i in 0..a.rows {
+                for j in 0..b.cols {
+                    let mut acc = 0.0f64;
+                    for k in 0..a.cols {
+                        acc += a[(i, k)] as f64 * b[(k, j)] as f64;
+                    }
+                    out[(i, j)] = (acc as f32) * s;
+                }
+            }
+            Tensor::from_mat(&out)
+        }
+    })
+}
+
+/// Elementwise combine with Add-style broadcasting ((m,n) op (m,n)|(1,n)|(m,1)).
+fn broadcast_zip(a: &Mat, b: &Mat, f: impl Fn(f32, f32) -> f32) -> Result<Mat> {
+    if a.shape() == b.shape() {
+        return Ok(a.zip(b, f));
+    }
+    if b.rows == 1 && b.cols == a.cols {
+        return Ok(Mat::from_fn(a.rows, a.cols, |i, j| f(a[(i, j)], b[(0, j)])));
+    }
+    if b.cols == 1 && b.rows == a.rows {
+        return Ok(Mat::from_fn(a.rows, a.cols, |i, j| f(a[(i, j)], b[(i, 0)])));
+    }
+    bail!("broadcast mismatch {:?} vs {:?}", a.shape(), b.shape())
+}
+
+fn edges_of(t: &Tensor) -> Result<Vec<(usize, usize)>> {
+    let data = t.as_i32()?;
+    Ok(data
+        .chunks_exact(2)
+        .map(|c| (c[0] as usize, c[1] as usize))
+        .collect())
+}
+
+fn idx_of(t: &Tensor) -> Result<(&[i32], usize)> {
+    let w = *t
+        .shape()
+        .get(1)
+        .ok_or_else(|| anyhow!("index tensor must be 2-D"))?;
+    Ok((t.as_i32()?, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::Stage;
+    use crate::tensor::DType;
+
+    fn bind(pairs: &[(&str, Tensor)]) -> Bindings {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn matmul_add_relu_chain() {
+        let mut g = OpGraph::new("chain");
+        let x = g.input("x", &[2, 2], DType::F32, Stage::Compute);
+        let w = g.input("w", &[2, 2], DType::F32, Stage::Compute);
+        let b = g.input("b", &[1, 2], DType::F32, Stage::Compute);
+        let mm = g.op(OpKind::MatMul, &[x, w], &[2, 2], Stage::Compute);
+        let ad = g.op(OpKind::Add, &[mm, b], &[2, 2], Stage::Compute);
+        let rl = g.op(OpKind::Relu, &[ad], &[2, 2], Stage::Compute);
+        g.set_output(rl);
+        let out = execute_mat(
+            &g,
+            &bind(&[
+                ("x", Tensor::from_mat(&Mat::from_vec(2, 2, vec![1., 2., 3., 4.]))),
+                ("w", Tensor::from_mat(&Mat::eye(2))),
+                ("b", Tensor::from_mat(&Mat::from_vec(1, 2, vec![-2.5, 0.5]))),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(out.data, vec![0.0, 2.5, 0.5, 4.5]);
+    }
+
+    #[test]
+    fn unbound_input_errors() {
+        let mut g = OpGraph::new("unbound");
+        let x = g.input("x", &[1, 1], DType::F32, Stage::Compute);
+        g.set_output(x);
+        let err = execute(&g, &Bindings::new()).unwrap_err().to_string();
+        assert!(err.contains("unbound"), "{err}");
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut g = OpGraph::new("sm");
+        let x = g.input("x", &[2, 3], DType::F32, Stage::Compute);
+        let s = g.op(OpKind::Softmax, &[x], &[2, 3], Stage::Compute);
+        g.set_output(s);
+        let out = execute_mat(
+            &g,
+            &bind(&[("x", Tensor::from_mat(&Mat::from_vec(2, 3, vec![1., 2., 3., -1e9, 0., -1e9])))]),
+        )
+        .unwrap();
+        for i in 0..2 {
+            let s: f32 = out.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(out[(1, 1)] > 0.999); // masked entries ~0
+    }
+
+    #[test]
+    fn degrees_and_scatter_match_graph() {
+        let edges = Tensor::I32 { shape: vec![2, 2], data: vec![0, 1, 1, 2] };
+        let mut g = OpGraph::new("deg");
+        let e = g.input("edges", &[2, 2], DType::I32, Stage::Preprocess);
+        let d = g.op(OpKind::DegreesFromEdges, &[e], &[3, 1], Stage::Preprocess);
+        g.set_output(d);
+        let out = execute_mat(&g, &bind(&[("edges", edges.clone())])).unwrap();
+        assert_eq!(out.data, vec![2.0, 3.0, 2.0]);
+
+        let mut g2 = OpGraph::new("scatter");
+        let e = g2.input("edges", &[2, 2], DType::I32, Stage::Preprocess);
+        let x = g2.input("x", &[3, 1], DType::F32, Stage::Compute);
+        let s = g2.op(OpKind::ScatterAddEdges, &[e, x], &[3, 1], Stage::Compute);
+        g2.set_output(s);
+        let out = execute_mat(
+            &g2,
+            &bind(&[
+                ("edges", edges),
+                ("x", Tensor::from_mat(&Mat::from_vec(3, 1, vec![1., 10., 100.]))),
+            ]),
+        )
+        .unwrap();
+        // node0: self 1 + nbr 10 = 11; node1: 10+1+100=111; node2: 100+10=110
+        assert_eq!(out.data, vec![11.0, 111.0, 110.0]);
+    }
+
+    #[test]
+    fn neighbor_gather_max_and_mean_sentinel_aware() {
+        let idx = Tensor::I32 { shape: vec![3, 2], data: vec![0, 1, 1, 3, 3, 3] };
+        let h = Tensor::from_mat(&Mat::from_vec(3, 1, vec![1., -5., 2.]));
+        let mut g = OpGraph::new("gm");
+        let i = g.input("idx", &[3, 2], DType::I32, Stage::Compute);
+        let hh = g.input("h", &[3, 1], DType::F32, Stage::Compute);
+        let mx = g.op(OpKind::NeighborGatherMax, &[i, hh], &[3, 1], Stage::Compute);
+        g.set_output(mx);
+        let out = execute_mat(&g, &bind(&[("idx", idx.clone()), ("h", h.clone())])).unwrap();
+        assert_eq!(out.data, vec![1.0, -5.0, 0.0]); // row2 all-sentinel → 0
+
+        let mut g2 = OpGraph::new("gmean");
+        let i = g2.input("idx", &[3, 2], DType::I32, Stage::Compute);
+        let hh = g2.input("h", &[3, 1], DType::F32, Stage::Compute);
+        let mn = g2.op(OpKind::NeighborGatherMean, &[i, hh], &[3, 1], Stage::Compute);
+        g2.set_output(mn);
+        let out = execute_mat(&g2, &bind(&[("idx", idx), ("h", h)])).unwrap();
+        assert_eq!(out.data, vec![-2.0, -5.0, 0.0]);
+    }
+
+    #[test]
+    fn masked_maxpool_matches_definition() {
+        let mask = Tensor::from_mat(&Mat::from_vec(2, 3, vec![1., 0., 1., 0., 0., 0.]));
+        let h = Tensor::from_mat(&Mat::from_vec(3, 1, vec![4., 9., -2.]));
+        let mut g = OpGraph::new("mp");
+        let m = g.input("m", &[2, 3], DType::F32, Stage::Compute);
+        let hh = g.input("h", &[3, 1], DType::F32, Stage::Compute);
+        let p = g.op(OpKind::MaskedMaxPool, &[m, hh], &[2, 1], Stage::Compute);
+        g.set_output(p);
+        let out = execute_mat(&g, &bind(&[("m", mask), ("h", h)])).unwrap();
+        // row0: max(1*4, 0*9, 1*-2) = 4; row1: max(0,0,0) = 0
+        assert_eq!(out.data, vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn quantize_rounds_and_clamps() {
+        let mut g = OpGraph::new("q");
+        let x = g.input("x", &[1, 3], DType::F32, Stage::Compute);
+        let q = g.op(OpKind::Quantize { scale: 0.5 }, &[x], &[1, 3], Stage::Compute);
+        g.set_output(q);
+        let out = execute_mat(
+            &g,
+            &bind(&[("x", Tensor::from_mat(&Mat::from_vec(1, 3, vec![0.6, -100.0, 0.24])))]),
+        )
+        .unwrap();
+        assert_eq!(out.data, vec![1.0, -127.0, 0.0]);
+    }
+
+    #[test]
+    fn qmatmul_exact_large_k() {
+        // 127·127·4096 exceeds f32's 2^24 integer range; the f64
+        // accumulator must stay exact (mirrors the INT32 datapath).
+        let k = 4096;
+        let a = Mat::filled(1, k, 127.0);
+        let b = Mat::filled(k, 1, 127.0);
+        let mut g = OpGraph::new("qmm");
+        let x = g.input("x", &[1, k], DType::F32, Stage::Compute);
+        let w = g.input("w", &[k, 1], DType::F32, Stage::Compute);
+        let y = g.op(
+            OpKind::QMatMul { x_scale: 1.0, w_scale: 1.0 },
+            &[x, w],
+            &[1, 1],
+            Stage::Compute,
+        );
+        g.set_output(y);
+        let out = execute_mat(
+            &g,
+            &bind(&[("x", Tensor::from_mat(&a)), ("w", Tensor::from_mat(&b))]),
+        )
+        .unwrap();
+        assert_eq!(out.data[0], (127.0f64 * 127.0 * k as f64) as f32);
+    }
+
+    #[test]
+    fn select_and_greater() {
+        let mut g = OpGraph::new("sel");
+        let a = g.input("a", &[1, 3], DType::F32, Stage::Compute);
+        let b = g.input("b", &[1, 3], DType::F32, Stage::Compute);
+        let gt = g.op(OpKind::Greater, &[a, b], &[1, 3], Stage::Compute);
+        let sel = g.op(OpKind::Select, &[gt, a, b], &[1, 3], Stage::Compute);
+        g.set_output(sel);
+        let out = execute_mat(
+            &g,
+            &bind(&[
+                ("a", Tensor::from_mat(&Mat::from_vec(1, 3, vec![1., 5., 2.]))),
+                ("b", Tensor::from_mat(&Mat::from_vec(1, 3, vec![3., 4., 2.]))),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(out.data, vec![3.0, 5.0, 2.0]); // elementwise max via select
+    }
+}

@@ -1,0 +1,315 @@
+//! The op DAG: construction helpers, validation, topological order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{Op, OpKind, Stage};
+use crate::tensor::DType;
+
+/// Index of an op within its graph.
+pub type OpId = usize;
+
+/// A directed acyclic op graph. Ops are stored in insertion order, which
+/// is always a valid topological order (inputs must exist at insert time).
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub ops: Vec<Op>,
+    /// Ids of the graph outputs (usually one: the logits).
+    pub outputs: Vec<OpId>,
+    /// Human-readable graph name ("gcn_baseline", …).
+    pub name: String,
+}
+
+impl OpGraph {
+    pub fn new(name: impl Into<String>) -> OpGraph {
+        OpGraph { ops: Vec::new(), outputs: Vec::new(), name: name.into() }
+    }
+
+    /// Add an op; panics if an input id is out of range (construction bug).
+    pub fn push(&mut self, op: Op) -> OpId {
+        for &i in &op.inputs {
+            assert!(i < self.ops.len(), "op input {i} not yet defined");
+        }
+        self.ops.push(op);
+        self.ops.len() - 1
+    }
+
+    /// Declare a named runtime input.
+    pub fn input(&mut self, name: &str, shape: &[usize], dtype: DType,
+                 stage: Stage) -> OpId {
+        self.push(Op {
+            kind: OpKind::Input,
+            inputs: vec![],
+            shape: shape.to_vec(),
+            dtype,
+            stage,
+            name: name.to_string(),
+        })
+    }
+
+    /// Add a non-input op with an inferred f32 dtype.
+    pub fn op(&mut self, kind: OpKind, inputs: &[OpId], shape: &[usize],
+              stage: Stage) -> OpId {
+        self.push(Op {
+            kind,
+            inputs: inputs.to_vec(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            stage,
+            name: String::new(),
+        })
+    }
+
+    pub fn set_output(&mut self, id: OpId) {
+        self.outputs = vec![id];
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Ids in topological order (= insertion order by construction).
+    pub fn topo_order(&self) -> impl Iterator<Item = OpId> + '_ {
+        0..self.ops.len()
+    }
+
+    /// Named inputs in declaration order.
+    pub fn inputs(&self) -> Vec<(OpId, &str)> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| op.kind == OpKind::Input)
+            .map(|(i, op)| (i, op.name.as_str()))
+            .collect()
+    }
+
+    /// Consumers of each op (for liveness / rewrite bookkeeping).
+    pub fn consumers(&self) -> Vec<Vec<OpId>> {
+        let mut out = vec![Vec::new(); self.ops.len()];
+        for (id, op) in self.ops.iter().enumerate() {
+            for &src in &op.inputs {
+                out[src].push(id);
+            }
+        }
+        out
+    }
+
+    /// Count ops by mnemonic (Fig. 5 rows).
+    pub fn op_histogram(&self) -> BTreeMap<&'static str, usize> {
+        let mut h = BTreeMap::new();
+        for op in &self.ops {
+            if op.kind != OpKind::Input {
+                *h.entry(op.kind.name()).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    /// Structural validation: shapes consistent with op semantics.
+    /// Builders and rewrites are both checked by this in tests.
+    pub fn validate(&self) -> Result<()> {
+        if self.outputs.is_empty() {
+            bail!("{}: no outputs declared", self.name);
+        }
+        for (id, op) in self.ops.iter().enumerate() {
+            let fail = |msg: String| -> Result<()> {
+                bail!("{} op#{id} {}: {msg}", self.name, op.kind.name())
+            };
+            let in_shape =
+                |k: usize| -> &[usize] { &self.ops[op.inputs[k]].shape };
+            match &op.kind {
+                OpKind::Input => {
+                    if op.name.is_empty() {
+                        return fail("unnamed input".into());
+                    }
+                }
+                OpKind::MatMul | OpKind::QMatMul { .. } => {
+                    let (a, b) = (in_shape(0), in_shape(1));
+                    if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+                        return fail(format!("bad matmul {a:?} @ {b:?}"));
+                    }
+                    if op.shape != vec![a[0], b[1]] {
+                        return fail(format!(
+                            "output {:?} != {:?}",
+                            op.shape,
+                            [a[0], b[1]]
+                        ));
+                    }
+                }
+                OpKind::Transpose => {
+                    let a = in_shape(0);
+                    if op.shape != vec![a[1], a[0]] {
+                        return fail(format!("transpose {a:?} → {:?}", op.shape));
+                    }
+                }
+                OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div => {
+                    let (a, b) = (in_shape(0), in_shape(1));
+                    let ok = a == b
+                        || (b.len() == 2 && b[0] == 1 && b[1] == a[1])
+                        || (b.len() == 2 && b[1] == 1 && b[0] == a[0]);
+                    if !ok {
+                        return fail(format!("bad broadcast {a:?} vs {b:?}"));
+                    }
+                    if op.shape != a {
+                        return fail("output must match lhs".into());
+                    }
+                }
+                OpKind::BroadcastCol => {
+                    let a = in_shape(0);
+                    if a[1] != 1 || op.shape[0] != a[0] {
+                        return fail(format!("broadcast-col {a:?} → {:?}", op.shape));
+                    }
+                }
+                OpKind::BroadcastRow => {
+                    let a = in_shape(0);
+                    if a[0] != 1 || op.shape[1] != a[1] {
+                        return fail(format!("broadcast-row {a:?} → {:?}", op.shape));
+                    }
+                }
+                OpKind::ReduceSumRows | OpKind::ReduceMaxRows => {
+                    let a = in_shape(0);
+                    if op.shape != vec![a[0], 1] {
+                        return fail(format!("reduce {a:?} → {:?}", op.shape));
+                    }
+                }
+                OpKind::Softmax => {
+                    if op.shape != in_shape(0) {
+                        return fail("softmax shape change".into());
+                    }
+                }
+                OpKind::Select => {
+                    if op.inputs.len() != 3 {
+                        return fail("select needs cond,a,b".into());
+                    }
+                }
+                OpKind::MaskedMaxPool => {
+                    let (m, h) = (in_shape(0), in_shape(1));
+                    if m[1] != h[0] || op.shape != vec![m[0], h[1]] {
+                        return fail(format!("maxpool {m:?} x {h:?} → {:?}", op.shape));
+                    }
+                }
+                OpKind::NeighborGatherMax | OpKind::NeighborGatherMean => {
+                    let (idx, h) = (in_shape(0), in_shape(1));
+                    if idx[0] != h[0] || op.shape != vec![h[0], h[1]] {
+                        return fail(format!("gather {idx:?} x {h:?} → {:?}", op.shape));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.ops.len() {
+                bail!("{}: output id {o} out of range", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MAC count of dense matmuls (roofline math for DESIGN.md §8).
+    pub fn matmul_macs(&self) -> usize {
+        self.ops
+            .iter()
+            .filter_map(|op| match op.kind {
+                OpKind::MatMul | OpKind::QMatMul { .. } => {
+                    let k = self.ops[op.inputs[0]].shape[1];
+                    Some(op.num_elements() * k)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn tiny() -> OpGraph {
+        let mut g = OpGraph::new("tiny");
+        let x = g.input("x", &[4, 3], DType::F32, Stage::Compute);
+        let w = g.input("w", &[3, 2], DType::F32, Stage::Compute);
+        let y = g.op(OpKind::MatMul, &[x, w], &[4, 2], Stage::Compute);
+        g.set_output(y);
+        g
+    }
+
+    #[test]
+    fn valid_graph_passes() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn inputs_enumerated_in_order() {
+        let g = tiny();
+        let names: Vec<&str> = g.inputs().into_iter().map(|(_, n)| n).collect();
+        assert_eq!(names, vec!["x", "w"]);
+    }
+
+    #[test]
+    fn bad_matmul_rejected() {
+        let mut g = OpGraph::new("bad");
+        let x = g.input("x", &[4, 3], DType::F32, Stage::Compute);
+        let w = g.input("w", &[5, 2], DType::F32, Stage::Compute);
+        let y = g.op(OpKind::MatMul, &[x, w], &[4, 2], Stage::Compute);
+        g.set_output(y);
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("matmul"), "{err}");
+    }
+
+    #[test]
+    fn missing_output_rejected() {
+        let mut g = OpGraph::new("noout");
+        g.input("x", &[1, 1], DType::F32, Stage::Compute);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_panics() {
+        let mut g = OpGraph::new("fwd");
+        g.op(OpKind::Relu, &[3], &[1, 1], Stage::Compute);
+    }
+
+    #[test]
+    fn consumers_tracked() {
+        let g = tiny();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![2]); // x feeds the matmul
+        assert_eq!(cons[2], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn histogram_skips_inputs() {
+        let h = tiny().op_histogram();
+        assert_eq!(h.get("MatMul"), Some(&1));
+        assert_eq!(h.get("Input"), None);
+    }
+
+    #[test]
+    fn matmul_macs_counted() {
+        assert_eq!(tiny().matmul_macs(), 4 * 2 * 3);
+    }
+
+    #[test]
+    fn broadcast_validation() {
+        let mut g = OpGraph::new("bc");
+        let x = g.input("x", &[4, 3], DType::F32, Stage::Compute);
+        let b = g.input("b", &[1, 3], DType::F32, Stage::Compute);
+        let y = g.op(OpKind::Add, &[x, b], &[4, 3], Stage::Compute);
+        g.set_output(y);
+        g.validate().unwrap();
+
+        let mut bad = OpGraph::new("bc2");
+        let x = bad.input("x", &[4, 3], DType::F32, Stage::Compute);
+        let b = bad.input("b", &[1, 2], DType::F32, Stage::Compute);
+        let y = bad.op(OpKind::Add, &[x, b], &[4, 3], Stage::Compute);
+        bad.set_output(y);
+        assert!(bad.validate().is_err());
+    }
+}

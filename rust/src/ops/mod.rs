@@ -1,0 +1,250 @@
+//! Op-level IR — the OpenVINO-like layer GraNNite's techniques operate on.
+//!
+//! The paper's optimizations are (a) rewrites over an inference op graph
+//! (EffOp, GrAx1-3, PreG folding) and (b) placement decisions over the
+//! same graph (GraphSplit, baseline DPU/DSP mapping). This module gives
+//! them a concrete substrate:
+//!
+//! - [`OpKind`]/[`Op`]/[`graph::OpGraph`]: a typed DAG with shapes, dtypes
+//!   and pipeline-stage tags,
+//! - [`build`]: builders emitting the baseline and optimized graphs for
+//!   GCN / GAT / GraphSAGE,
+//! - [`rewrite`]: the GraNNite passes,
+//! - [`exec`]: an f32 reference executor used as the correctness oracle
+//!   for every pass (mirroring `python/compile/kernels/ref.py` numerics).
+
+pub mod build;
+pub mod exec;
+pub mod graph;
+pub mod rewrite;
+
+pub use graph::{OpGraph, OpId};
+
+/// GrAx1 additive mask constant (matches kernels/ref.py NEG_MASK).
+pub const NEG_MASK: f32 = -1.0e9;
+
+/// GAT LeakyReLU slope (matches kernels/ref.py LEAKY_SLOPE).
+pub const LEAKY_SLOPE: f32 = 0.2;
+
+/// Where an op sits in the GNN pipeline (paper Fig. 3) — Fig. 4's
+/// breakdown is "preprocessing vs GNN compute" over this tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Graph preprocessing: edge-list → adjacency/degree/norm structures.
+    Preprocess,
+    /// Aggregation + combination (the iterated GNN layers).
+    Compute,
+    /// Final decode (softmax/classification head).
+    Decode,
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Stage::Preprocess => write!(f, "preprocess"),
+            Stage::Compute => write!(f, "compute"),
+            Stage::Decode => write!(f, "decode"),
+        }
+    }
+}
+
+/// Which NPU engine class an op belongs to under the *default* (out-of-
+/// the-box) mapping: data-parallel ops go to the DPU, control-heavy ops
+/// to the DSP (paper Figs. 4–5). EffOp/GrAx change the graph so that the
+/// same classification lands more work on the DPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Engine {
+    Dpu,
+    Dsp,
+}
+
+/// The op vocabulary. Dense ops carry no parameters beyond their shapes;
+/// composite irregular ops (`ScatterAddEdges`, `NeighborGather*`, …)
+/// stand for the fused control-heavy subgraphs the NPU compiler maps to
+/// the DSP, and are the units Fig. 5 reports.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Runtime input, bound by name at execution.
+    Input,
+
+    // ---- dense, DPU-class ----
+    /// (m,k) @ (k,n) → (m,n).
+    MatMul,
+    /// (m,n) → (n,m).
+    Transpose,
+    /// Elementwise add; rhs may be (1,n) (row broadcast) or (m,1) (col).
+    Add,
+    /// Elementwise subtract (same broadcast rules as Add).
+    Sub,
+    /// Elementwise multiply (same broadcast rules).
+    Mul,
+    /// Elementwise divide (same broadcast rules).
+    Div,
+    /// x * c.
+    Scale(f32),
+    /// x + c.
+    AddConst(f32),
+    /// max(x, 0).
+    Relu,
+    /// LeakyReLU with slope.
+    LeakyRelu(f32),
+    /// ELU (alpha = 1).
+    Elu,
+    /// e^x.
+    Exp,
+    /// √x.
+    Sqrt,
+    /// 1/√x.
+    Rsqrt,
+    /// 1/x — used to turn an (n,1) division into a cheap reciprocal plus
+    /// a DPU broadcast-multiply (the EffOp softmax decomposition).
+    Reciprocal,
+    /// (m,1) → (m,n).
+    BroadcastCol,
+    /// (1,n) → (m,n).
+    BroadcastRow,
+    /// Row-wise sum: (m,n) → (m,1).
+    ReduceSumRows,
+    /// Row-wise max: (m,n) → (m,1).
+    ReduceMaxRows,
+    /// GrAx3: (mask (m,n), h (n,f)) → (m,f), out[i,j] = max_k mask[i,k]·h[k,j].
+    MaskedMaxPool,
+
+    // ---- control-heavy, DSP-class under the default mapping ----
+    /// a > b → 1.0/0.0 elementwise.
+    Greater,
+    /// (cond, a, b) → cond ? a : b.
+    Select,
+    /// Row-wise numerically-stable softmax.
+    Softmax,
+    /// (edges (m,2)) → (n,1) degrees including self loop.
+    DegreesFromEdges,
+    /// (edges (m,2)) → (n,n) dense A + I.
+    AdjacencyFromEdges,
+    /// (edges (m,2), x (n,f)) → (n,f): Σ_{j∈N(i)} x_j + x_i.
+    ScatterAddEdges,
+    /// (idx (n,k), h (n,f)) → (n,f): max over gathered rows (sentinel n
+    /// excluded; all-sentinel rows yield 0). The sequential DSP mapping
+    /// of SAGE-max.
+    NeighborGatherMax,
+    /// Same gather, mean over valid slots.
+    NeighborGatherMean,
+
+    // ---- QuantGr ----
+    /// Symmetric static quantization to int8 (value semantics: round +
+    /// clamp; carried as f32 in the reference executor).
+    Quantize { scale: f32 },
+    /// INT8×INT8→INT32→FP32 MatMul with the two static scales.
+    QMatMul { x_scale: f32, w_scale: f32 },
+}
+
+impl OpKind {
+    /// Default engine placement (the out-of-the-box NPU mapping).
+    pub fn default_engine(&self) -> Engine {
+        match self {
+            OpKind::Greater
+            | OpKind::Select
+            | OpKind::Softmax
+            | OpKind::DegreesFromEdges
+            | OpKind::AdjacencyFromEdges
+            | OpKind::ScatterAddEdges
+            | OpKind::NeighborGatherMax
+            | OpKind::NeighborGatherMean
+            | OpKind::Sqrt
+            | OpKind::Rsqrt
+            | OpKind::Reciprocal
+            | OpKind::Div
+            | OpKind::Elu => Engine::Dsp,
+            _ => Engine::Dpu,
+        }
+    }
+
+    /// Short mnemonic for tables/figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "Input",
+            OpKind::MatMul => "MatMul",
+            OpKind::Transpose => "Transpose",
+            OpKind::Add => "Add",
+            OpKind::Sub => "Sub",
+            OpKind::Mul => "Mul",
+            OpKind::Div => "Div",
+            OpKind::Scale(_) => "Scale",
+            OpKind::AddConst(_) => "AddConst",
+            OpKind::Relu => "Relu",
+            OpKind::LeakyRelu(_) => "LeakyRelu",
+            OpKind::Elu => "Elu",
+            OpKind::Exp => "Exp",
+            OpKind::Sqrt => "Sqrt",
+            OpKind::Rsqrt => "Rsqrt",
+            OpKind::Reciprocal => "Reciprocal",
+            OpKind::BroadcastCol => "Broadcast",
+            OpKind::BroadcastRow => "Broadcast",
+            OpKind::ReduceSumRows => "ReduceSum",
+            OpKind::ReduceMaxRows => "ReduceMax",
+            OpKind::MaskedMaxPool => "MaxPool",
+            OpKind::Greater => "Greater",
+            OpKind::Select => "Select",
+            OpKind::Softmax => "Softmax",
+            OpKind::DegreesFromEdges => "Degrees",
+            OpKind::AdjacencyFromEdges => "BuildAdj",
+            OpKind::ScatterAddEdges => "Scatter",
+            OpKind::NeighborGatherMax => "GatherMax",
+            OpKind::NeighborGatherMean => "GatherMean",
+            OpKind::Quantize { .. } => "Quantize",
+            OpKind::QMatMul { .. } => "QMatMul",
+        }
+    }
+}
+
+/// One node of the op DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    /// Producer ids, in positional argument order.
+    pub inputs: Vec<OpId>,
+    /// Output shape (rank ≤ 2 throughout the GNN graphs).
+    pub shape: Vec<usize>,
+    /// Output dtype.
+    pub dtype: crate::tensor::DType,
+    /// Pipeline stage for Fig. 4-style breakdowns.
+    pub stage: Stage,
+    /// Debug/bind name ("x", "norm", "w1", …) — required for Input ops.
+    pub name: String,
+}
+
+impl Op {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.num_elements() * self.dtype.size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_placement_matches_paper_fig5() {
+        // Fig. 5: Select/Greater/Softmax/Elu run on the DSP out of the box;
+        // MatMul runs on the DPU.
+        assert_eq!(OpKind::Select.default_engine(), Engine::Dsp);
+        assert_eq!(OpKind::Greater.default_engine(), Engine::Dsp);
+        assert_eq!(OpKind::Softmax.default_engine(), Engine::Dsp);
+        assert_eq!(OpKind::Elu.default_engine(), Engine::Dsp);
+        assert_eq!(OpKind::MatMul.default_engine(), Engine::Dpu);
+        assert_eq!(OpKind::Mul.default_engine(), Engine::Dpu);
+        assert_eq!(OpKind::MaskedMaxPool.default_engine(), Engine::Dpu);
+    }
+
+    #[test]
+    fn preg_targets_are_dsp_ops() {
+        // PreG exists to keep sqrt/div off the NPU's DSP.
+        assert_eq!(OpKind::Sqrt.default_engine(), Engine::Dsp);
+        assert_eq!(OpKind::Rsqrt.default_engine(), Engine::Dsp);
+        assert_eq!(OpKind::Div.default_engine(), Engine::Dsp);
+    }
+}

@@ -1,0 +1,436 @@
+//! GraNNite optimization passes as structural IR rewrites.
+//!
+//! The builders in [`super::build`] can emit any variant directly; these
+//! passes exist because the *paper's* framework takes a deployed baseline
+//! graph and transforms it (Fig. 6: "model optimization" happens between
+//! the pre-trained model and the NPU blob). Every pass is verified against
+//! the reference executor in tests: EffOp and GrAx3 (on non-negative
+//! data) are exact; GrAx1 is an approximation with a provably tiny
+//! post-softmax drift.
+//!
+//! Pass framework: a rewrite walks the op vec in topological order and
+//! emits ops into a fresh graph through an id remap, optionally replacing
+//! recognized patterns. Dead ops (e.g. the orphaned `Select` operands)
+//! are dropped by a final liveness sweep.
+
+use anyhow::{bail, Result};
+
+use super::{Op, OpGraph, OpId, OpKind, Stage, NEG_MASK};
+use crate::tensor::DType;
+
+/// Remove ops whose value cannot reach any output (post-rewrite cleanup).
+pub fn eliminate_dead(g: &OpGraph) -> OpGraph {
+    let mut live = vec![false; g.ops.len()];
+    let mut stack: Vec<OpId> = g.outputs.clone();
+    while let Some(id) = stack.pop() {
+        if !live[id] {
+            live[id] = true;
+            stack.extend_from_slice(&g.ops[id].inputs);
+        }
+    }
+    // keep *named inputs* alive? No: an input no longer consumed should
+    // disappear from the signature too (GrAx drops `edges` entirely).
+    let mut remap = vec![usize::MAX; g.ops.len()];
+    let mut out = OpGraph::new(g.name.clone());
+    for (id, op) in g.ops.iter().enumerate() {
+        if live[id] {
+            let mut new_op = op.clone();
+            new_op.inputs = op.inputs.iter().map(|&i| remap[i]).collect();
+            remap[id] = out.push(new_op);
+        }
+    }
+    out.outputs = g.outputs.iter().map(|&o| remap[o]).collect();
+    out
+}
+
+/// EffOp (paper Fig. 12): replace `Select(mask, e, big_negative)` with
+/// `e*mask + (1-mask)*NEG_MASK`, and monolithic `Softmax` with the
+/// decomposed reduction form — moving the work from the DSP to the DPU.
+pub fn effop(g: &OpGraph) -> Result<OpGraph> {
+    let mut out = OpGraph::new(format!("{}+effop", g.name));
+    let mut remap: Vec<OpId> = vec![usize::MAX; g.ops.len()];
+    let mut changed = false;
+
+    for (id, op) in g.ops.iter().enumerate() {
+        let mapped: Vec<OpId> = op.inputs.iter().map(|&i| remap[i]).collect();
+        let new_id = match &op.kind {
+            OpKind::Select if is_neg_const(g, op.inputs[2]) => {
+                changed = true;
+                let mask = mapped[0];
+                let e = mapped[1];
+                let sh = &op.shape;
+                let st = op.stage;
+                let on = out.op(OpKind::Mul, &[e, mask], sh, st);
+                let zero = out.op(OpKind::Scale(0.0), &[mask], sh, st);
+                let ones = out.op(OpKind::AddConst(1.0), &[zero], sh, st);
+                let comp = out.op(OpKind::Sub, &[ones, mask], sh, st);
+                let off = out.op(OpKind::Scale(NEG_MASK), &[comp], sh, st);
+                out.op(OpKind::Add, &[on, off], sh, st)
+            }
+            OpKind::Softmax => {
+                changed = true;
+                let x = mapped[0];
+                let (n, st) = (op.shape[0], op.stage);
+                let sh = &op.shape;
+                let mx = out.op(OpKind::ReduceMaxRows, &[x], &[n, 1], st);
+                let sub = out.op(OpKind::Sub, &[x, mx], sh, st);
+                let ex = out.op(OpKind::Exp, &[sub], sh, st);
+                let sm = out.op(OpKind::ReduceSumRows, &[ex], &[n, 1], st);
+                let rc = out.op(OpKind::Reciprocal, &[sm], &[n, 1], st);
+                out.op(OpKind::Mul, &[ex, rc], sh, st)
+            }
+            _ => out.push(Op { inputs: mapped, ..op.clone() }),
+        };
+        remap[id] = new_id;
+    }
+    if !changed {
+        bail!("effop: no Select/Softmax patterns found in {}", g.name);
+    }
+    out.outputs = g.outputs.iter().map(|&o| remap[o]).collect();
+    Ok(eliminate_dead(&out))
+}
+
+/// GrAx1 (paper Fig. 16): replace the *multiplicative* masking composite
+/// `e*mask + (1-mask)*NEG` (EffOp's form) with a single additive-mask op
+/// `e + neg_bias`, where `neg_bias` becomes a new graph input prepared on
+/// the CPU. Also rewrites a baseline `Select` directly if present.
+pub fn grax1(g: &OpGraph) -> Result<OpGraph> {
+    // work on the EffOp form: find Add(Mul(e,mask), Scale(NEG, Sub(..)))
+    let mut out = OpGraph::new(format!("{}+grax1", g.name));
+    let mut remap: Vec<OpId> = vec![usize::MAX; g.ops.len()];
+    let mut neg_bias_input: Option<OpId> = None;
+    let mut changed = false;
+
+    for (id, op) in g.ops.iter().enumerate() {
+        let mapped: Vec<OpId> = op.inputs.iter().map(|&i| remap[i]).collect();
+        let replaced = match &op.kind {
+            OpKind::Add => match_mask_mul_add(g, op).map(|e_src| {
+                let nb = *neg_bias_input.get_or_insert_with(|| {
+                    out.input("neg_bias", &op.shape, DType::F32, Stage::Compute)
+                });
+                out.op(OpKind::Add, &[remap[e_src], nb], &op.shape, op.stage)
+            }),
+            OpKind::Select if is_neg_const(g, op.inputs[2]) => {
+                let nb = *neg_bias_input.get_or_insert_with(|| {
+                    out.input("neg_bias", &op.shape, DType::F32, Stage::Compute)
+                });
+                Some(out.op(OpKind::Add, &[mapped[1], nb], &op.shape, op.stage))
+            }
+            _ => None,
+        };
+        remap[id] = match replaced {
+            Some(new_id) => {
+                changed = true;
+                new_id
+            }
+            None => out.push(Op { inputs: mapped, ..op.clone() }),
+        };
+    }
+    if !changed {
+        bail!("grax1: no masking pattern found in {}", g.name);
+    }
+    out.outputs = g.outputs.iter().map(|&o| remap[o]).collect();
+    Ok(eliminate_dead(&out))
+}
+
+/// GrAx2 (paper Fig. 17): rewrite `Transpose(BroadcastCol(t))` — an n×n
+/// data transpose — into `BroadcastRow(Transpose(t))`, transposing only
+/// the (n,1) vector before broadcasting.
+pub fn grax2(g: &OpGraph) -> Result<OpGraph> {
+    let mut out = OpGraph::new(format!("{}+grax2", g.name));
+    let mut remap: Vec<OpId> = vec![usize::MAX; g.ops.len()];
+    let mut changed = false;
+
+    for (id, op) in g.ops.iter().enumerate() {
+        let mapped: Vec<OpId> = op.inputs.iter().map(|&i| remap[i]).collect();
+        let new_id = match &op.kind {
+            OpKind::Transpose
+                if g.ops[op.inputs[0]].kind == OpKind::BroadcastCol
+                    && op.shape.len() == 2
+                    && op.shape[0] == op.shape[1] =>
+            {
+                changed = true;
+                let bc = &g.ops[op.inputs[0]];
+                let vec_src = remap[bc.inputs[0]]; // the (n,1) vector
+                let n = op.shape[0];
+                let st = op.stage;
+                let tt = out.op(OpKind::Transpose, &[vec_src], &[1, n], st);
+                out.op(OpKind::BroadcastRow, &[tt], &[n, n], st)
+            }
+            _ => out.push(Op { inputs: mapped, ..op.clone() }),
+        };
+        remap[id] = new_id;
+    }
+    if !changed {
+        bail!("grax2: no Transpose(BroadcastCol) pattern in {}", g.name);
+    }
+    out.outputs = g.outputs.iter().map(|&o| remap[o]).collect();
+    Ok(eliminate_dead(&out))
+}
+
+/// GrAx3 (paper Fig. 18): replace the sequential `NeighborGatherMax`
+/// with `MaskedMaxPool` over a dense sampled-adjacency mask input.
+pub fn grax3(g: &OpGraph) -> Result<OpGraph> {
+    let mut out = OpGraph::new(format!("{}+grax3", g.name));
+    let mut remap: Vec<OpId> = vec![usize::MAX; g.ops.len()];
+    let mut mask_input: Option<OpId> = None;
+    let mut changed = false;
+
+    for (id, op) in g.ops.iter().enumerate() {
+        let mapped: Vec<OpId> = op.inputs.iter().map(|&i| remap[i]).collect();
+        let new_id = match &op.kind {
+            OpKind::NeighborGatherMax => {
+                changed = true;
+                let n = op.shape[0];
+                let mask = *mask_input.get_or_insert_with(|| {
+                    out.input("mask", &[n, n], DType::F32, Stage::Compute)
+                });
+                out.op(OpKind::MaskedMaxPool, &[mask, mapped[1]], &op.shape, op.stage)
+            }
+            _ => out.push(Op { inputs: mapped, ..op.clone() }),
+        };
+        remap[id] = new_id;
+    }
+    if !changed {
+        bail!("grax3: no NeighborGatherMax in {}", g.name);
+    }
+    out.outputs = g.outputs.iter().map(|&o| remap[o]).collect();
+    Ok(eliminate_dead(&out))
+}
+
+/// True if op `id` computes a constant ≤ NEG_MASK (the −∞ stand-in fed to
+/// baseline Select masking): matches `AddConst(NEG)(Scale(0)(…))`.
+fn is_neg_const(g: &OpGraph, id: OpId) -> bool {
+    match &g.ops[id].kind {
+        OpKind::AddConst(c) if *c <= NEG_MASK => {
+            matches!(g.ops[g.ops[id].inputs[0]].kind, OpKind::Scale(s) if s == 0.0)
+        }
+        _ => false,
+    }
+}
+
+/// Match EffOp's masking composite rooted at an `Add`:
+/// `Add(Mul(e, mask), Scale(NEG)(Sub(ones, mask)))` → returns the raw
+/// (unmasked) score op `e`.
+fn match_mask_mul_add(g: &OpGraph, add: &Op) -> Option<OpId> {
+    if add.inputs.len() != 2 {
+        return None;
+    }
+    let (lhs, rhs) = (&g.ops[add.inputs[0]], &g.ops[add.inputs[1]]);
+    let mul = if lhs.kind == OpKind::Mul { lhs } else { return None };
+    let scale_ok = matches!(rhs.kind, OpKind::Scale(s) if s <= NEG_MASK);
+    if !scale_ok {
+        return None;
+    }
+    let sub = &g.ops[rhs.inputs[0]];
+    if sub.kind != OpKind::Sub {
+        return None;
+    }
+    Some(mul.inputs[0]) // e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::ops::build::{gat, gcn_baseline, sage_max_baseline, GatVariant, GnnDims};
+    use crate::ops::exec::{execute_mat, Bindings};
+    use crate::tensor::{Mat, Tensor};
+    use crate::util::Rng;
+
+    fn dims() -> GnnDims {
+        GnnDims { n: 14, m: 20, f: 10, hidden: 6, classes: 3, k: 4, layers: 2 }
+    }
+
+    fn test_graph() -> Graph {
+        let mut rng = Rng::new(5);
+        let edges: Vec<(u32, u32)> = (0..20)
+            .map(|_| (rng.usize(14) as u32, rng.usize(14) as u32))
+            .collect();
+        Graph::new(14, &edges)
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 2.0 - 1.0) as f32)
+    }
+
+    /// Bindings for a GAT graph (whatever inputs it declares).
+    fn gat_bindings(g: &OpGraph, graph: &Graph, d: GnnDims) -> Bindings {
+        let mut rng = Rng::new(77);
+        let x = rand_mat(&mut rng, d.n, d.f);
+        let mut b = Bindings::new();
+        let mut weights: std::collections::BTreeMap<&str, Mat> = Default::default();
+        for l in 1..=2 {
+            let (inw, outw) = if l == 1 { (d.f, d.hidden) } else { (d.hidden, d.classes) };
+            weights.insert(if l == 1 { "w1" } else { "w2" }, rand_mat(&mut rng, inw, outw));
+            weights.insert(if l == 1 { "a1_src" } else { "a2_src" }, rand_mat(&mut rng, outw, 1));
+            weights.insert(if l == 1 { "a1_dst" } else { "a2_dst" }, rand_mat(&mut rng, outw, 1));
+            weights.insert(if l == 1 { "b1" } else { "b2" }, rand_mat(&mut rng, 1, outw));
+        }
+        for (_, name) in g.inputs() {
+            let t = match name {
+                "edges" => {
+                    let mut data = Vec::new();
+                    for &(s, dd) in graph.edges() {
+                        data.push(s as i32);
+                        data.push(dd as i32);
+                    }
+                    // pad the edge input to the declared m with repeats
+                    while data.len() < d.m * 2 {
+                        data.push(graph.edges()[0].0 as i32);
+                        data.push(graph.edges()[0].1 as i32);
+                    }
+                    data.truncate(d.m * 2);
+                    Tensor::I32 { shape: vec![d.m, 2], data }
+                }
+                "x" => Tensor::from_mat(&x),
+                "neg_bias" => Tensor::from_mat(&graph.neg_bias(d.n)),
+                other => Tensor::from_mat(&weights[other]),
+            };
+            b.insert(name.to_string(), t);
+        }
+        b
+    }
+
+    #[test]
+    fn effop_pass_is_exact_on_gat() {
+        let d = dims();
+        let graph = test_graph();
+        // use the real edge count so padding doesn't duplicate edges
+        let d = GnnDims { m: graph.num_edges(), ..d };
+        let base = gat(d, GatVariant::Baseline);
+        let rewritten = effop(&base).unwrap();
+        rewritten.validate().unwrap();
+        let b = gat_bindings(&base, &graph, d);
+        let want = execute_mat(&base, &b).unwrap();
+        let got = execute_mat(&rewritten, &b).unwrap();
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "effop drift {}",
+            got.max_abs_diff(&want)
+        );
+        // and the DSP ops are gone
+        let h = rewritten.op_histogram();
+        assert!(h.get("Select").is_none());
+        assert!(h.get("Softmax").is_none());
+    }
+
+    #[test]
+    fn grax1_close_to_effop() {
+        let d = dims();
+        let graph = test_graph();
+        let d = GnnDims { m: graph.num_edges(), ..d };
+        let eff = effop(&gat(d, GatVariant::Baseline)).unwrap();
+        let gx = grax1(&eff).unwrap();
+        gx.validate().unwrap();
+        // grax graph needs neg_bias instead of edges
+        let b_eff = gat_bindings(&eff, &graph, d);
+        let mut b_gx = gat_bindings(&gx, &graph, d);
+        b_gx.insert(
+            "neg_bias".into(),
+            Tensor::from_mat(&graph.neg_bias(d.n)),
+        );
+        let want = execute_mat(&eff, &b_eff).unwrap();
+        let got = execute_mat(&gx, &b_gx).unwrap();
+        assert!(
+            got.max_abs_diff(&want) < 1e-2,
+            "grax1 drift {}",
+            got.max_abs_diff(&want)
+        );
+        // BuildAdj is dead after the rewrite (mask no longer consumed)
+        assert!(gx.op_histogram().get("BuildAdj").is_none());
+    }
+
+    #[test]
+    fn grax2_preserves_numerics_exactly() {
+        let d = dims();
+        let graph = test_graph();
+        let d = GnnDims { m: graph.num_edges(), ..d };
+        let base = gat(d, GatVariant::Baseline);
+        let rewritten = grax2(&base).unwrap();
+        rewritten.validate().unwrap();
+        let b = gat_bindings(&base, &graph, d);
+        let want = execute_mat(&base, &b).unwrap();
+        let got = execute_mat(&rewritten, &b).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-5);
+        // no more n×n transposes
+        let max_t = rewritten
+            .ops
+            .iter()
+            .filter(|op| op.kind == OpKind::Transpose)
+            .map(|op| op.num_elements())
+            .max()
+            .unwrap();
+        assert_eq!(max_t, d.n);
+    }
+
+    #[test]
+    fn grax3_exact_on_nonneg_features() {
+        let d = dims();
+        let graph = test_graph();
+        let base = sage_max_baseline(d);
+        let rewritten = grax3(&base).unwrap();
+        rewritten.validate().unwrap();
+
+        let mut rng = Rng::new(3);
+        let idx_rows = graph.sampled_neighbors(d.k - 1, 7);
+        let mut idx_data = Vec::new();
+        for row in &idx_rows {
+            for &j in row {
+                idx_data.push(j as i32);
+            }
+        }
+        let mut bind = Bindings::new();
+        // non-negative features → GrAx3 exact (bag-of-words regime)
+        bind.insert(
+            "x".into(),
+            Tensor::from_mat(&Mat::from_fn(d.n, d.f, |_, _| rng.f32())),
+        );
+        bind.insert(
+            "nbr_idx".into(),
+            Tensor::I32 { shape: vec![d.n, d.k], data: idx_data },
+        );
+        bind.insert(
+            "mask".into(),
+            Tensor::from_mat(&graph.sampled_adjacency(d.k - 1, 7, d.n)),
+        );
+        for l in 1..=2usize {
+            let (inw, outw) = if l == 1 { (d.f, d.hidden) } else { (d.hidden, d.classes) };
+            bind.insert(format!("w{l}_self"), Tensor::from_mat(&rand_mat(&mut rng, inw, outw)));
+            bind.insert(format!("w{l}_neigh"), Tensor::from_mat(&rand_mat(&mut rng, inw, outw)));
+            bind.insert(format!("b{l}"), Tensor::from_mat(&rand_mat(&mut rng, 1, outw)));
+        }
+        let want = execute_mat(&base, &bind).unwrap();
+        let got = execute_mat(&rewritten, &bind).unwrap();
+        // layer-2 features may be negative after combination, so GrAx3's
+        // clipping can differ: compare predictions like the paper does.
+        let agree = want
+            .argmax_rows()
+            .iter()
+            .zip(got.argmax_rows())
+            .filter(|(a, b)| **a == *b)
+            .count();
+        assert!(agree >= (d.n * 9) / 10, "agreement {agree}/{}", d.n);
+    }
+
+    #[test]
+    fn passes_reject_graphs_without_patterns() {
+        let g = gcn_baseline(dims());
+        assert!(effop(&g).is_err()); // gcn baseline has no Select/Softmax
+        assert!(grax3(&g).is_err());
+        assert!(grax2(&g).is_err());
+    }
+
+    #[test]
+    fn dead_elimination_drops_unused_inputs() {
+        let mut g = OpGraph::new("dead");
+        let x = g.input("x", &[2, 2], DType::F32, Stage::Compute);
+        let _unused = g.input("unused", &[9, 9], DType::F32, Stage::Compute);
+        let y = g.op(OpKind::Relu, &[x], &[2, 2], Stage::Compute);
+        g.set_output(y);
+        let clean = eliminate_dead(&g);
+        assert_eq!(clean.len(), 2);
+        assert_eq!(clean.inputs().len(), 1);
+        clean.validate().unwrap();
+    }
+}

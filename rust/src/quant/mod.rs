@@ -1,0 +1,182 @@
+//! QuantGr: symmetric static INT8 quantization (paper §IV-C).
+//!
+//! Mirrors `python/compile/quantize.py`: scales are computed once during
+//! calibration (zero point 0, equal positive/negative range), weights ship
+//! pre-quantized in the artifacts, activations are quantized in-graph with
+//! the baked static scales. This module provides the rust-side calibration
+//! (for models quantized on the fly by the coordinator) and the error
+//! telemetry the accuracy bench reports.
+
+use crate::tensor::Mat;
+
+/// Symmetric scale mapping |x| ≤ absmax onto int8 [−127, 127].
+pub fn scale_for(absmax: f32) -> f32 {
+    if absmax > 0.0 {
+        absmax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Calibration: absmax scale of a tensor, optionally percentile-clipped.
+pub fn calibrate(m: &Mat, percentile: f64) -> f32 {
+    assert!((0.0..=100.0).contains(&percentile));
+    if m.data.is_empty() {
+        return 1.0;
+    }
+    if percentile >= 100.0 {
+        let absmax = m.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        return scale_for(absmax);
+    }
+    let mut mags: Vec<f32> = m.data.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((percentile / 100.0) * (mags.len() - 1) as f64).round() as usize;
+    scale_for(mags[idx.min(mags.len() - 1)])
+}
+
+/// Quantize to int8 with round-to-nearest and clamping.
+pub fn quantize(m: &Mat, scale: f32) -> Vec<i8> {
+    m.data
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &[i8], scale: f32, rows: usize, cols: usize) -> Mat {
+    assert_eq!(q.len(), rows * cols);
+    Mat::from_vec(rows, cols, q.iter().map(|&v| v as f32 * scale).collect())
+}
+
+/// INT8 × INT8 → INT32 → FP32 MatMul (the QuantGr datapath, exact
+/// integer accumulation as on the DPU).
+pub fn qmatmul(xq: &[i8], wq: &[i8], m: usize, k: usize, n: usize,
+               x_scale: f32, w_scale: f32) -> Mat {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    let mut out = Mat::zeros(m, n);
+    let s = x_scale * w_scale;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for kk in 0..k {
+                acc += xq[i * k + kk] as i32 * wq[kk * n + j] as i32;
+            }
+            out[(i, j)] = acc as f32 * s;
+        }
+    }
+    out
+}
+
+/// Quantization-error telemetry for EXPERIMENTS.md / the accuracy bench.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantError {
+    pub max_abs_err: f32,
+    pub rel_err: f32,
+    /// Fraction of rows whose argmax (prediction) is unchanged.
+    pub argmax_agreement: f64,
+}
+
+pub fn quant_error(reference: &Mat, quantized: &Mat) -> QuantError {
+    assert_eq!(reference.shape(), quantized.shape());
+    let max_abs_err = reference.max_abs_diff(quantized);
+    let denom = reference.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let a = reference.argmax_rows();
+    let b = quantized.argmax_rows();
+    let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+    QuantError {
+        max_abs_err,
+        rel_err: if denom > 0.0 { max_abs_err / denom } else { 0.0 },
+        argmax_agreement: agree as f64 / a.len().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::Rng;
+
+    fn rand_mat(seed: u64, r: usize, c: usize, scale: f32) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| ((rng.f64() * 2.0 - 1.0) as f32) * scale)
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let m = rand_mat(1, 13, 7, 3.0);
+        let s = calibrate(&m, 100.0);
+        let q = quantize(&m, s);
+        let back = dequantize(&q, s, 13, 7);
+        assert!(m.max_abs_diff(&back) <= s / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn symmetric_range_hit() {
+        let m = Mat::from_vec(1, 2, vec![-5.0, 5.0]);
+        let s = calibrate(&m, 100.0);
+        let q = quantize(&m, s);
+        assert_eq!(q, vec![-127, 127]);
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut data = vec![0.01f32; 999];
+        data.push(100.0); // outlier
+        let m = Mat::from_vec(1, 1000, data);
+        let full = calibrate(&m, 100.0);
+        let clipped = calibrate(&m, 99.0);
+        assert!(clipped < full / 100.0);
+    }
+
+    #[test]
+    fn qmatmul_matches_f32_for_exact_ints() {
+        // integers ≤127 with scale 1 are exactly representable
+        let xq: Vec<i8> = vec![1, 2, 3, 4, 5, 6];
+        let wq: Vec<i8> = vec![1, 0, 0, 1, 1, 1];
+        let out = qmatmul(&xq, &wq, 2, 3, 2, 1.0, 1.0);
+        // [[1,2,3],[4,5,6]] @ [[1,0],[0,1],[1,1]] = [[4,5],[10,11]]
+        assert_eq!(out.data, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn int32_accumulation_exact_at_large_k() {
+        let k = 4096;
+        let xq = vec![127i8; k];
+        let wq = vec![127i8; k];
+        let out = qmatmul(&xq, &wq, 1, k, 1, 1.0, 1.0);
+        assert_eq!(out.data[0], (127i64 * 127 * k as i64) as f32);
+    }
+
+    #[test]
+    fn quant_error_telemetry() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Mat::from_vec(2, 2, vec![0.9, 0.0, 0.0, 1.1]);
+        let e = quant_error(&a, &b);
+        assert!((e.max_abs_err - 0.1).abs() < 1e-6);
+        assert_eq!(e.argmax_agreement, 1.0);
+    }
+
+    #[test]
+    fn prop_quantized_matmul_close_to_f32() {
+        forall("qmatmul close to f32", 20, |g| {
+            let m = g.dim(12);
+            let k = g.dim(24);
+            let n = g.dim(8);
+            let x = Mat::from_vec(m, k, g.vec_f32(m * k));
+            let w = Mat::from_vec(k, n, g.vec_f32(k * n));
+            let sx = calibrate(&x, 100.0);
+            let sw = calibrate(&w, 100.0);
+            let got = qmatmul(&quantize(&x, sx), &quantize(&w, sw), m, k, n, sx, sw);
+            let want = x.matmul(&w);
+            // error bound: k * (sx/2 * |w|max + sw/2 * |x|max) loose form
+            let bound = (k as f32) * (sx + sw) * 3.0 + 1e-3;
+            assert!(
+                got.max_abs_diff(&want) < bound,
+                "err {} bound {}",
+                got.max_abs_diff(&want),
+                bound
+            );
+        });
+    }
+}

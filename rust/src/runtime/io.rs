@@ -1,0 +1,254 @@
+//! `.gnnt` tensor-container IO — the rust mirror of
+//! `python/compile/gnnt.py` (keep the two in sync; format doc there).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"GNNT";
+const VERSION: u32 = 1;
+
+/// Read all tensors from a `.gnnt` file.
+pub fn read_gnnt(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_gnnt(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse a `.gnnt` byte stream.
+pub fn parse_gnnt(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut r = Cursor { buf: bytes, pos: 0 };
+    if r.take(4)? != MAGIC.as_slice() {
+        bail!("bad magic");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let count = r.u32()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = r.u16()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .context("tensor name not utf-8")?
+            .to_string();
+        let dtype = r.u8()?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let n: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+        let tensor = match dtype {
+            0 => {
+                let raw = r.take(n * 4)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::F32 { shape, data }
+            }
+            1 => {
+                let raw = r.take(n)?;
+                Tensor::I8 { shape, data: raw.iter().map(|&b| b as i8).collect() }
+            }
+            2 => {
+                let raw = r.take(n * 4)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::I32 { shape, data }
+            }
+            3 => {
+                let raw = r.take(n)?;
+                Tensor::U8 { shape, data: raw.to_vec() }
+            }
+            4 => {
+                let raw = r.take(n * 2)?;
+                let data = raw
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect();
+                Tensor::F16 { shape, data }
+            }
+            other => bail!("unknown dtype code {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+/// Write tensors to a `.gnnt` file (used by rust-side tests/tools).
+pub fn write_gnnt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let code: u8 = match t {
+            Tensor::F32 { .. } => 0,
+            Tensor::I8 { .. } => 1,
+            Tensor::I32 { .. } => 2,
+            Tensor::U8 { .. } => 3,
+            Tensor::F16 { .. } => 4,
+        };
+        f.write_all(&[code, t.shape().len() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I8 { data, .. } => {
+                let raw: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+                f.write_all(&raw)?;
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::U8 { data, .. } => f.write_all(data)?,
+            Tensor::F16 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated file: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(tensors: BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "gnnt_{}_{:?}.gnnt",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        write_gnnt(&path, &tensors).unwrap();
+        let back = read_gnnt(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        back
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut t = BTreeMap::new();
+        t.insert("f".into(), Tensor::F32 { shape: vec![2, 2], data: vec![1.5, -2.0, 0.0, 3.25] });
+        t.insert("i8".into(), Tensor::I8 { shape: vec![3], data: vec![-127, 0, 127] });
+        t.insert("i32".into(), Tensor::I32 { shape: vec![2], data: vec![-5, 100000] });
+        t.insert("u8".into(), Tensor::U8 { shape: vec![4], data: vec![0, 1, 1, 0] });
+        t.insert("f16".into(), Tensor::F16 { shape: vec![1], data: vec![0x3C00] });
+        let back = roundtrip(t.clone());
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_shape_roundtrip() {
+        let mut t = BTreeMap::new();
+        t.insert("s".into(), Tensor::F32 { shape: vec![], data: vec![3.25] });
+        assert_eq!(roundtrip(t.clone()), t);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let err = parse_gnnt(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap_err();
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend(99u32.to_le_bytes());
+        bytes.extend(0u32.to_le_bytes());
+        assert!(parse_gnnt(&bytes).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let mut t = BTreeMap::new();
+        t.insert("x".into(), Tensor::F32 { shape: vec![8], data: vec![1.0; 8] });
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("trunc_{}.gnnt", std::process::id()));
+        write_gnnt(&path, &t).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::remove_file(&path).ok();
+        assert!(parse_gnnt(&bytes).unwrap_err().to_string().contains("truncated"));
+    }
+
+    #[test]
+    fn negative_i8_survives() {
+        let mut t = BTreeMap::new();
+        t.insert("q".into(), Tensor::I8 { shape: vec![2], data: vec![-1, -128] });
+        assert_eq!(roundtrip(t.clone()), t);
+    }
+
+    #[test]
+    fn reads_python_written_artifact_if_present() {
+        // integration with the real AOT output (skipped when absent)
+        let path = std::path::Path::new("artifacts/cora.gnnt");
+        if !path.exists() {
+            return;
+        }
+        let t = read_gnnt(path).unwrap();
+        let feats = t.get("features").unwrap();
+        assert_eq!(feats.shape(), &[2708, 1433]);
+        assert_eq!(t.get("labels").unwrap().shape(), &[2708]);
+        assert_eq!(t.get("edges").unwrap().shape(), &[5429, 2]);
+        assert_eq!(t.get("nbr_idx").unwrap().shape(), &[2708, 11]);
+    }
+}

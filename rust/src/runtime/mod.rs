@@ -1,0 +1,297 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path — the rust half of the HLO-text interchange
+//! (see /opt/xla-example/README.md for the gotchas this encodes).
+//!
+//! One [`Runtime`] owns the PJRT CPU client, the artifact manifest, and a
+//! compile cache (one compiled executable per model variant, as the
+//! architecture prescribes). Python never runs here.
+
+pub mod io;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Document;
+use crate::tensor::Tensor;
+
+/// Metadata for one AOT artifact (a `[artifact.*]` manifest section).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub model: String,
+    pub dataset: String,
+    /// Input binding names, in parameter order.
+    pub inputs: Vec<String>,
+    /// Input shapes (dims per input, same order).
+    pub shapes: Vec<Vec<usize>>,
+    /// Input dtypes ("float32", "int8", …), same order.
+    pub dtypes: Vec<String>,
+}
+
+/// The PJRT-backed model runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: BTreeMap<String, ArtifactInfo>,
+    cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Dataset + weights sections from the manifest (typed lookups).
+    pub manifest: Document,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (requires `make artifacts` output).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.toml");
+        let manifest = Document::load(&manifest_path)
+            .context("artifacts missing — run `make artifacts` first")?;
+        let mut artifacts = BTreeMap::new();
+        for section in manifest.sections_under("artifact") {
+            let name = section.trim_start_matches("artifact.").to_string();
+            let rel = manifest.str_of(section, "path")?;
+            let inputs: Vec<String> = manifest
+                .str_of(section, "inputs")?
+                .split(',')
+                .map(|s| s.to_string())
+                .collect();
+            let shapes: Vec<Vec<usize>> = manifest
+                .str_of(section, "shapes")?
+                .split(';')
+                .map(|s| {
+                    s.split('x')
+                        .filter(|p| !p.is_empty())
+                        .map(|p| p.parse::<usize>().map_err(|e| anyhow!("{e}")))
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let dtypes: Vec<String> = manifest
+                .str_of(section, "dtypes")?
+                .split(',')
+                .map(|s| s.to_string())
+                .collect();
+            if inputs.len() != shapes.len() || inputs.len() != dtypes.len() {
+                bail!("manifest {section}: inputs/shapes/dtypes disagree");
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    path: dir.join(rel),
+                    model: manifest.str_of(section, "model")?.to_string(),
+                    dataset: manifest.str_of(section, "dataset")?.to_string(),
+                    inputs,
+                    shapes,
+                    dtypes,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            artifacts,
+            cache: Mutex::new(BTreeMap::new()),
+            manifest,
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})",
+                                   self.artifact_names()))
+    }
+
+    /// Load + compile an artifact (cached after the first call).
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.artifact(name)?;
+        // HLO *text* interchange: xla_extension 0.5.1 rejects jax≥0.5
+        // serialized protos (64-bit instruction ids); the text parser
+        // reassigns ids and round-trips cleanly.
+        let proto = xla::HloModuleProto::from_text_file(
+            info.path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on positional tensors. Returns the first
+    /// output (the logits) as a Tensor.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let info = self.artifact(name)?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs ({:?}), got {}",
+                info.inputs.len(),
+                info.inputs,
+                inputs.len()
+            );
+        }
+        for (i, t) in inputs.iter().enumerate() {
+            if t.shape() != info.shapes[i].as_slice() {
+                bail!(
+                    "{name}: input {} ({}) shape {:?} != expected {:?}",
+                    i,
+                    info.inputs[i],
+                    t.shape(),
+                    info.shapes[i]
+                );
+            }
+        }
+        let exe = self.load(name)?;
+        let literals = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = out.to_tuple1().context("unwrapping result tuple")?;
+        literal_to_tensor(&out)
+    }
+
+    /// Execute with named bindings, ordered per the manifest.
+    pub fn execute_named(&self, name: &str,
+                         bindings: &BTreeMap<String, Tensor>) -> Result<Tensor> {
+        let info = self.artifact(name)?;
+        let inputs = info
+            .inputs
+            .iter()
+            .map(|n| {
+                bindings
+                    .get(n)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("{name}: missing binding {n:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.execute(name, &inputs)
+    }
+}
+
+/// Convert a [`Tensor`] into a PJRT literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        Tensor::I8 { shape, data } => {
+            let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8,
+                shape,
+                &bytes,
+            )?
+        }
+        Tensor::U8 { shape, data } => {
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                shape,
+                data,
+            )?
+        }
+        Tensor::F16 { shape, data } => {
+            let bytes: Vec<u8> =
+                data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F16,
+                shape,
+                &bytes,
+            )?
+        }
+    })
+}
+
+/// Convert a PJRT literal back into a [`Tensor`] (f32/i32 outputs).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+        xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        if p.join("manifest.toml").exists() {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_artifacts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(&dir).unwrap();
+        let names = rt.artifact_names();
+        assert!(names.iter().any(|n| n.starts_with("gcn_stagr_cora")), "{names:?}");
+        assert!(names.iter().any(|n| n.starts_with("gat_grax_cora")));
+        let info = rt.artifact("gcn_stagr_cora").unwrap();
+        assert_eq!(info.inputs[0], "norm");
+        assert_eq!(info.shapes[0], vec![2708, 2708]);
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_options() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::open(&dir).unwrap();
+        let err = rt.artifact("nonexistent").unwrap_err().to_string();
+        assert!(err.contains("unknown artifact"));
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_f32() {
+        let t = Tensor::F32 { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] };
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_i32() {
+        let t = Tensor::I32 { shape: vec![4], data: vec![-1, 0, 7, 100] };
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_tensor(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn i8_literal_created_with_correct_shape() {
+        let t = Tensor::I8 { shape: vec![2, 2], data: vec![-1, 2, -3, 4] };
+        let lit = tensor_to_literal(&t).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+    }
+}

@@ -1,0 +1,413 @@
+//! Dense tensor substrate shared by the graph, ops, quant and runtime
+//! layers: a row-major f32 matrix (`Mat`) plus a small dtype-tagged tensor
+//! (`Tensor`) mirroring the `.gnnt` container's dtypes.
+
+use anyhow::{bail, Result};
+
+/// Element types supported across the stack (kept in sync with
+/// `python/compile/gnnt.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+    U8,
+    /// Raw IEEE f16 bits (stored as u16; the simulator only needs sizes).
+    F16,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+            DType::F16 => "f16",
+        }
+    }
+}
+
+/// Row-major f32 matrix — the workhorse of the reference executor and the
+/// CPU-side (GraphSplit) preprocessing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Mat {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Matrix product `self @ rhs` (blocked, see `matmul_into`).
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        self.matmul_into(rhs, &mut out);
+        out
+    }
+
+    /// `out = self @ rhs`, cache-blocked ikj loop (the hot path of the
+    /// reference executor; see EXPERIMENTS.md §Perf for tuning history).
+    pub fn matmul_into(&self, rhs: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, rhs.rows, "matmul inner dims");
+        assert_eq!((out.rows, out.cols), (self.rows, rhs.cols));
+        out.data.fill(0.0);
+        const BK: usize = 64;
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in 0..m {
+                let a_row = self.row(i);
+                let out_row = out.row_mut(i);
+                for kk in k0..k1 {
+                    let a = a_row[kk];
+                    if a == 0.0 {
+                        continue; // GraSp-style zero skip; norm rows are ~99.8% zero
+                    }
+                    let b_row = &rhs.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        out_row[j] += a * b_row[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise combine with another matrix of identical shape.
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "zip shape mismatch");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// Add a row vector to every row (broadcast bias add).
+    pub fn add_row_broadcast(&self, bias: &[f32]) -> Mat {
+        assert_eq!(bias.len(), self.cols, "bias width");
+        let mut out = self.clone();
+        for i in 0..out.rows {
+            for (x, b) in out.row_mut(i).iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+        out
+    }
+
+    /// Fraction of exactly-zero entries (GraSp telemetry).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64
+            / self.data.len() as f64
+    }
+
+    /// Max |a - b| against another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Row-wise argmax (predictions from logits).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// A dtype-tagged tensor (arbitrary rank) — the runtime-facing type that
+/// mirrors the `.gnnt` container and PJRT literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I8 { shape: Vec<usize>, data: Vec<i8> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+    F16 { shape: Vec<usize>, data: Vec<u16> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. }
+            | Tensor::I8 { shape, .. }
+            | Tensor::I32 { shape, .. }
+            | Tensor::U8 { shape, .. }
+            | Tensor::F16 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I8 { .. } => DType::I8,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U8 { .. } => DType::U8,
+            Tensor::F16 { .. } => DType::F16,
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.num_elements() * self.dtype().size()
+    }
+
+    pub fn from_mat(m: &Mat) -> Tensor {
+        Tensor::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn from_vec_f32(data: Vec<f32>) -> Tensor {
+        Tensor::F32 { shape: vec![data.len()], data }
+    }
+
+    /// View as a 2-D f32 matrix.
+    pub fn to_mat(&self) -> Result<Mat> {
+        match self {
+            Tensor::F32 { shape, data } if shape.len() == 2 => {
+                Ok(Mat::from_vec(shape[0], shape[1], data.clone()))
+            }
+            Tensor::F32 { shape, data } if shape.len() == 1 => {
+                Ok(Mat::from_vec(1, shape[0], data.clone()))
+            }
+            other => bail!(
+                "expected 1/2-D f32 tensor, got {:?} {:?}",
+                other.dtype(),
+                other.shape()
+            ),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            Tensor::I8 { data, .. } => Ok(data),
+            other => bail!("expected i8 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            Tensor::U8 { data, .. } => Ok(data),
+            other => bail!("expected u8 tensor, got {:?}", other.dtype()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(5, 7, |i, j| (i * 7 + j) as f32);
+        let c = Mat::eye(5).matmul(&a);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        // blocked kernel vs naive triple loop on odd shapes
+        let a = Mat::from_fn(13, 67, |i, j| ((i * 31 + j * 7) % 11) as f32 - 5.0);
+        let b = Mat::from_fn(67, 9, |i, j| ((i * 13 + j * 3) % 7) as f32 - 3.0);
+        let got = a.matmul(&b);
+        let mut want = Mat::zeros(13, 9);
+        for i in 0..13 {
+            for j in 0..9 {
+                let mut s = 0.0;
+                for k in 0..67 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                want[(i, j)] = s;
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn add_row_broadcast() {
+        let a = Mat::zeros(2, 3);
+        let b = a.add_row_broadcast(&[1.0, 2.0, 3.0]);
+        assert_eq!(b.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let m = Mat::from_vec(1, 4, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(m.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let m = Mat::from_vec(2, 3, vec![0.1, 0.9, 0.0, 3.0, -1.0, 2.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn tensor_roundtrip_mat() {
+        let m = Mat::from_fn(3, 4, |i, j| (i + j) as f32);
+        let t = Tensor::from_mat(&m);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.to_mat().unwrap(), m);
+        assert_eq!(t.bytes(), 48);
+    }
+
+    #[test]
+    fn tensor_dtype_mismatch_errors() {
+        let t = Tensor::I32 { shape: vec![2], data: vec![1, 2] };
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn matmul_dim_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        a.matmul(&b);
+    }
+}

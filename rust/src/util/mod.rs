@@ -1,0 +1,83 @@
+//! Small substrates the offline environment forces us to own: a PRNG,
+//! a property-testing harness, report tables, and timing helpers.
+
+pub mod propcheck;
+pub mod rng;
+pub mod table;
+pub mod timing;
+
+pub use rng::Rng;
+pub use table::Table;
+
+/// Ceiling division for scheduling/tiling math.
+#[inline]
+pub fn cdiv(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `m` (NodePad-style capacity math).
+#[inline]
+pub fn round_up(a: usize, m: usize) -> usize {
+    cdiv(a, m) * m
+}
+
+/// Human-readable byte count for logs and reports.
+pub fn human_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable duration from microseconds.
+pub fn human_us(us: f64) -> String {
+    if us < 1e3 {
+        format!("{us:.1} µs")
+    } else if us < 1e6 {
+        format!("{:.2} ms", us / 1e3)
+    } else {
+        format!("{:.3} s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdiv_rounds_up() {
+        assert_eq!(cdiv(10, 3), 4);
+        assert_eq!(cdiv(9, 3), 3);
+        assert_eq!(cdiv(1, 128), 1);
+    }
+
+    #[test]
+    fn round_up_multiples() {
+        assert_eq!(round_up(2708, 128), 2816);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(0, 128), 0);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert!(human_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+
+    #[test]
+    fn human_us_scales() {
+        assert_eq!(human_us(12.0), "12.0 µs");
+        assert_eq!(human_us(1500.0), "1.50 ms");
+        assert_eq!(human_us(2_000_000.0), "2.000 s");
+    }
+}

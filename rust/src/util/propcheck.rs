@@ -1,0 +1,168 @@
+//! A minimal property-testing harness (proptest is unavailable offline).
+//!
+//! Deliberately small: deterministic seeds, N cases per property, and a
+//! failure report that prints the seed + case index so any counterexample
+//! is replayable with `case_rng(seed, i)`. No shrinking — generators are
+//! kept small-biased instead, which in practice finds the same bugs.
+//!
+//! ```no_run
+//! use grannite::util::propcheck::{forall, Gen};
+//! forall("sum is commutative", 64, |g| {
+//!     let a = g.small_f32();
+//!     let b = g.small_f32();
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Human-readable trace of the values drawn, printed on failure.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(rng: Rng) -> Self {
+        Gen { rng, trace: Vec::new() }
+    }
+
+    fn note(&mut self, label: &str, v: impl std::fmt::Debug) {
+        if self.trace.len() < 64 {
+            self.trace.push(format!("{label}={v:?}"));
+        }
+    }
+
+    /// Dimension-like size, biased small: 1..=max with extra mass near 1
+    /// and near block boundaries (the interesting edges for tiling code).
+    pub fn dim(&mut self, max: usize) -> usize {
+        let v = match self.rng.usize(10) {
+            0 => 1,
+            1 => max,
+            2 => {
+                // near a power of two
+                let p = 1usize << self.rng.range(0, 8);
+                (p + self.rng.range(0, 3)).clamp(1, max)
+            }
+            _ => self.rng.range(1, max + 1),
+        };
+        self.note("dim", v);
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.note("usize", v);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.note("bool", v);
+        v
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// f32 in a tame range, including exact zero sometimes.
+    pub fn small_f32(&mut self) -> f32 {
+        let v = match self.rng.usize(8) {
+            0 => 0.0,
+            1 => 1.0,
+            2 => -1.0,
+            _ => (self.rng.f64() * 8.0 - 4.0) as f32,
+        };
+        self.note("f32", v);
+        v
+    }
+
+    /// Vector of tame f32s.
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (self.rng.f64() * 4.0 - 2.0) as f32).collect()
+    }
+
+    /// Non-negative f32 vector (post-ReLU-like data for GrAx3 laws).
+    pub fn vec_f32_nonneg(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (self.rng.f64() * 4.0) as f32).collect()
+    }
+
+    /// Access the underlying RNG for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// PRNG for property case `i` of the property seeded by `seed`.
+pub fn case_rng(seed: u64, case: usize) -> Rng {
+    Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Run `cases` deterministic cases of a property. Panics (with replay
+/// info) on the first failing case.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    // Stable per-property seed derived from the name.
+    let seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3)
+        });
+    for case in 0..cases {
+        let mut g = Gen::new(case_rng(seed, case));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed:#x})\n  drawn: [{}]",
+                g.trace.join(", ")
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counting", 32, |_| count += 1);
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        let mut first: Vec<usize> = Vec::new();
+        forall("det", 16, |g| first.push(g.usize(0, 1000)));
+        let mut second: Vec<usize> = Vec::new();
+        forall("det", 16, |g| second.push(g.usize(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fails", 8, |g| {
+            let x = g.usize(0, 10);
+            assert!(x < 5, "found the planted bug");
+        });
+    }
+
+    #[test]
+    fn dim_hits_edges() {
+        let mut saw_one = false;
+        let mut saw_max = false;
+        forall("edges", 256, |g| {
+            let d = g.dim(64);
+            assert!((1..=64).contains(&d));
+            saw_one |= d == 1;
+            saw_max |= d == 64;
+        });
+        assert!(saw_one && saw_max);
+    }
+}

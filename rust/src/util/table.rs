@@ -1,0 +1,133 @@
+//! Plain-text report tables — every paper figure/table harness prints
+//! through this so EXPERIMENTS.md entries are copy-pasteable.
+
+/// A simple aligned text table with a title and column headers.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-ables.
+    pub fn rowd(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        w
+    }
+
+    /// Render as GitHub-flavored markdown (for EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = format!("### {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = w[i]))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let dashes: Vec<String> = w.iter().map(|&w| "-".repeat(w)).collect();
+        out.push_str(&format!("| {} |\n", dashes.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.markdown());
+    }
+}
+
+/// Format a speedup factor the way the paper does ("2.7x").
+pub fn speedup(baseline: f64, optimized: f64) -> String {
+    if optimized <= 0.0 {
+        return "inf".into();
+    }
+    format!("{:.2}x", baseline / optimized)
+}
+
+/// Format a percentage.
+pub fn pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| name   | value |"));
+        assert!(md.contains("| longer | 2     |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(speedup(10.0, 5.0), "2.00x");
+        assert_eq!(speedup(3.0, 2.0), "1.50x");
+        assert_eq!(speedup(1.0, 0.0), "inf");
+    }
+
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(pct(0.55), "55.0%");
+        assert_eq!(pct(0.991), "99.1%");
+    }
+}

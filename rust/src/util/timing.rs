@@ -1,0 +1,105 @@
+//! Wall-clock measurement helpers used by the bench harness and the
+//! coordinator's online cost model.
+
+use std::time::Instant;
+
+/// Measure one invocation, returning (result, elapsed µs).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64() * 1e6)
+}
+
+/// Robust summary statistics over a latency sample (µs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let q = |p: f64| -> f64 {
+            let idx = (p * (n - 1) as f64).round() as usize;
+            sorted[idx.min(n - 1)]
+        };
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.n,
+            super::human_us(self.mean),
+            super::human_us(self.p50),
+            super::human_us(self.p95),
+            super::human_us(self.p99),
+            super::human_us(self.max),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_sample() {
+        let s = Stats::from_samples(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Stats::from_samples(&samples);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn stats_empty_panics() {
+        Stats::from_samples(&[]);
+    }
+
+    #[test]
+    fn time_once_measures() {
+        let (v, us) = time_once(|| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(us >= 2_000.0, "measured {us}");
+    }
+}
