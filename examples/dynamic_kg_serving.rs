@@ -1,63 +1,111 @@
 //! Dynamic knowledge-graph serving (paper Figs. 1/10): a GCN served over
-//! a churning on-device knowledge graph. The leader thread owns the PJRT
-//! runtime; GrAd applies edge/node updates with no recompilation; NodePad
-//! absorbs graph growth up to the compiled capacity; the batcher coalesces
-//! query bursts into single full-graph inferences.
+//! a churning on-device knowledge graph. GrAd applies edge/node updates
+//! with no recompilation; NodePad absorbs graph growth up to the
+//! compiled capacity; the batcher coalesces query bursts into single
+//! full-graph inferences.
+//!
+//! With `SHARDS > 1` the same stream is served by a fleet: GraphSplit's
+//! cost model places one shard per simulated device, queries route to
+//! the shard owning the node, and boundary features are charged as halo
+//! traffic. With artifacts present each shard owns its own PJRT
+//! coordinator (engines are built inside the shard threads); without
+//! artifacts the example falls back to the deterministic, artifact-free
+//! `LocalEngine` on a synthetic cora-sized twin so it runs anywhere.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example dynamic_kg_serving
+//! cargo run --release --example dynamic_kg_serving -- 600 4   # 4 shards
 //! ```
 
 use std::time::Instant;
 
 use grannite::coordinator::Coordinator;
+use grannite::fleet::{Fleet, FleetConfig, LocalEngine};
 use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
-use grannite::server::{CoordinatorEngine, ServerConfig, ServerHandle, Update};
+use grannite::server::{CoordinatorEngine, Update};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from("artifacts");
-    if !artifacts.join("manifest.toml").exists() {
-        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
-    }
     let events: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(600);
+    let shards: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
 
-    let server = ServerHandle::spawn(
-        {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let have_artifacts = artifacts.join("manifest.toml").exists();
+    let cfg = FleetConfig::heterogeneous(shards);
+
+    let (fleet, nodes, capacity, backend) = if have_artifacts {
+        // real numerics: one PJRT coordinator per shard, built inside the
+        // shard thread (PJRT handles are not Send)
+        let ds = grannite::graph::datasets::Dataset::load_gnnt(&artifacts, "cora")?;
+        let (nodes, capacity) = (ds.num_nodes(), 3000);
+        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
+                                   ds.num_classes(), &cfg)?;
+        let fleet = Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, |_spec| {
             let artifacts = artifacts.clone();
-            move || {
+            Box::new(move || {
                 let coordinator = Coordinator::open(&artifacts, "cora")?;
                 Ok(CoordinatorEngine {
                     coordinator,
                     artifact: "gcn_grad_cora".into(),
                 })
-            }
-        },
-        ServerConfig::default(),
-    );
+            })
+        });
+        (fleet, nodes, capacity, "PJRT artifacts")
+    } else {
+        eprintln!("artifacts/ missing — serving the synthetic twin via LocalEngine");
+        let ds = grannite::graph::datasets::synthesize("cora-twin", 2708, 5429, 7, 64, 1);
+        let (nodes, capacity) = (2708, 3000);
+        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
+                                   ds.num_classes(), &cfg)?;
+        let fleet = Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, |spec| {
+            let ds = ds.clone();
+            let owned = spec.nodes.clone();
+            Box::new(move || LocalEngine::shard(&ds, capacity, owned))
+        });
+        (fleet, nodes, capacity, "LocalEngine fallback")
+    };
 
-    // Cora twin as the initial knowledge graph; capacity 3000 (NodePad)
-    let stream = KnowledgeGraphStream::new(2708, 3000, 0.25, 42);
+    println!("—— dynamic KG serving ({backend}, {shards} shard(s)) ——");
+    for s in &fleet.plan.shards {
+        println!(
+            "  shard #{} on {:<12} owns {:4} nodes, halo in/out {}/{}",
+            s.id,
+            s.device.name,
+            s.num_owned(),
+            s.halo_in,
+            s.halo_out
+        );
+    }
+
+    let stream = KnowledgeGraphStream::new(nodes, capacity, 0.25, 42);
     let t0 = Instant::now();
     let mut pending = Vec::new();
-    let (mut adds, mut removes, mut nodes) = (0usize, 0usize, 0usize);
+    let mut rng = grannite::util::Rng::new(9);
+    let mut active = nodes; // grows with AddNode; queries hit live nodes
+    let (mut adds, mut removes, mut new_nodes) = (0usize, 0usize, 0usize);
     for ev in stream.take(events) {
         match ev {
             GraphEvent::AddEdge(u, v) => {
                 adds += 1;
-                server.update(Update::AddEdge(u, v))?;
+                fleet.update(Update::AddEdge(u, v))?;
             }
             GraphEvent::RemoveEdge(u, v) => {
                 removes += 1;
-                server.update(Update::RemoveEdge(u, v))?;
+                fleet.update(Update::RemoveEdge(u, v))?;
             }
             GraphEvent::AddNode => {
-                nodes += 1;
-                server.update(Update::AddNode)?;
+                new_nodes += 1;
+                active += 1;
+                fleet.update(Update::AddNode)?;
             }
-            GraphEvent::Query => pending.push(server.query(None)?),
+            GraphEvent::Query => {
+                pending.push(fleet.query(Some(rng.usize(active)))?);
+            }
         }
     }
     let mut answered = 0;
@@ -67,20 +115,31 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = server.metrics.snapshot();
-    println!("—— dynamic KG serving over the cora twin ——");
-    println!("events: {events} (edges +{adds}/-{removes}, nodes +{nodes}, queries {answered})");
-    if let Some(lat) = snap.latency {
+    let snap = fleet.metrics();
+    println!("events: {events} (edges +{adds}/-{removes}, nodes +{new_nodes}, queries {answered})");
+    if let Some(lat) = &snap.latency {
         println!("inference latency: {lat}");
     }
-    if let Some(q) = snap.queue {
+    if let Some(q) = &snap.queue {
         println!("queueing:          {q}");
+    }
+    if snap.halo_bytes > 0 {
+        println!(
+            "halo exchange:     {} over {} rounds",
+            grannite::util::human_bytes(snap.halo_bytes),
+            snap.halo_rounds
+        );
     }
     println!(
         "mean batch {:.1} — {:.1} answered queries/s over {wall:.1}s wall",
         snap.mean_batch,
         answered as f64 / wall
     );
-    server.shutdown()?;
+    println!(
+        "version vector: sequenced {:?} applied {:?}",
+        fleet.expected_versions(),
+        fleet.applied_versions()
+    );
+    fleet.shutdown()?;
     Ok(())
 }

@@ -1,0 +1,121 @@
+//! Fleet scaling sweep: serve the same query load from 1→8 shards and
+//! report measured throughput next to the planner's estimated round cost
+//! and the halo traffic each configuration pays.
+//!
+//! Two sweeps: homogeneous (N × Series-2 NPU — the clean scaling curve)
+//! and heterogeneous (NPU2/NPU1/iGPU/CPU zoo — what the cost-model
+//! placement is for). Engines are the artifact-free
+//! [`grannite::fleet::LocalEngine`], whose per-query work is
+//! proportional to the shard's owned nodes, so wall-clock scaling tracks
+//! the partition, not PJRT.
+
+use std::time::Instant;
+
+use grannite::bench::banner;
+use grannite::fleet::{Fleet, FleetConfig};
+use grannite::graph::datasets::synthesize;
+use grannite::server::Update;
+use grannite::util::{human_bytes, human_us, Rng, Table};
+
+const NODES: usize = 2048;
+const EDGES: usize = 8192;
+const QUERIES: usize = 1200;
+const CHURN: usize = 300;
+
+fn drive(fleet: &Fleet) -> anyhow::Result<f64> {
+    // mixed load: a burst of GrAd churn, then a query storm
+    let mut rng = Rng::new(11);
+    for _ in 0..CHURN {
+        let u = rng.usize(NODES);
+        let v = (u + 1 + rng.usize(NODES - 1)) % NODES;
+        fleet.update(Update::AddEdge(u.min(v), u.max(v)))?;
+    }
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..QUERIES)
+        .map(|_| fleet.query(Some(rng.usize(NODES))))
+        .collect::<anyhow::Result<_>>()?;
+    for rx in pending {
+        rx.recv()?.map_err(anyhow::Error::msg)?;
+    }
+    Ok(QUERIES as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn sweep(title: &str, configs: &[(String, FleetConfig)]) -> anyhow::Result<()> {
+    let ds = synthesize("fleet-bench", NODES, EDGES, 6, 64, 5);
+    let mut t = Table::new(
+        title.to_string(),
+        &[
+            "shards",
+            "devices",
+            "est round",
+            "cut edges",
+            "halo/round",
+            "measured q/s",
+            "p50",
+            "p99",
+            "halo total",
+        ],
+    );
+    let mut baseline: Option<(f64, f64)> = None; // (qps, est_round_us)
+    for (label, cfg) in configs {
+        let fleet = Fleet::spawn_local(&ds, NODES + 64, cfg)?;
+        let est_round = fleet.plan.est_round_us;
+        let cut = fleet.plan.cut_edges;
+        let halo_round = fleet.plan.halo_bytes_per_round;
+        let qps = drive(&fleet)?;
+        let agg = fleet.metrics();
+        let (p50, p99) = agg
+            .latency
+            .as_ref()
+            .map(|l| (human_us(l.p50), human_us(l.p99)))
+            .unwrap_or_else(|| ("n/a".into(), "n/a".into()));
+        t.row(&[
+            cfg.devices.len().to_string(),
+            label.clone(),
+            human_us(est_round),
+            cut.to_string(),
+            human_bytes(halo_round),
+            format!("{qps:.0}"),
+            p50,
+            p99,
+            human_bytes(agg.halo_bytes),
+        ]);
+        let base_n = configs[0].1.devices.len();
+        let (base_qps, base_est) = *baseline.get_or_insert((qps, est_round));
+        if cfg.devices.len() > base_n {
+            println!(
+                "  {} shards vs {base_n}-shard baseline: {:.2}x measured, \
+                 {:.2}x by the cost model",
+                cfg.devices.len(),
+                qps / base_qps,
+                base_est / est_round.max(1e-9),
+            );
+        }
+        fleet.shutdown()?;
+    }
+    t.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("fleet scaling (1→8 shards, LocalEngine, synthetic KG)");
+
+    let homogeneous: Vec<(String, FleetConfig)> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&n| (format!("{n}× series2"), FleetConfig::homogeneous(n)))
+        .collect();
+    sweep("homogeneous scaling — N × Series-2 NPU", &homogeneous)?;
+
+    let heterogeneous: Vec<(String, FleetConfig)> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| (format!("{n}-way zoo"), FleetConfig::heterogeneous(n)))
+        .collect();
+    sweep("heterogeneous placement — NPU2/NPU1/iGPU/CPU zoo", &heterogeneous)?;
+
+    println!(
+        "\nnote: 'est round' is the planner's max_shard(compute + halo) from the\n\
+         paper's cost model; 'measured q/s' is wall-clock over LocalEngine shards\n\
+         whose work is proportional to owned nodes."
+    );
+    Ok(())
+}

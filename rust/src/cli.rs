@@ -70,6 +70,17 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option: `--devices series2,cpu` →
+    /// `["series2", "cpu"]`. Empty segments are dropped.
+    pub fn str_list_opt(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_opt(key, default)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -123,5 +134,17 @@ mod tests {
     fn trailing_switch() {
         let a = parse("run --fast");
         assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn list_option_splits_on_commas() {
+        let a = parse("fleet --devices series2,series1,cpu");
+        assert_eq!(
+            a.str_list_opt("devices", "series2"),
+            vec!["series2", "series1", "cpu"]
+        );
+        assert_eq!(a.str_list_opt("missing", "a,b"), vec!["a", "b"]);
+        let b = parse("fleet --devices series2,,");
+        assert_eq!(b.str_list_opt("devices", "x"), vec!["series2"]);
     }
 }

@@ -3,9 +3,18 @@
 //! Node-classification inference over a whole graph answers *every*
 //! pending query in one pass, so the batcher's job is to coalesce query
 //! arrivals between GrAd mask updates: requests accumulate until either
-//! `max_batch` queries are waiting or the oldest has waited `max_wait`.
-//! Structure updates are sequenced *before* the queries that arrive after
-//! them (consistency: a query sees every update that preceded it).
+//! `max_batch` queries are waiting or `max_wait` has elapsed since the
+//! **first** enqueue of the window. Structure updates are sequenced
+//! *before* the queries that arrive after them (consistency: a query
+//! sees every update that preceded it).
+//!
+//! The deadline is a hard one, anchored on the batcher's own clock at
+//! the moment each request enters the queue — never on the
+//! caller-supplied [`Request::enqueued`] stamp (which measures
+//! client-side queueing and may be skewed), and never reset by later
+//! arrivals. A trickle of requests therefore cannot starve a batch:
+//! whatever arrives, the oldest waiter is flushed at most `max_wait`
+//! after it entered.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -31,8 +40,33 @@ pub struct Batch {
 #[derive(Debug, Default)]
 struct Queue {
     pending: VecDeque<Request>,
+    /// Batcher-observed arrival time of each pending request (aligned
+    /// with `pending`); the flush deadline is `arrivals.front() +
+    /// max_wait`.
+    arrivals: VecDeque<Instant>,
     graph_version: u64,
     closed: bool,
+}
+
+impl Queue {
+    /// True when the flush condition holds now.
+    fn ready(&self, max_batch: usize, max_wait: Duration) -> bool {
+        match self.arrivals.front() {
+            None => false,
+            Some(first) => {
+                self.pending.len() >= max_batch
+                    || first.elapsed() >= max_wait
+                    || self.closed
+            }
+        }
+    }
+
+    fn flush(&mut self, max_batch: usize) -> Batch {
+        let take = self.pending.len().min(max_batch);
+        let requests: Vec<Request> = self.pending.drain(..take).collect();
+        self.arrivals.drain(..take);
+        Batch { requests, graph_version: self.graph_version }
+    }
 }
 
 /// Thread-safe batching queue.
@@ -54,10 +88,12 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a query.
+    /// Enqueue a query. The flush deadline for this request starts *now*,
+    /// on the batcher's clock.
     pub fn submit(&self, req: Request) {
         let mut q = self.q.lock().unwrap();
         q.pending.push_back(req);
+        q.arrivals.push_back(Instant::now());
         self.cv.notify_all();
     }
 
@@ -83,37 +119,24 @@ impl Batcher {
     /// Non-blocking: return a batch if the flush condition holds now.
     pub fn try_batch(&self) -> Option<Batch> {
         let mut q = self.q.lock().unwrap();
-        if q.pending.is_empty() {
-            return None;
+        if q.ready(self.max_batch, self.max_wait) {
+            Some(q.flush(self.max_batch))
+        } else {
+            None
         }
-        let oldest = q.pending.front().unwrap().enqueued;
-        if q.pending.len() >= self.max_batch
-            || oldest.elapsed() >= self.max_wait
-            || q.closed
-        {
-            let take = q.pending.len().min(self.max_batch);
-            let requests: Vec<Request> = q.pending.drain(..take).collect();
-            return Some(Batch { requests, graph_version: q.graph_version });
-        }
-        None
     }
 
     /// Block until a batch is ready (or the queue is closed and empty).
     pub fn next_batch(&self) -> Option<Batch> {
         let mut q = self.q.lock().unwrap();
         loop {
-            if !q.pending.is_empty() {
-                let oldest = q.pending.front().unwrap().enqueued;
-                let full = q.pending.len() >= self.max_batch;
-                let expired = oldest.elapsed() >= self.max_wait;
-                if full || expired || q.closed {
-                    let take = q.pending.len().min(self.max_batch);
-                    let requests: Vec<Request> =
-                        q.pending.drain(..take).collect();
-                    return Some(Batch { requests, graph_version: q.graph_version });
-                }
-                // wait out the remainder of the batching window
-                let remaining = self.max_wait.saturating_sub(oldest.elapsed());
+            if q.ready(self.max_batch, self.max_wait) {
+                return Some(q.flush(self.max_batch));
+            }
+            if let Some(first) = q.arrivals.front() {
+                // wait out the remainder of the batching window; the cap
+                // keeps us responsive to max_batch fills signaled late
+                let remaining = self.max_wait.saturating_sub(first.elapsed());
                 let (qq, _timeout) = self
                     .cv
                     .wait_timeout(q, remaining.min(Duration::from_millis(5)))
@@ -216,9 +239,70 @@ mod tests {
         for i in 0..10 {
             b.submit(req(i));
         }
+        std::thread::sleep(Duration::from_millis(2));
         let first = b.next_batch().unwrap();
         assert_eq!(first.requests.len(), 4);
         let second = b.next_batch().unwrap();
         assert_eq!(second.requests.len(), 4);
+    }
+
+    /// Regression (hard-deadline satellite): the flush deadline is the
+    /// batcher's own arrival clock. A caller-supplied `enqueued` stamp in
+    /// the future — clock skew, or a re-stamped retry — must not defer
+    /// the flush past `max_wait`.
+    #[test]
+    fn skewed_enqueued_stamp_cannot_defer_flush() {
+        let b = Batcher::new(100, Duration::from_millis(30));
+        b.submit(Request {
+            id: 1,
+            node: None,
+            enqueued: Instant::now() + Duration::from_secs(3600),
+        });
+        let start = Instant::now();
+        let deadline = Duration::from_secs(2);
+        loop {
+            if let Some(batch) = b.try_batch() {
+                assert_eq!(batch.requests.len(), 1);
+                break;
+            }
+            assert!(
+                start.elapsed() < deadline,
+                "flush deferred past max_wait by a skewed enqueue stamp"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(start.elapsed() >= Duration::from_millis(25));
+    }
+
+    /// Regression (hard-deadline satellite): a trickle of later arrivals
+    /// cannot extend the first waiter's deadline — the batch flushes at
+    /// `first enqueue + max_wait` even while requests keep landing.
+    #[test]
+    fn trickle_cannot_extend_deadline() {
+        let b = Arc::new(Batcher::new(1000, Duration::from_millis(40)));
+        let producer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                // first enqueue starts the window; then trickle forever
+                // (well past the deadline)
+                for i in 0..30 {
+                    b.submit(req(i));
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            })
+        };
+        let start = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = start.elapsed();
+        assert!(
+            waited < Duration::from_millis(120),
+            "trickle starved the batch for {waited:?}"
+        );
+        assert!(
+            batch.requests.len() < 30,
+            "flush must not wait for the whole trickle"
+        );
+        assert_eq!(batch.requests[0].id, 0);
+        producer.join().unwrap();
     }
 }

@@ -137,6 +137,11 @@ impl ModelState {
         self.dynamic.num_nodes()
     }
 
+    /// Live neighbor set of `u` from the dynamic graph (no snapshot).
+    pub fn neighbors(&self, u: usize) -> &std::collections::BTreeSet<u32> {
+        self.dynamic.neighbors(u)
+    }
+
     fn invalidate(&mut self) {
         self.version += 1;
         // masks are recomputed lazily; weights/features survive

@@ -1,0 +1,104 @@
+//! Per-shard admission control: bound the number of queries a shard
+//! worker lets accumulate in its batcher, shedding the excess instead of
+//! letting queue latency grow without bound.
+//!
+//! The serving path answers *every* pending query with one full-graph
+//! inference, so a shard's queue depth is the number of batching windows
+//! of debt it carries. Under overload the right move is to reject at
+//! arrival (the caller sees a fast, explicit error and can retry against
+//! a replica) rather than time out after queueing — the classic
+//! load-shedding argument, applied per shard so one hot partition cannot
+//! drag the whole fleet's tail latency up.
+
+/// Admission policy knobs for one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Maximum queries waiting in the shard's batcher before new
+    /// arrivals are shed. `0` disables shedding (unbounded queue).
+    pub max_pending: usize,
+}
+
+impl AdmissionConfig {
+    /// No shedding: the single-leader server's historical behavior.
+    pub fn unbounded() -> AdmissionConfig {
+        AdmissionConfig { max_pending: 0 }
+    }
+
+    /// Shed when more than `max_pending` queries are already waiting.
+    pub fn bounded(max_pending: usize) -> AdmissionConfig {
+        AdmissionConfig { max_pending }
+    }
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig::unbounded()
+    }
+}
+
+/// Mutable admission state owned by one shard worker thread.
+#[derive(Debug)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    /// Queries admitted into the batcher.
+    pub admitted: usize,
+    /// Queries shed at arrival.
+    pub shed: usize,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission { cfg, admitted: 0, shed: 0 }
+    }
+
+    /// Decide whether a query arriving while `pending` queries wait in
+    /// the batcher may enter. Callers must count a `false` into
+    /// [`crate::metrics::Metrics::record_rejected`] and answer the query
+    /// with an explicit rejection.
+    pub fn admit(&mut self, pending: usize) -> bool {
+        if self.cfg.max_pending > 0 && pending >= self.cfg.max_pending {
+            self.shed += 1;
+            false
+        } else {
+            self.admitted += 1;
+            true
+        }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_admits_everything() {
+        let mut a = Admission::new(AdmissionConfig::unbounded());
+        for pending in [0, 10, 10_000] {
+            assert!(a.admit(pending));
+        }
+        assert_eq!(a.admitted, 3);
+        assert_eq!(a.shed, 0);
+    }
+
+    #[test]
+    fn bounded_sheds_at_limit() {
+        let mut a = Admission::new(AdmissionConfig::bounded(4));
+        assert!(a.admit(0));
+        assert!(a.admit(3));
+        assert!(!a.admit(4));
+        assert!(!a.admit(5));
+        assert_eq!(a.admitted, 2);
+        assert_eq!(a.shed, 2);
+    }
+
+    #[test]
+    fn recovers_when_queue_drains() {
+        let mut a = Admission::new(AdmissionConfig::bounded(2));
+        assert!(!a.admit(2));
+        assert!(a.admit(1), "queue drained below the bound → admit again");
+    }
+}

@@ -1,0 +1,207 @@
+//! Halo exchange: the explicit boundary-feature traffic between shards.
+//!
+//! A node owned by shard A whose neighbor lives on shard B cannot be
+//! aggregated without B's feature row — partition-parallel GNN execution
+//! always ships a one-hop "halo" ring of boundary features each round
+//! (EnGN and the Abadal et al. survey both charge this traffic
+//! explicitly; so do we). The exchange is charged against the *host
+//! link* of the importing shard's device — the same `xfer_gbps` /
+//! `xfer_setup_us` parameters GraphSplit boundary crossings pay in
+//! [`crate::npu::cost`] — and recorded per shard in
+//! [`crate::metrics::Metrics`] (`halo_bytes`, `halo_us`) so benches can
+//! report exactly how much of the fleet's round time is communication.
+
+use std::collections::BTreeMap;
+
+use crate::config::HardwareConfig;
+use crate::graph::Graph;
+
+use super::placement::FleetPlan;
+
+/// One shard's halo-exchange schedule, built at plan time. The
+/// `bytes_per_round`/`link_us_per_round` pair is the *planned* charge;
+/// when the engine can report its live import count
+/// ([`crate::server::InferenceEngine::halo_imports`]), the shard worker
+/// recosts each round from `bytes_per_import` and the link parameters so
+/// the accounting follows GrAd churn instead of the spawn-time cut.
+#[derive(Debug, Clone)]
+pub struct HaloSpec {
+    pub shard: usize,
+    /// peer shard → node ids whose features this shard imports from it.
+    pub imports: BTreeMap<usize, Vec<usize>>,
+    /// peer shard → owned node ids that peer imports from this shard.
+    pub exports: BTreeMap<usize, Vec<usize>>,
+    /// Feature bytes this shard pulls over the link per inference round
+    /// (plan-time estimate).
+    pub bytes_per_round: usize,
+    /// Simulated link time for those bytes on this shard's device (µs).
+    pub link_us_per_round: f64,
+    /// Link payload per imported node (features × dtype bytes).
+    pub bytes_per_import: usize,
+    /// Per-crossing link setup (0 for host shards — shared memory).
+    pub xfer_setup_us: f64,
+    /// Link time per byte (0 for host shards).
+    pub us_per_byte: f64,
+}
+
+impl HaloSpec {
+    /// A shard with no boundary (single-shard fleets, isolated ranges).
+    pub fn empty(shard: usize) -> HaloSpec {
+        HaloSpec {
+            shard,
+            imports: BTreeMap::new(),
+            exports: BTreeMap::new(),
+            bytes_per_round: 0,
+            link_us_per_round: 0.0,
+            bytes_per_import: 0,
+            xfer_setup_us: 0.0,
+            us_per_byte: 0.0,
+        }
+    }
+
+    /// Link cost of shipping `bytes` this round (0 for an empty round).
+    pub fn cost_us(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.xfer_setup_us + bytes as f64 * self.us_per_byte
+        }
+    }
+
+    /// Total import slots across peers. Imports are unique per shard
+    /// (a node is pulled once no matter how many local consumers), so
+    /// this equals the distinct boundary nodes this shard pays for.
+    pub fn num_imported(&self) -> usize {
+        self.imports.values().map(Vec::len).sum()
+    }
+
+    /// Total export *transmissions*: a node shipped to two peers counts
+    /// twice (each peer's pull is a separate transfer). This can exceed
+    /// [`crate::fleet::ShardSpec::halo_out`], which counts the distinct
+    /// owned boundary nodes.
+    pub fn num_exported(&self) -> usize {
+        self.exports.values().map(Vec::len).sum()
+    }
+}
+
+/// Host-link cost of moving `bytes` onto `hw`: the GraphSplit boundary
+/// formula (`setup + bytes / bandwidth`). Zero bytes cost nothing — no
+/// fence is issued for an empty exchange. A CPU shard imports for free
+/// (`xfer_gbps = ∞`): it *is* the host, shared memory is its link.
+pub fn link_cost_us(hw: &HardwareConfig, bytes: usize) -> f64 {
+    if bytes == 0 || hw.xfer_gbps.is_infinite() {
+        return 0.0;
+    }
+    hw.xfer_setup_us + bytes as f64 / (hw.xfer_gbps * 1e3)
+}
+
+/// Build every shard's halo schedule from the plan and the graph.
+/// `features × dtype_bytes` is the per-node payload on the link.
+pub fn build_halos(plan: &FleetPlan, graph: &Graph, features: usize,
+                   dtype_bytes: usize) -> Vec<HaloSpec> {
+    let k = plan.num_shards();
+    let mut specs: Vec<HaloSpec> = (0..k).map(HaloSpec::empty).collect();
+    // collect unique (importer, owner, node) triples via sorted sets
+    let mut import_sets: Vec<BTreeMap<usize, std::collections::BTreeSet<usize>>> =
+        vec![BTreeMap::new(); k];
+    for &(u, v) in graph.edges() {
+        let (u, v) = (u as usize, v as usize);
+        let (su, sv) = (plan.owner[u], plan.owner[v]);
+        if su == sv {
+            continue;
+        }
+        // undirected edge: each side imports the other's feature row
+        import_sets[su].entry(sv).or_default().insert(v);
+        import_sets[sv].entry(su).or_default().insert(u);
+    }
+    for (s, sets) in import_sets.into_iter().enumerate() {
+        let mut total = 0usize;
+        for (peer, nodes) in sets {
+            let nodes: Vec<usize> = nodes.into_iter().collect();
+            total += nodes.len();
+            specs[peer].exports.insert(s, nodes.clone());
+            specs[s].imports.insert(peer, nodes);
+        }
+        let device = &plan.shards[s].device;
+        specs[s].bytes_per_import = features * dtype_bytes;
+        if !device.xfer_gbps.is_infinite() {
+            specs[s].xfer_setup_us = device.xfer_setup_us;
+            specs[s].us_per_byte = 1.0 / (device.xfer_gbps * 1e3);
+        }
+        specs[s].bytes_per_round = total * features * dtype_bytes;
+        specs[s].link_us_per_round = link_cost_us(device, specs[s].bytes_per_round);
+    }
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::placement::{plan, Workload};
+    use crate::graph::datasets::synthesize;
+
+    #[test]
+    fn link_cost_formula() {
+        let hw = HardwareConfig::npu_series2();
+        assert_eq!(link_cost_us(&hw, 0), 0.0);
+        let c = link_cost_us(&hw, 40_000);
+        // setup 12µs + 40_000 B / (40 GB/s → 40_000 B/µs) = 13µs
+        assert!((c - (hw.xfer_setup_us + 1.0)).abs() < 1e-9, "{c}");
+        let cpu = HardwareConfig::cpu();
+        assert_eq!(link_cost_us(&cpu, 1 << 20), 0.0, "host imports are free");
+    }
+
+    #[test]
+    fn path_graph_two_shards_exchange_one_pair() {
+        // 0-1-2-3 split as {0,1} | {2,3}: the cut edge (1,2) means shard 0
+        // imports node 2 and shard 1 imports node 1.
+        let g = Graph::new(4, &[(0, 1), (1, 2), (2, 3)]);
+        let devices = vec![HardwareConfig::npu_series2(); 2];
+        let w = Workload { capacity: 4, features: 8, classes: 2, dtype_bytes: 2 };
+        let mut p = plan(&g, &w, &devices).unwrap();
+        // force the symmetric split regardless of what local search chose
+        p.owner = vec![0, 0, 1, 1];
+        p.shards[0].nodes = 0..2;
+        p.shards[1].nodes = 2..4;
+        let halos = build_halos(&p, &g, w.features, w.dtype_bytes);
+        assert_eq!(halos[0].imports[&1], vec![2]);
+        assert_eq!(halos[1].imports[&0], vec![1]);
+        assert_eq!(halos[0].exports[&1], vec![1]);
+        assert_eq!(halos[0].bytes_per_round, 8 * 2);
+        assert!(halos[0].link_us_per_round > 0.0);
+    }
+
+    #[test]
+    fn imports_and_exports_are_symmetric() {
+        let ds = synthesize("h", 300, 1200, 4, 16, 21);
+        let devices = vec![HardwareConfig::npu_series2(); 3];
+        let w = Workload { capacity: 300, features: 16, classes: 4, dtype_bytes: 2 };
+        let p = plan(&ds.graph, &w, &devices).unwrap();
+        let halos = build_halos(&p, &ds.graph, w.features, w.dtype_bytes);
+        for h in &halos {
+            for (&peer, nodes) in &h.imports {
+                // everything I import from you, you export to me
+                assert_eq!(halos[peer].exports[&h.shard], *nodes);
+                // and you own it
+                for &n in nodes {
+                    assert_eq!(p.owner[n], peer);
+                }
+            }
+        }
+        let total_imports: usize = halos.iter().map(|h| h.num_imported()).sum();
+        let total_exports: usize = halos.iter().map(|h| h.num_exported()).sum();
+        assert_eq!(total_imports, total_exports);
+        assert!(total_imports > 0, "3 shards on a connected graph must cut");
+    }
+
+    #[test]
+    fn single_shard_halo_is_empty() {
+        let ds = synthesize("h1", 50, 150, 3, 8, 2);
+        let w = Workload { capacity: 50, features: 8, classes: 3, dtype_bytes: 2 };
+        let p = plan(&ds.graph, &w, &[HardwareConfig::npu_series2()]).unwrap();
+        let halos = build_halos(&p, &ds.graph, 8, 2);
+        assert_eq!(halos.len(), 1);
+        assert_eq!(halos[0].bytes_per_round, 0);
+        assert_eq!(halos[0].link_us_per_round, 0.0);
+    }
+}

@@ -1,0 +1,476 @@
+//! `fleet` — sharded multi-device serving of one logical graph.
+//!
+//! The single-leader [`crate::server`] owns one engine on one device; a
+//! [`Fleet`] serves the same logical graph from **N shard workers**, each
+//! pinned to a simulated device chosen by the paper's cost model:
+//!
+//! 1. **Placement** ([`placement`]): GraphSplit's
+//!    communication-vs-compute cost model, lifted from ops to nodes —
+//!    each device roster entry is probed with [`crate::npu::cost`] on the
+//!    real model graph, shards are sized proportional to device speed,
+//!    and cut points are refined by local search on
+//!    `max_shard(compute + halo)`. Heterogeneous NPU/CPU/GPU placement
+//!    falls out of the cost model, exactly as in the paper's §IV Step 1.
+//! 2. **Halo exchange** ([`halo`]): every cut edge forces boundary-node
+//!    features across the host link each round; the traffic is charged
+//!    with the same `xfer_gbps`/`xfer_setup_us` parameters GraphSplit
+//!    boundary crossings pay, and lands in per-shard metrics.
+//! 3. **Shard workers** ([`shard`]): the old server leader loop,
+//!    generalized — per-shard batching, admission control, panic-safe
+//!    shutdown. The single-leader server is now the one-shard special
+//!    case.
+//! 4. **Routing** ([`router`]): queries go to the shard that owns the
+//!    node; GrAd updates fan out over the same ordered channels, tracked
+//!    by a version vector so convergence is checkable.
+//!
+//! ## Scaling model
+//!
+//! Per inference round, shard `s` costs
+//! `owned(s) · rate(device_s) + link(halo_in(s) · features · dtype)`,
+//! and the fleet's round latency is the max over shards. Compute shrinks
+//! linearly with the shard count while halo traffic grows with the cut —
+//! the planner's whole job is to stop cutting where the link cost
+//! overtakes the compute win. `grannite fleet` and
+//! `benches/fleet_scaling.rs` sweep this tradeoff 1→8 shards.
+
+pub mod admission;
+pub mod halo;
+pub mod placement;
+pub mod router;
+pub mod shard;
+
+pub use admission::{Admission, AdmissionConfig};
+pub use halo::{build_halos, link_cost_us, HaloSpec};
+pub use placement::{per_node_us, plan, FleetPlan, ShardSpec, Workload};
+pub use router::Router;
+pub use shard::{ShardConfig, ShardEvent, ShardWorker};
+
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+
+use crate::config::HardwareConfig;
+use crate::coordinator::ModelState;
+use crate::graph::{datasets::Dataset, Graph};
+use crate::metrics::Snapshot;
+use crate::server::{InferenceEngine, QueryResponse, ServerConfig, Update};
+use crate::tensor::Mat;
+
+/// Fleet-level tuning: one shard per device roster entry.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub devices: Vec<HardwareConfig>,
+    pub batch: ServerConfig,
+    pub admission: AdmissionConfig,
+    /// Stored bytes per feature element on the link (2 = FP16).
+    pub dtype_bytes: usize,
+}
+
+impl FleetConfig {
+    /// `n` identical Series-2 NPU shards (the clean scaling sweep).
+    pub fn homogeneous(n: usize) -> FleetConfig {
+        FleetConfig {
+            devices: vec![HardwareConfig::npu_series2(); n.max(1)],
+            batch: ServerConfig::default(),
+            admission: AdmissionConfig::unbounded(),
+            dtype_bytes: 2,
+        }
+    }
+
+    /// `n` shards cycling the full device zoo (NPU2, NPU1, iGPU, CPU) —
+    /// the heterogeneous placement the cost model exists for.
+    pub fn heterogeneous(n: usize) -> FleetConfig {
+        let zoo = [
+            HardwareConfig::npu_series2(),
+            HardwareConfig::npu_series1(),
+            HardwareConfig::gpu(),
+            HardwareConfig::cpu(),
+        ];
+        FleetConfig {
+            devices: (0..n.max(1)).map(|i| zoo[i % zoo.len()].clone()).collect(),
+            batch: ServerConfig::default(),
+            admission: AdmissionConfig::unbounded(),
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Parse a `--devices series2,cpu,…` roster.
+    pub fn from_names(names: &[String]) -> Result<FleetConfig> {
+        let mut devices = Vec::with_capacity(names.len());
+        for n in names {
+            devices.push(HardwareConfig::preset(n)?);
+        }
+        Ok(FleetConfig {
+            devices,
+            batch: ServerConfig::default(),
+            admission: AdmissionConfig::unbounded(),
+            dtype_bytes: 2,
+        })
+    }
+}
+
+/// A running fleet: plan + router + shard workers.
+pub struct Fleet {
+    pub plan: FleetPlan,
+    router: Router,
+}
+
+impl Fleet {
+    /// Plan the placement for a workload without spawning anything.
+    pub fn plan_for(graph: &Graph, capacity: usize, features: usize,
+                    classes: usize, cfg: &FleetConfig) -> Result<FleetPlan> {
+        let w = Workload {
+            capacity,
+            features,
+            classes,
+            dtype_bytes: cfg.dtype_bytes,
+        };
+        plan(graph, &w, &cfg.devices)
+    }
+
+    /// Spawn one worker per shard of `plan`. `make` builds, per shard, a
+    /// factory that will run *inside* that shard's thread (PJRT handles
+    /// are not `Send`, same contract as [`crate::server::ServerHandle`]).
+    pub fn spawn<E, M>(plan: FleetPlan, graph: &Graph, features: usize,
+                       cfg: &FleetConfig, mut make: M) -> Fleet
+    where
+        E: InferenceEngine,
+        M: FnMut(&ShardSpec) -> Box<dyn FnOnce() -> Result<E> + Send>,
+    {
+        let halos = build_halos(&plan, graph, features, cfg.dtype_bytes);
+        let mut workers = Vec::with_capacity(plan.num_shards());
+        for (spec, halo) in plan.shards.iter().zip(halos) {
+            let factory = make(spec);
+            workers.push(ShardWorker::spawn(
+                spec.id,
+                factory,
+                ShardConfig {
+                    batch: cfg.batch.clone(),
+                    admission: cfg.admission,
+                    halo: Some(halo),
+                },
+            ));
+        }
+        let router = Router::new(plan.owner.clone(), workers);
+        Fleet { plan, router }
+    }
+
+    /// Spawn a fleet of [`LocalEngine`]s over a dataset — fully offline
+    /// (no PJRT artifacts), deterministic, and identical in predictions
+    /// to a single-leader server running [`LocalEngine::full`].
+    pub fn spawn_local(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
+                       -> Result<Fleet> {
+        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
+                                   ds.num_classes(), cfg)?;
+        let graph = ds.graph.clone();
+        let features = ds.num_features();
+        let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {
+            let ds = ds.clone();
+            let owned = spec.nodes.clone();
+            Box::new(move || LocalEngine::shard(&ds, capacity, owned))
+        });
+        Ok(fleet)
+    }
+
+    pub fn update(&self, u: Update) -> Result<()> {
+        self.router.update(u)
+    }
+
+    pub fn query(&self, node: Option<usize>)
+                 -> Result<Receiver<Result<QueryResponse, String>>> {
+        self.router.query(node)
+    }
+
+    pub fn query_wait(&self, node: Option<usize>) -> Result<QueryResponse> {
+        self.router.query_wait(node)
+    }
+
+    /// Barrier all shards; returns the applied version vector.
+    pub fn sync(&self) -> Result<Vec<u64>> {
+        self.router.sync()
+    }
+
+    pub fn expected_versions(&self) -> Vec<u64> {
+        self.router.expected_versions()
+    }
+
+    pub fn applied_versions(&self) -> Vec<u64> {
+        self.router.applied_versions()
+    }
+
+    /// Exact fleet-wide metrics (raw samples merged across shards).
+    pub fn metrics(&self) -> Snapshot {
+        self.router.metrics()
+    }
+
+    /// Per-shard labeled snapshots.
+    pub fn shard_metrics(&self) -> Vec<Snapshot> {
+        self.router.shard_metrics()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.router.num_shards()
+    }
+
+    pub fn shutdown(self) -> Result<()> {
+        self.router.shutdown()
+    }
+}
+
+/// A deterministic, artifact-free inference engine: neighbor label
+/// voting over the live GrAd graph. Each shard holds a full structural
+/// replica (updates fan out; masks are cheap) but only computes logits
+/// for its *owned* nodes — which is what makes per-shard work shrink as
+/// the fleet grows, and what the halo exchange pays for on real
+/// hardware. Predictions depend only on graph structure + labels, so a
+/// 1-shard fleet, an N-shard fleet, and the single-leader server agree
+/// exactly on every owned answer.
+pub struct LocalEngine {
+    state: ModelState,
+    labels: Vec<i32>,
+    classes: usize,
+    owned: std::ops::Range<usize>,
+    /// Memoized live halo-import count; only structure updates change
+    /// it, so [`Self::apply`] invalidates and the per-round query in the
+    /// shard hot loop is O(1) between updates.
+    halo_cache: std::cell::Cell<Option<usize>>,
+}
+
+impl LocalEngine {
+    /// Engine answering for `owned` only (a fleet shard).
+    pub fn shard(ds: &Dataset, capacity: usize, owned: std::ops::Range<usize>)
+                 -> Result<LocalEngine> {
+        let labels = ds.labels.clone();
+        let classes = ds.num_classes().max(2);
+        let state = ModelState::from_dataset(ds.clone(), capacity)?;
+        Ok(LocalEngine {
+            state,
+            labels,
+            classes,
+            owned,
+            halo_cache: std::cell::Cell::new(None),
+        })
+    }
+
+    /// Engine answering for every node (the single-leader server).
+    pub fn full(ds: &Dataset, capacity: usize) -> Result<LocalEngine> {
+        let owned = 0..capacity.max(ds.num_nodes());
+        LocalEngine::shard(ds, capacity, owned)
+    }
+
+    fn label_of(&self, node: usize) -> i32 {
+        self.labels
+            .get(node)
+            .copied()
+            .unwrap_or((node % self.classes) as i32)
+    }
+}
+
+impl InferenceEngine for LocalEngine {
+    fn apply(&mut self, update: &Update) -> Result<u64> {
+        match update {
+            Update::AddEdge(u, v) => {
+                self.state.add_edge(*u, *v)?;
+            }
+            Update::RemoveEdge(u, v) => {
+                self.state.remove_edge(*u, *v)?;
+            }
+            Update::AddNode => {
+                self.state.add_node()?;
+            }
+        }
+        self.halo_cache.set(None);
+        Ok(self.state.graph_version())
+    }
+
+    fn infer(&mut self) -> Result<Mat> {
+        // O(owned · degree) via the dynamic graph's live neighbor sets —
+        // no per-round snapshot, so per-shard work genuinely shrinks as
+        // the fleet grows
+        let n = self.state.num_active_nodes();
+        let mut logits = Mat::zeros(n, self.classes);
+        for i in self.owned.start.min(n)..self.owned.end.min(n) {
+            // self vote (weight 2) keeps isolated nodes deterministic
+            let own = self.label_of(i) as usize % self.classes;
+            logits[(i, own)] += 2.0;
+            for &j in self.state.neighbors(i) {
+                let c = self.label_of(j as usize) as usize % self.classes;
+                logits[(i, c)] += 1.0;
+            }
+        }
+        Ok(logits)
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.state.num_active_nodes()
+    }
+
+    /// Live halo imports: distinct non-owned neighbors of the owned
+    /// active range, so the shard worker's halo accounting tracks GrAd
+    /// churn instead of the spawn-time cut. Memoized between updates —
+    /// the hot loop asks every round.
+    fn halo_imports(&self) -> Option<usize> {
+        if let Some(cached) = self.halo_cache.get() {
+            return Some(cached);
+        }
+        let n = self.state.num_active_nodes();
+        let mut imports = std::collections::BTreeSet::new();
+        for i in self.owned.start.min(n)..self.owned.end.min(n) {
+            for &j in self.state.neighbors(i) {
+                if !self.owned.contains(&(j as usize)) {
+                    imports.insert(j);
+                }
+            }
+        }
+        self.halo_cache.set(Some(imports.len()));
+        Some(imports.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::synthesize;
+    use crate::server::ServerHandle;
+
+    fn twin() -> Dataset {
+        synthesize("fleet-eq", 60, 150, 4, 12, 17)
+    }
+
+    /// The same GrAd churn applied through any serving front end.
+    fn churn(mut apply: impl FnMut(Update)) {
+        for i in 0..10 {
+            apply(Update::AddEdge(i, (i + 7) % 60));
+        }
+        apply(Update::RemoveEdge(0, 7));
+        apply(Update::AddNode);
+        apply(Update::AddEdge(60, 3));
+    }
+
+    fn predictions_via_server(ds: &Dataset) -> Vec<i32> {
+        let ds2 = ds.clone();
+        let server = ServerHandle::spawn(
+            move || LocalEngine::full(&ds2, 64),
+            ServerConfig::default(),
+        );
+        churn(|u| server.update(u).unwrap());
+        let preds: Vec<i32> = (0..61)
+            .map(|n| server.query_wait(Some(n)).unwrap().prediction)
+            .collect();
+        server.shutdown().unwrap();
+        preds
+    }
+
+    fn predictions_via_fleet(ds: &Dataset, cfg: &FleetConfig) -> Vec<i32> {
+        let fleet = Fleet::spawn_local(ds, 64, cfg).unwrap();
+        churn(|u| fleet.update(u).unwrap());
+        let preds: Vec<i32> = (0..61)
+            .map(|n| fleet.query_wait(Some(n)).unwrap().prediction)
+            .collect();
+        fleet.shutdown().unwrap();
+        preds
+    }
+
+    #[test]
+    fn single_shard_fleet_reproduces_the_server() {
+        let ds = twin();
+        let server = predictions_via_server(&ds);
+        let fleet = predictions_via_fleet(&ds, &FleetConfig::homogeneous(1));
+        assert_eq!(server, fleet, "1-shard fleet must equal the old server");
+    }
+
+    #[test]
+    fn sharded_fleet_reproduces_the_server() {
+        let ds = twin();
+        let server = predictions_via_server(&ds);
+        for shards in [2, 4] {
+            let fleet =
+                predictions_via_fleet(&ds, &FleetConfig::heterogeneous(shards));
+            assert_eq!(
+                server, fleet,
+                "{shards}-shard fleet must agree with the single leader"
+            );
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_uses_distinct_device_kinds() {
+        let ds = twin();
+        let cfg = FleetConfig::heterogeneous(4);
+        let fleet = Fleet::spawn_local(&ds, 64, &cfg).unwrap();
+        let kinds: std::collections::BTreeSet<String> = fleet
+            .plan
+            .shards
+            .iter()
+            .map(|s| s.device.kind.to_string())
+            .collect();
+        assert!(kinds.len() >= 2, "expected ≥2 device kinds, got {kinds:?}");
+        // drive a little traffic so halo accounting fires
+        churn(|u| fleet.update(u).unwrap());
+        for n in (0..60).step_by(5) {
+            let _ = fleet.query_wait(Some(n)).unwrap();
+        }
+        let snap = fleet.metrics();
+        assert!(snap.queries >= 12);
+        assert!(
+            snap.halo_bytes > 0,
+            "multi-shard serving must report halo traffic"
+        );
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn live_halo_matches_plan_at_spawn() {
+        // the boundary-import count is derived three ways — the planner
+        // (halo_counts over contiguous ranges), the halo schedule
+        // (build_halos over the edge list), and the live engine
+        // (halo_imports over the dynamic neighbor sets). Before any
+        // churn they must all agree, per shard.
+        let ds = twin();
+        let cfg = FleetConfig::homogeneous(3);
+        let plan = Fleet::plan_for(&ds.graph, 64, ds.num_features(),
+                                   ds.num_classes(), &cfg)
+            .unwrap();
+        let halos = build_halos(&plan, &ds.graph, ds.num_features(),
+                                cfg.dtype_bytes);
+        for (spec, halo) in plan.shards.iter().zip(&halos) {
+            assert_eq!(
+                halo.num_imported(),
+                spec.halo_in,
+                "schedule vs plan, shard {}",
+                spec.id
+            );
+            let eng = LocalEngine::shard(&ds, 64, spec.nodes.clone()).unwrap();
+            assert_eq!(
+                eng.halo_imports(),
+                Some(spec.halo_in),
+                "live vs plan, shard {}",
+                spec.id
+            );
+        }
+    }
+
+    #[test]
+    fn version_vector_converges_under_churn() {
+        let ds = twin();
+        let fleet = Fleet::spawn_local(&ds, 64, &FleetConfig::homogeneous(3)).unwrap();
+        churn(|u| fleet.update(u).unwrap());
+        let applied = fleet.sync().unwrap();
+        assert_eq!(applied, fleet.expected_versions());
+        assert!(applied.iter().all(|&v| v == 13), "{applied:?}");
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn add_node_is_owned_and_answerable() {
+        let ds = twin();
+        let fleet = Fleet::spawn_local(&ds, 64, &FleetConfig::homogeneous(2)).unwrap();
+        // node 60 is inactive until AddNode lands
+        let err = fleet.query_wait(Some(60)).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        fleet.update(Update::AddNode).unwrap();
+        let r = fleet.query_wait(Some(60)).unwrap();
+        assert_eq!(r.shard, fleet.plan.owner[60]);
+        fleet.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,362 @@
+//! Fleet placement: GraphSplit's cost model, lifted from ops to *nodes*.
+//!
+//! The paper's GraphSplit (§IV, Step 1) decides where each op runs by
+//! comparing per-device compute cost against the host-link transfer cost
+//! of every boundary crossing. A fleet asks the same question one level
+//! up: which *partition of the graph's nodes* goes to which device, given
+//! that every cut edge forces boundary-node features across the link each
+//! round (the halo exchange, [`super::halo`]).
+//!
+//! The planner probes each candidate device with the paper's op-level
+//! cost functions ([`crate::npu::cost`]) on the real model graph — so a
+//! Series-2 NPU, a Series-1 NPU, a CPU, and an iGPU each get an honest
+//! per-node rate — then sizes contiguous shards proportional to device
+//! speed and refines the cut points by local search on the round cost
+//! `max_shard(compute + halo_link)`. Heterogeneous placement falls out:
+//! slow devices get small shards, and cuts migrate toward low-degree
+//! regions where the halo is cheap. Local search over an offline cost
+//! model is exactly the paper's GraphSplit recipe (optimal partitioning
+//! is NP-hard).
+
+use anyhow::{bail, Result};
+
+use crate::config::{DeviceKind, HardwareConfig};
+use crate::graph::Graph;
+use crate::npu::cost::{op_cost, CostOpts};
+use crate::ops::build::{self, GnnDims};
+use crate::ops::OpKind;
+
+use super::halo::link_cost_us;
+
+/// One shard's slice of the fleet plan.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    pub id: usize,
+    /// Device model this shard is pinned to.
+    pub device: HardwareConfig,
+    /// Owned node ids (contiguous in capacity space; NodePad slots
+    /// beyond the initial graph are pre-assigned so `AddNode` has an
+    /// owner from the start).
+    pub nodes: std::ops::Range<usize>,
+    /// Cost-model rate for this device on this model (µs per node per
+    /// inference round).
+    pub per_node_us: f64,
+    /// Estimated compute per round: owned nodes × rate.
+    pub est_compute_us: f64,
+    /// Boundary nodes whose features this shard must import per round.
+    pub halo_in: usize,
+    /// Owned nodes whose features peers import from this shard.
+    pub halo_out: usize,
+    /// Simulated host-link time for this shard's imports (µs/round).
+    pub est_halo_us: f64,
+}
+
+impl ShardSpec {
+    pub fn owns(&self, node: usize) -> bool {
+        self.nodes.contains(&node)
+    }
+
+    pub fn num_owned(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// A complete fleet placement.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub shards: Vec<ShardSpec>,
+    /// node id → owning shard, length = capacity.
+    pub owner: Vec<usize>,
+    /// Undirected edges whose endpoints live on different shards.
+    pub cut_edges: usize,
+    /// Estimated per-round latency: `max_shard(compute + halo)`.
+    pub est_round_us: f64,
+    /// Feature bytes crossing shard boundaries per round (all shards).
+    pub halo_bytes_per_round: usize,
+}
+
+impl FleetPlan {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn owner_of(&self, node: usize) -> Option<usize> {
+        self.owner.get(node).copied()
+    }
+}
+
+/// Per-node inference rate of `hw` on a 2-layer GCN at the workload's
+/// dimensions, from the paper's op-level cost functions: build the StaGr
+/// op graph, cost every non-input op on the device, divide by n. The
+/// NPU probes at its FP16 datapath, CPU/GPU at FP32 — the same widths
+/// [`crate::coordinator::CostModel::profile`] uses.
+pub fn per_node_us(hw: &HardwareConfig, nodes: usize, edges: usize,
+                   features: usize, classes: usize) -> Result<f64> {
+    let dims = GnnDims::model(nodes.max(2), edges.max(1), features.max(1),
+                              classes.max(2));
+    let g = build::build("gcn", "stagr", dims)?;
+    let opts = CostOpts {
+        mask_sparsity_skip: 0.0,
+        dense_dtype_bytes: if hw.kind == DeviceKind::Npu { 2 } else { 4 },
+    };
+    let mut us = 0.0;
+    for (id, op) in g.ops.iter().enumerate() {
+        if op.kind == OpKind::Input {
+            continue;
+        }
+        us += op_cost(&g, id, hw, op.kind.default_engine(), opts).us;
+    }
+    Ok(us / nodes.max(2) as f64)
+}
+
+/// Workload description the planner needs beyond the graph itself.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// NodePad capacity: the node-id space being partitioned.
+    pub capacity: usize,
+    /// Feature width (drives halo bytes and the compute probe).
+    pub features: usize,
+    pub classes: usize,
+    /// Stored bytes per feature element on the link (2 = FP16).
+    pub dtype_bytes: usize,
+}
+
+/// Plan a fleet: assign every capacity slot to one of `devices.len()`
+/// shards (one shard per roster entry, in order).
+pub fn plan(graph: &Graph, w: &Workload, devices: &[HardwareConfig])
+            -> Result<FleetPlan> {
+    if devices.is_empty() {
+        bail!("fleet plan needs at least one device");
+    }
+    if w.capacity < graph.num_nodes() {
+        bail!("capacity {} < graph nodes {}", w.capacity, graph.num_nodes());
+    }
+    let k = devices.len().min(w.capacity);
+    let edges = graph.num_edges();
+
+    // 1. probe each device's rate with the paper's cost functions
+    let mut rates = Vec::with_capacity(k);
+    for hw in &devices[..k] {
+        rates.push(per_node_us(hw, w.capacity, edges, w.features, w.classes)?);
+    }
+
+    // 2. initial contiguous cuts sized ∝ device speed
+    let speeds: Vec<f64> = rates.iter().map(|r| 1.0 / r.max(1e-12)).collect();
+    let total_speed: f64 = speeds.iter().sum();
+    let mut cuts = vec![0usize; k + 1];
+    let mut acc = 0.0;
+    for i in 0..k {
+        acc += speeds[i] / total_speed;
+        cuts[i + 1] = ((acc * w.capacity as f64).round() as usize).min(w.capacity);
+    }
+    cuts[k] = w.capacity;
+    for i in 1..k {
+        // repair rounding collapses: every shard keeps ≥1 slot (the
+        // bounds are consistent because capacity ≥ k)
+        cuts[i] = cuts[i].clamp(cuts[i - 1] + 1, w.capacity - (k - i));
+    }
+
+    // 3. local search over cut points on the round cost
+    let nbrs = graph.neighbor_lists();
+    let mut best = round_cost(&cuts, &rates, &nbrs, w, devices);
+    for _round in 0..6 {
+        let mut improved = false;
+        for i in 1..k {
+            for delta in [-64isize, -16, -4, -1, 1, 4, 16, 64] {
+                let cand = cuts[i] as isize + delta;
+                if cand <= cuts[i - 1] as isize || cand >= cuts[i + 1] as isize {
+                    continue;
+                }
+                let mut trial = cuts.clone();
+                trial[i] = cand as usize;
+                let c = round_cost(&trial, &rates, &nbrs, w, devices);
+                if c + 1e-12 < best {
+                    best = c;
+                    cuts = trial;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    // 4. materialize the plan
+    let owner: Vec<usize> = (0..w.capacity)
+        .map(|n| owner_of_cuts(&cuts, n))
+        .collect();
+    let mut cut_edges = 0;
+    for &(u, v) in graph.edges() {
+        if owner[u as usize] != owner[v as usize] {
+            cut_edges += 1;
+        }
+    }
+    let mut shards = Vec::with_capacity(k);
+    let mut halo_total_bytes = 0usize;
+    for i in 0..k {
+        let (halo_in, halo_out) = halo_counts(&cuts, i, &nbrs);
+        let bytes = halo_in * w.features * w.dtype_bytes;
+        halo_total_bytes += bytes;
+        let est_halo_us = link_cost_us(&devices[i], bytes);
+        shards.push(ShardSpec {
+            id: i,
+            device: devices[i].clone(),
+            nodes: cuts[i]..cuts[i + 1],
+            per_node_us: rates[i],
+            est_compute_us: (cuts[i + 1] - cuts[i]) as f64 * rates[i],
+            halo_in,
+            halo_out,
+            est_halo_us,
+        });
+    }
+    Ok(FleetPlan {
+        shards,
+        owner,
+        cut_edges,
+        est_round_us: best,
+        halo_bytes_per_round: halo_total_bytes,
+    })
+}
+
+fn owner_of_cuts(cuts: &[usize], node: usize) -> usize {
+    // cuts is sorted; k is small — linear scan beats binary search here
+    for i in 1..cuts.len() {
+        if node < cuts[i] {
+            return i - 1;
+        }
+    }
+    cuts.len() - 2
+}
+
+/// (imported boundary nodes, exported boundary nodes) for shard `i`.
+fn halo_counts(cuts: &[usize], i: usize, nbrs: &[Vec<u32>]) -> (usize, usize) {
+    let (lo, hi) = (cuts[i], cuts[i + 1]);
+    let mut imports = std::collections::BTreeSet::new();
+    let mut exports = std::collections::BTreeSet::new();
+    for u in lo..hi.min(nbrs.len()) {
+        for &v in &nbrs[u] {
+            let v = v as usize;
+            if v < lo || v >= hi {
+                imports.insert(v);
+                exports.insert(u);
+            }
+        }
+    }
+    (imports.len(), exports.len())
+}
+
+/// `max_shard(compute + halo_link)` for a candidate set of cuts.
+fn round_cost(cuts: &[usize], rates: &[f64], nbrs: &[Vec<u32>], w: &Workload,
+              devices: &[HardwareConfig]) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..cuts.len() - 1 {
+        let owned = cuts[i + 1] - cuts[i];
+        let (halo_in, _) = halo_counts(cuts, i, nbrs);
+        let halo_us =
+            link_cost_us(&devices[i], halo_in * w.features * w.dtype_bytes);
+        worst = worst.max(owned as f64 * rates[i] + halo_us);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::synthesize;
+
+    fn workload(capacity: usize) -> Workload {
+        Workload { capacity, features: 32, classes: 4, dtype_bytes: 2 }
+    }
+
+    #[test]
+    fn plan_covers_every_slot_exactly_once() {
+        let ds = synthesize("p", 200, 600, 4, 32, 9);
+        let devices = vec![
+            HardwareConfig::npu_series2(),
+            HardwareConfig::npu_series1(),
+            HardwareConfig::gpu(),
+            HardwareConfig::cpu(),
+        ];
+        let p = plan(&ds.graph, &workload(240), &devices).unwrap();
+        assert_eq!(p.owner.len(), 240);
+        assert_eq!(p.num_shards(), 4);
+        let mut covered = 0;
+        for s in &p.shards {
+            assert!(s.num_owned() > 0, "shard {} owns nothing", s.id);
+            covered += s.num_owned();
+            for n in s.nodes.clone() {
+                assert_eq!(p.owner[n], s.id);
+            }
+        }
+        assert_eq!(covered, 240);
+    }
+
+    #[test]
+    fn faster_devices_own_more_nodes() {
+        let ds = synthesize("p2", 300, 900, 4, 32, 11);
+        let devices = vec![HardwareConfig::npu_series2(), HardwareConfig::cpu()];
+        let p = plan(&ds.graph, &workload(300), &devices).unwrap();
+        let npu = p.shards[0].num_owned();
+        let cpu = p.shards[1].num_owned();
+        assert!(
+            npu > cpu,
+            "cost model should give the NPU the bigger shard ({npu} vs {cpu})"
+        );
+    }
+
+    #[test]
+    fn single_shard_has_no_halo() {
+        let ds = synthesize("p3", 100, 300, 3, 16, 5);
+        let devices = vec![HardwareConfig::npu_series2()];
+        let p = plan(&ds.graph, &workload(120), &devices).unwrap();
+        assert_eq!(p.cut_edges, 0);
+        assert_eq!(p.halo_bytes_per_round, 0);
+        assert_eq!(p.shards[0].halo_in, 0);
+        assert_eq!(p.shards[0].nodes, 0..120);
+    }
+
+    #[test]
+    fn multi_shard_reports_cut_and_halo() {
+        let ds = synthesize("p4", 400, 1600, 4, 32, 7);
+        let devices = vec![HardwareConfig::npu_series2(); 4];
+        let p = plan(&ds.graph, &workload(400), &devices).unwrap();
+        assert!(p.cut_edges > 0, "a connected synth graph must have cut edges");
+        assert!(p.halo_bytes_per_round > 0);
+        // halo bytes are boundary nodes × features × dtype
+        let total_imports: usize = p.shards.iter().map(|s| s.halo_in).sum();
+        assert_eq!(p.halo_bytes_per_round, total_imports * 32 * 2);
+    }
+
+    #[test]
+    fn sharding_reduces_estimated_round_cost() {
+        // large enough that compute dominates the halo link setup cost —
+        // the regime the fleet exists for
+        let ds = synthesize("p5", 2000, 8000, 4, 32, 13);
+        let one = plan(&ds.graph, &workload(2000),
+                       &[HardwareConfig::npu_series2()]).unwrap();
+        let four = plan(&ds.graph, &workload(2000),
+                        &vec![HardwareConfig::npu_series2(); 4]).unwrap();
+        assert!(
+            four.est_round_us < one.est_round_us,
+            "4 shards {} should beat 1 shard {}",
+            four.est_round_us,
+            one.est_round_us
+        );
+    }
+
+    #[test]
+    fn empty_roster_rejected() {
+        let ds = synthesize("p6", 20, 40, 2, 8, 3);
+        assert!(plan(&ds.graph, &workload(20), &[]).is_err());
+    }
+
+    #[test]
+    fn per_node_rate_orders_devices_sanely() {
+        let npu = per_node_us(&HardwareConfig::npu_series2(), 512, 2000, 64, 4)
+            .unwrap();
+        let cpu = per_node_us(&HardwareConfig::cpu(), 512, 2000, 64, 4).unwrap();
+        assert!(npu > 0.0 && cpu > 0.0);
+        assert!(npu < cpu, "NPU {npu} should out-rate CPU {cpu} on GCN");
+    }
+}

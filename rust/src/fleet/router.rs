@@ -1,0 +1,276 @@
+//! The fleet front door: fans GrAd updates to every shard, routes each
+//! query to the shard that owns the queried node, and tracks a version
+//! vector so cross-shard consistency is observable.
+//!
+//! Consistency model: every shard keeps a full structural replica (GrAd
+//! makes a structure update an O(deg) mask edit, so replicating
+//! *structure* is cheap — it is *features* that are partitioned and
+//! shipped as halos). The router sends updates to all shards over the
+//! same ordered channels that carry queries, so each shard applies every
+//! update that was sequenced before any later query — the single-leader
+//! consistency story, preserved per shard. The version vector
+//! (`expected[s]` = updates the router has sequenced to shard `s`,
+//! `applied[s]` = updates shard `s` has processed) makes convergence a
+//! checkable property instead of a hope.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{Metrics, Snapshot};
+use crate::server::{QueryResponse, Update};
+
+use super::shard::ShardWorker;
+
+/// Routes requests across a set of spawned shard workers.
+pub struct Router {
+    /// node id → owning shard (capacity space, from the [`super::placement::FleetPlan`]).
+    owner: Vec<usize>,
+    shards: Vec<ShardWorker>,
+    /// Updates sequenced to each shard (the router's half of the vector).
+    expected: Vec<AtomicU64>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn new(owner: Vec<usize>, shards: Vec<ShardWorker>) -> Router {
+        assert!(!shards.is_empty(), "router needs at least one shard");
+        let expected = shards.iter().map(|_| AtomicU64::new(0)).collect();
+        Router { owner, shards, expected, next_id: AtomicU64::new(1) }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard answers queries for `node`. Nodes beyond the plan's
+    /// capacity fall through to shard 0, whose engine rejects them with
+    /// the same out-of-range error the single-leader server produced.
+    pub fn owner_of(&self, node: usize) -> usize {
+        self.owner.get(node).copied().unwrap_or(0)
+    }
+
+    /// Sequence a GrAd update to every shard (structure is replicated;
+    /// channel order guarantees it lands before any later query). Every
+    /// *live* shard is sequenced even if one has died — surviving
+    /// replicas must not diverge because of an early-return on a dead
+    /// peer — and `expected` only counts sends that were accepted, so
+    /// the vector stays meaningful per shard. The first failure is
+    /// still reported.
+    pub fn update(&self, u: Update) -> Result<()> {
+        let mut first_err = None;
+        for (s, shard) in self.shards.iter().enumerate() {
+            match shard.update(u.clone()) {
+                Ok(()) => {
+                    self.expected[s].fetch_add(1, Ordering::AcqRel);
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Submit a query; `None` means "the full graph" and routes like the
+    /// single-leader server: answered from node 0's owner.
+    pub fn query(&self, node: Option<usize>)
+                 -> Result<Receiver<Result<QueryResponse, String>>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard = self.owner_of(node.unwrap_or(0));
+        self.shards[shard].query_with_id(id, node)
+    }
+
+    /// Blocking convenience: query and wait.
+    pub fn query_wait(&self, node: Option<usize>) -> Result<QueryResponse> {
+        let rx = self.query(node)?;
+        rx.recv()
+            .map_err(|_| anyhow!("shard dropped response"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Barrier every shard: returns the applied version vector once every
+    /// previously-sequenced event has been processed fleet-wide.
+    pub fn sync(&self) -> Result<Vec<u64>> {
+        self.shards.iter().map(|s| s.sync()).collect()
+    }
+
+    /// Updates sequenced per shard (the router's send-side counts).
+    pub fn expected_versions(&self) -> Vec<u64> {
+        self.expected.iter().map(|v| v.load(Ordering::Acquire)).collect()
+    }
+
+    /// Updates applied per shard (the workers' receive-side counts).
+    pub fn applied_versions(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.applied_version()).collect()
+    }
+
+    /// Exact fleet-wide aggregate (raw samples merged across shards).
+    pub fn metrics(&self) -> Snapshot {
+        Metrics::merged(self.shards.iter().map(|s| s.metrics.as_ref()))
+    }
+
+    /// Per-shard labeled snapshots.
+    pub fn shard_metrics(&self) -> Vec<Snapshot> {
+        self.shards.iter().map(|s| s.metrics.snapshot()).collect()
+    }
+
+    /// Stop every shard and join them all. Every worker is joined even if
+    /// an early one failed; the first failure is returned (with the other
+    /// failures appended) so a crash on shard 3 cannot hide behind a
+    /// clean shutdown on shard 0.
+    pub fn shutdown(mut self) -> Result<()> {
+        let mut failures: Vec<String> = Vec::new();
+        for shard in self.shards.drain(..) {
+            if let Err(e) = shard.shutdown() {
+                failures.push(format!("{e:#}"));
+            }
+        }
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("{}", failures.join("; ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::admission::AdmissionConfig;
+    use crate::fleet::shard::ShardConfig;
+    use crate::server::{InferenceEngine, ServerConfig};
+    use crate::tensor::Mat;
+    use std::time::Duration;
+
+    /// Engine that stamps predictions with its shard id so routing is
+    /// observable: prediction = shard * 100 + node (mod classes=1000…
+    /// just use wide logits).
+    struct Stamp {
+        shard: usize,
+        nodes: usize,
+    }
+
+    impl InferenceEngine for Stamp {
+        fn apply(&mut self, _: &crate::server::Update) -> anyhow::Result<u64> {
+            Ok(0)
+        }
+        fn infer(&mut self) -> anyhow::Result<Mat> {
+            let classes = 1000;
+            let mut m = Mat::zeros(self.nodes, classes);
+            for i in 0..self.nodes {
+                m[(i, (self.shard * 100 + i) % classes)] = 1.0;
+            }
+            Ok(m)
+        }
+        fn num_nodes(&self) -> usize {
+            self.nodes
+        }
+    }
+
+    fn cfg() -> ShardConfig {
+        ShardConfig {
+            batch: ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            admission: AdmissionConfig::unbounded(),
+            halo: None,
+        }
+    }
+
+    fn two_shard_router() -> Router {
+        // nodes 0..5 on shard 0, 5..10 on shard 1
+        let owner: Vec<usize> = (0..10).map(|n| usize::from(n >= 5)).collect();
+        let shards = vec![
+            ShardWorker::spawn(0, || Ok(Stamp { shard: 0, nodes: 10 }), cfg()),
+            ShardWorker::spawn(1, || Ok(Stamp { shard: 1, nodes: 10 }), cfg()),
+        ];
+        Router::new(owner, shards)
+    }
+
+    #[test]
+    fn queries_reach_the_owning_shard() {
+        let r = two_shard_router();
+        let a = r.query_wait(Some(2)).unwrap();
+        assert_eq!(a.shard, 0);
+        assert_eq!(a.prediction, 2);
+        let b = r.query_wait(Some(7)).unwrap();
+        assert_eq!(b.shard, 1);
+        assert_eq!(b.prediction, 107);
+        r.shutdown().unwrap();
+    }
+
+    #[test]
+    fn none_routes_like_the_single_leader() {
+        let r = two_shard_router();
+        let a = r.query_wait(None).unwrap();
+        assert_eq!(a.shard, 0, "full-graph queries answer from node 0's owner");
+        r.shutdown().unwrap();
+    }
+
+    #[test]
+    fn version_vector_converges_after_fanout() {
+        let r = two_shard_router();
+        for i in 0..7 {
+            r.update(crate::server::Update::AddEdge(i, i + 1)).unwrap();
+        }
+        assert_eq!(r.expected_versions(), vec![7, 7]);
+        let applied = r.sync().unwrap();
+        assert_eq!(applied, vec![7, 7], "all shards caught up after barrier");
+        assert_eq!(r.applied_versions(), vec![7, 7]);
+        r.shutdown().unwrap();
+    }
+
+    #[test]
+    fn out_of_capacity_query_rejected_by_engine() {
+        let r = two_shard_router();
+        let err = r.query_wait(Some(999)).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        r.shutdown().unwrap();
+    }
+
+    #[test]
+    fn merged_metrics_count_across_shards() {
+        let r = two_shard_router();
+        let _ = r.query_wait(Some(1)).unwrap();
+        let _ = r.query_wait(Some(8)).unwrap();
+        let _ = r.query_wait(Some(9)).unwrap();
+        let snap = r.metrics();
+        assert_eq!(snap.queries, 3);
+        let per = r.shard_metrics();
+        assert_eq!(per[0].shard, Some(0));
+        assert_eq!(per[0].queries, 1);
+        assert_eq!(per[1].queries, 2);
+        r.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_propagates_any_shard_failure() {
+        struct Bad;
+        impl InferenceEngine for Bad {
+            fn apply(&mut self, _: &crate::server::Update) -> anyhow::Result<u64> {
+                Ok(0)
+            }
+            fn infer(&mut self) -> anyhow::Result<Mat> {
+                panic!("shard 1 died");
+            }
+            fn num_nodes(&self) -> usize {
+                10
+            }
+        }
+        let owner: Vec<usize> = (0..10).map(|n| usize::from(n >= 5)).collect();
+        let shards = vec![
+            ShardWorker::spawn(0, || Ok(Stamp { shard: 0, nodes: 10 }), cfg()),
+            ShardWorker::spawn(1, || Ok(Bad), cfg()),
+        ];
+        let r = Router::new(owner, shards);
+        // trip the bad shard
+        let _ = r.query_wait(Some(7));
+        let err = r.shutdown().unwrap_err().to_string();
+        assert!(err.contains("shard 1 died"), "{err}");
+    }
+}

@@ -1,0 +1,512 @@
+//! The shard worker: one thread, one engine, one partition.
+//!
+//! This is the fleet's generalization of the old `server` leader loop —
+//! the single-leader [`crate::server::ServerHandle`] is now literally a
+//! one-shard fleet with no halo and unbounded admission. Each worker:
+//!
+//! - owns its [`InferenceEngine`] (constructed *inside* the thread: PJRT
+//!   handles are not `Send`),
+//! - applies GrAd updates in arrival order and publishes its applied
+//!   count as its component of the fleet's version vector,
+//! - coalesces queries through a [`Batcher`], shedding load at arrival
+//!   when the [`Admission`] bound is hit,
+//! - charges its [`HaloSpec`] link traffic before every inference round,
+//! - and on panic rejects every in-flight query explicitly (counted in
+//!   `Metrics::rejected`) before surfacing the panic message as an `Err`
+//!   from [`ShardWorker::shutdown`] — a crash must never strand callers
+//!   on a response channel.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{Batcher, Request};
+use crate::metrics::Metrics;
+use crate::server::{InferenceEngine, QueryResponse, ServerConfig, Update};
+
+use super::admission::{Admission, AdmissionConfig};
+use super::halo::HaloSpec;
+
+/// Events a shard worker consumes, in arrival order.
+pub enum ShardEvent {
+    Update(Update),
+    Query {
+        req: Request,
+        resp: Sender<Result<QueryResponse, String>>,
+    },
+    /// Ordered barrier: replies with the shard's applied-update count
+    /// once every earlier event has been processed.
+    Sync(Sender<u64>),
+    Shutdown,
+}
+
+/// Tuning for one shard worker.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    pub batch: ServerConfig,
+    pub admission: AdmissionConfig,
+    /// Boundary traffic charged per inference round (None = no halo).
+    pub halo: Option<HaloSpec>,
+}
+
+impl ShardConfig {
+    /// The single-leader server's historical behavior: no halo, no shed.
+    pub fn leader(batch: ServerConfig) -> ShardConfig {
+        ShardConfig { batch, admission: AdmissionConfig::unbounded(), halo: None }
+    }
+}
+
+/// Handle to one spawned shard worker.
+pub struct ShardWorker {
+    pub id: usize,
+    tx: Sender<ShardEvent>,
+    pub metrics: Arc<Metrics>,
+    join: Option<JoinHandle<Result<()>>>,
+    applied: Arc<AtomicU64>,
+}
+
+impl ShardWorker {
+    /// Spawn the worker thread. `factory` runs inside it.
+    pub fn spawn<F, E>(id: usize, factory: F, config: ShardConfig) -> ShardWorker
+    where
+        F: FnOnce() -> Result<E> + Send + 'static,
+        E: InferenceEngine,
+    {
+        let (tx, rx) = channel::<ShardEvent>();
+        let metrics = Arc::new(Metrics::new_shard(id));
+        let applied = Arc::new(AtomicU64::new(0));
+        let (m, a) = (metrics.clone(), applied.clone());
+        let join =
+            std::thread::spawn(move || run_shard(id, factory, rx, m, a, config));
+        ShardWorker { id, tx, metrics, join: Some(join), applied }
+    }
+
+    pub fn send(&self, ev: ShardEvent) -> Result<()> {
+        self.tx
+            .send(ev)
+            .map_err(|_| anyhow!("shard {} stopped", self.id))
+    }
+
+    /// Apply a GrAd update (ordered before any later query to this shard).
+    pub fn update(&self, u: Update) -> Result<()> {
+        self.send(ShardEvent::Update(u))
+    }
+
+    /// Submit a query with a caller-assigned id; returns the response
+    /// channel. Routing (which shard owns the node) is the router's job.
+    pub fn query_with_id(&self, id: u64, node: Option<usize>)
+                         -> Result<Receiver<Result<QueryResponse, String>>> {
+        let (resp_tx, resp_rx) = channel();
+        self.send(ShardEvent::Query {
+            req: Request { id, node, enqueued: Instant::now() },
+            resp: resp_tx,
+        })?;
+        Ok(resp_rx)
+    }
+
+    /// Updates this shard has applied (its version-vector component).
+    pub fn applied_version(&self) -> u64 {
+        self.applied.load(Ordering::Acquire)
+    }
+
+    /// Ordered barrier: blocks until every event sent before this call
+    /// has been processed; returns the applied-update count.
+    pub fn sync(&self) -> Result<u64> {
+        let (tx, rx) = channel();
+        self.send(ShardEvent::Sync(tx))?;
+        rx.recv().map_err(|_| anyhow!("shard {} died during sync", self.id))
+    }
+
+    /// Stop the worker and join it. A worker panic surfaces as an `Err`
+    /// carrying the panic message — never a hang, never a swallowed join.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(ShardEvent::Shutdown);
+        match self.join.take() {
+            None => Ok(()),
+            Some(j) => match j.join() {
+                Ok(r) => r,
+                // run_shard catches panics and converts them to Err, so a
+                // panicking join here means the panic escaped catch_unwind
+                // (e.g. a panic while poisoning); still surface it.
+                Err(payload) => Err(anyhow!(
+                    "shard worker panicked: {}",
+                    panic_message(&payload)
+                )),
+            },
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ShardEvent::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+type Waiting = std::collections::BTreeMap<u64, Sender<Result<QueryResponse, String>>>;
+
+fn run_shard<F, E>(id: usize, factory: F, rx: Receiver<ShardEvent>,
+                   metrics: Arc<Metrics>, applied: Arc<AtomicU64>,
+                   config: ShardConfig) -> Result<()>
+where
+    F: FnOnce() -> Result<E>,
+    E: InferenceEngine,
+{
+    let mut engine = match catch_unwind(AssertUnwindSafe(factory)) {
+        Ok(Ok(e)) => e,
+        Ok(Err(e)) => {
+            let msg = format!("shard {id} engine init failed: {e:#}");
+            reject_all(&rx, &mut Waiting::new(), &metrics, &msg);
+            return Err(anyhow!(msg));
+        }
+        Err(payload) => {
+            let msg = format!(
+                "shard {id} engine init panicked: {}",
+                panic_message(&payload)
+            );
+            reject_all(&rx, &mut Waiting::new(), &metrics, &msg);
+            return Err(anyhow!(msg));
+        }
+    };
+    let batcher = Batcher::new(config.batch.max_batch, config.batch.max_wait);
+    let mut admission = Admission::new(config.admission);
+    let mut waiting = Waiting::new();
+
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        shard_loop(
+            id,
+            &mut engine,
+            &rx,
+            &batcher,
+            &mut waiting,
+            &mut admission,
+            &metrics,
+            &applied,
+            &config,
+        )
+    }));
+    match result {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg =
+                format!("shard {id} worker panicked: {}", panic_message(&payload));
+            reject_all(&rx, &mut waiting, &metrics, &msg);
+            Err(anyhow!(msg))
+        }
+    }
+}
+
+/// Reject every in-flight query — both those already handed to the
+/// batcher (their responders live in `waiting`) and those still queued in
+/// the event channel — with an explicit error, counting each rejection.
+fn reject_all(rx: &Receiver<ShardEvent>, waiting: &mut Waiting,
+              metrics: &Metrics, msg: &str) {
+    for (_, resp) in std::mem::take(waiting) {
+        metrics.record_rejected();
+        let _ = resp.send(Err(msg.to_string()));
+    }
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            ShardEvent::Query { resp, .. } => {
+                metrics.record_rejected();
+                let _ = resp.send(Err(msg.to_string()));
+            }
+            // dropping the responder makes a concurrent sync() error out
+            ShardEvent::Sync(_) => {}
+            ShardEvent::Update(_) | ShardEvent::Shutdown => {}
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_loop<E: InferenceEngine>(
+    id: usize, engine: &mut E, rx: &Receiver<ShardEvent>, batcher: &Batcher,
+    waiting: &mut Waiting, admission: &mut Admission, metrics: &Metrics,
+    applied: &Arc<AtomicU64>, config: &ShardConfig,
+) -> Result<()> {
+    let mut open = true;
+    while open || batcher.pending() > 0 {
+        // ingest events for up to the batching window
+        match rx.recv_timeout(config.batch.max_wait.min(Duration::from_millis(1))) {
+            Ok(ShardEvent::Update(u)) => {
+                match engine.apply(&u) {
+                    Ok(_) => metrics.record_mask_update(),
+                    // capacity exhaustion etc: drop the update, count it
+                    Err(_) => metrics.record_rejected(),
+                }
+                // the version vector counts *sequenced* updates, applied
+                // or shed — convergence means "nothing outstanding", not
+                // "nothing ever failed"
+                let v = applied.fetch_add(1, Ordering::AcqRel) + 1;
+                batcher.note_update(v);
+            }
+            Ok(ShardEvent::Query { req, resp }) => {
+                if let Some(n) = req.node {
+                    if n >= engine.num_nodes() {
+                        metrics.record_rejected();
+                        let _ = resp.send(Err(format!(
+                            "node {n} out of range ({} active)",
+                            engine.num_nodes()
+                        )));
+                        continue;
+                    }
+                }
+                if !admission.admit(batcher.pending()) {
+                    metrics.record_rejected();
+                    let _ = resp.send(Err(format!(
+                        "shard {id} overloaded: {} queries pending (cap {})",
+                        batcher.pending(),
+                        admission.config().max_pending
+                    )));
+                    continue;
+                }
+                waiting.insert(req.id, resp);
+                batcher.submit(req);
+            }
+            Ok(ShardEvent::Sync(tx)) => {
+                let _ = tx.send(applied.load(Ordering::Acquire));
+            }
+            Ok(ShardEvent::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                open = false;
+                batcher.close();
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+
+        // flush a batch if ready
+        if let Some(batch) = batcher.try_batch() {
+            // halo exchange precedes the round: boundary features must be
+            // resident before aggregation can touch cut edges. Prefer the
+            // engine's live import count (tracks GrAd churn); fall back
+            // to the plan-time schedule for engines that can't report it.
+            if let Some(h) = &config.halo {
+                let (bytes, us) = match engine.halo_imports() {
+                    Some(n) => {
+                        let b = n * h.bytes_per_import;
+                        (b, h.cost_us(b))
+                    }
+                    None => (h.bytes_per_round, h.link_us_per_round),
+                };
+                if bytes > 0 {
+                    metrics.record_halo(bytes, us);
+                }
+            }
+            let t0 = Instant::now();
+            let result = engine.infer();
+            let latency_us = t0.elapsed().as_secs_f64() * 1e6;
+            let size = batch.requests.len();
+            match result {
+                Ok(logits) => {
+                    let preds = logits.argmax_rows();
+                    for req in batch.requests {
+                        let node = req.node.unwrap_or(0);
+                        let queue_us =
+                            req.enqueued.elapsed().as_secs_f64() * 1e6 - latency_us;
+                        metrics.record_query(latency_us, queue_us.max(0.0), size);
+                        if let Some(resp) = waiting.remove(&req.id) {
+                            let _ = resp.send(Ok(QueryResponse {
+                                id: req.id,
+                                shard: id,
+                                prediction: preds
+                                    .get(node)
+                                    .map(|&p| p as i32)
+                                    .unwrap_or(-1),
+                                latency_us,
+                                batch_size: size,
+                            }));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("shard {id} inference failed: {e:#}");
+                    for req in batch.requests {
+                        metrics.record_rejected();
+                        if let Some(resp) = waiting.remove(&req.id) {
+                            let _ = resp.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    /// Deterministic engine: prediction = (node + applied updates) % 4.
+    struct Versioned {
+        nodes: usize,
+        version: u64,
+    }
+
+    impl InferenceEngine for Versioned {
+        fn apply(&mut self, _u: &Update) -> Result<u64> {
+            self.version += 1;
+            Ok(self.version)
+        }
+        fn infer(&mut self) -> Result<Mat> {
+            let mut m = Mat::zeros(self.nodes, 4);
+            for i in 0..self.nodes {
+                m[(i, (i + self.version as usize) % 4)] = 1.0;
+            }
+            Ok(m)
+        }
+        fn num_nodes(&self) -> usize {
+            self.nodes
+        }
+    }
+
+    fn cfg() -> ShardConfig {
+        ShardConfig::leader(ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        })
+    }
+
+    fn spawn_versioned() -> ShardWorker {
+        ShardWorker::spawn(0, || Ok(Versioned { nodes: 10, version: 0 }), cfg())
+    }
+
+    #[test]
+    fn orders_updates_before_queries() {
+        let w = spawn_versioned();
+        w.update(Update::AddNode).unwrap();
+        w.update(Update::AddNode).unwrap();
+        let r = w.query_with_id(1, Some(3)).unwrap().recv().unwrap().unwrap();
+        assert_eq!(r.prediction, 1); // (3 + 2) % 4
+        assert_eq!(r.shard, 0);
+        assert_eq!(w.applied_version(), 2);
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sync_is_an_ordered_barrier() {
+        let w = spawn_versioned();
+        for _ in 0..5 {
+            w.update(Update::AddEdge(0, 1)).unwrap();
+        }
+        assert_eq!(w.sync().unwrap(), 5);
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn admission_sheds_when_bounded() {
+        // a long batching window lets the queue build while the worker is
+        // still ingesting, so arrivals past the bound hit the shed path
+        let w = ShardWorker::spawn(
+            1,
+            || Ok(Versioned { nodes: 4, version: 0 }),
+            ShardConfig {
+                batch: ServerConfig {
+                    max_batch: 100,
+                    max_wait: Duration::from_millis(50),
+                },
+                admission: AdmissionConfig::bounded(2),
+                halo: None,
+            },
+        );
+        let rxs: Vec<_> = (0..12)
+            .map(|i| w.query_with_id(i, Some(0)).unwrap())
+            .collect();
+        let (mut ok, mut shed) = (0usize, 0usize);
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Err(e) if e.contains("overloaded") => shed += 1,
+                Ok(_) => ok += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(shed > 0, "bounded admission should shed under backlog");
+        assert_eq!(ok + shed, 12);
+        assert!(w.metrics.snapshot().rejected >= shed);
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn halo_charged_once_per_round() {
+        let mut halo = HaloSpec::empty(0);
+        halo.bytes_per_round = 1024;
+        halo.link_us_per_round = 5.0;
+        let w = ShardWorker::spawn(
+            0,
+            || Ok(Versioned { nodes: 10, version: 0 }),
+            ShardConfig {
+                batch: ServerConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                },
+                admission: AdmissionConfig::unbounded(),
+                halo: Some(halo),
+            },
+        );
+        let _ = w.query_with_id(1, Some(0)).unwrap().recv().unwrap().unwrap();
+        let snap = w.metrics.snapshot();
+        assert_eq!(snap.halo_rounds, 1);
+        assert_eq!(snap.halo_bytes, 1024);
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn panic_rejects_in_flight_and_surfaces_in_shutdown() {
+        struct Exploding;
+        impl InferenceEngine for Exploding {
+            fn apply(&mut self, _: &Update) -> Result<u64> {
+                Ok(0)
+            }
+            fn infer(&mut self) -> Result<Mat> {
+                panic!("mask buffer corrupted");
+            }
+            fn num_nodes(&self) -> usize {
+                8
+            }
+        }
+        let w = ShardWorker::spawn(2, || Ok(Exploding), cfg());
+        let rx = w.query_with_id(1, Some(0)).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("mask buffer corrupted"), "{err}");
+        assert!(w.metrics.snapshot().rejected >= 1);
+        let shut = w.shutdown().unwrap_err().to_string();
+        assert!(shut.contains("mask buffer corrupted"), "{shut}");
+    }
+
+    #[test]
+    fn engine_init_failure_rejects_queued_queries() {
+        let w: ShardWorker = ShardWorker::spawn(
+            3,
+            || -> Result<Versioned> {
+                std::thread::sleep(Duration::from_millis(10));
+                Err(anyhow!("no artifacts"))
+            },
+            cfg(),
+        );
+        let rx = w.query_with_id(1, Some(0)).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("engine init failed"), "{err}");
+        let shut = w.shutdown().unwrap_err().to_string();
+        assert!(shut.contains("no artifacts"), "{shut}");
+    }
+}

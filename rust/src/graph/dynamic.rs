@@ -77,6 +77,14 @@ impl DynamicGraph {
         self.edges.contains(&key)
     }
 
+    /// Live neighbor set of `u` (undirected, no self loops) — the
+    /// incrementally-maintained sets the mask updates run on, exposed so
+    /// consumers (fleet shards, halo accounting) never rebuild adjacency
+    /// from a snapshot.
+    pub fn neighbors(&self, u: usize) -> &BTreeSet<u32> {
+        &self.nbrs[u]
+    }
+
     /// The GrAd norm mask, ready to feed the `*_grad` artifacts.
     pub fn norm(&self) -> &Mat {
         &self.norm
@@ -255,6 +263,103 @@ mod tests {
     fn capacity_below_initial_rejected() {
         let g = Graph::new(4, &[(0, 1)]);
         assert!(DynamicGraph::new(&g, 3).is_err());
+    }
+
+    /// Interleaved AddNode/AddEdge/RemoveEdge sequences, checked against
+    /// a plain mirror model: the CSR of the snapshot must keep its
+    /// invariants (sorted, deduplicated, symmetric, self-loop-free rows
+    /// that match the mirror edge set exactly) and the incrementally-
+    /// maintained masks must equal a from-scratch rebuild — i.e. every
+    /// update invalidated exactly what it had to.
+    #[test]
+    fn prop_interleaved_grad_preserves_csr_and_masks() {
+        use crate::graph::Csr;
+        forall("grad interleaved node/edge round-trips", 20, |gen| {
+            let n0 = gen.usize(2, 8);
+            let cap = n0 + gen.usize(1, 6);
+            let mut dg = DynamicGraph::new(&Graph::new(n0, &[]), cap).unwrap();
+            // mirror model: plain node count + undirected edge set
+            let mut nodes = n0;
+            let mut edges = std::collections::BTreeSet::new();
+            for _ in 0..gen.usize(1, 40) {
+                match gen.usize(0, 3) {
+                    0 if nodes < cap => {
+                        assert_eq!(dg.add_node().unwrap(), nodes);
+                        nodes += 1;
+                    }
+                    1 => {
+                        let u = gen.rng().usize(nodes);
+                        let v = gen.rng().usize(nodes);
+                        if u == v {
+                            continue;
+                        }
+                        let key = (u.min(v) as u32, u.max(v) as u32);
+                        let changed = edges.insert(key);
+                        assert_eq!(
+                            dg.add_edge(u, v).unwrap(),
+                            changed,
+                            "add_edge changed-ness must match the mirror"
+                        );
+                    }
+                    _ => {
+                        let u = gen.rng().usize(nodes);
+                        let v = gen.rng().usize(nodes);
+                        if u == v {
+                            continue;
+                        }
+                        let key = (u.min(v) as u32, u.max(v) as u32);
+                        let removed = edges.remove(&key);
+                        assert_eq!(dg.remove_edge(u, v).unwrap(), removed);
+                    }
+                }
+            }
+            assert_eq!(dg.num_nodes(), nodes);
+            assert_eq!(dg.num_edges(), edges.len());
+
+            // CSR invariants on the snapshot
+            let snap = dg.snapshot();
+            let csr = Csr::from_graph(&snap);
+            assert_eq!(csr.num_nodes(), nodes);
+            assert_eq!(csr.nnz(), 2 * edges.len());
+            for i in 0..nodes {
+                let row = csr.neighbors(i);
+                for w in row.windows(2) {
+                    assert!(w[0] < w[1], "row {i} not strictly sorted: {row:?}");
+                }
+                for &j in row {
+                    assert_ne!(j as usize, i, "self loop surfaced in CSR");
+                    assert!(csr.has_edge(j as usize, i), "asymmetric CSR");
+                }
+            }
+            for &(u, v) in &edges {
+                assert!(csr.has_edge(u as usize, v as usize));
+            }
+
+            // mask invalidation: incremental == rebuild after the whole
+            // interleaving, at full NodePad capacity
+            let want_norm = snap.norm_adjacency(cap);
+            assert!(
+                dg.norm().max_abs_diff(&want_norm) < 1e-5,
+                "norm drifted {}",
+                dg.norm().max_abs_diff(&want_norm)
+            );
+            let want_bias = snap.neg_bias(cap);
+            assert!(dg.neg_bias().max_abs_diff(&want_bias) < 1e-5);
+        });
+    }
+
+    /// The duplicate-add case above never counts as applied; make the
+    /// `updates` telemetry contract explicit for an interleaved sequence.
+    #[test]
+    fn updates_counter_tracks_effective_changes() {
+        let mut dg = base();
+        let before = dg.updates;
+        assert!(dg.add_edge(0, 2).unwrap());
+        assert!(!dg.add_edge(0, 2).unwrap()); // duplicate: not counted
+        dg.add_node().unwrap();
+        assert!(dg.remove_edge(0, 2).unwrap());
+        assert!(!dg.remove_edge(0, 2).unwrap()); // absent: not counted
+        assert_eq!(dg.updates - before, 3);
     }
 
     #[test]

@@ -27,14 +27,37 @@
 //! | [`quant`] | QuantGr: symmetric static INT8 |
 //! | [`coordinator`] | GraphSplit partitioner, planner, executor, batcher, CacheG |
 //! | [`runtime`] | PJRT client, artifact registry, `.gnnt` IO |
-//! | [`server`] | dynamic-graph serving: router, workers, GrAd updates |
-//! | [`metrics`] | latency/energy/throughput accounting |
+//! | [`server`] | dynamic-graph serving: the single-leader front end |
+//! | [`fleet`] | sharded multi-device serving: placement, halo exchange, routing, admission |
+//! | [`metrics`] | latency/energy/throughput/halo accounting (per-shard sinks) |
 //! | [`bench`] | the in-tree benchmark harness + paper-figure drivers |
+//!
+//! ## Scaling model (the `fleet` layer)
+//!
+//! One logical graph is served by `N` shard workers, each pinned to a
+//! simulated device (Series-1/2 NPU, CPU, iGPU). Per inference round,
+//! shard `s` costs
+//!
+//! ```text
+//! round(s) = owned(s) · rate(device_s)                    — compute
+//!          + setup + halo_in(s) · F · dtype / bandwidth   — halo exchange
+//! ```
+//!
+//! and the fleet's round latency is `max_s round(s)`. `rate` comes from
+//! the paper's op-level cost functions ([`npu::cost`]) probed on the real
+//! model graph; the halo term charges boundary-node features over the
+//! same host link GraphSplit boundary crossings pay. Adding shards
+//! shrinks `owned(s)` linearly while growing the cut — the placement
+//! planner ([`fleet::placement`]) stops cutting where the link cost
+//! overtakes the compute win, which is GraphSplit's §IV tradeoff lifted
+//! from ops to nodes. The single-leader [`server`] is the 1-shard
+//! special case (no halo, unbounded admission).
 
 pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod graph;
 pub mod metrics;
 pub mod npu;

@@ -103,6 +103,15 @@ fn main() -> Result<()> {
             let query_ratio = args.f64_opt("query-ratio", 0.3)?;
             serve_demo(&artifacts, &dataset, events, query_ratio)?;
         }
+        Some("fleet") => {
+            let shards = args.usize_opt("shards", 4)?;
+            let nodes = args.usize_opt("nodes", 512)?;
+            let edges = args.usize_opt("edges", 2048)?;
+            let events = args.usize_opt("events", 4000)?;
+            let query_ratio = args.f64_opt("query-ratio", 0.4)?;
+            let devices = args.str_list_opt("devices", "series2,series1,gpu,cpu");
+            fleet_demo(shards, nodes, edges, events, query_ratio, &devices)?;
+        }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
     }
@@ -121,6 +130,9 @@ subcommands:
   accuracy           accuracy table over all artifacts (--dataset cora)
   split              GraphSplit placement report (--model, --variant)
   serve              dynamic knowledge-graph serving demo
+  fleet              sharded multi-device serving demo (offline, no artifacts)
+                     (--shards N --devices series2,cpu,… --nodes --edges
+                      --events --query-ratio)
 
 common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
                 --artifacts DIR
@@ -208,5 +220,101 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
         snap.mask_updates, snap.mean_batch, snap.throughput_qps
     );
     server.shutdown()?;
+    Ok(())
+}
+
+/// Sharded serving demo over a synthetic knowledge graph — fully
+/// offline: artifact-free [`grannite::fleet::LocalEngine`] shards placed
+/// on simulated devices by the cost model.
+fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
+              query_ratio: f64, device_names: &[String]) -> Result<()> {
+    use grannite::fleet::{Fleet, FleetConfig};
+    use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+    use grannite::server::Update;
+
+    if device_names.is_empty() {
+        bail!("--devices needs at least one preset name (series2|series1|gpu|cpu)");
+    }
+    let roster: Vec<String> = (0..shards.max(1))
+        .map(|i| device_names[i % device_names.len()].clone())
+        .collect();
+    let cfg = FleetConfig::from_names(&roster)?;
+    let capacity = nodes + nodes / 8;
+    let ds = grannite::graph::datasets::synthesize("fleet", nodes, edges, 6, 64, 42);
+    let fleet = Fleet::spawn_local(&ds, capacity, &cfg)?;
+
+    let mut t = Table::new(
+        format!("fleet placement — {shards} shards over {nodes} nodes"),
+        &["shard", "device", "owned", "rate µs/node", "halo in/out", "est round"],
+    );
+    for s in &fleet.plan.shards {
+        t.row(&[
+            format!("#{}", s.id),
+            s.device.name.clone(),
+            s.num_owned().to_string(),
+            format!("{:.3}", s.per_node_us),
+            format!("{}/{}", s.halo_in, s.halo_out),
+            grannite::util::human_us(s.est_compute_us + s.est_halo_us),
+        ]);
+    }
+    t.print();
+    println!(
+        "cut edges: {}  halo {}/round  est round {}",
+        fleet.plan.cut_edges,
+        grannite::util::human_bytes(fleet.plan.halo_bytes_per_round),
+        grannite::util::human_us(fleet.plan.est_round_us)
+    );
+
+    let stream = KnowledgeGraphStream::new(nodes, capacity, query_ratio, 7);
+    let mut rng = grannite::util::Rng::new(3);
+    let mut pending = Vec::new();
+    for ev in stream.take(events) {
+        match ev {
+            GraphEvent::AddEdge(u, v) => fleet.update(Update::AddEdge(u, v))?,
+            GraphEvent::RemoveEdge(u, v) => fleet.update(Update::RemoveEdge(u, v))?,
+            GraphEvent::AddNode => fleet.update(Update::AddNode)?,
+            GraphEvent::Query => pending.push(fleet.query(Some(rng.usize(nodes)))?),
+        }
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+
+    let mut pt = Table::new(
+        "per-shard serving metrics",
+        &["shard", "queries", "rejected", "p50", "p99", "halo bytes"],
+    );
+    for snap in fleet.shard_metrics() {
+        let (p50, p99) = snap
+            .latency
+            .as_ref()
+            .map(|l| (grannite::util::human_us(l.p50), grannite::util::human_us(l.p99)))
+            .unwrap_or_else(|| ("n/a".into(), "n/a".into()));
+        pt.row(&[
+            snap.shard.map(|s| format!("#{s}")).unwrap_or_default(),
+            snap.queries.to_string(),
+            snap.rejected.to_string(),
+            p50,
+            p99,
+            grannite::util::human_bytes(snap.halo_bytes),
+        ]);
+    }
+    pt.print();
+
+    let (expected, applied) = (fleet.expected_versions(), fleet.applied_versions());
+    let agg = fleet.metrics();
+    println!("answered {ok} queries over {events} events");
+    println!(
+        "aggregate: {:.1} q/s  mean batch {:.1}  halo {} over {} rounds",
+        agg.throughput_qps,
+        agg.mean_batch,
+        grannite::util::human_bytes(agg.halo_bytes),
+        agg.halo_rounds
+    );
+    println!("version vector: sequenced {expected:?} applied {applied:?}");
+    fleet.shutdown()?;
     Ok(())
 }

@@ -1,12 +1,18 @@
-//! Serving metrics: latency histograms, throughput windows, energy
-//! accounting — what the server and benches report.
+//! Serving metrics: latency histograms, throughput windows, energy and
+//! halo-traffic accounting — what the server, the fleet, and benches
+//! report.
+//!
+//! One [`Metrics`] sink per shard worker keeps the hot path free of a
+//! global lock; fleet-level reporting merges per-shard sinks at snapshot
+//! time ([`Metrics::merged`]) so aggregate p50/p99 come from the raw
+//! samples, not from lossy per-shard summaries.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::timing::Stats;
 
-/// Thread-safe metrics sink for the serving path.
+/// Thread-safe metrics sink for one serving worker (shard or leader).
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -14,31 +20,57 @@ pub struct Metrics {
 
 #[derive(Debug, Default)]
 struct Inner {
+    /// Shard label. Every worker-owned sink carries one — the
+    /// single-leader server is shard 0 of a one-shard fleet. None only
+    /// for unlabeled standalone sinks and merged snapshots.
+    shard: Option<usize>,
     latencies_us: Vec<f64>,
     queue_us: Vec<f64>,
     batch_sizes: Vec<usize>,
     mask_updates: usize,
     queries: usize,
     rejected: usize,
+    /// Halo-exchange accounting (fleet boundary traffic).
+    halo_bytes: usize,
+    halo_us: f64,
+    halo_rounds: usize,
     started: Option<Instant>,
 }
 
 /// A snapshot of aggregated serving metrics.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
+    /// Which shard produced this snapshot (the single-leader server
+    /// reports as shard 0; None = unlabeled standalone sink or merged).
+    pub shard: Option<usize>,
     pub queries: usize,
     pub rejected: usize,
     pub mask_updates: usize,
+    /// Boundary-node feature bytes shipped between shards.
+    pub halo_bytes: usize,
+    /// Simulated host-link time spent on halo exchange (µs).
+    pub halo_us: f64,
+    /// Inference rounds that performed a halo exchange.
+    pub halo_rounds: usize,
     pub latency: Option<Stats>,
     pub queue: Option<Stats>,
     pub mean_batch: f64,
     pub throughput_qps: f64,
+    /// Wall-clock seconds this sink has been live.
+    pub elapsed_s: f64,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         let m = Metrics::default();
         m.inner.lock().unwrap().started = Some(Instant::now());
+        m
+    }
+
+    /// A sink labeled with the shard that owns it.
+    pub fn new_shard(shard: usize) -> Metrics {
+        let m = Metrics::new();
+        m.inner.lock().unwrap().shard = Some(shard);
         m
     }
 
@@ -58,17 +90,34 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Charge one halo-exchange round: `bytes` of boundary features over
+    /// the host link for a simulated `us` of link time.
+    pub fn record_halo(&self, bytes: usize, us: f64) {
+        let mut i = self.inner.lock().unwrap();
+        i.halo_bytes += bytes;
+        i.halo_us += us;
+        i.halo_rounds += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let i = self.inner.lock().unwrap();
+        Self::snapshot_inner(&i)
+    }
+
+    fn snapshot_inner(i: &Inner) -> Snapshot {
         let elapsed = i
             .started
             .map(|s| s.elapsed().as_secs_f64())
             .unwrap_or(0.0)
             .max(1e-9);
         Snapshot {
+            shard: i.shard,
             queries: i.queries,
             rejected: i.rejected,
             mask_updates: i.mask_updates,
+            halo_bytes: i.halo_bytes,
+            halo_us: i.halo_us,
+            halo_rounds: i.halo_rounds,
             latency: if i.latencies_us.is_empty() {
                 None
             } else {
@@ -86,6 +135,117 @@ impl Metrics {
                     / i.batch_sizes.len() as f64
             },
             throughput_qps: i.queries as f64 / elapsed,
+            elapsed_s: elapsed,
+        }
+    }
+
+    /// Exact fleet-level aggregate: concatenates the raw samples of every
+    /// sink (so p50/p99 are true percentiles over all shards), sums the
+    /// counters, and computes throughput over the longest-lived sink.
+    /// This is why shards keep private sinks: no serving-path lock is
+    /// shared, and nothing is lost at merge time.
+    pub fn merged<'a, I>(sinks: I) -> Snapshot
+    where
+        I: IntoIterator<Item = &'a Metrics>,
+    {
+        let mut lat: Vec<f64> = Vec::new();
+        let mut que: Vec<f64> = Vec::new();
+        let mut batches: Vec<usize> = Vec::new();
+        let (mut queries, mut rejected, mut mask_updates) = (0usize, 0usize, 0usize);
+        let (mut halo_bytes, mut halo_us, mut halo_rounds) = (0usize, 0.0f64, 0usize);
+        let mut elapsed = 1e-9f64;
+        for m in sinks {
+            let i = m.inner.lock().unwrap();
+            lat.extend_from_slice(&i.latencies_us);
+            que.extend_from_slice(&i.queue_us);
+            batches.extend_from_slice(&i.batch_sizes);
+            queries += i.queries;
+            rejected += i.rejected;
+            mask_updates += i.mask_updates;
+            halo_bytes += i.halo_bytes;
+            halo_us += i.halo_us;
+            halo_rounds += i.halo_rounds;
+            if let Some(s) = i.started {
+                elapsed = elapsed.max(s.elapsed().as_secs_f64());
+            }
+        }
+        Snapshot {
+            shard: None,
+            queries,
+            rejected,
+            mask_updates,
+            halo_bytes,
+            halo_us,
+            halo_rounds,
+            latency: if lat.is_empty() { None } else { Some(Stats::from_samples(&lat)) },
+            queue: if que.is_empty() { None } else { Some(Stats::from_samples(&que)) },
+            mean_batch: if batches.is_empty() {
+                0.0
+            } else {
+                batches.iter().sum::<usize>() as f64 / batches.len() as f64
+            },
+            throughput_qps: queries as f64 / elapsed,
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+impl Snapshot {
+    /// Aggregate-level merge for snapshots whose raw samples are gone
+    /// (e.g. collected from remote shards). Counters are exact; latency
+    /// percentiles are conservative (max of the inputs) and means are
+    /// sample-weighted. Prefer [`Metrics::merged`] when the sinks are in
+    /// process.
+    pub fn merge(&self, other: &Snapshot) -> Snapshot {
+        let total_batches =
+            |s: &Snapshot| if s.mean_batch > 0.0 { s.queries } else { 0 };
+        let (b1, b2) = (total_batches(self), total_batches(other));
+        Snapshot {
+            shard: None,
+            queries: self.queries + other.queries,
+            rejected: self.rejected + other.rejected,
+            mask_updates: self.mask_updates + other.mask_updates,
+            halo_bytes: self.halo_bytes + other.halo_bytes,
+            halo_us: self.halo_us + other.halo_us,
+            halo_rounds: self.halo_rounds + other.halo_rounds,
+            latency: merge_stats(&self.latency, &other.latency),
+            queue: merge_stats(&self.queue, &other.queue),
+            mean_batch: if b1 + b2 == 0 {
+                0.0
+            } else {
+                (self.mean_batch * b1 as f64 + other.mean_batch * b2 as f64)
+                    / (b1 + b2) as f64
+            },
+            throughput_qps: (self.queries + other.queries) as f64
+                / self.elapsed_s.max(other.elapsed_s).max(1e-9),
+            elapsed_s: self.elapsed_s.max(other.elapsed_s),
+        }
+    }
+}
+
+/// Sample-weighted combine of two latency summaries. Percentiles take the
+/// max (an upper bound: the true merged quantile of two samples never
+/// exceeds the larger per-sample quantile at p ≥ 0.5).
+fn merge_stats(a: &Option<Stats>, b: &Option<Stats>) -> Option<Stats> {
+    match (a, b) {
+        (None, None) => None,
+        (Some(s), None) | (None, Some(s)) => Some(s.clone()),
+        (Some(a), Some(b)) => {
+            let n = a.n + b.n;
+            let mean = (a.mean * a.n as f64 + b.mean * b.n as f64) / n as f64;
+            let pooled_var = (a.n as f64 * (a.std.powi(2) + (a.mean - mean).powi(2))
+                + b.n as f64 * (b.std.powi(2) + (b.mean - mean).powi(2)))
+                / n as f64;
+            Some(Stats {
+                n,
+                mean,
+                std: pooled_var.sqrt(),
+                min: a.min.min(b.min),
+                p50: a.p50.max(b.p50),
+                p95: a.p95.max(b.p95),
+                p99: a.p99.max(b.p99),
+                max: a.max.max(b.max),
+            })
         }
     }
 }
@@ -107,6 +267,7 @@ mod tests {
         assert_eq!(s.mask_updates, 1);
         assert_eq!(s.mean_batch, 3.0);
         assert_eq!(s.latency.unwrap().mean, 150.0);
+        assert_eq!(s.shard, None);
     }
 
     #[test]
@@ -115,6 +276,63 @@ mod tests {
         assert_eq!(s.queries, 0);
         assert!(s.latency.is_none());
         assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.halo_bytes, 0);
+    }
+
+    #[test]
+    fn shard_label_survives_snapshot() {
+        let m = Metrics::new_shard(3);
+        assert_eq!(m.snapshot().shard, Some(3));
+    }
+
+    #[test]
+    fn halo_accounting_accumulates() {
+        let m = Metrics::new_shard(0);
+        m.record_halo(4096, 12.5);
+        m.record_halo(4096, 12.5);
+        let s = m.snapshot();
+        assert_eq!(s.halo_bytes, 8192);
+        assert_eq!(s.halo_rounds, 2);
+        assert!((s.halo_us - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_concatenates_raw_samples() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        for v in [10.0, 20.0, 30.0] {
+            a.record_query(v, 0.0, 1);
+        }
+        for v in [1000.0, 2000.0] {
+            b.record_query(v, 0.0, 2);
+        }
+        a.record_halo(100, 1.0);
+        b.record_halo(200, 2.0);
+        let s = Metrics::merged([&a, &b]);
+        assert_eq!(s.queries, 5);
+        assert_eq!(s.halo_bytes, 300);
+        let lat = s.latency.unwrap();
+        assert_eq!(lat.n, 5);
+        // exact percentile over the union, not a per-shard average
+        assert_eq!(lat.max, 2000.0);
+        assert_eq!(lat.min, 10.0);
+        assert_eq!(s.shard, None);
+    }
+
+    #[test]
+    fn snapshot_merge_is_conservative() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        a.record_query(10.0, 0.0, 1);
+        b.record_query(50.0, 0.0, 1);
+        b.record_rejected();
+        let merged = a.snapshot().merge(&b.snapshot());
+        assert_eq!(merged.queries, 2);
+        assert_eq!(merged.rejected, 1);
+        let lat = merged.latency.unwrap();
+        assert_eq!(lat.n, 2);
+        assert_eq!(lat.max, 50.0);
+        assert!((lat.mean - 30.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Dynamic-graph serving: the leader/worker runtime that the paper's
+//! Dynamic-graph serving: the single-leader front end that the paper's
 //! motivating applications (on-device knowledge graphs, event-based
 //! vision — Fig. 1/10) run on.
 //!
@@ -7,23 +7,37 @@
 //! consistency story for GrAd). Callers talk to it through an ordered
 //! event channel: structure updates (GrAd) are applied in arrival order
 //! with *no recompilation* — just mask invalidation — and queries are
-//! coalesced by the [`Batcher`] so one full-graph inference answers every
+//! coalesced by the batcher so one full-graph inference answers every
 //! query in the window.
+//!
+//! Since the fleet landed, the leader loop *is* a fleet shard worker:
+//! [`ServerHandle`] wraps a single [`crate::fleet::ShardWorker`] covering
+//! the whole graph, with no halo exchange and unbounded admission. The
+//! multi-shard generalization lives in [`crate::fleet`]; the shared event
+//! types ([`Update`], [`QueryResponse`]) and the [`InferenceEngine`]
+//! trait are defined here and used by both layers.
+//!
+//! Failure contract: a worker-thread panic (or engine-init failure)
+//! rejects every in-flight query with an explicit error — counted in
+//! [`crate::metrics::Metrics`]'s `rejected` — and [`ServerHandle::shutdown`]
+//! returns an `Err` carrying the panic message. Callers are never left
+//! hanging on a response channel, and crashes cannot hide behind a
+//! swallowed join.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::{Batcher, Request};
+use crate::fleet::shard::{ShardConfig, ShardWorker};
 use crate::metrics::Metrics;
 use crate::tensor::Mat;
 
-/// What the leader thread executes. Implementations: the real
-/// PJRT-backed [`crate::coordinator::Coordinator`] (see
-/// [`coordinator_engine`]) and in-process mocks for tests.
+/// What a serving worker executes. Implementations: the real PJRT-backed
+/// [`CoordinatorEngine`], the artifact-free [`crate::fleet::LocalEngine`],
+/// and in-process mocks for tests.
 pub trait InferenceEngine {
     /// Apply a GrAd structure update. Returns the new graph version.
     fn apply(&mut self, update: &Update) -> Result<u64>;
@@ -31,6 +45,13 @@ pub trait InferenceEngine {
     fn infer(&mut self) -> Result<Mat>;
     /// Active node count (for request validation).
     fn num_nodes(&self) -> usize;
+    /// Partition-aware engines report their *live* halo-import count
+    /// (distinct non-owned boundary nodes) so fleet halo accounting
+    /// tracks GrAd churn. `None` (the default) makes the shard worker
+    /// fall back to the plan-time static schedule.
+    fn halo_imports(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// GrAd structure updates.
@@ -45,24 +66,12 @@ pub enum Update {
 #[derive(Debug, Clone)]
 pub struct QueryResponse {
     pub id: u64,
+    /// Which shard answered (always 0 on the single-leader server).
+    pub shard: usize,
     /// Predicted class of the queried node (or of node 0 for full-graph).
     pub prediction: i32,
     pub latency_us: f64,
     pub batch_size: usize,
-}
-
-enum Event {
-    Update(Update),
-    Query { req: Request, resp: Sender<Result<QueryResponse, String>> },
-    Shutdown,
-}
-
-/// Client handle: submit updates/queries from any thread.
-pub struct ServerHandle {
-    tx: Sender<Event>,
-    pub metrics: Arc<Metrics>,
-    join: Option<JoinHandle<Result<()>>>,
-    next_id: std::sync::atomic::AtomicU64,
 }
 
 /// Server tuning knobs.
@@ -78,6 +87,13 @@ impl Default for ServerConfig {
     }
 }
 
+/// Client handle: submit updates/queries from any thread.
+pub struct ServerHandle {
+    shard: Option<ShardWorker>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
 impl ServerHandle {
     /// Spawn the leader thread. `factory` constructs the engine *inside*
     /// the thread (PJRT handles are not `Send`).
@@ -86,38 +102,30 @@ impl ServerHandle {
         F: FnOnce() -> Result<E> + Send + 'static,
         E: InferenceEngine,
     {
-        let (tx, rx) = channel::<Event>();
-        let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let join = std::thread::spawn(move || leader_loop(factory, rx, m, config));
+        let shard = ShardWorker::spawn(0, factory, ShardConfig::leader(config));
         ServerHandle {
-            tx,
-            metrics,
-            join: Some(join),
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            metrics: shard.metrics.clone(),
+            shard: Some(shard),
+            next_id: AtomicU64::new(1),
         }
+    }
+
+    fn shard(&self) -> &ShardWorker {
+        self.shard.as_ref().expect("server already shut down")
     }
 
     /// Apply a structure update (GrAd): ordered before any later query.
     pub fn update(&self, u: Update) -> Result<()> {
-        self.tx
-            .send(Event::Update(u))
-            .map_err(|_| anyhow!("server stopped"))
+        self.shard().update(u).map_err(|_| anyhow!("server stopped"))
     }
 
     /// Submit a query; returns a receiver for the response.
-    pub fn query(&self, node: Option<usize>) -> Result<Receiver<Result<QueryResponse, String>>> {
-        let (resp_tx, resp_rx) = channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(Event::Query {
-                req: Request { id, node, enqueued: Instant::now() },
-                resp: resp_tx,
-            })
-            .map_err(|_| anyhow!("server stopped"))?;
-        Ok(resp_rx)
+    pub fn query(&self, node: Option<usize>)
+                 -> Result<Receiver<Result<QueryResponse, String>>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shard()
+            .query_with_id(id, node)
+            .map_err(|_| anyhow!("server stopped"))
     }
 
     /// Blocking convenience: query and wait.
@@ -128,112 +136,15 @@ impl ServerHandle {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Stop the leader and join it.
+    /// Stop the leader and join it. A worker panic surfaces here as an
+    /// `Err` carrying the panic message (in-flight queries were already
+    /// answered with rejections and counted).
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Event::Shutdown);
-        if let Some(j) = self.join.take() {
-            j.join().map_err(|_| anyhow!("leader panicked"))??;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for ServerHandle {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Event::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        match self.shard.take() {
+            Some(s) => s.shutdown(),
+            None => Ok(()),
         }
     }
-}
-
-fn leader_loop<F, E>(factory: F, rx: Receiver<Event>, metrics: Arc<Metrics>,
-                     config: ServerConfig) -> Result<()>
-where
-    F: FnOnce() -> Result<E>,
-    E: InferenceEngine,
-{
-    let mut engine = factory()?;
-    let batcher = Batcher::new(config.max_batch, config.max_wait);
-    let mut waiting: std::collections::BTreeMap<u64, Sender<Result<QueryResponse, String>>> =
-        Default::default();
-    let mut version = 0u64;
-    let mut open = true;
-
-    while open || batcher.pending() > 0 {
-        // ingest events for up to the batching window
-        match rx.recv_timeout(config.max_wait.min(Duration::from_millis(1))) {
-            Ok(Event::Update(u)) => match engine.apply(&u) {
-                Ok(v) => {
-                    version = v;
-                    batcher.note_update(v);
-                    metrics.record_mask_update();
-                }
-                Err(e) => {
-                    // capacity exhaustion etc: drop the update, count it
-                    metrics.record_rejected();
-                    let _ = e;
-                }
-            },
-            Ok(Event::Query { req, resp }) => {
-                if let Some(n) = req.node {
-                    if n >= engine.num_nodes() {
-                        metrics.record_rejected();
-                        let _ = resp.send(Err(format!(
-                            "node {n} out of range ({} active)",
-                            engine.num_nodes()
-                        )));
-                        continue;
-                    }
-                }
-                waiting.insert(req.id, resp);
-                batcher.submit(req);
-            }
-            Ok(Event::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                open = false;
-                batcher.close();
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-        }
-
-        // flush a batch if ready
-        if let Some(batch) = batcher.try_batch() {
-            let t0 = Instant::now();
-            let result = engine.infer();
-            let latency_us = t0.elapsed().as_secs_f64() * 1e6;
-            let size = batch.requests.len();
-            match result {
-                Ok(logits) => {
-                    let preds = logits.argmax_rows();
-                    for req in batch.requests {
-                        let node = req.node.unwrap_or(0);
-                        let queue_us =
-                            req.enqueued.elapsed().as_secs_f64() * 1e6 - latency_us;
-                        metrics.record_query(latency_us, queue_us.max(0.0), size);
-                        if let Some(resp) = waiting.remove(&req.id) {
-                            let _ = resp.send(Ok(QueryResponse {
-                                id: req.id,
-                                prediction: preds.get(node).map(|&p| p as i32).unwrap_or(-1),
-                                latency_us,
-                                batch_size: size,
-                            }));
-                        }
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("inference failed: {e:#}");
-                    for req in batch.requests {
-                        metrics.record_rejected();
-                        if let Some(resp) = waiting.remove(&req.id) {
-                            let _ = resp.send(Err(msg.clone()));
-                        }
-                    }
-                }
-            }
-            let _ = version;
-        }
-    }
-    Ok(())
 }
 
 /// The production engine: a [`crate::coordinator::Coordinator`] bound to
@@ -336,6 +247,7 @@ mod tests {
         let s = spawn_mock();
         let r = s.query_wait(Some(3)).unwrap();
         assert_eq!(r.prediction, 3); // version 0: (3 + 0) % 4
+        assert_eq!(r.shard, 0);
         s.shutdown().unwrap();
     }
 
@@ -398,5 +310,30 @@ mod tests {
         let _ = s.query_wait(None).unwrap();
         assert_eq!(s.metrics.snapshot().mask_updates, 2);
         s.shutdown().unwrap();
+    }
+
+    #[test]
+    fn worker_panic_rejects_in_flight_and_errors_shutdown() {
+        struct PanicOnInfer;
+        impl InferenceEngine for PanicOnInfer {
+            fn apply(&mut self, _: &Update) -> Result<u64> {
+                Ok(0)
+            }
+            fn infer(&mut self) -> Result<Mat> {
+                panic!("simulated engine crash");
+            }
+            fn num_nodes(&self) -> usize {
+                16
+            }
+        }
+        let s = ServerHandle::spawn(|| Ok(PanicOnInfer), ServerConfig::default());
+        let rx = s.query(Some(1)).unwrap();
+        // in-flight query gets an explicit rejection, not a dropped channel
+        let err = rx.recv().expect("responder must not be dropped").unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(s.metrics.snapshot().rejected >= 1);
+        // ...and the panic surfaces from shutdown with its message
+        let shut = s.shutdown().unwrap_err().to_string();
+        assert!(shut.contains("simulated engine crash"), "{shut}");
     }
 }
