@@ -7,10 +7,11 @@
 //! With `SHARDS > 1` the same stream is served by a fleet: GraphSplit's
 //! cost model places one shard per simulated device, queries route to
 //! the shard owning the node, and boundary features are charged as halo
-//! traffic. With artifacts present each shard owns its own PJRT
-//! coordinator (engines are built inside the shard threads); without
-//! artifacts the example falls back to the deterministic, artifact-free
-//! `LocalEngine` on a synthetic cora-sized twin so it runs anywhere.
+//! traffic. With artifacts present each shard owns its own coordinator
+//! (engines are built inside the shard threads); without artifacts the
+//! example falls back to artifact-free `PlanEngine` shards — each serving
+//! a compiled GCN `ExecPlan` — on a synthetic cora-sized twin, so it runs
+//! (on the real planned-executor hot path) anywhere.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example dynamic_kg_serving
@@ -20,7 +21,7 @@
 use std::time::Instant;
 
 use grannite::coordinator::Coordinator;
-use grannite::fleet::{Fleet, FleetConfig, LocalEngine};
+use grannite::fleet::{Fleet, FleetConfig};
 use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
 use grannite::server::{CoordinatorEngine, Update};
 
@@ -48,7 +49,13 @@ fn main() -> anyhow::Result<()> {
         let fleet = Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, |_spec| {
             let artifacts = artifacts.clone();
             Box::new(move || {
-                let coordinator = Coordinator::open(&artifacts, "cora")?;
+                // serial in-shard pool: the shards themselves are the
+                // parallelism; N machine-sized pools would oversubscribe
+                let pool = std::sync::Arc::new(
+                    grannite::engine::WorkerPool::serial(),
+                );
+                let coordinator =
+                    Coordinator::open_with_pool(&artifacts, "cora", pool)?;
                 Ok(CoordinatorEngine {
                     coordinator,
                     artifact: "gcn_grad_cora".into(),
@@ -57,17 +64,11 @@ fn main() -> anyhow::Result<()> {
         });
         (fleet, nodes, capacity, "PJRT artifacts")
     } else {
-        eprintln!("artifacts/ missing — serving the synthetic twin via LocalEngine");
+        eprintln!("artifacts/ missing — serving the synthetic twin via planned engines");
         let ds = grannite::graph::datasets::synthesize("cora-twin", 2708, 5429, 7, 64, 1);
         let (nodes, capacity) = (2708, 3000);
-        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
-                                   ds.num_classes(), &cfg)?;
-        let fleet = Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, |spec| {
-            let ds = ds.clone();
-            let owned = spec.nodes.clone();
-            Box::new(move || LocalEngine::shard(&ds, capacity, owned))
-        });
-        (fleet, nodes, capacity, "LocalEngine fallback")
+        let fleet = Fleet::spawn_planned(&ds, capacity, &cfg)?;
+        (fleet, nodes, capacity, "PlanEngine fallback")
     };
 
     println!("—— dynamic KG serving ({backend}, {shards} shard(s)) ——");

@@ -1,20 +1,42 @@
-//! Quickstart: load the AOT artifacts, run one GCN inference through the
-//! full stack (CPU-side PreG preprocessing → PJRT execution), check the
-//! accuracy, and show a GrAd dynamic update — all in ~40 lines of API.
+//! Quickstart: run one GCN inference through the planned execution
+//! engine, check plan-vs-reference equivalence, and show a GrAd dynamic
+//! update — all in a screenful of API.
+//!
+//! With `make artifacts` output present this drives the full coordinator
+//! stack (dataset twin + trained weights + plan-backed runtime); without
+//! it, it synthesizes a Cora-sized twin and runs the same planned engine
+//! offline, so the example always works.
 //!
 //! ```sh
+//! cargo run --release --example quickstart            # offline twin
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use std::sync::Arc;
+
 use grannite::coordinator::Coordinator;
+use grannite::engine::{PlanInstance, WorkerPool};
+use grannite::fleet::PlanEngine;
+use grannite::ops::build::{self, GnnDims};
+use grannite::ops::exec::{self, Bindings};
+use grannite::ops::plan::ExecPlan;
+use grannite::server::{InferenceEngine, Update};
+use grannite::tensor::{Mat, Tensor};
+use grannite::util::{human_bytes, human_us, timing::time_once, Rng};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("manifest.toml").exists() {
-        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    if artifacts.join("manifest.toml").exists() {
+        with_artifacts(artifacts)
+    } else {
+        println!("artifacts/ missing — running the offline planned-engine tour\n");
+        offline()
     }
+}
 
-    // 1. open the coordinator: PJRT runtime + dataset + trained weights
+/// The artifact-backed tour: trained weights, accuracy, GrAd updates.
+fn with_artifacts(artifacts: &std::path::Path) -> anyhow::Result<()> {
+    // 1. open the coordinator: plan-backed runtime + dataset + weights
     let mut c = Coordinator::open(artifacts, "cora")?;
     println!(
         "loaded cora twin: {} nodes / {} edges / {} classes",
@@ -24,30 +46,30 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. one StaGr inference (static graph, norm mask precomputed on CPU)
-    let (logits, us) = grannite::util::timing::time_once(|| c.infer("gcn_stagr_cora"));
+    let (logits, us) = time_once(|| c.infer("gcn_stagr_cora"));
     let logits = logits?;
     let mask = c.state.dataset.test_mask.clone();
     println!(
-        "gcn_stagr: test accuracy {:.3} in {} (first call includes XLA compile)",
+        "gcn_stagr: test accuracy {:.3} in {} (first call compiles the plan)",
         c.state.dataset.accuracy(&logits, &mask),
-        grannite::util::human_us(us)
+        human_us(us)
     );
-    let (_, warm_us) = grannite::util::timing::time_once(|| c.infer("gcn_stagr_cora"));
-    println!("warm inference: {}", grannite::util::human_us(warm_us));
+    let (_, warm_us) = time_once(|| c.infer("gcn_stagr_cora"));
+    println!("warm planned inference: {}", human_us(warm_us));
 
-    // 3. QuantGr INT8 variant — same API, quantized artifact
+    // 3. QuantGr INT8 variant — same API, int8 kernels inside
     let qacc = c.evaluate("gcn_quant_cora")?;
     println!("gcn_quant (INT8): test accuracy {qacc:.3}");
 
-    // 4. GrAd: mutate the graph, re-infer through the NodePad artifact —
+    // 4. GrAd: mutate the graph, re-infer through the NodePad plan —
     //    no recompilation, just a CPU-side mask refresh
     c.state.add_edge(0, 1000)?;
     c.state.add_node()?;
-    let (logits, us) = grannite::util::timing::time_once(|| c.infer("gcn_grad_cora"));
+    let (logits, us) = time_once(|| c.infer("gcn_grad_cora"));
     let _ = logits?;
     println!(
         "gcn_grad after AddEdge+AddNode: re-inferred in {} (graph v{})",
-        grannite::util::human_us(us),
+        human_us(us),
         c.state.graph_version()
     );
 
@@ -56,7 +78,84 @@ fn main() -> anyhow::Result<()> {
     let r = c.simulate_variant("gcn", "stagr", &hw, &Default::default())?;
     println!(
         "simulated NPU latency: {} ({:.0} inf/s)",
-        grannite::util::human_us(r.total_us),
+        human_us(r.total_us),
+        r.throughput()
+    );
+    Ok(())
+}
+
+/// The artifact-free tour: same engine, synthesized Cora-scale twin.
+fn offline() -> anyhow::Result<()> {
+    // 1. a Cora-sized twin + a StaGr GCN op graph at its dimensions
+    let ds = grannite::graph::datasets::synthesize("cora-twin", 2708, 5429, 7, 1433, 1);
+    let dims = GnnDims::model(2708, 5429, 1433, 7);
+    let g = build::gcn_stagr(dims, "stagr");
+
+    let mut rng = Rng::new(42);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.6 - 0.3) as f32)
+    };
+    let mut b: Bindings = Bindings::new();
+    b.insert("norm".into(), Tensor::from_mat(&ds.graph.norm_adjacency(2708)));
+    b.insert("x".into(), Tensor::from_mat(&ds.features));
+    b.insert("w1".into(), Tensor::from_mat(&rand(1433, 64)));
+    b.insert("b1".into(), Tensor::from_mat(&rand(1, 64)));
+    b.insert("w2".into(), Tensor::from_mat(&rand(64, 7)));
+    b.insert("b2".into(), Tensor::from_mat(&rand(1, 7)));
+
+    // 2. compile once…
+    let (plan, compile_us) = time_once(|| ExecPlan::compile(&g));
+    let plan = Arc::new(plan?);
+    println!(
+        "compiled {} into {} steps in {} — {} ops fused away, arena {} \
+         (vs {} unshared)",
+        g.name,
+        plan.num_steps(),
+        human_us(compile_us),
+        plan.fused_away,
+        human_bytes(plan.arena_bytes()),
+        human_bytes(plan.unshared_bytes()),
+    );
+
+    // 3. …run many: reference executor vs planned engine
+    let (want, ref_us) = time_once(|| exec::execute_mat(&g, &b));
+    let want = want?;
+    let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::default_parallel()));
+    inst.run(&b)?; // warm: INT8/weight caches, scratch capacity
+    let (_, plan_us) = time_once(|| inst.run(&b));
+    let got = inst.output_mat(0)?;
+    println!(
+        "reference executor {} → planned engine {} ({:.2}x), max|Δ| = {:.2e}",
+        human_us(ref_us),
+        human_us(plan_us),
+        ref_us / plan_us,
+        want.max_abs_diff(&got),
+    );
+
+    // 4. GrAd serving: the plan-backed engine absorbs updates with no
+    //    recompile (NodePad capacity 3000 > 2708)
+    let mut eng = PlanEngine::full(&ds, 3000, Arc::new(WorkerPool::default_parallel()))?;
+    let (first, cold_us) = time_once(|| eng.infer());
+    let first = first?;
+    eng.apply(&Update::AddEdge(0, 1000))?;
+    eng.apply(&Update::AddNode)?;
+    let (second, warm_us) = time_once(|| eng.infer());
+    let second = second?;
+    println!(
+        "GrAd: inference {} cold, {} after AddEdge+AddNode ({} active nodes, \
+         no recompile)",
+        human_us(cold_us),
+        human_us(warm_us),
+        second.rows,
+    );
+    let _ = first;
+
+    // 5. what would this cost on the Series-2 NPU? (simulator)
+    let hw = grannite::config::HardwareConfig::npu_series2();
+    let r = grannite::npu::simulate(&g, &hw, &Default::default());
+    println!(
+        "simulated NPU latency: {} ({:.0} inf/s)",
+        human_us(r.total_us),
         r.throughput()
     );
     Ok(())

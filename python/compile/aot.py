@@ -301,13 +301,17 @@ def run(out_dir: str, names: list[str], epochs: int,
             fname = f"{name}_{ds_name}.hlo.txt"
             with open(os.path.join(out_dir, fname), "w") as fh:
                 fh.write(text)
+            model = ("sage_mean" if name.startswith("sage_mean")
+                     else "sage_max" if name.startswith("sage_max")
+                     else name.split("_")[0])
+            # recorded explicitly so the rust runtime rebuilds the exact
+            # op-graph variant instead of re-deriving it from the name
+            variant = name[len(model):].lstrip("_")
             manifest += [
                 f"[artifact.{name}_{ds_name}]",
                 f"path = {fname!r}",
-                "model = " + repr(
-                    "sage_mean" if name.startswith("sage_mean")
-                    else "sage_max" if name.startswith("sage_max")
-                    else name.split("_")[0]),
+                f"model = {model!r}",
+                f"variant = {variant!r}",
                 f"dataset = {ds_name!r}",
                 "inputs = " + repr(",".join(input_names)),
                 "shapes = " + repr(";".join(

@@ -7,41 +7,64 @@
 //! placement is for). Engines are the artifact-free
 //! [`grannite::fleet::LocalEngine`], whose per-query work is
 //! proportional to the shard's owned nodes, so wall-clock scaling tracks
-//! the partition, not PJRT.
+//! the partition, not the execution backend.
+//!
+//! ```sh
+//! cargo bench --bench fleet_scaling                     # full sweep
+//! cargo bench --bench fleet_scaling -- --quick          # CI smoke sizes
+//! cargo bench --bench fleet_scaling -- --json out.json  # machine-readable
+//! ```
 
 use std::time::Instant;
 
 use grannite::bench::banner;
+use grannite::cli::Args;
 use grannite::fleet::{Fleet, FleetConfig};
 use grannite::graph::datasets::synthesize;
 use grannite::server::Update;
-use grannite::util::{human_bytes, human_us, Rng, Table};
+use grannite::util::{human_bytes, human_us, json_escape, Rng, Table};
 
-const NODES: usize = 2048;
-const EDGES: usize = 8192;
-const QUERIES: usize = 1200;
-const CHURN: usize = 300;
+struct Sizes {
+    nodes: usize,
+    edges: usize,
+    queries: usize,
+    churn: usize,
+}
 
-fn drive(fleet: &Fleet) -> anyhow::Result<f64> {
+struct Row {
+    shards: usize,
+    label: String,
+    est_round_us: f64,
+    cut_edges: usize,
+    halo_bytes_per_round: usize,
+    qps: f64,
+}
+
+fn drive(fleet: &Fleet, sz: &Sizes) -> anyhow::Result<f64> {
     // mixed load: a burst of GrAd churn, then a query storm
     let mut rng = Rng::new(11);
-    for _ in 0..CHURN {
-        let u = rng.usize(NODES);
-        let v = (u + 1 + rng.usize(NODES - 1)) % NODES;
+    for _ in 0..sz.churn {
+        let u = rng.usize(sz.nodes);
+        let v = (u + 1 + rng.usize(sz.nodes - 1)) % sz.nodes;
         fleet.update(Update::AddEdge(u.min(v), u.max(v)))?;
     }
     let t0 = Instant::now();
-    let pending: Vec<_> = (0..QUERIES)
-        .map(|_| fleet.query(Some(rng.usize(NODES))))
+    let pending: Vec<_> = (0..sz.queries)
+        .map(|_| fleet.query(Some(rng.usize(sz.nodes))))
         .collect::<anyhow::Result<_>>()?;
     for rx in pending {
         rx.recv()?.map_err(anyhow::Error::msg)?;
     }
-    Ok(QUERIES as f64 / t0.elapsed().as_secs_f64())
+    Ok(sz.queries as f64 / t0.elapsed().as_secs_f64())
 }
 
-fn sweep(title: &str, configs: &[(String, FleetConfig)]) -> anyhow::Result<()> {
-    let ds = synthesize("fleet-bench", NODES, EDGES, 6, 64, 5);
+fn sweep(
+    title: &str,
+    configs: &[(String, FleetConfig)],
+    sz: &Sizes,
+    rows_out: &mut Vec<Row>,
+) -> anyhow::Result<()> {
+    let ds = synthesize("fleet-bench", sz.nodes, sz.edges, 6, 64, 5);
     let mut t = Table::new(
         title.to_string(),
         &[
@@ -58,11 +81,11 @@ fn sweep(title: &str, configs: &[(String, FleetConfig)]) -> anyhow::Result<()> {
     );
     let mut baseline: Option<(f64, f64)> = None; // (qps, est_round_us)
     for (label, cfg) in configs {
-        let fleet = Fleet::spawn_local(&ds, NODES + 64, cfg)?;
+        let fleet = Fleet::spawn_local(&ds, sz.nodes + 64, cfg)?;
         let est_round = fleet.plan.est_round_us;
         let cut = fleet.plan.cut_edges;
         let halo_round = fleet.plan.halo_bytes_per_round;
-        let qps = drive(&fleet)?;
+        let qps = drive(&fleet, sz)?;
         let agg = fleet.metrics();
         let (p50, p99) = agg
             .latency
@@ -80,6 +103,14 @@ fn sweep(title: &str, configs: &[(String, FleetConfig)]) -> anyhow::Result<()> {
             p99,
             human_bytes(agg.halo_bytes),
         ]);
+        rows_out.push(Row {
+            shards: cfg.devices.len(),
+            label: label.clone(),
+            est_round_us: est_round,
+            cut_edges: cut,
+            halo_bytes_per_round: halo_round,
+            qps,
+        });
         let base_n = configs[0].1.devices.len();
         let (base_qps, base_est) = *baseline.get_or_insert((qps, est_round));
         if cfg.devices.len() > base_n {
@@ -98,24 +129,66 @@ fn sweep(title: &str, configs: &[(String, FleetConfig)]) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.has("quick");
+    let json_path = args.options.get("json").cloned();
     banner("fleet scaling (1→8 shards, LocalEngine, synthetic KG)");
 
-    let homogeneous: Vec<(String, FleetConfig)> = [1usize, 2, 4, 8]
-        .iter()
-        .map(|&n| (format!("{n}× series2"), FleetConfig::homogeneous(n)))
-        .collect();
-    sweep("homogeneous scaling — N × Series-2 NPU", &homogeneous)?;
+    let sz = if quick {
+        Sizes { nodes: 512, edges: 2048, queries: 200, churn: 60 }
+    } else {
+        Sizes { nodes: 2048, edges: 8192, queries: 1200, churn: 300 }
+    };
+    let homo_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let hetero_counts: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
 
-    let heterogeneous: Vec<(String, FleetConfig)> = [1usize, 2, 4]
+    let mut rows: Vec<Row> = Vec::new();
+    let homogeneous: Vec<(String, FleetConfig)> = homo_counts
+        .iter()
+        .map(|&n| (format!("{n}x series2"), FleetConfig::homogeneous(n)))
+        .collect();
+    sweep("homogeneous scaling — N × Series-2 NPU", &homogeneous, &sz, &mut rows)?;
+
+    let heterogeneous: Vec<(String, FleetConfig)> = hetero_counts
         .iter()
         .map(|&n| (format!("{n}-way zoo"), FleetConfig::heterogeneous(n)))
         .collect();
-    sweep("heterogeneous placement — NPU2/NPU1/iGPU/CPU zoo", &heterogeneous)?;
+    sweep(
+        "heterogeneous placement — NPU2/NPU1/iGPU/CPU zoo",
+        &heterogeneous,
+        &sz,
+        &mut rows,
+    )?;
 
     println!(
         "\nnote: 'est round' is the planner's max_shard(compute + halo) from the\n\
          paper's cost model; 'measured q/s' is wall-clock over LocalEngine shards\n\
          whose work is proportional to owned nodes."
     );
+
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n  \"bench\": \"fleet_scaling\",\n");
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str(&format!(
+            "  \"nodes\": {}, \"queries\": {},\n  \"rows\": [\n",
+            sz.nodes, sz.queries
+        ));
+        for (i, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"shards\": {}, \"label\": \"{}\", \"est_round_us\": {:.3}, \
+                 \"cut_edges\": {}, \"halo_bytes_per_round\": {}, \"qps\": {:.2}}}{}\n",
+                r.shards,
+                json_escape(&r.label),
+                r.est_round_us,
+                r.cut_edges,
+                r.halo_bytes_per_round,
+                r.qps,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -1,45 +1,108 @@
 //! Hot-path profiling bench (EXPERIMENTS.md §Perf): the request-path
-//! pieces that run per inference/update, measured in isolation.
+//! pieces that run per inference/update, measured in isolation — plus the
+//! headline comparison: **planned engine vs reference executor** at Cora
+//! scale (2708 nodes), the compile-once/run-many payoff.
+//!
+//! ```sh
+//! cargo bench --bench hotpath                     # full run
+//! cargo bench --bench hotpath -- --quick          # CI smoke sizes
+//! cargo bench --bench hotpath -- --json out.json  # machine-readable
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use grannite::bench::{banner, run_bench};
+use grannite::cli::Args;
 use grannite::coordinator::ModelState;
+use grannite::engine::{PlanInstance, WorkerPool};
 use grannite::graph::datasets::synthesize;
 use grannite::graph::{DynamicGraph, Graph};
-use grannite::tensor::Mat;
-use grannite::util::Rng;
+use grannite::ops::build::{self, GnnDims, QuantScales};
+use grannite::ops::exec::{self, Bindings};
+use grannite::ops::plan::ExecPlan;
+use grannite::tensor::{Mat, Tensor};
+use grannite::util::timing::Stats;
+use grannite::util::{json_escape, Rng};
+
+fn gcn_bindings(ds: &grannite::graph::datasets::Dataset, d: GnnDims, seed: u64) -> Bindings {
+    let mut rng = Rng::new(seed);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.6 - 0.3) as f32)
+    };
+    let mut b: Bindings = BTreeMap::new();
+    b.insert("norm".into(), Tensor::from_mat(&ds.graph.norm_adjacency(d.n)));
+    b.insert("x".into(), Tensor::from_mat(&ds.features));
+    b.insert("w1".into(), Tensor::from_mat(&rand(d.f, d.hidden)));
+    b.insert("b1".into(), Tensor::from_mat(&rand(1, d.hidden)));
+    b.insert("w2".into(), Tensor::from_mat(&rand(d.hidden, d.classes)));
+    b.insert("b2".into(), Tensor::from_mat(&rand(1, d.classes)));
+    b
+}
 
 fn main() -> anyhow::Result<()> {
-    banner("hot-path microbenchmarks (L3)");
+    let args = Args::from_env()?;
+    let quick = args.has("quick");
+    let json_path = args.options.get("json").cloned();
+    banner(if quick {
+        "hot-path microbenchmarks (L3, quick)"
+    } else {
+        "hot-path microbenchmarks (L3)"
+    });
+
+    let mut cases: Vec<(String, Stats)> = Vec::new();
+    let mut record = |name: &str, stats: Stats| {
+        cases.push((name.to_string(), stats));
+    };
+    // (warmup, iters) per cost tier, shrunk in --quick mode
+    let tier = |w: usize, n: usize| if quick { (1, 3.min(n)) } else { (w, n) };
 
     // 1. GrAd incremental mask update at Cora scale
-    let ds = synthesize("hot", 2708, 5429, 7, 64, 1);
+    let ds = synthesize("hot", 2708, 5429, 7, 1433, 1);
     let mut dg = DynamicGraph::new(&ds.graph, 3000)?;
     let mut rng = Rng::new(7);
-    run_bench("GrAd add+remove edge (cap 3000)", 10, 200, || {
-        let u = rng.usize(2708);
-        let v = (u + 1 + rng.usize(2706)) % 2708;
-        let _ = dg.add_edge(u.min(v), u.max(v));
-        let _ = dg.remove_edge(u.min(v), u.max(v));
-    });
+    let (w, n) = tier(10, 200);
+    record(
+        "grad_update",
+        run_bench("GrAd add+remove edge (cap 3000)", w, n, || {
+            let u = rng.usize(2708);
+            let v = (u + 1 + rng.usize(2706)) % 2708;
+            let _ = dg.add_edge(u.min(v), u.max(v));
+            let _ = dg.remove_edge(u.min(v), u.max(v));
+        }),
+    );
 
     // 2. full norm rebuild (what GrAd avoids)
     let g: Graph = ds.graph.clone();
-    run_bench("full PreG norm rebuild (2708²)", 2, 20, || {
-        std::hint::black_box(g.norm_adjacency(3000));
-    });
+    let (w, n) = tier(2, 20);
+    record(
+        "norm_rebuild",
+        run_bench("full PreG norm rebuild (2708²)", w, n, || {
+            std::hint::black_box(g.norm_adjacency(3000));
+        }),
+    );
 
     // 3. CacheG binding hit vs miss
     let mut state = ModelState::from_dataset(ds.clone(), 3000)?;
     let _ = state.binding("norm_pad", "gcn"); // warm
-    run_bench("binding('norm_pad') CacheG hit", 5, 100, || {
-        state.binding("norm_pad", "gcn").unwrap()
-    });
+    let (w, n) = tier(5, 100);
+    record(
+        "cacheg_hit",
+        run_bench("binding('norm_pad') CacheG hit", w, n, || {
+            state.binding("norm_pad", "gcn").unwrap()
+        }),
+    );
 
-    // 4. reference-executor aggregation matmul (CPU fallback path)
+    // 4. density-adaptive matmul (sparse mask lhs → zero-skip kernel)
     let norm = g.norm_adjacency(2708);
     let h = Mat::from_fn(2708, 64, |i, j| ((i * 7 + j) % 13) as f32 * 0.1);
-    run_bench("sparse-aware matmul norm@h (2708²x64)", 3, 30, || {
-        norm.matmul(&h)
-    });
+    let (w, n) = tier(3, 30);
+    record(
+        "sparse_matmul",
+        run_bench("sparse-aware matmul norm@h (2708²x64)", w, n, || {
+            norm.matmul(&h)
+        }),
+    );
 
     // 5. ZVC codec at mask scale
     let z = grannite::graph::sparsity::Zvc::compress_mat(&norm);
@@ -49,21 +112,128 @@ fn main() -> anyhow::Result<()> {
         grannite::util::human_bytes(z.bytes()),
         z.dense_bytes() as f64 / z.bytes() as f64
     );
-    run_bench("ZVC compress norm (2708²)", 2, 20, || {
-        grannite::graph::sparsity::Zvc::compress_mat(&norm)
-    });
+    let (w, n) = tier(2, 20);
+    record(
+        "zvc_compress",
+        run_bench("ZVC compress norm (2708²)", w, n, || {
+            grannite::graph::sparsity::Zvc::compress_mat(&norm)
+        }),
+    );
 
-    // 6. PJRT end-to-end (only with artifacts)
+    // 6. THE HEADLINE: planned engine vs reference executor, Cora-scale
+    //    GCN end-to-end inference (same graph, same bindings).
+    let d = GnnDims::model(2708, 5429, 1433, 7);
+    let gcn = build::gcn_stagr(d, "stagr");
+    let bindings = gcn_bindings(&ds, d, 42);
+    let (w, n) = tier(2, 10);
+    let ref_stats = run_bench("reference exec::execute (Cora GCN e2e)", w, n, || {
+        exec::execute_mat(&gcn, &bindings).unwrap()
+    });
+    record("reference_exec", ref_stats.clone());
+
+    let plan = Arc::new(ExecPlan::compile(&gcn)?);
+    println!(
+        "  plan: {} steps ({} ops fused away), arena {} vs {} unshared",
+        plan.num_steps(),
+        plan.fused_away,
+        grannite::util::human_bytes(plan.arena_bytes()),
+        grannite::util::human_bytes(plan.unshared_bytes()),
+    );
+    let pool = Arc::new(WorkerPool::default_parallel());
+    let mut inst = PlanInstance::new(Arc::clone(&plan), pool);
+    inst.run(&bindings)?; // compile-adjacent warmup: arena + weight caches
+    let plan_stats = run_bench("planned ExecPlan::run (Cora GCN e2e)", w, n, || {
+        inst.run(&bindings).unwrap()
+    });
+    record("planned_exec", plan_stats.clone());
+
+    let speedup = ref_stats.mean / plan_stats.mean;
+    let want = exec::execute_mat(&gcn, &bindings)?;
+    let got = inst.output_mat(0)?;
+    let diff = want.max_abs_diff(&got);
+    println!(
+        "  planned vs reference: {speedup:.2}x speedup, max|Δ| = {diff:.3e}"
+    );
+
+    // 7. QuantGr INT8: planned i8×i8→i32 kernels vs the reference
+    //    executor's rounded-f32 emulation (smaller scale — the reference
+    //    QMatMul is an O(n·f·h) f64 triple loop).
+    let qd = GnnDims::model(512, 2048, 256, 7);
+    let qds = synthesize("hot-q", qd.n, qd.m, qd.classes, qd.f, 3);
+    let qg = build::gcn_quant(qd, QuantScales::default());
+    let mut qb = gcn_bindings(&qds, qd, 17);
+    let mut qrng = Rng::new(23);
+    for (name, r, c) in [("w1q", qd.f, qd.hidden), ("w2q", qd.hidden, qd.classes)] {
+        let ints = Mat::from_fn(r, c, |_, _| (qrng.usize(255) as i32 - 127) as f32);
+        qb.insert(name.into(), Tensor::from_mat(&ints));
+    }
+    let (w, n) = tier(2, 10);
+    let qref = run_bench("reference exec (512-node INT8 GCN)", w, n, || {
+        exec::execute_mat(&qg, &qb).unwrap()
+    });
+    record("reference_int8", qref.clone());
+    let qplan = Arc::new(ExecPlan::compile(&qg)?);
+    let mut qinst =
+        PlanInstance::new(qplan, Arc::new(WorkerPool::default_parallel()));
+    qinst.run(&qb)?;
+    let qfast = run_bench("planned INT8 ExecPlan::run (512-node)", w, n, || {
+        qinst.run(&qb).unwrap()
+    });
+    record("planned_int8", qfast.clone());
+    let qdiff = exec::execute_mat(&qg, &qb)?.max_abs_diff(&qinst.output_mat(0)?);
+    println!(
+        "  planned INT8 vs reference: {:.2}x speedup, max|Δ| = {qdiff:.3e}",
+        qref.mean / qfast.mean
+    );
+
+    // 8. end-to-end through the artifact runtime (only with artifacts)
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.toml").exists() {
         let mut c = grannite::coordinator::Coordinator::open(dir, "cora")?;
         let name = "gcn_stagr_cora";
-        let _ = c.infer(name)?; // compile+warm
-        run_bench("PJRT infer gcn_stagr_cora e2e", 2, 10, || {
-            c.infer(name).unwrap()
-        });
+        let _ = c.infer(name)?; // plan compile + warm
+        let (w, n) = tier(2, 10);
+        record(
+            "runtime_infer",
+            run_bench("Runtime infer gcn_stagr_cora e2e", w, n, || {
+                c.infer(name).unwrap()
+            }),
+        );
     } else {
-        println!("(skipping PJRT hot path: artifacts/ missing)");
+        println!("(skipping artifact runtime hot path: artifacts/ missing)");
+    }
+
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"hotpath\",\n");
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str(&format!(
+            "  \"plan_vs_reference_speedup\": {speedup:.4},\n"
+        ));
+        out.push_str(&format!(
+            "  \"plan_vs_reference_max_abs_diff\": {diff:.6e},\n"
+        ));
+        out.push_str(&format!(
+            "  \"int8_plan_vs_reference_speedup\": {:.4},\n",
+            qref.mean / qfast.mean
+        ));
+        out.push_str("  \"cases\": [\n");
+        for (i, (name, s)) in cases.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"n\": {}, \"mean_us\": {:.3}, \
+                 \"p50_us\": {:.3}, \"p95_us\": {:.3}, \"max_us\": {:.3}}}{}\n",
+                json_escape(name),
+                s.n,
+                s.mean,
+                s.p50,
+                s.p95,
+                s.max,
+                if i + 1 < cases.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        println!("wrote {path}");
     }
     Ok(())
 }

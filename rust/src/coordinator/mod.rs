@@ -41,15 +41,29 @@ impl Coordinator {
         Ok(Coordinator { runtime, state })
     }
 
+    /// [`Coordinator::open`] with an explicit worker pool — fleet shards
+    /// pass [`crate::engine::WorkerPool::serial`] so N shard coordinators
+    /// don't each spawn a machine-sized pool.
+    pub fn open_with_pool(
+        artifacts_dir: &Path,
+        dataset: &str,
+        pool: std::sync::Arc<crate::engine::WorkerPool>,
+    ) -> Result<Coordinator> {
+        let runtime = Runtime::open_with_pool(artifacts_dir, pool)?;
+        let state = ModelState::load(artifacts_dir, dataset, 0)?;
+        Ok(Coordinator { runtime, state })
+    }
+
     /// Execute one artifact end-to-end on the current graph state and
-    /// return the logits (real numerics via PJRT).
+    /// return the logits (planned-engine execution: the artifact's
+    /// compiled [`crate::ops::plan::ExecPlan`] on a warm instance).
     pub fn infer(&mut self, artifact: &str) -> Result<Mat> {
         let info = self.runtime.artifact(artifact)?.clone();
-        let inputs = self
+        let bindings = self
             .state
-            .bindings_for(&info)
+            .bindings_map(&info)
             .with_context(|| format!("binding inputs for {artifact}"))?;
-        let out = self.runtime.execute(artifact, &inputs)?;
+        let out = self.runtime.execute_named(artifact, &bindings)?;
         out.to_mat()
     }
 

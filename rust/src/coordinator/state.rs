@@ -202,6 +202,16 @@ impl ModelState {
         Ok(t)
     }
 
+    /// All bindings for an artifact as a named map — the planned engine's
+    /// native input format ([`crate::ops::exec::Bindings`]). Weight
+    /// tensors keep their stored shapes (1-D biases are accepted by both
+    /// the plan executor and the reference oracle's `to_mat`).
+    pub fn bindings_map(&mut self, info: &ArtifactInfo)
+                        -> Result<crate::ops::exec::Bindings> {
+        let tensors = self.bindings_for(info)?;
+        Ok(info.inputs.iter().cloned().zip(tensors).collect())
+    }
+
     /// All bindings for an artifact, in its declared input order.
     pub fn bindings_for(&mut self, info: &ArtifactInfo) -> Result<Vec<Tensor>> {
         // older manifests recorded sage artifacts as model "sage"

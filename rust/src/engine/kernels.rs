@@ -1,0 +1,431 @@
+//! Allocation-free op kernels for the planned executor.
+//!
+//! Every kernel writes into a caller-provided output slice (an arena
+//! slab) and mirrors the numerics of [`crate::ops::exec`] — same
+//! accumulation order, same guards — so a plan run is bit-comparable to
+//! the reference executor. MatMul-shaped kernels row-shard across the
+//! [`WorkerPool`]; each lane computes a disjoint block of output rows,
+//! which keeps within-row accumulation order identical to serial.
+
+use super::pool::{par_rows, SharedOut, WorkerPool};
+use crate::tensor::{matmul_block, sample_density, SKIP_DENSITY_THRESHOLD};
+
+/// `out = a(m×k) @ b(k×n)`, row-sharded; the zero-skip kernel is chosen
+/// from the lhs' sampled density (GraSp skip for sparse masks, branch-free
+/// for dense activations).
+pub fn matmul(
+    pool: &WorkerPool,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let skip = sample_density(a) < SKIP_DENSITY_THRESHOLD;
+    let outp = SharedOut(out.as_mut_ptr());
+    par_rows(pool, m, 4, &|r0, r1| {
+        // SAFETY: row blocks are disjoint per lane.
+        let ob = unsafe {
+            std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
+        };
+        matmul_block(&a[r0 * k..r1 * k], r1 - r0, k, b, n, ob, skip);
+    });
+}
+
+/// A QMatMul operand: planned i8 data or oracle-style rounded f32.
+pub enum QOperand<'a> {
+    F32(&'a [f32]),
+    I8(&'a [i8]),
+}
+
+impl QOperand<'_> {
+    #[inline]
+    fn get(&self, i: usize) -> f64 {
+        match self {
+            QOperand::F32(d) => d[i] as f64,
+            QOperand::I8(d) => d[i] as f64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            QOperand::F32(d) => d.len(),
+            QOperand::I8(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The real INT8 path: i8×i8 → i32 accumulate → one f32 rescale, exactly
+/// the QuantGr DPU datapath. Row-sharded.
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_i8(
+    pool: &WorkerPool,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let outp = SharedOut(out.as_mut_ptr());
+    par_rows(pool, m, 4, &|r0, r1| {
+        // SAFETY: row blocks are disjoint per lane.
+        let ob = unsafe {
+            std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
+        };
+        for i in 0..r1 - r0 {
+            let xr = &x[(r0 + i) * k..(r0 + i) * k + k];
+            for j in 0..n {
+                let mut acc: i32 = 0;
+                for (kk, &xv) in xr.iter().enumerate() {
+                    acc += xv as i32 * w[kk * n + j] as i32;
+                }
+                ob[i * n + j] = acc as f32 * scale;
+            }
+        }
+    });
+}
+
+/// Fallback QMatMul for operands that are not provably int8: f64
+/// accumulation mirroring the reference executor's INT32-accumulator
+/// model bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_acc64(
+    pool: &WorkerPool,
+    x: &QOperand<'_>,
+    w: &QOperand<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let outp = SharedOut(out.as_mut_ptr());
+    par_rows(pool, m, 4, &|r0, r1| {
+        // SAFETY: row blocks are disjoint per lane.
+        let ob = unsafe {
+            std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
+        };
+        for i in 0..r1 - r0 {
+            let row = r0 + i;
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += x.get(row * k + kk) * w.get(kk * n + j);
+                }
+                ob[i * n + j] = (acc as f32) * scale;
+            }
+        }
+    });
+}
+
+/// `out(c×r) = a(r×c)ᵀ`.
+pub fn transpose(a: &[f32], r: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), r * c);
+    debug_assert_eq!(out.len(), r * c);
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = a[i * c + j];
+        }
+    }
+}
+
+/// Elementwise combine with Add-style broadcasting (rhs `(1,n)` or
+/// `(m,1)`) — the planned mirror of `exec::broadcast_zip`.
+#[allow(clippy::too_many_arguments)]
+pub fn zip_broadcast(
+    a: &[f32],
+    ar: usize,
+    ac: usize,
+    b: &[f32],
+    br: usize,
+    bc: usize,
+    out: &mut [f32],
+    f: impl Fn(f32, f32) -> f32,
+) {
+    debug_assert_eq!(a.len(), ar * ac);
+    debug_assert_eq!(b.len(), br * bc);
+    debug_assert_eq!(out.len(), ar * ac);
+    for i in 0..ar {
+        let bi = if br == 1 { 0 } else { i };
+        for j in 0..ac {
+            let bj = if bc == 1 { 0 } else { j };
+            out[i * ac + j] = f(a[i * ac + j], b[bi * bc + bj]);
+        }
+    }
+}
+
+/// Elementwise map.
+pub fn map_unary(a: &[f32], out: &mut [f32], f: impl Fn(f32) -> f32) {
+    debug_assert_eq!(a.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = f(x);
+    }
+}
+
+/// Row-wise sum: `(m,n) → (m,1)`.
+pub fn reduce_sum_rows(a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), rows);
+    for i in 0..rows {
+        out[i] = a[i * cols..(i + 1) * cols].iter().sum();
+    }
+}
+
+/// Row-wise max: `(m,n) → (m,1)`.
+pub fn reduce_max_rows(a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), rows);
+    for i in 0..rows {
+        out[i] = a[i * cols..(i + 1) * cols]
+            .iter()
+            .copied()
+            .fold(f32::NEG_INFINITY, f32::max);
+    }
+}
+
+/// Row-wise numerically-stable softmax with the reference executor's
+/// fully-masked-row guard.
+pub fn softmax(a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        let row = &a[i * cols..(i + 1) * cols];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for (o, &x) in orow.iter_mut().zip(row) {
+            let e = if (x - m).is_nan() { 0.0 } else { (x - m).exp() };
+            *o = e;
+            denom += e;
+        }
+        if denom > 0.0 {
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
+        }
+    }
+}
+
+/// GrAx3 masked max-pool: `out[i,j] = max_k mask[i,k]·h[k,j]`. Row-sharded.
+pub fn masked_max_pool(
+    pool: &WorkerPool,
+    mask: &[f32],
+    m: usize,
+    n: usize,
+    h: &[f32],
+    f: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(mask.len(), m * n);
+    debug_assert_eq!(h.len(), n * f);
+    debug_assert_eq!(out.len(), m * f);
+    let outp = SharedOut(out.as_mut_ptr());
+    par_rows(pool, m, 4, &|r0, r1| {
+        // SAFETY: row blocks are disjoint per lane.
+        let ob = unsafe {
+            std::slice::from_raw_parts_mut(outp.0.add(r0 * f), (r1 - r0) * f)
+        };
+        for i in 0..r1 - r0 {
+            let mrow = &mask[(r0 + i) * n..(r0 + i) * n + n];
+            for j in 0..f {
+                let mut best = f32::NEG_INFINITY;
+                for (kk, &mv) in mrow.iter().enumerate() {
+                    best = best.max(mv * h[kk * f + j]);
+                }
+                ob[i * f + j] = best;
+            }
+        }
+    });
+}
+
+/// `(cond, a, b) → cond > 0 ? a : b`, all same shape.
+pub fn select(cond: &[f32], a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(cond.len(), a.len());
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(out.len(), a.len());
+    for idx in 0..out.len() {
+        out[idx] = if cond[idx] > 0.0 { a[idx] } else { b[idx] };
+    }
+}
+
+/// Degrees (self loop included) from an `(m,2)` edge list.
+pub fn degrees_from_edges(edges: &[i32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    out.fill(1.0);
+    for e in edges.chunks_exact(2) {
+        out[e[0] as usize] += 1.0;
+        out[e[1] as usize] += 1.0;
+    }
+}
+
+/// Dense `A + I` from an edge list.
+pub fn adjacency_from_edges(edges: &[i32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n * n);
+    out.fill(0.0);
+    for e in edges.chunks_exact(2) {
+        let (s, d) = (e[0] as usize, e[1] as usize);
+        out[s * n + d] = 1.0;
+        out[d * n + s] = 1.0;
+    }
+    for i in 0..n {
+        out[i * n + i] = 1.0;
+    }
+}
+
+/// Symmetric scatter-add with self contribution.
+pub fn scatter_add_edges(edges: &[i32], x: &[f32], n: usize, f: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n * f);
+    debug_assert_eq!(out.len(), n * f);
+    out.copy_from_slice(x);
+    for e in edges.chunks_exact(2) {
+        let (s, d) = (e[0] as usize, e[1] as usize);
+        for j in 0..f {
+            out[d * f + j] += x[s * f + j];
+        }
+        for j in 0..f {
+            out[s * f + j] += x[d * f + j];
+        }
+    }
+}
+
+/// Sentinel-aware neighbor gather-max (`idx (n,w)`, sentinel ≥ n → skip;
+/// all-sentinel rows yield 0, as in the reference executor).
+pub fn neighbor_gather_max(
+    idx: &[i32],
+    w: usize,
+    h: &[f32],
+    n: usize,
+    f: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(h.len(), n * f);
+    debug_assert_eq!(out.len(), n * f);
+    for i in 0..n {
+        for j in 0..f {
+            let mut best = f32::NEG_INFINITY;
+            for k in 0..w {
+                let t = idx[i * w + k] as usize;
+                if t < n {
+                    best = best.max(h[t * f + j]);
+                }
+            }
+            out[i * f + j] = if best.is_finite() { best } else { 0.0 };
+        }
+    }
+}
+
+/// Sentinel-aware neighbor gather-mean.
+pub fn neighbor_gather_mean(
+    idx: &[i32],
+    w: usize,
+    h: &[f32],
+    n: usize,
+    f: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(h.len(), n * f);
+    debug_assert_eq!(out.len(), n * f);
+    for i in 0..n {
+        for j in 0..f {
+            let mut sum = 0.0f32;
+            let mut cnt = 0.0f32;
+            for k in 0..w {
+                let t = idx[i * w + k] as usize;
+                if t < n {
+                    sum += h[t * f + j];
+                    cnt += 1.0;
+                }
+            }
+            out[i * f + j] = sum / cnt.max(1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let pool = WorkerPool::new(4);
+        let a = Mat::from_fn(37, 23, |i, j| ((i * 7 + j * 3) % 9) as f32 - 4.0);
+        let b = Mat::from_fn(23, 11, |i, j| ((i * 5 + j) % 7) as f32 - 3.0);
+        let want = a.matmul(&b);
+        let mut out = vec![0.0f32; 37 * 11];
+        matmul(&pool, &a.data, 37, 23, &b.data, 11, &mut out);
+        assert_eq!(out, want.data);
+    }
+
+    #[test]
+    fn qmatmul_i8_matches_acc64_on_int_values() {
+        let pool = WorkerPool::serial();
+        let (m, k, n) = (5, 33, 4);
+        let x8: Vec<i8> = (0..m * k).map(|i| ((i * 37) % 255) as i8).collect();
+        let w8: Vec<i8> = (0..k * n).map(|i| ((i * 91) % 255) as i8).collect();
+        let xf: Vec<f32> = x8.iter().map(|&v| v as f32).collect();
+        let wf: Vec<f32> = w8.iter().map(|&v| v as f32).collect();
+        let mut fast = vec![0.0f32; m * n];
+        let mut slow = vec![0.0f32; m * n];
+        qmatmul_i8(&pool, &x8, &w8, m, k, n, 0.25, &mut fast);
+        qmatmul_acc64(
+            &pool,
+            &QOperand::F32(&xf),
+            &QOperand::F32(&wf),
+            m,
+            k,
+            n,
+            0.25,
+            &mut slow,
+        );
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_masked_rows_guarded() {
+        let a = vec![1.0, 2.0, 3.0, f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+        let mut out = vec![0.0f32; 6];
+        softmax(&a, 2, 3, &mut out);
+        let s0: f32 = out[..3].iter().sum();
+        assert!((s0 - 1.0).abs() < 1e-6);
+        assert_eq!(&out[3..], &[0.0, 0.0, 0.0], "fully-masked row stays zero");
+    }
+
+    #[test]
+    fn zip_broadcast_row_and_col() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let row = vec![10.0, 20.0];
+        let col = vec![100.0, 200.0];
+        let mut out = vec![0.0f32; 4];
+        zip_broadcast(&a, 2, 2, &row, 1, 2, &mut out, |x, y| x + y);
+        assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
+        zip_broadcast(&a, 2, 2, &col, 2, 1, &mut out, |x, y| x + y);
+        assert_eq!(out, vec![101.0, 102.0, 203.0, 204.0]);
+    }
+
+    #[test]
+    fn gather_kernels_sentinel_aware() {
+        let idx: Vec<i32> = vec![0, 1, 1, 3, 3, 3];
+        let h = vec![1.0, -5.0, 2.0];
+        let mut mx = vec![0.0f32; 3];
+        neighbor_gather_max(&idx, 2, &h, 3, 1, &mut mx);
+        assert_eq!(mx, vec![1.0, -5.0, 0.0]);
+        let mut mn = vec![0.0f32; 3];
+        neighbor_gather_mean(&idx, 2, &h, 3, 1, &mut mn);
+        assert_eq!(mn, vec![-2.0, -5.0, 0.0]);
+    }
+}

@@ -1,0 +1,771 @@
+//! The planned execution engine: runs a compiled [`ExecPlan`] steady-state
+//! with **zero allocations** — the run-many half of compile-once/run-many.
+//!
+//! A [`PlanInstance`] owns the mutable state a plan needs to execute:
+//!
+//! - the **buffer arena** (f32 + i8 slabs sized at compile time by the
+//!   plan's liveness analysis — intermediates with disjoint live ranges
+//!   share slabs),
+//! - a handle to the in-tree [`WorkerPool`] that row-shards MatMul-shaped
+//!   kernels across cores,
+//! - **cached INT8 weights**: the first run converts each `QMatMul`
+//!   weight input to `i8` (verifying the values are integral and in
+//!   range); later runs fingerprint the binding and reuse the conversion,
+//!   so the QuantGr path really multiplies `i8×i8 → i32` instead of the
+//!   reference executor's rounded-f32 emulation.
+//!
+//! Numerics contract: a plan run matches [`crate::ops::exec::execute`]
+//! within 1e-4 on every graph the oracle accepts (property-tested in
+//! `rust/tests/plan_equivalence.rs`); fused chains and row-sharded
+//! matmuls preserve the oracle's per-element accumulation order, so the
+//! match is bitwise in practice.
+
+pub mod kernels;
+pub mod pool;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ops::exec::Bindings;
+use crate::ops::plan::{rc, Chain, ChainSrc, ExecPlan, FusedOp, PlanStep, StepKind, NO_SLOT};
+use crate::ops::{OpGraph, OpId, OpKind};
+use crate::tensor::{Mat, Tensor};
+
+pub use kernels::QOperand;
+pub use pool::{par_rows, WorkerPool};
+
+/// An unchecked operand view used inside fused-chain loops: raw pointer +
+/// geometry + the compile-time broadcast position transform.
+///
+/// Raw (rather than a borrowed slice) so the reusable scratch vector can
+/// live in the instance without self-borrow lifetimes. Invariant: views
+/// are built and consumed inside a single step, while the source slabs
+/// and bindings are alive and the output slab is detached.
+#[derive(Clone, Copy)]
+struct RawView {
+    ptr: *const f32,
+    len: usize,
+    rows: usize,
+    cols: usize,
+    zero_i: bool,
+    zero_j: bool,
+}
+
+// SAFETY: read-only view of data that outlives the step (see invariant
+// above); used from pool lanes that the dispatching call joins.
+unsafe impl Send for RawView {}
+unsafe impl Sync for RawView {}
+
+impl RawView {
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        let r = if self.zero_i || self.rows == 1 { 0 } else { i };
+        let c = if self.zero_j || self.cols == 1 { 0 } else { j };
+        let idx = r * self.cols + c;
+        debug_assert!(idx < self.len);
+        // SAFETY: idx < len by shape validation; pointee alive (invariant).
+        unsafe { *self.ptr.add(idx) }
+    }
+}
+
+/// Cached i8 conversion of one QMatMul weight input.
+struct CachedWeights {
+    fingerprint: u64,
+    data: Box<[i8]>,
+    /// False when the f32 source was not integral-in-range: the kernel
+    /// falls back to the oracle-exact f64-accumulation path.
+    usable: bool,
+}
+
+/// Mutable execution state for one compiled plan. Create once, `run` many.
+pub struct PlanInstance {
+    plan: Arc<ExecPlan>,
+    pool: Arc<WorkerPool>,
+    slabs: Vec<Box<[f32]>>,
+    i8_slabs: Vec<Box<[i8]>>,
+    /// Per-op cached INT8 weights (QMatMul rhs only).
+    w8: Vec<Option<CachedWeights>>,
+    /// Reusable chain-operand scratch (capacity persists across runs).
+    scratch: Vec<RawView>,
+}
+
+impl PlanInstance {
+    pub fn new(plan: Arc<ExecPlan>, pool: Arc<WorkerPool>) -> PlanInstance {
+        let slabs = plan
+            .slab_elems
+            .iter()
+            .map(|&e| vec![0.0f32; e].into_boxed_slice())
+            .collect();
+        let i8_slabs = plan
+            .i8_slab_elems
+            .iter()
+            .map(|&e| vec![0i8; e].into_boxed_slice())
+            .collect();
+        let w8 = (0..plan.graph.ops.len()).map(|_| None).collect();
+        PlanInstance { plan, pool, slabs, i8_slabs, w8, scratch: Vec::new() }
+    }
+
+    pub fn plan(&self) -> &Arc<ExecPlan> {
+        &self.plan
+    }
+
+    /// Execute every step against `bindings`. Steady-state (same plan,
+    /// same binding storage) this performs no heap allocation.
+    pub fn run(&mut self, bindings: &Bindings) -> Result<()> {
+        let plan = Arc::clone(&self.plan);
+        for si in 0..plan.steps.len() {
+            self.exec_step(&plan, &plan.steps[si], bindings).with_context(|| {
+                let op = &plan.graph.ops[plan.steps[si].op];
+                format!(
+                    "{} plan step {si} (op#{} {})",
+                    plan.graph.name,
+                    plan.steps[si].op,
+                    op.kind.name()
+                )
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Zero-copy view of output `idx`.
+    pub fn output_view(&self, idx: usize) -> Result<(&[f32], usize, usize)> {
+        let id = *self
+            .plan
+            .graph
+            .outputs
+            .get(idx)
+            .ok_or_else(|| anyhow!("output {idx} out of range"))?;
+        let (r, c) = rc(&self.plan.graph.ops[id].shape)?;
+        let slot = self.plan.slot[id];
+        if slot == NO_SLOT {
+            bail!("output op#{id} has no f32 slab");
+        }
+        Ok((&self.slabs[slot][..r * c], r, c))
+    }
+
+    /// Output `idx` copied into a fresh matrix.
+    pub fn output_mat(&self, idx: usize) -> Result<Mat> {
+        let (d, r, c) = self.output_view(idx)?;
+        Ok(Mat::from_vec(r, c, d.to_vec()))
+    }
+
+    /// All outputs as matrices.
+    pub fn outputs(&self) -> Result<Vec<Mat>> {
+        (0..self.plan.graph.outputs.len())
+            .map(|i| self.output_mat(i))
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // step dispatch
+    // ------------------------------------------------------------------
+
+    fn exec_step(&mut self, plan: &ExecPlan, step: &PlanStep, b: &Bindings) -> Result<()> {
+        match &step.kind {
+            StepKind::Chain(ch) => self.run_chain(plan, step.op, ch, b),
+            StepKind::QuantizeI8 { scale } => self.run_quantize_i8(plan, step.op, *scale, b),
+            StepKind::Kernel => {
+                if matches!(plan.graph.ops[step.op].kind, OpKind::QMatMul { .. }) {
+                    self.ensure_w8(plan, step.op, b)?;
+                }
+                self.run_kernel(plan, step.op, b)
+            }
+        }
+    }
+
+    /// Resolve an op's f32 value (binding for inputs, arena slab else).
+    fn f32_of<'a>(
+        &'a self,
+        plan: &'a ExecPlan,
+        id: OpId,
+        b: &'a Bindings,
+    ) -> Result<(&'a [f32], usize, usize)> {
+        let op = &plan.graph.ops[id];
+        let (r, c) = rc(&op.shape)?;
+        if op.kind == OpKind::Input {
+            let t = b
+                .get(&op.name)
+                .ok_or_else(|| anyhow!("unbound input {:?}", op.name))?;
+            let d = match t {
+                Tensor::F32 { data, .. } => data,
+                other => bail!(
+                    "input {:?}: expected f32 binding, got {:?}",
+                    op.name,
+                    other.dtype()
+                ),
+            };
+            if d.len() != r * c {
+                bail!(
+                    "input {:?}: binding has {} elements, graph expects {}x{}",
+                    op.name,
+                    d.len(),
+                    r,
+                    c
+                );
+            }
+            Ok((&d[..], r, c))
+        } else {
+            let slot = plan.slot[id];
+            if slot == NO_SLOT {
+                bail!("op#{id} has no materialized f32 value");
+            }
+            Ok((&self.slabs[slot][..r * c], r, c))
+        }
+    }
+
+    /// Resolve an i32 index binding (graph inputs only).
+    fn i32_of<'a>(
+        &self,
+        plan: &ExecPlan,
+        id: OpId,
+        b: &'a Bindings,
+    ) -> Result<(&'a [i32], usize, usize)> {
+        let op = &plan.graph.ops[id];
+        let (r, c) = rc(&op.shape)?;
+        if op.kind != OpKind::Input {
+            bail!("computed index tensors unsupported");
+        }
+        let t = b
+            .get(&op.name)
+            .ok_or_else(|| anyhow!("unbound input {:?}", op.name))?;
+        let d = t.as_i32()?;
+        if d.len() != r * c {
+            bail!("input {:?}: {} elements vs {}x{}", op.name, d.len(), r, c);
+        }
+        Ok((d, r, c))
+    }
+
+    fn raw_view(&self, plan: &ExecPlan, src: &ChainSrc, b: &Bindings) -> Result<RawView> {
+        let (d, r, c) = self.f32_of(plan, src.op, b)?;
+        Ok(RawView {
+            ptr: d.as_ptr(),
+            len: d.len(),
+            rows: r,
+            cols: c,
+            zero_i: src.pos.zero_i,
+            zero_j: src.pos.zero_j,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // fused chains
+    // ------------------------------------------------------------------
+
+    fn run_chain(&mut self, plan: &ExecPlan, id: OpId, ch: &Chain, b: &Bindings) -> Result<()> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.push(self.raw_view(plan, &ch.head, b)?);
+        for a in &ch.aux {
+            scratch.push(self.raw_view(plan, a, b)?);
+        }
+        let slot = plan.slot[id];
+        let mut out = std::mem::take(&mut self.slabs[slot]);
+        // the chain loop writes through an unchecked raw pointer: the slab
+        // must be big enough even if a previous panic left state behind
+        assert!(
+            out.len() >= ch.rows * ch.cols,
+            "arena slab {slot} too small for chain output"
+        );
+        let eval = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let (rows, cols) = (ch.rows, ch.cols);
+            let steps: &[FusedOp] = &ch.steps;
+            let views: &[RawView] = &scratch;
+            let outp = pool::SharedOut(out.as_mut_ptr());
+            par_rows(&self.pool, rows, 32, &|r0, r1| {
+                for i in r0..r1 {
+                    for j in 0..cols {
+                        let mut v = views[0].at(i, j);
+                        for s in steps {
+                            v = match *s {
+                                FusedOp::Scale(c) => v * c,
+                                FusedOp::AddConst(c) => v + c,
+                                FusedOp::Relu => v.max(0.0),
+                                FusedOp::LeakyRelu(sl) => {
+                                    if v > 0.0 {
+                                        v
+                                    } else {
+                                        sl * v
+                                    }
+                                }
+                                FusedOp::Exp => v.exp(),
+                                FusedOp::Quantize(sc) => {
+                                    (v / sc).round().clamp(-127.0, 127.0)
+                                }
+                                FusedOp::Broadcast => v,
+                                FusedOp::Add(x) => v + views[1 + x as usize].at(i, j),
+                                FusedOp::Sub(x) => v - views[1 + x as usize].at(i, j),
+                                FusedOp::Mul(x) => v * views[1 + x as usize].at(i, j),
+                            };
+                        }
+                        // SAFETY: rows r0..r1 are exclusive to this lane.
+                        unsafe { *outp.0.add(i * cols + j) = v };
+                    }
+                }
+            });
+        }));
+        // restore the slab/scratch even when a lane panicked, so a caller
+        // that catches the panic finds the instance structurally intact
+        self.slabs[slot] = out;
+        self.scratch = scratch;
+        if let Err(payload) = eval {
+            std::panic::resume_unwind(payload);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // INT8
+    // ------------------------------------------------------------------
+
+    fn run_quantize_i8(
+        &mut self,
+        plan: &ExecPlan,
+        id: OpId,
+        scale: f32,
+        b: &Bindings,
+    ) -> Result<()> {
+        let slot = plan.i8_slot[id];
+        let mut out = std::mem::take(&mut self.i8_slabs[slot]);
+        let res = (|| -> Result<()> {
+            let src = plan.graph.ops[id].inputs[0];
+            let (d, r, c) = self.f32_of(plan, src, b)?;
+            let ob = &mut out[..r * c];
+            for (o, &x) in ob.iter_mut().zip(d) {
+                *o = (x / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+            Ok(())
+        })();
+        self.i8_slabs[slot] = out;
+        res
+    }
+
+    /// Prepare/refresh the cached INT8 conversion of a QMatMul's weight
+    /// input. Fingerprinted so rebinding the same tensor is free.
+    fn ensure_w8(&mut self, plan: &ExecPlan, id: OpId, b: &Bindings) -> Result<()> {
+        let rhs_id = plan.graph.ops[id].inputs[1];
+        let rop = &plan.graph.ops[rhs_id];
+        if rop.kind != OpKind::Input {
+            self.w8[id] = None;
+            return Ok(());
+        }
+        let (wr, wc) = rc(&rop.shape)?;
+        let t = b
+            .get(&rop.name)
+            .ok_or_else(|| anyhow!("unbound input {:?}", rop.name))?;
+        if t.num_elements() != wr * wc {
+            bail!(
+                "QMatMul weights {:?}: {} elements, graph expects {}x{}",
+                rop.name,
+                t.num_elements(),
+                wr,
+                wc
+            );
+        }
+        match t {
+            Tensor::I8 { data, .. } => {
+                let fp = fingerprint_i8(data);
+                if cached_fp(&self.w8[id]) == Some(fp) {
+                    return Ok(());
+                }
+                self.w8[id] = Some(CachedWeights {
+                    fingerprint: fp,
+                    data: data.clone().into_boxed_slice(),
+                    usable: true,
+                });
+            }
+            Tensor::F32 { data, .. } => {
+                let fp = fingerprint_f32(data);
+                if cached_fp(&self.w8[id]) == Some(fp) {
+                    return Ok(());
+                }
+                let usable = data
+                    .iter()
+                    .all(|&v| v.fract() == 0.0 && (-127.0..=127.0).contains(&v));
+                let conv: Box<[i8]> = if usable {
+                    data.iter().map(|&v| v as i8).collect()
+                } else {
+                    Vec::new().into_boxed_slice()
+                };
+                self.w8[id] =
+                    Some(CachedWeights { fingerprint: fp, data: conv, usable });
+            }
+            other => bail!(
+                "QMatMul weights {:?} must be f32 or i8, got {:?}",
+                rop.name,
+                other.dtype()
+            ),
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // dedicated kernels
+    // ------------------------------------------------------------------
+
+    fn run_kernel(&mut self, plan: &ExecPlan, id: OpId, b: &Bindings) -> Result<()> {
+        let op = &plan.graph.ops[id];
+        let (rows, cols) = rc(&op.shape)?;
+        let n_out = rows * cols;
+        let slot = plan.slot[id];
+        let mut out_slab = std::mem::take(&mut self.slabs[slot]);
+        let res = (|| -> Result<()> {
+            let out = &mut out_slab[..n_out];
+            let pool = &self.pool;
+            match &op.kind {
+                OpKind::MatMul => {
+                    let (a, m, k) = self.f32_of(plan, op.inputs[0], b)?;
+                    let (w, _, nn) = self.f32_of(plan, op.inputs[1], b)?;
+                    kernels::matmul(pool, a, m, k, w, nn, out);
+                }
+                OpKind::QMatMul { x_scale, w_scale } => {
+                    let s = x_scale * w_scale;
+                    let lhs_id = op.inputs[0];
+                    let rhs_id = op.inputs[1];
+                    let (m, k) = rc(&plan.graph.ops[lhs_id].shape)?;
+                    let (_, nn) = rc(&plan.graph.ops[rhs_id].shape)?;
+                    let lhs_slot = plan.i8_slot[lhs_id];
+                    let w8_ok = matches!(&self.w8[id], Some(cw) if cw.usable);
+                    if lhs_slot != NO_SLOT && w8_ok {
+                        let x8 = &self.i8_slabs[lhs_slot][..m * k];
+                        let cw = self.w8[id].as_ref().unwrap();
+                        kernels::qmatmul_i8(pool, x8, &cw.data, m, k, nn, s, out);
+                    } else {
+                        let lhs = if lhs_slot != NO_SLOT {
+                            QOperand::I8(&self.i8_slabs[lhs_slot][..m * k])
+                        } else {
+                            QOperand::F32(self.f32_of(plan, lhs_id, b)?.0)
+                        };
+                        let rhs = if w8_ok {
+                            QOperand::I8(&self.w8[id].as_ref().unwrap().data)
+                        } else {
+                            QOperand::F32(self.f32_of(plan, rhs_id, b)?.0)
+                        };
+                        kernels::qmatmul_acc64(pool, &lhs, &rhs, m, k, nn, s, out);
+                    }
+                }
+                OpKind::Transpose => {
+                    let (a, r, c) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::transpose(a, r, c, out);
+                }
+                OpKind::Div => {
+                    let (a, ar, ac) = self.f32_of(plan, op.inputs[0], b)?;
+                    let (w, br, bc) = self.f32_of(plan, op.inputs[1], b)?;
+                    kernels::zip_broadcast(a, ar, ac, w, br, bc, out, |x, y| x / y);
+                }
+                OpKind::Greater => {
+                    let (a, ar, ac) = self.f32_of(plan, op.inputs[0], b)?;
+                    let (w, br, bc) = self.f32_of(plan, op.inputs[1], b)?;
+                    kernels::zip_broadcast(a, ar, ac, w, br, bc, out, |x, y| {
+                        if x > y {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    });
+                }
+                OpKind::Elu => {
+                    let (a, _, _) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::map_unary(a, out, |x| {
+                        if x > 0.0 {
+                            x
+                        } else {
+                            x.exp() - 1.0
+                        }
+                    });
+                }
+                OpKind::Sqrt => {
+                    let (a, _, _) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::map_unary(a, out, f32::sqrt);
+                }
+                OpKind::Rsqrt => {
+                    let (a, _, _) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::map_unary(a, out, |x| 1.0 / x.sqrt());
+                }
+                OpKind::Reciprocal => {
+                    let (a, _, _) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::map_unary(a, out, |x| 1.0 / x);
+                }
+                OpKind::ReduceSumRows => {
+                    let (a, r, c) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::reduce_sum_rows(a, r, c, out);
+                }
+                OpKind::ReduceMaxRows => {
+                    let (a, r, c) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::reduce_max_rows(a, r, c, out);
+                }
+                OpKind::Softmax => {
+                    let (a, r, c) = self.f32_of(plan, op.inputs[0], b)?;
+                    kernels::softmax(a, r, c, out);
+                }
+                OpKind::MaskedMaxPool => {
+                    let (mask, m, n) = self.f32_of(plan, op.inputs[0], b)?;
+                    let (h, _, f) = self.f32_of(plan, op.inputs[1], b)?;
+                    kernels::masked_max_pool(pool, mask, m, n, h, f, out);
+                }
+                OpKind::Select => {
+                    let (cond, cr, cc) = self.f32_of(plan, op.inputs[0], b)?;
+                    let (av, ar, ac) = self.f32_of(plan, op.inputs[1], b)?;
+                    let (bv, br, bc) = self.f32_of(plan, op.inputs[2], b)?;
+                    if (cr, cc) != (ar, ac) || (ar, ac) != (br, bc) {
+                        bail!("select shape mismatch");
+                    }
+                    kernels::select(cond, av, bv, out);
+                }
+                OpKind::DegreesFromEdges => {
+                    let (e, _, _) = self.i32_of(plan, op.inputs[0], b)?;
+                    kernels::degrees_from_edges(e, rows, out);
+                }
+                OpKind::AdjacencyFromEdges => {
+                    let (e, _, _) = self.i32_of(plan, op.inputs[0], b)?;
+                    if cols != rows {
+                        bail!("adjacency output must be square");
+                    }
+                    kernels::adjacency_from_edges(e, rows, out);
+                }
+                OpKind::ScatterAddEdges => {
+                    let (e, _, _) = self.i32_of(plan, op.inputs[0], b)?;
+                    let (x, xn, xf) = self.f32_of(plan, op.inputs[1], b)?;
+                    if (xn, xf) != (rows, cols) {
+                        bail!("scatter output shape mismatch");
+                    }
+                    kernels::scatter_add_edges(e, x, xn, xf, out);
+                }
+                OpKind::NeighborGatherMax => {
+                    let (idx, _, w) = self.i32_of(plan, op.inputs[0], b)?;
+                    let (h, hn, hf) = self.f32_of(plan, op.inputs[1], b)?;
+                    kernels::neighbor_gather_max(idx, w, h, hn, hf, out);
+                }
+                OpKind::NeighborGatherMean => {
+                    let (idx, _, w) = self.i32_of(plan, op.inputs[0], b)?;
+                    let (h, hn, hf) = self.f32_of(plan, op.inputs[1], b)?;
+                    kernels::neighbor_gather_mean(idx, w, h, hn, hf, out);
+                }
+                other => bail!("op {} has no planned kernel", other.name()),
+            }
+            Ok(())
+        })();
+        self.slabs[slot] = out_slab;
+        res
+    }
+}
+
+fn cached_fp(c: &Option<CachedWeights>) -> Option<u64> {
+    c.as_ref().map(|w| w.fingerprint)
+}
+
+/// Content fingerprint over **every** element (FNV-1a of the raw bits):
+/// weight tensors are small next to the matmuls that consume them, and a
+/// sampled hash could miss a rebind that reuses the old allocation with
+/// values changed only at unprobed indices — silently serving stale
+/// weights. Full hashing is a few µs and allocation-free.
+fn fingerprint_f32(d: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ ((d.len() as u64) << 1);
+    for v in d {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn fingerprint_i8(d: &[i8]) -> u64 {
+    let mut h = 0x8422_2325_cbf2_9ce4u64 ^ ((d.len() as u64) << 1);
+    for &v in d {
+        h = (h ^ v as u8 as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// One-shot convenience: compile `g`, run it serially, return all outputs.
+pub fn run_graph(g: &OpGraph, bindings: &Bindings) -> Result<Vec<Mat>> {
+    let plan = Arc::new(ExecPlan::compile(g)?);
+    let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::serial()));
+    inst.run(bindings)?;
+    inst.outputs()
+}
+
+/// One-shot convenience for single-output graphs.
+pub fn run_graph_mat(g: &OpGraph, bindings: &Bindings) -> Result<Mat> {
+    let mut outs = run_graph(g, bindings)?;
+    if outs.is_empty() {
+        bail!("graph has no outputs");
+    }
+    Ok(outs.remove(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::build::{self, GnnDims, QuantScales};
+    use crate::ops::exec;
+    use crate::ops::Stage;
+    use crate::tensor::DType;
+    use crate::util::Rng;
+    use std::collections::BTreeMap;
+
+    fn dims() -> GnnDims {
+        GnnDims { n: 18, m: 30, f: 10, hidden: 6, classes: 4, k: 5, layers: 2 }
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
+    }
+
+    fn gcn_bindings(seed: u64) -> Bindings {
+        let d = dims();
+        let ds = crate::graph::datasets::synthesize("eng", d.n, d.m, d.classes, d.f, seed);
+        let mut rng = Rng::new(seed ^ 0x51);
+        let mut b: Bindings = BTreeMap::new();
+        b.insert("x".into(), Tensor::from_mat(&ds.features));
+        b.insert("norm".into(), Tensor::from_mat(&ds.graph.norm_adjacency(d.n)));
+        b.insert("w1".into(), Tensor::from_mat(&rand_mat(&mut rng, d.f, d.hidden)));
+        b.insert("b1".into(), Tensor::from_mat(&rand_mat(&mut rng, 1, d.hidden)));
+        b.insert("w2".into(), Tensor::from_mat(&rand_mat(&mut rng, d.hidden, d.classes)));
+        b.insert("b2".into(), Tensor::from_mat(&rand_mat(&mut rng, 1, d.classes)));
+        b
+    }
+
+    #[test]
+    fn plan_matches_reference_on_gcn() {
+        let g = build::gcn_stagr(dims(), "stagr");
+        let b = gcn_bindings(3);
+        let want = exec::execute_mat(&g, &b).unwrap();
+        let got = run_graph_mat(&g, &b).unwrap();
+        assert!(
+            want.max_abs_diff(&got) < 1e-4,
+            "diff {}",
+            want.max_abs_diff(&got)
+        );
+    }
+
+    #[test]
+    fn warm_instance_is_deterministic() {
+        let g = build::gcn_stagr(dims(), "stagr");
+        let b = gcn_bindings(7);
+        let plan = Arc::new(ExecPlan::compile(&g).unwrap());
+        let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::new(3)));
+        inst.run(&b).unwrap();
+        let first = inst.output_mat(0).unwrap();
+        for _ in 0..3 {
+            inst.run(&b).unwrap();
+            assert_eq!(inst.output_mat(0).unwrap(), first, "stale-arena drift");
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_instances_agree() {
+        let g = build::gcn_stagr(dims(), "stagr");
+        let b = gcn_bindings(11);
+        let plan = Arc::new(ExecPlan::compile(&g).unwrap());
+        let mut serial = PlanInstance::new(Arc::clone(&plan), Arc::new(WorkerPool::serial()));
+        let mut par = PlanInstance::new(plan, Arc::new(WorkerPool::new(4)));
+        serial.run(&b).unwrap();
+        par.run(&b).unwrap();
+        assert_eq!(serial.output_mat(0).unwrap(), par.output_mat(0).unwrap());
+    }
+
+    #[test]
+    fn int8_weights_binding_matches_f32_integral() {
+        // QuantGr: binding real Tensor::I8 weights must equal binding the
+        // same values as rounded f32 (the oracle-compatible encoding)
+        let d = dims();
+        let g = build::gcn_quant(d, QuantScales::default());
+        let mut b = gcn_bindings(13);
+        let mut rng = Rng::new(99);
+        let w1q: Vec<i8> = (0..d.f * d.hidden)
+            .map(|_| (rng.usize(255) as i32 - 127) as i8)
+            .collect();
+        let w2q: Vec<i8> = (0..d.hidden * d.classes)
+            .map(|_| (rng.usize(255) as i32 - 127) as i8)
+            .collect();
+        let mut b_f32 = b.clone();
+        b_f32.insert(
+            "w1q".into(),
+            Tensor::from_mat(&Mat::from_vec(
+                d.f,
+                d.hidden,
+                w1q.iter().map(|&v| v as f32).collect(),
+            )),
+        );
+        b_f32.insert(
+            "w2q".into(),
+            Tensor::from_mat(&Mat::from_vec(
+                d.hidden,
+                d.classes,
+                w2q.iter().map(|&v| v as f32).collect(),
+            )),
+        );
+        b.insert("w1q".into(), Tensor::I8 { shape: vec![d.f, d.hidden], data: w1q });
+        b.insert("w2q".into(), Tensor::I8 { shape: vec![d.hidden, d.classes], data: w2q });
+
+        let via_f32 = run_graph_mat(&g, &b_f32).unwrap();
+        let via_i8 = run_graph_mat(&g, &b).unwrap();
+        assert!(via_f32.max_abs_diff(&via_i8) < 1e-5);
+        // and both agree with the oracle on the f32 encoding
+        let oracle = exec::execute_mat(&g, &b_f32).unwrap();
+        assert!(oracle.max_abs_diff(&via_f32) < 1e-4);
+    }
+
+    #[test]
+    fn non_integral_weights_fall_back_to_oracle_path() {
+        let d = dims();
+        let g = build::gcn_quant(d, QuantScales::default());
+        let mut b = gcn_bindings(17);
+        let mut rng = Rng::new(5);
+        // deliberately NOT integral: the fallback f64 path must kick in
+        b.insert("w1q".into(), Tensor::from_mat(&rand_mat(&mut rng, d.f, d.hidden)));
+        b.insert("w2q".into(), Tensor::from_mat(&rand_mat(&mut rng, d.hidden, d.classes)));
+        let oracle = exec::execute_mat(&g, &b).unwrap();
+        let got = run_graph_mat(&g, &b).unwrap();
+        assert!(oracle.max_abs_diff(&got) < 1e-4);
+    }
+
+    #[test]
+    fn rebinding_new_weights_invalidates_int8_cache() {
+        let d = dims();
+        let g = build::gcn_quant(d, QuantScales::default());
+        let plan = Arc::new(ExecPlan::compile(&g).unwrap());
+        let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::serial()));
+        let mut b = gcn_bindings(23);
+        let ones = Mat::filled(d.f, d.hidden, 1.0);
+        let twos = Mat::filled(d.f, d.hidden, 2.0);
+        let w2 = Mat::filled(d.hidden, d.classes, 1.0);
+        b.insert("w2q".into(), Tensor::from_mat(&w2));
+        b.insert("w1q".into(), Tensor::from_mat(&ones));
+        inst.run(&b).unwrap();
+        let out_ones = inst.output_mat(0).unwrap();
+        b.insert("w1q".into(), Tensor::from_mat(&twos));
+        inst.run(&b).unwrap();
+        let out_twos = inst.output_mat(0).unwrap();
+        assert!(out_ones.max_abs_diff(&out_twos) > 1e-6, "stale weight cache");
+        let oracle = exec::execute_mat(&g, &b).unwrap();
+        assert!(oracle.max_abs_diff(&out_twos) < 1e-4);
+    }
+
+    #[test]
+    fn chain_with_broadcasts_matches_oracle() {
+        // reduce → reciprocal → broadcast → mul: the EffOp softmax tail
+        let mut g = OpGraph::new("bc-chain");
+        let x = g.input("x", &[6, 5], DType::F32, Stage::Compute);
+        let sm = g.op(OpKind::ReduceSumRows, &[x], &[6, 1], Stage::Compute);
+        let rc_ = g.op(OpKind::Reciprocal, &[sm], &[6, 1], Stage::Compute);
+        let bc = g.op(OpKind::BroadcastCol, &[rc_], &[6, 5], Stage::Compute);
+        let out = g.op(OpKind::Mul, &[bc, x], &[6, 5], Stage::Compute);
+        g.set_output(out);
+        let mut b: Bindings = BTreeMap::new();
+        let mut rng = Rng::new(41);
+        b.insert(
+            "x".into(),
+            Tensor::from_mat(&Mat::from_fn(6, 5, |_, _| (rng.f64() + 0.5) as f32)),
+        );
+        let want = exec::execute_mat(&g, &b).unwrap();
+        let got = run_graph_mat(&g, &b).unwrap();
+        assert!(want.max_abs_diff(&got) < 1e-5);
+    }
+
+    #[test]
+    fn missing_binding_is_a_clean_error() {
+        let g = build::gcn_stagr(dims(), "stagr");
+        let err = run_graph(&g, &Bindings::new()).unwrap_err().to_string();
+        assert!(err.contains("unbound"), "{err}");
+    }
+}

@@ -1,0 +1,342 @@
+//! An in-tree worker pool for row-sharded kernels (rayon is unavailable
+//! offline, and per-call `thread::spawn` would allocate on the hot path).
+//!
+//! Design constraints, in order: (1) **zero allocations per dispatch** —
+//! workers park on a condvar and receive the job as a raw fat pointer, so
+//! the steady-state serving loop stays allocation-free; (2) callers block
+//! until every worker has finished, which is what makes the borrowed-job
+//! pointer sound; (3) a 1-thread pool degenerates to an inline call, so
+//! tests (and the allocation-counting hook) can run fully serial.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Borrowed job handed to workers. Raw pointer because the job only lives
+/// for the duration of one `run` call; `run` does not return until every
+/// worker is done with it, which is the entire safety argument.
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls are fine) and `run` blocks
+// until `remaining == 0`, so the pointer never outlives its referent.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    job: Option<JobPtr>,
+    epoch: u64,
+    remaining: usize,
+    /// Lanes whose job invocation panicked this epoch (the worker thread
+    /// survives; the panic is re-raised on the dispatching thread).
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Fixed pool of worker threads executing one borrowed job at a time.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Serializes dispatch: `WorkerPool` is `Sync` and shared via `Arc`,
+    /// so two threads may call [`WorkerPool::run`] concurrently; without
+    /// this lock the second would overwrite the in-flight job state.
+    dispatch: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Pool using `threads` total lanes (the calling thread is lane 0, so
+    /// `threads - 1` OS threads are spawned; `threads <= 1` runs inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                remaining: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut workers = Vec::new();
+        for lane in 1..threads.max(1) {
+            let shared = Arc::clone(&shared);
+            workers.push(std::thread::spawn(move || worker_loop(&shared, lane)));
+        }
+        WorkerPool { shared, workers, dispatch: Mutex::new(()) }
+    }
+
+    /// Single-lane pool: every `run` call executes inline on the caller.
+    pub fn serial() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+
+    /// Pool sized to the machine (capped — kernel row counts rarely feed
+    /// more than 8 lanes before the memory bus saturates).
+    pub fn default_parallel() -> WorkerPool {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool::new(n.min(8))
+    }
+
+    /// Total lanes including the caller.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `job(lane)` once on every lane (caller is lane 0) and wait for
+    /// all lanes to finish. Allocation-free. Concurrent callers are
+    /// serialized; a panicking job (any lane) is re-raised here only
+    /// after every lane has finished with the borrowed pointer.
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() {
+            job(0);
+            return;
+        }
+        // ignore poisoning: state is always drained before unwinding
+        let _dispatch = self
+            .dispatch
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "pool::run is not reentrant");
+            st.job = Some(JobPtr(job as *const _));
+            st.epoch = st.epoch.wrapping_add(1);
+            st.remaining = self.workers.len();
+        }
+        self.shared.work_cv.notify_all();
+        // the caller lane must not unwind past the join below — workers
+        // still hold the borrowed job pointer until remaining == 0
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(0)));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let worker_panics = st.panicked;
+        st.panicked = 0;
+        drop(st);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panics > 0 {
+            panic!("{worker_panics} worker lane(s) panicked during a pool job");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, lane: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let ptr = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.job.is_some() && st.epoch != seen_epoch {
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            seen_epoch = st.epoch;
+            st.job.as_ref().unwrap().0
+        };
+        // SAFETY: `run` holds the job alive until `remaining == 0`.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || unsafe { (&*ptr)(lane) },
+        ));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Split `rows` into chunks and run `f(r0, r1)` across the pool's lanes,
+/// load-balanced through an atomic dispenser. Small row counts (or a
+/// serial pool) run inline. Allocation-free.
+pub fn par_rows(
+    pool: &WorkerPool,
+    rows: usize,
+    min_chunk: usize,
+    f: &(dyn Fn(usize, usize) + Sync),
+) {
+    if rows == 0 {
+        return;
+    }
+    let lanes = pool.threads();
+    if lanes <= 1 || rows < 2 * min_chunk.max(1) {
+        f(0, rows);
+        return;
+    }
+    let chunk = (rows / (lanes * 4)).max(min_chunk).max(1);
+    let next = AtomicUsize::new(0);
+    pool.run(&|_lane| loop {
+        let r0 = next.fetch_add(chunk, Ordering::Relaxed);
+        if r0 >= rows {
+            break;
+        }
+        f(r0, (r0 + chunk).min(rows));
+    });
+}
+
+/// Wrapper making a raw output pointer `Send + Sync` so parallel kernels
+/// can carve **disjoint** row blocks out of one output buffer.
+#[derive(Clone, Copy)]
+pub(crate) struct SharedOut(pub *mut f32);
+// SAFETY: users only write disjoint index ranges (per-row sharding).
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::serial();
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicU64::new(0);
+        pool.run(&|lane| {
+            assert_eq!(lane, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn every_lane_participates() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let mask = AtomicU64::new(0);
+        pool.run(&|lane| {
+            mask.fetch_or(1 << lane, Ordering::Relaxed);
+        });
+        assert_eq!(mask.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn repeated_dispatch_is_stable() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(&|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 600);
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        let pool = WorkerPool::new(4);
+        let rows = 103;
+        let counts: Vec<AtomicU64> = (0..rows).map(|_| AtomicU64::new(0)).collect();
+        par_rows(&pool, rows, 1, &|r0, r1| {
+            for r in r0..r1 {
+                counts[r].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (r, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "row {r}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|lane| {
+                if lane == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "worker panic must re-raise on the caller");
+        // the pool stays functional: state was drained before re-raising
+        let total = AtomicU64::new(0);
+        pool.run(&|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn caller_lane_panic_joins_workers_first() {
+        // lane 0 panics: run must still join every worker (they borrow
+        // the job pointer) before re-raising, and stay usable after
+        let pool = WorkerPool::new(3);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|lane| {
+                if lane == 0 {
+                    panic!("caller boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        let total = AtomicU64::new(0);
+        pool.run(&|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn concurrent_dispatch_is_serialized() {
+        // two threads sharing one pool must both complete correctly
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        pool.run(&|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 2);
+    }
+
+    #[test]
+    fn par_rows_small_input_inline() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicU64::new(0);
+        par_rows(&pool, 3, 16, &|r0, r1| {
+            assert_eq!((r0, r1), (0, 3));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+}

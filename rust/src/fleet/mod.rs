@@ -34,12 +34,14 @@
 //! `benches/fleet_scaling.rs` sweep this tradeoff 1→8 shards.
 
 pub mod admission;
+pub mod engine;
 pub mod halo;
 pub mod placement;
 pub mod router;
 pub mod shard;
 
 pub use admission::{Admission, AdmissionConfig};
+pub use engine::PlanEngine;
 pub use halo::{build_halos, link_cost_us, HaloSpec};
 pub use placement::{per_node_us, plan, FleetPlan, ShardSpec, Workload};
 pub use router::Router;
@@ -156,7 +158,7 @@ impl Fleet {
     }
 
     /// Spawn a fleet of [`LocalEngine`]s over a dataset — fully offline
-    /// (no PJRT artifacts), deterministic, and identical in predictions
+    /// (no AOT artifacts), deterministic, and identical in predictions
     /// to a single-leader server running [`LocalEngine::full`].
     pub fn spawn_local(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
                        -> Result<Fleet> {
@@ -168,6 +170,31 @@ impl Fleet {
             let ds = ds.clone();
             let owned = spec.nodes.clone();
             Box::new(move || LocalEngine::shard(&ds, capacity, owned))
+        });
+        Ok(fleet)
+    }
+
+    /// Spawn a fleet of [`PlanEngine`]s — every shard serves a real GCN
+    /// [`crate::ops::plan::ExecPlan`] (compiled **once** here and
+    /// Arc-shared into the shard factories, arena-reused, fused chains),
+    /// still fully offline. Shards already parallelize across threads, so
+    /// each shard runs a serial in-shard worker pool.
+    pub fn spawn_planned(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
+                         -> Result<Fleet> {
+        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
+                                   ds.num_classes(), cfg)?;
+        let (exec_plan, weights) = PlanEngine::compile_parts(ds, capacity)?;
+        let graph = ds.graph.clone();
+        let features = ds.num_features();
+        let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {
+            let ds = ds.clone();
+            let owned = spec.nodes.clone();
+            let exec_plan = std::sync::Arc::clone(&exec_plan);
+            let weights = weights.clone();
+            Box::new(move || {
+                let pool = std::sync::Arc::new(crate::engine::WorkerPool::serial());
+                PlanEngine::from_parts(&ds, capacity, owned, pool, exec_plan, weights)
+            })
         });
         Ok(fleet)
     }
@@ -459,6 +486,29 @@ mod tests {
         assert_eq!(applied, fleet.expected_versions());
         assert!(applied.iter().all(|&v| v == 13), "{applied:?}");
         fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn planned_fleet_predictions_are_shard_count_invariant() {
+        // the plan-backed engines must agree across fleet sizes exactly
+        // like LocalEngine does — same plan, same synthesized weights
+        let ds = synthesize("plan-fleet", 40, 90, 4, 10, 23);
+        let mut reference: Option<Vec<i32>> = None;
+        for shards in [1usize, 3] {
+            let fleet =
+                Fleet::spawn_planned(&ds, 48, &FleetConfig::homogeneous(shards))
+                    .unwrap();
+            fleet.update(Update::AddEdge(0, 11)).unwrap();
+            fleet.update(Update::AddNode).unwrap();
+            let preds: Vec<i32> = (0..41)
+                .map(|n| fleet.query_wait(Some(n)).unwrap().prediction)
+                .collect();
+            match &reference {
+                None => reference = Some(preds),
+                Some(r) => assert_eq!(r, &preds, "{shards}-shard fleet diverged"),
+            }
+            fleet.shutdown().unwrap();
+        }
     }
 
     #[test]

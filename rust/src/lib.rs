@@ -6,14 +6,17 @@
 //!
 //! This crate is Layer 3 of the three-layer stack: the request-path
 //! coordinator. Python/JAX (Layers 1–2) runs only at build time
-//! (`make artifacts`) to lower the GNN models — with their Pallas kernels —
-//! to HLO text; this crate loads those artifacts through the PJRT C API
-//! ([`runtime`]), drives them with graphs prepared by the CPU-side
-//! techniques ([`graph`]: PreG, SymG, NodePad, GrAd, GraSp), schedules them
-//! with the paper's coordination contribution ([`coordinator`]: GraphSplit
-//! cost-model partitioning, CacheG state, batching), and evaluates the
-//! hardware questions on an NPU simulator ([`npu`]) with Intel Core Ultra
-//! Series 1/2-like configurations.
+//! (`make artifacts`) to train the models and emit the artifact manifest
+//! + weights; this crate rebuilds each artifact's op graph, compiles it
+//! once into an [`ops::plan::ExecPlan`], and serves it through the
+//! planned executor ([`engine`]) — buffer-arena reuse, fused elementwise
+//! chains, a real INT8 path, and row-sharded matmuls. Requests are driven
+//! with graphs prepared by the CPU-side techniques ([`graph`]: PreG,
+//! SymG, NodePad, GrAd, GraSp), scheduled by the paper's coordination
+//! contribution ([`coordinator`]: GraphSplit cost-model partitioning,
+//! CacheG state, batching), and evaluated against the hardware questions
+//! on an NPU simulator ([`npu`]) with Intel Core Ultra Series 1/2-like
+//! configurations.
 //!
 //! ## Module map
 //!
@@ -22,7 +25,8 @@
 //! | [`util`] | PRNG, property-testing harness, tables, timing |
 //! | [`config`] | TOML-subset parser + typed hardware/run configs |
 //! | [`graph`] | graph substrate: CSR, PreG/SymG/NodePad/GrAd/GraSp, datasets |
-//! | [`ops`] | OpenVINO-like op IR, GNN graph builders, EffOp/GrAx rewrites, reference executor |
+//! | [`ops`] | OpenVINO-like op IR, GNN graph builders, EffOp/GrAx rewrites, reference executor, [`ops::plan`] compile-once plans |
+//! | [`engine`] | planned executor: buffer arena, fused chains, INT8 kernels, worker pool |
 //! | [`npu`] | NPU simulator: DPU/DSP/SRAM/DMA/energy; CPU & GPU device models |
 //! | [`quant`] | QuantGr: symmetric static INT8 |
 //! | [`coordinator`] | GraphSplit partitioner, planner, executor, batcher, CacheG |
@@ -57,6 +61,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod fleet;
 pub mod graph;
 pub mod metrics;

@@ -110,7 +110,8 @@ fn main() -> Result<()> {
             let events = args.usize_opt("events", 4000)?;
             let query_ratio = args.f64_opt("query-ratio", 0.4)?;
             let devices = args.str_list_opt("devices", "series2,series1,gpu,cpu");
-            fleet_demo(shards, nodes, edges, events, query_ratio, &devices)?;
+            let engine = args.str_opt("engine", "local");
+            fleet_demo(shards, nodes, edges, events, query_ratio, &devices, &engine)?;
         }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
@@ -126,13 +127,13 @@ subcommands:
   figures                                        all of the above
   ablation           GraphSplit placement ablation
   artifacts          list AOT artifacts
-  infer              run one PJRT inference (--artifact NAME)
+  infer              run one planned-engine inference (--artifact NAME)
   accuracy           accuracy table over all artifacts (--dataset cora)
   split              GraphSplit placement report (--model, --variant)
   serve              dynamic knowledge-graph serving demo
   fleet              sharded multi-device serving demo (offline, no artifacts)
                      (--shards N --devices series2,cpu,… --nodes --edges
-                      --events --query-ratio)
+                      --events --query-ratio --engine local|plan)
 
 common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
                 --artifacts DIR
@@ -224,10 +225,11 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
 }
 
 /// Sharded serving demo over a synthetic knowledge graph — fully
-/// offline: artifact-free [`grannite::fleet::LocalEngine`] shards placed
-/// on simulated devices by the cost model.
+/// offline. `--engine local` uses the label-voting
+/// [`grannite::fleet::LocalEngine`]; `--engine plan` serves a real GCN
+/// [`grannite::ops::plan::ExecPlan`] per shard (the planned executor).
 fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
-              query_ratio: f64, device_names: &[String]) -> Result<()> {
+              query_ratio: f64, device_names: &[String], engine: &str) -> Result<()> {
     use grannite::fleet::{Fleet, FleetConfig};
     use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
     use grannite::server::Update;
@@ -241,7 +243,12 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
     let cfg = FleetConfig::from_names(&roster)?;
     let capacity = nodes + nodes / 8;
     let ds = grannite::graph::datasets::synthesize("fleet", nodes, edges, 6, 64, 42);
-    let fleet = Fleet::spawn_local(&ds, capacity, &cfg)?;
+    let fleet = match engine {
+        "local" => Fleet::spawn_local(&ds, capacity, &cfg)?,
+        "plan" => Fleet::spawn_planned(&ds, capacity, &cfg)?,
+        other => bail!("--engine must be local|plan, got {other:?}"),
+    };
+    println!("engine: {engine}");
 
     let mut t = Table::new(
         format!("fleet placement — {shards} shards over {nodes} nodes"),

@@ -12,4 +12,7 @@ pub mod cost;
 pub mod sim;
 
 pub use cost::{matmul_utilization, op_cost, CostOpts, OpCost};
-pub use sim::{simulate, simulate_device, OpRecord, Placement, SimOptions, SimReport};
+pub use sim::{
+    is_fusible, is_reducer, simulate, simulate_device, OpRecord, Placement,
+    SimOptions, SimReport,
+};

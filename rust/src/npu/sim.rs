@@ -28,7 +28,12 @@ use super::cost::{is_mask_name, op_cost, CostOpts, OpCost};
 /// an oversized intermediate flowing between two fusible ops never
 /// materializes in DRAM (this is why EffOp's op-count increase is free
 /// while its DSP elimination pays off).
-fn is_fusible(k: &OpKind) -> bool {
+///
+/// This predicate is the **fusion contract** shared with the planned
+/// executor ([`crate::ops::plan`]): the engine fuses exactly the chains
+/// this function admits, so the simulator's cost model and the real
+/// engine agree on which intermediates never materialize.
+pub fn is_fusible(k: &OpKind) -> bool {
     matches!(
         k,
         OpKind::Add
@@ -46,7 +51,7 @@ fn is_fusible(k: &OpKind) -> bool {
 }
 
 /// Reductions can terminate a fused chain (they consume streamed tiles).
-fn is_reducer(k: &OpKind) -> bool {
+pub fn is_reducer(k: &OpKind) -> bool {
     matches!(k, OpKind::ReduceSumRows | OpKind::ReduceMaxRows | OpKind::MaskedMaxPool)
 }
 

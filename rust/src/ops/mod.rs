@@ -11,14 +11,19 @@
 //!   GCN / GAT / GraphSAGE,
 //! - [`rewrite`]: the GraNNite passes,
 //! - [`exec`]: an f32 reference executor used as the correctness oracle
-//!   for every pass (mirroring `python/compile/kernels/ref.py` numerics).
+//!   for every pass (mirroring `python/compile/kernels/ref.py` numerics),
+//! - [`plan`]: compile-once execution plans (frozen topo order, buffer
+//!   arena, fused elementwise chains, INT8 lowering) that
+//!   [`crate::engine`] runs with zero steady-state allocations.
 
 pub mod build;
 pub mod exec;
 pub mod graph;
+pub mod plan;
 pub mod rewrite;
 
 pub use graph::{OpGraph, OpId};
+pub use plan::ExecPlan;
 
 /// GrAx1 additive mask constant (matches kernels/ref.py NEG_MASK).
 pub const NEG_MASK: f32 = -1.0e9;

@@ -1,0 +1,599 @@
+//! Compile-once execution plans — the op-graph analogue of the paper's
+//! Step-2 "eliminate per-inference overhead" techniques.
+//!
+//! [`crate::ops::exec`] interprets the graph on every call: it re-walks
+//! the topo order, resolves inputs through a map, clones every operand
+//! into a fresh `Mat`, and allocates every intermediate. [`ExecPlan`]
+//! does all of that **once**:
+//!
+//! - the topological order is frozen into a flat step list,
+//! - shapes are checked/folded ahead of time ([`OpGraph::validate`] plus
+//!   rank normalization),
+//! - a **liveness analysis** assigns every intermediate to a slab of a
+//!   reusable buffer arena (two tensors whose live ranges do not overlap
+//!   share one slab),
+//! - runs of elementwise ops are folded into **fused chains** — a single
+//!   streaming loop per chain, no intermediate materialization. What
+//!   fuses is decided by [`crate::npu::sim::is_fusible`], the *same*
+//!   predicate the NPU simulator's memory model uses, so the cost model
+//!   and the real engine agree on which tensors never hit "DRAM",
+//! - `Quantize` ops feeding only `QMatMul` lhs operands are lowered to
+//!   **real INT8**: their output lives in an `i8` arena slab and the
+//!   consuming matmul runs an i8×i8→i32 kernel (QuantGr's datapath)
+//!   instead of the rounded-f32 emulation of the reference executor.
+//!
+//! The plan itself is immutable and shareable ([`std::sync::Arc`]); the
+//! mutable part (arena buffers, cached INT8 weights) lives in
+//! [`crate::engine::PlanInstance`], which executes the plan with zero
+//! steady-state allocations. `ops::exec` remains the correctness oracle:
+//! every plan is property-tested against it (rust/tests/plan_equivalence.rs).
+
+use anyhow::{bail, Result};
+
+use super::{OpGraph, OpId, OpKind};
+use crate::npu::sim::is_fusible;
+use crate::tensor::DType;
+
+/// Sentinel for "no arena slot" (inputs, fused interiors, i8 outputs).
+pub const NO_SLOT: usize = usize::MAX;
+
+/// Position transform from a chain's output coordinates to an upstream
+/// operand's coordinates: broadcasts later in the chain pin the earlier
+/// row (`zero_i`) or column (`zero_j`) index to 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PosT {
+    pub zero_i: bool,
+    pub zero_j: bool,
+}
+
+/// A chain operand (its head input or one binary step's second operand):
+/// the producing op plus the position transform accumulated through any
+/// later broadcast steps. Rows/cols are the producer's normalized shape.
+#[derive(Debug, Clone)]
+pub struct ChainSrc {
+    pub op: OpId,
+    pub rows: usize,
+    pub cols: usize,
+    pub pos: PosT,
+}
+
+/// One scalar stage of a fused chain. Binary stages carry an index into
+/// [`Chain::aux`]; `Broadcast` stages are pure index remaps folded into
+/// the [`PosT`] transforms at compile time.
+#[derive(Debug, Clone, Copy)]
+pub enum FusedOp {
+    Scale(f32),
+    AddConst(f32),
+    Relu,
+    LeakyRelu(f32),
+    Exp,
+    Quantize(f32),
+    Broadcast,
+    Add(u32),
+    Sub(u32),
+    Mul(u32),
+}
+
+/// A maximal run of fusible elementwise ops executed as one streaming
+/// loop over the tail op's elements. Interior ops never materialize.
+#[derive(Debug, Clone)]
+pub struct Chain {
+    /// Member op ids in execution order (tail last).
+    pub ops: Vec<OpId>,
+    /// Input 0 of the first op.
+    pub head: ChainSrc,
+    /// Second operands of binary stages, in stage order.
+    pub aux: Vec<ChainSrc>,
+    /// One stage per member op.
+    pub steps: Vec<FusedOp>,
+    /// Output geometry (the tail op's normalized shape).
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// How a plan step executes.
+#[derive(Debug, Clone)]
+pub enum StepKind {
+    /// Fused elementwise chain (length ≥ 1).
+    Chain(Chain),
+    /// `Quantize` lowered to a real i8 arena slab (all consumers are
+    /// QMatMul lhs operands).
+    QuantizeI8 { scale: f32 },
+    /// Any other op, dispatched to a dedicated kernel.
+    Kernel,
+}
+
+/// One frozen execution step; `op` is the id whose value it produces
+/// (the tail op for fused chains).
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    pub op: OpId,
+    pub kind: StepKind,
+}
+
+/// A compiled, immutable execution plan. See the module docs.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub graph: OpGraph,
+    pub steps: Vec<PlanStep>,
+    /// Op id → f32 arena slot ([`NO_SLOT`] for inputs/interiors/i8 ops).
+    pub slot: Vec<usize>,
+    /// Op id → i8 arena slot (only `QuantizeI8` outputs).
+    pub i8_slot: Vec<usize>,
+    /// Element capacity of each f32 slab.
+    pub slab_elems: Vec<usize>,
+    /// Element capacity of each i8 slab.
+    pub i8_slab_elems: Vec<usize>,
+    /// Ops folded away as fused-chain interiors.
+    pub fused_away: usize,
+}
+
+/// Normalized (rows, cols) of an op's output; rank-1 shapes are row
+/// vectors, rank-0 are scalars (matches `Tensor::to_mat`).
+pub fn rc(shape: &[usize]) -> Result<(usize, usize)> {
+    match shape.len() {
+        2 => Ok((shape[0], shape[1])),
+        1 => Ok((1, shape[0])),
+        0 => Ok((1, 1)),
+        r => bail!("rank-{r} tensors unsupported by the planned engine"),
+    }
+}
+
+impl ExecPlan {
+    /// Compile `g` into a plan. Fails on graphs the engine cannot run
+    /// steady-state (unvalidated shapes, rank > 2, integer inputs that
+    /// are not graph inputs, outputs that are raw inputs).
+    pub fn compile(g: &OpGraph) -> Result<ExecPlan> {
+        g.validate()?;
+        let n = g.ops.len();
+        for op in &g.ops {
+            rc(&op.shape)?;
+        }
+        for &o in &g.outputs {
+            if g.ops[o].kind == OpKind::Input {
+                bail!("{}: plan output #{o} is a raw input", g.name);
+            }
+        }
+        // Integer-consuming kernels read their index tensor straight from
+        // the bindings; a computed index tensor has no i32 arena.
+        for (id, op) in g.ops.iter().enumerate() {
+            let idx_input = match op.kind {
+                OpKind::DegreesFromEdges
+                | OpKind::AdjacencyFromEdges
+                | OpKind::ScatterAddEdges
+                | OpKind::NeighborGatherMax
+                | OpKind::NeighborGatherMean => Some(op.inputs[0]),
+                _ => None,
+            };
+            if let Some(src) = idx_input {
+                if g.ops[src].kind != OpKind::Input {
+                    bail!("{} op#{id}: computed index tensors unsupported", g.name);
+                }
+            }
+        }
+
+        let consumers = g.consumers();
+        let is_output = |id: OpId| g.outputs.contains(&id);
+
+        // --- INT8 lowering: Quantize ops consumed only as QMatMul lhs ---
+        let mut quant_i8 = vec![false; n];
+        for (id, op) in g.ops.iter().enumerate() {
+            if let OpKind::Quantize { .. } = op.kind {
+                let cs = &consumers[id];
+                let all_qmm_lhs = !cs.is_empty()
+                    && cs.iter().all(|&c| {
+                        matches!(g.ops[c].kind, OpKind::QMatMul { .. })
+                            && g.ops[c].inputs[0] == id
+                            && g.ops[c].inputs.iter().filter(|&&x| x == id).count() == 1
+                    });
+                if all_qmm_lhs && !is_output(id) {
+                    quant_i8[id] = true;
+                }
+            }
+        }
+
+        // --- fusion chains (mirror npu::sim::is_fusible) ---
+        let chainable =
+            |id: OpId| is_fusible(&g.ops[id].kind) && !quant_i8[id];
+        // link[a] = Some(b): a's value streams straight into b (b is a's
+        // single consumer, reads it exactly once, as input 0)
+        let mut link: Vec<Option<OpId>> = vec![None; n];
+        let mut prev: Vec<Option<OpId>> = vec![None; n];
+        for id in 0..n {
+            if !chainable(id) || is_output(id) {
+                continue;
+            }
+            if consumers[id].len() != 1 {
+                continue;
+            }
+            let b = consumers[id][0];
+            if chainable(b) && g.ops[b].inputs.first() == Some(&id) {
+                link[id] = Some(b);
+                prev[b] = Some(id);
+            }
+        }
+        let interior = |id: OpId| link[id].is_some();
+
+        // rep[id]: the step at which id's value is produced (chain tail
+        // for interiors, itself otherwise)
+        let mut rep: Vec<OpId> = (0..n).collect();
+        for id in 0..n {
+            if chainable(id) {
+                let mut t = id;
+                while let Some(nx) = link[t] {
+                    t = nx;
+                }
+                rep[id] = t;
+            }
+        }
+
+        // --- liveness: last step that reads each op's value ---
+        let mut last_use: Vec<usize> = (0..n).collect();
+        for (id, op) in g.ops.iter().enumerate() {
+            for &src in &op.inputs {
+                last_use[src] = last_use[src].max(rep[id]);
+            }
+        }
+        for &o in &g.outputs {
+            last_use[o] = usize::MAX;
+        }
+        let mut frees_at: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for r in 0..n {
+            if last_use[r] != usize::MAX && g.ops[r].kind != OpKind::Input {
+                frees_at[last_use[r]].push(r);
+            }
+        }
+
+        // --- arena slot assignment + step list ---
+        let mut slot = vec![NO_SLOT; n];
+        let mut i8_slot = vec![NO_SLOT; n];
+        let mut slab_elems: Vec<usize> = Vec::new();
+        let mut i8_slab_elems: Vec<usize> = Vec::new();
+        let mut free_f32: Vec<usize> = Vec::new();
+        let mut free_i8: Vec<usize> = Vec::new();
+        let mut steps: Vec<PlanStep> = Vec::new();
+        let mut fused_away = 0usize;
+
+        fn acquire(free: &mut Vec<usize>, sizes: &mut Vec<usize>, need: usize) -> usize {
+            // best fit among free slabs
+            let mut best: Option<usize> = None;
+            for (k, &s) in free.iter().enumerate() {
+                if sizes[s] >= need {
+                    let better = match best {
+                        None => true,
+                        Some(kb) => sizes[s] < sizes[free[kb]],
+                    };
+                    if better {
+                        best = Some(k);
+                    }
+                }
+            }
+            if let Some(k) = best {
+                return free.swap_remove(k);
+            }
+            // otherwise grow the largest free slab rather than adding one
+            if !free.is_empty() {
+                let mut kb = 0;
+                for k in 1..free.len() {
+                    if sizes[free[k]] > sizes[free[kb]] {
+                        kb = k;
+                    }
+                }
+                let s = free.swap_remove(kb);
+                if sizes[s] < need {
+                    sizes[s] = need;
+                }
+                return s;
+            }
+            sizes.push(need);
+            sizes.len() - 1
+        }
+
+        for id in 0..n {
+            let op = &g.ops[id];
+            if op.kind == OpKind::Input {
+                continue;
+            }
+            if interior(id) {
+                fused_away += 1;
+            } else {
+                let (rows, cols) = rc(&op.shape)?;
+                let need = rows * cols;
+                if quant_i8[id] {
+                    i8_slot[id] = acquire(&mut free_i8, &mut i8_slab_elems, need);
+                    let scale = match op.kind {
+                        OpKind::Quantize { scale } => scale,
+                        _ => unreachable!(),
+                    };
+                    steps.push(PlanStep { op: id, kind: StepKind::QuantizeI8 { scale } });
+                } else {
+                    slot[id] = acquire(&mut free_f32, &mut slab_elems, need);
+                    let kind = if chainable(id) {
+                        StepKind::Chain(build_chain(g, id, &prev, rows, cols)?)
+                    } else {
+                        StepKind::Kernel
+                    };
+                    steps.push(PlanStep { op: id, kind });
+                }
+                // release sources whose last read is this step (after the
+                // output slot is taken, so inputs never alias the output)
+                for &r in &frees_at[id] {
+                    if slot[r] != NO_SLOT {
+                        free_f32.push(slot[r]);
+                    } else if i8_slot[r] != NO_SLOT {
+                        free_i8.push(i8_slot[r]);
+                    }
+                }
+            }
+        }
+
+        Ok(ExecPlan {
+            graph: g.clone(),
+            steps,
+            slot,
+            i8_slot,
+            slab_elems,
+            i8_slab_elems,
+            fused_away,
+        })
+    }
+
+    /// Steady-state f32 arena footprint in bytes.
+    pub fn arena_bytes(&self) -> usize {
+        self.slab_elems.iter().sum::<usize>() * 4
+            + self.i8_slab_elems.iter().sum::<usize>()
+    }
+
+    /// What the arena would cost without liveness reuse (every
+    /// materialized intermediate its own buffer).
+    pub fn unshared_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for (id, op) in self.graph.ops.iter().enumerate() {
+            if self.slot[id] != NO_SLOT {
+                total += op.num_elements() * 4;
+            } else if self.i8_slot[id] != NO_SLOT {
+                total += op.num_elements();
+            }
+        }
+        total
+    }
+
+    /// Number of executed steps (fused chains count once).
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+}
+
+/// Assemble the chain ending at `tail` by walking `prev` links back to
+/// the head, then derive per-stage aux sources and position transforms.
+fn build_chain(
+    g: &OpGraph,
+    tail: OpId,
+    prev: &[Option<OpId>],
+    rows: usize,
+    cols: usize,
+) -> Result<Chain> {
+    let mut ops = vec![tail];
+    let mut cur = tail;
+    while let Some(p) = prev[cur] {
+        ops.push(p);
+        cur = p;
+    }
+    ops.reverse();
+
+    // walk tail → head accumulating the broadcast position transforms
+    let mut pos_at = vec![PosT::default(); ops.len()];
+    let mut cur_pos = PosT::default();
+    for t in (0..ops.len()).rev() {
+        pos_at[t] = cur_pos;
+        match g.ops[ops[t]].kind {
+            OpKind::BroadcastCol => cur_pos.zero_j = true,
+            OpKind::BroadcastRow => cur_pos.zero_i = true,
+            _ => {}
+        }
+    }
+    let head_src = g.ops[ops[0]].inputs[0];
+    let (hr, hc) = rc(&g.ops[head_src].shape)?;
+    let head = ChainSrc { op: head_src, rows: hr, cols: hc, pos: cur_pos };
+
+    let mut aux: Vec<ChainSrc> = Vec::new();
+    let mut steps: Vec<FusedOp> = Vec::new();
+    for (t, &id) in ops.iter().enumerate() {
+        let op = &g.ops[id];
+        let is_binary =
+            matches!(op.kind, OpKind::Add | OpKind::Sub | OpKind::Mul);
+        if is_binary {
+            let src = op.inputs[1];
+            let (ar, ac) = rc(&g.ops[src].shape)?;
+            aux.push(ChainSrc { op: src, rows: ar, cols: ac, pos: pos_at[t] });
+        }
+        let ax = aux.len().wrapping_sub(1) as u32;
+        let step = match op.kind {
+            OpKind::Scale(c) => FusedOp::Scale(c),
+            OpKind::AddConst(c) => FusedOp::AddConst(c),
+            OpKind::Relu => FusedOp::Relu,
+            OpKind::LeakyRelu(s) => FusedOp::LeakyRelu(s),
+            OpKind::Exp => FusedOp::Exp,
+            OpKind::Quantize { scale } => FusedOp::Quantize(scale),
+            OpKind::BroadcastCol | OpKind::BroadcastRow => FusedOp::Broadcast,
+            OpKind::Add => FusedOp::Add(ax),
+            OpKind::Sub => FusedOp::Sub(ax),
+            OpKind::Mul => FusedOp::Mul(ax),
+            ref other => bail!("op {:?} is not fusible", other.name()),
+        };
+        steps.push(step);
+    }
+    Ok(Chain { ops, head, aux, steps, rows, cols })
+}
+
+/// Compile-time view of which dtype an op's planned output uses.
+pub fn planned_dtype(plan: &ExecPlan, id: OpId) -> DType {
+    if plan.i8_slot[id] != NO_SLOT {
+        DType::I8
+    } else {
+        DType::F32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::build::{self, GatVariant, GnnDims, QuantScales};
+    use crate::ops::Stage;
+
+    fn dims() -> GnnDims {
+        GnnDims { n: 20, m: 30, f: 12, hidden: 8, classes: 4, k: 5, layers: 2 }
+    }
+
+    #[test]
+    fn compiles_every_builder_variant() {
+        for (m, v) in [
+            ("gcn", "baseline"),
+            ("gcn", "stagr"),
+            ("gcn", "quant"),
+            ("gat", "baseline"),
+            ("gat", "effop"),
+            ("gat", "grax"),
+            ("sage_mean", "stagr"),
+            ("sage_max", "baseline"),
+            ("sage_max", "grax3"),
+        ] {
+            let g = build::build(m, v, dims()).unwrap();
+            let p = ExecPlan::compile(&g).unwrap_or_else(|e| panic!("{m}/{v}: {e}"));
+            assert!(!p.steps.is_empty());
+        }
+    }
+
+    #[test]
+    fn arena_reuses_slabs() {
+        // deep graphs must share slabs: far fewer slabs than steps, and a
+        // smaller steady-state footprint than one-buffer-per-op
+        let g = build::gat(dims(), GatVariant::EffOp);
+        let p = ExecPlan::compile(&g).unwrap();
+        assert!(
+            p.slab_elems.len() < p.steps.len(),
+            "{} slabs for {} steps",
+            p.slab_elems.len(),
+            p.steps.len()
+        );
+        assert!(p.arena_bytes() < p.unshared_bytes());
+    }
+
+    #[test]
+    fn fusion_mirrors_simulator_contract() {
+        let g = build::gat(dims(), GatVariant::EffOp);
+        let p = ExecPlan::compile(&g).unwrap();
+        let mut chained_ops = 0usize;
+        for step in &p.steps {
+            if let StepKind::Chain(ch) = &step.kind {
+                chained_ops += ch.ops.len();
+                for &id in &ch.ops {
+                    assert!(
+                        crate::npu::sim::is_fusible(&g.ops[id].kind),
+                        "chain member {} is not sim-fusible",
+                        g.ops[id].kind.name()
+                    );
+                }
+            }
+        }
+        // every fusible op lands in some chain (as member or singleton)
+        let fusible_total = g
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(id, op)| {
+                crate::npu::sim::is_fusible(&op.kind) && p.i8_slot[*id] == NO_SLOT
+            })
+            .count();
+        assert_eq!(chained_ops, fusible_total);
+        // EffOp's mask arithmetic is exactly the kind of elementwise run
+        // the simulator calls free — some real multi-op chain must exist
+        assert!(p.fused_away > 0, "no fusion happened");
+    }
+
+    #[test]
+    fn quantize_feeding_qmatmul_goes_int8() {
+        let g = build::gcn_quant(dims(), QuantScales::default());
+        let p = ExecPlan::compile(&g).unwrap();
+        let quant_steps = p
+            .steps
+            .iter()
+            .filter(|s| matches!(s.kind, StepKind::QuantizeI8 { .. }))
+            .count();
+        assert_eq!(quant_steps, 2, "both layer activations lower to i8");
+        assert!(!p.i8_slab_elems.is_empty());
+    }
+
+    #[test]
+    fn quantize_with_other_consumers_stays_f32() {
+        use crate::ops::Op;
+        let mut g = OpGraph::new("qmix");
+        let x = g.input("x", &[3, 4], DType::F32, Stage::Compute);
+        let w = g.input("w", &[4, 2], DType::F32, Stage::Compute);
+        let q = g.push(Op {
+            kind: OpKind::Quantize { scale: 0.1 },
+            inputs: vec![x],
+            shape: vec![3, 4],
+            dtype: DType::F32,
+            stage: Stage::Compute,
+            name: String::new(),
+        });
+        let mm = g.op(
+            OpKind::QMatMul { x_scale: 0.1, w_scale: 0.1 },
+            &[q, w],
+            &[3, 2],
+            Stage::Compute,
+        );
+        // second consumer: the quantized activations also get ReLU'd
+        let r = g.op(OpKind::Relu, &[q], &[3, 4], Stage::Compute);
+        let _ = r;
+        g.set_output(mm);
+        let p = ExecPlan::compile(&g).unwrap();
+        assert_eq!(p.i8_slot[q], NO_SLOT, "multi-consumer quantize must stay f32");
+        assert!(p.slot[q] != NO_SLOT);
+    }
+
+    #[test]
+    fn output_never_fused_away() {
+        let mut g = OpGraph::new("tailout");
+        let x = g.input("x", &[4, 4], DType::F32, Stage::Compute);
+        let a = g.op(OpKind::Relu, &[x], &[4, 4], Stage::Compute);
+        let b = g.op(OpKind::Scale(2.0), &[a], &[4, 4], Stage::Compute);
+        g.set_output(b);
+        let p = ExecPlan::compile(&g).unwrap();
+        assert!(p.slot[b] != NO_SLOT);
+        // relu→scale fuses into one chain of two ops
+        assert_eq!(p.steps.len(), 1);
+        match &p.steps[0].kind {
+            StepKind::Chain(ch) => assert_eq!(ch.ops, vec![a, b]),
+            other => panic!("expected chain, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn broadcast_position_transforms_accumulate() {
+        // (m,1) head → BroadcastCol → Add(·, full) : head read at (i, 0)
+        let mut g = OpGraph::new("bc");
+        let v = g.input("v", &[5, 1], DType::F32, Stage::Compute);
+        let full = g.input("full", &[5, 6], DType::F32, Stage::Compute);
+        let bc = g.op(OpKind::BroadcastCol, &[v], &[5, 6], Stage::Compute);
+        let add = g.op(OpKind::Add, &[bc, full], &[5, 6], Stage::Compute);
+        g.set_output(add);
+        let p = ExecPlan::compile(&g).unwrap();
+        match &p.steps[0].kind {
+            StepKind::Chain(ch) => {
+                assert!(ch.head.pos.zero_j, "head must be pinned to column 0");
+                assert!(!ch.aux[0].pos.zero_j, "aux after the broadcast is not");
+            }
+            other => panic!("expected chain, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn raw_input_output_rejected() {
+        let mut g = OpGraph::new("io");
+        let x = g.input("x", &[2, 2], DType::F32, Stage::Compute);
+        g.set_output(x);
+        assert!(ExecPlan::compile(&g).is_err());
+    }
+}

@@ -1,10 +1,21 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
-//! request path — the rust half of the HLO-text interchange
-//! (see /opt/xla-example/README.md for the gotchas this encodes).
+//! Artifact runtime: load the AOT manifest (`make artifacts` output) and
+//! execute models on the request path through the **planned engine**.
 //!
-//! One [`Runtime`] owns the PJRT CPU client, the artifact manifest, and a
-//! compile cache (one compiled executable per model variant, as the
-//! architecture prescribes). Python never runs here.
+//! Earlier revisions shipped each artifact as lowered HLO text executed
+//! through a PJRT client; that put an external XLA toolchain on the
+//! serving path for numerics this crate can produce itself. The runtime
+//! now rebuilds every artifact's op graph from the manifest metadata
+//! (model / variant / input shapes), compiles it **once** into an
+//! [`ExecPlan`] (frozen topo order, liveness-shared buffer arena, fused
+//! elementwise chains, INT8 lowering — see [`crate::ops::plan`]), and
+//! keeps one warm [`PlanInstance`] per artifact so steady-state execution
+//! allocates nothing. The HLO files remain on disk as the interchange
+//! record; the `.gnnt` weights files are the numerics source of truth
+//! (quant scales included).
+//!
+//! One [`Runtime`] owns the manifest, the compiled-plan cache, and the
+//! shared worker pool — one compiled executable per model variant, as the
+//! architecture prescribes. Python never runs here.
 
 pub mod io;
 
@@ -15,6 +26,10 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Document;
+use crate::engine::{PlanInstance, WorkerPool};
+use crate::ops::build::{self, GnnDims, QuantScales};
+use crate::ops::plan::ExecPlan;
+use crate::ops::OpGraph;
 use crate::tensor::Tensor;
 
 /// Metadata for one AOT artifact (a `[artifact.*]` manifest section).
@@ -24,6 +39,9 @@ pub struct ArtifactInfo {
     pub path: PathBuf,
     pub model: String,
     pub dataset: String,
+    /// Model variant ("stagr", "grax3", …) when the manifest records it;
+    /// older manifests fall back to name-derived heuristics.
+    pub variant: Option<String>,
     /// Input binding names, in parameter order.
     pub inputs: Vec<String>,
     /// Input shapes (dims per input, same order).
@@ -32,19 +50,33 @@ pub struct ArtifactInfo {
     pub dtypes: Vec<String>,
 }
 
-/// The PJRT-backed model runtime.
+/// The plan-backed model runtime.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     artifacts: BTreeMap<String, ArtifactInfo>,
-    cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    pool: Arc<WorkerPool>,
+    plans: Mutex<BTreeMap<String, Arc<ExecPlan>>>,
+    /// One warm instance per artifact: arena buffers + INT8 weight cache
+    /// survive across calls, so repeat inference is allocation-free.
+    /// Per-artifact mutexes: concurrent callers serialize only on the
+    /// *same* artifact, not on the registry.
+    instances: Mutex<BTreeMap<String, Arc<Mutex<PlanInstance>>>>,
     /// Dataset + weights sections from the manifest (typed lookups).
     pub manifest: Document,
 }
 
 impl Runtime {
-    /// Open the artifacts directory (requires `make artifacts` output).
+    /// Open the artifacts directory (requires `make artifacts` output)
+    /// with a machine-sized worker pool. When many runtimes coexist (one
+    /// per fleet shard), use [`Runtime::open_with_pool`] with
+    /// [`WorkerPool::serial`] instead — shards already parallelize across
+    /// threads, and N full-size pools would oversubscribe the host.
     pub fn open(dir: &Path) -> Result<Runtime> {
+        Runtime::open_with_pool(dir, Arc::new(WorkerPool::default_parallel()))
+    }
+
+    /// [`Runtime::open`] with an explicit (possibly shared) worker pool.
+    pub fn open_with_pool(dir: &Path, pool: Arc<WorkerPool>) -> Result<Runtime> {
         let manifest_path = dir.join("manifest.toml");
         let manifest = Document::load(&manifest_path)
             .context("artifacts missing — run `make artifacts` first")?;
@@ -82,18 +114,22 @@ impl Runtime {
                     path: dir.join(rel),
                     model: manifest.str_of(section, "model")?.to_string(),
                     dataset: manifest.str_of(section, "dataset")?.to_string(),
+                    variant: manifest
+                        .str_of(section, "variant")
+                        .ok()
+                        .map(|s| s.to_string()),
                     inputs,
                     shapes,
                     dtypes,
                 },
             );
         }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
-            client,
             dir: dir.to_path_buf(),
             artifacts,
-            cache: Mutex::new(BTreeMap::new()),
+            pool,
+            plans: Mutex::new(BTreeMap::new()),
+            instances: Mutex::new(BTreeMap::new()),
             manifest,
         })
     }
@@ -113,29 +149,21 @@ impl Runtime {
                                    self.artifact_names()))
     }
 
-    /// Load + compile an artifact (cached after the first call).
-    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+    /// Rebuild + compile an artifact's plan (cached after the first call).
+    pub fn load(&self, name: &str) -> Result<Arc<ExecPlan>> {
+        if let Some(plan) = self.plans.lock().unwrap().get(name) {
+            return Ok(plan.clone());
         }
         let info = self.artifact(name)?;
-        // HLO *text* interchange: xla_extension 0.5.1 rejects jax≥0.5
-        // serialized protos (64-bit instruction ids); the text parser
-        // reassigns ids and round-trips cleanly.
-        let proto = xla::HloModuleProto::from_text_file(
-            info.path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", info.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?,
+        let graph = self
+            .graph_for(info)
+            .with_context(|| format!("rebuilding op graph for {name}"))?;
+        let plan = Arc::new(
+            ExecPlan::compile(&graph)
+                .with_context(|| format!("compiling plan for {name}"))?,
         );
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+        self.plans.lock().unwrap().insert(name.to_string(), plan.clone());
+        Ok(plan)
     }
 
     /// Execute an artifact on positional tensors. Returns the first
@@ -161,87 +189,241 @@ impl Runtime {
                 );
             }
         }
-        let exe = self.load(name)?;
-        let literals = inputs
-            .iter()
-            .map(tensor_to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {name}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = out.to_tuple1().context("unwrapping result tuple")?;
-        literal_to_tensor(&out)
+        let mut bindings: BTreeMap<String, Tensor> = BTreeMap::new();
+        for (i, t) in inputs.iter().enumerate() {
+            bindings.insert(info.inputs[i].clone(), t.clone());
+        }
+        self.execute_bound(name, &bindings)
     }
 
-    /// Execute with named bindings, ordered per the manifest.
+    /// Execute with named bindings (extra bindings are allowed and
+    /// ignored); shapes are validated against the manifest.
     pub fn execute_named(&self, name: &str,
                          bindings: &BTreeMap<String, Tensor>) -> Result<Tensor> {
+        self.execute_bound(name, bindings)
+    }
+
+    fn execute_bound(&self, name: &str,
+                     bindings: &BTreeMap<String, Tensor>) -> Result<Tensor> {
         let info = self.artifact(name)?;
-        let inputs = info
-            .inputs
-            .iter()
-            .map(|n| {
-                bindings
-                    .get(n)
-                    .cloned()
-                    .ok_or_else(|| anyhow!("{name}: missing binding {n:?}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        self.execute(name, &inputs)
+        for (i, input) in info.inputs.iter().enumerate() {
+            let t = bindings
+                .get(input)
+                .ok_or_else(|| anyhow!("{name}: missing binding {input:?}"))?;
+            if !shapes_compatible(t.shape(), &info.shapes[i]) {
+                bail!(
+                    "{name}: binding {input:?} shape {:?} != expected {:?}",
+                    t.shape(),
+                    info.shapes[i]
+                );
+            }
+        }
+        self.execute_bound_unchecked(name, bindings)
+    }
+
+    fn execute_bound_unchecked(&self, name: &str,
+                               bindings: &BTreeMap<String, Tensor>) -> Result<Tensor> {
+        let plan = self.load(name)?;
+        // hold the registry lock only to fetch/create the artifact's
+        // instance; the inference itself locks just that instance
+        let inst = {
+            let mut instances = self.instances.lock().unwrap();
+            Arc::clone(instances.entry(name.to_string()).or_insert_with(|| {
+                Arc::new(Mutex::new(PlanInstance::new(
+                    plan,
+                    Arc::clone(&self.pool),
+                )))
+            }))
+        };
+        let mut inst = inst.lock().unwrap();
+        inst.run(bindings)
+            .with_context(|| format!("executing {name}"))?;
+        let (data, r, c) = inst.output_view(0)?;
+        Ok(Tensor::F32 { shape: vec![r, c], data: data.to_vec() })
+    }
+
+    // ------------------------------------------------------------------
+    // manifest metadata → op graph
+    // ------------------------------------------------------------------
+
+    /// Model dimensions recovered from the artifact's input shapes.
+    fn dims_for(&self, info: &ArtifactInfo) -> Result<GnnDims> {
+        fn shape_of<'a>(info: &'a ArtifactInfo, n: &str) -> Option<&'a [usize]> {
+            info.inputs
+                .iter()
+                .position(|x| x == n)
+                .map(|i| info.shapes[i].as_slice())
+        }
+        let x = shape_of(info, "x")
+            .or_else(|| shape_of(info, "x_pad"))
+            .ok_or_else(|| anyhow!("{}: no feature input", info.name))?;
+        if x.len() != 2 {
+            bail!("{}: feature input must be 2-D, got {x:?}", info.name);
+        }
+        let (n, f) = (x[0], x[1]);
+        // layers = highest numbered bias input (b1, b2, …)
+        let mut layers = 0usize;
+        for nm in &info.inputs {
+            if let Some(rest) = nm.strip_prefix('b') {
+                if let Ok(l) = rest.parse::<usize>() {
+                    layers = layers.max(l);
+                }
+            }
+        }
+        if layers == 0 {
+            bail!("{}: no bias inputs to infer layer count", info.name);
+        }
+        let last_dim = |s: &[usize]| s.last().copied().unwrap_or(0);
+        let classes = shape_of(info, &format!("b{layers}"))
+            .map(last_dim)
+            .ok_or_else(|| anyhow!("{}: missing b{layers}", info.name))?;
+        let hidden = if layers > 1 {
+            shape_of(info, "b1").map(last_dim).unwrap_or(crate::HIDDEN)
+        } else {
+            classes
+        };
+        let m = shape_of(info, "edges").map(|s| s[0]).unwrap_or(0);
+        let k = shape_of(info, "nbr_idx")
+            .and_then(|s| s.get(1).copied())
+            .unwrap_or(crate::SAGE_MAX_NEIGHBORS + 1);
+        Ok(GnnDims { n, m, f, hidden, classes, k, layers })
+    }
+
+    /// Rebuild the artifact's op graph: model from the manifest, variant
+    /// recovered from the artifact name, dims from the input shapes, and
+    /// (for QuantGr variants) the calibration scales from the weights file.
+    fn graph_for(&self, info: &ArtifactInfo) -> Result<OpGraph> {
+        let dims = self.dims_for(info)?;
+        // legacy manifests recorded sage artifacts under model "sage"
+        let model = if info.model == "sage" {
+            if info.name.starts_with("sage_mean") {
+                "sage_mean".to_string()
+            } else {
+                "sage_max".to_string()
+            }
+        } else {
+            info.model.clone()
+        };
+        // variant = name minus "<model>_" prefix minus "_<dataset>" suffix;
+        // fall back by trimming trailing segments (custom dataset tags)
+        let rest = info
+            .name
+            .strip_prefix(&model)
+            .unwrap_or(&info.name)
+            .trim_start_matches('_');
+        let ds_suffix = format!("_{}", info.dataset);
+        let variant = match rest.strip_suffix(&ds_suffix) {
+            Some(v) => v.to_string(),
+            None if rest == info.dataset => String::new(),
+            None => rest.to_string(),
+        };
+        let mut candidates: Vec<String> = Vec::new();
+        // a manifest-recorded variant beats every name-derived heuristic
+        if let Some(v) = &info.variant {
+            if !v.is_empty() {
+                candidates.push(v.clone());
+            }
+        }
+        if !variant.is_empty() && !candidates.contains(&variant) {
+            candidates.push(variant.clone());
+            let mut v = variant.clone();
+            while let Some(p) = v.rfind('_') {
+                v.truncate(p);
+                if !v.is_empty() && !candidates.contains(&v) {
+                    candidates.push(v.clone());
+                }
+            }
+        }
+        candidates.push("stagr".to_string());
+        candidates.push("baseline".to_string());
+
+        let has_input = |n: &str| info.inputs.iter().any(|i| i == n);
+        let mut last_err = anyhow!("{}: no graph variant matched", info.name);
+        for cand in &candidates {
+            let mut g = if cand.starts_with("quant") {
+                if model != "gcn" {
+                    continue;
+                }
+                build::gcn_quant(dims, self.quant_scales(info))
+            } else if model == "sage_mean" && has_input("nbr_idx") {
+                // Cora-scale sage artifacts ship the gathered formulation
+                build::sage_mean_gathered(dims)
+            } else {
+                match build::build(&model, cand, dims) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        last_err = e;
+                        continue;
+                    }
+                }
+            };
+            // NodePad artifacts record padded input names (norm_pad, x_pad)
+            for op in &mut g.ops {
+                if op.kind == crate::ops::OpKind::Input
+                    && !has_input(op.name.as_str())
+                {
+                    let padded = format!("{}_pad", op.name);
+                    if has_input(padded.as_str()) {
+                        op.name = padded;
+                    }
+                }
+            }
+            // the rebuilt graph must bind exactly what the artifact takes
+            let wanted: Vec<String> =
+                g.inputs().into_iter().map(|(_, n)| n.to_string()).collect();
+            if wanted.iter().all(|n| has_input(n.as_str())) {
+                return Ok(g);
+            }
+            last_err = anyhow!(
+                "{}: variant {cand:?} needs inputs {wanted:?}, artifact has {:?}",
+                info.name,
+                info.inputs
+            );
+        }
+        Err(last_err)
+    }
+
+    /// QuantGr static scales from the weights file's `scales` tensor
+    /// (`[act1, w1, act2, w2]`, written by `python -m compile.aot`).
+    fn quant_scales(&self, info: &ArtifactInfo) -> QuantScales {
+        let path = self
+            .dir
+            .join(format!("weights_{}_{}.gnnt", info.model, info.dataset));
+        if let Ok(tensors) = io::read_gnnt(&path) {
+            if let Some(Tensor::F32 { data, .. }) = tensors.get("scales") {
+                if data.len() == 4 {
+                    return QuantScales {
+                        act1: data[0],
+                        w1: data[1],
+                        act2: data[2],
+                        w2: data[3],
+                    };
+                }
+            }
+        }
+        QuantScales::default()
     }
 }
 
-/// Convert a [`Tensor`] into a PJRT literal.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(match t {
-        Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
-        Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
-        Tensor::I8 { shape, data } => {
-            let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S8,
-                shape,
-                &bytes,
-            )?
-        }
-        Tensor::U8 { shape, data } => {
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::U8,
-                shape,
-                data,
-            )?
-        }
-        Tensor::F16 { shape, data } => {
-            let bytes: Vec<u8> =
-                data.iter().flat_map(|v| v.to_le_bytes()).collect();
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F16,
-                shape,
-                &bytes,
-            )?
-        }
-    })
-}
-
-/// Convert a PJRT literal back into a [`Tensor`] (f32/i32 outputs).
-pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
-        xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
-        other => bail!("unsupported output element type {other:?}"),
+/// Manifest-vs-binding shape compatibility: exact match, or the
+/// deliberate rank normalization between a 1-D vector `[n]` and a row
+/// vector `[1, n]` (biases bind either way across the python/rust layers).
+fn shapes_compatible(bound: &[usize], expected: &[usize]) -> bool {
+    if bound == expected {
+        return true;
+    }
+    match (bound, expected) {
+        ([n], [one, m]) | ([one, m], [n]) => *one == 1 && n == m,
+        _ => false,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::exec::{self, Bindings};
+    use crate::tensor::Mat;
+    use crate::util::Rng;
 
     fn artifacts_dir() -> Option<PathBuf> {
         let p = PathBuf::from("artifacts");
@@ -250,6 +432,132 @@ mod tests {
         } else {
             None
         }
+    }
+
+    /// Synthetic manifest in a temp dir — exercises the whole open →
+    /// rebuild → compile → execute path with no `make artifacts` output.
+    fn tiny_runtime() -> (Runtime, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "grannite-rt-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"
+[artifact.gcn_stagr_tiny]
+path = "gcn_stagr_tiny.hlo.txt"
+model = "gcn"
+dataset = "tiny"
+inputs = "norm,x,w1,b1,w2,b2"
+shapes = "8x8;8x6;6x5;5;5x3;3"
+dtypes = "float32,float32,float32,float32,float32,float32"
+"#;
+        std::fs::write(dir.join("manifest.toml"), manifest).unwrap();
+        (Runtime::open(&dir).unwrap(), dir)
+    }
+
+    fn tiny_inputs(seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        let mut rand = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| (rng.f64() - 0.5) as f32)
+        };
+        vec![
+            Tensor::from_mat(&rand(8, 8)),
+            Tensor::from_mat(&rand(8, 6)),
+            Tensor::from_mat(&rand(6, 5)),
+            // biases bind 1-D, exactly as the python-written manifest records
+            Tensor::F32 { shape: vec![5], data: rand(1, 5).data },
+            Tensor::from_mat(&rand(5, 3)),
+            Tensor::F32 { shape: vec![3], data: rand(1, 3).data },
+        ]
+    }
+
+    #[test]
+    fn synthetic_manifest_executes_and_matches_oracle() {
+        let (rt, dir) = tiny_runtime();
+        let inputs = tiny_inputs(5);
+        let out = rt.execute("gcn_stagr_tiny", &inputs).unwrap();
+        assert_eq!(out.shape(), &[8, 3]);
+
+        // oracle comparison: same graph, same bindings ((1,n) biases)
+        let info = rt.artifact("gcn_stagr_tiny").unwrap();
+        let mut b: Bindings = Bindings::new();
+        for (i, name) in info.inputs.iter().enumerate() {
+            let t = match &inputs[i] {
+                Tensor::F32 { shape, data } if shape.len() == 1 => {
+                    Tensor::F32 { shape: vec![1, shape[0]], data: data.clone() }
+                }
+                other => other.clone(),
+            };
+            b.insert(name.clone(), t);
+        }
+        let dims = GnnDims { n: 8, m: 0, f: 6, hidden: 5, classes: 3, k: 11, layers: 2 };
+        let g = build::gcn_stagr(dims, "stagr");
+        let want = exec::execute_mat(&g, &b).unwrap();
+        let got = out.to_mat().unwrap();
+        assert!(want.max_abs_diff(&got) < 1e-4);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn repeat_execution_reuses_the_compiled_plan() {
+        let (rt, dir) = tiny_runtime();
+        let inputs = tiny_inputs(9);
+        let a = rt.execute("gcn_stagr_tiny", &inputs).unwrap();
+        assert_eq!(rt.plans.lock().unwrap().len(), 1);
+        let c = rt.execute("gcn_stagr_tiny", &inputs).unwrap();
+        assert_eq!(a, c, "warm instance must be deterministic");
+        assert_eq!(rt.plans.lock().unwrap().len(), 1, "plan compiled once");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn shape_validation_still_enforced() {
+        let (rt, dir) = tiny_runtime();
+        let mut inputs = tiny_inputs(1);
+        inputs[0] = Tensor::from_mat(&Mat::zeros(4, 4));
+        let err = rt.execute("gcn_stagr_tiny", &inputs).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn named_bindings_shape_validated() {
+        let (rt, dir) = tiny_runtime();
+        let inputs = tiny_inputs(3);
+        let names = rt.artifact("gcn_stagr_tiny").unwrap().inputs.clone();
+        let mut b: BTreeMap<String, Tensor> = BTreeMap::new();
+        for (n, t) in names.iter().zip(&inputs) {
+            b.insert(n.clone(), t.clone());
+        }
+        // transposed x: same element count, wrong geometry → rejected
+        b.insert("x".into(), Tensor::F32 { shape: vec![6, 8], data: vec![0.0; 48] });
+        let err = rt
+            .execute_named("gcn_stagr_tiny", &b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shape"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn shape_compat_rank_normalization() {
+        assert!(shapes_compatible(&[5], &[1, 5]));
+        assert!(shapes_compatible(&[1, 5], &[5]));
+        assert!(shapes_compatible(&[2, 3], &[2, 3]));
+        assert!(!shapes_compatible(&[3, 2], &[2, 3]));
+        assert!(!shapes_compatible(&[5], &[5, 1]));
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_options() {
+        let (rt, dir) = tiny_runtime();
+        let err = rt.artifact("nonexistent").unwrap_err().to_string();
+        assert!(err.contains("unknown artifact"));
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]
@@ -265,33 +573,12 @@ mod tests {
     }
 
     #[test]
-    fn unknown_artifact_error_lists_options() {
+    fn real_artifacts_compile_to_plans() {
         let Some(dir) = artifacts_dir() else { return };
         let rt = Runtime::open(&dir).unwrap();
-        let err = rt.artifact("nonexistent").unwrap_err().to_string();
-        assert!(err.contains("unknown artifact"));
-    }
-
-    #[test]
-    fn tensor_literal_roundtrip_f32() {
-        let t = Tensor::F32 { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] };
-        let lit = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&lit).unwrap();
-        assert_eq!(back, t);
-    }
-
-    #[test]
-    fn tensor_literal_roundtrip_i32() {
-        let t = Tensor::I32 { shape: vec![4], data: vec![-1, 0, 7, 100] };
-        let lit = tensor_to_literal(&t).unwrap();
-        assert_eq!(literal_to_tensor(&lit).unwrap(), t);
-    }
-
-    #[test]
-    fn i8_literal_created_with_correct_shape() {
-        let t = Tensor::I8 { shape: vec![2, 2], data: vec![-1, 2, -3, 4] };
-        let lit = tensor_to_literal(&t).unwrap();
-        let shape = lit.array_shape().unwrap();
-        assert_eq!(shape.dims(), &[2, 2]);
+        for name in rt.artifact_names() {
+            rt.load(name)
+                .unwrap_or_else(|e| panic!("plan for {name}: {e:#}"));
+        }
     }
 }

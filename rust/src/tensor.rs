@@ -112,29 +112,29 @@ impl Mat {
 
     /// `out = self @ rhs`, cache-blocked ikj loop (the hot path of the
     /// reference executor; see EXPERIMENTS.md §Perf for tuning history).
+    ///
+    /// The GraSp-style zero-skip branch pays off on sparse structure masks
+    /// (norm rows are ~99.8% zero) but costs a per-element compare on dense
+    /// operands, so the kernel is picked per call from a sampled density.
     pub fn matmul_into(&self, rhs: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, rhs.rows, "matmul inner dims");
         assert_eq!((out.rows, out.cols), (self.rows, rhs.cols));
-        out.data.fill(0.0);
-        const BK: usize = 64;
-        let (m, k, n) = (self.rows, self.cols, rhs.cols);
-        for k0 in (0..k).step_by(BK) {
-            let k1 = (k0 + BK).min(k);
-            for i in 0..m {
-                let a_row = self.row(i);
-                let out_row = out.row_mut(i);
-                for kk in k0..k1 {
-                    let a = a_row[kk];
-                    if a == 0.0 {
-                        continue; // GraSp-style zero skip; norm rows are ~99.8% zero
-                    }
-                    let b_row = &rhs.data[kk * n..kk * n + n];
-                    for j in 0..n {
-                        out_row[j] += a * b_row[j];
-                    }
-                }
-            }
-        }
+        let skip = self.sample_density() < SKIP_DENSITY_THRESHOLD;
+        matmul_block(
+            &self.data,
+            self.rows,
+            self.cols,
+            &rhs.data,
+            rhs.cols,
+            &mut out.data,
+            skip,
+        );
+    }
+
+    /// Estimated fraction of nonzero entries from a strided sample (at
+    /// most [`DENSITY_SAMPLES`] probes) — cheap enough to run per matmul.
+    pub fn sample_density(&self) -> f64 {
+        sample_density(&self.data)
     }
 
     /// Transpose.
@@ -226,6 +226,84 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Below this lhs density the zero-skip matmul kernel wins; above it the
+/// branch-free dense kernel does (measured crossover is broad, ~0.2–0.4).
+pub const SKIP_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// Probe budget for [`sample_density`].
+pub const DENSITY_SAMPLES: usize = 1024;
+
+/// Estimated nonzero fraction of a slice from a strided sample.
+pub fn sample_density(data: &[f32]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let stride = (data.len() / DENSITY_SAMPLES).max(1);
+    let mut nonzero = 0usize;
+    let mut count = 0usize;
+    let mut i = 0usize;
+    while i < data.len() && count < DENSITY_SAMPLES {
+        if data[i] != 0.0 {
+            nonzero += 1;
+        }
+        count += 1;
+        i += stride;
+    }
+    nonzero as f64 / count as f64
+}
+
+/// `out = a @ b` over raw row-major slices: `a` is `rows×k`, `b` is `k×n`,
+/// `out` is `rows×n`. Cache-blocked ikj loop; `skip` selects the
+/// GraSp-style zero-skip variant (identical accumulation order, so both
+/// kernels produce bitwise-equal results on finite inputs).
+///
+/// Shared by [`Mat::matmul_into`] and the planned engine's row-sharded
+/// parallel matmul (each worker calls this on a disjoint row block).
+pub fn matmul_block(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+) {
+    assert_eq!(a.len(), rows * k, "matmul lhs size");
+    assert_eq!(b.len(), k * n, "matmul rhs size");
+    assert_eq!(out.len(), rows * n, "matmul out size");
+    out.fill(0.0);
+    const BK: usize = 64;
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..rows {
+            let a_row = &a[i * k..i * k + k];
+            let out_row = &mut out[i * n..i * n + n];
+            if skip {
+                for kk in k0..k1 {
+                    let av = a_row[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..kk * n + n];
+                    for j in 0..n {
+                        out_row[j] += av * b_row[j];
+                    }
+                }
+            } else {
+                for kk in k0..k1 {
+                    let av = a_row[kk];
+                    let b_row = &b[kk * n..kk * n + n];
+                    for j in 0..n {
+                        out_row[j] += av * b_row[j];
+                    }
+                }
+            }
+        }
+        k0 = k1;
     }
 }
 
@@ -409,5 +487,74 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(4, 2);
         a.matmul(&b);
+    }
+
+    #[test]
+    fn sample_density_estimates() {
+        assert_eq!(Mat::zeros(8, 8).sample_density(), 0.0);
+        assert_eq!(Mat::filled(8, 8, 2.0).sample_density(), 1.0);
+        let half = Mat::from_fn(4, 8, |_, j| (j % 2) as f32);
+        let d = half.sample_density();
+        assert!((d - 0.5).abs() < 0.05, "{d}");
+        // sampling stays cheap on big matrices: strided, bounded probes
+        let big = Mat::from_fn(512, 512, |i, j| ((i + j) % 10 == 0) as u32 as f32);
+        let d = big.sample_density();
+        assert!(d > 0.02 && d < 0.3, "{d}");
+    }
+
+    #[test]
+    fn skip_and_dense_kernels_agree() {
+        // regression for the density-adaptive dispatch: both kernels must
+        // produce identical results on sparse AND dense operands
+        let mut rng_state = 88172645463325252u64;
+        let mut rng = move || {
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            (rng_state % 1000) as f32 / 500.0 - 1.0
+        };
+        for density in [0.02f32, 0.9] {
+            let (m, k, n) = (17, 67, 9);
+            let a: Vec<f32> = (0..m * k)
+                .map(|_| {
+                    let v = rng();
+                    if v.abs() > density {
+                        0.0
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng()).collect();
+            let mut skip_out = vec![0.0f32; m * n];
+            let mut dense_out = vec![0.0f32; m * n];
+            matmul_block(&a, m, k, &b, n, &mut skip_out, true);
+            matmul_block(&a, m, k, &b, n, &mut dense_out, false);
+            assert_eq!(skip_out, dense_out, "density {density}");
+            // and the auto-dispatching Mat path matches both
+            let am = Mat::from_vec(m, k, a.clone());
+            let bm = Mat::from_vec(k, n, b.clone());
+            assert_eq!(am.matmul(&bm).data, dense_out);
+        }
+    }
+
+    #[test]
+    fn matmul_dense_lhs_uses_dense_kernel_results() {
+        // dense lhs must take the no-skip path and still be exact
+        let a = Mat::from_fn(13, 29, |i, j| ((i * 31 + j * 7) % 11) as f32 - 5.0);
+        assert!(a.sample_density() > SKIP_DENSITY_THRESHOLD);
+        let b = Mat::from_fn(29, 5, |i, j| ((i * 13 + j * 3) % 7) as f32 - 3.0);
+        let got = a.matmul(&b);
+        let mut want = Mat::zeros(13, 5);
+        for i in 0..13 {
+            for j in 0..5 {
+                let mut s = 0.0;
+                for k in 0..29 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                want[(i, j)] = s;
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-4);
     }
 }

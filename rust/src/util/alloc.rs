@@ -1,0 +1,49 @@
+//! Allocation-counting global allocator — the test hook that proves the
+//! planned engine's zero-steady-state-allocation claim.
+//!
+//! Install it from a *dedicated* integration-test binary (so unrelated
+//! parallel tests don't pollute the counter):
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: grannite::util::alloc::CountingAlloc =
+//!     grannite::util::alloc::CountingAlloc;
+//! // ... warm up ... let before = allocation_count(); ... run ...
+//! assert_eq!(allocation_count() - before, 0);
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of `alloc`/`realloc` calls since start.
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// A [`System`]-delegating allocator that counts allocation events.
+pub struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the counter has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}

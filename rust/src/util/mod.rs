@@ -1,6 +1,7 @@
 //! Small substrates the offline environment forces us to own: a PRNG,
 //! a property-testing harness, report tables, and timing helpers.
 
+pub mod alloc;
 pub mod propcheck;
 pub mod rng;
 pub mod table;
@@ -36,6 +37,13 @@ pub fn human_bytes(bytes: usize) -> String {
     } else {
         format!("{v:.2} {}", UNITS[u])
     }
+}
+
+/// Escape a string for embedding in a JSON string literal (the bench
+/// harness emits machine-readable JSON by hand — serde is unavailable
+/// offline). Control characters are not expected in bench labels.
+pub fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// Human-readable duration from microseconds.
@@ -79,5 +87,11 @@ mod tests {
         assert_eq!(human_us(12.0), "12.0 µs");
         assert_eq!(human_us(1500.0), "1.50 ms");
         assert_eq!(human_us(2_000_000.0), "2.000 s");
+    }
+
+    #[test]
+    fn json_escape_quotes_and_backslashes() {
+        assert_eq!(json_escape(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(json_escape("plain"), "plain");
     }
 }

@@ -1,0 +1,75 @@
+//! Zero-steady-state-allocation proof for the planned engine.
+//!
+//! This test binary installs the counting global allocator and holds a
+//! SINGLE test function, so no unrelated concurrent test can pollute the
+//! counter. The claim under test: after warmup (arena slabs allocated,
+//! INT8 weight caches populated, scratch capacity grown),
+//! `PlanInstance::run` performs **zero** heap allocations.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use grannite::engine::{PlanInstance, WorkerPool};
+use grannite::ops::build::{self, GnnDims, QuantScales};
+use grannite::ops::exec::Bindings;
+use grannite::ops::plan::ExecPlan;
+use grannite::tensor::{Mat, Tensor};
+use grannite::util::alloc::{allocation_count, CountingAlloc};
+use grannite::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn bindings_for(d: GnnDims, quant: bool, seed: u64) -> Bindings {
+    let mut rng = Rng::new(seed);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
+    };
+    let mut b: Bindings = BTreeMap::new();
+    b.insert("norm".into(), Tensor::from_mat(&rand(d.n, d.n)));
+    b.insert("x".into(), Tensor::from_mat(&rand(d.n, d.f)));
+    b.insert("b1".into(), Tensor::from_mat(&rand(1, d.hidden)));
+    b.insert("b2".into(), Tensor::from_mat(&rand(1, d.classes)));
+    if quant {
+        let mut qrng = Rng::new(seed ^ 9);
+        let mut ints = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| (qrng.usize(255) as i32 - 127) as f32)
+        };
+        b.insert("w1q".into(), Tensor::from_mat(&ints(d.f, d.hidden)));
+        b.insert("w2q".into(), Tensor::from_mat(&ints(d.hidden, d.classes)));
+    } else {
+        b.insert("w1".into(), Tensor::from_mat(&rand(d.f, d.hidden)));
+        b.insert("w2".into(), Tensor::from_mat(&rand(d.hidden, d.classes)));
+    }
+    b
+}
+
+#[test]
+fn steady_state_run_allocates_nothing() {
+    let d = GnnDims::model(64, 200, 32, 5);
+    for (label, graph, quant) in [
+        ("gcn_stagr", build::gcn_stagr(d, "stagr"), false),
+        ("gcn_quant", build::gcn_quant(d, QuantScales::default()), true),
+    ] {
+        let bindings = bindings_for(d, quant, 11);
+        let plan = Arc::new(ExecPlan::compile(&graph).unwrap());
+        // serial pool: the parallel pool's dispatch is also alloc-free,
+        // but worker threads would race the global counter
+        let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::serial()));
+        // warmup: arena already sized; INT8 conversion + scratch growth
+        inst.run(&bindings).unwrap();
+        inst.run(&bindings).unwrap();
+        let reference = inst.output_mat(0).unwrap();
+
+        let before = allocation_count();
+        for _ in 0..10 {
+            inst.run(&bindings).unwrap();
+        }
+        let allocs = allocation_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "{label}: {allocs} allocations across 10 steady-state runs"
+        );
+        assert_eq!(inst.output_mat(0).unwrap(), reference, "{label} drifted");
+    }
+}

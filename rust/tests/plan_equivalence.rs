@@ -1,0 +1,422 @@
+//! Plan-vs-oracle equivalence: every compiled [`ExecPlan`] must compute
+//! exactly what the reference executor computes, within 1e-4, on
+//! arbitrary valid op graphs — including arena-reuse-heavy graphs where
+//! a stale-buffer bug would show, and repeat runs on a warm instance
+//! where leftover slab contents would show.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use grannite::engine::{run_graph_mat, PlanInstance, WorkerPool};
+use grannite::graph::datasets::synthesize;
+use grannite::ops::build::{self, GatVariant, GnnDims, QuantScales};
+use grannite::ops::exec::{self, Bindings};
+use grannite::ops::plan::ExecPlan;
+use grannite::ops::{OpGraph, OpId, OpKind, Stage};
+use grannite::tensor::{DType, Mat, Tensor};
+use grannite::util::propcheck::{forall, Gen};
+
+// ---------------------------------------------------------------------------
+// random-graph generator
+// ---------------------------------------------------------------------------
+
+struct Builder {
+    g: OpGraph,
+    bindings: Bindings,
+    /// f32 value-bearing nodes: (id, rows, cols)
+    vals: Vec<(OpId, usize, usize)>,
+    next_input: usize,
+}
+
+#[derive(Clone, Copy)]
+enum Fill {
+    /// ±2 with exact zeros mixed in (exercises the zero-skip kernel).
+    Tame,
+    /// Strictly positive, bounded away from zero (safe Div rhs).
+    Positive,
+    /// Integral in [-127, 127] (QMatMul weights → real INT8 path).
+    Integral,
+    /// 0/1 mask values.
+    Mask,
+}
+
+impl Builder {
+    fn new(name: String) -> Builder {
+        Builder {
+            g: OpGraph::new(name),
+            bindings: BTreeMap::new(),
+            vals: Vec::new(),
+            next_input: 0,
+        }
+    }
+
+    fn f32_input(&mut self, gen: &mut Gen, r: usize, c: usize, fill: Fill) -> OpId {
+        let name = format!("in{}", self.next_input);
+        self.next_input += 1;
+        let id = self.g.input(&name, &[r, c], DType::F32, Stage::Compute);
+        let data: Vec<f32> = (0..r * c)
+            .map(|_| match fill {
+                Fill::Tame => {
+                    if gen.chance(0.25) {
+                        0.0
+                    } else {
+                        (gen.rng().f64() * 4.0 - 2.0) as f32
+                    }
+                }
+                Fill::Positive => (gen.rng().f64() * 2.0 + 0.5) as f32,
+                Fill::Integral => (gen.rng().usize(255) as i32 - 127) as f32,
+                Fill::Mask => {
+                    if gen.chance(0.4) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            })
+            .collect();
+        self.bindings
+            .insert(name, Tensor::F32 { shape: vec![r, c], data });
+        id
+    }
+
+    fn i32_input(&mut self, r: usize, c: usize, data: Vec<i32>) -> OpId {
+        let name = format!("in{}", self.next_input);
+        self.next_input += 1;
+        let id = self.g.input(&name, &[r, c], DType::I32, Stage::Compute);
+        self.bindings
+            .insert(name, Tensor::I32 { shape: vec![r, c], data });
+        id
+    }
+
+    fn push_val(&mut self, id: OpId, r: usize, c: usize) {
+        self.vals.push((id, r, c));
+    }
+
+    fn pick(&self, gen: &mut Gen) -> (OpId, usize, usize) {
+        self.vals[gen.usize(0, self.vals.len())]
+    }
+}
+
+/// Grow the graph by one random production (pushed onto `b.vals`).
+fn grow(b: &mut Builder, gen: &mut Gen) {
+    let (src, r, c) = b.pick(gen);
+    let st = Stage::Compute;
+    match gen.usize(0, 12) {
+        // unary elementwise (fusible — feeds chain building)
+        0 => {
+            let kind = match gen.usize(0, 4) {
+                0 => OpKind::Relu,
+                1 => OpKind::LeakyRelu(0.2),
+                2 => OpKind::Scale(0.5),
+                _ => OpKind::AddConst(-0.3),
+            };
+            let id = b.g.op(kind, &[src], &[r, c], st);
+            b.push_val(id, r, c);
+        }
+        // binary elementwise with broadcast variants
+        1 | 2 => {
+            let kind = match gen.usize(0, 3) {
+                0 => OpKind::Add,
+                1 => OpKind::Sub,
+                _ => OpKind::Mul,
+            };
+            let rhs = match gen.usize(0, 3) {
+                0 => b.f32_input(gen, r, c, Fill::Tame),
+                1 => b.f32_input(gen, 1, c, Fill::Tame),
+                _ => b.f32_input(gen, r, 1, Fill::Tame),
+            };
+            let id = b.g.op(kind, &[src, rhs], &[r, c], st);
+            b.push_val(id, r, c);
+        }
+        // Div with a safe rhs
+        3 => {
+            let rhs = match gen.usize(0, 3) {
+                0 => b.f32_input(gen, r, c, Fill::Positive),
+                1 => b.f32_input(gen, 1, c, Fill::Positive),
+                _ => b.f32_input(gen, r, 1, Fill::Positive),
+            };
+            let id = b.g.op(OpKind::Div, &[src, rhs], &[r, c], st);
+            b.push_val(id, r, c);
+        }
+        // dense MatMul against a fresh weight input
+        4 => {
+            let n = gen.dim(6);
+            let w = b.f32_input(gen, c, n, Fill::Tame);
+            let id = b.g.op(OpKind::MatMul, &[src, w], &[r, n], st);
+            b.push_val(id, r, n);
+        }
+        // Quantize → QMatMul with integral weights (the INT8 path)
+        5 => {
+            let n = gen.dim(6);
+            let scale = 0.05 + gen.rng().f32() * 0.1;
+            let q = b.g.op(OpKind::Quantize { scale }, &[src], &[r, c], st);
+            let w = b.f32_input(gen, c, n, Fill::Integral);
+            let id = b.g.op(
+                OpKind::QMatMul { x_scale: scale, w_scale: 0.01 },
+                &[q, w],
+                &[r, n],
+                st,
+            );
+            b.push_val(id, r, n);
+        }
+        // Transpose
+        6 => {
+            let id = b.g.op(OpKind::Transpose, &[src], &[c, r], st);
+            b.push_val(id, c, r);
+        }
+        // Softmax
+        7 => {
+            let id = b.g.op(OpKind::Softmax, &[src], &[r, c], st);
+            b.push_val(id, r, c);
+        }
+        // reduce, then sometimes broadcast back (classic EffOp shape)
+        8 => {
+            let kind = if gen.bool() {
+                OpKind::ReduceSumRows
+            } else {
+                OpKind::ReduceMaxRows
+            };
+            let red = b.g.op(kind, &[src], &[r, 1], st);
+            if gen.bool() {
+                let bc = b.g.op(OpKind::BroadcastCol, &[red], &[r, c], st);
+                let id = b.g.op(OpKind::Mul, &[src, bc], &[r, c], st);
+                b.push_val(id, r, c);
+            } else {
+                b.push_val(red, r, 1);
+            }
+        }
+        // Greater + Select
+        9 => {
+            let other = b.f32_input(gen, r, c, Fill::Tame);
+            let cond = b.g.op(OpKind::Greater, &[src, other], &[r, c], st);
+            let id = b.g.op(OpKind::Select, &[cond, src, other], &[r, c], st);
+            b.push_val(id, r, c);
+        }
+        // MaskedMaxPool over a fresh 0/1 mask
+        10 => {
+            let m = gen.dim(6);
+            let mask = b.f32_input(gen, m, r, Fill::Mask);
+            let id = b.g.op(OpKind::MaskedMaxPool, &[mask, src], &[m, c], st);
+            b.push_val(id, m, c);
+        }
+        // sentinel-aware neighbor gather
+        _ => {
+            let w = gen.dim(4);
+            let data: Vec<i32> = (0..r * w)
+                .map(|_| gen.rng().usize(r + 1) as i32) // r == sentinel
+                .collect();
+            let idx = b.i32_input(r, w, data);
+            let kind = if gen.bool() {
+                OpKind::NeighborGatherMax
+            } else {
+                OpKind::NeighborGatherMean
+            };
+            let id = b.g.op(kind, &[idx, src], &[r, c], st);
+            b.push_val(id, r, c);
+        }
+    }
+}
+
+fn random_graph(gen: &mut Gen, tag: usize) -> (OpGraph, Bindings) {
+    let mut b = Builder::new(format!("prop{tag}"));
+    let r = gen.dim(9);
+    let c = gen.dim(9);
+    let x = b.f32_input(gen, r, c, Fill::Tame);
+    b.push_val(x, r, c);
+    if gen.bool() {
+        let r2 = gen.dim(9);
+        let c2 = gen.dim(9);
+        let y = b.f32_input(gen, r2, c2, Fill::Tame);
+        b.push_val(y, r2, c2);
+    }
+    let steps = gen.usize(3, 11);
+    for _ in 0..steps {
+        grow(&mut b, gen);
+    }
+    // output must not be a raw input: cap with a cheap op if needed
+    let (mut out, r, c) = *b.vals.last().unwrap();
+    if b.g.ops[out].kind == OpKind::Input {
+        out = b.g.op(OpKind::Relu, &[out], &[r, c], Stage::Compute);
+    }
+    b.g.set_output(out);
+    (b.g, b.bindings)
+}
+
+// ---------------------------------------------------------------------------
+// properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_graphs_match_reference_executor() {
+    forall("plan == exec on random graphs", 60, |gen| {
+        let tag = gen.usize(0, 1 << 20);
+        let (g, bindings) = random_graph(gen, tag);
+        g.validate().unwrap();
+        let want = exec::execute_mat(&g, &bindings).unwrap();
+        let got = run_graph_mat(&g, &bindings).unwrap();
+        let diff = want.max_abs_diff(&got);
+        assert!(
+            diff < 1e-4,
+            "graph {} drifted {diff} from the oracle",
+            g.name
+        );
+    });
+}
+
+#[test]
+fn warm_instances_match_on_repeat_runs() {
+    // arena-reuse stress: run every random graph twice on ONE instance —
+    // stale slab contents or a bad liveness assignment would surface as
+    // drift between run 1 and run 2
+    forall("warm plan re-run is stable", 30, |gen| {
+        let tag = gen.usize(0, 1 << 20);
+        let (g, bindings) = random_graph(gen, tag);
+        let plan = Arc::new(ExecPlan::compile(&g).unwrap());
+        let threads = if gen.bool() { 1 } else { 3 };
+        let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::new(threads)));
+        inst.run(&bindings).unwrap();
+        let first = inst.output_mat(0).unwrap();
+        inst.run(&bindings).unwrap();
+        let second = inst.output_mat(0).unwrap();
+        assert_eq!(first, second, "graph {} unstable across runs", g.name);
+        let oracle = exec::execute_mat(&g, &bindings).unwrap();
+        assert!(oracle.max_abs_diff(&second) < 1e-4);
+    });
+}
+
+#[test]
+fn deep_chain_exercises_arena_reuse() {
+    // a long alternating chain forces maximal slab sharing
+    let mut b = Builder::new("deep".into());
+    let mut gen = Gen::new(grannite::util::Rng::new(77));
+    let x = b.f32_input(&mut gen, 12, 7, Fill::Tame);
+    b.push_val(x, 12, 7);
+    let mut cur = x;
+    for i in 0..40 {
+        let kind = match i % 4 {
+            0 => OpKind::Relu,
+            1 => OpKind::AddConst(0.125),
+            2 => OpKind::Scale(0.75),
+            _ => OpKind::LeakyRelu(0.2),
+        };
+        cur = b.g.op(kind, &[cur], &[12, 7], Stage::Compute);
+    }
+    b.g.set_output(cur);
+    let plan = ExecPlan::compile(&b.g).unwrap();
+    // the whole run materializes almost nothing: one output slab
+    assert!(plan.fused_away >= 39, "fused {} of 40", plan.fused_away);
+    assert_eq!(plan.slab_elems.len(), 1);
+    let want = exec::execute_mat(&b.g, &b.bindings).unwrap();
+    let got = run_graph_mat(&b.g, &b.bindings).unwrap();
+    assert!(want.max_abs_diff(&got) < 1e-5);
+}
+
+// ---------------------------------------------------------------------------
+// model-level equivalence (the builders the serving path actually runs)
+// ---------------------------------------------------------------------------
+
+fn model_fixture(seed: u64) -> (GnnDims, Bindings) {
+    const N: usize = 26;
+    const F: usize = 14;
+    const H: usize = 8;
+    const C: usize = 4;
+    let ds = synthesize("plan-eq", N, 3 * N, C, F, seed);
+    let graph = ds.graph.clone();
+    let dims = GnnDims { n: N, m: graph.num_edges(), f: F, hidden: H, classes: C, k: 5, layers: 2 };
+    let mut rng = grannite::util::Rng::new(seed ^ 0xAB);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
+    };
+    let mut b: Bindings = BTreeMap::new();
+    b.insert("x".into(), Tensor::from_mat(&ds.features));
+    b.insert("norm".into(), Tensor::from_mat(&graph.norm_adjacency(N)));
+    b.insert("adj".into(), Tensor::from_mat(&graph.adjacency(N)));
+    b.insert("neg_bias".into(), Tensor::from_mat(&graph.neg_bias(N)));
+    b.insert("mask".into(), Tensor::from_mat(&graph.sampled_adjacency(4, 7, N)));
+    b.insert("norm_mask".into(), Tensor::from_mat(&graph.sampled_adjacency(4, 7, N)));
+    let idx = graph.sampled_neighbors(4, 7);
+    let mut idx_data = Vec::new();
+    for row in &idx {
+        for &j in row {
+            idx_data.push(j as i32);
+        }
+    }
+    b.insert("nbr_idx".into(), Tensor::I32 { shape: vec![N, 5], data: idx_data });
+    let mut edges = Vec::new();
+    for &(s, d) in graph.edges() {
+        edges.push(s as i32);
+        edges.push(d as i32);
+    }
+    b.insert(
+        "edges".into(),
+        Tensor::I32 { shape: vec![graph.num_edges(), 2], data: edges },
+    );
+    for (name, r, c) in [
+        ("w1", F, H),
+        ("w2", H, C),
+        ("w1_self", F, H),
+        ("w1_neigh", F, H),
+        ("w2_self", H, C),
+        ("w2_neigh", H, C),
+    ] {
+        b.insert(name.into(), Tensor::from_mat(&rand(r, c)));
+    }
+    for (name, c) in [("b1", H), ("b2", C)] {
+        b.insert(name.into(), Tensor::from_mat(&rand(1, c)));
+    }
+    for (name, r) in [("a1_src", H), ("a1_dst", H), ("a2_src", C), ("a2_dst", C)] {
+        b.insert(name.into(), Tensor::from_mat(&rand(r, 1)));
+    }
+    // integral QuantGr weights
+    let mut qrng = grannite::util::Rng::new(seed ^ 0x5151);
+    let mut qrand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (qrng.usize(255) as i32 - 127) as f32)
+    };
+    b.insert("w1q".into(), Tensor::from_mat(&qrand(F, H)));
+    b.insert("w2q".into(), Tensor::from_mat(&qrand(H, C)));
+    (dims, b)
+}
+
+#[test]
+fn every_model_variant_matches_reference() {
+    forall("plan == exec on model builders", 6, |gen| {
+        let seed = gen.usize(0, 1 << 30) as u64;
+        let (dims, bindings) = model_fixture(seed);
+        for (m, v) in [
+            ("gcn", "baseline"),
+            ("gcn", "stagr"),
+            ("gcn", "quant"),
+            ("gat", "effop"),
+            ("gat", "grax"),
+            ("sage_mean", "stagr"),
+            ("sage_max", "baseline"),
+            ("sage_max", "grax3"),
+        ] {
+            let g = build::build(m, v, dims).unwrap();
+            let want = exec::execute_mat(&g, &bindings).unwrap();
+            let got = run_graph_mat(&g, &bindings).unwrap();
+            let diff = want.max_abs_diff(&got);
+            assert!(diff < 1e-4, "{m}/{v} drifted {diff}");
+        }
+    });
+}
+
+#[test]
+fn gat_baseline_masked_matches_reference() {
+    let (dims, bindings) = model_fixture(5);
+    let g = build::gat(dims, GatVariant::BaselineMasked);
+    let want = exec::execute_mat(&g, &bindings).unwrap();
+    let got = run_graph_mat(&g, &bindings).unwrap();
+    assert!(want.max_abs_diff(&got) < 1e-4);
+}
+
+#[test]
+fn quant_scales_roundtrip_through_plan() {
+    // calibrated (non-default) scales flow through the planned INT8 path
+    let (dims, bindings) = model_fixture(9);
+    let s = QuantScales { act1: 0.02, w1: 0.004, act2: 0.07, w2: 0.012 };
+    let g = build::gcn_quant(dims, s);
+    let want = exec::execute_mat(&g, &bindings).unwrap();
+    let got = run_graph_mat(&g, &bindings).unwrap();
+    assert!(want.max_abs_diff(&got) < 1e-4);
+}
