@@ -1,0 +1,232 @@
+//! Churn-rate sweep: delta-driven incremental inference vs full-graph
+//! planned execution (ISSUE 3 acceptance bench).
+//!
+//! Each churn level replays one deterministic event script (the
+//! [`KnowledgeGraphStream`] `churn` knob: exactly N mutations per query)
+//! against both engines and reports mean per-query inference latency.
+//! At low churn the incremental engine recomputes `O(frontier)` rows;
+//! past the fallback threshold it *is* the full path, so high-churn
+//! levels measure the regression guard.
+//!
+//! ```sh
+//! cargo bench --bench incremental_churn                     # Cora scale
+//! cargo bench --bench incremental_churn -- --quick          # CI smoke
+//! cargo bench --bench incremental_churn -- --json out.json  # artifact
+//! ```
+
+use std::sync::Arc;
+
+use grannite::bench::banner;
+use grannite::cli::Args;
+use grannite::engine::WorkerPool;
+use grannite::fleet::PlanEngine;
+use grannite::graph::datasets::synthesize;
+use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+use grannite::incremental::{IncrementalConfig, IncrementalEngine};
+use grannite::server::{InferenceEngine, Update};
+use grannite::util::timing::Stats;
+use grannite::util::{human_us, Table};
+
+struct Level {
+    churn: f64,
+    full: Stats,
+    inc: Stats,
+    recompute_ratio: f64,
+    cache_hit_rate: f64,
+    frontier_mean: f64,
+    max_abs_diff: f32,
+}
+
+/// Materialize the event script for one churn level: exactly `queries`
+/// queries with `churn` mutations per query, deterministically.
+fn script(nodes: usize, capacity: usize, churn: f64, queries: usize) -> Vec<GraphEvent> {
+    let mut out = Vec::new();
+    let mut seen = 0usize;
+    for ev in KnowledgeGraphStream::with_churn(nodes, capacity, churn, 7) {
+        if matches!(ev, GraphEvent::Query) {
+            seen += 1;
+        }
+        out.push(ev);
+        if seen == queries {
+            break;
+        }
+    }
+    out
+}
+
+fn update_of(ev: &GraphEvent) -> Option<Update> {
+    match ev {
+        GraphEvent::AddEdge(u, v) => Some(Update::AddEdge(*u, *v)),
+        GraphEvent::RemoveEdge(u, v) => Some(Update::RemoveEdge(*u, *v)),
+        GraphEvent::AddNode => Some(Update::AddNode),
+        GraphEvent::Query => None,
+    }
+}
+
+/// Replay a script against an engine, timing every query-round infer.
+fn replay<E: InferenceEngine>(engine: &mut E, events: &[GraphEvent])
+                              -> anyhow::Result<(Stats, Vec<grannite::metrics::RoundStats>)> {
+    let mut samples = Vec::new();
+    let mut rounds = Vec::new();
+    for ev in events {
+        match update_of(ev) {
+            Some(u) => {
+                // capacity exhaustion is a stream artifact, not a failure
+                let _ = engine.apply(&u);
+            }
+            None => {
+                let t0 = std::time::Instant::now();
+                let logits = engine.infer()?;
+                samples.push(t0.elapsed().as_secs_f64() * 1e6);
+                std::hint::black_box(logits);
+                if let Some(rs) = engine.round_stats() {
+                    rounds.push(rs);
+                }
+            }
+        }
+    }
+    Ok((Stats::from_samples(&samples), rounds))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.has("quick");
+    let json_path = args.options.get("json").cloned();
+    banner(if quick {
+        "incremental churn sweep (quick)"
+    } else {
+        "incremental churn sweep (Cora scale)"
+    });
+
+    // Cora-scale by default (2708 nodes, 1433 features, capacity 3000);
+    // --quick shrinks the twin so hosted CI finishes in seconds while
+    // keeping the same churn regimes
+    let (n, m, f, classes, cap) = if quick {
+        (600, 1500, 64, 7, 660)
+    } else {
+        (2708, 5429, 1433, 7, 3000)
+    };
+    let ds = synthesize("churn", n, m, classes, f, 11);
+    let queries = if quick { 12 } else { 40 };
+    let churns: &[f64] = &[0.25, 1.0, 4.0, 16.0, 64.0];
+    let pool = Arc::new(WorkerPool::default_parallel());
+
+    let mut levels: Vec<Level> = Vec::new();
+    for &churn in churns {
+        let events = script(n, cap, churn, queries);
+
+        let mut inc = IncrementalEngine::full(
+            &ds, cap, Arc::clone(&pool), IncrementalConfig::default(),
+        )?;
+        let _ = inc.infer()?; // seed: compile + first full round
+        let _ = inc.round_stats();
+        let (inc_stats, rounds) = replay(&mut inc, &events)?;
+
+        let mut full = PlanEngine::full(&ds, cap, Arc::clone(&pool))?;
+        let _ = full.infer()?; // warm: plan compile + arena + bindings
+        let (full_stats, _) = replay(&mut full, &events)?;
+
+        // numerics: both engines must still agree after the whole script
+        let a = inc.infer()?;
+        let b = full.infer()?;
+        let max_abs_diff = a.max_abs_diff(&b);
+
+        let (mut rec, mut eli, mut hits, mut misses, mut fr) =
+            (0usize, 0usize, 0usize, 0usize, 0.0f64);
+        for r in &rounds {
+            rec += r.recomputed_rows;
+            eli += r.eligible_rows;
+            hits += r.cache_hits;
+            misses += r.cache_misses;
+            fr += r.frontier as f64;
+        }
+        levels.push(Level {
+            churn,
+            full: full_stats,
+            inc: inc_stats,
+            recompute_ratio: if eli == 0 { 0.0 } else { rec as f64 / eli as f64 },
+            cache_hit_rate: if hits + misses == 0 {
+                0.0
+            } else {
+                hits as f64 / (hits + misses) as f64
+            },
+            frontier_mean: if rounds.is_empty() {
+                0.0
+            } else {
+                fr / rounds.len() as f64
+            },
+            max_abs_diff,
+        });
+    }
+
+    let mut t = Table::new(
+        format!("incremental vs full planned execution — {n} nodes, {f} features"),
+        &["mut/query", "full mean", "incr mean", "speedup", "recompute",
+          "cache hit", "frontier"],
+    );
+    for l in &levels {
+        t.row(&[
+            format!("{:.2}", l.churn),
+            human_us(l.full.mean),
+            human_us(l.inc.mean),
+            format!("{:.2}x", l.full.mean / l.inc.mean),
+            format!("{:.3}", l.recompute_ratio),
+            format!("{:.3}", l.cache_hit_rate),
+            format!("{:.1}", l.frontier_mean),
+        ]);
+    }
+    t.print();
+
+    // headline gates: the ≤1 mutation/query win and the beyond-threshold
+    // regression guard
+    let low = levels
+        .iter()
+        .find(|l| (l.churn - 1.0).abs() < 1e-9)
+        .expect("churn=1 level");
+    let high = levels.last().unwrap();
+    let low_churn_speedup = low.full.mean / low.inc.mean;
+    let high_churn_parity = high.full.mean / high.inc.mean;
+    let worst_diff = levels
+        .iter()
+        .map(|l| l.max_abs_diff)
+        .fold(0.0f32, f32::max);
+    println!(
+        "\nlow-churn (1 mut/query) speedup: {low_churn_speedup:.2}x   \
+         high-churn parity: {high_churn_parity:.2}x   max|Δ| = {worst_diff:.3e}"
+    );
+
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"incremental_churn\",\n");
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str(&format!("  \"nodes\": {n},\n  \"features\": {f},\n"));
+        out.push_str(&format!(
+            "  \"low_churn_speedup\": {low_churn_speedup:.4},\n"
+        ));
+        out.push_str(&format!(
+            "  \"high_churn_parity\": {high_churn_parity:.4},\n"
+        ));
+        out.push_str(&format!("  \"max_abs_diff\": {worst_diff:.6e},\n"));
+        out.push_str("  \"levels\": [\n");
+        for (i, l) in levels.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"churn\": {:.2}, \"full_mean_us\": {:.3}, \
+                 \"inc_mean_us\": {:.3}, \"speedup\": {:.4}, \
+                 \"recompute_ratio\": {:.4}, \"cache_hit_rate\": {:.4}, \
+                 \"frontier_mean\": {:.2}}}{}\n",
+                l.churn,
+                l.full.mean,
+                l.inc.mean,
+                l.full.mean / l.inc.mean,
+                l.recompute_ratio,
+                l.cache_hit_rate,
+                l.frontier_mean,
+                if i + 1 < levels.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -115,6 +115,40 @@ impl Coordinator {
         Ok((g, p))
     }
 
+    /// Hand this coordinator's model state to the delta-driven serving
+    /// engine ([`crate::incremental::IncrementalEngine`]). Weights come
+    /// from the loaded artifact weight file (`weights_gcn_*.gnnt`) when
+    /// present, else the deterministic offline synthesis. Consumes the
+    /// coordinator: the engine takes ownership of the GrAd graph and
+    /// CacheG state, which is the single-writer contract serving needs.
+    pub fn into_incremental(
+        self,
+        cfg: crate::incremental::IncrementalConfig,
+        pool: std::sync::Arc<crate::engine::WorkerPool>,
+    ) -> Result<crate::incremental::IncrementalEngine> {
+        let state = self.state;
+        let weights: crate::ops::exec::Bindings = match state.weights_for("gcn") {
+            Ok(w) => w
+                .iter()
+                .filter(|(k, _)| k.starts_with('w') || k.starts_with('b'))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            Err(_) => crate::fleet::synthesize_weights(
+                state.dataset.num_features(),
+                state.dataset.num_classes().max(2),
+                state.capacity,
+            ),
+        };
+        let capacity = state.capacity;
+        crate::incremental::IncrementalEngine::from_state(
+            state,
+            weights,
+            0..capacity,
+            pool,
+            cfg,
+        )
+    }
+
     /// Resolve the artifact name for (model, variant) on this dataset.
     pub fn artifact_name(&self, model: &str, variant: &str) -> Result<String> {
         let ds = &self.state.dataset.name;

@@ -142,6 +142,13 @@ impl ModelState {
         self.dynamic.neighbors(u)
     }
 
+    /// The incrementally-maintained GrAd norm mask at full NodePad
+    /// capacity — what the delta-driven engine gathers frontier rows
+    /// from, instead of rebuilding `norm_pad` O(capacity²) per update.
+    pub fn norm_mask(&self) -> &crate::tensor::Mat {
+        self.dynamic.norm()
+    }
+
     fn invalidate(&mut self) {
         self.version += 1;
         // masks are recomputed lazily; weights/features survive

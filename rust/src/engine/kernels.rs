@@ -328,6 +328,65 @@ pub fn neighbor_gather_max(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Gather/scatter — the partial-execution primitives of the incremental
+// engine: pull a node subset's rows into a padded tile buffer, push the
+// recomputed rows back into the layer-activation cache.
+// ---------------------------------------------------------------------------
+
+/// Gather `rows` of a `(_, width)` row-major matrix into the head of
+/// `out` (one contiguous row per subset entry). `out` may be longer than
+/// `rows.len() * width`; the tail is left untouched (tile padding is
+/// zeroed by the tile owner, see [`super::Tile`]).
+pub fn gather_rows(src: &[f32], width: usize, rows: &[usize], out: &mut [f32]) {
+    debug_assert!(out.len() >= rows.len() * width);
+    for (slot, &r) in rows.iter().enumerate() {
+        out[slot * width..(slot + 1) * width]
+            .copy_from_slice(&src[r * width..(r + 1) * width]);
+    }
+}
+
+/// Scatter `src` (one contiguous row per subset entry) back into `rows`
+/// of a `(_, width)` row-major destination — the write half of the
+/// partial-execution path.
+pub fn scatter_rows(dst: &mut [f32], width: usize, rows: &[usize], src: &[f32]) {
+    debug_assert!(src.len() >= rows.len() * width);
+    for (slot, &r) in rows.iter().enumerate() {
+        dst[r * width..(r + 1) * width]
+            .copy_from_slice(&src[slot * width..(slot + 1) * width]);
+    }
+}
+
+/// Gather the `rows × cols` submatrix of a `(_, src_cols)` row-major
+/// matrix into `out` with stride `out_cols`, zero-filling each written
+/// row's tail up to `out_cols` (tile padding must multiply as exact 0).
+/// Contiguous column subsets (the full-recompute case, where `cols` is
+/// `0..n`) take a memcpy fast path.
+pub fn gather_submatrix(
+    src: &[f32],
+    src_cols: usize,
+    rows: &[usize],
+    cols: &[usize],
+    out: &mut [f32],
+    out_cols: usize,
+) {
+    debug_assert!(out.len() >= rows.len() * out_cols);
+    debug_assert!(cols.len() <= out_cols);
+    let contiguous = !cols.is_empty() && cols[cols.len() - 1] - cols[0] + 1 == cols.len();
+    for (slot, &r) in rows.iter().enumerate() {
+        let orow = &mut out[slot * out_cols..(slot + 1) * out_cols];
+        if contiguous {
+            let c0 = cols[0];
+            orow[..cols.len()].copy_from_slice(&src[r * src_cols + c0..r * src_cols + c0 + cols.len()]);
+        } else {
+            for (j, &c) in cols.iter().enumerate() {
+                orow[j] = src[r * src_cols + c];
+            }
+        }
+        orow[cols.len()..].fill(0.0);
+    }
+}
+
 /// Sentinel-aware neighbor gather-mean.
 pub fn neighbor_gather_mean(
     idx: &[i32],
@@ -415,6 +474,34 @@ mod tests {
         assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
         zip_broadcast(&a, 2, 2, &col, 2, 1, &mut out, |x, y| x + y);
         assert_eq!(out, vec![101.0, 102.0, 203.0, 204.0]);
+    }
+
+    #[test]
+    fn gather_scatter_rows_round_trip() {
+        let src: Vec<f32> = (0..20).map(|v| v as f32).collect(); // 5×4
+        let mut tile = vec![-1.0f32; 3 * 4];
+        gather_rows(&src, 4, &[4, 0, 2], &mut tile);
+        assert_eq!(&tile[..4], &[16.0, 17.0, 18.0, 19.0]);
+        assert_eq!(&tile[4..8], &[0.0, 1.0, 2.0, 3.0]);
+        let mut dst = vec![0.0f32; 20];
+        scatter_rows(&mut dst, 4, &[4, 0, 2], &tile);
+        assert_eq!(&dst[16..20], &[16.0, 17.0, 18.0, 19.0]);
+        assert_eq!(&dst[0..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&dst[8..12], &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(&dst[4..8], &[0.0; 4], "unlisted rows untouched");
+    }
+
+    #[test]
+    fn gather_submatrix_pads_and_takes_contiguous_fast_path() {
+        let src: Vec<f32> = (0..16).map(|v| v as f32).collect(); // 4×4
+        // scattered columns
+        let mut out = vec![9.0f32; 2 * 3];
+        gather_submatrix(&src, 4, &[1, 3], &[0, 2], &mut out, 3);
+        assert_eq!(out, vec![4.0, 6.0, 0.0, 12.0, 14.0, 0.0]);
+        // contiguous columns (the full-gather fast path), padded stride
+        let mut out = vec![9.0f32; 2 * 4];
+        gather_submatrix(&src, 4, &[0, 2], &[1, 2, 3], &mut out, 4);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 0.0, 9.0, 10.0, 11.0, 0.0]);
     }
 
     #[test]

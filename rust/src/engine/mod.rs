@@ -592,6 +592,125 @@ pub fn run_graph_mat(g: &OpGraph, bindings: &Bindings) -> Result<Mat> {
     Ok(outs.remove(0))
 }
 
+// ---------------------------------------------------------------------------
+// Tiled subset execution — the gather/scatter partial-execution path
+// ---------------------------------------------------------------------------
+
+/// One compiled tile: a [`PlanInstance`] at a fixed padded `(rows, ring)`
+/// geometry plus persistent bindings that are mutated **in place** — the
+/// caller gathers a node subset into [`Tile::binding_mut`] buffers, runs,
+/// and scatters [`Tile::output`] rows back out. Warm tiles execute with
+/// no steady-state allocation, exactly like full plans.
+pub struct Tile {
+    instance: PlanInstance,
+    bindings: Bindings,
+    /// Padded row capacity (frontier tile height).
+    pub rows: usize,
+    /// Padded ring capacity (input-subset height / mask width).
+    pub ring: usize,
+}
+
+impl Tile {
+    /// Mutable storage of a named f32 binding (gather target).
+    pub fn binding_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        match self.bindings.get_mut(name) {
+            Some(Tensor::F32 { data, .. }) => Ok(&mut data[..]),
+            Some(other) => bail!("tile binding {name:?} is {:?}, not f32", other.dtype()),
+            None => bail!("tile has no binding {name:?}"),
+        }
+    }
+
+    /// Execute the tile's plan over the current bindings.
+    pub fn run(&mut self) -> Result<()> {
+        self.instance.run(&self.bindings)
+    }
+
+    /// Zero-copy view of the tile output (scatter source).
+    pub fn output(&self) -> Result<(&[f32], usize, usize)> {
+        self.instance.output_view(0)
+    }
+}
+
+/// Compile-once/run-many execution of a plan family over **node
+/// subsets**: tile geometries are bucketed to powers of two (clamped to
+/// the graph capacity, so the full-recompute tile is exact), each bucket
+/// compiled once via the `build` callback and cached with its
+/// [`PlanInstance`] + bindings. Subset sizes that land in the same bucket
+/// reuse the warm tile — NodePad's stable-shape trick applied to
+/// frontier execution.
+pub struct TileRunner {
+    pool: Arc<WorkerPool>,
+    build: Box<dyn Fn(usize, usize) -> OpGraph + Send>,
+    /// Bindings cloned into every new tile (weights, biases).
+    statics: Bindings,
+    /// Smallest bucket (avoids a tile per tiny frontier size).
+    min: usize,
+    /// Geometry clamp: row/ring buckets never exceed these.
+    max_rows: usize,
+    max_ring: usize,
+    tiles: std::collections::BTreeMap<(usize, usize), Tile>,
+}
+
+impl TileRunner {
+    pub fn new(
+        pool: Arc<WorkerPool>,
+        min: usize,
+        max_rows: usize,
+        max_ring: usize,
+        statics: Bindings,
+        build: impl Fn(usize, usize) -> OpGraph + Send + 'static,
+    ) -> TileRunner {
+        TileRunner {
+            pool,
+            build: Box::new(build),
+            statics,
+            min: min.max(1),
+            max_rows,
+            max_ring,
+            tiles: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// The padded geometry a `(rows, ring)` subset executes at.
+    pub fn bucket(&self, rows: usize, ring: usize) -> (usize, usize) {
+        let up = |x: usize, cap: usize| -> usize {
+            x.max(self.min).next_power_of_two().min(cap).max(x)
+        };
+        (up(rows, self.max_rows), up(ring, self.max_ring))
+    }
+
+    /// Tiles compiled so far (compile-once observability).
+    pub fn compiled_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// The warm tile for a subset geometry, compiling it on first use.
+    /// New tiles start with zeroed dynamic bindings plus the statics.
+    pub fn tile(&mut self, rows: usize, ring: usize) -> Result<&mut Tile> {
+        let key = self.bucket(rows, ring);
+        if !self.tiles.contains_key(&key) {
+            let graph = (self.build)(key.0, key.1);
+            let plan = Arc::new(ExecPlan::compile(&graph)?);
+            let mut bindings = self.statics.clone();
+            for op in &plan.graph.ops {
+                if op.kind == OpKind::Input && !bindings.contains_key(&op.name) {
+                    let (r, c) = rc(&op.shape)?;
+                    bindings.insert(
+                        op.name.clone(),
+                        Tensor::F32 { shape: vec![r, c], data: vec![0.0; r * c] },
+                    );
+                }
+            }
+            let instance = PlanInstance::new(plan, Arc::clone(&self.pool));
+            self.tiles.insert(
+                key,
+                Tile { instance, bindings, rows: key.0, ring: key.1 },
+            );
+        }
+        Ok(self.tiles.get_mut(&key).unwrap())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -760,6 +879,81 @@ mod tests {
         let want = exec::execute_mat(&g, &b).unwrap();
         let got = run_graph_mat(&g, &b).unwrap();
         assert!(want.max_abs_diff(&got) < 1e-5);
+    }
+
+    #[test]
+    fn tile_runner_buckets_clamp_and_reuse() {
+        let mut statics = Bindings::new();
+        statics.insert("w".into(), Tensor::from_mat(&Mat::eye(4)));
+        statics.insert("b".into(), Tensor::from_mat(&Mat::zeros(1, 4)));
+        let mut tr = TileRunner::new(
+            Arc::new(WorkerPool::serial()),
+            8,
+            20,
+            20,
+            statics,
+            |rows, ring| build::gcn_layer_tile(rows, ring, 4, 4, false),
+        );
+        assert_eq!(tr.bucket(3, 5), (8, 8), "min bucket");
+        assert_eq!(tr.bucket(9, 17), (16, 20), "pow2 then capacity clamp");
+        assert_eq!(tr.bucket(20, 20), (20, 20), "full tile is exact");
+        let _ = tr.tile(3, 5).unwrap();
+        let _ = tr.tile(7, 8).unwrap();
+        assert_eq!(tr.compiled_tiles(), 1, "same bucket must reuse the tile");
+        let _ = tr.tile(20, 20).unwrap();
+        assert_eq!(tr.compiled_tiles(), 2);
+    }
+
+    #[test]
+    fn tile_subset_matches_full_layer_rows() {
+        // one GCN layer over a 6-node path graph: recomputing rows {2,3}
+        // through a tile must equal those rows of the full-graph layer
+        let g = crate::graph::Graph::new(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let norm = g.norm_adjacency(6);
+        let mut rng = Rng::new(5);
+        let x = rand_mat(&mut rng, 6, 3);
+        let w = rand_mat(&mut rng, 3, 4);
+        let bias = rand_mat(&mut rng, 1, 4);
+        // oracle: full layer through the reference executor
+        let full = build::gcn_layer_tile(6, 6, 3, 4, true);
+        let mut fb: Bindings = BTreeMap::new();
+        fb.insert("h_ring".into(), Tensor::from_mat(&x));
+        fb.insert("norm_sub".into(), Tensor::from_mat(&norm));
+        fb.insert("w".into(), Tensor::from_mat(&w));
+        fb.insert("b".into(), Tensor::from_mat(&bias));
+        let want = exec::execute_mat(&full, &fb).unwrap();
+
+        let rows = [2usize, 3];
+        let ring = [1usize, 2, 3, 4]; // B(rows, 1)
+        let mut statics = Bindings::new();
+        statics.insert("w".into(), Tensor::from_mat(&w));
+        statics.insert("b".into(), Tensor::from_mat(&bias));
+        let mut tr = TileRunner::new(
+            Arc::new(WorkerPool::serial()),
+            2,
+            6,
+            6,
+            statics,
+            |r, q| build::gcn_layer_tile(r, q, 3, 4, true),
+        );
+        let tile = tr.tile(rows.len(), ring.len()).unwrap();
+        kernels::gather_rows(&x.data, 3, &ring, tile.binding_mut("h_ring").unwrap());
+        kernels::gather_submatrix(
+            &norm.data,
+            6,
+            &rows,
+            &ring,
+            tile.binding_mut("norm_sub").unwrap(),
+            tile.ring,
+        );
+        tile.run().unwrap();
+        let (out, _, cols) = tile.output().unwrap();
+        for (slot, &r) in rows.iter().enumerate() {
+            for j in 0..4 {
+                let d = (out[slot * cols + j] - want[(r, j)]).abs();
+                assert!(d < 1e-5, "row {r} col {j} drift {d}");
+            }
+        }
     }
 
     #[test]

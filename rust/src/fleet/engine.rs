@@ -24,6 +24,29 @@ use crate::server::{InferenceEngine, Update};
 use crate::tensor::{Mat, Tensor};
 use crate::util::Rng;
 
+/// Deterministic offline GCN weights: a pure function of
+/// `(features, classes, capacity)`, so every shard of a fleet — and
+/// every engine family serving the same dataset ([`PlanEngine`],
+/// [`crate::incremental::IncrementalEngine`]) — computes identical
+/// logits without any artifact files.
+pub fn synthesize_weights(features: usize, classes: usize, capacity: usize) -> Bindings {
+    let mut rng = Rng::new(
+        0x9AE1_6A3B_2F90_404Fu64
+            ^ ((features as u64) << 24)
+            ^ ((classes as u64) << 8)
+            ^ capacity as u64,
+    );
+    let mut rand_mat = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
+    };
+    let mut weights = Bindings::new();
+    weights.insert("w1".into(), Tensor::from_mat(&rand_mat(features, crate::HIDDEN)));
+    weights.insert("b1".into(), Tensor::from_mat(&rand_mat(1, crate::HIDDEN)));
+    weights.insert("w2".into(), Tensor::from_mat(&rand_mat(crate::HIDDEN, classes)));
+    weights.insert("b2".into(), Tensor::from_mat(&rand_mat(1, classes)));
+    weights
+}
+
 /// A shard engine executing a NodePad-padded GCN plan over the live
 /// GrAd graph. See the module docs.
 pub struct PlanEngine {
@@ -53,24 +76,7 @@ impl PlanEngine {
         let dims = GnnDims::model(capacity, ds.graph.num_edges(), features, classes);
         let graph = build::gcn_stagr(dims, "grad");
         let plan = Arc::new(ExecPlan::compile(&graph)?);
-
-        // deterministic weights: a function of dims only, so every shard
-        // (and every fleet size) serves the same model
-        let mut rng = Rng::new(
-            0x9AE1_6A3B_2F90_404Fu64
-                ^ ((features as u64) << 24)
-                ^ ((classes as u64) << 8)
-                ^ capacity as u64,
-        );
-        let mut rand_mat = |r: usize, c: usize| {
-            Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
-        };
-        let mut weights = Bindings::new();
-        weights.insert("w1".into(), Tensor::from_mat(&rand_mat(features, crate::HIDDEN)));
-        weights.insert("b1".into(), Tensor::from_mat(&rand_mat(1, crate::HIDDEN)));
-        weights.insert("w2".into(), Tensor::from_mat(&rand_mat(crate::HIDDEN, classes)));
-        weights.insert("b2".into(), Tensor::from_mat(&rand_mat(1, classes)));
-        Ok((plan, weights))
+        Ok((plan, synthesize_weights(features, classes, capacity)))
     }
 
     /// Engine over a pre-compiled plan + weight set (see

@@ -41,7 +41,7 @@ pub mod router;
 pub mod shard;
 
 pub use admission::{Admission, AdmissionConfig};
-pub use engine::PlanEngine;
+pub use engine::{synthesize_weights, PlanEngine};
 pub use halo::{build_halos, link_cost_us, HaloSpec};
 pub use placement::{per_node_us, plan, FleetPlan, ShardSpec, Workload};
 pub use router::Router;
@@ -194,6 +194,37 @@ impl Fleet {
             Box::new(move || {
                 let pool = std::sync::Arc::new(crate::engine::WorkerPool::serial());
                 PlanEngine::from_parts(&ds, capacity, owned, pool, exec_plan, weights)
+            })
+        });
+        Ok(fleet)
+    }
+
+    /// Spawn a fleet of [`crate::incremental::IncrementalEngine`]s —
+    /// the same deterministic GCN as [`Fleet::spawn_planned`], but each
+    /// shard recomputes only the dirty frontier of the GrAd churn it
+    /// receives, intersected with its ownership region, and serves the
+    /// rest from its layer-activation cache. Boundary mutations fan out
+    /// to every shard, so a neighbor shard's cached rows are invalidated
+    /// and recomputed automatically; halo imports are recosted per round
+    /// from the live frontier rings.
+    pub fn spawn_incremental(
+        ds: &Dataset,
+        capacity: usize,
+        cfg: &FleetConfig,
+        inc: crate::incremental::IncrementalConfig,
+    ) -> Result<Fleet> {
+        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
+                                   ds.num_classes(), cfg)?;
+        let graph = ds.graph.clone();
+        let features = ds.num_features();
+        let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {
+            let ds = ds.clone();
+            let owned = spec.nodes.clone();
+            Box::new(move || {
+                let pool = std::sync::Arc::new(crate::engine::WorkerPool::serial());
+                crate::incremental::IncrementalEngine::shard(
+                    &ds, capacity, owned, pool, inc,
+                )
             })
         });
         Ok(fleet)

@@ -316,6 +316,9 @@ fn shard_loop<E: InferenceEngine>(
             let size = batch.requests.len();
             match result {
                 Ok(logits) => {
+                    if let Some(rs) = engine.round_stats() {
+                        metrics.record_round(&rs);
+                    }
                     let preds = logits.argmax_rows();
                     for req in batch.requests {
                         let node = req.node.unwrap_or(0);

@@ -18,6 +18,23 @@ pub enum GraphEvent {
     Query,
 }
 
+/// Deterministic events-per-query schedule (the `churn` knob): exactly
+/// `churn` mutations per query on average, accumulated with fractional
+/// debt so e.g. `churn = 0.5` alternates 0 and 1 mutations per query,
+/// and grouped `burst` queries at a time so benchmarks can sweep both
+/// steady low-churn and bursty high-churn regimes reproducibly.
+#[derive(Debug, Clone)]
+struct ChurnSchedule {
+    /// Mutations per query.
+    churn: f64,
+    /// Queries per cycle (mutations arrive in one burst before them).
+    burst: usize,
+    /// Fractional mutation debt carried between cycles.
+    debt: f64,
+    pending_mutations: usize,
+    pending_queries: usize,
+}
+
 /// Knowledge-graph churn: entities join over time, facts (edges) are
 /// added with preferential attachment and occasionally retracted; queries
 /// arrive between update bursts (paper Fig. 10's "on-device knowledge
@@ -31,6 +48,9 @@ pub struct KnowledgeGraphStream {
     /// Degree-proportional sampling pool (preferential attachment).
     endpoint_pool: Vec<usize>,
     query_ratio: f64,
+    /// Deterministic mutations-per-query schedule; `None` keeps the
+    /// legacy probabilistic mix driven by `query_ratio`.
+    schedule: Option<ChurnSchedule>,
 }
 
 impl KnowledgeGraphStream {
@@ -44,34 +64,61 @@ impl KnowledgeGraphStream {
             live_edges: Vec::new(),
             endpoint_pool: (0..initial_nodes).collect(),
             query_ratio: query_ratio.clamp(0.0, 1.0),
+            schedule: None,
         }
+    }
+
+    /// A stream with a deterministic `churn` (mutations per query): each
+    /// cycle emits `round(churn)` mutations (fractional debt carried)
+    /// followed by one query. Mutation *kinds* still come from the
+    /// seeded RNG, so the stream stays reproducible end to end.
+    pub fn with_churn(initial_nodes: usize, capacity: usize, churn: f64,
+                      seed: u64) -> Self {
+        assert!(churn >= 0.0, "churn is a mutations-per-query ratio");
+        let mut s = KnowledgeGraphStream::new(initial_nodes, capacity, 0.0, seed);
+        s.schedule = Some(ChurnSchedule {
+            churn,
+            burst: 1,
+            debt: 0.0,
+            pending_mutations: 0,
+            pending_queries: 0,
+        });
+        s
+    }
+
+    /// Burst mode for a churn-scheduled stream: mutations for `burst`
+    /// queries arrive as one block, then the `burst` queries — the
+    /// event-vision regime (bulk window slide, then inference) at a
+    /// controllable rate.
+    pub fn with_burst(mut self, burst: usize) -> Self {
+        let s = self
+            .schedule
+            .as_mut()
+            .expect("with_burst needs a churn schedule (use with_churn)");
+        s.burst = burst.max(1);
+        self
     }
 
     pub fn num_nodes(&self) -> usize {
         self.num_nodes
     }
-}
 
-impl Iterator for KnowledgeGraphStream {
-    type Item = GraphEvent;
-
-    fn next(&mut self) -> Option<GraphEvent> {
-        if self.rng.chance(self.query_ratio) {
-            return Some(GraphEvent::Query);
-        }
+    /// One structural mutation (never a query), advancing the generator
+    /// state exactly like the legacy probabilistic path.
+    fn mutation(&mut self) -> GraphEvent {
         let roll = self.rng.f64();
         if roll < 0.08 && self.num_nodes < self.capacity {
             // new entity
             let id = self.num_nodes;
             self.num_nodes += 1;
             self.endpoint_pool.push(id);
-            return Some(GraphEvent::AddNode);
+            return GraphEvent::AddNode;
         }
         if roll < 0.18 && !self.live_edges.is_empty() {
             // fact retraction
             let k = self.rng.usize(self.live_edges.len());
             let (u, v) = self.live_edges.swap_remove(k);
-            return Some(GraphEvent::RemoveEdge(u, v));
+            return GraphEvent::RemoveEdge(u, v);
         }
         // new fact with preferential attachment
         let u = self.endpoint_pool[self.rng.usize(self.endpoint_pool.len())];
@@ -90,7 +137,36 @@ impl Iterator for KnowledgeGraphStream {
         if self.live_edges.len() > 8192 {
             self.live_edges.swap_remove(0);
         }
-        Some(GraphEvent::AddEdge(u, v))
+        GraphEvent::AddEdge(u, v)
+    }
+}
+
+impl Iterator for KnowledgeGraphStream {
+    type Item = GraphEvent;
+
+    fn next(&mut self) -> Option<GraphEvent> {
+        if let Some(mut s) = self.schedule.take() {
+            // deterministic schedule: a burst of mutations, then queries
+            if s.pending_mutations == 0 && s.pending_queries == 0 {
+                s.debt += s.churn * s.burst as f64;
+                s.pending_mutations = s.debt.floor() as usize;
+                s.debt -= s.pending_mutations as f64;
+                s.pending_queries = s.burst;
+            }
+            let ev = if s.pending_mutations > 0 {
+                s.pending_mutations -= 1;
+                self.mutation()
+            } else {
+                s.pending_queries -= 1;
+                GraphEvent::Query
+            };
+            self.schedule = Some(s);
+            return Some(ev);
+        }
+        if self.rng.chance(self.query_ratio) {
+            return Some(GraphEvent::Query);
+        }
+        Some(self.mutation())
     }
 }
 
@@ -216,6 +292,74 @@ mod tests {
                 GraphEvent::Query => {}
             }
         }
+    }
+
+    #[test]
+    fn churn_schedule_is_exact_and_deterministic() {
+        let a: Vec<_> =
+            KnowledgeGraphStream::with_churn(10, 200, 2.0, 11).take(300).collect();
+        let b: Vec<_> =
+            KnowledgeGraphStream::with_churn(10, 200, 2.0, 11).take(300).collect();
+        assert_eq!(a, b);
+        // cycle = 2 mutations + 1 query, exactly
+        for chunk in a.chunks(3) {
+            if chunk.len() < 3 {
+                break;
+            }
+            assert!(!matches!(chunk[0], GraphEvent::Query));
+            assert!(!matches!(chunk[1], GraphEvent::Query));
+            assert!(matches!(chunk[2], GraphEvent::Query));
+        }
+    }
+
+    #[test]
+    fn fractional_churn_carries_debt() {
+        // churn 0.5: queries alternate with single mutations — over 100
+        // events exactly 1 mutation per 2 queries
+        let evs: Vec<_> =
+            KnowledgeGraphStream::with_churn(10, 200, 0.5, 3).take(99).collect();
+        let queries = evs.iter().filter(|e| matches!(e, GraphEvent::Query)).count();
+        let muts = evs.len() - queries;
+        assert!((queries as i64 - 2 * muts as i64).abs() <= 2,
+                "{queries} queries vs {muts} mutations");
+        // zero churn: pure queries
+        let evs: Vec<_> =
+            KnowledgeGraphStream::with_churn(10, 200, 0.0, 3).take(20).collect();
+        assert!(evs.iter().all(|e| matches!(e, GraphEvent::Query)));
+    }
+
+    #[test]
+    fn burst_mode_groups_mutations_before_queries() {
+        // burst 4 at churn 2: cycles of 8 mutations then 4 queries
+        let evs: Vec<_> = KnowledgeGraphStream::with_churn(10, 500, 2.0, 9)
+            .with_burst(4)
+            .take(120)
+            .collect();
+        for cycle in evs.chunks(12) {
+            if cycle.len() < 12 {
+                break;
+            }
+            assert!(cycle[..8].iter().all(|e| !matches!(e, GraphEvent::Query)),
+                    "burst head must be mutations");
+            assert!(cycle[8..].iter().all(|e| matches!(e, GraphEvent::Query)),
+                    "burst tail must be queries");
+        }
+    }
+
+    #[test]
+    fn churned_edges_stay_in_node_range() {
+        let mut n = 12;
+        for ev in KnowledgeGraphStream::with_churn(12, 60, 3.0, 5).take(800) {
+            match ev {
+                GraphEvent::AddNode => n += 1,
+                GraphEvent::AddEdge(u, v) | GraphEvent::RemoveEdge(u, v) => {
+                    assert!(u < n && v < n, "({u},{v}) with n={n}");
+                    assert_ne!(u, v);
+                }
+                GraphEvent::Query => {}
+            }
+        }
+        assert!(n <= 60);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! The layer-activation cache: CacheG generalized from adjacency masks
+//! to per-layer node activations.
+//!
+//! One arena-backed store per GNN layer, sized at NodePad capacity so
+//! `AddNode` never reallocates. Validity is **epoch-versioned**: a row is
+//! live iff its stamp equals the store's current epoch, which makes
+//! whole-cache invalidation O(1) (bump the epoch) while precise per-row
+//! invalidation and revalidation stay O(rows touched) — exactly the
+//! invalidation split the dirty frontier needs (mutations stale a few
+//! rows; engine errors stale everything).
+
+use crate::engine::kernels;
+
+struct Layer {
+    width: usize,
+    /// Arena: `capacity × width`, row-major, allocated once.
+    data: Vec<f32>,
+    /// Row `i` is valid iff `row_epoch[i] == epoch`.
+    row_epoch: Vec<u64>,
+}
+
+/// Per-layer activation store with epoch-versioned row validity.
+pub struct ActivationCache {
+    capacity: usize,
+    epoch: u64,
+    layers: Vec<Layer>,
+}
+
+impl ActivationCache {
+    /// One store per layer; `widths[l]` is layer l's output width.
+    pub fn new(capacity: usize, widths: &[usize]) -> ActivationCache {
+        ActivationCache {
+            capacity,
+            // epoch 0 is the "never written" stamp, so start at 1
+            epoch: 1,
+            layers: widths
+                .iter()
+                .map(|&w| Layer {
+                    width: w,
+                    data: vec![0.0; capacity * w],
+                    row_epoch: vec![0; capacity],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn width(&self, layer: usize) -> usize {
+        self.layers[layer].width
+    }
+
+    pub fn is_valid(&self, layer: usize, node: usize) -> bool {
+        self.layers[layer].row_epoch[node] == self.epoch
+    }
+
+    /// Valid rows in a layer (gauge/debug).
+    pub fn valid_rows(&self, layer: usize) -> usize {
+        let l = &self.layers[layer];
+        l.row_epoch.iter().filter(|&&e| e == self.epoch).count()
+    }
+
+    /// Read one valid row (`None` if stale) — the serving read.
+    pub fn row(&self, layer: usize, node: usize) -> Option<&[f32]> {
+        if !self.is_valid(layer, node) {
+            return None;
+        }
+        let l = &self.layers[layer];
+        Some(&l.data[node * l.width..(node + 1) * l.width])
+    }
+
+    /// Gather `nodes`' rows into the head of `out` (tile layout).
+    /// Returns the number of **stale** rows gathered — 0 means every row
+    /// was served by the cache; anything else means the caller's frontier
+    /// invariant broke and the result must not be trusted.
+    pub fn gather(&self, layer: usize, nodes: &[usize], out: &mut [f32]) -> usize {
+        let l = &self.layers[layer];
+        kernels::gather_rows(&l.data, l.width, nodes, out);
+        nodes
+            .iter()
+            .filter(|&&n| l.row_epoch[n] != self.epoch)
+            .count()
+    }
+
+    /// Scatter freshly-computed rows back (tile layout) and mark them
+    /// valid — the write half of the partial-execution path.
+    pub fn scatter(&mut self, layer: usize, nodes: &[usize], src: &[f32]) {
+        let epoch = self.epoch;
+        let l = &mut self.layers[layer];
+        kernels::scatter_rows(&mut l.data, l.width, nodes, src);
+        for &n in nodes {
+            l.row_epoch[n] = epoch;
+        }
+    }
+
+    /// Precisely stale out a set of rows in one layer (e.g. a shard
+    /// marking non-owned final-layer rows it chose not to recompute).
+    pub fn invalidate_rows(&mut self, layer: usize, nodes: &[usize]) {
+        let l = &mut self.layers[layer];
+        for &n in nodes {
+            l.row_epoch[n] = 0;
+        }
+    }
+
+    /// O(1) whole-cache invalidation: bump the epoch; every stamp goes
+    /// stale at once.
+    pub fn invalidate_all(&mut self) {
+        self.epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_then_row_round_trips() {
+        let mut c = ActivationCache::new(5, &[3, 2]);
+        assert!(c.row(0, 2).is_none(), "rows start stale");
+        c.scatter(0, &[2, 4], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(c.row(0, 2).unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.row(0, 4).unwrap(), &[4.0, 5.0, 6.0]);
+        assert!(c.row(0, 0).is_none());
+        assert!(c.row(1, 2).is_none(), "layers are independent");
+        assert_eq!(c.valid_rows(0), 2);
+    }
+
+    #[test]
+    fn gather_counts_stale_rows() {
+        let mut c = ActivationCache::new(4, &[2]);
+        c.scatter(0, &[0, 1], &[1.0, 2.0, 3.0, 4.0]);
+        let mut out = vec![0.0f32; 3 * 2];
+        assert_eq!(c.gather(0, &[0, 1], &mut out), 0);
+        assert_eq!(&out[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.gather(0, &[0, 3, 1], &mut out), 1, "row 3 is stale");
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_everything_at_once() {
+        let mut c = ActivationCache::new(3, &[2, 2]);
+        c.scatter(0, &[0, 1, 2], &[0.0; 6]);
+        c.scatter(1, &[0, 1, 2], &[0.0; 6]);
+        assert_eq!(c.valid_rows(0) + c.valid_rows(1), 6);
+        c.invalidate_all();
+        assert_eq!(c.valid_rows(0) + c.valid_rows(1), 0);
+        // rewrites under the new epoch become valid again
+        c.scatter(1, &[1], &[7.0, 8.0]);
+        assert!(c.is_valid(1, 1));
+        assert!(!c.is_valid(1, 0));
+    }
+
+    #[test]
+    fn precise_invalidation_is_per_row() {
+        let mut c = ActivationCache::new(4, &[1]);
+        c.scatter(0, &[0, 1, 2, 3], &[1.0, 2.0, 3.0, 4.0]);
+        c.invalidate_rows(0, &[1, 3]);
+        assert!(c.is_valid(0, 0) && c.is_valid(0, 2));
+        assert!(!c.is_valid(0, 1) && !c.is_valid(0, 3));
+    }
+}

@@ -1,0 +1,278 @@
+//! Dirty-frontier tracking: which nodes can a batch of GrAd mutations
+//! have changed, k layers deep?
+//!
+//! ## Soundness
+//!
+//! A k-layer GNN output row depends only on the node's k-hop
+//! neighborhood (the aggregation locality EnGN and the Abadal et al.
+//! survey exploit for tiling). An edge mutation `(u,v)` rescales norm
+//! entries in rows/columns `u` and `v` only, so the layer-1 dirty set is
+//! `{u,v} ∪ N(u) ∪ N(v) = B({u,v}, 1)` and, inductively, the layer-l
+//! dirty set is `B(seeds, l)` — the l-hop ball around the mutation
+//! endpoints.
+//!
+//! Expansion runs over the **current** graph even when several mutations
+//! accumulated between queries. That is still a superset of the true
+//! dirty set: any neighbor a node *lost* since the last query is itself
+//! a seed (removing `(u,x)` seeds `x`), so `N_old(u) ⊆ N_now(u) ∪ seeds`
+//! and the inductive argument goes through unchanged. The brute-force
+//! before/after diffing test in `rust/tests/incremental_equivalence.rs`
+//! checks exactly this containment.
+//!
+//! ## SAGE sampling
+//!
+//! Expansion takes the neighbor relation as a closure, so a
+//! sampling-aware caller can pass its sampled adjacency. A node only
+//! aggregates from its *sampled* neighbors — a subset of the full
+//! neighbor set — so expanding over the full adjacency (what
+//! [`Frontier::balls`] does by default) is a sound superset for SAGE
+//! models too; passing the sampled relation merely tightens the
+//! frontier.
+
+use std::collections::BTreeSet;
+
+use crate::server::Update;
+
+/// Accumulates mutation seeds between queries and expands them into
+/// layered k-hop balls with a reusable, generation-stamped scratch (no
+/// per-expansion clearing of the visited array).
+#[derive(Debug)]
+pub struct Frontier {
+    seeds: BTreeSet<u32>,
+    /// `stamp[i] == gen` ⇔ node i visited in the current expansion.
+    stamp: Vec<u32>,
+    gen: u32,
+}
+
+impl Frontier {
+    pub fn new(capacity: usize) -> Frontier {
+        Frontier { seeds: BTreeSet::new(), stamp: vec![0; capacity], gen: 0 }
+    }
+
+    /// Note an **applied** update's seeds. Call only for updates that
+    /// changed the graph (duplicate adds / absent removes touch nothing
+    /// and must not grow the frontier); `added_node` is the id returned
+    /// by a successful `AddNode`.
+    pub fn note(&mut self, update: &Update, added_node: Option<usize>) {
+        match update {
+            Update::AddEdge(u, v) | Update::RemoveEdge(u, v) => {
+                self.seeds.insert(*u as u32);
+                self.seeds.insert(*v as u32);
+            }
+            Update::AddNode => {
+                if let Some(id) = added_node {
+                    self.seeds.insert(id as u32);
+                }
+            }
+        }
+    }
+
+    pub fn num_seeds(&self) -> usize {
+        self.seeds.len()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.seeds.is_empty()
+    }
+
+    /// Forget the accumulated seeds (after a successful recompute).
+    pub fn clear(&mut self) {
+        self.seeds.clear();
+    }
+
+    fn next_gen(&mut self) -> u32 {
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // stamp wrap: every stale stamp could collide; reset once
+            self.stamp.fill(0);
+            self.gen = 1;
+        }
+        self.gen
+    }
+
+    /// Layered balls around the seeds: `out[l]` is the **sorted** set of
+    /// nodes within `l` hops of any seed (`out[0]` = the seeds), for
+    /// `l = 0..=k`. `nbrs(node, visit)` enumerates a node's neighbors.
+    pub fn balls<N>(&mut self, k: usize, mut nbrs: N) -> Vec<Vec<u32>>
+    where
+        N: FnMut(usize, &mut dyn FnMut(u32)),
+    {
+        let gen = self.next_gen();
+        let mut ball: Vec<u32> = self.seeds.iter().copied().collect();
+        for &s in &ball {
+            self.stamp[s as usize] = gen;
+        }
+        let mut out = Vec::with_capacity(k + 1);
+        out.push(ball.clone());
+        let mut wave = ball.clone();
+        for _ in 0..k {
+            let mut next = Vec::new();
+            for &u in &wave {
+                let stamp = &mut self.stamp;
+                nbrs(u as usize, &mut |v: u32| {
+                    if stamp[v as usize] != gen {
+                        stamp[v as usize] = gen;
+                        next.push(v);
+                    }
+                });
+            }
+            ball.extend_from_slice(&next);
+            ball.sort_unstable();
+            out.push(ball.clone());
+            wave = next;
+            if wave.is_empty() {
+                // converged early: remaining balls repeat the last one
+                while out.len() < k + 1 {
+                    out.push(ball.clone());
+                }
+                break;
+            }
+        }
+        out
+    }
+
+    /// `B(rows, hops)` for an arbitrary sorted row set — the input-ring
+    /// computation (`hops = 1`) and the shard region expansion
+    /// (`hops = k − l`). Returns a sorted superset of `rows`.
+    pub fn ball_of<N>(&mut self, rows: &[u32], hops: usize, mut nbrs: N) -> Vec<u32>
+    where
+        N: FnMut(usize, &mut dyn FnMut(u32)),
+    {
+        let gen = self.next_gen();
+        let mut ball: Vec<u32> = rows.to_vec();
+        for &r in rows {
+            self.stamp[r as usize] = gen;
+        }
+        let mut wave: Vec<u32> = rows.to_vec();
+        for _ in 0..hops {
+            let mut next = Vec::new();
+            for &u in &wave {
+                let stamp = &mut self.stamp;
+                nbrs(u as usize, &mut |v: u32| {
+                    if stamp[v as usize] != gen {
+                        stamp[v as usize] = gen;
+                        next.push(v);
+                    }
+                });
+            }
+            ball.extend_from_slice(&next);
+            wave = next;
+            if wave.is_empty() {
+                break;
+            }
+        }
+        ball.sort_unstable();
+        ball
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn nbrs_of(g: &Graph) -> impl FnMut(usize, &mut dyn FnMut(u32)) {
+        let lists = g.neighbor_lists();
+        move |u: usize, visit: &mut dyn FnMut(u32)| {
+            for &v in &lists[u] {
+                visit(v);
+            }
+        }
+    }
+
+    /// Brute-force ball via repeated neighbor unions.
+    fn brute_ball(g: &Graph, seeds: &[u32], k: usize) -> Vec<u32> {
+        let lists = g.neighbor_lists();
+        let mut set: BTreeSet<u32> = seeds.iter().copied().collect();
+        for _ in 0..k {
+            let cur: Vec<u32> = set.iter().copied().collect();
+            for u in cur {
+                for &v in &lists[u as usize] {
+                    set.insert(v);
+                }
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    #[test]
+    fn balls_match_brute_force() {
+        crate::util::propcheck::forall("frontier balls == brute force", 30, |gen| {
+            let n = gen.usize(3, 30);
+            let m = gen.usize(1, 3 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (gen.rng().usize(n) as u32, gen.rng().usize(n) as u32))
+                .collect();
+            let g = Graph::new(n, &edges);
+            let mut f = Frontier::new(n);
+            let nseeds = gen.usize(1, 4.min(n));
+            for _ in 0..nseeds {
+                let u = gen.rng().usize(n);
+                f.note(&Update::AddEdge(u, u), None); // seeds both = u
+            }
+            let seeds: Vec<u32> = f.seeds.iter().copied().collect();
+            let k = gen.usize(1, 4);
+            let balls = f.balls(k, nbrs_of(&g));
+            assert_eq!(balls.len(), k + 1);
+            assert_eq!(balls[0], seeds);
+            for (l, ball) in balls.iter().enumerate() {
+                assert_eq!(ball, &brute_ball(&g, &seeds, l), "hop {l}");
+            }
+            // rings agree with brute force too
+            let ring = f.ball_of(&balls[k], 1, nbrs_of(&g));
+            assert_eq!(ring, brute_ball(&g, &balls[k], 1));
+        });
+    }
+
+    #[test]
+    fn note_ignores_unapplied_add_node() {
+        let mut f = Frontier::new(8);
+        f.note(&Update::AddNode, None);
+        assert!(f.is_clean());
+        f.note(&Update::AddNode, Some(5));
+        assert_eq!(f.num_seeds(), 1);
+        f.clear();
+        assert!(f.is_clean());
+    }
+
+    #[test]
+    fn scratch_survives_many_generations() {
+        // the generation stamps must never leak state across expansions
+        let g = Graph::new(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        for round in 0..300 {
+            let mut f = Frontier::new(6);
+            f.note(&Update::AddEdge(round % 5, (round % 5) + 1), None);
+            let seeds: Vec<u32> = f.seeds.iter().copied().collect();
+            let balls = f.balls(2, nbrs_of(&g));
+            assert_eq!(balls[2], brute_ball(&g, &seeds, 2));
+        }
+        // and the same instance reused back to back
+        let mut f = Frontier::new(6);
+        f.note(&Update::AddEdge(0, 1), None);
+        let a = f.balls(1, nbrs_of(&g));
+        let b = f.balls(1, nbrs_of(&g));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sampled_relation_tightens_the_frontier() {
+        // a star: full expansion from the hub reaches everyone; a
+        // SAGE-style sampled relation that keeps 2 neighbors reaches 2
+        let g = Graph::new(6, &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5)]);
+        let mut f = Frontier::new(6);
+        f.note(&Update::AddEdge(0, 1), None);
+        let full = f.balls(1, nbrs_of(&g));
+        assert_eq!(full[1].len(), 6);
+        let sampled = f.balls(1, |u, visit: &mut dyn FnMut(u32)| {
+            let lists = g.neighbor_lists();
+            for &v in lists[u].iter().take(2) {
+                visit(v);
+            }
+        });
+        assert!(sampled[1].len() < full[1].len());
+        // and it is a subset: sound, just tighter
+        for v in &sampled[1] {
+            assert!(full[1].contains(v));
+        }
+    }
+}

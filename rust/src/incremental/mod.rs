@@ -1,0 +1,930 @@
+//! `incremental` — delta-driven inference: recompute the dirty frontier,
+//! serve the rest from a layer-activation cache.
+//!
+//! The serving stack recomputes **every node through every layer** per
+//! query, even when the graph changed by one edge since the last answer
+//! — yet GrAd/NodePad keep the compiled shapes stable precisely so work
+//! *could* be reused, and a k-layer GNN output can only change inside
+//! the k-hop ball of a mutation (aggregation locality). This subsystem
+//! exploits that:
+//!
+//! - [`frontier`] accumulates mutation seeds from GrAd updates and
+//!   expands them k hops over the live neighbor sets (`B(seeds, l)` is
+//!   the exact layer-l dirty superset — see the module's soundness
+//!   argument);
+//! - [`cache`] holds per-layer node activations in an arena-backed,
+//!   epoch-versioned store (CacheG generalized from adjacency masks to
+//!   activations) with precise per-row invalidation;
+//! - [`IncrementalEngine`] implements the serving
+//!   [`crate::server::InferenceEngine`] trait: per round it recomputes
+//!   layer `l` only for `B(seeds, l+1)` (∩ the shard's region), reading
+//!   ring inputs from the cache and scattering fresh rows back, through
+//!   the gather/scatter tile path ([`crate::engine::TileRunner`] running
+//!   compiled [`crate::ops::plan::ExecPlan`]s at power-of-two-bucketed
+//!   subset shapes).
+//!
+//! ## Fallback cost model
+//!
+//! Per round the engine estimates both paths in flops-plus-gather terms
+//! (at the *bucketed* tile sizes it would actually run) and takes the
+//! full recompute when
+//! `est(incremental) ≥ cost_margin · est(full)` — small-churn wins must
+//! not become large-churn regressions, so beyond the crossover the
+//! engine *is* the full planned path plus an O(frontier) bookkeeping
+//! term. With no pending mutations a round recomputes nothing at all and
+//! answers straight from the cache.
+//!
+//! ## Fleet sharding
+//!
+//! A shard owning `O` maintains layer `l` for the region `B(O, k−1−l)`
+//! (its halo ring, one hop wider per earlier layer). Updates fan out to
+//! every shard, so a boundary mutation lands in the neighbor shard's
+//! frontier and invalidates/recomputes its cached rows automatically;
+//! live halo imports are recosted per round from the actual input rings
+//! (`|rings ∖ owned|`), shrinking with the frontier.
+
+pub mod cache;
+pub mod frontier;
+
+use std::cell::RefCell;
+use std::collections::BTreeSet;
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::ModelState;
+use crate::engine::{kernels, TileRunner, WorkerPool};
+use crate::graph::{datasets::Dataset, pad_features};
+use crate::metrics::RoundStats;
+use crate::ops::build;
+use crate::ops::exec::Bindings;
+use crate::server::{InferenceEngine, Update};
+use crate::tensor::Mat;
+
+pub use cache::ActivationCache;
+pub use frontier::Frontier;
+
+/// Tuning knobs for the delta-driven engine.
+#[derive(Debug, Clone, Copy)]
+pub struct IncrementalConfig {
+    /// Take the full path when `est_inc ≥ cost_margin · est_full`. `0.0`
+    /// forces full recompute every round; `f64::INFINITY` disables the
+    /// fallback (test/bench hooks for both sides of the crossover).
+    pub cost_margin: f64,
+    /// Smallest tile bucket (avoids compiling a plan per tiny frontier).
+    pub tile_min: usize,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> Self {
+        // margin < 1: near the crossover the frontier bookkeeping and
+        // scattered gathers make the full path the safer choice
+        IncrementalConfig { cost_margin: 0.75, tile_min: 32 }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LayerSpec {
+    in_w: usize,
+    out_w: usize,
+    relu: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RoundMode {
+    /// No pending mutations: serve entirely from the cache.
+    Cached,
+    /// Recompute the whole owned region (cold cache or past the
+    /// fallback threshold).
+    Full,
+    /// Recompute only the dirty frontier.
+    Incremental,
+}
+
+/// One round's execution plan (what [`IncrementalEngine::infer`] runs
+/// and what the halo/metrics accounting is derived from).
+struct LayerRound {
+    /// Rows to recompute at this layer (sorted).
+    rows: Vec<usize>,
+    /// Input ring `B(rows, 1)` (sorted; read from the previous layer's
+    /// cache, or from the padded features at layer 0).
+    ring: Vec<usize>,
+    /// Dirty rows this engine is *not* recomputing (outside its region);
+    /// precisely invalidated so they can never serve a stale read.
+    stale: Vec<usize>,
+}
+
+struct RoundPlan {
+    mode: RoundMode,
+    layers: Vec<LayerRound>,
+    /// Distinct non-owned nodes in this round's input rings — the live
+    /// halo-import count.
+    halo: usize,
+    /// `|B(seeds, k)|` that drove the mode decision (0 when cached).
+    frontier: usize,
+}
+
+/// Delta-driven [`InferenceEngine`]: frontier recompute over a
+/// layer-activation cache, with cost-model fallback to full recompute.
+/// See the module docs.
+pub struct IncrementalEngine {
+    state: ModelState,
+    /// NodePad-padded features (capacity × f, zero rows for padding —
+    /// matches the `x_pad` binding the full plans consume).
+    x_pad: Mat,
+    layers: Vec<LayerSpec>,
+    /// One tile family per layer (geometry-bucketed compiled plans).
+    tiles: Vec<TileRunner>,
+    cache: ActivationCache,
+    frontier: RefCell<Frontier>,
+    cfg: IncrementalConfig,
+    owned: Range<usize>,
+    /// True once a full round has seeded every region row of the cache.
+    seeded: bool,
+    /// Completed inference rounds (part of the plan-cache key).
+    rounds: u64,
+    plan_cache: RefCell<Option<(u64, u64, Arc<RoundPlan>)>>,
+    /// Shard maintenance regions, cached per graph version.
+    regions: RefCell<Option<(u64, Arc<Regions>)>>,
+    last_stats: Option<RoundStats>,
+}
+
+/// The per-version shard geometry: `per_layer[l] = B(owned, k−1−l)` and
+/// the layer-0 input ring of a full recompute, `ring0 = B(per_layer[0], 1)`
+/// — precomputed so the cost model prices the full path at the ring it
+/// actually gathers.
+struct Regions {
+    per_layer: Vec<Vec<u32>>,
+    ring0: Vec<u32>,
+}
+
+impl IncrementalEngine {
+    /// Core constructor: an existing [`ModelState`] (GrAd graph + CacheG
+    /// masks) plus a named weight set (`w1`/`b1`/`w2`/`b2`, …) — real
+    /// artifact weights or the deterministic offline synthesis. Answers
+    /// for `owned` only (the single-leader server owns everything).
+    pub fn from_state(
+        state: ModelState,
+        weights: Bindings,
+        owned: Range<usize>,
+        pool: Arc<WorkerPool>,
+        cfg: IncrementalConfig,
+    ) -> Result<IncrementalEngine> {
+        let mut layers: Vec<LayerSpec> = Vec::new();
+        loop {
+            let Some(w) = weights.get(&format!("w{}", layers.len() + 1)) else {
+                break;
+            };
+            let shape = w.shape();
+            if shape.len() != 2 {
+                bail!("weight w{} is not 2-D", layers.len() + 1);
+            }
+            layers.push(LayerSpec { in_w: shape[0], out_w: shape[1], relu: true });
+        }
+        if layers.is_empty() {
+            bail!("no w1/w2/… weights to build an incremental model from");
+        }
+        let k = layers.len();
+        layers[k - 1].relu = false;
+        if layers[0].in_w != state.dataset.num_features() {
+            bail!(
+                "w1 expects {} features, dataset has {}",
+                layers[0].in_w,
+                state.dataset.num_features()
+            );
+        }
+        let capacity = state.capacity;
+        let x_pad = pad_features(&state.dataset.features, capacity);
+        let cache =
+            ActivationCache::new(capacity, &layers.iter().map(|l| l.out_w).collect::<Vec<_>>());
+        let mut tiles = Vec::with_capacity(k);
+        for (li, spec) in layers.iter().enumerate() {
+            let mut statics = Bindings::new();
+            let wkey = format!("w{}", li + 1);
+            let bkey = format!("b{}", li + 1);
+            let w = weights.get(&wkey).unwrap().clone();
+            let b = weights
+                .get(&bkey)
+                .with_context(|| format!("missing bias {bkey}"))?
+                .clone();
+            if b.num_elements() != spec.out_w {
+                bail!("{bkey} has {} elements, layer wants {}", b.num_elements(), spec.out_w);
+            }
+            statics.insert("w".into(), w);
+            statics.insert("b".into(), b);
+            let (in_w, out_w, relu) = (spec.in_w, spec.out_w, spec.relu);
+            tiles.push(TileRunner::new(
+                Arc::clone(&pool),
+                cfg.tile_min,
+                capacity,
+                capacity,
+                statics,
+                move |rows, ring| build::gcn_layer_tile(rows, ring, in_w, out_w, relu),
+            ));
+        }
+        Ok(IncrementalEngine {
+            frontier: RefCell::new(Frontier::new(capacity)),
+            state,
+            x_pad,
+            layers,
+            tiles,
+            cache,
+            cfg,
+            owned,
+            seeded: false,
+            rounds: 0,
+            plan_cache: RefCell::new(None),
+            regions: RefCell::new(None),
+            last_stats: None,
+        })
+    }
+
+    /// Offline shard engine: deterministic synthesized weights (the same
+    /// ones [`crate::fleet::PlanEngine`] serves, so fleets of either
+    /// engine agree), answering for `owned` only.
+    pub fn shard(
+        ds: &Dataset,
+        capacity: usize,
+        owned: Range<usize>,
+        pool: Arc<WorkerPool>,
+        cfg: IncrementalConfig,
+    ) -> Result<IncrementalEngine> {
+        let capacity = capacity.max(ds.num_nodes());
+        let weights = crate::fleet::engine::synthesize_weights(
+            ds.num_features(),
+            ds.num_classes().max(2),
+            capacity,
+        );
+        let state = ModelState::from_dataset(ds.clone(), capacity)?;
+        IncrementalEngine::from_state(state, weights, owned, pool, cfg)
+    }
+
+    /// Offline engine answering for every node (the single-leader
+    /// server).
+    pub fn full(
+        ds: &Dataset,
+        capacity: usize,
+        pool: Arc<WorkerPool>,
+        cfg: IncrementalConfig,
+    ) -> Result<IncrementalEngine> {
+        let capacity = capacity.max(ds.num_nodes());
+        IncrementalEngine::shard(ds, capacity, 0..capacity, pool, cfg)
+    }
+
+    /// The last completed round's accounting (also drained through
+    /// [`InferenceEngine::round_stats`] by shard workers).
+    pub fn last_round(&self) -> Option<&RoundStats> {
+        self.last_stats.as_ref()
+    }
+
+    /// Tile plans compiled so far, across layers (compile-once gauge).
+    pub fn compiled_tiles(&self) -> usize {
+        self.tiles.iter().map(TileRunner::compiled_tiles).sum()
+    }
+
+    fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn active(&self) -> usize {
+        self.state.num_active_nodes()
+    }
+
+    fn owned_active(&self) -> Range<usize> {
+        let n = self.active();
+        self.owned.start.min(n)..self.owned.end.min(n)
+    }
+
+    fn owns_all(&self) -> bool {
+        self.owned.start == 0 && self.owned.end >= self.state.capacity
+    }
+
+    /// Per-layer maintenance regions `B(owned ∩ active, k−1−l)` plus the
+    /// layer-0 full-recompute ring, cached per graph version.
+    fn region_sets(&self) -> Arc<Regions> {
+        let version = self.state.graph_version();
+        if let Some((v, r)) = &*self.regions.borrow() {
+            if *v == version {
+                return Arc::clone(r);
+            }
+        }
+        let k = self.num_layers();
+        let out = if self.owns_all() {
+            let all: Vec<u32> = (0..self.active() as u32).collect();
+            Arc::new(Regions { per_layer: vec![all.clone(); k], ring0: all })
+        } else {
+            let owned: Vec<u32> =
+                self.owned_active().map(|i| i as u32).collect();
+            let mut f = self.frontier.borrow_mut();
+            let per_layer: Vec<Vec<u32>> = (0..k)
+                .map(|l| {
+                    f.ball_of(&owned, k - 1 - l, |u, visit| {
+                        for &v in self.state.neighbors(u) {
+                            visit(v);
+                        }
+                    })
+                })
+                .collect();
+            let ring0 = f.ball_of(&per_layer[0], 1, |u, visit| {
+                for &v in self.state.neighbors(u) {
+                    visit(v);
+                }
+            });
+            Arc::new(Regions { per_layer, ring0 })
+        };
+        *self.regions.borrow_mut() = Some((version, Arc::clone(&out)));
+        out
+    }
+
+    /// Estimated cost (flops + gather traffic) of executing the given
+    /// per-layer `(rows, ring)` sizes at their *bucketed* tile shapes.
+    fn est_cost(&self, sizes: &[(usize, usize)]) -> f64 {
+        let mut total = 0.0;
+        for (l, &(rows, ring)) in sizes.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let spec = &self.layers[l];
+            let (rb, qb) = self.tiles[l].bucket(rows, ring);
+            let (rb, qb, in_w, out_w) =
+                (rb as f64, qb as f64, spec.in_w as f64, spec.out_w as f64);
+            // combination mm + aggregation mm + input gather + mask gather
+            total += qb * in_w * out_w + rb * qb * out_w + qb * in_w + rb * qb;
+        }
+        total
+    }
+
+    /// Decide and lay out the next round. Cached per
+    /// `(graph version, completed rounds)` so the halo probe and the
+    /// inference that follows it share one expansion.
+    fn plan_round(&self) -> Arc<RoundPlan> {
+        let key = (self.state.graph_version(), self.rounds);
+        if let Some((v, r, p)) = &*self.plan_cache.borrow() {
+            if (*v, *r) == key {
+                return Arc::clone(p);
+            }
+        }
+        let plan = Arc::new(self.build_plan());
+        *self.plan_cache.borrow_mut() = Some((key.0, key.1, Arc::clone(&plan)));
+        plan
+    }
+
+    fn build_plan(&self) -> RoundPlan {
+        let k = self.num_layers();
+        if self.seeded && self.frontier.borrow().is_clean() {
+            return RoundPlan {
+                mode: RoundMode::Cached,
+                layers: Vec::new(),
+                halo: 0,
+                frontier: 0,
+            };
+        }
+        let regions = self.region_sets();
+
+        // dirty balls — meaningful only once the cache is seeded (a cold
+        // cache has nothing to preserve, so there is nothing to expand)
+        let balls = if self.seeded {
+            let mut f = self.frontier.borrow_mut();
+            Some(f.balls(k, |u, visit| {
+                for &v in self.state.neighbors(u) {
+                    visit(v);
+                }
+            }))
+        } else {
+            None
+        };
+        let frontier_size = balls.as_ref().map(|b| b[k].len()).unwrap_or(0);
+
+        if let Some(balls) = &balls {
+            // candidate incremental layout, then the cost-model decision
+            let mut layers = Vec::with_capacity(k);
+            {
+                let mut f = self.frontier.borrow_mut();
+                for l in 0..k {
+                    let dirty = intersect_sorted(&balls[l + 1], &regions.per_layer[l]);
+                    // churn can *grow* a shard's region (a new edge pulls
+                    // nodes into B(owned, j)); any region row whose cached
+                    // value is invalid must be recomputed alongside the
+                    // frontier, or a later ring read would hit it stale
+                    let unseeded: Vec<u32> = regions.per_layer[l]
+                        .iter()
+                        .copied()
+                        .filter(|&r| !self.cache.is_valid(l, r as usize))
+                        .collect();
+                    let rows = union_sorted(&dirty, &unseeded);
+                    let ring = f.ball_of(&rows, 1, |u, visit| {
+                        for &v in self.state.neighbors(u) {
+                            visit(v);
+                        }
+                    });
+                    let stale = difference_sorted(&balls[l + 1], &rows);
+                    layers.push(LayerRound {
+                        rows: to_usize(&rows),
+                        ring: to_usize(&ring),
+                        stale: to_usize(&stale),
+                    });
+                }
+            }
+            let inc_sizes: Vec<(usize, usize)> =
+                layers.iter().map(|l| (l.rows.len(), l.ring.len())).collect();
+            // price the full path at the rings it actually gathers:
+            // layer 0 reads B(region[0], 1), layer l ≥ 1 reads region[l−1]
+            let full_sizes: Vec<(usize, usize)> = (0..k)
+                .map(|l| {
+                    let ring = if l == 0 {
+                        regions.ring0.len()
+                    } else {
+                        regions.per_layer[l - 1].len()
+                    };
+                    (regions.per_layer[l].len(), ring)
+                })
+                .collect();
+            if self.est_cost(&inc_sizes)
+                < self.cfg.cost_margin * self.est_cost(&full_sizes)
+            {
+                let halo = self.halo_of(&layers);
+                return RoundPlan {
+                    mode: RoundMode::Incremental,
+                    layers,
+                    halo,
+                    frontier: frontier_size,
+                };
+            }
+        }
+
+        // full recompute over the maintenance regions. Dirty rows outside
+        // the regions still have to be precisely invalidated: a node that
+        // later re-enters a region must not serve a stale-but-valid row.
+        let mut layers = Vec::with_capacity(k);
+        for l in 0..k {
+            let rows = to_usize(&regions.per_layer[l]);
+            let ring = if l == 0 {
+                to_usize(&regions.ring0)
+            } else {
+                to_usize(&regions.per_layer[l - 1])
+            };
+            let stale = balls
+                .as_ref()
+                .map(|b| {
+                    to_usize(&difference_sorted(&b[l + 1], &regions.per_layer[l]))
+                })
+                .unwrap_or_default();
+            layers.push(LayerRound { rows, ring, stale });
+        }
+        let halo = self.halo_of(&layers);
+        RoundPlan { mode: RoundMode::Full, layers, halo, frontier: frontier_size }
+    }
+
+    /// Distinct non-owned nodes across the round's input rings.
+    fn halo_of(&self, layers: &[LayerRound]) -> usize {
+        if self.owns_all() {
+            return 0;
+        }
+        let mut imports: BTreeSet<usize> = BTreeSet::new();
+        for lr in layers {
+            for &n in &lr.ring {
+                if !self.owned.contains(&n) {
+                    imports.insert(n);
+                }
+            }
+        }
+        imports.len()
+    }
+
+    /// Execute one planned round through the gather/scatter tile path.
+    fn exec_round(&mut self, plan: &RoundPlan) -> Result<()> {
+        let capacity = self.state.capacity;
+        for l in 0..self.num_layers() {
+            let lr = &plan.layers[l];
+            if !lr.stale.is_empty() {
+                self.cache.invalidate_rows(l, &lr.stale);
+            }
+            if lr.rows.is_empty() {
+                continue;
+            }
+            let spec = self.layers[l];
+            let tile = self.tiles[l].tile(lr.rows.len(), lr.ring.len())?;
+            let ring_cap = tile.ring;
+            let hbuf = tile.binding_mut("h_ring")?;
+            if l == 0 {
+                kernels::gather_rows(&self.x_pad.data, spec.in_w, &lr.ring, hbuf);
+            } else {
+                let stale = self.cache.gather(l - 1, &lr.ring, hbuf);
+                if stale > 0 {
+                    bail!(
+                        "incremental invariant broken: {stale} stale ring rows \
+                         at layer {l} (frontier under-expansion)"
+                    );
+                }
+            }
+            kernels::gather_submatrix(
+                &self.state.norm_mask().data,
+                capacity,
+                &lr.rows,
+                &lr.ring,
+                tile.binding_mut("norm_sub")?,
+                ring_cap,
+            );
+            tile.run()
+                .with_context(|| format!("incremental layer {l} tile run"))?;
+            let (out, _rows, out_w) = tile.output()?;
+            debug_assert_eq!(out_w, spec.out_w);
+            // scatter the fresh rows back into the cache (copy the live
+            // region out of the tile view to split the field borrows)
+            let fresh = out[..lr.rows.len() * out_w].to_vec();
+            self.cache.scatter(l, &lr.rows, &fresh);
+        }
+        Ok(())
+    }
+
+    fn round_accounting(&self, plan: &RoundPlan) -> RoundStats {
+        let eligible = self.owned_active().len();
+        match plan.mode {
+            RoundMode::Cached => RoundStats {
+                recomputed_rows: 0,
+                eligible_rows: eligible,
+                frontier: 0,
+                cache_hits: eligible,
+                cache_misses: 0,
+            },
+            RoundMode::Full | RoundMode::Incremental => {
+                let k = self.num_layers();
+                let recomputed = plan.layers[k - 1].rows.len();
+                let mut misses = 0usize;
+                let mut hits = eligible.saturating_sub(recomputed);
+                for l in 0..k {
+                    misses += plan.layers[l].rows.len();
+                    if l > 0 {
+                        hits += count_not_in(
+                            &plan.layers[l].ring,
+                            &plan.layers[l - 1].rows,
+                        );
+                    }
+                }
+                RoundStats {
+                    recomputed_rows: recomputed,
+                    eligible_rows: eligible,
+                    frontier: plan.frontier,
+                    cache_hits: hits,
+                    cache_misses: misses,
+                }
+            }
+        }
+    }
+}
+
+fn to_usize(v: &[u32]) -> Vec<usize> {
+    v.iter().map(|&x| x as usize).collect()
+}
+
+/// `a ∩ b` for sorted slices.
+fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// `a ∪ b` for sorted slices.
+fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let x = match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) if x == y => {
+                i += 1;
+                j += 1;
+                x
+            }
+            (Some(&x), Some(&y)) if x < y => {
+                i += 1;
+                x
+            }
+            (Some(_), Some(&y)) => {
+                j += 1;
+                y
+            }
+            (Some(&x), None) => {
+                i += 1;
+                x
+            }
+            (None, Some(&y)) => {
+                j += 1;
+                y
+            }
+            (None, None) => unreachable!(),
+        };
+        out.push(x);
+    }
+    out
+}
+
+/// `a ∖ b` for sorted slices.
+fn difference_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Entries of sorted `a` not present in sorted `b`.
+fn count_not_in(a: &[usize], b: &[usize]) -> usize {
+    let mut j = 0;
+    let mut count = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            count += 1;
+        }
+    }
+    count
+}
+
+impl InferenceEngine for IncrementalEngine {
+    fn apply(&mut self, update: &Update) -> Result<u64> {
+        match update {
+            Update::AddEdge(u, v) => {
+                if self.state.add_edge(*u, *v)? {
+                    self.frontier.get_mut().note(update, None);
+                }
+            }
+            Update::RemoveEdge(u, v) => {
+                if self.state.remove_edge(*u, *v)? {
+                    self.frontier.get_mut().note(update, None);
+                }
+            }
+            Update::AddNode => {
+                let id = self.state.add_node()?;
+                self.frontier.get_mut().note(update, Some(id));
+            }
+        }
+        Ok(self.state.graph_version())
+    }
+
+    fn infer(&mut self) -> Result<Mat> {
+        let plan = self.plan_round();
+        if plan.mode != RoundMode::Cached {
+            if let Err(e) = self.exec_round(&plan) {
+                // a half-written round must never serve: stale everything
+                // and drop the planned layout (it assumed a live cache)
+                self.cache.invalidate_all();
+                self.seeded = false;
+                self.frontier.get_mut().clear();
+                *self.plan_cache.get_mut() = None;
+                return Err(e);
+            }
+            self.frontier.get_mut().clear();
+            if plan.mode == RoundMode::Full {
+                self.seeded = true;
+            }
+        }
+        self.last_stats = Some(self.round_accounting(&plan));
+        self.rounds += 1;
+
+        // serve from the cache: active rows, zeros outside this shard's
+        // validity region (same contract as the other shard engines)
+        let n = self.active();
+        let k = self.num_layers();
+        let classes = self.layers[k - 1].out_w;
+        let mut out = Mat::zeros(n, classes);
+        for i in 0..n {
+            if let Some(row) = self.cache.row(k - 1, i) {
+                out.row_mut(i).copy_from_slice(row);
+            }
+        }
+        Ok(out)
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.active()
+    }
+
+    /// Live halo imports, recosted from the upcoming round's input rings
+    /// — O(frontier) under churn, 0 for cache-served rounds.
+    fn halo_imports(&self) -> Option<usize> {
+        Some(self.plan_round().halo)
+    }
+
+    fn round_stats(&mut self) -> Option<RoundStats> {
+        self.last_stats.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::synthesize;
+    use crate::ops::build::GnnDims;
+    use crate::ops::exec;
+
+    fn ds() -> Dataset {
+        synthesize("inc", 40, 60, 4, 12, 29)
+    }
+
+    fn serial() -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::serial())
+    }
+
+    /// Force the incremental path (tests of the frontier execution
+    /// itself, not of the cost model's crossover point).
+    fn never_fall_back() -> IncrementalConfig {
+        IncrementalConfig { cost_margin: f64::INFINITY, tile_min: 8 }
+    }
+
+    /// Reference logits via the full-graph oracle at the engine's exact
+    /// bindings (same synthesized weights, snapshot-rebuilt norm).
+    fn oracle(eng: &IncrementalEngine) -> Mat {
+        let cap = eng.state.capacity;
+        let ds = &eng.state.dataset;
+        let classes = eng.layers.last().unwrap().out_w;
+        let dims = GnnDims::model(cap, ds.graph.num_edges(), ds.num_features(), classes);
+        let g = crate::ops::build::gcn_stagr(dims, "grad");
+        let mut b = crate::fleet::engine::synthesize_weights(
+            ds.num_features(),
+            classes,
+            cap,
+        );
+        b.insert(
+            "norm".into(),
+            crate::tensor::Tensor::from_mat(
+                &eng.state.snapshot_graph().norm_adjacency(cap),
+            ),
+        );
+        b.insert("x".into(), crate::tensor::Tensor::from_mat(&eng.x_pad));
+        let full = exec::execute_mat(&g, &b).unwrap();
+        let n = eng.active();
+        Mat::from_fn(n, full.cols, |i, j| full[(i, j)])
+    }
+
+    #[test]
+    fn first_round_is_full_then_cached() {
+        let ds = ds();
+        let mut eng = IncrementalEngine::full(&ds, 48, serial(),
+                                              IncrementalConfig::default()).unwrap();
+        let a = eng.infer().unwrap();
+        let rs = eng.round_stats().unwrap();
+        assert_eq!(rs.recomputed_rows, 40, "cold cache → full recompute");
+        assert_eq!(rs.cache_hits, 0);
+        let b = eng.infer().unwrap();
+        let rs = eng.round_stats().unwrap();
+        assert_eq!(rs.recomputed_rows, 0, "no churn → pure cache serve");
+        assert_eq!(rs.cache_hits, 40);
+        assert_eq!(a, b, "cached round must reproduce the full round");
+        let want = oracle(&eng);
+        assert!(want.max_abs_diff(&a) < 1e-4, "drift {}", want.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn single_edge_churn_recomputes_a_small_frontier() {
+        // sparse 80-node graph: a 2-hop ball around one edge cannot come
+        // near covering it
+        let ds = synthesize("inc-sparse", 80, 60, 4, 12, 29);
+        let mut eng =
+            IncrementalEngine::full(&ds, 88, serial(), never_fall_back()).unwrap();
+        let _ = eng.infer().unwrap();
+        let _ = eng.round_stats();
+        // remove-then-add guarantees seeds whether or not the edge existed
+        eng.apply(&Update::RemoveEdge(0, 40)).unwrap();
+        eng.apply(&Update::AddEdge(0, 40)).unwrap();
+        let got = eng.infer().unwrap();
+        let rs = eng.round_stats().unwrap();
+        assert!(rs.recomputed_rows < 40, "frontier must not cover the graph");
+        assert!(rs.recomputed_rows > 0);
+        assert!(rs.frontier > 0 && rs.frontier < 40);
+        assert!(rs.cache_hits > 0, "untouched rows must serve from cache");
+        let want = oracle(&eng);
+        assert!(want.max_abs_diff(&got) < 1e-4, "drift {}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn add_node_activates_and_answers() {
+        let ds = ds();
+        let mut eng =
+            IncrementalEngine::full(&ds, 48, serial(), never_fall_back()).unwrap();
+        let _ = eng.infer().unwrap();
+        eng.apply(&Update::AddNode).unwrap();
+        eng.apply(&Update::AddEdge(40, 3)).unwrap();
+        let got = eng.infer().unwrap();
+        assert_eq!(got.rows, 41);
+        let want = oracle(&eng);
+        assert!(want.max_abs_diff(&got) < 1e-4);
+    }
+
+    #[test]
+    fn margin_zero_always_takes_the_full_path() {
+        let ds = ds();
+        let mut eng = IncrementalEngine::full(
+            &ds, 48, serial(),
+            IncrementalConfig { cost_margin: 0.0, ..Default::default() },
+        ).unwrap();
+        let _ = eng.infer().unwrap();
+        let _ = eng.round_stats();
+        eng.apply(&Update::RemoveEdge(1, 30)).unwrap();
+        eng.apply(&Update::AddEdge(1, 30)).unwrap();
+        let got = eng.infer().unwrap();
+        let rs = eng.round_stats().unwrap();
+        assert_eq!(rs.recomputed_rows, 40, "margin 0 must force full recompute");
+        let want = oracle(&eng);
+        assert!(want.max_abs_diff(&got) < 1e-4);
+    }
+
+    #[test]
+    fn duplicate_updates_do_not_dirty_the_cache() {
+        let ds = ds();
+        let mut eng = IncrementalEngine::full(&ds, 48, serial(),
+                                              IncrementalConfig::default()).unwrap();
+        let _ = eng.infer().unwrap();
+        // an edge that certainly exists after we add it once
+        eng.apply(&Update::AddEdge(2, 17)).unwrap();
+        let _ = eng.infer().unwrap();
+        let _ = eng.round_stats();
+        eng.apply(&Update::AddEdge(2, 17)).unwrap(); // duplicate
+        let _ = eng.infer().unwrap();
+        let rs = eng.round_stats().unwrap();
+        assert_eq!(rs.recomputed_rows, 0, "no-op update must stay cache-served");
+    }
+
+    #[test]
+    fn shard_engine_computes_owned_rows_and_reports_halo() {
+        let ds = ds();
+        let mut full =
+            IncrementalEngine::full(&ds, 48, serial(), never_fall_back()).unwrap();
+        let mut shard =
+            IncrementalEngine::shard(&ds, 48, 0..15, serial(), never_fall_back())
+                .unwrap();
+        // cold cache: the upcoming full round imports the boundary ring
+        assert!(shard.halo_imports().unwrap() > 0, "cold shard must import halo");
+        assert_eq!(full.halo_imports(), Some(0), "sole owner imports nothing");
+        let a = full.infer().unwrap();
+        let b = shard.infer().unwrap();
+        for i in 0..15 {
+            for j in 0..a.cols {
+                assert_eq!(a[(i, j)], b[(i, j)], "owned row {i} diverged");
+            }
+        }
+        // cache-served rounds ship nothing over the link
+        assert_eq!(shard.halo_imports(), Some(0));
+        // churn at the boundary: the shard must track the full engine,
+        // and the halo recost follows the live frontier (remove-then-add
+        // guarantees seeds on both engines whatever the synthetic graph)
+        for u in [14usize, 15, 16] {
+            for upd in [Update::RemoveEdge(u, u + 4), Update::AddEdge(u, u + 4)] {
+                full.apply(&upd).unwrap();
+                shard.apply(&upd).unwrap();
+            }
+        }
+        assert!(shard.halo_imports().unwrap() > 0, "boundary churn needs halo");
+        let a = full.infer().unwrap();
+        let b = shard.infer().unwrap();
+        for i in 0..15 {
+            for j in 0..a.cols {
+                let d = (a[(i, j)] - b[(i, j)]).abs();
+                assert!(d < 1e-5, "post-churn owned row {i} drift {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn compile_once_tiles_are_reused_across_rounds() {
+        let ds = ds();
+        let mut eng =
+            IncrementalEngine::full(&ds, 48, serial(), never_fall_back()).unwrap();
+        let _ = eng.infer().unwrap();
+        let after_full = eng.compiled_tiles();
+        for i in 0..6 {
+            eng.apply(&Update::AddEdge(i, i + 9)).unwrap();
+            let _ = eng.infer().unwrap();
+        }
+        assert!(eng.compiled_tiles() >= after_full);
+        for i in 0..6 {
+            eng.apply(&Update::RemoveEdge(i, i + 9)).unwrap();
+            let _ = eng.infer().unwrap();
+        }
+        // 2 layers × a handful of pow2 buckets — NOT a tile per frontier
+        assert!(
+            eng.compiled_tiles() <= 10,
+            "{} tiles for 13 rounds: buckets are not being reused",
+            eng.compiled_tiles()
+        );
+    }
+}

@@ -26,7 +26,8 @@
 //! | [`config`] | TOML-subset parser + typed hardware/run configs |
 //! | [`graph`] | graph substrate: CSR, PreG/SymG/NodePad/GrAd/GraSp, datasets |
 //! | [`ops`] | OpenVINO-like op IR, GNN graph builders, EffOp/GrAx rewrites, reference executor, [`ops::plan`] compile-once plans |
-//! | [`engine`] | planned executor: buffer arena, fused chains, INT8 kernels, worker pool |
+//! | [`engine`] | planned executor: buffer arena, fused chains, INT8 kernels, worker pool, gather/scatter tile runner |
+//! | [`incremental`] | delta-driven inference: dirty-frontier recompute over a layer-activation cache |
 //! | [`npu`] | NPU simulator: DPU/DSP/SRAM/DMA/energy; CPU & GPU device models |
 //! | [`quant`] | QuantGr: symmetric static INT8 |
 //! | [`coordinator`] | GraphSplit partitioner, planner, executor, batcher, CacheG |
@@ -56,6 +57,20 @@
 //! overtakes the compute win, which is GraphSplit's §IV tradeoff lifted
 //! from ops to nodes. The single-leader [`server`] is the 1-shard
 //! special case (no halo, unbounded admission).
+//!
+//! ## Incremental serving (the `incremental` layer)
+//!
+//! Churn-dominated workloads mutate a few edges per query; a k-layer
+//! GNN output can only change inside the k-hop ball of a mutation, so
+//! the delta-driven engine recomputes `O(|frontier|)` rows per round
+//! instead of `O(|V|)`, serving everything else from an epoch-versioned
+//! layer-activation cache (CacheG generalized from masks to
+//! activations). The frontier grows with churn — per round the engine
+//! compares the bucketed-tile cost of the frontier pass against the
+//! full pass and **falls back to full recompute past the crossover**,
+//! so small-churn wins never become large-churn regressions. In a
+//! fleet, each shard maintains layer `l` for `B(owned, k−1−l)` and
+//! recosts its halo imports from the live frontier rings.
 
 pub mod bench;
 pub mod cli;
@@ -64,6 +79,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod fleet;
 pub mod graph;
+pub mod incremental;
 pub mod metrics;
 pub mod npu;
 pub mod ops;

@@ -101,7 +101,8 @@ fn main() -> Result<()> {
         Some("serve") => {
             let events = args.usize_opt("events", 2000)?;
             let query_ratio = args.f64_opt("query-ratio", 0.3)?;
-            serve_demo(&artifacts, &dataset, events, query_ratio)?;
+            let engine = args.str_opt("engine", "coordinator");
+            serve_demo(&artifacts, &dataset, events, query_ratio, &engine)?;
         }
         Some("fleet") => {
             let shards = args.usize_opt("shards", 4)?;
@@ -131,9 +132,11 @@ subcommands:
   accuracy           accuracy table over all artifacts (--dataset cora)
   split              GraphSplit placement report (--model, --variant)
   serve              dynamic knowledge-graph serving demo
+                     (--engine coordinator|plan|incremental; plan and
+                      incremental run offline, no artifacts needed)
   fleet              sharded multi-device serving demo (offline, no artifacts)
                      (--shards N --devices series2,cpu,… --nodes --edges
-                      --events --query-ratio --engine local|plan)
+                      --events --query-ratio --engine local|plan|incremental)
 
 common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
                 --artifacts DIR
@@ -174,24 +177,67 @@ fn accuracy_table(c: &mut Coordinator, dataset: &str) -> Result<Table> {
     Ok(t)
 }
 
-/// Dynamic KG serving demo against the real PJRT artifacts.
+/// Dynamic KG serving demo. `--engine coordinator` serves the real PJRT
+/// artifacts; `--engine plan` and `--engine incremental` run fully
+/// offline at the dataset's published scale (synthesized twin +
+/// deterministic weights), the latter through the delta-driven
+/// [`grannite::incremental::IncrementalEngine`].
 fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
-              query_ratio: f64) -> Result<()> {
+              query_ratio: f64, engine: &str) -> Result<()> {
     use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
     use grannite::server::{CoordinatorEngine, ServerConfig, ServerHandle, Update};
 
-    let artifact = format!("gcn_grad_{dataset}");
-    let ds_name = dataset.to_string();
-    let artifacts = artifacts.to_path_buf();
-    let server = ServerHandle::spawn(
-        move || {
-            let coordinator = Coordinator::open(&artifacts, &ds_name)?;
-            Ok(CoordinatorEngine { coordinator, artifact })
-        },
-        ServerConfig::default(),
-    );
-
     let spec = datasets::spec(dataset)?;
+    let server = match engine {
+        "coordinator" => {
+            let artifact = format!("gcn_grad_{dataset}");
+            let ds_name = dataset.to_string();
+            let artifacts = artifacts.to_path_buf();
+            ServerHandle::spawn(
+                move || {
+                    let coordinator = Coordinator::open(&artifacts, &ds_name)?;
+                    Ok(CoordinatorEngine { coordinator, artifact })
+                },
+                ServerConfig::default(),
+            )
+        }
+        "plan" => {
+            let ds = datasets::synthesize(
+                "serve", spec.nodes, spec.edges, spec.classes, spec.features, 42,
+            );
+            let capacity = spec.capacity;
+            ServerHandle::spawn(
+                move || {
+                    let pool =
+                        std::sync::Arc::new(grannite::engine::WorkerPool::serial());
+                    grannite::fleet::PlanEngine::full(&ds, capacity, pool)
+                },
+                ServerConfig::default(),
+            )
+        }
+        "incremental" => {
+            let ds = datasets::synthesize(
+                "serve", spec.nodes, spec.edges, spec.classes, spec.features, 42,
+            );
+            let capacity = spec.capacity;
+            ServerHandle::spawn(
+                move || {
+                    let pool =
+                        std::sync::Arc::new(grannite::engine::WorkerPool::serial());
+                    grannite::incremental::IncrementalEngine::full(
+                        &ds,
+                        capacity,
+                        pool,
+                        grannite::incremental::IncrementalConfig::default(),
+                    )
+                },
+                ServerConfig::default(),
+            )
+        }
+        other => bail!("--engine must be coordinator|plan|incremental, got {other:?}"),
+    };
+    println!("engine: {engine}");
+
     let stream = KnowledgeGraphStream::new(spec.nodes, spec.capacity, query_ratio, 42);
     let mut responses = Vec::new();
     for ev in stream.take(events) {
@@ -213,6 +259,7 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
     println!(
         "latency: {}",
         snap.latency
+            .as_ref()
             .map(|s| s.to_string())
             .unwrap_or_else(|| "n/a".into())
     );
@@ -220,6 +267,19 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
         "mask updates: {}  mean batch: {:.1}  throughput: {:.1} q/s",
         snap.mask_updates, snap.mean_batch, snap.throughput_qps
     );
+    if snap.eligible_rows > 0 {
+        let fr = snap
+            .frontier
+            .as_ref()
+            .map(|f| format!("{:.1}/{:.0}", f.mean, f.max))
+            .unwrap_or_else(|| "n/a".into());
+        println!(
+            "incremental: recompute ratio {:.3}  cache hit rate {:.3}  \
+             frontier mean/max {fr}",
+            snap.recompute_ratio(),
+            snap.cache_hit_rate()
+        );
+    }
     server.shutdown()?;
     Ok(())
 }
@@ -246,7 +306,13 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
     let fleet = match engine {
         "local" => Fleet::spawn_local(&ds, capacity, &cfg)?,
         "plan" => Fleet::spawn_planned(&ds, capacity, &cfg)?,
-        other => bail!("--engine must be local|plan, got {other:?}"),
+        "incremental" => Fleet::spawn_incremental(
+            &ds,
+            capacity,
+            &cfg,
+            grannite::incremental::IncrementalConfig::default(),
+        )?,
+        other => bail!("--engine must be local|plan|incremental, got {other:?}"),
     };
     println!("engine: {engine}");
 
@@ -292,7 +358,8 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
 
     let mut pt = Table::new(
         "per-shard serving metrics",
-        &["shard", "queries", "rejected", "p50", "p99", "halo bytes"],
+        &["shard", "queries", "rejected", "p50", "p99", "halo bytes",
+          "recompute", "cache hit"],
     );
     for snap in fleet.shard_metrics() {
         let (p50, p99) = snap
@@ -300,6 +367,14 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
             .as_ref()
             .map(|l| (grannite::util::human_us(l.p50), grannite::util::human_us(l.p99)))
             .unwrap_or_else(|| ("n/a".into(), "n/a".into()));
+        let (recomp, hit) = if snap.eligible_rows > 0 {
+            (
+                format!("{:.3}", snap.recompute_ratio()),
+                format!("{:.3}", snap.cache_hit_rate()),
+            )
+        } else {
+            ("n/a".into(), "n/a".into())
+        };
         pt.row(&[
             snap.shard.map(|s| format!("#{s}")).unwrap_or_default(),
             snap.queries.to_string(),
@@ -307,6 +382,8 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
             p50,
             p99,
             grannite::util::human_bytes(snap.halo_bytes),
+            recomp,
+            hit,
         ]);
     }
     pt.print();
@@ -321,6 +398,13 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
         grannite::util::human_bytes(agg.halo_bytes),
         agg.halo_rounds
     );
+    if agg.eligible_rows > 0 {
+        println!(
+            "incremental: recompute ratio {:.3}  cache hit rate {:.3}",
+            agg.recompute_ratio(),
+            agg.cache_hit_rate()
+        );
+    }
     println!("version vector: sequenced {expected:?} applied {applied:?}");
     fleet.shutdown()?;
     Ok(())

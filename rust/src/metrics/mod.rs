@@ -18,6 +18,27 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// One inference round's incremental-execution accounting, reported by
+/// delta-aware engines ([`crate::server::InferenceEngine::round_stats`])
+/// and recorded by the shard worker after each round. The accounting
+/// rule: every activation row the round consumed — as a layer input or
+/// as a served output — is either a cache **hit** (reused) or a **miss**
+/// (had to be recomputed).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundStats {
+    /// Output rows recomputed this round (0 for cache-served rounds).
+    pub recomputed_rows: usize,
+    /// Output rows the round was responsible for (active ∩ owned).
+    pub eligible_rows: usize,
+    /// Dirty-frontier size that drove the round (= eligible on full
+    /// fallback, 0 on pure cache hits).
+    pub frontier: usize,
+    /// Activation rows served from the layer cache.
+    pub cache_hits: usize,
+    /// Activation rows that had to be recomputed.
+    pub cache_misses: usize,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     /// Shard label. Every worker-owned sink carries one — the
@@ -34,6 +55,12 @@ struct Inner {
     halo_bytes: usize,
     halo_us: f64,
     halo_rounds: usize,
+    /// Incremental-execution accounting (delta-aware engines).
+    recomputed_rows: usize,
+    eligible_rows: usize,
+    cache_row_hits: usize,
+    cache_row_misses: usize,
+    frontier_sizes: Vec<f64>,
     started: Option<Instant>,
 }
 
@@ -52,6 +79,17 @@ pub struct Snapshot {
     pub halo_us: f64,
     /// Inference rounds that performed a halo exchange.
     pub halo_rounds: usize,
+    /// Output rows recomputed by delta-aware engines (raw counter; see
+    /// [`Snapshot::recompute_ratio`]).
+    pub recomputed_rows: usize,
+    /// Output rows those engines were responsible for across rounds.
+    pub eligible_rows: usize,
+    /// Activation rows served from the layer cache.
+    pub cache_row_hits: usize,
+    /// Activation rows that had to be recomputed.
+    pub cache_row_misses: usize,
+    /// Dirty-frontier size distribution (one sample per round).
+    pub frontier: Option<Stats>,
     pub latency: Option<Stats>,
     pub queue: Option<Stats>,
     pub mean_batch: f64,
@@ -99,6 +137,16 @@ impl Metrics {
         i.halo_rounds += 1;
     }
 
+    /// Record one inference round's incremental-execution accounting.
+    pub fn record_round(&self, rs: &RoundStats) {
+        let mut i = self.inner.lock().unwrap();
+        i.recomputed_rows += rs.recomputed_rows;
+        i.eligible_rows += rs.eligible_rows;
+        i.cache_row_hits += rs.cache_hits;
+        i.cache_row_misses += rs.cache_misses;
+        i.frontier_sizes.push(rs.frontier as f64);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let i = self.inner.lock().unwrap();
         Self::snapshot_inner(&i)
@@ -118,6 +166,15 @@ impl Metrics {
             halo_bytes: i.halo_bytes,
             halo_us: i.halo_us,
             halo_rounds: i.halo_rounds,
+            recomputed_rows: i.recomputed_rows,
+            eligible_rows: i.eligible_rows,
+            cache_row_hits: i.cache_row_hits,
+            cache_row_misses: i.cache_row_misses,
+            frontier: if i.frontier_sizes.is_empty() {
+                None
+            } else {
+                Some(Stats::from_samples(&i.frontier_sizes))
+            },
             latency: if i.latencies_us.is_empty() {
                 None
             } else {
@@ -151,20 +208,28 @@ impl Metrics {
         let mut lat: Vec<f64> = Vec::new();
         let mut que: Vec<f64> = Vec::new();
         let mut batches: Vec<usize> = Vec::new();
+        let mut frontiers: Vec<f64> = Vec::new();
         let (mut queries, mut rejected, mut mask_updates) = (0usize, 0usize, 0usize);
         let (mut halo_bytes, mut halo_us, mut halo_rounds) = (0usize, 0.0f64, 0usize);
+        let (mut recomputed, mut eligible) = (0usize, 0usize);
+        let (mut row_hits, mut row_misses) = (0usize, 0usize);
         let mut elapsed = 1e-9f64;
         for m in sinks {
             let i = m.inner.lock().unwrap();
             lat.extend_from_slice(&i.latencies_us);
             que.extend_from_slice(&i.queue_us);
             batches.extend_from_slice(&i.batch_sizes);
+            frontiers.extend_from_slice(&i.frontier_sizes);
             queries += i.queries;
             rejected += i.rejected;
             mask_updates += i.mask_updates;
             halo_bytes += i.halo_bytes;
             halo_us += i.halo_us;
             halo_rounds += i.halo_rounds;
+            recomputed += i.recomputed_rows;
+            eligible += i.eligible_rows;
+            row_hits += i.cache_row_hits;
+            row_misses += i.cache_row_misses;
             if let Some(s) = i.started {
                 elapsed = elapsed.max(s.elapsed().as_secs_f64());
             }
@@ -177,6 +242,15 @@ impl Metrics {
             halo_bytes,
             halo_us,
             halo_rounds,
+            recomputed_rows: recomputed,
+            eligible_rows: eligible,
+            cache_row_hits: row_hits,
+            cache_row_misses: row_misses,
+            frontier: if frontiers.is_empty() {
+                None
+            } else {
+                Some(Stats::from_samples(&frontiers))
+            },
             latency: if lat.is_empty() { None } else { Some(Stats::from_samples(&lat)) },
             queue: if que.is_empty() { None } else { Some(Stats::from_samples(&que)) },
             mean_batch: if batches.is_empty() {
@@ -191,6 +265,27 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// Fraction of output rows delta-aware engines recomputed (1.0 = no
+    /// reuse, 0.0 = fully cache-served; 0 when no rounds were recorded).
+    pub fn recompute_ratio(&self) -> f64 {
+        if self.eligible_rows == 0 {
+            0.0
+        } else {
+            self.recomputed_rows as f64 / self.eligible_rows as f64
+        }
+    }
+
+    /// Fraction of consumed activation rows served from the layer cache
+    /// (0 when no rounds were recorded).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_row_hits + self.cache_row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_row_hits as f64 / total as f64
+        }
+    }
+
     /// Aggregate-level merge for snapshots whose raw samples are gone
     /// (e.g. collected from remote shards). Counters are exact; latency
     /// percentiles are conservative (max of the inputs) and means are
@@ -208,6 +303,11 @@ impl Snapshot {
             halo_bytes: self.halo_bytes + other.halo_bytes,
             halo_us: self.halo_us + other.halo_us,
             halo_rounds: self.halo_rounds + other.halo_rounds,
+            recomputed_rows: self.recomputed_rows + other.recomputed_rows,
+            eligible_rows: self.eligible_rows + other.eligible_rows,
+            cache_row_hits: self.cache_row_hits + other.cache_row_hits,
+            cache_row_misses: self.cache_row_misses + other.cache_row_misses,
+            frontier: merge_stats(&self.frontier, &other.frontier),
             latency: merge_stats(&self.latency, &other.latency),
             queue: merge_stats(&self.queue, &other.queue),
             mean_batch: if b1 + b2 == 0 {
@@ -333,6 +433,71 @@ mod tests {
         assert_eq!(lat.n, 2);
         assert_eq!(lat.max, 50.0);
         assert!((lat.mean - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_stats_drive_the_incremental_gauges() {
+        let m = Metrics::new_shard(0);
+        // an incremental round: 10 of 100 rows recomputed, 40/50 reads hit
+        m.record_round(&RoundStats {
+            recomputed_rows: 10,
+            eligible_rows: 100,
+            frontier: 10,
+            cache_hits: 40,
+            cache_misses: 10,
+        });
+        // a full-fallback round: everything recomputed, nothing reused
+        m.record_round(&RoundStats {
+            recomputed_rows: 100,
+            eligible_rows: 100,
+            frontier: 90,
+            cache_hits: 0,
+            cache_misses: 100,
+        });
+        let s = m.snapshot();
+        assert!((s.recompute_ratio() - 110.0 / 200.0).abs() < 1e-12);
+        assert!((s.cache_hit_rate() - 40.0 / 150.0).abs() < 1e-12);
+        let fr = s.frontier.unwrap();
+        assert_eq!(fr.n, 2);
+        assert_eq!(fr.max, 90.0);
+    }
+
+    #[test]
+    fn incremental_gauges_survive_merged_and_merge() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        a.record_round(&RoundStats {
+            recomputed_rows: 5,
+            eligible_rows: 50,
+            frontier: 5,
+            cache_hits: 45,
+            cache_misses: 5,
+        });
+        b.record_round(&RoundStats {
+            recomputed_rows: 50,
+            eligible_rows: 50,
+            frontier: 50,
+            cache_hits: 0,
+            cache_misses: 50,
+        });
+        let merged = Metrics::merged([&a, &b]);
+        assert_eq!(merged.recomputed_rows, 55);
+        assert_eq!(merged.eligible_rows, 100);
+        assert!((merged.recompute_ratio() - 0.55).abs() < 1e-12);
+        assert_eq!(merged.frontier.as_ref().unwrap().n, 2);
+        // aggregate-level merge keeps the counters exact too
+        let coarse = a.snapshot().merge(&b.snapshot());
+        assert_eq!(coarse.recomputed_rows, 55);
+        assert_eq!(coarse.cache_row_hits, 45);
+        assert!((coarse.cache_hit_rate() - 45.0 / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_gauges_read_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.recompute_ratio(), 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert!(s.frontier.is_none());
     }
 
     #[test]

@@ -187,6 +187,34 @@ pub fn gcn_quant(d: GnnDims, s: QuantScales) -> OpGraph {
     g
 }
 
+/// One GCN layer over a **node subset** — the unit the incremental
+/// engine's gather/scatter path executes ([`crate::incremental`]).
+///
+/// `rows` is the padded frontier tile (output rows to recompute), `ring`
+/// the padded one-hop input ring. The caller gathers `h_ring` (ring rows
+/// of the layer input) and `norm_sub` (the `rows × ring` slice of the
+/// GrAd norm mask) into the tile; the graph then mirrors one
+/// [`gcn_stagr`] layer exactly — combination MatMul, aggregation MatMul,
+/// bias add, optional ReLU — so a frontier recompute is bit-comparable
+/// to the same rows of a full-graph pass (padding columns are zero in
+/// `norm_sub`, contributing exact-zero terms).
+pub fn gcn_layer_tile(rows: usize, ring: usize, in_w: usize, out_w: usize,
+                      relu: bool) -> OpGraph {
+    let mut g = OpGraph::new(format!("gcn_tile_{rows}x{ring}_{in_w}to{out_w}"));
+    let h = g.input("h_ring", &[ring, in_w], DType::F32, Stage::Compute);
+    let norm = g.input("norm_sub", &[rows, ring], DType::F32, Stage::Compute);
+    let w = g.input("w", &[in_w, out_w], DType::F32, Stage::Compute);
+    let b = g.input("b", &[1, out_w], DType::F32, Stage::Compute);
+    let mm = g.op(OpKind::MatMul, &[h, w], &[ring, out_w], Stage::Compute);
+    let agg = g.op(OpKind::MatMul, &[norm, mm], &[rows, out_w], Stage::Compute);
+    let mut out = g.op(OpKind::Add, &[agg, b], &[rows, out_w], Stage::Compute);
+    if relu {
+        out = g.op(OpKind::Relu, &[out], &[rows, out_w], Stage::Compute);
+    }
+    g.set_output(out);
+    g
+}
+
 // ---------------------------------------------------------------------------
 // GAT
 // ---------------------------------------------------------------------------

@@ -52,6 +52,13 @@ pub trait InferenceEngine {
     fn halo_imports(&self) -> Option<usize> {
         None
     }
+    /// Delta-aware engines drain the accounting of their last inference
+    /// round (recomputed rows, frontier size, cache hits) here; the
+    /// shard worker records it after every round. `None` (the default)
+    /// means the engine recomputes everything and has nothing to report.
+    fn round_stats(&mut self) -> Option<crate::metrics::RoundStats> {
+        None
+    }
 }
 
 /// GrAd structure updates.
