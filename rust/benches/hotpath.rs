@@ -1,13 +1,23 @@
 //! Hot-path profiling bench (EXPERIMENTS.md §Perf): the request-path
 //! pieces that run per inference/update, measured in isolation — plus the
 //! headline comparison: **planned engine vs reference executor** at Cora
-//! scale (2708 nodes), the compile-once/run-many payoff.
+//! scale (2708 nodes), the compile-once/run-many payoff, and the
+//! sparse-vs-dense aggregation split.
 //!
 //! ```sh
 //! cargo bench --bench hotpath                     # full run
 //! cargo bench --bench hotpath -- --quick          # CI smoke sizes
+//! cargo bench --bench hotpath -- --nodes 50000    # node-count sweep
 //! cargo bench --bench hotpath -- --json out.json  # machine-readable
 //! ```
+//!
+//! `--nodes N` scales the graph. Above [`DENSE_BYTES_BUDGET`] the
+//! dense-adjacency cases (norm rebuild, dense norm@h, ZVC codec, the
+//! dense-bound reference/planned comparison) are **skipped with a logged
+//! note** instead of allocating n² floats — at those sizes the density is
+//! far below the SpMM threshold and the sparse path is the only one that
+//! exists in production, so the bench measures CSR construction and the
+//! sparse planned engine instead.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -15,23 +25,32 @@ use std::sync::Arc;
 use grannite::bench::{banner, run_bench};
 use grannite::cli::Args;
 use grannite::coordinator::ModelState;
-use grannite::engine::{PlanInstance, WorkerPool};
+use grannite::engine::{kernels, PlanInstance, WorkerPool};
 use grannite::graph::datasets::synthesize;
 use grannite::graph::{DynamicGraph, Graph};
-use grannite::ops::build::{self, GnnDims, QuantScales};
+use grannite::ops::build::{self, Aggregation, GnnDims, QuantScales};
 use grannite::ops::exec::{self, Bindings};
 use grannite::ops::plan::ExecPlan;
 use grannite::tensor::{Mat, Tensor};
 use grannite::util::timing::Stats;
-use grannite::util::{json_escape, Rng};
+use grannite::util::{human_bytes, json_escape, Rng};
 
-fn gcn_bindings(ds: &grannite::graph::datasets::Dataset, d: GnnDims, seed: u64) -> Bindings {
+/// Ceiling on any single dense capacity² mask the bench will allocate
+/// (512 MB of f32) — past it the dense-adjacency cases skip.
+const DENSE_BYTES_BUDGET: usize = 512 * 1024 * 1024;
+
+fn gcn_bindings(ds: &grannite::graph::datasets::Dataset, d: GnnDims, seed: u64,
+                dense_norm: bool) -> Bindings {
     let mut rng = Rng::new(seed);
     let mut rand = |r: usize, c: usize| {
         Mat::from_fn(r, c, |_, _| (rng.f64() * 0.6 - 0.3) as f32)
     };
     let mut b: Bindings = BTreeMap::new();
-    b.insert("norm".into(), Tensor::from_mat(&ds.graph.norm_adjacency(d.n)));
+    if dense_norm {
+        b.insert("norm".into(), Tensor::from_mat(&ds.graph.norm_adjacency(d.n)));
+    } else {
+        b.insert("norm".into(), Tensor::from_csr(ds.graph.norm_csr(d.n)));
+    }
     b.insert("x".into(), Tensor::from_mat(&ds.features));
     b.insert("w1".into(), Tensor::from_mat(&rand(d.f, d.hidden)));
     b.insert("b1".into(), Tensor::from_mat(&rand(1, d.hidden)));
@@ -44,11 +63,32 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let quick = args.has("quick");
     let json_path = args.options.get("json").cloned();
-    banner(if quick {
-        "hot-path microbenchmarks (L3, quick)"
-    } else {
-        "hot-path microbenchmarks (L3)"
-    });
+    let nodes = args.usize_opt("nodes", 2708)?;
+    let edges = args.usize_opt(
+        "edges",
+        if nodes == 2708 { 5429 } else { nodes * 2 },
+    )?;
+    let features = if nodes == 2708 { 1433 } else { 256.min(nodes) };
+    let capacity = nodes + (nodes / 10).max(1);
+    banner(&format!(
+        "hot-path microbenchmarks (L3{}, {nodes} nodes / {edges} edges)",
+        if quick { ", quick" } else { "" }
+    ));
+
+    // Dense-adjacency gate: density + bytes of one capacity² f32 mask.
+    let density = (2.0 * edges as f64 + nodes as f64) / (nodes as f64 * nodes as f64);
+    let dense_bytes = capacity * capacity * 4;
+    let dense_ok = dense_bytes <= DENSE_BYTES_BUDGET;
+    if !dense_ok {
+        println!(
+            "note: skipping dense-adjacency cases — a {capacity}² mask needs {} \
+             (> {} budget) and density {density:.5} is far below the SpMM \
+             threshold {}; running the sparse path only",
+            human_bytes(dense_bytes),
+            human_bytes(DENSE_BYTES_BUDGET),
+            build::SPMM_DENSITY_THRESHOLD,
+        );
+    }
 
     let mut cases: Vec<(String, Stats)> = Vec::new();
     let mut record = |name: &str, stats: Stats| {
@@ -57,134 +97,219 @@ fn main() -> anyhow::Result<()> {
     // (warmup, iters) per cost tier, shrunk in --quick mode
     let tier = |w: usize, n: usize| if quick { (1, 3.min(n)) } else { (w, n) };
 
-    // 1. GrAd incremental mask update at Cora scale
-    let ds = synthesize("hot", 2708, 5429, 7, 1433, 1);
-    let mut dg = DynamicGraph::new(&ds.graph, 3000)?;
+    // 1. GrAd incremental mask update
+    let ds = synthesize("hot", nodes, edges, 7, features, 1);
+    let mut dg = DynamicGraph::new(&ds.graph, capacity)?;
+    if dense_ok {
+        let _ = dg.norm(); // materialize so updates take the in-place path
+    }
     let mut rng = Rng::new(7);
     let (w, n) = tier(10, 200);
     record(
         "grad_update",
-        run_bench("GrAd add+remove edge (cap 3000)", w, n, || {
-            let u = rng.usize(2708);
-            let v = (u + 1 + rng.usize(2706)) % 2708;
-            let _ = dg.add_edge(u.min(v), u.max(v));
-            let _ = dg.remove_edge(u.min(v), u.max(v));
-        }),
+        run_bench(
+            &format!("GrAd add+remove edge (cap {capacity})"),
+            w,
+            n,
+            || {
+                let u = rng.usize(nodes);
+                let v = (u + 1 + rng.usize(nodes - 2)) % nodes;
+                let _ = dg.add_edge(u.min(v), u.max(v));
+                let _ = dg.remove_edge(u.min(v), u.max(v));
+            },
+        ),
     );
 
-    // 2. full norm rebuild (what GrAd avoids)
     let g: Graph = ds.graph.clone();
-    let (w, n) = tier(2, 20);
+
+    // 2. norm construction: full dense rebuild (what GrAd avoids) vs the
+    //    O(n + m) CSR build the sparse path ships
+    if dense_ok {
+        let (w, n) = tier(2, 20);
+        record(
+            "norm_rebuild",
+            run_bench(&format!("full PreG norm rebuild ({nodes}²)"), w, n, || {
+                std::hint::black_box(g.norm_adjacency(capacity));
+            }),
+        );
+    }
+    let (w, n) = tier(3, 30);
     record(
-        "norm_rebuild",
-        run_bench("full PreG norm rebuild (2708²)", w, n, || {
-            std::hint::black_box(g.norm_adjacency(3000));
+        "norm_csr_build",
+        run_bench("PreG norm CSR build (O(n+m))", w, n, || {
+            std::hint::black_box(g.norm_csr(capacity));
         }),
     );
 
     // 3. CacheG binding hit vs miss
-    let mut state = ModelState::from_dataset(ds.clone(), 3000)?;
-    let _ = state.binding("norm_pad", "gcn"); // warm
+    let mut state = ModelState::from_dataset(ds.clone(), capacity)?;
+    let binding_key = if dense_ok { "norm_pad" } else { "norm_csr_pad" };
+    let _ = state.binding(binding_key, "gcn"); // warm
     let (w, n) = tier(5, 100);
     record(
         "cacheg_hit",
-        run_bench("binding('norm_pad') CacheG hit", w, n, || {
-            state.binding("norm_pad", "gcn").unwrap()
-        }),
+        run_bench(
+            &format!("binding({binding_key:?}) CacheG hit"),
+            w,
+            n,
+            || state.binding(binding_key, "gcn").unwrap(),
+        ),
     );
 
-    // 4. density-adaptive matmul (sparse mask lhs → zero-skip kernel)
-    let norm = g.norm_adjacency(2708);
-    let h = Mat::from_fn(2708, 64, |i, j| ((i * 7 + j) % 13) as f32 * 0.1);
-    let (w, n) = tier(3, 30);
-    record(
-        "sparse_matmul",
-        run_bench("sparse-aware matmul norm@h (2708²x64)", w, n, || {
-            norm.matmul(&h)
-        }),
-    );
-
-    // 5. ZVC codec at mask scale
-    let z = grannite::graph::sparsity::Zvc::compress_mat(&norm);
-    println!(
-        "  norm ZVC: {} -> {} ({:.1}x)",
-        grannite::util::human_bytes(z.dense_bytes()),
-        grannite::util::human_bytes(z.bytes()),
-        z.dense_bytes() as f64 / z.bytes() as f64
-    );
-    let (w, n) = tier(2, 20);
-    record(
-        "zvc_compress",
-        run_bench("ZVC compress norm (2708²)", w, n, || {
-            grannite::graph::sparsity::Zvc::compress_mat(&norm)
-        }),
-    );
-
-    // 6. THE HEADLINE: planned engine vs reference executor, Cora-scale
-    //    GCN end-to-end inference (same graph, same bindings).
-    let d = GnnDims::model(2708, 5429, 1433, 7);
-    let gcn = build::gcn_stagr(d, "stagr");
-    let bindings = gcn_bindings(&ds, d, 42);
-    let (w, n) = tier(2, 10);
-    let ref_stats = run_bench("reference exec::execute (Cora GCN e2e)", w, n, || {
-        exec::execute_mat(&gcn, &bindings).unwrap()
-    });
-    record("reference_exec", ref_stats.clone());
-
-    let plan = Arc::new(ExecPlan::compile(&gcn)?);
-    println!(
-        "  plan: {} steps ({} ops fused away), arena {} vs {} unshared",
-        plan.num_steps(),
-        plan.fused_away,
-        grannite::util::human_bytes(plan.arena_bytes()),
-        grannite::util::human_bytes(plan.unshared_bytes()),
-    );
+    // 4. aggregation kernels: dense norm@h vs CSR SpMM
+    let h = Mat::from_fn(nodes, 64, |i, j| ((i * 7 + j) % 13) as f32 * 0.1);
+    let csr = g.norm_csr(nodes);
     let pool = Arc::new(WorkerPool::default_parallel());
-    let mut inst = PlanInstance::new(Arc::clone(&plan), pool);
-    inst.run(&bindings)?; // compile-adjacent warmup: arena + weight caches
-    let plan_stats = run_bench("planned ExecPlan::run (Cora GCN e2e)", w, n, || {
-        inst.run(&bindings).unwrap()
-    });
-    record("planned_exec", plan_stats.clone());
-
-    let speedup = ref_stats.mean / plan_stats.mean;
-    let want = exec::execute_mat(&gcn, &bindings)?;
-    let got = inst.output_mat(0)?;
-    let diff = want.max_abs_diff(&got);
-    println!(
-        "  planned vs reference: {speedup:.2}x speedup, max|Δ| = {diff:.3e}"
+    let mut spmm_out = vec![0.0f32; nodes * 64];
+    let (w, n) = tier(3, 30);
+    let spmm_stats = run_bench(
+        &format!("CSR SpMM norm@h ({nodes}², nnz {})", csr.nnz()),
+        w,
+        n,
+        || {
+            kernels::spmm(
+                &pool, &csr.indptr, &csr.indices, &csr.values, nodes,
+                &h.data, 64, &mut spmm_out,
+            );
+        },
     );
+    record("spmm_matmul", spmm_stats.clone());
+    if dense_ok {
+        let norm = g.norm_adjacency(nodes);
+        let (w, n) = tier(3, 30);
+        let dense_stats = run_bench(
+            &format!("dense zero-skip matmul norm@h ({nodes}²x64)"),
+            w,
+            n,
+            || norm.matmul(&h),
+        );
+        record("sparse_matmul", dense_stats.clone());
+        println!(
+            "  aggregation: SpMM {:.2}x over the dense zero-skip kernel",
+            dense_stats.mean / spmm_stats.mean
+        );
+
+        // 5. ZVC codec at mask scale (dense-mask path only)
+        let z = grannite::graph::sparsity::Zvc::compress_mat(&norm);
+        println!(
+            "  norm ZVC: {} -> {} ({:.1}x); CSR: {} ({:.1}x)",
+            human_bytes(z.dense_bytes()),
+            human_bytes(z.bytes()),
+            z.dense_bytes() as f64 / z.bytes() as f64,
+            human_bytes(csr.bytes()),
+            z.dense_bytes() as f64 / csr.bytes() as f64,
+        );
+        let (w, n) = tier(2, 20);
+        record(
+            "zvc_compress",
+            run_bench(&format!("ZVC compress norm ({nodes}²)"), w, n, || {
+                grannite::graph::sparsity::Zvc::compress_mat(&norm)
+            }),
+        );
+    }
+
+    // 6. THE HEADLINE: planned engine vs reference executor, GCN
+    //    end-to-end inference (same graph, same bindings) — plus the
+    //    sparse-aggregation plan, which is the production default.
+    let d = GnnDims::model(nodes, edges, features, 7);
+    let mut headline: Option<(f64, f32)> = None; // (speedup, diff)
+    let mut sparse_vs_dense: Option<f64> = None;
+    let gcn_sparse = build::gcn_stagr_with(d, "stagr", Aggregation::Sparse);
+    let sparse_bindings = gcn_bindings(&ds, d, 42, false);
+    let sparse_plan = Arc::new(ExecPlan::compile(&gcn_sparse)?);
+    let mut sparse_inst =
+        PlanInstance::new(Arc::clone(&sparse_plan), Arc::clone(&pool));
+    sparse_inst.run(&sparse_bindings)?; // warm
+    let (w, n) = tier(2, 10);
+    let sparse_exec = run_bench(
+        &format!("planned SpMM ExecPlan::run ({nodes}-node GCN e2e)"),
+        w,
+        n,
+        || sparse_inst.run(&sparse_bindings).unwrap(),
+    );
+    record("planned_exec_sparse", sparse_exec.clone());
+
+    if dense_ok {
+        let gcn = build::gcn_stagr(d, "stagr");
+        let bindings = gcn_bindings(&ds, d, 42, true);
+        let (w, n) = tier(2, 10);
+        let ref_stats = run_bench(
+            &format!("reference exec::execute ({nodes}-node GCN e2e)"),
+            w,
+            n,
+            || exec::execute_mat(&gcn, &bindings).unwrap(),
+        );
+        record("reference_exec", ref_stats.clone());
+
+        let plan = Arc::new(ExecPlan::compile(&gcn)?);
+        println!(
+            "  plan: {} steps ({} ops fused away), arena {} vs {} unshared",
+            plan.num_steps(),
+            plan.fused_away,
+            human_bytes(plan.arena_bytes()),
+            human_bytes(plan.unshared_bytes()),
+        );
+        let mut inst = PlanInstance::new(Arc::clone(&plan), Arc::clone(&pool));
+        inst.run(&bindings)?; // compile-adjacent warmup: arena + weight caches
+        let plan_stats = run_bench(
+            &format!("planned ExecPlan::run ({nodes}-node GCN e2e)"),
+            w,
+            n,
+            || inst.run(&bindings).unwrap(),
+        );
+        record("planned_exec", plan_stats.clone());
+
+        let speedup = ref_stats.mean / plan_stats.mean;
+        let want = exec::execute_mat(&gcn, &bindings)?;
+        let got = inst.output_mat(0)?;
+        let diff = want.max_abs_diff(&got);
+        println!(
+            "  planned vs reference: {speedup:.2}x speedup, max|Δ| = {diff:.3e}"
+        );
+        headline = Some((speedup, diff));
+
+        let s = plan_stats.mean / sparse_exec.mean;
+        let sdiff = want.max_abs_diff(&sparse_inst.output_mat(0)?);
+        println!(
+            "  sparse vs dense aggregation: {s:.2}x e2e, max|Δ| = {sdiff:.3e}"
+        );
+        sparse_vs_dense = Some(s);
+        anyhow::ensure!(sdiff < 1e-4, "sparse plan drifted from the oracle");
+    }
 
     // 7. QuantGr INT8: planned i8×i8→i32 kernels vs the reference
     //    executor's rounded-f32 emulation (smaller scale — the reference
     //    QMatMul is an O(n·f·h) f64 triple loop).
-    let qd = GnnDims::model(512, 2048, 256, 7);
-    let qds = synthesize("hot-q", qd.n, qd.m, qd.classes, qd.f, 3);
-    let qg = build::gcn_quant(qd, QuantScales::default());
-    let mut qb = gcn_bindings(&qds, qd, 17);
-    let mut qrng = Rng::new(23);
-    for (name, r, c) in [("w1q", qd.f, qd.hidden), ("w2q", qd.hidden, qd.classes)] {
-        let ints = Mat::from_fn(r, c, |_, _| (qrng.usize(255) as i32 - 127) as f32);
-        qb.insert(name.into(), Tensor::from_mat(&ints));
+    let mut int8_speedup: Option<f64> = None;
+    if dense_ok {
+        let qd = GnnDims::model(512, 2048, 256, 7);
+        let qds = synthesize("hot-q", qd.n, qd.m, qd.classes, qd.f, 3);
+        let qg = build::gcn_quant(qd, QuantScales::default());
+        let mut qb = gcn_bindings(&qds, qd, 17, true);
+        let mut qrng = Rng::new(23);
+        for (name, r, c) in [("w1q", qd.f, qd.hidden), ("w2q", qd.hidden, qd.classes)] {
+            let ints = Mat::from_fn(r, c, |_, _| (qrng.usize(255) as i32 - 127) as f32);
+            qb.insert(name.into(), Tensor::from_mat(&ints));
+        }
+        let (w, n) = tier(2, 10);
+        let qref = run_bench("reference exec (512-node INT8 GCN)", w, n, || {
+            exec::execute_mat(&qg, &qb).unwrap()
+        });
+        record("reference_int8", qref.clone());
+        let qplan = Arc::new(ExecPlan::compile(&qg)?);
+        let mut qinst = PlanInstance::new(qplan, Arc::clone(&pool));
+        qinst.run(&qb)?;
+        let qfast = run_bench("planned INT8 ExecPlan::run (512-node)", w, n, || {
+            qinst.run(&qb).unwrap()
+        });
+        record("planned_int8", qfast.clone());
+        let qdiff = exec::execute_mat(&qg, &qb)?.max_abs_diff(&qinst.output_mat(0)?);
+        println!(
+            "  planned INT8 vs reference: {:.2}x speedup, max|Δ| = {qdiff:.3e}",
+            qref.mean / qfast.mean
+        );
+        int8_speedup = Some(qref.mean / qfast.mean);
     }
-    let (w, n) = tier(2, 10);
-    let qref = run_bench("reference exec (512-node INT8 GCN)", w, n, || {
-        exec::execute_mat(&qg, &qb).unwrap()
-    });
-    record("reference_int8", qref.clone());
-    let qplan = Arc::new(ExecPlan::compile(&qg)?);
-    let mut qinst =
-        PlanInstance::new(qplan, Arc::new(WorkerPool::default_parallel()));
-    qinst.run(&qb)?;
-    let qfast = run_bench("planned INT8 ExecPlan::run (512-node)", w, n, || {
-        qinst.run(&qb).unwrap()
-    });
-    record("planned_int8", qfast.clone());
-    let qdiff = exec::execute_mat(&qg, &qb)?.max_abs_diff(&qinst.output_mat(0)?);
-    println!(
-        "  planned INT8 vs reference: {:.2}x speedup, max|Δ| = {qdiff:.3e}",
-        qref.mean / qfast.mean
-    );
 
     // 8. end-to-end through the artifact runtime (only with artifacts)
     let dir = std::path::Path::new("artifacts");
@@ -207,16 +332,26 @@ fn main() -> anyhow::Result<()> {
         let mut out = String::from("{\n");
         out.push_str("  \"bench\": \"hotpath\",\n");
         out.push_str(&format!("  \"quick\": {quick},\n"));
-        out.push_str(&format!(
-            "  \"plan_vs_reference_speedup\": {speedup:.4},\n"
-        ));
-        out.push_str(&format!(
-            "  \"plan_vs_reference_max_abs_diff\": {diff:.6e},\n"
-        ));
-        out.push_str(&format!(
-            "  \"int8_plan_vs_reference_speedup\": {:.4},\n",
-            qref.mean / qfast.mean
-        ));
+        out.push_str(&format!("  \"nodes\": {nodes},\n"));
+        out.push_str(&format!("  \"dense_cases\": {dense_ok},\n"));
+        if let Some((speedup, diff)) = headline {
+            out.push_str(&format!(
+                "  \"plan_vs_reference_speedup\": {speedup:.4},\n"
+            ));
+            out.push_str(&format!(
+                "  \"plan_vs_reference_max_abs_diff\": {diff:.6e},\n"
+            ));
+        }
+        if let Some(s) = sparse_vs_dense {
+            out.push_str(&format!(
+                "  \"sparse_vs_dense_agg_speedup\": {s:.4},\n"
+            ));
+        }
+        if let Some(q) = int8_speedup {
+            out.push_str(&format!(
+                "  \"int8_plan_vs_reference_speedup\": {q:.4},\n"
+            ));
+        }
         out.push_str("  \"cases\": [\n");
         for (i, (name, s)) in cases.iter().enumerate() {
             out.push_str(&format!(

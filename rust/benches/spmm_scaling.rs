@@ -1,0 +1,191 @@
+//! Sparse-vs-dense aggregation scaling: density × node-count sweep of
+//! the CSR SpMM kernel against the dense (zero-skip) matmul on
+//! norm-shaped operands, plus the Cora-scale headline the CI gate reads.
+//!
+//! ```sh
+//! cargo bench --bench spmm_scaling                     # full sweep
+//! cargo bench --bench spmm_scaling -- --quick          # CI smoke sizes
+//! cargo bench --bench spmm_scaling -- --json out.json  # machine-readable
+//! ```
+//!
+//! The JSON carries `cora_speedup` (SpMM vs dense at 2708 nodes / 5429
+//! edges — real Cora density, ~0.2%) and `cora_max_abs_diff`;
+//! `bench-smoke` gates `cora_speedup ≥ 3` and exact-tolerance agreement.
+
+use std::sync::Arc;
+
+use grannite::bench::{banner, run_bench};
+use grannite::cli::Args;
+use grannite::engine::{kernels, WorkerPool};
+use grannite::graph::Graph;
+use grannite::tensor::Mat;
+use grannite::util::{human_bytes, json_escape, Rng};
+
+struct Row {
+    nodes: usize,
+    edges: usize,
+    density: f64,
+    dense_us: f64,
+    spmm_us: f64,
+    max_abs_diff: f32,
+    dense_bytes: usize,
+    csr_bytes: usize,
+}
+
+/// Deterministic synthetic graph with ~`edges` undirected edges.
+fn random_graph(nodes: usize, edges: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let raw: Vec<(u32, u32)> = (0..edges * 2)
+        .map(|_| (rng.usize(nodes) as u32, rng.usize(nodes) as u32))
+        .filter(|&(a, b)| a != b)
+        .take(edges)
+        .collect();
+    Graph::new(nodes, &raw)
+}
+
+fn sweep_case(
+    pool: &Arc<WorkerPool>,
+    nodes: usize,
+    edges: usize,
+    feat: usize,
+    iters: (usize, usize),
+) -> Row {
+    let g = random_graph(nodes, edges, 0x5eed ^ nodes as u64 ^ edges as u64);
+    let dense = g.norm_adjacency(nodes);
+    let csr = g.norm_csr(nodes);
+    let density = csr.density();
+    let h = Mat::from_fn(nodes, feat, |i, j| ((i * 7 + j * 3) % 17) as f32 * 0.1 - 0.8);
+    let (w, n) = iters;
+
+    // same row-sharded pool on both sides: this is the engine's actual
+    // dense kernel (density-adaptive zero-skip), not a strawman
+    let mut dense_out = vec![0.0f32; nodes * feat];
+    let dense_stats = run_bench(
+        &format!("dense  {nodes:>6}n density {density:.4}"),
+        w,
+        n,
+        || {
+            kernels::matmul(
+                pool, &dense.data, nodes, nodes, &h.data, feat, &mut dense_out,
+            );
+        },
+    );
+    let mut spmm_out = vec![0.0f32; nodes * feat];
+    let spmm_stats = run_bench(
+        &format!("spmm   {nodes:>6}n nnz {:>8}", csr.nnz()),
+        w,
+        n,
+        || {
+            kernels::spmm(
+                pool, &csr.indptr, &csr.indices, &csr.values, nodes, &h.data,
+                feat, &mut spmm_out,
+            );
+        },
+    );
+    let got = Mat::from_vec(nodes, feat, spmm_out.clone());
+    let diff = Mat::from_vec(nodes, feat, dense_out.clone()).max_abs_diff(&got);
+    Row {
+        nodes,
+        edges: g.num_edges(),
+        density,
+        dense_us: dense_stats.mean,
+        spmm_us: spmm_stats.mean,
+        max_abs_diff: diff,
+        dense_bytes: dense.bytes(),
+        csr_bytes: csr.bytes(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.has("quick");
+    let json_path = args.options.get("json").cloned();
+    banner(if quick {
+        "SpMM scaling sweep (density × nodes, quick)"
+    } else {
+        "SpMM scaling sweep (density × nodes)"
+    });
+
+    let pool = Arc::new(WorkerPool::default_parallel());
+    let feat = 64;
+    let iters = if quick { (1, 3) } else { (3, 12) };
+
+    // density sweep at fixed node count: edges chosen so nnz/n² spans
+    // well below and above the SpMM crossover (0.25)
+    let mut rows: Vec<Row> = Vec::new();
+    let density_nodes = if quick { 512 } else { 1024 };
+    for target_density in [0.002f64, 0.01, 0.05, 0.25] {
+        let nn = density_nodes as f64 * density_nodes as f64;
+        let edges = ((target_density * nn - density_nodes as f64) / 2.0).max(8.0) as usize;
+        rows.push(sweep_case(&pool, density_nodes, edges, feat, iters));
+    }
+    // node-count sweep at citation-graph density (~2 edges per node)
+    let node_sweep: &[usize] = if quick { &[512, 2708] } else { &[512, 1024, 2708, 4096] };
+    for &n in node_sweep {
+        if n == 2708 {
+            continue; // the Cora case below covers it exactly
+        }
+        rows.push(sweep_case(&pool, n, n * 2, feat, iters));
+    }
+    // THE GATE CASE: Cora-scale — 2708 nodes, 5429 edges, real density
+    let cora = sweep_case(&pool, 2708, 5429, feat, iters);
+    let cora_speedup = cora.dense_us / cora.spmm_us;
+    let cora_diff = cora.max_abs_diff;
+    println!(
+        "\n  Cora-scale (2708n/{}e, density {:.5}): SpMM {:.2}x over dense, \
+         max|Δ| = {:.3e}, mask {} -> {}",
+        cora.edges,
+        cora.density,
+        cora_speedup,
+        cora_diff,
+        human_bytes(cora.dense_bytes),
+        human_bytes(cora.csr_bytes),
+    );
+    rows.push(cora);
+
+    println!("\n  {:>7} {:>9} {:>9} {:>11} {:>11} {:>8}", "nodes", "edges",
+             "density", "dense µs", "spmm µs", "speedup");
+    for r in &rows {
+        println!(
+            "  {:>7} {:>9} {:>9.5} {:>11.1} {:>11.1} {:>7.2}x",
+            r.nodes,
+            r.edges,
+            r.density,
+            r.dense_us,
+            r.spmm_us,
+            r.dense_us / r.spmm_us
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"spmm_scaling\",\n");
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str(&format!("  \"cora_speedup\": {cora_speedup:.4},\n"));
+        out.push_str(&format!("  \"cora_max_abs_diff\": {cora_diff:.6e},\n"));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"nodes\": {}, \"edges\": {}, \
+                 \"density\": {:.6}, \"dense_us\": {:.3}, \"spmm_us\": {:.3}, \
+                 \"speedup\": {:.4}, \"max_abs_diff\": {:.6e}, \
+                 \"dense_bytes\": {}, \"csr_bytes\": {}}}{}\n",
+                json_escape(&format!("n{}_d{:.4}", r.nodes, r.density)),
+                r.nodes,
+                r.edges,
+                r.density,
+                r.dense_us,
+                r.spmm_us,
+                r.dense_us / r.spmm_us,
+                r.max_abs_diff,
+                r.dense_bytes,
+                r.csr_bytes,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -31,8 +31,8 @@ impl CostModel {
     /// Build the table by probing both device models.
     pub fn profile(g: &OpGraph, accel: &HardwareConfig,
                    host: &HardwareConfig) -> CostModel {
-        let opts = CostOpts { mask_sparsity_skip: 0.0, dense_dtype_bytes: 2 };
-        let host_opts = CostOpts { mask_sparsity_skip: 0.0, dense_dtype_bytes: 4 };
+        let opts = CostOpts { dense_dtype_bytes: 2, ..Default::default() };
+        let host_opts = CostOpts { dense_dtype_bytes: 4, ..Default::default() };
         let mut accel_us = Vec::with_capacity(g.len());
         let mut host_us = Vec::with_capacity(g.len());
         let mut out_bytes = Vec::with_capacity(g.len());

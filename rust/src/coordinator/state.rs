@@ -137,16 +137,36 @@ impl ModelState {
         self.dynamic.num_nodes()
     }
 
+    /// Live undirected edge count (density bookkeeping for the
+    /// sparse-vs-dense aggregation decision).
+    pub fn num_edges(&self) -> usize {
+        self.dynamic.num_edges()
+    }
+
+    /// See [`DynamicGraph::dense_norm_materialized`].
+    pub fn dense_norm_materialized(&self) -> bool {
+        self.dynamic.dense_norm_materialized()
+    }
+
     /// Live neighbor set of `u` from the dynamic graph (no snapshot).
     pub fn neighbors(&self, u: usize) -> &std::collections::BTreeSet<u32> {
         self.dynamic.neighbors(u)
     }
 
     /// The incrementally-maintained GrAd norm mask at full NodePad
-    /// capacity — what the delta-driven engine gathers frontier rows
-    /// from, instead of rebuilding `norm_pad` O(capacity²) per update.
-    pub fn norm_mask(&self) -> &crate::tensor::Mat {
+    /// capacity — what the delta-driven engine's *dense* gather path
+    /// reads, instead of rebuilding `norm_pad` O(capacity²) per update.
+    /// Materializes the capacity² matrix on first call; the sparse path
+    /// ([`ModelState::norm_csr`]) never does.
+    pub fn norm_mask(&mut self) -> &crate::tensor::Mat {
         self.dynamic.norm()
+    }
+
+    /// The GrAd norm as a CSR operand at full NodePad capacity — the
+    /// `SpMM` binding and the delta-driven engine's row-slice gather
+    /// source. O(nnz) storage, refreshed O(n + m) per structure change.
+    pub fn norm_csr(&mut self) -> &crate::tensor::CsrMat {
+        self.dynamic.norm_csr()
     }
 
     fn invalidate(&mut self) {
@@ -187,6 +207,11 @@ impl ModelState {
             "norm_pad" => {
                 Tensor::from_mat(&graph.norm_adjacency(self.capacity))
             }
+            // CSR twins of the two masks above — what sparse (SpMM)
+            // plans bind under the graph-input name "norm". O(nnz)
+            // construction and storage; never materializes n².
+            "norm_csr" => Tensor::from_csr(graph.norm_csr(n)),
+            "norm_csr_pad" => Tensor::from_csr(graph.norm_csr(self.capacity)),
             "adj" => Tensor::from_mat(&graph.adjacency(n)),
             "neg_bias" => Tensor::from_mat(&graph.neg_bias(n)),
             "mask" => Tensor::from_mat(&graph.sampled_adjacency(
@@ -265,8 +290,10 @@ impl ModelState {
         let mut out = BTreeMap::new();
         let adj_density = (2.0 * m + n) / (n * n);
         out.insert("norm".into(), adj_density);
-        out.insert("norm_pad".into(),
-                   (2.0 * m + n) / (self.capacity as f64).powi(2));
+        out.insert("norm_csr".into(), adj_density);
+        let pad_density = (2.0 * m + n) / (self.capacity as f64).powi(2);
+        out.insert("norm_pad".into(), pad_density);
+        out.insert("norm_csr_pad".into(), pad_density);
         out.insert("adj".into(), adj_density);
         // neg_bias is dense-negative (non-zero where there is NO edge)
         out.insert("neg_bias".into(), 1.0 - adj_density);
@@ -343,6 +370,32 @@ mod tests {
         assert_eq!(norm.shape(), &[48, 48]);
         let x = s.binding("x_pad", "gcn").unwrap();
         assert_eq!(x.shape(), &[48, 16]);
+    }
+
+    #[test]
+    fn csr_bindings_track_updates_and_match_dense() {
+        let mut s = state();
+        let csr = s.binding("norm_csr_pad", "gcn").unwrap();
+        let dense = s.binding("norm_pad", "gcn").unwrap();
+        assert_eq!(csr.shape(), &[48, 48]);
+        assert_eq!(csr.to_mat().unwrap(), dense.to_mat().unwrap());
+        // compressed bytes, not 48²·4
+        assert!(csr.bytes() < dense.bytes());
+        // CacheG: repeat binding hits the cache
+        let misses = s.cache_misses;
+        let again = s.binding("norm_csr_pad", "gcn").unwrap();
+        assert_eq!(again, csr);
+        assert_eq!(s.cache_misses, misses);
+        // GrAd churn invalidates the CSR mask like the dense one
+        s.add_edge(0, 7).unwrap();
+        let after = s.binding("norm_csr_pad", "gcn").unwrap();
+        assert_ne!(after, csr);
+        assert_eq!(
+            after.to_mat().unwrap(),
+            s.binding("norm_pad", "gcn").unwrap().to_mat().unwrap()
+        );
+        // the live CSR accessor agrees with the binding
+        assert_eq!(s.norm_csr(), after.as_csr().unwrap());
     }
 
     #[test]

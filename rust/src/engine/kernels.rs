@@ -8,7 +8,7 @@
 //! which keeps within-row accumulation order identical to serial.
 
 use super::pool::{par_rows, SharedOut, WorkerPool};
-use crate::tensor::{matmul_block, sample_density, SKIP_DENSITY_THRESHOLD};
+use crate::tensor::{matmul_block, sample_density, spmm_rows, SKIP_DENSITY_THRESHOLD};
 
 /// `out = a(m×k) @ b(k×n)`, row-sharded; the zero-skip kernel is chosen
 /// from the lhs' sampled density (GraSp skip for sparse masks, branch-free
@@ -33,6 +33,74 @@ pub fn matmul(
             std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
         };
         matmul_block(&a[r0 * k..r1 * k], r1 - r0, k, b, n, ob, skip);
+    });
+}
+
+/// Sparse × dense matmul over CSR arrays: `out(m×n) = A @ rhs(k×n)` with
+/// `A` given as indptr/indices/values. Row-sharded; per-row accumulation
+/// runs in ascending column order, matching the dense zero-skip kernel's
+/// k-order, so the SpMM path agrees bitwise with [`matmul`] on equal
+/// values. O(nnz·n) work — the GraSp model made real.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm(
+    pool: &WorkerPool,
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    m: usize,
+    rhs: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(indptr.len(), m + 1);
+    debug_assert_eq!(indices.len(), values.len());
+    debug_assert_eq!(out.len(), m * n);
+    let outp = SharedOut(out.as_mut_ptr());
+    par_rows(pool, m, 8, &|r0, r1| {
+        // SAFETY: row blocks are disjoint per lane.
+        let ob = unsafe {
+            std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
+        };
+        spmm_rows(indptr, indices, values, r0, r1, rhs, n, ob);
+    });
+}
+
+/// INT8 SpMM: quantized CSR values × i8 dense rhs, i32 accumulation, one
+/// f32 rescale — the QuantGr datapath applied to the sparse aggregation
+/// (the INT8 sibling of [`qmatmul_i8`]). Row-sharded.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_i8(
+    pool: &WorkerPool,
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[i8],
+    m: usize,
+    rhs: &[i8],
+    n: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(indptr.len(), m + 1);
+    debug_assert_eq!(indices.len(), values.len());
+    debug_assert_eq!(out.len(), m * n);
+    let outp = SharedOut(out.as_mut_ptr());
+    par_rows(pool, m, 8, &|r0, r1| {
+        // SAFETY: row blocks are disjoint per lane.
+        let ob = unsafe {
+            std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
+        };
+        for i in r0..r1 {
+            let (a, b) = (indptr[i] as usize, indptr[i + 1] as usize);
+            let orow = &mut ob[(i - r0) * n..(i - r0 + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let mut acc: i32 = 0;
+                for p in a..b {
+                    acc += values[p] as i32
+                        * rhs[indices[p] as usize * n + j] as i32;
+                }
+                *o = acc as f32 * scale;
+            }
+        }
     });
 }
 
@@ -387,6 +455,41 @@ pub fn gather_submatrix(
     }
 }
 
+/// CSR variant of [`gather_submatrix`]: gather the `rows × cols` slice
+/// of a CSR matrix into a dense tile with stride `out_cols`, zero-filling
+/// everything not stored. Frontier rows index straight into `indptr` —
+/// O(Σ nnz(row) · log|cols|) instead of O(|rows|·|cols|) dense reads, so
+/// a tile gather never touches the n² dense mask at all. `cols` must be
+/// sorted ascending. Returns the number of stored entries written (the
+/// bytes-shipped accounting the metrics layer reports).
+pub fn gather_csr_submatrix(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    rows: &[usize],
+    cols: &[usize],
+    out: &mut [f32],
+    out_cols: usize,
+) -> usize {
+    debug_assert!(out.len() >= rows.len() * out_cols);
+    debug_assert!(cols.len() <= out_cols);
+    debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "cols must be sorted");
+    let mut written = 0usize;
+    for (slot, &r) in rows.iter().enumerate() {
+        let orow = &mut out[slot * out_cols..(slot + 1) * out_cols];
+        orow.fill(0.0);
+        let (a, b) = (indptr[r] as usize, indptr[r + 1] as usize);
+        for p in a..b {
+            let c = indices[p] as usize;
+            if let Ok(j) = cols.binary_search(&c) {
+                orow[j] = values[p];
+                written += 1;
+            }
+        }
+    }
+    written
+}
+
 /// Sentinel-aware neighbor gather-mean.
 pub fn neighbor_gather_mean(
     idx: &[i32],
@@ -428,6 +531,88 @@ mod tests {
         let mut out = vec![0.0f32; 37 * 11];
         matmul(&pool, &a.data, 37, 23, &b.data, 11, &mut out);
         assert_eq!(out, want.data);
+    }
+
+    #[test]
+    fn parallel_spmm_matches_dense_matmul_bitwise() {
+        use crate::tensor::CsrMat;
+        let pool = WorkerPool::new(4);
+        // norm-like sparse lhs
+        let g = crate::graph::Graph::new(
+            37,
+            &(0..50u32).map(|i| (i % 37, (i * 11 + 1) % 37)).collect::<Vec<_>>(),
+        );
+        let dense = g.norm_adjacency(37);
+        let csr = g.norm_csr(37);
+        assert_eq!(CsrMat::from_dense(&dense), csr);
+        let h = Mat::from_fn(37, 9, |i, j| ((i * 5 + j) % 7) as f32 - 3.0);
+        let mut want = vec![0.0f32; 37 * 9];
+        matmul(&pool, &dense.data, 37, 37, &h.data, 9, &mut want);
+        let mut got = vec![0.0f32; 37 * 9];
+        spmm(&pool, &csr.indptr, &csr.indices, &csr.values, 37, &h.data, 9, &mut got);
+        assert_eq!(got, want, "spmm must match the dense zero-skip kernel");
+        // serial pool agrees with the parallel one
+        let mut serial = vec![0.0f32; 37 * 9];
+        let sp = WorkerPool::serial();
+        spmm(&sp, &csr.indptr, &csr.indices, &csr.values, 37, &h.data, 9, &mut serial);
+        assert_eq!(serial, got);
+    }
+
+    #[test]
+    fn spmm_i8_matches_qmatmul_oracle_on_int_values() {
+        use crate::tensor::CsrMat;
+        // quantized sparse mask × quantized activations: the i32-accum
+        // SpMM must equal the dense QMatMul oracle on the densified mask
+        let pool = WorkerPool::serial();
+        let (m, k, n) = (11, 13, 4);
+        let dense = Mat::from_fn(m, k, |i, j| {
+            if (i * 7 + j * 3) % 5 == 0 {
+                ((i * j) % 253) as f32 - 126.0
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMat::from_dense(&dense);
+        let v8: Vec<i8> = csr.values.iter().map(|&v| v as i8).collect();
+        let rhs8: Vec<i8> = (0..k * n).map(|i| ((i * 37) % 255) as i8).collect();
+        let rhs_f: Vec<f32> = rhs8.iter().map(|&v| v as f32).collect();
+        let mut fast = vec![0.0f32; m * n];
+        spmm_i8(&pool, &csr.indptr, &csr.indices, &v8, m, &rhs8, n, 0.125, &mut fast);
+        let mut want = vec![0.0f32; m * n];
+        qmatmul_acc64(
+            &pool,
+            &QOperand::F32(&dense.data),
+            &QOperand::F32(&rhs_f),
+            m,
+            k,
+            n,
+            0.125,
+            &mut want,
+        );
+        assert_eq!(fast, want);
+    }
+
+    #[test]
+    fn gather_csr_submatrix_matches_dense_gather() {
+        use crate::tensor::CsrMat;
+        let g = crate::graph::Graph::new(12, &[(0, 3), (1, 2), (2, 5), (4, 7), (7, 11), (3, 9)]);
+        let dense = g.norm_adjacency(12);
+        let csr = g.norm_csr(12);
+        let rows = [1usize, 3, 7];
+        let cols = [0usize, 2, 3, 9, 11];
+        let out_cols = 7; // padded
+        let mut want = vec![9.0f32; rows.len() * out_cols];
+        gather_submatrix(&dense.data, 12, &rows, &cols, &mut want, out_cols);
+        let mut got = vec![-1.0f32; rows.len() * out_cols];
+        let written = gather_csr_submatrix(
+            &csr.indptr, &csr.indices, &csr.values, &rows, &cols, &mut got, out_cols,
+        );
+        assert_eq!(got, want);
+        assert_eq!(
+            written,
+            want.iter().filter(|&&v| v != 0.0).count(),
+            "written-entry accounting"
+        );
     }
 
     #[test]

@@ -189,6 +189,11 @@ impl PlanInstance {
                 .ok_or_else(|| anyhow!("unbound input {:?}", op.name))?;
             let d = match t {
                 Tensor::F32 { data, .. } => data,
+                Tensor::Csr { .. } => bail!(
+                    "input {:?}: bound as CSR but consumed densely \
+                     (only SpMM reads sparse operands)",
+                    op.name
+                ),
                 other => bail!(
                     "input {:?}: expected f32 binding, got {:?}",
                     op.name,
@@ -417,6 +422,48 @@ impl PlanInstance {
                     let (a, m, k) = self.f32_of(plan, op.inputs[0], b)?;
                     let (w, _, nn) = self.f32_of(plan, op.inputs[1], b)?;
                     kernels::matmul(pool, a, m, k, w, nn, out);
+                }
+                OpKind::SpMM => {
+                    let (h, hr, nn) = self.f32_of(plan, op.inputs[1], b)?;
+                    let lop = &plan.graph.ops[op.inputs[0]];
+                    let (lr, lc) = rc(&lop.shape)?;
+                    if (lr, lc) != (rows, hr) {
+                        bail!("spmm operand shape mismatch");
+                    }
+                    let t = b.get(&lop.name).ok_or_else(|| {
+                        anyhow!("unbound input {:?}", lop.name)
+                    })?;
+                    match t {
+                        Tensor::Csr { mat, .. } => {
+                            if (mat.rows, mat.cols) != (lr, lc) {
+                                bail!(
+                                    "input {:?}: CSR is {}x{}, graph expects {}x{}",
+                                    lop.name, mat.rows, mat.cols, lr, lc
+                                );
+                            }
+                            kernels::spmm(
+                                pool, &mat.indptr, &mat.indices, &mat.values,
+                                rows, h, nn, out,
+                            );
+                        }
+                        // dense fallback: above the density threshold the
+                        // caller may bind the dense mask to the same plan
+                        Tensor::F32 { data, .. } => {
+                            if data.len() != lr * lc {
+                                bail!(
+                                    "input {:?}: dense binding has {} elements, \
+                                     graph expects {}x{}",
+                                    lop.name, data.len(), lr, lc
+                                );
+                            }
+                            kernels::matmul(pool, data, rows, hr, h, nn, out);
+                        }
+                        other => bail!(
+                            "input {:?}: SpMM operand must be CSR or f32, got {:?}",
+                            lop.name,
+                            other.dtype()
+                        ),
+                    }
                 }
                 OpKind::QMatMul { x_scale, w_scale } => {
                     let s = x_scale * w_scale;
@@ -754,6 +801,28 @@ mod tests {
             "diff {}",
             want.max_abs_diff(&got)
         );
+    }
+
+    #[test]
+    fn sparse_plan_matches_reference_and_dense_fallback() {
+        use crate::ops::build::Aggregation;
+        use crate::tensor::CsrMat;
+        let g_dense = build::gcn_stagr(dims(), "stagr");
+        let g_sparse = build::gcn_stagr_with(dims(), "stagr", Aggregation::Sparse);
+        let b = gcn_bindings(19);
+        let mut bs = b.clone();
+        let norm = b["norm"].to_mat().unwrap();
+        bs.insert("norm".into(), Tensor::from_csr(CsrMat::from_dense(&norm)));
+        let want = exec::execute_mat(&g_dense, &b).unwrap();
+        // CSR binding through the planned SpMM kernel
+        let got = run_graph_mat(&g_sparse, &bs).unwrap();
+        assert!(want.max_abs_diff(&got) < 1e-4, "{}", want.max_abs_diff(&got));
+        // dense binding on the same sparse plan: the threshold fallback
+        let fb = run_graph_mat(&g_sparse, &b).unwrap();
+        assert_eq!(fb, got, "dense fallback must agree bitwise");
+        // a CSR binding consumed densely is a clean error, not garbage
+        let err = run_graph(&g_dense, &bs).unwrap_err().to_string();
+        assert!(err.contains("CSR"), "{err}");
     }
 
     #[test]

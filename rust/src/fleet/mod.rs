@@ -66,6 +66,9 @@ pub struct FleetConfig {
     pub admission: AdmissionConfig,
     /// Stored bytes per feature element on the link (2 = FP16).
     pub dtype_bytes: usize,
+    /// How plan-backed shards lower the aggregation
+    /// (`--aggregation dense|sparse|auto`; auto resolves by density).
+    pub aggregation: crate::ops::build::Aggregation,
 }
 
 impl FleetConfig {
@@ -76,6 +79,7 @@ impl FleetConfig {
             batch: ServerConfig::default(),
             admission: AdmissionConfig::unbounded(),
             dtype_bytes: 2,
+            aggregation: crate::ops::build::Aggregation::Auto,
         }
     }
 
@@ -90,9 +94,7 @@ impl FleetConfig {
         ];
         FleetConfig {
             devices: (0..n.max(1)).map(|i| zoo[i % zoo.len()].clone()).collect(),
-            batch: ServerConfig::default(),
-            admission: AdmissionConfig::unbounded(),
-            dtype_bytes: 2,
+            ..FleetConfig::homogeneous(1)
         }
     }
 
@@ -102,12 +104,7 @@ impl FleetConfig {
         for n in names {
             devices.push(HardwareConfig::preset(n)?);
         }
-        Ok(FleetConfig {
-            devices,
-            batch: ServerConfig::default(),
-            admission: AdmissionConfig::unbounded(),
-            dtype_bytes: 2,
-        })
+        Ok(FleetConfig { devices, ..FleetConfig::homogeneous(1) })
     }
 }
 
@@ -177,13 +174,18 @@ impl Fleet {
     /// Spawn a fleet of [`PlanEngine`]s — every shard serves a real GCN
     /// [`crate::ops::plan::ExecPlan`] (compiled **once** here and
     /// Arc-shared into the shard factories, arena-reused, fused chains),
-    /// still fully offline. Shards already parallelize across threads, so
-    /// each shard runs a serial in-shard worker pool.
+    /// still fully offline. Aggregation follows `cfg.aggregation`
+    /// (`Auto` → sparse SpMM at any realistic density, so each shard's
+    /// mask memory scales with the graph's nnz rather than capacity²;
+    /// shards hold a full structural replica, so the CSR is global).
+    /// Shards already parallelize across threads, so each shard runs a
+    /// serial in-shard worker pool.
     pub fn spawn_planned(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
                          -> Result<Fleet> {
         let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
                                    ds.num_classes(), cfg)?;
-        let (exec_plan, weights) = PlanEngine::compile_parts(ds, capacity)?;
+        let (exec_plan, weights) =
+            PlanEngine::compile_parts_with(ds, capacity, cfg.aggregation)?;
         let graph = ds.graph.clone();
         let features = ds.num_features();
         let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {

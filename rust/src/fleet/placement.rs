@@ -96,8 +96,8 @@ pub fn per_node_us(hw: &HardwareConfig, nodes: usize, edges: usize,
                               classes.max(2));
     let g = build::build("gcn", "stagr", dims)?;
     let opts = CostOpts {
-        mask_sparsity_skip: 0.0,
         dense_dtype_bytes: if hw.kind == DeviceKind::Npu { 2 } else { 4 },
+        ..Default::default()
     };
     let mut us = 0.0;
     for (id, op) in g.ops.iter().enumerate() {

@@ -1,21 +1,26 @@
 //! GrAd + NodePad: dynamic-graph support (paper Figs. 10–11).
 //!
 //! A [`DynamicGraph`] owns a mutable edge set with a fixed NodePad
-//! capacity and *incrementally* maintains the dense masks that the
-//! compiled artifacts take as runtime inputs — the whole point of GrAd is
-//! that an edge update is a cheap mask edit, not a model recompile.
+//! capacity and *incrementally* maintains the masks that the compiled
+//! artifacts take as runtime inputs — the whole point of GrAd is that an
+//! edge update is a cheap mask edit, not a model recompile.
 //!
-//! Norm-matrix maintenance is the subtle part: adding an edge (u,v)
-//! changes deg(u) and deg(v), which rescales *every* entry in row/col u
-//! and v. The incremental update therefore touches O((deg u + deg v) · 1)
-//! entries via the CSR neighbor lists instead of rebuilding n².
+//! Masks come in two representations, both **lazy**: the dense
+//! capacity² matrices ([`DynamicGraph::norm`]/[`DynamicGraph::neg_bias`])
+//! materialize on first request and are then edited in place per update
+//! (adding edge (u,v) changes deg(u)/deg(v), which rescales row/col u and
+//! v — O(deg u + deg v) touched entries instead of an n² rebuild); the
+//! CSR norm ([`DynamicGraph::norm_csr`]) is rebuilt O(n + m) from the
+//! live neighbor sets when dirty. Sparse-aggregation engines only ever
+//! ask for the CSR form, so they never allocate a capacity² buffer at
+//! all — which is exactly what lets shard memory scale with nnz.
 
 use std::collections::BTreeSet;
 
 use anyhow::{bail, Result};
 
 use super::Graph;
-use crate::tensor::Mat;
+use crate::tensor::{CsrMat, Mat};
 
 /// Mutable graph with incrementally-maintained GrAd masks.
 #[derive(Debug, Clone)]
@@ -25,10 +30,13 @@ pub struct DynamicGraph {
     edges: BTreeSet<(u32, u32)>,
     /// Per-node neighbor sets (undirected, no self).
     nbrs: Vec<BTreeSet<u32>>,
-    /// Dense norm mask (capacity × capacity), maintained incrementally.
-    norm: Mat,
-    /// Dense additive attention mask, maintained incrementally.
-    neg_bias: Mat,
+    /// Dense norm mask (capacity × capacity), materialized lazily and
+    /// then maintained incrementally.
+    norm: Option<Mat>,
+    /// Dense additive attention mask, lazy + incremental like `norm`.
+    neg_bias: Option<Mat>,
+    /// CSR norm, rebuilt O(n + m) on demand when structure changed.
+    norm_csr: Option<CsrMat>,
     /// Update statistics (for the serving metrics).
     pub updates: usize,
 }
@@ -36,6 +44,8 @@ pub struct DynamicGraph {
 impl DynamicGraph {
     /// Start from an initial graph. `capacity` is the NodePad size every
     /// mask is laid out at (the compiled model's static input shape).
+    /// Masks are not materialized here — the first `norm()`/`neg_bias()`/
+    /// `norm_csr()` call builds its representation.
     pub fn new(initial: &Graph, capacity: usize) -> Result<DynamicGraph> {
         if capacity < initial.num_nodes() {
             bail!(
@@ -54,8 +64,9 @@ impl DynamicGraph {
             num_nodes: initial.num_nodes(),
             edges: initial.edges().iter().copied().collect(),
             nbrs,
-            norm: initial.norm_adjacency(capacity),
-            neg_bias: initial.neg_bias(capacity),
+            norm: None,
+            neg_bias: None,
+            norm_csr: None,
             updates: 0,
         })
     }
@@ -86,38 +97,76 @@ impl DynamicGraph {
     }
 
     /// The GrAd norm mask, ready to feed the `*_grad` artifacts.
-    pub fn norm(&self) -> &Mat {
-        &self.norm
+    /// Materializes the dense capacity² matrix on first call; sparse
+    /// engines use [`DynamicGraph::norm_csr`] instead and never pay this.
+    pub fn norm(&mut self) -> &Mat {
+        if self.norm.is_none() {
+            self.norm = Some(self.snapshot().norm_adjacency(self.capacity));
+        }
+        self.norm.as_ref().unwrap()
     }
 
-    /// The GrAx1 additive mask for GAT artifacts.
-    pub fn neg_bias(&self) -> &Mat {
-        &self.neg_bias
+    /// The GrAd norm as a CSR operand (the `SpMM` binding): same values
+    /// as [`DynamicGraph::norm`], O(nnz) storage, rebuilt O(n + m) from
+    /// the live neighbor sets only when the structure changed since the
+    /// last call.
+    pub fn norm_csr(&mut self) -> &CsrMat {
+        if self.norm_csr.is_none() {
+            self.norm_csr = Some(self.snapshot().norm_csr(self.capacity));
+        }
+        self.norm_csr.as_ref().unwrap()
     }
 
-    fn deg_with_self(&self, u: usize) -> f32 {
-        self.nbrs[u].len() as f32 + 1.0
+    /// The GrAx1 additive mask for GAT artifacts (lazy like `norm`).
+    pub fn neg_bias(&mut self) -> &Mat {
+        if self.neg_bias.is_none() {
+            self.neg_bias = Some(self.snapshot().neg_bias(self.capacity));
+        }
+        self.neg_bias.as_ref().unwrap()
     }
 
-    /// Recompute row/col `u` of the norm mask (and its diagonal) — called
-    /// for the two endpoints of an update and only them.
+    /// Recompute row/col `u` of the dense norm mask (and its diagonal) —
+    /// called for the two endpoints of an update and only them. A no-op
+    /// until the dense mask has been materialized.
     fn refresh_norm_node(&mut self, u: usize) {
-        let du = self.deg_with_self(u);
+        let du = self.nbrs[u].len() as f32 + 1.0;
         let inv_u = 1.0 / du.sqrt();
-        // clear the row & column
-        for j in 0..self.capacity {
-            self.norm[(u, j)] = 0.0;
-            self.norm[(j, u)] = 0.0;
+        let entries: Vec<(usize, f32)> = self.nbrs[u]
+            .iter()
+            .map(|&v| {
+                let v = v as usize;
+                let dv = self.nbrs[v].len() as f32 + 1.0;
+                (v, inv_u * (1.0 / dv.sqrt()))
+            })
+            .collect();
+        let cap = self.capacity;
+        if let Some(norm) = self.norm.as_mut() {
+            // clear the row & column
+            for j in 0..cap {
+                norm[(u, j)] = 0.0;
+                norm[(j, u)] = 0.0;
+            }
+            for &(v, val) in &entries {
+                norm[(u, v)] = val;
+                norm[(v, u)] = val;
+            }
+            norm[(u, u)] = inv_u * inv_u;
         }
-        let neighbors: Vec<u32> = self.nbrs[u].iter().copied().collect();
-        for &v in &neighbors {
-            let v = v as usize;
-            let inv_v = 1.0 / self.deg_with_self(v).sqrt();
-            let val = inv_u * inv_v;
-            self.norm[(u, v)] = val;
-            self.norm[(v, u)] = val;
-        }
-        self.norm[(u, u)] = inv_u * inv_u;
+    }
+
+    /// Whether the dense capacity² norm has ever been materialized —
+    /// sparse-aggregation engines must keep this false (the no-n×n-slab
+    /// guarantee is testable, not aspirational).
+    pub fn dense_norm_materialized(&self) -> bool {
+        self.norm.is_some()
+    }
+
+    /// Every structure update lands here: the dense masks are edited in
+    /// place (when materialized); the CSR form is invalidated wholesale
+    /// (its rebuild is O(n + m), cheaper than in-place array surgery).
+    fn note_structure_change(&mut self) {
+        self.norm_csr = None;
+        self.updates += 1;
     }
 
     /// Add a node (must stay within capacity). New nodes start isolated;
@@ -134,8 +183,10 @@ impl DynamicGraph {
         self.num_nodes += 1;
         // isolated node: self-loop only
         self.refresh_norm_node(id);
-        self.neg_bias[(id, id)] = 0.0;
-        self.updates += 1;
+        if let Some(nb) = self.neg_bias.as_mut() {
+            nb[(id, id)] = 0.0;
+        }
+        self.note_structure_change();
         Ok(id)
     }
 
@@ -150,9 +201,11 @@ impl DynamicGraph {
         self.nbrs[v].insert(u as u32);
         self.refresh_norm_node(u);
         self.refresh_norm_node(v);
-        self.neg_bias[(u, v)] = 0.0;
-        self.neg_bias[(v, u)] = 0.0;
-        self.updates += 1;
+        if let Some(nb) = self.neg_bias.as_mut() {
+            nb[(u, v)] = 0.0;
+            nb[(v, u)] = 0.0;
+        }
+        self.note_structure_change();
         Ok(true)
     }
 
@@ -167,9 +220,11 @@ impl DynamicGraph {
         self.nbrs[v].remove(&(u as u32));
         self.refresh_norm_node(u);
         self.refresh_norm_node(v);
-        self.neg_bias[(u, v)] = crate::ops::NEG_MASK;
-        self.neg_bias[(v, u)] = crate::ops::NEG_MASK;
-        self.updates += 1;
+        if let Some(nb) = self.neg_bias.as_mut() {
+            nb[(u, v)] = crate::ops::NEG_MASK;
+            nb[(v, u)] = crate::ops::NEG_MASK;
+        }
+        self.note_structure_change();
         Ok(true)
     }
 
@@ -206,6 +261,9 @@ mod tests {
     #[test]
     fn masks_match_full_rebuild_after_updates() {
         let mut dg = base();
+        // materialize first so the updates run the *incremental* path
+        let _ = dg.norm();
+        let _ = dg.neg_bias();
         dg.add_edge(2, 3).unwrap();
         dg.add_edge(0, 3).unwrap();
         dg.remove_edge(1, 2).unwrap();
@@ -216,6 +274,34 @@ mod tests {
         );
         let want_bias = dg.snapshot().neg_bias(6);
         assert!(dg.neg_bias().max_abs_diff(&want_bias) < 1e-6);
+    }
+
+    #[test]
+    fn lazy_masks_build_correctly_after_updates() {
+        // the other ordering: churn first, masks requested afterwards
+        let mut dg = base();
+        dg.add_edge(2, 3).unwrap();
+        dg.remove_edge(0, 1).unwrap();
+        let want_norm = dg.snapshot().norm_adjacency(6);
+        assert!(dg.norm().max_abs_diff(&want_norm) < 1e-6);
+        let want_bias = dg.snapshot().neg_bias(6);
+        assert!(dg.neg_bias().max_abs_diff(&want_bias) < 1e-6);
+    }
+
+    #[test]
+    fn norm_csr_tracks_churn_and_matches_dense() {
+        let mut dg = base();
+        assert_eq!(dg.norm_csr().to_dense(), dg.snapshot().norm_adjacency(6));
+        dg.add_edge(2, 3).unwrap();
+        dg.add_edge(0, 2).unwrap();
+        dg.remove_edge(1, 2).unwrap();
+        let got = dg.norm_csr().clone();
+        assert_eq!(got.to_dense(), dg.snapshot().norm_adjacency(6));
+        // unchanged structure: the cached CSR is reused (same contents)
+        assert_eq!(dg.norm_csr(), &got);
+        let id = dg.add_node().unwrap();
+        dg.add_edge(id, 0).unwrap();
+        assert_eq!(dg.norm_csr().to_dense(), dg.snapshot().norm_adjacency(6));
     }
 
     #[test]
@@ -278,6 +364,10 @@ mod tests {
             let n0 = gen.usize(2, 8);
             let cap = n0 + gen.usize(1, 6);
             let mut dg = DynamicGraph::new(&Graph::new(n0, &[]), cap).unwrap();
+            // materialize the dense masks so updates take the incremental
+            // in-place path (the lazy rebuild has its own test)
+            let _ = dg.norm();
+            let _ = dg.neg_bias();
             // mirror model: plain node count + undirected edge set
             let mut nodes = n0;
             let mut edges = std::collections::BTreeSet::new();
@@ -345,6 +435,9 @@ mod tests {
             );
             let want_bias = snap.neg_bias(cap);
             assert!(dg.neg_bias().max_abs_diff(&want_bias) < 1e-5);
+
+            // the CSR norm tracks the same structure exactly
+            assert_eq!(dg.norm_csr().to_dense(), snap.norm_adjacency(cap));
         });
     }
 
@@ -369,6 +462,8 @@ mod tests {
             let cap = n + gen.usize(0, 4);
             let graph = Graph::new(n, &[]);
             let mut dg = DynamicGraph::new(&graph, cap).unwrap();
+            let _ = dg.norm();
+            let _ = dg.neg_bias();
             for _ in 0..gen.usize(1, 30) {
                 let u = gen.rng().usize(n);
                 let v = gen.rng().usize(n);

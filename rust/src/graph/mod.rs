@@ -127,6 +127,51 @@ impl Graph {
         out
     }
 
+    /// PreG norm as a first-class sparse operand: the same
+    /// `D^{-1/2} (A + I) D^{-1/2}` values as [`Graph::norm_adjacency`]
+    /// (bitwise — both compute `inv_sqrt[s] * inv_sqrt[d]`), stored CSR
+    /// so the SpMM aggregation path costs O(nnz·d) instead of O(n²·d).
+    /// Rows ≥ `num_nodes` are empty (NodePad rows stay disconnected).
+    pub fn norm_csr(&self, capacity: usize) -> crate::tensor::CsrMat {
+        let n = self.num_nodes;
+        assert!(capacity >= n, "NodePad capacity {capacity} < n {n}");
+        let deg = self.degrees_with_self();
+        let inv_sqrt: Vec<f32> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
+        let nbrs = self.neighbor_lists();
+        let mut indptr = Vec::with_capacity(capacity + 1);
+        let mut indices = Vec::with_capacity(2 * self.edges.len() + n);
+        let mut values = Vec::with_capacity(2 * self.edges.len() + n);
+        indptr.push(0u32);
+        for i in 0..n {
+            // merge the sorted neighbor list with the diagonal entry
+            let mut self_done = false;
+            for &j in &nbrs[i] {
+                if !self_done && (j as usize) > i {
+                    indices.push(i as u32);
+                    values.push(inv_sqrt[i] * inv_sqrt[i]);
+                    self_done = true;
+                }
+                indices.push(j);
+                values.push(inv_sqrt[i] * inv_sqrt[j as usize]);
+            }
+            if !self_done {
+                indices.push(i as u32);
+                values.push(inv_sqrt[i] * inv_sqrt[i]);
+            }
+            indptr.push(indices.len() as u32);
+        }
+        for _ in n..capacity {
+            indptr.push(indices.len() as u32);
+        }
+        crate::tensor::CsrMat {
+            rows: capacity,
+            cols: capacity,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
     /// GrAx1: the additive attention mask `(1 - (A+I)) * (-1e9)`
     /// (paper Fig. 16). Padded columns keep the large negative bias so
     /// phantom nodes never attract attention mass; padded *rows* are
@@ -257,6 +302,28 @@ mod tests {
             a[(i, j)] / (deg[i].sqrt() * deg[j].sqrt())
         });
         assert!(g.norm_adjacency(5).max_abs_diff(&dense) < 1e-6);
+    }
+
+    #[test]
+    fn norm_csr_equals_dense_norm_bitwise() {
+        let g = Graph::new(7, &[(0, 1), (0, 6), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (1, 4)]);
+        for cap in [7usize, 10] {
+            let dense = g.norm_adjacency(cap);
+            let csr = g.norm_csr(cap);
+            assert_eq!(csr.rows, cap);
+            assert_eq!(csr.to_dense(), dense, "cap {cap}");
+            // entries are exactly the dense non-zeros (diagonal included)
+            assert_eq!(
+                csr.nnz(),
+                dense.data.iter().filter(|&&v| v != 0.0).count()
+            );
+        }
+        // isolated node keeps only its self loop
+        let iso = Graph::new(3, &[(0, 1)]);
+        let csr = iso.norm_csr(4);
+        assert_eq!(csr.row_entries(2).0, &[2]);
+        assert_eq!(csr.row_entries(2).1, &[1.0]);
+        assert!(csr.row_entries(3).0.is_empty(), "padded row stays empty");
     }
 
     #[test]

@@ -57,7 +57,7 @@ use crate::coordinator::ModelState;
 use crate::engine::{kernels, TileRunner, WorkerPool};
 use crate::graph::{datasets::Dataset, pad_features};
 use crate::metrics::RoundStats;
-use crate::ops::build;
+use crate::ops::build::{self, Aggregation};
 use crate::ops::exec::Bindings;
 use crate::server::{InferenceEngine, Update};
 use crate::tensor::Mat;
@@ -74,13 +74,22 @@ pub struct IncrementalConfig {
     pub cost_margin: f64,
     /// Smallest tile bucket (avoids compiling a plan per tiny frontier).
     pub tile_min: usize,
+    /// Where tile gathers read the norm mask from: `Sparse` indexes the
+    /// CSR rows straight through `indptr` (never materializing the
+    /// capacity² dense mask), `Dense` reads the incrementally-maintained
+    /// dense matrix, `Auto` resolves per round from the live density.
+    pub aggregation: Aggregation,
 }
 
 impl Default for IncrementalConfig {
     fn default() -> Self {
         // margin < 1: near the crossover the frontier bookkeeping and
         // scattered gathers make the full path the safer choice
-        IncrementalConfig { cost_margin: 0.75, tile_min: 32 }
+        IncrementalConfig {
+            cost_margin: 0.75,
+            tile_min: 32,
+            aggregation: Aggregation::Auto,
+        }
     }
 }
 
@@ -148,6 +157,9 @@ pub struct IncrementalEngine {
     /// Shard maintenance regions, cached per graph version.
     regions: RefCell<Option<(u64, Arc<Regions>)>>,
     last_stats: Option<RoundStats>,
+    /// Mask-gather traffic of the last executed round:
+    /// (dense-equivalent bytes, bytes actually shipped).
+    last_dma: (usize, usize),
 }
 
 /// The per-version shard geometry: `per_layer[l] = B(owned, k−1−l)` and
@@ -237,6 +249,7 @@ impl IncrementalEngine {
             plan_cache: RefCell::new(None),
             regions: RefCell::new(None),
             last_stats: None,
+            last_dma: (0, 0),
         })
     }
 
@@ -492,9 +505,20 @@ impl IncrementalEngine {
         imports.len()
     }
 
+    /// The (resolved) norm-gather mode for the current graph state.
+    fn gather_mode(&self) -> Aggregation {
+        let cap = self.state.capacity as f64;
+        let density = (2.0 * self.state.num_edges() as f64
+            + self.active() as f64)
+            / (cap * cap);
+        self.cfg.aggregation.resolve(density)
+    }
+
     /// Execute one planned round through the gather/scatter tile path.
     fn exec_round(&mut self, plan: &RoundPlan) -> Result<()> {
         let capacity = self.state.capacity;
+        let sparse = self.gather_mode().lowers_sparse();
+        self.last_dma = (0, 0);
         for l in 0..self.num_layers() {
             let lr = &plan.layers[l];
             if !lr.stale.is_empty() {
@@ -518,14 +542,37 @@ impl IncrementalEngine {
                     );
                 }
             }
-            kernels::gather_submatrix(
-                &self.state.norm_mask().data,
-                capacity,
-                &lr.rows,
-                &lr.ring,
-                tile.binding_mut("norm_sub")?,
-                ring_cap,
-            );
+            // norm tile gather: CSR row slices (frontier rows index
+            // straight into indptr, O(nnz(rows)·log|ring|)) or the dense
+            // submatrix copy — both produce the identical padded tile
+            let dense_bytes = lr.rows.len() * lr.ring.len() * 4;
+            let shipped = if sparse {
+                let nbuf = tile.binding_mut("norm_sub")?;
+                let csr = self.state.norm_csr();
+                let written = kernels::gather_csr_submatrix(
+                    &csr.indptr,
+                    &csr.indices,
+                    &csr.values,
+                    &lr.rows,
+                    &lr.ring,
+                    nbuf,
+                    ring_cap,
+                );
+                // indptr slice + (index, value) per stored entry
+                lr.rows.len() * 4 + written * 8
+            } else {
+                kernels::gather_submatrix(
+                    &self.state.norm_mask().data,
+                    capacity,
+                    &lr.rows,
+                    &lr.ring,
+                    tile.binding_mut("norm_sub")?,
+                    ring_cap,
+                );
+                dense_bytes
+            };
+            self.last_dma.0 += dense_bytes;
+            self.last_dma.1 += shipped.min(dense_bytes);
             tile.run()
                 .with_context(|| format!("incremental layer {l} tile run"))?;
             let (out, _rows, out_w) = tile.output()?;
@@ -540,6 +587,7 @@ impl IncrementalEngine {
 
     fn round_accounting(&self, plan: &RoundPlan) -> RoundStats {
         let eligible = self.owned_active().len();
+        let (dma_bytes_dense, dma_bytes_shipped) = self.last_dma;
         match plan.mode {
             RoundMode::Cached => RoundStats {
                 recomputed_rows: 0,
@@ -547,6 +595,8 @@ impl IncrementalEngine {
                 frontier: 0,
                 cache_hits: eligible,
                 cache_misses: 0,
+                dma_bytes_dense,
+                dma_bytes_shipped,
             },
             RoundMode::Full | RoundMode::Incremental => {
                 let k = self.num_layers();
@@ -568,6 +618,8 @@ impl IncrementalEngine {
                     frontier: plan.frontier,
                     cache_hits: hits,
                     cache_misses: misses,
+                    dma_bytes_dense,
+                    dma_bytes_shipped,
                 }
             }
         }
@@ -683,6 +735,9 @@ impl InferenceEngine for IncrementalEngine {
 
     fn infer(&mut self) -> Result<Mat> {
         let plan = self.plan_round();
+        if plan.mode == RoundMode::Cached {
+            self.last_dma = (0, 0); // nothing gathered, nothing shipped
+        }
         if plan.mode != RoundMode::Cached {
             if let Err(e) = self.exec_round(&plan) {
                 // a half-written round must never serve: stale everything
@@ -748,7 +803,11 @@ mod tests {
     /// Force the incremental path (tests of the frontier execution
     /// itself, not of the cost model's crossover point).
     fn never_fall_back() -> IncrementalConfig {
-        IncrementalConfig { cost_margin: f64::INFINITY, tile_min: 8 }
+        IncrementalConfig {
+            cost_margin: f64::INFINITY,
+            tile_min: 8,
+            ..Default::default()
+        }
     }
 
     /// Reference logits via the full-graph oracle at the engine's exact
@@ -902,6 +961,56 @@ mod tests {
                 assert!(d < 1e-5, "post-churn owned row {i} drift {d}");
             }
         }
+    }
+
+    #[test]
+    fn sparse_and_dense_gathers_agree_and_sparse_skips_the_dense_mask() {
+        let ds = synthesize("inc-agg", 60, 90, 4, 12, 31);
+        let mk = |agg: Aggregation| {
+            IncrementalEngine::full(
+                &ds,
+                64,
+                serial(),
+                IncrementalConfig { aggregation: agg, ..never_fall_back() },
+            )
+            .unwrap()
+        };
+        let mut sparse = mk(Aggregation::Sparse);
+        let mut dense = mk(Aggregation::Dense);
+        // auto resolves sparse at this density ((180+60)/64² ≈ 0.06)
+        assert!(mk(Aggregation::Auto).gather_mode().lowers_sparse());
+        let churn: Vec<Update> = (0..8)
+            .flat_map(|i| {
+                [Update::RemoveEdge(i, i + 13), Update::AddEdge(i, i + 13)]
+            })
+            .collect();
+        let a = sparse.infer().unwrap();
+        let b = dense.infer().unwrap();
+        assert_eq!(a, b, "cold full rounds must agree");
+        for u in &churn {
+            sparse.apply(u).unwrap();
+            dense.apply(u).unwrap();
+        }
+        let a = sparse.infer().unwrap();
+        let b = dense.infer().unwrap();
+        assert_eq!(a, b, "post-churn frontier rounds must agree");
+        // the sparse engine never materialized the capacity² dense mask
+        assert!(!sparse.state.dense_norm_materialized());
+        assert!(dense.state.dense_norm_materialized());
+        // dma gauge: sparse ships (far) fewer bytes than dense-equivalent
+        let rs = sparse.round_stats().unwrap();
+        assert!(rs.dma_bytes_dense > 0);
+        assert!(
+            rs.dma_bytes_shipped < rs.dma_bytes_dense,
+            "{} !< {}",
+            rs.dma_bytes_shipped,
+            rs.dma_bytes_dense
+        );
+        let rd = dense.round_stats().unwrap();
+        assert_eq!(rd.dma_bytes_shipped, rd.dma_bytes_dense, "dense ships dense");
+        // oracle agreement after churn
+        let want = oracle(&sparse);
+        assert!(want.max_abs_diff(&a) < 1e-4, "drift {}", want.max_abs_diff(&a));
     }
 
     #[test]

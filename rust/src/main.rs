@@ -102,7 +102,10 @@ fn main() -> Result<()> {
             let events = args.usize_opt("events", 2000)?;
             let query_ratio = args.f64_opt("query-ratio", 0.3)?;
             let engine = args.str_opt("engine", "coordinator");
-            serve_demo(&artifacts, &dataset, events, query_ratio, &engine)?;
+            let agg = grannite::ops::build::Aggregation::parse(
+                &args.str_opt("aggregation", "auto"),
+            )?;
+            serve_demo(&artifacts, &dataset, events, query_ratio, &engine, agg)?;
         }
         Some("fleet") => {
             let shards = args.usize_opt("shards", 4)?;
@@ -112,7 +115,10 @@ fn main() -> Result<()> {
             let query_ratio = args.f64_opt("query-ratio", 0.4)?;
             let devices = args.str_list_opt("devices", "series2,series1,gpu,cpu");
             let engine = args.str_opt("engine", "local");
-            fleet_demo(shards, nodes, edges, events, query_ratio, &devices, &engine)?;
+            let agg = grannite::ops::build::Aggregation::parse(
+                &args.str_opt("aggregation", "auto"),
+            )?;
+            fleet_demo(shards, nodes, edges, events, query_ratio, &devices, &engine, agg)?;
         }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
@@ -133,10 +139,12 @@ subcommands:
   split              GraphSplit placement report (--model, --variant)
   serve              dynamic knowledge-graph serving demo
                      (--engine coordinator|plan|incremental; plan and
-                      incremental run offline, no artifacts needed)
+                      incremental run offline, no artifacts needed;
+                      --aggregation dense|sparse|auto)
   fleet              sharded multi-device serving demo (offline, no artifacts)
                      (--shards N --devices series2,cpu,… --nodes --edges
-                      --events --query-ratio --engine local|plan|incremental)
+                      --events --query-ratio --engine local|plan|incremental
+                      --aggregation dense|sparse|auto)
 
 common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
                 --artifacts DIR
@@ -181,9 +189,11 @@ fn accuracy_table(c: &mut Coordinator, dataset: &str) -> Result<Table> {
 /// artifacts; `--engine plan` and `--engine incremental` run fully
 /// offline at the dataset's published scale (synthesized twin +
 /// deterministic weights), the latter through the delta-driven
-/// [`grannite::incremental::IncrementalEngine`].
+/// [`grannite::incremental::IncrementalEngine`]. `--aggregation`
+/// (dense|sparse|auto) picks the offline engines' aggregation lowering.
 fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
-              query_ratio: f64, engine: &str) -> Result<()> {
+              query_ratio: f64, engine: &str,
+              agg: grannite::ops::build::Aggregation) -> Result<()> {
     use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
     use grannite::server::{CoordinatorEngine, ServerConfig, ServerHandle, Update};
 
@@ -210,7 +220,7 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
                 move || {
                     let pool =
                         std::sync::Arc::new(grannite::engine::WorkerPool::serial());
-                    grannite::fleet::PlanEngine::full(&ds, capacity, pool)
+                    grannite::fleet::PlanEngine::full_with(&ds, capacity, pool, agg)
                 },
                 ServerConfig::default(),
             )
@@ -228,7 +238,10 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
                         &ds,
                         capacity,
                         pool,
-                        grannite::incremental::IncrementalConfig::default(),
+                        grannite::incremental::IncrementalConfig {
+                            aggregation: agg,
+                            ..Default::default()
+                        },
                     )
                 },
                 ServerConfig::default(),
@@ -236,7 +249,7 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
         }
         other => bail!("--engine must be coordinator|plan|incremental, got {other:?}"),
     };
-    println!("engine: {engine}");
+    println!("engine: {engine} (aggregation: {})", agg.name());
 
     let stream = KnowledgeGraphStream::new(spec.nodes, spec.capacity, query_ratio, 42);
     let mut responses = Vec::new();
@@ -267,6 +280,14 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
         "mask updates: {}  mean batch: {:.1}  throughput: {:.1} q/s",
         snap.mask_updates, snap.mean_batch, snap.throughput_qps
     );
+    if snap.dma_bytes_dense > 0 {
+        println!(
+            "mask DMA: shipped {} of {} dense-equivalent ({} saved)",
+            grannite::util::human_bytes(snap.dma_bytes_shipped),
+            grannite::util::human_bytes(snap.dma_bytes_dense),
+            grannite::util::human_bytes(snap.dma_bytes_saved()),
+        );
+    }
     if snap.eligible_rows > 0 {
         let fr = snap
             .frontier
@@ -288,8 +309,12 @@ fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
 /// offline. `--engine local` uses the label-voting
 /// [`grannite::fleet::LocalEngine`]; `--engine plan` serves a real GCN
 /// [`grannite::ops::plan::ExecPlan`] per shard (the planned executor).
+/// `--aggregation dense|sparse|auto` overrides the SpMM-vs-dense
+/// crossover for the plan/incremental engines (bench reproducibility).
+#[allow(clippy::too_many_arguments)]
 fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
-              query_ratio: f64, device_names: &[String], engine: &str) -> Result<()> {
+              query_ratio: f64, device_names: &[String], engine: &str,
+              agg: grannite::ops::build::Aggregation) -> Result<()> {
     use grannite::fleet::{Fleet, FleetConfig};
     use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
     use grannite::server::Update;
@@ -300,7 +325,8 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
     let roster: Vec<String> = (0..shards.max(1))
         .map(|i| device_names[i % device_names.len()].clone())
         .collect();
-    let cfg = FleetConfig::from_names(&roster)?;
+    let mut cfg = FleetConfig::from_names(&roster)?;
+    cfg.aggregation = agg;
     let capacity = nodes + nodes / 8;
     let ds = grannite::graph::datasets::synthesize("fleet", nodes, edges, 6, 64, 42);
     let fleet = match engine {
@@ -310,11 +336,14 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
             &ds,
             capacity,
             &cfg,
-            grannite::incremental::IncrementalConfig::default(),
+            grannite::incremental::IncrementalConfig {
+                aggregation: agg,
+                ..Default::default()
+            },
         )?,
         other => bail!("--engine must be local|plan|incremental, got {other:?}"),
     };
-    println!("engine: {engine}");
+    println!("engine: {engine} (aggregation: {})", agg.name());
 
     let mut t = Table::new(
         format!("fleet placement — {shards} shards over {nodes} nodes"),
@@ -389,20 +418,28 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
     pt.print();
 
     let (expected, applied) = (fleet.expected_versions(), fleet.applied_versions());
-    let agg = fleet.metrics();
+    let totals = fleet.metrics();
     println!("answered {ok} queries over {events} events");
     println!(
         "aggregate: {:.1} q/s  mean batch {:.1}  halo {} over {} rounds",
-        agg.throughput_qps,
-        agg.mean_batch,
-        grannite::util::human_bytes(agg.halo_bytes),
-        agg.halo_rounds
+        totals.throughput_qps,
+        totals.mean_batch,
+        grannite::util::human_bytes(totals.halo_bytes),
+        totals.halo_rounds
     );
-    if agg.eligible_rows > 0 {
+    if totals.dma_bytes_dense > 0 {
+        println!(
+            "mask DMA: shipped {} of {} dense-equivalent ({} saved via CSR/ZVC/SymG)",
+            grannite::util::human_bytes(totals.dma_bytes_shipped),
+            grannite::util::human_bytes(totals.dma_bytes_dense),
+            grannite::util::human_bytes(totals.dma_bytes_saved()),
+        );
+    }
+    if totals.eligible_rows > 0 {
         println!(
             "incremental: recompute ratio {:.3}  cache hit rate {:.3}",
-            agg.recompute_ratio(),
-            agg.cache_hit_rate()
+            totals.recompute_ratio(),
+            totals.cache_hit_rate()
         );
     }
     println!("version vector: sequenced {expected:?} applied {applied:?}");

@@ -37,6 +37,13 @@ pub struct RoundStats {
     pub cache_hits: usize,
     /// Activation rows that had to be recomputed.
     pub cache_misses: usize,
+    /// What the round's aggregation-mask traffic would have cost dense
+    /// (f32 matrix bytes).
+    pub dma_bytes_dense: usize,
+    /// What the round actually moved: CSR arrays on the sparse path, the
+    /// ZVC/SymG-compressed form on the dense path — the GraSp/SymG
+    /// machinery feeding a real gauge instead of orphaned stats.
+    pub dma_bytes_shipped: usize,
 }
 
 #[derive(Debug, Default)]
@@ -61,6 +68,9 @@ struct Inner {
     cache_row_hits: usize,
     cache_row_misses: usize,
     frontier_sizes: Vec<f64>,
+    /// Mask-traffic accounting (sparse/compressed aggregation operands).
+    dma_bytes_dense: usize,
+    dma_bytes_shipped: usize,
     started: Option<Instant>,
 }
 
@@ -88,6 +98,11 @@ pub struct Snapshot {
     pub cache_row_hits: usize,
     /// Activation rows that had to be recomputed.
     pub cache_row_misses: usize,
+    /// Dense cost of the aggregation-mask bytes rounds consumed.
+    pub dma_bytes_dense: usize,
+    /// Bytes actually shipped (CSR / ZVC / SymG-packed); see
+    /// [`Snapshot::dma_bytes_saved`].
+    pub dma_bytes_shipped: usize,
     /// Dirty-frontier size distribution (one sample per round).
     pub frontier: Option<Stats>,
     pub latency: Option<Stats>,
@@ -138,13 +153,20 @@ impl Metrics {
     }
 
     /// Record one inference round's incremental-execution accounting.
+    /// Rounds that only report DMA traffic (`eligible_rows == 0`, e.g.
+    /// full-recompute plan engines crediting mask compression) do not
+    /// contribute a frontier sample.
     pub fn record_round(&self, rs: &RoundStats) {
         let mut i = self.inner.lock().unwrap();
         i.recomputed_rows += rs.recomputed_rows;
         i.eligible_rows += rs.eligible_rows;
         i.cache_row_hits += rs.cache_hits;
         i.cache_row_misses += rs.cache_misses;
-        i.frontier_sizes.push(rs.frontier as f64);
+        i.dma_bytes_dense += rs.dma_bytes_dense;
+        i.dma_bytes_shipped += rs.dma_bytes_shipped;
+        if rs.eligible_rows > 0 {
+            i.frontier_sizes.push(rs.frontier as f64);
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -170,6 +192,8 @@ impl Metrics {
             eligible_rows: i.eligible_rows,
             cache_row_hits: i.cache_row_hits,
             cache_row_misses: i.cache_row_misses,
+            dma_bytes_dense: i.dma_bytes_dense,
+            dma_bytes_shipped: i.dma_bytes_shipped,
             frontier: if i.frontier_sizes.is_empty() {
                 None
             } else {
@@ -213,6 +237,7 @@ impl Metrics {
         let (mut halo_bytes, mut halo_us, mut halo_rounds) = (0usize, 0.0f64, 0usize);
         let (mut recomputed, mut eligible) = (0usize, 0usize);
         let (mut row_hits, mut row_misses) = (0usize, 0usize);
+        let (mut dma_dense, mut dma_shipped) = (0usize, 0usize);
         let mut elapsed = 1e-9f64;
         for m in sinks {
             let i = m.inner.lock().unwrap();
@@ -230,6 +255,8 @@ impl Metrics {
             eligible += i.eligible_rows;
             row_hits += i.cache_row_hits;
             row_misses += i.cache_row_misses;
+            dma_dense += i.dma_bytes_dense;
+            dma_shipped += i.dma_bytes_shipped;
             if let Some(s) = i.started {
                 elapsed = elapsed.max(s.elapsed().as_secs_f64());
             }
@@ -246,6 +273,8 @@ impl Metrics {
             eligible_rows: eligible,
             cache_row_hits: row_hits,
             cache_row_misses: row_misses,
+            dma_bytes_dense: dma_dense,
+            dma_bytes_shipped: dma_shipped,
             frontier: if frontiers.is_empty() {
                 None
             } else {
@@ -286,6 +315,16 @@ impl Snapshot {
         }
     }
 
+    /// DMA bytes the sparse/compressed aggregation operands saved vs
+    /// shipping dense masks — the GraSp (ZVC) + SymG + CSR win as a real
+    /// per-shard gauge (exact through [`Metrics::merged`]: both sides
+    /// are plain counters). 0 when nothing was recorded, and never
+    /// negative — engines fall back to the dense form when compression
+    /// would not pay, exactly like real ZVC DMA engines.
+    pub fn dma_bytes_saved(&self) -> usize {
+        self.dma_bytes_dense.saturating_sub(self.dma_bytes_shipped)
+    }
+
     /// Aggregate-level merge for snapshots whose raw samples are gone
     /// (e.g. collected from remote shards). Counters are exact; latency
     /// percentiles are conservative (max of the inputs) and means are
@@ -307,6 +346,8 @@ impl Snapshot {
             eligible_rows: self.eligible_rows + other.eligible_rows,
             cache_row_hits: self.cache_row_hits + other.cache_row_hits,
             cache_row_misses: self.cache_row_misses + other.cache_row_misses,
+            dma_bytes_dense: self.dma_bytes_dense + other.dma_bytes_dense,
+            dma_bytes_shipped: self.dma_bytes_shipped + other.dma_bytes_shipped,
             frontier: merge_stats(&self.frontier, &other.frontier),
             latency: merge_stats(&self.latency, &other.latency),
             queue: merge_stats(&self.queue, &other.queue),
@@ -445,6 +486,7 @@ mod tests {
             frontier: 10,
             cache_hits: 40,
             cache_misses: 10,
+            ..Default::default()
         });
         // a full-fallback round: everything recomputed, nothing reused
         m.record_round(&RoundStats {
@@ -453,6 +495,7 @@ mod tests {
             frontier: 90,
             cache_hits: 0,
             cache_misses: 100,
+            ..Default::default()
         });
         let s = m.snapshot();
         assert!((s.recompute_ratio() - 110.0 / 200.0).abs() < 1e-12);
@@ -472,6 +515,7 @@ mod tests {
             frontier: 5,
             cache_hits: 45,
             cache_misses: 5,
+            ..Default::default()
         });
         b.record_round(&RoundStats {
             recomputed_rows: 50,
@@ -479,6 +523,7 @@ mod tests {
             frontier: 50,
             cache_hits: 0,
             cache_misses: 50,
+            ..Default::default()
         });
         let merged = Metrics::merged([&a, &b]);
         assert_eq!(merged.recomputed_rows, 55);
@@ -497,7 +542,37 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.recompute_ratio(), 0.0);
         assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.dma_bytes_saved(), 0);
         assert!(s.frontier.is_none());
+    }
+
+    #[test]
+    fn dma_savings_gauge_exact_through_merged_and_merge() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        // shard 0: a sparse round — CSR shipped instead of the dense mask
+        a.record_round(&RoundStats {
+            dma_bytes_dense: 10_000,
+            dma_bytes_shipped: 800,
+            ..Default::default()
+        });
+        // shard 1: a dense round where compression would not pay
+        b.record_round(&RoundStats {
+            dma_bytes_dense: 5_000,
+            dma_bytes_shipped: 5_000,
+            ..Default::default()
+        });
+        assert_eq!(a.snapshot().dma_bytes_saved(), 9_200);
+        assert_eq!(b.snapshot().dma_bytes_saved(), 0);
+        let merged = Metrics::merged([&a, &b]);
+        assert_eq!(merged.dma_bytes_dense, 15_000);
+        assert_eq!(merged.dma_bytes_shipped, 5_800);
+        assert_eq!(merged.dma_bytes_saved(), 9_200);
+        // aggregate-level merge keeps the counters exact too
+        let coarse = a.snapshot().merge(&b.snapshot());
+        assert_eq!(coarse.dma_bytes_saved(), 9_200);
+        // dma-only rounds contribute no frontier sample
+        assert!(merged.frontier.is_none());
     }
 
     #[test]

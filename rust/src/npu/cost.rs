@@ -95,7 +95,22 @@ pub struct CostOpts {
     pub mask_sparsity_skip: f64,
     /// Operand dtype width override for QuantGr-quantized dense ops.
     pub dense_dtype_bytes: usize,
+    /// Density of the `SpMM` sparse operand (0 → [`SPMM_DEFAULT_DENSITY`]).
+    /// Unlike `mask_sparsity_skip`, this is *uncapped*: SpMM never
+    /// touches the zeros at all (structural sparsity, not a zero-skip
+    /// pipeline), so its MAC count is exactly nnz·d.
+    pub spmm_density: f64,
 }
+
+/// Density assumed for SpMM operands when the caller knows nothing
+/// (a conservative citation-graph-scale figure).
+pub const SPMM_DEFAULT_DENSITY: f64 = 0.01;
+
+/// MAC-grid efficiency loss of gathered (indexed) rhs rows relative to a
+/// streamed dense operand: the SpMM crossover sits at density ≈ 1/this,
+/// calibrated to the engine-measured crossover
+/// ([`crate::ops::build::SPMM_DENSITY_THRESHOLD`] = 0.25).
+pub const SPMM_GATHER_PENALTY: f64 = 4.0;
 
 /// Compute-only cost of `op` on `hw` with the given engine placement.
 /// DMA/transfer costs are the scheduler's job ([`super::sim`]).
@@ -125,6 +140,32 @@ pub fn op_cost(g: &OpGraph, id: usize, hw: &HardwareConfig,
                 0.0
             };
             matmul_cost(hw, a[0], a[1], b[1], dtype_bytes, skip)
+        }
+        OpKind::SpMM => {
+            // GraSp made structural: the sparse aggregation performs
+            // exactly nnz·d MACs (density · m·k·n) — an *uncapped* skip,
+            // unlike the 75%-capped zero-skip pipeline — but gathered rhs
+            // rows keep only ~1/PENALTY of the MAC grid busy, plus a
+            // per-entry address walk on the vector lanes. The resulting
+            // crossover vs the dense MatMul lands at density ≈
+            // 1/SPMM_GATHER_PENALTY, matching the engine-measured
+            // [`crate::ops::build::SPMM_DENSITY_THRESHOLD`], which is what
+            // makes plan-vs-dense decisions principled rather than ad hoc.
+            let a = in_shape(0);
+            let b = in_shape(1);
+            let density = if opts.spmm_density > 0.0 {
+                opts.spmm_density
+            } else {
+                SPMM_DEFAULT_DENSITY
+            }
+            .min(1.0);
+            let mut c = matmul_cost(hw, a[0], a[1], b[1], dtype_bytes, 1.0 - density);
+            c.us *= SPMM_GATHER_PENALTY;
+            let nnz = (a[0] * a[1]) as f64 * density;
+            let lanes = (hw.vector_lanes * hw.tiles) as f64;
+            c.us += nnz / (lanes * hw.clock_ghz * 1e3);
+            c.pj += nnz * hw.pj_per_dsp_elem;
+            c
         }
         OpKind::QMatMul { .. } => {
             let a = in_shape(0);
@@ -336,9 +377,47 @@ mod tests {
             agg_id,
             &hw(),
             Engine::Dpu,
-            CostOpts { mask_sparsity_skip: 0.99, dense_dtype_bytes: 0 },
+            CostOpts { mask_sparsity_skip: 0.99, ..Default::default() },
         );
         assert!(sparse.us < dense.us * 0.35, "{} vs {}", sparse.us, dense.us);
+    }
+
+    #[test]
+    fn spmm_crossover_tracks_the_engine_threshold() {
+        // (4096,4096)@(4096,64): a citation-graph-scale aggregation shape,
+        // big enough that per-op overhead does not mask the MAC terms
+        let dense_g = graph_with(OpKind::MatMul, &[4096, 4096], Some(&[4096, 64]), &[4096, 64]);
+        let dense = op_cost(&dense_g, 2, &hw(), Engine::Dpu, CostOpts::default());
+        let spmm_at = |density: f64| {
+            let mut g = OpGraph::new("s");
+            let a = g.input("norm", &[4096, 4096], DType::F32, Stage::Compute);
+            let b = g.input("h", &[4096, 64], DType::F32, Stage::Compute);
+            let o = g.op(OpKind::SpMM, &[a, b], &[4096, 64], Stage::Compute);
+            g.set_output(o);
+            op_cost(
+                &g,
+                2,
+                &hw(),
+                Engine::Dpu,
+                CostOpts { spmm_density: density, ..Default::default() },
+            )
+        };
+        // Cora density: sparse aggregation is an order of magnitude cheaper
+        let cora = spmm_at(0.002);
+        assert!(cora.us < dense.us * 0.1, "{} !< {}", cora.us, dense.us * 0.1);
+        // fully dense operand: the gather penalty makes SpMM the wrong call
+        let full = spmm_at(1.0);
+        assert!(full.us > dense.us, "{} !> {}", full.us, dense.us);
+        // the crossover sits near the engine-measured threshold
+        let at_threshold = spmm_at(crate::ops::build::SPMM_DENSITY_THRESHOLD);
+        let ratio = at_threshold.us / dense.us;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "crossover ratio {ratio:.2} strayed from the engine threshold"
+        );
+        // monotone in density
+        assert!(spmm_at(0.01).us < spmm_at(0.1).us);
+        assert!(spmm_at(0.1).us < spmm_at(0.5).us);
     }
 
     #[test]

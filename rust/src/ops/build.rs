@@ -4,11 +4,91 @@
 //! Input naming matches the AOT artifacts (`python/compile/aot.py`), so a
 //! built graph, the PJRT executable, and the simulator all agree on what
 //! gets bound at runtime.
+//!
+//! Aggregation is emitted in one of two forms, selected by
+//! [`Aggregation`]: the dense `MatMul` against the materialized norm
+//! mask (the oracle path, and the right call for dense masks), or the
+//! sparse-native [`OpKind::SpMM`] against the same mask bound as a
+//! [`crate::tensor::Tensor::Csr`] operand — O(nnz·d) instead of
+//! O(n²·d), which at citation-graph density (~0.1%) is the difference
+//! between the aggregation dominating and vanishing.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::{OpGraph, OpId, OpKind, Stage, LEAKY_SLOPE, NEG_MASK};
 use crate::tensor::DType;
+
+/// Mask density below which the SpMM lowering beats the dense MatMul
+/// (same measured crossover family as
+/// [`crate::tensor::SKIP_DENSITY_THRESHOLD`]: below it, per-entry
+/// indexing costs less than streaming the zeros; the cost model in
+/// [`crate::npu::cost`] agrees — see its crossover test).
+pub const SPMM_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// How builders lower the aggregation step. `Auto` resolves per graph
+/// from the mask density ([`Aggregation::resolve`]); builders treat an
+/// unresolved `Auto` as `Dense` (the oracle-compatible default), so
+/// callers that care resolve first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Aggregation {
+    /// n×n `MatMul` against the dense mask (the property-test oracle).
+    Dense,
+    /// [`OpKind::SpMM`] against the CSR-bound mask.
+    Sparse,
+    /// Pick per graph: sparse below [`SPMM_DENSITY_THRESHOLD`].
+    #[default]
+    Auto,
+}
+
+impl Aggregation {
+    /// Parse a `--aggregation dense|sparse|auto` flag.
+    pub fn parse(s: &str) -> Result<Aggregation> {
+        match s {
+            "dense" => Ok(Aggregation::Dense),
+            "sparse" => Ok(Aggregation::Sparse),
+            "auto" => Ok(Aggregation::Auto),
+            other => Err(anyhow!(
+                "--aggregation must be dense|sparse|auto, got {other:?}"
+            )),
+        }
+    }
+
+    /// Resolve `Auto` against a mask density (never returns `Auto`).
+    pub fn resolve(self, density: f64) -> Aggregation {
+        match self {
+            Aggregation::Auto => {
+                if density < SPMM_DENSITY_THRESHOLD {
+                    Aggregation::Sparse
+                } else {
+                    Aggregation::Dense
+                }
+            }
+            fixed => fixed,
+        }
+    }
+
+    /// Does this (resolved) mode emit `SpMM`?
+    pub fn lowers_sparse(self) -> bool {
+        self == Aggregation::Sparse
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Aggregation::Dense => "dense",
+            Aggregation::Sparse => "sparse",
+            Aggregation::Auto => "auto",
+        }
+    }
+
+    /// The aggregation op kind this mode emits.
+    fn op_kind(self) -> OpKind {
+        if self.lowers_sparse() {
+            OpKind::SpMM
+        } else {
+            OpKind::MatMul
+        }
+    }
+}
 
 /// Model dimensions shared by all builders.
 #[derive(Debug, Clone, Copy)]
@@ -65,16 +145,27 @@ impl Default for QuantScales {
     }
 }
 
-/// Build a model variant by name (the CLI/bench entry point).
+/// Build a model variant by name (the CLI/bench entry point) with the
+/// dense aggregation (artifact-compatible shapes; the oracle default).
 pub fn build(model: &str, variant: &str, dims: GnnDims) -> Result<OpGraph> {
+    build_with(model, variant, dims, Aggregation::Dense)
+}
+
+/// Build a model variant with an explicit aggregation lowering. Models
+/// whose aggregation is data-dependent (GAT attention) or already
+/// non-matmul (SAGE-max gather / GrAx3 max-pool) ignore the mode.
+pub fn build_with(model: &str, variant: &str, dims: GnnDims,
+                  agg: Aggregation) -> Result<OpGraph> {
     Ok(match (model, variant) {
         ("gcn", "baseline") => gcn_baseline(dims),
-        ("gcn", "stagr") | ("gcn", "grad") => gcn_stagr(dims, variant),
-        ("gcn", "quant") => gcn_quant(dims, QuantScales::default()),
+        ("gcn", "stagr") | ("gcn", "grad") => gcn_stagr_with(dims, variant, agg),
+        ("gcn", "quant") => gcn_quant_with(dims, QuantScales::default(), agg),
         ("gat", "baseline") => gat(dims, GatVariant::Baseline),
         ("gat", "effop") => gat(dims, GatVariant::EffOp),
         ("gat", "grax") => gat(dims, GatVariant::Grax),
-        ("sage_mean", "stagr") | ("sage_mean", "baseline") => sage_mean(dims),
+        ("sage_mean", "stagr") | ("sage_mean", "baseline") => {
+            sage_mean_with(dims, agg)
+        }
         ("sage_max", "baseline") => sage_max_baseline(dims),
         ("sage_max", "grax3") => sage_max_grax3(dims),
         (m, v) => bail!("unknown model/variant {m:?}/{v:?}"),
@@ -122,11 +213,25 @@ pub fn gcn_baseline(d: GnnDims) -> OpGraph {
     g
 }
 
-/// StaGr + PreG (+ GrAd when the mask is fed per-request): aggregation is
-/// a dense MatMul against the precomputed `norm` input; zero preprocessing
-/// ops remain on the NPU.
+/// StaGr + PreG (+ GrAd when the mask is fed per-request): aggregation
+/// against the precomputed `norm` input; zero preprocessing ops remain on
+/// the NPU. Dense lowering (the oracle path; see [`gcn_stagr_with`] for
+/// the SpMM variant).
 pub fn gcn_stagr(d: GnnDims, name: &str) -> OpGraph {
-    let mut g = OpGraph::new(format!("gcn_{name}"));
+    gcn_stagr_with(d, name, Aggregation::Dense)
+}
+
+/// [`gcn_stagr`] with an explicit aggregation lowering: `Sparse` emits
+/// [`OpKind::SpMM`] — the `norm` input keeps its name and logical
+/// `[n, n]` shape but binds a CSR tensor, so shard memory scales with
+/// nnz instead of n².
+pub fn gcn_stagr_with(d: GnnDims, name: &str, agg: Aggregation) -> OpGraph {
+    let sparse = agg.lowers_sparse();
+    let mut g = OpGraph::new(if sparse {
+        format!("gcn_{name}_spmm")
+    } else {
+        format!("gcn_{name}")
+    });
     let norm = g.input("norm", &[d.n, d.n], DType::F32, Stage::Compute);
     let x = g.input("x", &[d.n, d.f], DType::F32, Stage::Compute);
     let mut h = x;
@@ -135,10 +240,10 @@ pub fn gcn_stagr(d: GnnDims, name: &str) -> OpGraph {
         let out_w = d.out_width(layer);
         let w = g.input(&format!("w{}", layer + 1), &[width, out_w], DType::F32, Stage::Compute);
         let b = g.input(&format!("b{}", layer + 1), &[1, out_w], DType::F32, Stage::Compute);
-        // combination first (f → f'), then the n×n aggregation
+        // combination first (f → f'), then the sparse/dense aggregation
         let mm = g.op(OpKind::MatMul, &[h, w], &[d.n, out_w], Stage::Compute);
-        let agg = g.op(OpKind::MatMul, &[norm, mm], &[d.n, out_w], Stage::Compute);
-        let mut out = g.op(OpKind::Add, &[agg, b], &[d.n, out_w], Stage::Compute);
+        let agg_id = g.op(agg.op_kind(), &[norm, mm], &[d.n, out_w], Stage::Compute);
+        let mut out = g.op(OpKind::Add, &[agg_id, b], &[d.n, out_w], Stage::Compute);
         if layer + 1 < d.layers {
             out = g.op(OpKind::Relu, &[out], &[d.n, out_w], Stage::Compute);
         }
@@ -150,8 +255,16 @@ pub fn gcn_stagr(d: GnnDims, name: &str) -> OpGraph {
 }
 
 /// QuantGr on top of StaGr: INT8 combination MatMuls with static scales.
+/// Dense aggregation (see [`gcn_quant_with`]).
 pub fn gcn_quant(d: GnnDims, s: QuantScales) -> OpGraph {
-    let mut g = OpGraph::new("gcn_quant");
+    gcn_quant_with(d, s, Aggregation::Dense)
+}
+
+/// [`gcn_quant`] with an explicit aggregation lowering: the INT8
+/// combination path is unchanged, the aggregation becomes SpMM.
+pub fn gcn_quant_with(d: GnnDims, s: QuantScales, agg: Aggregation) -> OpGraph {
+    let sparse = agg.lowers_sparse();
+    let mut g = OpGraph::new(if sparse { "gcn_quant_spmm" } else { "gcn_quant" });
     let norm = g.input("norm", &[d.n, d.n], DType::F32, Stage::Compute);
     let x = g.input("x", &[d.n, d.f], DType::F32, Stage::Compute);
 
@@ -174,8 +287,8 @@ pub fn gcn_quant(d: GnnDims, s: QuantScales) -> OpGraph {
             &[d.n, out_w],
             Stage::Compute,
         );
-        let agg = g.op(OpKind::MatMul, &[norm, mm], &[d.n, out_w], Stage::Compute);
-        let mut out = g.op(OpKind::Add, &[agg, b], &[d.n, out_w], Stage::Compute);
+        let agg_id = g.op(agg.op_kind(), &[norm, mm], &[d.n, out_w], Stage::Compute);
+        let mut out = g.op(OpKind::Add, &[agg_id, b], &[d.n, out_w], Stage::Compute);
         if layer + 1 < d.layers {
             out = g.op(OpKind::Relu, &[out], &[d.n, out_w], Stage::Compute);
         }
@@ -384,14 +497,23 @@ fn sage_skeleton(
     h
 }
 
-/// SAGE-mean, StaGr-style: dense MatMul against the row-normalized
+/// SAGE-mean, StaGr-style: aggregation against the row-normalized
 /// sampled mask (prepared CPU-side; PreG applied to the degree divide).
+/// Dense lowering (see [`sage_mean_with`]).
 pub fn sage_mean(d: GnnDims) -> OpGraph {
-    let mut g = OpGraph::new("sage_mean");
+    sage_mean_with(d, Aggregation::Dense)
+}
+
+/// [`sage_mean`] with an explicit aggregation lowering: the sampled mask
+/// caps each row at k+1 entries, so its density is ≤ (k+1)/n and SpMM
+/// wins at any realistic scale.
+pub fn sage_mean_with(d: GnnDims, agg: Aggregation) -> OpGraph {
+    let sparse = agg.lowers_sparse();
+    let mut g = OpGraph::new(if sparse { "sage_mean_spmm" } else { "sage_mean" });
     let mask = g.input("norm_mask", &[d.n, d.n], DType::F32, Stage::Compute);
     let x = g.input("x", &[d.n, d.f], DType::F32, Stage::Compute);
     let out = sage_skeleton(&mut g, d, x, |g, h, width| {
-        g.op(OpKind::MatMul, &[mask, h], &[d.n, width], Stage::Compute)
+        g.op(agg.op_kind(), &[mask, h], &[d.n, width], Stage::Compute)
     });
     g.set_output(out);
     g
@@ -461,6 +583,51 @@ mod tests {
             g.validate().unwrap_or_else(|e| panic!("{m}/{v}: {e}"));
         }
         assert!(build("gcn", "nope", dims()).is_err());
+    }
+
+    #[test]
+    fn sparse_lowering_swaps_aggregation_only() {
+        for (m, v, aggs) in [
+            ("gcn", "stagr", 2usize),
+            ("gcn", "grad", 2),
+            ("gcn", "quant", 2),
+            ("sage_mean", "stagr", 2),
+        ] {
+            let dense = build_with(m, v, dims(), Aggregation::Dense).unwrap();
+            let sparse = build_with(m, v, dims(), Aggregation::Sparse).unwrap();
+            sparse.validate().unwrap();
+            assert_eq!(dense.len(), sparse.len(), "{m}/{v}: op count must match");
+            assert_eq!(sparse.op_histogram().get("SpMM"), Some(&aggs), "{m}/{v}");
+            assert_eq!(dense.op_histogram().get("SpMM"), None);
+            // only the aggregation ops differ; shapes and inputs are equal
+            for (a, b) in dense.ops.iter().zip(&sparse.ops) {
+                assert_eq!(a.shape, b.shape);
+                assert_eq!(a.inputs, b.inputs);
+                if a.kind != b.kind {
+                    assert_eq!(a.kind, OpKind::MatMul);
+                    assert_eq!(b.kind, OpKind::SpMM);
+                }
+            }
+            // input naming is unchanged — the runtime binds CSR by name
+            let dn: Vec<&str> = dense.inputs().into_iter().map(|(_, n)| n).collect();
+            let sn: Vec<&str> = sparse.inputs().into_iter().map(|(_, n)| n).collect();
+            assert_eq!(dn, sn);
+        }
+        // GAT/SAGE-max ignore the mode (no matmul-shaped aggregation mask)
+        let g = build_with("gat", "grax", dims(), Aggregation::Sparse).unwrap();
+        assert_eq!(g.op_histogram().get("SpMM"), None);
+    }
+
+    #[test]
+    fn aggregation_auto_resolves_by_density() {
+        assert_eq!(Aggregation::Auto.resolve(0.001), Aggregation::Sparse);
+        assert_eq!(Aggregation::Auto.resolve(0.5), Aggregation::Dense);
+        assert_eq!(Aggregation::Dense.resolve(0.001), Aggregation::Dense);
+        assert_eq!(Aggregation::Sparse.resolve(0.9), Aggregation::Sparse);
+        assert_eq!(Aggregation::parse("sparse").unwrap(), Aggregation::Sparse);
+        assert_eq!(Aggregation::parse("auto").unwrap(), Aggregation::Auto);
+        assert!(Aggregation::parse("csr").is_err());
+        assert!(!Aggregation::Auto.lowers_sparse(), "unresolved auto = dense");
     }
 
     #[test]

@@ -54,6 +54,12 @@ fn eval_op(_g: &OpGraph, op: &Op, values: &[Option<Tensor>],
 
         // ---- dense ----
         OpKind::MatMul => Tensor::from_mat(&mat(0)?.matmul(&mat(1)?)),
+        // Oracle semantics for the sparse aggregation: densify the CSR
+        // operand and run the dense matmul — the slow-but-obviously-right
+        // path every SpMM kernel is property-tested against
+        // (rust/tests/spmm_equivalence.rs). Dense lhs bindings pass
+        // through `to_mat` unchanged.
+        OpKind::SpMM => Tensor::from_mat(&mat(0)?.matmul(&mat(1)?)),
         OpKind::Transpose => Tensor::from_mat(&mat(0)?.transpose()),
         OpKind::Add => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| a + b)?),
         OpKind::Sub => Tensor::from_mat(&broadcast_zip(&mat(0)?, &mat(1)?, |a, b| a - b)?),

@@ -128,7 +128,7 @@ impl OpGraph {
                         return fail("unnamed input".into());
                     }
                 }
-                OpKind::MatMul | OpKind::QMatMul { .. } => {
+                OpKind::MatMul | OpKind::SpMM | OpKind::QMatMul { .. } => {
                     let (a, b) = (in_shape(0), in_shape(1));
                     if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
                         return fail(format!("bad matmul {a:?} @ {b:?}"));
@@ -211,6 +211,9 @@ impl OpGraph {
     }
 
     /// Total MAC count of dense matmuls (roofline math for DESIGN.md §8).
+    /// `SpMM` is excluded: its MAC count is O(nnz·d), a property of the
+    /// bound operand, not of the graph shapes — [`crate::npu::cost`]
+    /// prices it from the mask density instead.
     pub fn matmul_macs(&self) -> usize {
         self.ops
             .iter()

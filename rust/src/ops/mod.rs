@@ -75,6 +75,12 @@ pub enum OpKind {
     // ---- dense, DPU-class ----
     /// (m,k) @ (k,n) → (m,n).
     MatMul,
+    /// Sparse × dense matmul: lhs is a CSR structure mask bound as a
+    /// [`crate::tensor::Tensor::Csr`] input (the GraSp-native aggregation
+    /// path, O(nnz·d) instead of O(m·k·n)). Same shape contract as
+    /// MatMul; dense lhs bindings are accepted as the above-threshold
+    /// fallback.
+    SpMM,
     /// (m,n) → (n,m).
     Transpose,
     /// Elementwise add; rhs may be (1,n) (row broadcast) or (m,1) (col).
@@ -169,6 +175,7 @@ impl OpKind {
         match self {
             OpKind::Input => "Input",
             OpKind::MatMul => "MatMul",
+            OpKind::SpMM => "SpMM",
             OpKind::Transpose => "Transpose",
             OpKind::Add => "Add",
             OpKind::Sub => "Sub",
@@ -241,6 +248,8 @@ mod tests {
         assert_eq!(OpKind::Softmax.default_engine(), Engine::Dsp);
         assert_eq!(OpKind::Elu.default_engine(), Engine::Dsp);
         assert_eq!(OpKind::MatMul.default_engine(), Engine::Dpu);
+        // SpMM is the GraSp zero-skip datapath on the same MAC grid
+        assert_eq!(OpKind::SpMM.default_engine(), Engine::Dpu);
         assert_eq!(OpKind::Mul.default_engine(), Engine::Dpu);
         assert_eq!(OpKind::MaskedMaxPool.default_engine(), Engine::Dpu);
     }

@@ -20,7 +20,13 @@
 //! - `Quantize` ops feeding only `QMatMul` lhs operands are lowered to
 //!   **real INT8**: their output lives in an `i8` arena slab and the
 //!   consuming matmul runs an i8×i8→i32 kernel (QuantGr's datapath)
-//!   instead of the rounded-f32 emulation of the reference executor.
+//!   instead of the rounded-f32 emulation of the reference executor,
+//! - `SpMM` sparse operands are recognized as **sparse inputs**: they
+//!   bind indptr/indices/values ([`crate::tensor::Tensor::Csr`]) instead
+//!   of n² floats, never occupy an arena slab, and the compile step
+//!   verifies no dense consumer aliases them — so a sparse plan's
+//!   steady-state memory is `arena_bytes()` + O(nnz), with no n×n slab
+//!   anywhere.
 //!
 //! The plan itself is immutable and shareable ([`std::sync::Arc`]); the
 //! mutable part (arena buffers, cached INT8 weights) lives in
@@ -124,6 +130,9 @@ pub struct ExecPlan {
     pub slab_elems: Vec<usize>,
     /// Element capacity of each i8 slab.
     pub i8_slab_elems: Vec<usize>,
+    /// Op id → true for Input ops bound as `SpMM` sparse operands (CSR
+    /// bindings; no dense slab, no f32 resolution).
+    pub sparse_input: Vec<bool>,
     /// Ops folded away as fused-chain interiors.
     pub fused_away: usize,
 }
@@ -169,6 +178,47 @@ impl ExecPlan {
                 if g.ops[src].kind != OpKind::Input {
                     bail!("{} op#{id}: computed index tensors unsupported", g.name);
                 }
+            }
+        }
+        // SpMM sparse operands resolve straight from the bindings (CSR
+        // arrays, no arena slab): the lhs must be a graph input, and a
+        // CSR-bound input cannot double as a dense operand elsewhere.
+        let mut sparse_input = vec![false; n];
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::SpMM {
+                let src = op.inputs[0];
+                if g.ops[src].kind != OpKind::Input {
+                    bail!(
+                        "{} op#{id}: computed sparse operands unsupported \
+                         (SpMM lhs must be a graph input)",
+                        g.name
+                    );
+                }
+                sparse_input[src] = true;
+            }
+        }
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::SpMM {
+                continue;
+            }
+            for (pos, &src) in op.inputs.iter().enumerate() {
+                if sparse_input[src] {
+                    bail!(
+                        "{} op#{id} {}: input #{pos} is an SpMM sparse \
+                         operand and cannot feed a dense consumer",
+                        g.name,
+                        op.kind.name()
+                    );
+                }
+            }
+        }
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::SpMM && sparse_input[op.inputs[1]] {
+                bail!(
+                    "{} op#{id}: SpMM rhs must be dense, but its input is a \
+                     sparse operand",
+                    g.name
+                );
             }
         }
 
@@ -334,8 +384,14 @@ impl ExecPlan {
             i8_slot,
             slab_elems,
             i8_slab_elems,
+            sparse_input,
             fused_away,
         })
+    }
+
+    /// True when this plan aggregates through `SpMM` (binds CSR masks).
+    pub fn is_sparse(&self) -> bool {
+        self.sparse_input.iter().any(|&s| s)
     }
 
     /// Steady-state f32 arena footprint in bytes.
@@ -462,6 +518,63 @@ mod tests {
             let p = ExecPlan::compile(&g).unwrap_or_else(|e| panic!("{m}/{v}: {e}"));
             assert!(!p.steps.is_empty());
         }
+    }
+
+    #[test]
+    fn sparse_plan_marks_csr_inputs_and_avoids_square_slabs() {
+        use crate::ops::build::Aggregation;
+        let d = dims();
+        for (m, v) in [("gcn", "stagr"), ("gcn", "quant"), ("sage_mean", "stagr")] {
+            let g = build::build_with(m, v, d, Aggregation::Sparse).unwrap();
+            let p = ExecPlan::compile(&g).unwrap_or_else(|e| panic!("{m}/{v}: {e}"));
+            assert!(p.is_sparse(), "{m}/{v}");
+            // exactly the mask input is sparse
+            let marked: Vec<&str> = p
+                .graph
+                .ops
+                .iter()
+                .enumerate()
+                .filter(|(id, _)| p.sparse_input[*id])
+                .map(|(_, op)| op.name.as_str())
+                .collect();
+            assert_eq!(marked.len(), 1, "{m}/{v}: {marked:?}");
+            // no arena slab is n×n — the whole point of the lowering
+            assert!(
+                p.slab_elems.iter().all(|&e| e < d.n * d.n),
+                "{m}/{v}: square slab survived: {:?}",
+                p.slab_elems
+            );
+            // dense twin compiles to the same step count
+            let gd = build::build_with(m, v, d, Aggregation::Dense).unwrap();
+            let pd = ExecPlan::compile(&gd).unwrap();
+            assert_eq!(p.steps.len(), pd.steps.len());
+            assert!(!pd.is_sparse());
+        }
+    }
+
+    #[test]
+    fn sparse_operand_feeding_dense_consumer_rejected() {
+        // "norm" feeds both an SpMM and a dense Scale: a single binding
+        // cannot be CSR and dense at once, so compile must refuse
+        let mut g = OpGraph::new("alias");
+        let norm = g.input("norm", &[4, 4], DType::F32, Stage::Compute);
+        let x = g.input("x", &[4, 3], DType::F32, Stage::Compute);
+        let agg = g.op(OpKind::SpMM, &[norm, x], &[4, 3], Stage::Compute);
+        let sc = g.op(OpKind::Scale(2.0), &[norm], &[4, 4], Stage::Compute);
+        let out = g.op(OpKind::MatMul, &[sc, agg], &[4, 3], Stage::Compute);
+        g.set_output(out);
+        let err = ExecPlan::compile(&g).unwrap_err().to_string();
+        assert!(err.contains("sparse"), "{err}");
+
+        // a computed sparse operand is equally unsupported
+        let mut g2 = OpGraph::new("computed");
+        let x = g2.input("x", &[4, 4], DType::F32, Stage::Compute);
+        let h = g2.input("h", &[4, 3], DType::F32, Stage::Compute);
+        let r = g2.op(OpKind::Relu, &[x], &[4, 4], Stage::Compute);
+        let agg = g2.op(OpKind::SpMM, &[r, h], &[4, 3], Stage::Compute);
+        g2.set_output(agg);
+        let err = ExecPlan::compile(&g2).unwrap_err().to_string();
+        assert!(err.contains("computed sparse"), "{err}");
     }
 
     #[test]

@@ -102,6 +102,11 @@ pub fn write_gnnt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()>
             Tensor::I32 { .. } => 2,
             Tensor::U8 { .. } => 3,
             Tensor::F16 { .. } => 4,
+            // CSR tensors are in-memory only (rebuilt from the graph);
+            // densifying here would silently explode the container.
+            Tensor::Csr { .. } => {
+                bail!("CSR tensor {name:?} is not .gnnt-serializable")
+            }
         };
         f.write_all(&[code, t.shape().len() as u8])?;
         for &d in t.shape() {
@@ -128,6 +133,7 @@ pub fn write_gnnt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()>
                     f.write_all(&v.to_le_bytes())?;
                 }
             }
+            Tensor::Csr { .. } => unreachable!("rejected above"),
         }
     }
     Ok(())

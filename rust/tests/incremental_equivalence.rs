@@ -133,8 +133,12 @@ fn prop_incremental_matches_full_recompute() {
         // path every round; ∞ forces the frontier path every round
         let configs = [
             IncrementalConfig::default(),
-            IncrementalConfig { cost_margin: 0.0, tile_min: 8 },
-            IncrementalConfig { cost_margin: f64::INFINITY, tile_min: 8 },
+            IncrementalConfig { cost_margin: 0.0, tile_min: 8, ..Default::default() },
+            IncrementalConfig {
+                cost_margin: f64::INFINITY,
+                tile_min: 8,
+                ..Default::default()
+            },
         ];
         for cfg in configs {
             let mut eng = IncrementalEngine::full(&ds, cap, serial(), cfg).unwrap();

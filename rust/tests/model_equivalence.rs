@@ -224,6 +224,9 @@ fn grad_mask_update_equals_fresh_graph_inference() {
     // a freshly-built graph with the same edges
     let fx = fixture(31);
     let mut dg = grannite::graph::DynamicGraph::new(&fx.graph, N).unwrap();
+    // materialize the dense mask first so the updates below exercise the
+    // in-place incremental maintenance, not a lazy rebuild
+    let _ = dg.norm();
     dg.add_edge(0, N - 1).unwrap();
     dg.remove_edge(
         fx.graph.edges()[0].0 as usize,

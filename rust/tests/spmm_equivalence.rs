@@ -1,0 +1,337 @@
+//! Sparse-aggregation equivalence suite: the CSR `SpMM` path must match
+//! the dense oracle (≤ 1e-4, and bitwise in practice — both kernels
+//! accumulate in the same k-order) through every execution layer:
+//!
+//! 1. the reference executor (`ops::exec`, which densifies CSR),
+//! 2. the planned engine (`engine` running a compiled SpMM plan),
+//! 3. the incremental engine's CSR tile gathers,
+//! 4. a 3-shard plan-backed fleet,
+//! 5. the INT8 SpMM kernel vs the QMatMul oracle.
+
+use std::sync::Arc;
+
+use grannite::engine::{kernels, run_graph_mat, WorkerPool};
+use grannite::fleet::{engine::synthesize_weights, Fleet, FleetConfig};
+use grannite::graph::{datasets::synthesize, pad_features, Graph};
+use grannite::incremental::{IncrementalConfig, IncrementalEngine};
+use grannite::ops::build::{self, Aggregation, GnnDims};
+use grannite::ops::exec::{self, Bindings};
+use grannite::server::{InferenceEngine, Update};
+use grannite::tensor::{CsrMat, Mat, Tensor};
+use grannite::util::propcheck::forall;
+
+fn serial() -> Arc<WorkerPool> {
+    Arc::new(WorkerPool::serial())
+}
+
+/// Random-graph GCN across densities: the sparse graph + CSR binding must
+/// match the dense graph + dense binding through both the reference
+/// executor and the planned engine, and the dense-binding fallback on the
+/// sparse plan must agree bitwise.
+#[test]
+fn prop_spmm_matches_dense_oracle_through_exec_and_plan() {
+    forall("spmm == dense oracle (exec + plan)", 30, |g| {
+        let n = g.dim(40).max(2);
+        // sweep density: from near-empty to ~60% of all possible edges
+        let max_edges = n * (n - 1) / 2;
+        let m = g.usize(0, max_edges.max(1));
+        let edges: Vec<(u32, u32)> = (0..m)
+            .map(|_| (g.rng().usize(n) as u32, g.rng().usize(n) as u32))
+            .collect();
+        let graph = Graph::new(n, &edges);
+        let f = g.dim(10);
+        let hidden = g.dim(8);
+        let classes = g.usize(2, 6);
+        let d = GnnDims {
+            n,
+            m: graph.num_edges().max(1),
+            f,
+            hidden,
+            classes,
+            k: 5,
+            layers: 2,
+        };
+
+        let norm = graph.norm_adjacency(n);
+        let csr = graph.norm_csr(n);
+        assert_eq!(csr.to_dense(), norm, "CSR build != dense norm");
+
+        let mut dense_b: Bindings = Bindings::new();
+        dense_b.insert("norm".into(), Tensor::from_mat(&norm));
+        dense_b.insert(
+            "x".into(),
+            Tensor::from_mat(&Mat::from_vec(n, f, g.vec_f32(n * f))),
+        );
+        dense_b.insert(
+            "w1".into(),
+            Tensor::from_mat(&Mat::from_vec(f, hidden, g.vec_f32(f * hidden))),
+        );
+        dense_b.insert(
+            "b1".into(),
+            Tensor::from_mat(&Mat::from_vec(1, hidden, g.vec_f32(hidden))),
+        );
+        dense_b.insert(
+            "w2".into(),
+            Tensor::from_mat(&Mat::from_vec(
+                hidden,
+                classes,
+                g.vec_f32(hidden * classes),
+            )),
+        );
+        dense_b.insert(
+            "b2".into(),
+            Tensor::from_mat(&Mat::from_vec(1, classes, g.vec_f32(classes))),
+        );
+        let mut csr_b = dense_b.clone();
+        csr_b.insert("norm".into(), Tensor::from_csr(csr));
+
+        let dense_g = build::gcn_stagr(d, "stagr");
+        let sparse_g = build::gcn_stagr_with(d, "stagr", Aggregation::Sparse);
+
+        let want = exec::execute_mat(&dense_g, &dense_b).unwrap();
+        // 1. reference executor on the sparse graph (densifying oracle)
+        let via_exec = exec::execute_mat(&sparse_g, &csr_b).unwrap();
+        assert!(
+            want.max_abs_diff(&via_exec) < 1e-4,
+            "exec drift {}",
+            want.max_abs_diff(&via_exec)
+        );
+        // 2. planned engine running the real SpMM kernel
+        let via_plan = run_graph_mat(&sparse_g, &csr_b).unwrap();
+        assert!(
+            want.max_abs_diff(&via_plan) < 1e-4,
+            "plan drift {}",
+            want.max_abs_diff(&via_plan)
+        );
+        // dense binding on the sparse plan (above-threshold fallback)
+        let via_fallback = run_graph_mat(&sparse_g, &dense_b).unwrap();
+        assert_eq!(via_fallback, via_plan, "fallback must agree bitwise");
+    });
+}
+
+/// The SAGE-mean sampled mask through SpMM matches its dense twin.
+#[test]
+fn sage_mean_spmm_matches_dense() {
+    let ds = synthesize("spmm-sage", 30, 80, 4, 12, 5);
+    let n = 30;
+    let mask = ds
+        .graph
+        .sampled_adjacency(grannite::SAGE_MAX_NEIGHBORS, 7, n);
+    // row-normalize like the artifact pipeline's norm_mask
+    let mut norm_mask = mask.clone();
+    for i in 0..n {
+        let s: f32 = norm_mask.row(i).iter().sum();
+        if s > 0.0 {
+            for v in norm_mask.row_mut(i) {
+                *v /= s;
+            }
+        }
+    }
+    let d = GnnDims::model(n, ds.graph.num_edges(), ds.num_features(), 4);
+    let dense_g = build::sage_mean(d);
+    let sparse_g = build::sage_mean_with(d, Aggregation::Sparse);
+    let mut b: Bindings = Bindings::new();
+    b.insert("norm_mask".into(), Tensor::from_mat(&norm_mask));
+    b.insert("x".into(), Tensor::from_mat(&ds.features));
+    let mut rng = grannite::util::Rng::new(11);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.6 - 0.3) as f32)
+    };
+    for l in 1..=2 {
+        let (in_w, out_w) = if l == 1 {
+            (ds.num_features(), grannite::HIDDEN)
+        } else {
+            (grannite::HIDDEN, 4)
+        };
+        b.insert(format!("w{l}_self"), Tensor::from_mat(&rand(in_w, out_w)));
+        b.insert(format!("w{l}_neigh"), Tensor::from_mat(&rand(in_w, out_w)));
+        b.insert(format!("b{l}"), Tensor::from_mat(&rand(1, out_w)));
+    }
+    let want = exec::execute_mat(&dense_g, &b).unwrap();
+    let mut sb = b.clone();
+    sb.insert(
+        "norm_mask".into(),
+        Tensor::from_csr(CsrMat::from_dense(&norm_mask)),
+    );
+    let got = run_graph_mat(&sparse_g, &sb).unwrap();
+    assert!(want.max_abs_diff(&got) < 1e-4, "{}", want.max_abs_diff(&got));
+}
+
+/// Incremental engine: CSR tile gathers == dense tile gathers == the
+/// full-graph oracle, across random churn interleavings.
+#[test]
+fn incremental_csr_tiles_match_oracle_under_churn() {
+    let n0 = 50;
+    let cap = 56;
+    let classes = 4;
+    let ds = synthesize("spmm-inc", n0, 80, classes, 10, 13);
+    let cfg = |agg| IncrementalConfig {
+        cost_margin: f64::INFINITY, // force the frontier path
+        tile_min: 8,
+        aggregation: agg,
+    };
+    let mut sparse =
+        IncrementalEngine::full(&ds, cap, serial(), cfg(Aggregation::Sparse)).unwrap();
+    let mut dense =
+        IncrementalEngine::full(&ds, cap, serial(), cfg(Aggregation::Dense)).unwrap();
+
+    // mirror the live edge set so the oracle sees the same graph
+    let mut edges: std::collections::BTreeSet<(u32, u32)> =
+        ds.graph.edges().iter().copied().collect();
+    let mut nodes = n0;
+    let mut rng = grannite::util::Rng::new(99);
+    let mut apply_all = |u: &Update,
+                         sparse: &mut IncrementalEngine,
+                         dense: &mut IncrementalEngine,
+                         edges: &mut std::collections::BTreeSet<(u32, u32)>,
+                         nodes: &mut usize| {
+        sparse.apply(u).unwrap();
+        dense.apply(u).unwrap();
+        match *u {
+            Update::AddEdge(a, b) => {
+                edges.insert((a.min(b) as u32, a.max(b) as u32));
+            }
+            Update::RemoveEdge(a, b) => {
+                edges.remove(&(a.min(b) as u32, a.max(b) as u32));
+            }
+            Update::AddNode => *nodes += 1,
+        }
+    };
+
+    for round in 0..6 {
+        // a burst of churn, then a compared inference
+        for _ in 0..3 {
+            let a = rng.usize(nodes);
+            let b = (a + 1 + rng.usize(nodes - 2)) % nodes;
+            let (a, b) = (a.min(b), a.max(b));
+            let u = if rng.chance(0.3) && edges.contains(&(a as u32, b as u32)) {
+                Update::RemoveEdge(a, b)
+            } else {
+                Update::AddEdge(a, b)
+            };
+            apply_all(&u, &mut sparse, &mut dense, &mut edges, &mut nodes);
+        }
+        if round == 2 && nodes < cap {
+            apply_all(&Update::AddNode, &mut sparse, &mut dense, &mut edges, &mut nodes);
+        }
+        let a = sparse.infer().unwrap();
+        let b = dense.infer().unwrap();
+        assert_eq!(a, b, "round {round}: sparse vs dense tile gathers diverged");
+
+        // full-graph oracle at the mirrored structure
+        let edge_list: Vec<(u32, u32)> = edges.iter().copied().collect();
+        let graph = Graph::new(nodes, &edge_list);
+        let dims = GnnDims::model(cap, graph.num_edges().max(1), 10, classes);
+        let og = build::gcn_stagr(dims, "grad");
+        let mut ob = synthesize_weights(10, classes, cap);
+        ob.insert("norm".into(), Tensor::from_mat(&graph.norm_adjacency(cap)));
+        ob.insert("x".into(), Tensor::from_mat(&pad_features(&ds.features, cap)));
+        let want_full = exec::execute_mat(&og, &ob).unwrap();
+        for i in 0..nodes {
+            for j in 0..classes {
+                let diff = (want_full[(i, j)] - a[(i, j)]).abs();
+                assert!(diff < 1e-4, "round {round} node {i} class {j}: drift {diff}");
+            }
+        }
+    }
+}
+
+/// 3-shard sparse fleet == 1-shard dense fleet == oracle predictions.
+#[test]
+fn sparse_fleet_matches_dense_fleet_and_oracle() {
+    let ds = synthesize("spmm-fleet", 48, 110, 4, 12, 21);
+    let cap = 54;
+    let churn = [
+        Update::AddEdge(0, 31),
+        Update::AddEdge(7, 40),
+        Update::AddNode,
+        Update::AddEdge(48, 3),
+        Update::RemoveEdge(0, 31),
+    ];
+    let run = |shards: usize, agg: Aggregation| -> Vec<i32> {
+        let mut cfg = FleetConfig::homogeneous(shards);
+        cfg.aggregation = agg;
+        let fleet = Fleet::spawn_planned(&ds, cap, &cfg).unwrap();
+        for u in &churn {
+            fleet.update(u.clone()).unwrap();
+        }
+        let preds: Vec<i32> = (0..49)
+            .map(|node| fleet.query_wait(Some(node)).unwrap().prediction)
+            .collect();
+        // sparse shards report real dma savings through the merged gauges
+        let snap = fleet.metrics();
+        if agg == Aggregation::Sparse {
+            assert!(snap.dma_bytes_dense > 0, "no mask traffic recorded");
+            assert!(snap.dma_bytes_saved() > 0, "no savings credited");
+        }
+        fleet.shutdown().unwrap();
+        preds
+    };
+    let sparse3 = run(3, Aggregation::Sparse);
+    let dense1 = run(1, Aggregation::Dense);
+    assert_eq!(sparse3, dense1, "3-shard sparse != 1-shard dense");
+
+    // oracle predictions at the churned structure
+    let mut edges: Vec<(u32, u32)> = ds.graph.edges().to_vec();
+    edges.push((0, 31));
+    edges.push((7, 40));
+    edges.push((3, 48));
+    edges.retain(|&e| e != (0, 31));
+    let graph = Graph::new(49, &edges);
+    let dims = GnnDims::model(cap, graph.num_edges(), 12, 4);
+    let og = build::gcn_stagr(dims, "grad");
+    let mut ob = synthesize_weights(12, 4, cap);
+    ob.insert("norm".into(), Tensor::from_mat(&graph.norm_adjacency(cap)));
+    ob.insert("x".into(), Tensor::from_mat(&pad_features(&ds.features, cap)));
+    let logits = exec::execute_mat(&og, &ob).unwrap();
+    let want: Vec<i32> = (0..49)
+        .map(|i| {
+            let row = Mat::from_vec(1, 4, logits.row(i).to_vec());
+            row.argmax_rows()[0] as i32
+        })
+        .collect();
+    assert_eq!(sparse3, want, "fleet diverged from the exec oracle");
+}
+
+/// INT8 SpMM vs the QMatMul oracle across densities: quantized CSR
+/// values × i8 activations with i32 accumulation must equal the f64
+/// oracle on the densified operand, exactly.
+#[test]
+fn prop_int8_spmm_matches_qmatmul_oracle() {
+    forall("int8 spmm == qmatmul oracle", 40, |g| {
+        let m = g.dim(24).max(1);
+        let k = g.dim(24).max(1);
+        let n = g.dim(8).max(1);
+        let keep = [0.02, 0.1, 0.5, 1.0][g.usize(0, 4)];
+        let dense = Mat::from_fn(m, k, |_, _| {
+            if g.rng().chance(keep) {
+                (g.rng().usize(255) as i32 - 127) as f32
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMat::from_dense(&dense);
+        let v8: Vec<i8> = csr.values.iter().map(|&v| v as i8).collect();
+        let rhs8: Vec<i8> =
+            (0..k * n).map(|_| (g.rng().usize(255) as i32 - 127) as i8).collect();
+        let rhs_f: Vec<f32> = rhs8.iter().map(|&v| v as f32).collect();
+        let scale = 0.03125f32;
+        let pool = WorkerPool::serial();
+        let mut got = vec![0.0f32; m * n];
+        kernels::spmm_i8(
+            &pool, &csr.indptr, &csr.indices, &v8, m, &rhs8, n, scale, &mut got,
+        );
+        let mut want = vec![0.0f32; m * n];
+        kernels::qmatmul_acc64(
+            &pool,
+            &kernels::QOperand::F32(&dense.data),
+            &kernels::QOperand::F32(&rhs_f),
+            m,
+            k,
+            n,
+            scale,
+            &mut want,
+        );
+        assert_eq!(got, want, "INT8 SpMM drifted from the QMatMul oracle");
+    });
+}
