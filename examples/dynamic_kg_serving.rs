@@ -4,13 +4,14 @@
 //! compiled capacity; the batcher coalesces query bursts into single
 //! full-graph inferences.
 //!
-//! With `SHARDS > 1` the same stream is served by a fleet: GraphSplit's
-//! cost model places one shard per simulated device, queries route to
-//! the shard owning the node, and boundary features are charged as halo
-//! traffic. With artifacts present each shard owns its own coordinator
-//! (engines are built inside the shard threads); without artifacts the
-//! example falls back to artifact-free `PlanEngine` shards — each serving
-//! a compiled GCN `ExecPlan` — on a synthetic cora-sized twin, so it runs
+//! Everything launches through the unified serving API: one
+//! `DeploymentSpec` names the engine and topology, and
+//! `Deployment::launch` returns the same `Box<dyn Serving>` whether
+//! that resolves to a single leader (`SHARDS = 1`) or a heterogeneous
+//! fleet. With artifacts present the spec selects the `coordinator`
+//! engine (real PJRT numerics, one coordinator per shard, built inside
+//! the shard threads); without them it falls back to the artifact-free
+//! `plan` engine on a synthetic cora-sized twin, so the example runs
 //! (on the real planned-executor hot path) anywhere.
 //!
 //! ```sh
@@ -20,10 +21,12 @@
 
 use std::time::Instant;
 
-use grannite::coordinator::Coordinator;
-use grannite::fleet::{Fleet, FleetConfig};
 use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
-use grannite::server::{CoordinatorEngine, Update};
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineRegistry, EngineSpec, Serving,
+    Topology,
+};
+use grannite::server::Update;
 
 fn main() -> anyhow::Result<()> {
     let events: usize = std::env::args()
@@ -37,42 +40,30 @@ fn main() -> anyhow::Result<()> {
 
     let artifacts = std::path::PathBuf::from("artifacts");
     let have_artifacts = artifacts.join("manifest.toml").exists();
-    let cfg = FleetConfig::heterogeneous(shards);
 
-    let (fleet, nodes, capacity, backend) = if have_artifacts {
-        // real numerics: one PJRT coordinator per shard, built inside the
-        // shard thread (PJRT handles are not Send)
-        let ds = grannite::graph::datasets::Dataset::load_gnnt(&artifacts, "cora")?;
-        let (nodes, capacity) = (ds.num_nodes(), 3000);
-        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
-                                   ds.num_classes(), &cfg)?;
-        let fleet = Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, |_spec| {
-            let artifacts = artifacts.clone();
-            Box::new(move || {
-                // serial in-shard pool: the shards themselves are the
-                // parallelism; N machine-sized pools would oversubscribe
-                let pool = std::sync::Arc::new(
-                    grannite::engine::WorkerPool::serial(),
-                );
-                let coordinator =
-                    Coordinator::open_with_pool(&artifacts, "cora", pool)?;
-                Ok(CoordinatorEngine {
-                    coordinator,
-                    artifact: "gcn_grad_cora".into(),
-                })
-            })
-        });
-        (fleet, nodes, capacity, "PJRT artifacts")
+    let mut spec = DeploymentSpec {
+        topology: Topology::zoo(shards),
+        capacity: 3000,
+        ..DeploymentSpec::default()
+    };
+    let (data, backend) = if have_artifacts {
+        spec.engine = EngineSpec::named("coordinator");
+        (
+            DataSource::Artifacts { dir: artifacts, dataset: "cora".into() },
+            "PJRT artifacts (coordinator engine)",
+        )
     } else {
         eprintln!("artifacts/ missing — serving the synthetic twin via planned engines");
+        spec.engine = EngineSpec::named("plan");
         let ds = grannite::graph::datasets::synthesize("cora-twin", 2708, 5429, 7, 64, 1);
-        let (nodes, capacity) = (2708, 3000);
-        let fleet = Fleet::spawn_planned(&ds, capacity, &cfg)?;
-        (fleet, nodes, capacity, "PlanEngine fallback")
+        (DataSource::Dataset(ds), "PlanEngine fallback")
     };
 
+    let ds = data.dataset()?;
+    let nodes = ds.num_nodes();
+    let plan = Deployment::plan(&spec, &ds)?;
     println!("—— dynamic KG serving ({backend}, {shards} shard(s)) ——");
-    for s in &fleet.plan.shards {
+    for s in &plan.shards {
         println!(
             "  shard #{} on {:<12} owns {:4} nodes, halo in/out {}/{}",
             s.id,
@@ -83,7 +74,11 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let stream = KnowledgeGraphStream::new(nodes, capacity, 0.25, 42);
+    // ds and plan are already resolved for the placement report — launch
+    // over them so nothing loads or plans twice
+    let serving = Deployment::launch_at(&EngineRegistry::builtin(), &spec, &ds,
+                                        data.artifacts_dir(), Some(plan.clone()))?;
+    let stream = KnowledgeGraphStream::new(nodes, plan.owner.len(), 0.25, 42);
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut rng = grannite::util::Rng::new(9);
@@ -93,19 +88,19 @@ fn main() -> anyhow::Result<()> {
         match ev {
             GraphEvent::AddEdge(u, v) => {
                 adds += 1;
-                fleet.update(Update::AddEdge(u, v))?;
+                serving.update(Update::AddEdge(u, v))?;
             }
             GraphEvent::RemoveEdge(u, v) => {
                 removes += 1;
-                fleet.update(Update::RemoveEdge(u, v))?;
+                serving.update(Update::RemoveEdge(u, v))?;
             }
             GraphEvent::AddNode => {
                 new_nodes += 1;
                 active += 1;
-                fleet.update(Update::AddNode)?;
+                serving.update(Update::AddNode)?;
             }
             GraphEvent::Query => {
-                pending.push(fleet.query(Some(rng.usize(active)))?);
+                pending.push(serving.query(Some(rng.usize(active)))?);
             }
         }
     }
@@ -116,7 +111,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = fleet.metrics();
+    let snap = serving.metrics();
     println!("events: {events} (edges +{adds}/-{removes}, nodes +{new_nodes}, queries {answered})");
     if let Some(lat) = &snap.latency {
         println!("inference latency: {lat}");
@@ -136,11 +131,7 @@ fn main() -> anyhow::Result<()> {
         snap.mean_batch,
         answered as f64 / wall
     );
-    println!(
-        "version vector: sequenced {:?} applied {:?}",
-        fleet.expected_versions(),
-        fleet.applied_versions()
-    );
-    fleet.shutdown()?;
+    println!("applied version vector: {:?}", serving.sync()?);
+    serving.shutdown()?;
     Ok(())
 }

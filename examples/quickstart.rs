@@ -1,6 +1,7 @@
 //! Quickstart: run one GCN inference through the planned execution
-//! engine, check plan-vs-reference equivalence, and show a GrAd dynamic
-//! update — all in a screenful of API.
+//! engine, check plan-vs-reference equivalence, and serve GrAd dynamic
+//! updates through the unified `Deployment`/`Serving` front door — all
+//! in a screenful of API.
 //!
 //! With `make artifacts` output present this drives the full coordinator
 //! stack (dataset twin + trained weights + plan-backed runtime); without
@@ -16,11 +17,11 @@ use std::sync::Arc;
 
 use grannite::coordinator::Coordinator;
 use grannite::engine::{PlanInstance, WorkerPool};
-use grannite::fleet::PlanEngine;
 use grannite::ops::build::{self, GnnDims};
 use grannite::ops::exec::{self, Bindings};
 use grannite::ops::plan::ExecPlan;
-use grannite::server::{InferenceEngine, Update};
+use grannite::serve::{DataSource, Deployment, DeploymentSpec, Serving};
+use grannite::server::Update;
 use grannite::tensor::{Mat, Tensor};
 use grannite::util::{human_bytes, human_us, timing::time_once, Rng};
 
@@ -132,23 +133,27 @@ fn offline() -> anyhow::Result<()> {
         want.max_abs_diff(&got),
     );
 
-    // 4. GrAd serving: the plan-backed engine absorbs updates with no
-    //    recompile (NodePad capacity 3000 > 2708)
-    let mut eng = PlanEngine::full(&ds, 3000, Arc::new(WorkerPool::default_parallel()))?;
-    let (first, cold_us) = time_once(|| eng.infer());
-    let first = first?;
-    eng.apply(&Update::AddEdge(0, 1000))?;
-    eng.apply(&Update::AddNode)?;
-    let (second, warm_us) = time_once(|| eng.infer());
-    let second = second?;
+    // 4. GrAd serving through the unified front door: the default
+    //    DeploymentSpec is engine "plan" × 1 shard — literally the
+    //    single-leader server — and the same spec with shards = 4 would
+    //    launch a fleet behind the identical `Serving` trait
+    let spec = DeploymentSpec { capacity: 3000, ..DeploymentSpec::default() };
+    let serving = Deployment::launch(&spec, &DataSource::Dataset(ds.clone()))?;
+    serving.update(Update::AddEdge(0, 1000))?;
+    serving.update(Update::AddNode)?;
+    let r = serving.query_wait(Some(42))?;
     println!(
-        "GrAd: inference {} cold, {} after AddEdge+AddNode ({} active nodes, \
-         no recompile)",
-        human_us(cold_us),
-        human_us(warm_us),
-        second.rows,
+        "served node 42 → class {} in {} (batch of {}, no recompile after \
+         AddEdge+AddNode)",
+        r.prediction,
+        human_us(r.latency_us),
+        r.batch_size,
     );
-    let _ = first;
+    // deadline-bounded queries shed through the admission path instead
+    // of blocking forever
+    let r = serving.query_deadline(Some(7), std::time::Duration::from_secs(30))?;
+    println!("deadline-bounded query answered: node 7 → class {}", r.prediction);
+    serving.shutdown()?;
 
     // 5. what would this cost on the Series-2 NPU? (simulator)
     let hw = grannite::config::HardwareConfig::npu_series2();

@@ -4,10 +4,11 @@
 //!
 //! Two sweeps: homogeneous (N × Series-2 NPU — the clean scaling curve)
 //! and heterogeneous (NPU2/NPU1/iGPU/CPU zoo — what the cost-model
-//! placement is for). Engines are the artifact-free
-//! [`grannite::fleet::LocalEngine`], whose per-query work is
-//! proportional to the shard's owned nodes, so wall-clock scaling tracks
-//! the partition, not the execution backend.
+//! placement is for). Every configuration is one `DeploymentSpec`
+//! launched through `Deployment::launch` with the artifact-free `local`
+//! engine, whose per-query work is proportional to the shard's owned
+//! nodes, so wall-clock scaling tracks the partition, not the execution
+//! backend.
 //!
 //! ```sh
 //! cargo bench --bench fleet_scaling                     # full sweep
@@ -19,8 +20,10 @@ use std::time::Instant;
 
 use grannite::bench::banner;
 use grannite::cli::Args;
-use grannite::fleet::{Fleet, FleetConfig};
 use grannite::graph::datasets::synthesize;
+use grannite::serve::{
+    Deployment, DeploymentSpec, EngineRegistry, EngineSpec, Serving, Topology,
+};
 use grannite::server::Update;
 use grannite::util::{human_bytes, human_us, json_escape, Rng, Table};
 
@@ -40,17 +43,26 @@ struct Row {
     qps: f64,
 }
 
-fn drive(fleet: &Fleet, sz: &Sizes) -> anyhow::Result<f64> {
+fn spec_for(topology: Topology, capacity: usize) -> DeploymentSpec {
+    DeploymentSpec {
+        engine: EngineSpec::named("local"),
+        topology,
+        capacity,
+        ..DeploymentSpec::default()
+    }
+}
+
+fn drive(serving: &dyn Serving, sz: &Sizes) -> anyhow::Result<f64> {
     // mixed load: a burst of GrAd churn, then a query storm
     let mut rng = Rng::new(11);
     for _ in 0..sz.churn {
         let u = rng.usize(sz.nodes);
         let v = (u + 1 + rng.usize(sz.nodes - 1)) % sz.nodes;
-        fleet.update(Update::AddEdge(u.min(v), u.max(v)))?;
+        serving.update(Update::AddEdge(u.min(v), u.max(v)))?;
     }
     let t0 = Instant::now();
     let pending: Vec<_> = (0..sz.queries)
-        .map(|_| fleet.query(Some(rng.usize(sz.nodes))))
+        .map(|_| serving.query(Some(rng.usize(sz.nodes))))
         .collect::<anyhow::Result<_>>()?;
     for rx in pending {
         rx.recv()?.map_err(anyhow::Error::msg)?;
@@ -60,7 +72,7 @@ fn drive(fleet: &Fleet, sz: &Sizes) -> anyhow::Result<f64> {
 
 fn sweep(
     title: &str,
-    configs: &[(String, FleetConfig)],
+    configs: &[(String, Topology)],
     sz: &Sizes,
     rows_out: &mut Vec<Row>,
 ) -> anyhow::Result<()> {
@@ -80,20 +92,23 @@ fn sweep(
         ],
     );
     let mut baseline: Option<(f64, f64)> = None; // (qps, est_round_us)
-    for (label, cfg) in configs {
-        let fleet = Fleet::spawn_local(&ds, sz.nodes + 64, cfg)?;
-        let est_round = fleet.plan.est_round_us;
-        let cut = fleet.plan.cut_edges;
-        let halo_round = fleet.plan.halo_bytes_per_round;
-        let qps = drive(&fleet, sz)?;
-        let agg = fleet.metrics();
+    for (label, topology) in configs {
+        let spec = spec_for(topology.clone(), sz.nodes + 64);
+        let plan = Deployment::plan(&spec, &ds)?;
+        let est_round = plan.est_round_us;
+        let cut = plan.cut_edges;
+        let halo_round = plan.halo_bytes_per_round;
+        let serving = Deployment::launch_at(&EngineRegistry::builtin(), &spec, &ds,
+                                            None, Some(plan.clone()))?;
+        let qps = drive(serving.as_ref(), sz)?;
+        let agg = serving.metrics();
         let (p50, p99) = agg
             .latency
             .as_ref()
             .map(|l| (human_us(l.p50), human_us(l.p99)))
             .unwrap_or_else(|| ("n/a".into(), "n/a".into()));
         t.row(&[
-            cfg.devices.len().to_string(),
+            topology.shards.to_string(),
             label.clone(),
             human_us(est_round),
             cut.to_string(),
@@ -104,25 +119,25 @@ fn sweep(
             human_bytes(agg.halo_bytes),
         ]);
         rows_out.push(Row {
-            shards: cfg.devices.len(),
+            shards: topology.shards,
             label: label.clone(),
             est_round_us: est_round,
             cut_edges: cut,
             halo_bytes_per_round: halo_round,
             qps,
         });
-        let base_n = configs[0].1.devices.len();
+        let base_n = configs[0].1.shards;
         let (base_qps, base_est) = *baseline.get_or_insert((qps, est_round));
-        if cfg.devices.len() > base_n {
+        if topology.shards > base_n {
             println!(
                 "  {} shards vs {base_n}-shard baseline: {:.2}x measured, \
                  {:.2}x by the cost model",
-                cfg.devices.len(),
+                topology.shards,
                 qps / base_qps,
                 base_est / est_round.max(1e-9),
             );
         }
-        fleet.shutdown()?;
+        serving.shutdown()?;
     }
     t.print();
     Ok(())
@@ -132,7 +147,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let quick = args.has("quick");
     let json_path = args.options.get("json").cloned();
-    banner("fleet scaling (1→8 shards, LocalEngine, synthetic KG)");
+    banner("fleet scaling (1→8 shards, local engine, synthetic KG)");
 
     let sz = if quick {
         Sizes { nodes: 512, edges: 2048, queries: 200, churn: 60 }
@@ -143,15 +158,15 @@ fn main() -> anyhow::Result<()> {
     let hetero_counts: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
 
     let mut rows: Vec<Row> = Vec::new();
-    let homogeneous: Vec<(String, FleetConfig)> = homo_counts
+    let homogeneous: Vec<(String, Topology)> = homo_counts
         .iter()
-        .map(|&n| (format!("{n}x series2"), FleetConfig::homogeneous(n)))
+        .map(|&n| (format!("{n}x series2"), Topology::homogeneous(n)))
         .collect();
     sweep("homogeneous scaling — N × Series-2 NPU", &homogeneous, &sz, &mut rows)?;
 
-    let heterogeneous: Vec<(String, FleetConfig)> = hetero_counts
+    let heterogeneous: Vec<(String, Topology)> = hetero_counts
         .iter()
-        .map(|&n| (format!("{n}-way zoo"), FleetConfig::heterogeneous(n)))
+        .map(|&n| (format!("{n}-way zoo"), Topology::zoo(n)))
         .collect();
     sweep(
         "heterogeneous placement — NPU2/NPU1/iGPU/CPU zoo",
@@ -162,7 +177,7 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "\nnote: 'est round' is the planner's max_shard(compute + halo) from the\n\
-         paper's cost model; 'measured q/s' is wall-clock over LocalEngine shards\n\
+         paper's cost model; 'measured q/s' is wall-clock over local-engine shards\n\
          whose work is proportional to owned nodes."
     );
 

@@ -120,6 +120,13 @@ impl Document {
         Document::parse(&text).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Every section name in the document (the root section is `""`).
+    /// Schema layers use this to reject unknown sections loudly instead
+    /// of silently ignoring a typo'd `[topolgy]`.
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|k| k.as_str()).collect()
+    }
+
     /// All section names with the given first path component, e.g.
     /// `sections_under("artifact")` → `["artifact.gcn_stagr_cora", …]`.
     pub fn sections_under(&self, prefix: &str) -> Vec<&str> {

@@ -201,14 +201,28 @@ impl HardwareConfig {
         }
     }
 
-    /// Look up a preset by name.
+    /// Canonical preset names — **the** device name table. Every layer
+    /// that parses a device name (CLI `--devices`, fleet rosters,
+    /// deployment-spec topologies) resolves through [`Self::preset`], so
+    /// this list is the single source of truth for what's valid.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["series2", "series1", "cpu", "gpu"]
+    }
+
+    /// Look up a preset by name. The error lists every valid name (and
+    /// accepted aliases) so an operator can fix a roster without reading
+    /// source.
     pub fn preset(name: &str) -> Result<Self> {
         Ok(match name {
             "npu-series2" | "series2" | "npu" => Self::npu_series2(),
             "npu-series1" | "series1" => Self::npu_series1(),
             "cpu" => Self::cpu(),
             "gpu" => Self::gpu(),
-            other => bail!("unknown hardware preset {other:?}"),
+            other => bail!(
+                "unknown hardware preset {other:?} — valid names: \
+                 series2 (aliases npu-series2, npu), series1 (alias \
+                 npu-series1), cpu, gpu"
+            ),
         })
     }
 

@@ -109,6 +109,56 @@ impl PlanEngine {
         Ok((plan, synthesize_weights(features, classes, capacity)))
     }
 
+    /// [`PlanEngine::compile_parts_with`] for the **QuantGr INT8**
+    /// variant: compiles `gcn_quant` at NodePad capacity and hands back
+    /// quantized bindings — weights pre-quantized to the `w1q`/`w2q`
+    /// int8 inputs the plan's i8×i8→i32 kernels consume, with symmetric
+    /// static scales calibrated from the synthesized weights and the
+    /// dataset features (activation-2 range estimated from the layer-1
+    /// fan-in; serving equivalence across shard counts is exact either
+    /// way because every shard shares these parts).
+    pub fn compile_quant_parts(
+        ds: &Dataset,
+        capacity: usize,
+        agg: Aggregation,
+    ) -> Result<(Arc<ExecPlan>, Bindings)> {
+        use crate::quant::{calibrate, quantize, scale_for};
+
+        let capacity = capacity.max(ds.num_nodes());
+        let classes = ds.num_classes().max(2);
+        let features = ds.num_features();
+        let density = (2.0 * ds.graph.num_edges() as f64 + ds.num_nodes() as f64)
+            / (capacity as f64 * capacity as f64);
+        let weights = synthesize_weights(features, classes, capacity);
+        let w1 = weights.get("w1").expect("synthesized w1").to_mat()?;
+        let w2 = weights.get("w2").expect("synthesized w2").to_mat()?;
+        let (sw1, sw2) = (calibrate(&w1, 100.0), calibrate(&w2, 100.0));
+        let sa1 = calibrate(&ds.features, 100.0);
+        // layer-1 output magnitude estimate: absmax(x)·absmax(w1)·√fan_in
+        // (random-sign cancellation) — loose enough to avoid clipping
+        let sa2 = scale_for(
+            (127.0 * sa1) * (127.0 * sw1) * (features.max(1) as f32).sqrt(),
+        );
+        let scales = build::QuantScales { act1: sa1, w1: sw1, act2: sa2, w2: sw2 };
+
+        let mut bindings = Bindings::new();
+        bindings.insert(
+            "w1q".into(),
+            Tensor::I8 { shape: vec![features, crate::HIDDEN], data: quantize(&w1, sw1) },
+        );
+        bindings.insert(
+            "w2q".into(),
+            Tensor::I8 { shape: vec![crate::HIDDEN, classes], data: quantize(&w2, sw2) },
+        );
+        bindings.insert("b1".into(), weights.get("b1").expect("b1").clone());
+        bindings.insert("b2".into(), weights.get("b2").expect("b2").clone());
+
+        let dims = GnnDims::model(capacity, ds.graph.num_edges(), features, classes);
+        let graph = build::gcn_quant_with(dims, scales, agg.resolve(density));
+        let plan = Arc::new(ExecPlan::compile(&graph)?);
+        Ok((plan, bindings))
+    }
+
     /// Engine over a pre-compiled plan + weight set (see
     /// [`PlanEngine::compile_parts`]), answering for `owned` only.
     pub fn from_parts(
@@ -345,6 +395,31 @@ mod tests {
         let b = shard.infer().unwrap();
         assert_eq!(a, b, "plan logits are shard-independent");
         assert!(shard.halo_imports().unwrap() > 0);
+    }
+
+    #[test]
+    fn quant_parts_serve_int8_and_are_shard_invariant() {
+        let ds = ds();
+        let pool = Arc::new(WorkerPool::serial());
+        let (plan, weights) =
+            PlanEngine::compile_quant_parts(&ds, 36, Aggregation::Auto).unwrap();
+        assert!(
+            weights.get("w1q").is_some() && weights.get("w2q").is_some(),
+            "quant parts must carry pre-quantized int8 weights"
+        );
+        let mut full = PlanEngine::from_parts(
+            &ds, 36, 0..36, Arc::clone(&pool), Arc::clone(&plan), weights.clone(),
+        )
+        .unwrap();
+        let mut shard =
+            PlanEngine::from_parts(&ds, 36, 0..15, pool, plan, weights).unwrap();
+        let a = full.infer().unwrap();
+        assert_eq!(a.shape(), (30, 4));
+        // the INT8 datapath must produce real (non-zero, finite) logits
+        let absmax = a.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(absmax > 0.0 && absmax.is_finite(), "degenerate INT8 logits");
+        let b = shard.infer().unwrap();
+        assert_eq!(a, b, "INT8 logits are shard-independent");
     }
 
     #[test]

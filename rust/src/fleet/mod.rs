@@ -49,7 +49,7 @@ pub use shard::{ShardConfig, ShardEvent, ShardWorker};
 
 use std::sync::mpsc::Receiver;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::HardwareConfig;
 use crate::coordinator::ModelState;
@@ -98,11 +98,23 @@ impl FleetConfig {
         }
     }
 
-    /// Parse a `--devices series2,cpu,…` roster.
+    /// Parse a device-name roster (`--devices series2,cpu,…`, spec
+    /// topologies). Resolves through [`HardwareConfig::preset`] — the
+    /// one name→device table — so an unknown name lists every valid
+    /// option, prefixed with which roster entry was wrong.
     pub fn from_names(names: &[String]) -> Result<FleetConfig> {
+        if names.is_empty() {
+            anyhow::bail!(
+                "device roster is empty — pick from: {}",
+                HardwareConfig::preset_names().join(" | ")
+            );
+        }
         let mut devices = Vec::with_capacity(names.len());
-        for n in names {
-            devices.push(HardwareConfig::preset(n)?);
+        for (i, n) in names.iter().enumerate() {
+            devices.push(
+                HardwareConfig::preset(n)
+                    .with_context(|| format!("device roster entry {i}"))?,
+            );
         }
         Ok(FleetConfig { devices, ..FleetConfig::homogeneous(1) })
     }
@@ -154,61 +166,41 @@ impl Fleet {
         Fleet { plan, router }
     }
 
-    /// Spawn a fleet of [`LocalEngine`]s over a dataset — fully offline
-    /// (no AOT artifacts), deterministic, and identical in predictions
-    /// to a single-leader server running [`LocalEngine::full`].
+    /// Deprecated shim: a fleet of [`LocalEngine`]s. Construct through
+    /// [`crate::serve::Deployment::launch`] with `[engine] name =
+    /// "local"` instead (see the README migration table).
+    #[doc(hidden)]
+    #[deprecated(note = "use serve::Deployment::launch with engine \"local\"")]
     pub fn spawn_local(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
                        -> Result<Fleet> {
         let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
                                    ds.num_classes(), cfg)?;
-        let graph = ds.graph.clone();
-        let features = ds.num_features();
-        let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {
-            let ds = ds.clone();
-            let owned = spec.nodes.clone();
-            Box::new(move || LocalEngine::shard(&ds, capacity, owned))
-        });
-        Ok(fleet)
+        let make = crate::serve::registry::local_shards(ds, capacity);
+        Ok(Fleet::spawn(plan, &ds.graph, ds.num_features(), cfg, make))
     }
 
-    /// Spawn a fleet of [`PlanEngine`]s — every shard serves a real GCN
-    /// [`crate::ops::plan::ExecPlan`] (compiled **once** here and
-    /// Arc-shared into the shard factories, arena-reused, fused chains),
-    /// still fully offline. Aggregation follows `cfg.aggregation`
-    /// (`Auto` → sparse SpMM at any realistic density, so each shard's
-    /// mask memory scales with the graph's nnz rather than capacity²;
-    /// shards hold a full structural replica, so the CSR is global).
-    /// Shards already parallelize across threads, so each shard runs a
-    /// serial in-shard worker pool.
+    /// Deprecated shim: a fleet of [`PlanEngine`]s sharing one compiled
+    /// plan. Construct through [`crate::serve::Deployment::launch`] with
+    /// `[engine] name = "plan"` instead (see the README migration
+    /// table).
+    #[doc(hidden)]
+    #[deprecated(note = "use serve::Deployment::launch with engine \"plan\"")]
     pub fn spawn_planned(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
                          -> Result<Fleet> {
         let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
                                    ds.num_classes(), cfg)?;
-        let (exec_plan, weights) =
-            PlanEngine::compile_parts_with(ds, capacity, cfg.aggregation)?;
-        let graph = ds.graph.clone();
-        let features = ds.num_features();
-        let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {
-            let ds = ds.clone();
-            let owned = spec.nodes.clone();
-            let exec_plan = std::sync::Arc::clone(&exec_plan);
-            let weights = weights.clone();
-            Box::new(move || {
-                let pool = std::sync::Arc::new(crate::engine::WorkerPool::serial());
-                PlanEngine::from_parts(&ds, capacity, owned, pool, exec_plan, weights)
-            })
-        });
-        Ok(fleet)
+        let make = crate::serve::registry::plan_shards(
+            ds, capacity, cfg.aggregation, false, false,
+        )?;
+        Ok(Fleet::spawn(plan, &ds.graph, ds.num_features(), cfg, make))
     }
 
-    /// Spawn a fleet of [`crate::incremental::IncrementalEngine`]s —
-    /// the same deterministic GCN as [`Fleet::spawn_planned`], but each
-    /// shard recomputes only the dirty frontier of the GrAd churn it
-    /// receives, intersected with its ownership region, and serves the
-    /// rest from its layer-activation cache. Boundary mutations fan out
-    /// to every shard, so a neighbor shard's cached rows are invalidated
-    /// and recomputed automatically; halo imports are recosted per round
-    /// from the live frontier rings.
+    /// Deprecated shim: a fleet of
+    /// [`crate::incremental::IncrementalEngine`]s. Construct through
+    /// [`crate::serve::Deployment::launch`] with `[engine] name =
+    /// "incremental"` instead (see the README migration table).
+    #[doc(hidden)]
+    #[deprecated(note = "use serve::Deployment::launch with engine \"incremental\"")]
     pub fn spawn_incremental(
         ds: &Dataset,
         capacity: usize,
@@ -217,19 +209,9 @@ impl Fleet {
     ) -> Result<Fleet> {
         let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
                                    ds.num_classes(), cfg)?;
-        let graph = ds.graph.clone();
-        let features = ds.num_features();
-        let fleet = Fleet::spawn(plan, &graph, features, cfg, |spec| {
-            let ds = ds.clone();
-            let owned = spec.nodes.clone();
-            Box::new(move || {
-                let pool = std::sync::Arc::new(crate::engine::WorkerPool::serial());
-                crate::incremental::IncrementalEngine::shard(
-                    &ds, capacity, owned, pool, inc,
-                )
-            })
-        });
-        Ok(fleet)
+        let make =
+            crate::serve::registry::incremental_shards(ds, capacity, inc, false);
+        Ok(Fleet::spawn(plan, &ds.graph, ds.num_features(), cfg, make))
     }
 
     pub fn update(&self, u: Update) -> Result<()> {
@@ -239,10 +221,6 @@ impl Fleet {
     pub fn query(&self, node: Option<usize>)
                  -> Result<Receiver<Result<QueryResponse, String>>> {
         self.router.query(node)
-    }
-
-    pub fn query_wait(&self, node: Option<usize>) -> Result<QueryResponse> {
-        self.router.query_wait(node)
     }
 
     /// Barrier all shards; returns the applied version vector.
@@ -274,6 +252,45 @@ impl Fleet {
 
     pub fn shutdown(self) -> Result<()> {
         self.router.shutdown()
+    }
+}
+
+/// The sharded topology behind the unified serving API: everything
+/// delegates to the router, and blocking waits come from the trait's
+/// provided methods ([`crate::serve::Serving::query_wait`],
+/// [`crate::serve::Serving::query_deadline`]).
+impl crate::serve::Serving for Fleet {
+    fn update(&self, u: Update) -> Result<()> {
+        self.router.update(u)
+    }
+
+    fn query(&self, node: Option<usize>)
+             -> Result<Receiver<Result<QueryResponse, String>>> {
+        self.router.query(node)
+    }
+
+    fn sync(&self) -> Result<Vec<u64>> {
+        self.router.sync()
+    }
+
+    fn metrics(&self) -> Snapshot {
+        self.router.metrics()
+    }
+
+    fn shard_metrics(&self) -> Vec<Snapshot> {
+        self.router.shard_metrics()
+    }
+
+    fn num_shards(&self) -> usize {
+        self.router.num_shards()
+    }
+
+    fn record_shed(&self, node: Option<usize>) {
+        self.router.record_shed(node);
+    }
+
+    fn shutdown(self: Box<Self>) -> Result<()> {
+        Fleet::shutdown(*self)
     }
 }
 
@@ -391,10 +408,22 @@ impl InferenceEngine for LocalEngine {
 mod tests {
     use super::*;
     use crate::graph::datasets::synthesize;
+    use crate::serve::{
+        DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+    };
     use crate::server::ServerHandle;
 
     fn twin() -> Dataset {
         synthesize("fleet-eq", 60, 150, 4, 12, 17)
+    }
+
+    fn spec_for(engine: &str, topology: Topology, capacity: usize) -> DeploymentSpec {
+        DeploymentSpec {
+            engine: EngineSpec::named(engine),
+            topology,
+            capacity,
+            ..DeploymentSpec::default()
+        }
     }
 
     /// The same GrAd churn applied through any serving front end.
@@ -421,22 +450,24 @@ mod tests {
         preds
     }
 
-    fn predictions_via_fleet(ds: &Dataset, cfg: &FleetConfig) -> Vec<i32> {
-        let fleet = Fleet::spawn_local(ds, 64, cfg).unwrap();
-        churn(|u| fleet.update(u).unwrap());
+    fn predictions_via_launch(ds: &Dataset, topology: Topology) -> Vec<i32> {
+        let spec = spec_for("local", topology, 64);
+        let serving =
+            Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
+        churn(|u| serving.update(u).unwrap());
         let preds: Vec<i32> = (0..61)
-            .map(|n| fleet.query_wait(Some(n)).unwrap().prediction)
+            .map(|n| serving.query_wait(Some(n)).unwrap().prediction)
             .collect();
-        fleet.shutdown().unwrap();
+        serving.shutdown().unwrap();
         preds
     }
 
     #[test]
-    fn single_shard_fleet_reproduces_the_server() {
+    fn single_shard_launch_reproduces_the_server() {
         let ds = twin();
         let server = predictions_via_server(&ds);
-        let fleet = predictions_via_fleet(&ds, &FleetConfig::homogeneous(1));
-        assert_eq!(server, fleet, "1-shard fleet must equal the old server");
+        let launched = predictions_via_launch(&ds, Topology::homogeneous(1));
+        assert_eq!(server, launched, "shards = 1 must equal the old server");
     }
 
     #[test]
@@ -444,8 +475,7 @@ mod tests {
         let ds = twin();
         let server = predictions_via_server(&ds);
         for shards in [2, 4] {
-            let fleet =
-                predictions_via_fleet(&ds, &FleetConfig::heterogeneous(shards));
+            let fleet = predictions_via_launch(&ds, Topology::zoo(shards));
             assert_eq!(
                 server, fleet,
                 "{shards}-shard fleet must agree with the single leader"
@@ -456,15 +486,16 @@ mod tests {
     #[test]
     fn heterogeneous_fleet_uses_distinct_device_kinds() {
         let ds = twin();
-        let cfg = FleetConfig::heterogeneous(4);
-        let fleet = Fleet::spawn_local(&ds, 64, &cfg).unwrap();
-        let kinds: std::collections::BTreeSet<String> = fleet
-            .plan
+        let spec = spec_for("local", Topology::zoo(4), 64);
+        let plan = Deployment::plan(&spec, &ds).unwrap();
+        let kinds: std::collections::BTreeSet<String> = plan
             .shards
             .iter()
             .map(|s| s.device.kind.to_string())
             .collect();
         assert!(kinds.len() >= 2, "expected ≥2 device kinds, got {kinds:?}");
+        let fleet =
+            Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
         // drive a little traffic so halo accounting fires
         churn(|u| fleet.update(u).unwrap());
         for n in (0..60).step_by(5) {
@@ -512,8 +543,15 @@ mod tests {
 
     #[test]
     fn version_vector_converges_under_churn() {
+        // router internals (expected vs applied) need a concrete Fleet —
+        // built from the same registry shard factory the launcher uses
         let ds = twin();
-        let fleet = Fleet::spawn_local(&ds, 64, &FleetConfig::homogeneous(3)).unwrap();
+        let cfg = FleetConfig::homogeneous(3);
+        let plan = Fleet::plan_for(&ds.graph, 64, ds.num_features(),
+                                   ds.num_classes(), &cfg)
+            .unwrap();
+        let make = crate::serve::registry::local_shards(&ds, 64);
+        let fleet = Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, make);
         churn(|u| fleet.update(u).unwrap());
         let applied = fleet.sync().unwrap();
         assert_eq!(applied, fleet.expected_versions());
@@ -528,9 +566,9 @@ mod tests {
         let ds = synthesize("plan-fleet", 40, 90, 4, 10, 23);
         let mut reference: Option<Vec<i32>> = None;
         for shards in [1usize, 3] {
+            let spec = spec_for("plan", Topology::homogeneous(shards), 48);
             let fleet =
-                Fleet::spawn_planned(&ds, 48, &FleetConfig::homogeneous(shards))
-                    .unwrap();
+                Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
             fleet.update(Update::AddEdge(0, 11)).unwrap();
             fleet.update(Update::AddNode).unwrap();
             let preds: Vec<i32> = (0..41)
@@ -547,13 +585,16 @@ mod tests {
     #[test]
     fn add_node_is_owned_and_answerable() {
         let ds = twin();
-        let fleet = Fleet::spawn_local(&ds, 64, &FleetConfig::homogeneous(2)).unwrap();
+        let spec = spec_for("local", Topology::homogeneous(2), 64);
+        let plan = Deployment::plan(&spec, &ds).unwrap();
+        let fleet =
+            Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
         // node 60 is inactive until AddNode lands
         let err = fleet.query_wait(Some(60)).unwrap_err().to_string();
         assert!(err.contains("out of range"), "{err}");
         fleet.update(Update::AddNode).unwrap();
         let r = fleet.query_wait(Some(60)).unwrap();
-        assert_eq!(r.shard, fleet.plan.owner[60]);
+        assert_eq!(r.shard, plan.owner[60]);
         fleet.shutdown().unwrap();
     }
 }

@@ -87,12 +87,21 @@ impl Router {
         self.shards[shard].query_with_id(id, node)
     }
 
-    /// Blocking convenience: query and wait.
+    /// Blocking convenience: query and wait (router-level tests; serving
+    /// callers go through [`crate::serve::Serving::query_wait`]).
     pub fn query_wait(&self, node: Option<usize>) -> Result<QueryResponse> {
         let rx = self.query(node)?;
         rx.recv()
             .map_err(|_| anyhow!("shard dropped response"))?
             .map_err(|e| anyhow!(e))
+    }
+
+    /// Count one caller-abandoned (deadline-shed) query against the
+    /// shard that owns `node`, through the same `rejected` accounting
+    /// the admission path uses.
+    pub fn record_shed(&self, node: Option<usize>) {
+        let shard = self.owner_of(node.unwrap_or(0));
+        self.shards[shard].metrics.record_rejected();
     }
 
     /// Barrier every shard: returns the applied version vector once every

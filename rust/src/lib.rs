@@ -33,10 +33,30 @@
 //! | [`quant`] | QuantGr: symmetric static INT8 |
 //! | [`coordinator`] | GraphSplit partitioner, planner, executor, batcher, CacheG |
 //! | [`runtime`] | PJRT client, artifact registry, `.gnnt` IO |
-//! | [`server`] | dynamic-graph serving: the single-leader front end |
-//! | [`fleet`] | sharded multi-device serving: placement, halo exchange, routing, admission |
+//! | [`serve`] | **the serving front door**: [`serve::DeploymentSpec`] + [`serve::Deployment`] + the object-safe [`serve::Serving`] trait + the engine registry |
+//! | [`server`] | the single-leader worker loop (the 1-shard [`serve::Serving`] topology) |
+//! | [`fleet`] | sharded multi-device serving: placement, halo exchange, routing, admission (the N-shard topology) |
 //! | [`metrics`] | latency/energy/throughput/halo accounting (per-shard sinks) |
 //! | [`bench`] | the in-tree benchmark harness + paper-figure drivers |
+//!
+//! ## Serving (the `serve` front door)
+//!
+//! Every serving topology launches from one typed value:
+//!
+//! ```text
+//! DeploymentSpec { model, engine, topology, aggregation, quant, batch, admission }
+//!        │  (TOML-round-trippable; validated with actionable errors)
+//!        ▼
+//! Deployment::launch(&spec, &data) ──▶ Box<dyn Serving>
+//!        │                                 query / query_wait / query_deadline
+//!        │                                 update / sync / metrics / shutdown
+//!        ├─ shards = 1 → ServerHandle (single leader — same trait)
+//!        └─ shards > 1 → Fleet (placement + halo + routing)
+//! ```
+//!
+//! Engines are looked up by name in a [`serve::EngineRegistry`]
+//! (built-ins: `local`, `plan`, `incremental`, `coordinator`); adding an
+//! engine is one [`serve::EngineFactory`] impl + one `register` call.
 //!
 //! ## Scaling model (the `fleet` layer)
 //!
@@ -98,6 +118,7 @@ pub mod npu;
 pub mod ops;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod tensor;
 pub mod util;

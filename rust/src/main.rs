@@ -6,9 +6,15 @@
 //! grannite accuracy  [--dataset cora]          # PJRT accuracy table
 //! grannite infer     [--artifact NAME]         # one real inference
 //! grannite split     [--model gcn --variant baseline]  # GraphSplit report
-//! grannite serve     [--events N --query-ratio Q]      # dynamic KG demo
+//! grannite serve     [--spec file.toml …]      # dynamic KG serving demo
+//! grannite fleet     [--spec file.toml …]      # sharded serving demo
 //! grannite artifacts                           # list loaded artifacts
 //! ```
+//!
+//! Both serving subcommands build one [`grannite::serve::DeploymentSpec`]
+//! (from `--spec file.toml` plus flag overrides) and launch it through
+//! [`grannite::serve::Deployment::launch`] — the CLI owns no engine or
+//! topology construction of its own.
 
 use anyhow::{bail, Context, Result};
 use grannite::bench::figures;
@@ -16,6 +22,7 @@ use grannite::cli::Args;
 use grannite::config::HardwareConfig;
 use grannite::coordinator::Coordinator;
 use grannite::graph::datasets;
+use grannite::serve::DeploymentSpec;
 use grannite::util::Table;
 
 fn main() -> Result<()> {
@@ -99,26 +106,41 @@ fn main() -> Result<()> {
             );
         }
         Some("serve") => {
+            // single-leader default over the published dataset twin; the
+            // coordinator engine serves real artifacts, everything else
+            // runs offline
+            let mut spec = deployment_spec(&args, 1, "coordinator")?;
             let events = args.usize_opt("events", 2000)?;
             let query_ratio = args.f64_opt("query-ratio", 0.3)?;
-            let engine = args.str_opt("engine", "coordinator");
-            let agg = grannite::ops::build::Aggregation::parse(
-                &args.str_opt("aggregation", "auto"),
-            )?;
-            serve_demo(&artifacts, &dataset, events, query_ratio, &engine, agg)?;
+            let dspec = datasets::spec(&dataset)?;
+            if spec.capacity == 0 {
+                spec.capacity = dspec.capacity;
+            }
+            let data = if spec.engine.name == "coordinator" {
+                grannite::serve::DataSource::Artifacts {
+                    dir: artifacts.clone(),
+                    dataset: dataset.clone(),
+                }
+            } else {
+                grannite::serve::DataSource::Dataset(datasets::synthesize(
+                    "serve", dspec.nodes, dspec.edges, dspec.classes,
+                    dspec.features, 42,
+                ))
+            };
+            serving_demo(&spec, &data, events, query_ratio)?;
         }
         Some("fleet") => {
-            let shards = args.usize_opt("shards", 4)?;
+            // sharded default over a synthetic knowledge graph (offline)
+            let spec = deployment_spec(&args, 4, "local")?;
             let nodes = args.usize_opt("nodes", 512)?;
             let edges = args.usize_opt("edges", 2048)?;
             let events = args.usize_opt("events", 4000)?;
             let query_ratio = args.f64_opt("query-ratio", 0.4)?;
-            let devices = args.str_list_opt("devices", "series2,series1,gpu,cpu");
-            let engine = args.str_opt("engine", "local");
-            let agg = grannite::ops::build::Aggregation::parse(
-                &args.str_opt("aggregation", "auto"),
-            )?;
-            fleet_demo(shards, nodes, edges, events, query_ratio, &devices, &engine, agg)?;
+            // capacity = 0 derives nodes + 12.5% NodePad slack inside the
+            // spec layer — no CLI-side duplicate of that formula
+            let ds = datasets::synthesize("fleet", nodes, edges, 6, 64, 42);
+            serving_demo(&spec, &grannite::serve::DataSource::Dataset(ds), events,
+                         query_ratio)?;
         }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
@@ -137,14 +159,22 @@ subcommands:
   infer              run one planned-engine inference (--artifact NAME)
   accuracy           accuracy table over all artifacts (--dataset cora)
   split              GraphSplit placement report (--model, --variant)
-  serve              dynamic knowledge-graph serving demo
-                     (--engine coordinator|plan|incremental; plan and
-                      incremental run offline, no artifacts needed;
-                      --aggregation dense|sparse|auto)
-  fleet              sharded multi-device serving demo (offline, no artifacts)
-                     (--shards N --devices series2,cpu,… --nodes --edges
-                      --events --query-ratio --engine local|plan|incremental
-                      --aggregation dense|sparse|auto)
+  serve              dynamic knowledge-graph serving demo (single leader
+                     by default; coordinator serves artifacts, every other
+                     engine runs offline)
+  fleet              sharded multi-device serving demo (offline, no
+                     artifacts; --nodes --edges size the synthetic graph)
+
+both serving subcommands construct through serve::Deployment::launch from
+one deployment spec:
+  --spec file.toml   load a DeploymentSpec (see examples/specs/*.toml)
+  --engine NAME      override [engine] name (local|plan|incremental|
+                     coordinator, or anything registered)
+  --shards N         override [topology] shards (1 = single leader)
+  --devices a,b,…    override [topology] devices (series2|series1|gpu|cpu)
+  --aggregation dense|sparse|auto    --quant    --capacity N
+  --max-pending N    per-shard admission bound (0 = unbounded)
+  --events N --query-ratio Q         workload shape
 
 common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
                 --artifacts DIR
@@ -185,171 +215,93 @@ fn accuracy_table(c: &mut Coordinator, dataset: &str) -> Result<Table> {
     Ok(t)
 }
 
-/// Dynamic KG serving demo. `--engine coordinator` serves the real PJRT
-/// artifacts; `--engine plan` and `--engine incremental` run fully
-/// offline at the dataset's published scale (synthesized twin +
-/// deterministic weights), the latter through the delta-driven
-/// [`grannite::incremental::IncrementalEngine`]. `--aggregation`
-/// (dense|sparse|auto) picks the offline engines' aggregation lowering.
-fn serve_demo(artifacts: &std::path::Path, dataset: &str, events: usize,
-              query_ratio: f64, engine: &str,
-              agg: grannite::ops::build::Aggregation) -> Result<()> {
-    use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
-    use grannite::server::{CoordinatorEngine, ServerConfig, ServerHandle, Update};
+/// Build the [`DeploymentSpec`] for a serving subcommand: start from
+/// `--spec file.toml` (or the subcommand's defaults), then apply flag
+/// overrides — every flag re-parses through the same spec layer, so
+/// there is exactly one construction path.
+fn deployment_spec(args: &Args, default_shards: usize, default_engine: &str)
+                   -> Result<DeploymentSpec> {
+    use grannite::serve::{EngineSpec, Topology};
 
-    let spec = datasets::spec(dataset)?;
-    let server = match engine {
-        "coordinator" => {
-            let artifact = format!("gcn_grad_{dataset}");
-            let ds_name = dataset.to_string();
-            let artifacts = artifacts.to_path_buf();
-            ServerHandle::spawn(
-                move || {
-                    let coordinator = Coordinator::open(&artifacts, &ds_name)?;
-                    Ok(CoordinatorEngine { coordinator, artifact })
-                },
-                ServerConfig::default(),
-            )
-        }
-        "plan" => {
-            let ds = datasets::synthesize(
-                "serve", spec.nodes, spec.edges, spec.classes, spec.features, 42,
-            );
-            let capacity = spec.capacity;
-            ServerHandle::spawn(
-                move || {
-                    let pool =
-                        std::sync::Arc::new(grannite::engine::WorkerPool::serial());
-                    grannite::fleet::PlanEngine::full_with(&ds, capacity, pool, agg)
-                },
-                ServerConfig::default(),
-            )
-        }
-        "incremental" => {
-            let ds = datasets::synthesize(
-                "serve", spec.nodes, spec.edges, spec.classes, spec.features, 42,
-            );
-            let capacity = spec.capacity;
-            ServerHandle::spawn(
-                move || {
-                    let pool =
-                        std::sync::Arc::new(grannite::engine::WorkerPool::serial());
-                    grannite::incremental::IncrementalEngine::full(
-                        &ds,
-                        capacity,
-                        pool,
-                        grannite::incremental::IncrementalConfig {
-                            aggregation: agg,
-                            ..Default::default()
-                        },
-                    )
-                },
-                ServerConfig::default(),
-            )
-        }
-        other => bail!("--engine must be coordinator|plan|incremental, got {other:?}"),
+    let mut spec = match args.options.get("spec") {
+        Some(path) => DeploymentSpec::load(std::path::Path::new(path))?,
+        None => DeploymentSpec {
+            engine: EngineSpec::named(default_engine),
+            topology: if default_shards <= 1 {
+                Topology::homogeneous(1)
+            } else {
+                Topology::zoo(default_shards)
+            },
+            ..DeploymentSpec::default()
+        },
     };
-    println!("engine: {engine} (aggregation: {})", agg.name());
-
-    let stream = KnowledgeGraphStream::new(spec.nodes, spec.capacity, query_ratio, 42);
-    let mut responses = Vec::new();
-    for ev in stream.take(events) {
-        match ev {
-            GraphEvent::AddEdge(u, v) => server.update(Update::AddEdge(u, v))?,
-            GraphEvent::RemoveEdge(u, v) => server.update(Update::RemoveEdge(u, v))?,
-            GraphEvent::AddNode => server.update(Update::AddNode)?,
-            GraphEvent::Query => responses.push(server.query(None)?),
-        }
+    if let Some(e) = args.options.get("engine") {
+        spec.engine.name = e.clone();
     }
-    let mut ok = 0;
-    for rx in responses {
-        if rx.recv()?.is_ok() {
-            ok += 1;
-        }
+    if args.options.contains_key("aggregation") {
+        spec.aggregation = grannite::ops::build::Aggregation::parse(
+            &args.str_opt("aggregation", "auto"),
+        )?;
     }
-    let snap = server.metrics.snapshot();
-    println!("served {ok} queries over {events} events");
-    println!(
-        "latency: {}",
-        snap.latency
-            .as_ref()
-            .map(|s| s.to_string())
-            .unwrap_or_else(|| "n/a".into())
-    );
-    println!(
-        "mask updates: {}  mean batch: {:.1}  throughput: {:.1} q/s",
-        snap.mask_updates, snap.mean_batch, snap.throughput_qps
-    );
-    if snap.dma_bytes_dense > 0 {
-        println!(
-            "mask DMA: shipped {} of {} dense-equivalent ({} saved)",
-            grannite::util::human_bytes(snap.dma_bytes_shipped),
-            grannite::util::human_bytes(snap.dma_bytes_dense),
-            grannite::util::human_bytes(snap.dma_bytes_saved()),
-        );
+    if args.options.contains_key("shards") {
+        spec.topology.shards = args.usize_opt("shards", spec.topology.shards)?;
     }
-    if snap.eligible_rows > 0 {
-        let fr = snap
-            .frontier
-            .as_ref()
-            .map(|f| format!("{:.1}/{:.0}", f.mean, f.max))
-            .unwrap_or_else(|| "n/a".into());
-        println!(
-            "incremental: recompute ratio {:.3}  cache hit rate {:.3}  \
-             frontier mean/max {fr}",
-            snap.recompute_ratio(),
-            snap.cache_hit_rate()
-        );
+    if args.options.contains_key("devices") {
+        spec.topology.devices = args.str_list_opt("devices", "");
     }
-    server.shutdown()?;
-    Ok(())
+    if args.options.contains_key("capacity") {
+        spec.capacity = args.usize_opt("capacity", spec.capacity)?;
+    }
+    if args.options.contains_key("max-pending") {
+        spec.admission.max_pending = args.usize_opt("max-pending", 0)?;
+    }
+    // accept both the switch form (--quant) and the value form
+    // (--quant=true / --quant false) — a mis-typed value must not
+    // silently serve FP32
+    if args.has("quant") {
+        spec.quant = true;
+    } else if let Some(v) = args.options.get("quant") {
+        spec.quant = match v.as_str() {
+            "true" | "1" => true,
+            "false" | "0" => false,
+            other => bail!("--quant expects true|false, got {other:?}"),
+        };
+    }
+    Ok(spec)
 }
 
-/// Sharded serving demo over a synthetic knowledge graph — fully
-/// offline. `--engine local` uses the label-voting
-/// [`grannite::fleet::LocalEngine`]; `--engine plan` serves a real GCN
-/// [`grannite::ops::plan::ExecPlan`] per shard (the planned executor).
-/// `--aggregation dense|sparse|auto` overrides the SpMM-vs-dense
-/// crossover for the plan/incremental engines (bench reproducibility).
-#[allow(clippy::too_many_arguments)]
-fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
-              query_ratio: f64, device_names: &[String], engine: &str,
-              agg: grannite::ops::build::Aggregation) -> Result<()> {
-    use grannite::fleet::{Fleet, FleetConfig};
+/// The serving demo, engine- and topology-agnostic: launch the spec
+/// through [`Deployment::launch`], stream a churn+query workload at it,
+/// and report placement, per-shard metrics, and aggregates.
+fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
+                events: usize, query_ratio: f64) -> Result<()> {
     use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+    use grannite::serve::{Deployment, EngineRegistry, Serving};
     use grannite::server::Update;
 
-    if device_names.is_empty() {
-        bail!("--devices needs at least one preset name (series2|series1|gpu|cpu)");
+    let ds = data.dataset()?;
+    let nodes = ds.num_nodes();
+    // fail fast on an invalid spec (bad engine, shards = 0, quant on the
+    // wrong engine, …) before printing any placement report
+    let registry = EngineRegistry::builtin();
+    {
+        let mut resolved = spec.clone();
+        resolved.capacity = spec.resolved_capacity(nodes)?;
+        resolved.validate_with(&registry)?;
     }
-    let roster: Vec<String> = (0..shards.max(1))
-        .map(|i| device_names[i % device_names.len()].clone())
-        .collect();
-    let mut cfg = FleetConfig::from_names(&roster)?;
-    cfg.aggregation = agg;
-    let capacity = nodes + nodes / 8;
-    let ds = grannite::graph::datasets::synthesize("fleet", nodes, edges, 6, 64, 42);
-    let fleet = match engine {
-        "local" => Fleet::spawn_local(&ds, capacity, &cfg)?,
-        "plan" => Fleet::spawn_planned(&ds, capacity, &cfg)?,
-        "incremental" => Fleet::spawn_incremental(
-            &ds,
-            capacity,
-            &cfg,
-            grannite::incremental::IncrementalConfig {
-                aggregation: agg,
-                ..Default::default()
-            },
-        )?,
-        other => bail!("--engine must be local|plan|incremental, got {other:?}"),
-    };
-    println!("engine: {engine} (aggregation: {})", agg.name());
+    let plan = Deployment::plan(spec, &ds)?;
+    println!(
+        "engine: {} (aggregation: {}, quant: {})",
+        spec.engine.name,
+        spec.aggregation.name(),
+        spec.quant
+    );
 
     let mut t = Table::new(
-        format!("fleet placement — {shards} shards over {nodes} nodes"),
+        format!("placement — {} shard(s) over {nodes} nodes", plan.num_shards()),
         &["shard", "device", "owned", "rate µs/node", "halo in/out", "est round"],
     );
-    for s in &fleet.plan.shards {
+    for s in &plan.shards {
         t.row(&[
             format!("#{}", s.id),
             s.device.name.clone(),
@@ -362,20 +314,25 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
     t.print();
     println!(
         "cut edges: {}  halo {}/round  est round {}",
-        fleet.plan.cut_edges,
-        grannite::util::human_bytes(fleet.plan.halo_bytes_per_round),
-        grannite::util::human_us(fleet.plan.est_round_us)
+        plan.cut_edges,
+        grannite::util::human_bytes(plan.halo_bytes_per_round),
+        grannite::util::human_us(plan.est_round_us)
     );
 
+    // the dataset and the plan are already resolved for the placement
+    // report — hand both to the launcher so nothing is computed twice
+    let serving = Deployment::launch_at(&registry, spec, &ds,
+                                        data.artifacts_dir(), Some(plan.clone()))?;
+    let capacity = plan.owner.len();
     let stream = KnowledgeGraphStream::new(nodes, capacity, query_ratio, 7);
     let mut rng = grannite::util::Rng::new(3);
     let mut pending = Vec::new();
     for ev in stream.take(events) {
         match ev {
-            GraphEvent::AddEdge(u, v) => fleet.update(Update::AddEdge(u, v))?,
-            GraphEvent::RemoveEdge(u, v) => fleet.update(Update::RemoveEdge(u, v))?,
-            GraphEvent::AddNode => fleet.update(Update::AddNode)?,
-            GraphEvent::Query => pending.push(fleet.query(Some(rng.usize(nodes)))?),
+            GraphEvent::AddEdge(u, v) => serving.update(Update::AddEdge(u, v))?,
+            GraphEvent::RemoveEdge(u, v) => serving.update(Update::RemoveEdge(u, v))?,
+            GraphEvent::AddNode => serving.update(Update::AddNode)?,
+            GraphEvent::Query => pending.push(serving.query(Some(rng.usize(nodes)))?),
         }
     }
     let mut ok = 0;
@@ -390,7 +347,7 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
         &["shard", "queries", "rejected", "p50", "p99", "halo bytes",
           "recompute", "cache hit"],
     );
-    for snap in fleet.shard_metrics() {
+    for snap in serving.shard_metrics() {
         let (p50, p99) = snap
             .latency
             .as_ref()
@@ -417,8 +374,7 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
     }
     pt.print();
 
-    let (expected, applied) = (fleet.expected_versions(), fleet.applied_versions());
-    let totals = fleet.metrics();
+    let totals = serving.metrics();
     println!("answered {ok} queries over {events} events");
     println!(
         "aggregate: {:.1} q/s  mean batch {:.1}  halo {} over {} rounds",
@@ -436,13 +392,19 @@ fn fleet_demo(shards: usize, nodes: usize, edges: usize, events: usize,
         );
     }
     if totals.eligible_rows > 0 {
+        let fr = totals
+            .frontier
+            .as_ref()
+            .map(|f| format!("{:.1}/{:.0}", f.mean, f.max))
+            .unwrap_or_else(|| "n/a".into());
         println!(
-            "incremental: recompute ratio {:.3}  cache hit rate {:.3}",
+            "incremental: recompute ratio {:.3}  cache hit rate {:.3}  \
+             frontier mean/max {fr}",
             totals.recompute_ratio(),
             totals.cache_hit_rate()
         );
     }
-    println!("version vector: sequenced {expected:?} applied {applied:?}");
-    fleet.shutdown()?;
+    println!("applied version vector: {:?}", serving.sync()?);
+    serving.shutdown()?;
     Ok(())
 }

@@ -1,0 +1,257 @@
+//! `serve` — the unified serving front door.
+//!
+//! Four PRs of serving machinery (single-leader [`crate::server`],
+//! sharded [`crate::fleet`], planned and incremental engines) grew a
+//! combinatorial construction surface: one constructor per
+//! (engine × topology) cell, each re-parsing its own flags. This module
+//! collapses that matrix into
+//!
+//! ```text
+//! DeploymentSpec ──Deployment::launch(spec, data)──▶ Box<dyn Serving>
+//!       │                    │
+//!       │                    ├─ shards = 1 → ServerHandle (single leader)
+//!       │                    └─ shards > 1 → Fleet (routed shard workers)
+//!       └─ [engine] name ──EngineRegistry──▶ EngineFactory (one per engine)
+//! ```
+//!
+//! - [`spec::DeploymentSpec`]: one typed, TOML-round-trippable value for
+//!   model, engine, topology, aggregation, quant, batching, admission.
+//! - [`Serving`]: the object-safe trait both front ends implement — the
+//!   single-leader server **is** the 1-shard topology at the API level,
+//!   and a caller holding `Box<dyn Serving>` cannot tell which it got
+//!   (property-tested in `rust/tests/serve_spec.rs`).
+//! - [`registry::EngineRegistry`]: engine name → factory. A new engine
+//!   is one factory impl + one `register` call — no edits to `server/`,
+//!   `fleet/`, or `main.rs`.
+
+pub mod registry;
+pub mod spec;
+
+pub use registry::{
+    BoxedEngine, EngineFactory, EngineInit, EngineRegistry, LaunchContext, ShardFactory,
+};
+pub use spec::{BatchSpec, DeploymentSpec, EngineSpec, Topology};
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::fleet::{Fleet, FleetPlan, ShardConfig};
+use crate::graph::datasets::Dataset;
+use crate::metrics::Snapshot;
+use crate::server::{QueryResponse, ServerHandle, Update};
+
+/// A running deployment, whatever its topology: the object-safe serving
+/// surface implemented by both [`ServerHandle`] (1 shard) and [`Fleet`]
+/// (N shards).
+///
+/// Blocking waits are **provided methods** ([`Serving::query_wait`],
+/// [`Serving::query_deadline`]) built on [`Serving::query`], so no
+/// caller hand-rolls a `recv` loop and deadline shedding is accounted
+/// uniformly through the admission path ([`Serving::record_shed`]).
+pub trait Serving: Send {
+    /// Apply a GrAd structure update, ordered before any later query.
+    fn update(&self, u: Update) -> Result<()>;
+
+    /// Submit a query (`None` = full graph, answered like the
+    /// single-leader server); returns the response channel.
+    fn query(&self, node: Option<usize>)
+             -> Result<Receiver<Result<QueryResponse, String>>>;
+
+    /// Barrier every shard; returns the applied version vector (length
+    /// [`Serving::num_shards`]).
+    fn sync(&self) -> Result<Vec<u64>>;
+
+    /// Deployment-wide metrics (exact merge across shards).
+    fn metrics(&self) -> Snapshot;
+
+    /// Per-shard labeled snapshots.
+    fn shard_metrics(&self) -> Vec<Snapshot>;
+
+    /// Worker count (1 for the single-leader server).
+    fn num_shards(&self) -> usize;
+
+    /// Count one caller-abandoned query against the owning shard's
+    /// admission accounting (`rejected` in [`Snapshot`]) — the hook
+    /// [`Serving::query_deadline`] sheds through.
+    fn record_shed(&self, node: Option<usize>);
+
+    /// Stop every worker and join them; the first failure (e.g. a shard
+    /// panic message) surfaces as the `Err`.
+    fn shutdown(self: Box<Self>) -> Result<()>;
+
+    /// Blocking convenience: query and wait indefinitely.
+    fn query_wait(&self, node: Option<usize>) -> Result<QueryResponse> {
+        let rx = self.query(node)?;
+        rx.recv()
+            .map_err(|_| anyhow!("serving dropped the response channel"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Blocking with a deadline: wait at most `deadline` for the answer,
+    /// then abandon the query and count it as shed on the owning shard
+    /// (the response, if it ever arrives, lands in a dropped channel).
+    ///
+    /// Accounting note: unlike an admission rejection, the worker may
+    /// still answer the abandoned query — work done (`queries`) and the
+    /// caller-visible failure (`rejected`) are tracked independently, so
+    /// a deadline miss can appear in both counters.
+    fn query_deadline(&self, node: Option<usize>, deadline: Duration)
+                      -> Result<QueryResponse> {
+        let rx = self.query(node)?;
+        match rx.recv_timeout(deadline) {
+            Ok(r) => r.map_err(|e| anyhow!(e)),
+            Err(RecvTimeoutError::Timeout) => {
+                self.record_shed(node);
+                Err(anyhow!(
+                    "query deadline of {deadline:?} exceeded — abandoned and \
+                     counted as shed"
+                ))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("serving dropped the response channel"))
+            }
+        }
+    }
+}
+
+/// What a deployment serves: an in-memory dataset (offline engines) or
+/// an AOT artifacts directory (the `coordinator` engine; also yields
+/// the dataset twin for placement planning).
+pub enum DataSource {
+    /// An in-memory dataset (synthesized twin or loaded `.gnnt`).
+    Dataset(Dataset),
+    /// `make artifacts` output: manifest + weights + dataset twins.
+    Artifacts {
+        /// Artifacts directory (contains `manifest.toml`).
+        dir: std::path::PathBuf,
+        /// Dataset name inside the manifest (`cora`, `citeseer`, …).
+        dataset: String,
+    },
+}
+
+impl DataSource {
+    /// Resolve to the dataset that drives placement and the offline
+    /// engines. Missing artifacts fail here, before any thread spawns.
+    pub fn dataset(&self) -> Result<Dataset> {
+        match self {
+            DataSource::Dataset(ds) => Ok(ds.clone()),
+            DataSource::Artifacts { dir, dataset } => {
+                if !dir.join("manifest.toml").exists() {
+                    anyhow::bail!(
+                        "artifacts manifest {}/manifest.toml not found — run \
+                         `make artifacts`, or serve offline with \
+                         DataSource::Dataset and engine plan | incremental | \
+                         local",
+                        dir.display()
+                    );
+                }
+                Dataset::load_gnnt(dir, dataset)
+            }
+        }
+    }
+
+    /// The artifacts directory, when this source carries one (drivers
+    /// that already resolved the dataset pass it to
+    /// [`Deployment::launch_at`] so nothing resolves twice).
+    pub fn artifacts_dir(&self) -> Option<std::path::PathBuf> {
+        match self {
+            DataSource::Dataset(_) => None,
+            DataSource::Artifacts { dir, .. } => Some(dir.clone()),
+        }
+    }
+}
+
+/// The front door: validates a [`DeploymentSpec`], plans placement,
+/// resolves the engine factory, and spawns the topology.
+pub struct Deployment;
+
+impl Deployment {
+    /// Launch `spec` over `data` with the built-in engine registry.
+    pub fn launch(spec: &DeploymentSpec, data: &DataSource) -> Result<Box<dyn Serving>> {
+        Deployment::launch_with(&EngineRegistry::builtin(), spec, data)
+    }
+
+    /// [`Deployment::launch`] with a caller-extended registry (how a
+    /// test-only or downstream engine plugs in without touching
+    /// `server/`, `fleet/`, or the CLI).
+    pub fn launch_with(
+        registry: &EngineRegistry,
+        spec: &DeploymentSpec,
+        data: &DataSource,
+    ) -> Result<Box<dyn Serving>> {
+        Deployment::launch_at(registry, spec, &data.dataset()?,
+                              data.artifacts_dir(), None)
+    }
+
+    /// The lower-level entry: launch over an **already-resolved**
+    /// dataset, optionally with an **already-computed** placement (the
+    /// one [`Deployment::plan`] returned for a report). Drivers that
+    /// resolve the [`DataSource`] themselves use this so the dataset is
+    /// loaded and the cost-model planning pass run exactly once per
+    /// launch; a supplied plan that doesn't match the spec's resolved
+    /// capacity and shard count is rejected, never silently replanned.
+    pub fn launch_at(
+        registry: &EngineRegistry,
+        spec: &DeploymentSpec,
+        ds: &Dataset,
+        artifacts: Option<std::path::PathBuf>,
+        plan: Option<FleetPlan>,
+    ) -> Result<Box<dyn Serving>> {
+        let capacity = spec.resolved_capacity(ds.num_nodes())?;
+        // validate at the *resolved* capacity so derived capacities hit
+        // the same budget checks an explicit one would
+        let mut resolved = spec.clone();
+        resolved.capacity = capacity;
+        resolved.validate_with(registry)?;
+
+        let cfg = resolved.fleet_config()?;
+        let plan = match plan {
+            Some(p) if p.owner.len() == capacity
+                && p.shards.len() == cfg.devices.len() => p,
+            Some(p) => anyhow::bail!(
+                "supplied FleetPlan does not match the spec: plan covers {} \
+                 capacity slots / {} shards, spec resolves to {capacity} / \
+                 {} — pass the plan from Deployment::plan on the same spec, \
+                 or None to replan",
+                p.owner.len(),
+                p.shards.len(),
+                cfg.devices.len(),
+            ),
+            None => Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
+                                    ds.num_classes(), &cfg)?,
+        };
+        let ctx = LaunchContext {
+            spec: &resolved,
+            dataset: ds,
+            capacity,
+            artifacts,
+        };
+        let mut make = registry.get(&resolved.engine.name)?.prepare(&ctx)?;
+
+        if resolved.topology.shards == 1 {
+            // the single-leader server is the 1-shard topology: same
+            // engine factory, same batching and admission, no halo
+            let init = make(&plan.shards[0]);
+            let config = ShardConfig {
+                batch: cfg.batch.clone(),
+                admission: cfg.admission,
+                halo: None,
+            };
+            Ok(Box::new(ServerHandle::spawn_with(init, config)))
+        } else {
+            Ok(Box::new(Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg,
+                                     make)))
+        }
+    }
+
+    /// The placement a spec would launch with (deterministic — the same
+    /// plan `launch` spawns), for inspection and reporting without
+    /// starting any worker.
+    pub fn plan(spec: &DeploymentSpec, ds: &Dataset) -> Result<FleetPlan> {
+        let capacity = spec.resolved_capacity(ds.num_nodes())?;
+        let cfg = spec.fleet_config()?;
+        Fleet::plan_for(&ds.graph, capacity, ds.num_features(), ds.num_classes(), &cfg)
+    }
+}

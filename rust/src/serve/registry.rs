@@ -1,0 +1,431 @@
+//! The engine registry: `EngineSpec -> Box<dyn EngineFactory>`.
+//!
+//! This replaces the hand-written `spawn_local` / `spawn_planned` /
+//! `spawn_incremental` lattice: every engine is a factory keyed by name,
+//! [`crate::serve::Deployment::launch`] looks the name up once, and the
+//! factory hands back one per-shard constructor closure per
+//! [`ShardSpec`]. Adding engine #5 is a new [`EngineFactory`] impl plus
+//! one `register` call — no edits to `server/`, `fleet/`, or `main.rs`
+//! (property-tested with a dummy engine in `rust/tests/serve_spec.rs`).
+//!
+//! Factory contract: [`EngineFactory::prepare`] runs **once per launch**
+//! on the launching thread — the place to compile an
+//! [`crate::ops::plan::ExecPlan`] once and `Arc`-share it across shards —
+//! while the returned per-shard closures run **inside** the shard threads
+//! (PJRT handles are not `Send`, the same contract
+//! [`crate::fleet::Fleet::spawn`] has always had).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::WorkerPool;
+use crate::fleet::{LocalEngine, PlanEngine, ShardSpec};
+use crate::graph::datasets::Dataset;
+use crate::incremental::{IncrementalConfig, IncrementalEngine};
+use crate::ops::build::Aggregation;
+use crate::serve::spec::{dense_mask_bytes, DeploymentSpec, DENSE_MASK_BUDGET_BYTES};
+use crate::server::{CoordinatorEngine, InferenceEngine};
+
+/// A shard engine behind the registry: the object-safe form every
+/// factory produces (`impl InferenceEngine for Box<dyn InferenceEngine>`
+/// lets [`crate::fleet::Fleet::spawn`] consume it unchanged).
+pub type BoxedEngine = Box<dyn InferenceEngine>;
+
+/// One shard's engine constructor; runs inside the shard thread.
+pub type EngineInit = Box<dyn FnOnce() -> Result<BoxedEngine> + Send>;
+
+/// Per-launch shard-constructor maker: called once per [`ShardSpec`].
+pub type ShardFactory = Box<dyn FnMut(&ShardSpec) -> EngineInit>;
+
+/// Everything a factory may need at launch time.
+pub struct LaunchContext<'a> {
+    /// The validated spec (capacity already resolved).
+    pub spec: &'a DeploymentSpec,
+    /// The resolved dataset (graph + features + labels).
+    pub dataset: &'a Dataset,
+    /// Resolved NodePad capacity (≥ the dataset's node count).
+    pub capacity: usize,
+    /// AOT artifacts directory, when launched from
+    /// [`crate::serve::DataSource::Artifacts`].
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl LaunchContext<'_> {
+    /// Should a shard run a parallel in-shard worker pool? Only the
+    /// single-leader topology: N shards already parallelize across
+    /// threads, and N machine-sized pools would oversubscribe.
+    pub fn parallel_pool(&self) -> bool {
+        self.spec.topology.shards == 1
+    }
+}
+
+/// Builds per-shard engines for one engine name. Implementations are
+/// registered in an [`EngineRegistry`]; `validate` runs before any
+/// thread spawns so misconfigurations fail fast with actionable errors.
+pub trait EngineFactory: Send + Sync {
+    /// Registry key (`[engine] name = "…"` selects it).
+    fn name(&self) -> &str;
+
+    /// Engine-specific spec validation (quant support, model support,
+    /// option types, capacity budgets). Default: anything goes.
+    fn validate(&self, _spec: &DeploymentSpec) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called once per launch; returns the per-shard constructor maker.
+    fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory>;
+}
+
+/// Name → factory table. [`EngineRegistry::builtin`] carries the four
+/// in-tree engines; tests and downstream scenarios extend it with
+/// [`EngineRegistry::register`].
+pub struct EngineRegistry {
+    factories: BTreeMap<String, Box<dyn EngineFactory>>,
+}
+
+impl EngineRegistry {
+    /// An empty registry (test harnesses).
+    pub fn empty() -> EngineRegistry {
+        EngineRegistry { factories: BTreeMap::new() }
+    }
+
+    /// The built-in engines: `local` (label voting, artifact-free),
+    /// `plan` (compiled GCN `ExecPlan`, optionally QuantGr INT8),
+    /// `incremental` (delta-driven frontier recompute), `coordinator`
+    /// (PJRT artifacts).
+    pub fn builtin() -> EngineRegistry {
+        let mut reg = EngineRegistry::empty();
+        reg.register(Box::new(LocalFactory));
+        reg.register(Box::new(PlanFactory));
+        reg.register(Box::new(IncrementalFactory));
+        reg.register(Box::new(CoordinatorFactory));
+        reg
+    }
+
+    /// Register (or replace) a factory under its own name.
+    pub fn register(&mut self, factory: Box<dyn EngineFactory>) {
+        self.factories.insert(factory.name().to_string(), factory);
+    }
+
+    /// Look an engine up; the error lists every registered name.
+    pub fn get(&self, name: &str) -> Result<&dyn EngineFactory> {
+        self.factories.get(name).map(|f| f.as_ref()).ok_or_else(|| {
+            anyhow!(
+                "unknown engine {name:?} — registered engines: {}",
+                self.names().join(" | ")
+            )
+        })
+    }
+
+    /// Registered engine names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+}
+
+/// Shared guard: engines that materialize the dense `capacity²` mask
+/// must fit the budget (the sparse path never allocates it). Called at
+/// validate time for an explicit `dense`, and again at prepare time
+/// with the graph-resolved aggregation so an `auto` that resolves dense
+/// on a dense-enough graph hits the same wall.
+fn check_dense_budget(engine: &str, agg: Aggregation, capacity: usize) -> Result<()> {
+    if agg == Aggregation::Dense && capacity > 0 {
+        let bytes = dense_mask_bytes(capacity);
+        if bytes > DENSE_MASK_BUDGET_BYTES {
+            bail!(
+                "engine {engine:?} with dense aggregation at capacity \
+                 {capacity} would materialize a {} dense mask (budget {}) — \
+                 use aggregation = \"sparse\" (CSR SpMM, O(nnz) memory) or \
+                 reduce capacity",
+                crate::util::human_bytes(bytes),
+                crate::util::human_bytes(DENSE_MASK_BUDGET_BYTES),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The aggregation a launch over `ds` at `capacity` actually runs:
+/// `Auto` resolved against the same padded-mask density the plan
+/// builders use.
+fn resolve_aggregation(agg: Aggregation, ds: &Dataset, capacity: usize) -> Aggregation {
+    let capacity = capacity.max(ds.num_nodes());
+    let density = (2.0 * ds.graph.num_edges() as f64 + ds.num_nodes() as f64)
+        / (capacity as f64 * capacity as f64);
+    agg.resolve(density)
+}
+
+/// Offline engines synthesize GCN plans; anything else needs artifacts.
+fn check_offline_model(engine: &str, spec: &DeploymentSpec) -> Result<()> {
+    if spec.model != "gcn" {
+        bail!(
+            "engine {engine:?} synthesizes offline GCN weights — model \
+             must be \"gcn\", got {:?} (serve other models through engine \
+             \"coordinator\" with AOT artifacts)",
+            spec.model
+        );
+    }
+    Ok(())
+}
+
+fn shard_pool(parallel: bool) -> Arc<WorkerPool> {
+    Arc::new(if parallel { WorkerPool::default_parallel() } else { WorkerPool::serial() })
+}
+
+/// Engines with a closed option set reject anything else — the spec
+/// layer's "a typo'd knob must not silently become a default" contract,
+/// enforced uniformly across factories.
+fn check_known_options(engine: &str, spec: &DeploymentSpec, known: &[&str]) -> Result<()> {
+    for key in spec.engine.options.keys() {
+        if !known.contains(&key.as_str()) {
+            if known.is_empty() {
+                bail!("engine {engine:?} takes no [engine] options, got {key:?}");
+            }
+            bail!(
+                "engine {engine:?} does not take option {key:?} — known \
+                 options: {}",
+                known.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// local — deterministic label voting, no artifacts, no MACs
+// ---------------------------------------------------------------------------
+
+struct LocalFactory;
+
+impl EngineFactory for LocalFactory {
+    fn name(&self) -> &str {
+        "local"
+    }
+
+    fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
+        check_offline_model("local", spec)?;
+        check_known_options("local", spec, &[])?;
+        if spec.quant {
+            bail!(
+                "engine \"local\" is label voting (no MAC datapath) — quant \
+                 = true has nothing to quantize; use engine \"plan\" for \
+                 QuantGr INT8"
+            );
+        }
+        Ok(())
+    }
+
+    fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {
+        Ok(local_shards(ctx.dataset, ctx.capacity))
+    }
+}
+
+/// Per-shard [`LocalEngine`] constructors (also the body of the
+/// deprecated `Fleet::spawn_local` shim).
+pub(crate) fn local_shards(ds: &Dataset, capacity: usize) -> ShardFactory {
+    let ds = ds.clone();
+    Box::new(move |spec: &ShardSpec| {
+        let ds = ds.clone();
+        let owned = spec.nodes.clone();
+        Box::new(move || {
+            Ok(Box::new(LocalEngine::shard(&ds, capacity, owned)?) as BoxedEngine)
+        })
+    })
+}
+
+// ---------------------------------------------------------------------------
+// plan — compiled GCN ExecPlan, FP32 or QuantGr INT8
+// ---------------------------------------------------------------------------
+
+struct PlanFactory;
+
+impl EngineFactory for PlanFactory {
+    fn name(&self) -> &str {
+        "plan"
+    }
+
+    fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
+        check_offline_model("plan", spec)?;
+        check_known_options("plan", spec, &[])?;
+        check_dense_budget("plan", spec.aggregation, spec.capacity)
+    }
+
+    fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {
+        plan_shards(
+            ctx.dataset,
+            ctx.capacity,
+            ctx.spec.aggregation,
+            ctx.spec.quant,
+            ctx.parallel_pool(),
+        )
+    }
+}
+
+/// Per-shard [`PlanEngine`] constructors sharing **one** compiled plan +
+/// weight set (also the body of the deprecated `Fleet::spawn_planned`
+/// shim, with `quant = false`).
+pub(crate) fn plan_shards(
+    ds: &Dataset,
+    capacity: usize,
+    agg: Aggregation,
+    quant: bool,
+    parallel: bool,
+) -> Result<ShardFactory> {
+    // an Auto that resolves dense on this graph pays the same mask
+    // budget an explicit dense would
+    check_dense_budget("plan", resolve_aggregation(agg, ds, capacity), capacity)?;
+    let (plan, weights) = if quant {
+        PlanEngine::compile_quant_parts(ds, capacity, agg)?
+    } else {
+        PlanEngine::compile_parts_with(ds, capacity, agg)?
+    };
+    let ds = ds.clone();
+    Ok(Box::new(move |spec: &ShardSpec| {
+        let ds = ds.clone();
+        let owned = spec.nodes.clone();
+        let plan = Arc::clone(&plan);
+        let weights = weights.clone();
+        Box::new(move || {
+            let pool = shard_pool(parallel);
+            Ok(Box::new(PlanEngine::from_parts(&ds, capacity, owned, pool, plan, weights)?)
+                as BoxedEngine)
+        })
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// incremental — delta-driven frontier recompute over an activation cache
+// ---------------------------------------------------------------------------
+
+struct IncrementalFactory;
+
+impl EngineFactory for IncrementalFactory {
+    fn name(&self) -> &str {
+        "incremental"
+    }
+
+    fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
+        check_offline_model("incremental", spec)?;
+        check_dense_budget("incremental", spec.aggregation, spec.capacity)?;
+        if spec.quant {
+            bail!(
+                "engine \"incremental\" serves FP32 tiles — quant = true is \
+                 unsupported; use engine \"plan\" for QuantGr INT8"
+            );
+        }
+        // option types are validated here so a bad spec fails at
+        // validate time, not inside a shard thread
+        let _ = self.config(spec)?;
+        Ok(())
+    }
+
+    fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {
+        let cfg = self.config(ctx.spec)?;
+        check_dense_budget(
+            "incremental",
+            resolve_aggregation(cfg.aggregation, ctx.dataset, ctx.capacity),
+            ctx.capacity,
+        )?;
+        Ok(incremental_shards(ctx.dataset, ctx.capacity, cfg, ctx.parallel_pool()))
+    }
+}
+
+impl IncrementalFactory {
+    /// `[engine]` options → [`IncrementalConfig`] (defaults preserved).
+    fn config(&self, spec: &DeploymentSpec) -> Result<IncrementalConfig> {
+        let mut cfg = IncrementalConfig { aggregation: spec.aggregation, ..Default::default() };
+        if let Some(m) = spec.engine.f64_opt("cost_margin")? {
+            cfg.cost_margin = m;
+        }
+        if let Some(t) = spec.engine.usize_opt("tile_min")? {
+            cfg.tile_min = t;
+        }
+        check_known_options("incremental", spec, &["cost_margin", "tile_min"])?;
+        Ok(cfg)
+    }
+}
+
+/// Per-shard [`IncrementalEngine`] constructors (also the body of the
+/// deprecated `Fleet::spawn_incremental` shim).
+pub(crate) fn incremental_shards(
+    ds: &Dataset,
+    capacity: usize,
+    cfg: IncrementalConfig,
+    parallel: bool,
+) -> ShardFactory {
+    let ds = ds.clone();
+    Box::new(move |spec: &ShardSpec| {
+        let ds = ds.clone();
+        let owned = spec.nodes.clone();
+        Box::new(move || {
+            let pool = shard_pool(parallel);
+            Ok(Box::new(IncrementalEngine::shard(&ds, capacity, owned, pool, cfg)?)
+                as BoxedEngine)
+        })
+    })
+}
+
+// ---------------------------------------------------------------------------
+// coordinator — PJRT artifacts (the real-numerics path)
+// ---------------------------------------------------------------------------
+
+struct CoordinatorFactory;
+
+impl EngineFactory for CoordinatorFactory {
+    fn name(&self) -> &str {
+        "coordinator"
+    }
+
+    fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
+        if spec.quant {
+            bail!(
+                "engine \"coordinator\" serves whatever artifact [engine] \
+                 artifact names — for INT8, point it at a *_quant_* \
+                 artifact instead of setting quant = true"
+            );
+        }
+        check_known_options("coordinator", spec, &["artifact"])?;
+        if let Some(v) = spec.engine.options.get("artifact") {
+            if v.as_str().is_none() {
+                bail!("[engine] artifact must be a string, got {v:?}");
+            }
+        }
+        Ok(())
+    }
+
+    fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {
+        let dir = ctx.artifacts.clone().ok_or_else(|| {
+            anyhow!(
+                "engine \"coordinator\" serves AOT artifacts — launch with \
+                 DataSource::Artifacts {{ dir, dataset }} (after `make \
+                 artifacts`), or pick an offline engine: plan | \
+                 incremental | local"
+            )
+        })?;
+        let dataset = ctx.dataset.name.clone();
+        let artifact = match ctx.spec.engine.str_opt("artifact") {
+            Some(a) => a.to_string(),
+            None if ctx.spec.model == "gcn" => format!("gcn_grad_{dataset}"),
+            None => bail!(
+                "engine \"coordinator\" with model {:?} needs an explicit \
+                 [engine] artifact = \"…\" (only gcn has a default \
+                 GrAd artifact)",
+                ctx.spec.model
+            ),
+        };
+        let parallel = ctx.parallel_pool();
+        Ok(Box::new(move |_spec: &ShardSpec| {
+            let dir = dir.clone();
+            let dataset = dataset.clone();
+            let artifact = artifact.clone();
+            Box::new(move || {
+                let pool = shard_pool(parallel);
+                let coordinator =
+                    crate::coordinator::Coordinator::open_with_pool(&dir, &dataset, pool)?;
+                Ok(Box::new(CoordinatorEngine { coordinator, artifact }) as BoxedEngine)
+            })
+        }))
+    }
+}

@@ -1,0 +1,583 @@
+//! The typed deployment specification — one declarative object that
+//! names everything the old constructor matrix spread across
+//! `Fleet::spawn_local/spawn_planned/spawn_incremental`,
+//! `ServerHandle::spawn`, and per-subsystem CLI flag parsing.
+//!
+//! A [`DeploymentSpec`] is the paper's "configurable pipeline" framing
+//! made concrete: which execution engine (StaGr plans, QuantGr INT8,
+//! delta-driven incremental, PJRT coordinator), which topology (the
+//! single-leader server is *literally* `shards = 1`), which aggregation
+//! lowering (GraSp sparse vs dense), and which admission/batching policy
+//! — all in one value that round-trips through the crate's TOML-subset
+//! parser ([`crate::config::parse`]), validates with actionable errors,
+//! and launches through [`crate::serve::Deployment::launch`].
+
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::parse::{Document, Value};
+use crate::config::HardwareConfig;
+use crate::fleet::{AdmissionConfig, FleetConfig};
+use crate::ops::build::Aggregation;
+use crate::server::ServerConfig;
+
+/// Dense-aggregation mask budget: a deployment whose engine would
+/// materialize a `capacity × capacity` f32 mask larger than this is
+/// rejected at validation time with a pointer at the sparse path, instead
+/// of OOMing a shard at first inference.
+pub const DENSE_MASK_BUDGET_BYTES: usize = 512 << 20;
+
+/// Bytes of the dense `capacity²` f32 aggregation mask (saturating, so a
+/// preposterous capacity still produces a finite, rejectable number).
+pub fn dense_mask_bytes(capacity: usize) -> usize {
+    capacity.saturating_mul(capacity).saturating_mul(4)
+}
+
+/// Which inference engine a deployment runs, plus engine-specific knobs.
+///
+/// `name` selects a factory from the
+/// [`EngineRegistry`](crate::serve::EngineRegistry) (built-ins: `local`,
+/// `plan`, `incremental`, `coordinator`); `options` is an open key→value
+/// table the selected factory interprets (e.g. `cost_margin` for
+/// `incremental`, `artifact` for `coordinator`), so registering engine #5
+/// never changes this type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSpec {
+    /// Registered engine name.
+    pub name: String,
+    /// Engine-specific options (free keys under `[engine]` in TOML).
+    pub options: BTreeMap<String, Value>,
+}
+
+impl EngineSpec {
+    /// Spec for a registered engine with no options.
+    pub fn named(name: &str) -> EngineSpec {
+        EngineSpec { name: name.to_string(), options: BTreeMap::new() }
+    }
+
+    /// Builder: attach one engine option.
+    pub fn with_option(mut self, key: &str, value: Value) -> EngineSpec {
+        self.options.insert(key.to_string(), value);
+        self
+    }
+
+    /// String option, if present.
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(Value::as_str)
+    }
+
+    /// Float option (integer literals accepted), if present. A value of
+    /// the wrong type is a loud error, not a silent default.
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_float().map(Some).ok_or_else(|| {
+                anyhow!("[engine] {key} must be a number, got {v:?}")
+            }),
+        }
+    }
+
+    /// Non-negative integer option, if present.
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => match v.as_int() {
+                Some(i) if i >= 0 => Ok(Some(i as usize)),
+                _ => bail!("[engine] {key} must be a non-negative integer, got {v:?}"),
+            },
+        }
+    }
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec::named("plan")
+    }
+}
+
+/// Shard topology: how many workers serve the logical graph and which
+/// simulated devices they pin to. `shards = 1` **is** the single-leader
+/// server — [`crate::serve::Deployment::launch`] returns a
+/// [`crate::server::ServerHandle`] for it and a [`crate::fleet::Fleet`]
+/// otherwise, behind the same [`crate::serve::Serving`] object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Worker count (≥ 1).
+    pub shards: usize,
+    /// Device preset names, cycled over the shards (see
+    /// [`HardwareConfig::preset_names`]).
+    pub devices: Vec<String>,
+    /// Stored bytes per feature element on the halo link (2 = FP16).
+    pub dtype_bytes: usize,
+}
+
+impl Topology {
+    /// `n` identical Series-2 NPU shards (the clean scaling sweep).
+    pub fn homogeneous(n: usize) -> Topology {
+        Topology { shards: n.max(1), ..Topology::default() }
+    }
+
+    /// `n` shards cycling the full device zoo (NPU2, NPU1, iGPU, CPU) —
+    /// the heterogeneous placement the cost model exists for.
+    pub fn zoo(n: usize) -> Topology {
+        Topology {
+            shards: n.max(1),
+            devices: ["series2", "series1", "gpu", "cpu"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The device roster cycled to `shards` length, every name resolved
+    /// through the one device table ([`HardwareConfig::preset`]).
+    pub fn roster(&self) -> Result<Vec<HardwareConfig>> {
+        if self.devices.is_empty() {
+            bail!(
+                "topology.devices is empty — pick from: {}",
+                HardwareConfig::preset_names().join(" | ")
+            );
+        }
+        (0..self.shards.max(1))
+            .map(|i| {
+                let name = &self.devices[i % self.devices.len()];
+                HardwareConfig::preset(name)
+                    .with_context(|| format!("topology.devices entry {i}"))
+            })
+            .collect()
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { shards: 1, devices: vec!["series2".to_string()], dtype_bytes: 2 }
+    }
+}
+
+/// Query batching window (the coalescing the paper's batcher does).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchSpec {
+    /// Largest batch one inference round answers.
+    pub max_batch: usize,
+    /// Longest a query waits for peers to coalesce, microseconds.
+    pub max_wait_us: u64,
+}
+
+impl BatchSpec {
+    /// The equivalent worker-loop config.
+    pub fn server_config(&self) -> ServerConfig {
+        ServerConfig {
+            max_batch: self.max_batch,
+            max_wait: Duration::from_micros(self.max_wait_us),
+        }
+    }
+}
+
+impl Default for BatchSpec {
+    fn default() -> Self {
+        let d = ServerConfig::default();
+        BatchSpec {
+            max_batch: d.max_batch,
+            max_wait_us: d.max_wait.as_micros() as u64,
+        }
+    }
+}
+
+/// One typed deployment: everything
+/// [`crate::serve::Deployment::launch`] needs to serve a graph, and
+/// nothing it has to re-parse per subsystem.
+///
+/// The TOML shape mirrors the struct — top-level scalars plus
+/// `[engine]`, `[topology]`, `[batch]`, `[admission]` tables — and
+/// `parse_toml(to_toml(spec)) == spec` holds for every spec that
+/// passes [`DeploymentSpec::validate`] (the subset has no string
+/// escapes, so validation rejects embedded quotes; tested in
+/// `rust/tests/serve_spec.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentSpec {
+    /// Model family. Offline engines synthesize GCN plans, so they
+    /// require `"gcn"`; the `coordinator` engine serves whatever
+    /// artifact `[engine] artifact` names.
+    pub model: String,
+    /// NodePad capacity (node-id space). `0` derives
+    /// `nodes + nodes/8` from the launched graph.
+    pub capacity: usize,
+    /// Aggregation lowering: GraSp sparse SpMM, dense MatMul, or
+    /// density-resolved `auto`.
+    pub aggregation: Aggregation,
+    /// QuantGr INT8 (`plan` engine only): compile the quantized graph
+    /// and pre-quantize weights to the i8 datapath.
+    pub quant: bool,
+    /// Which engine factory builds the per-shard workers.
+    pub engine: EngineSpec,
+    /// Shard count + device roster.
+    pub topology: Topology,
+    /// Query-coalescing window.
+    pub batch: BatchSpec,
+    /// Per-shard load shedding (0 = unbounded, the single-leader
+    /// historical behavior).
+    pub admission: AdmissionConfig,
+}
+
+impl Default for DeploymentSpec {
+    fn default() -> Self {
+        DeploymentSpec {
+            model: "gcn".to_string(),
+            capacity: 0,
+            aggregation: Aggregation::Auto,
+            quant: false,
+            engine: EngineSpec::default(),
+            topology: Topology::default(),
+            batch: BatchSpec::default(),
+            admission: AdmissionConfig::unbounded(),
+        }
+    }
+}
+
+impl DeploymentSpec {
+    /// Parse a spec from TOML-subset text. Unknown sections and keys are
+    /// loud errors (a typo'd knob must not silently become a default).
+    pub fn parse_toml(text: &str) -> Result<DeploymentSpec> {
+        let doc = Document::parse(text)?;
+        DeploymentSpec::from_doc(&doc)
+    }
+
+    /// [`Self::parse_toml`] from a file, with the path in every error.
+    pub fn load(path: &std::path::Path) -> Result<DeploymentSpec> {
+        let doc = Document::load(path)?;
+        DeploymentSpec::from_doc(&doc)
+            .with_context(|| format!("deployment spec {}", path.display()))
+    }
+
+    /// Parse from an already-loaded [`Document`].
+    pub fn from_doc(doc: &Document) -> Result<DeploymentSpec> {
+        const SECTIONS: &[&str] = &["", "engine", "topology", "batch", "admission"];
+        for section in doc.section_names() {
+            if !SECTIONS.contains(&section) {
+                bail!(
+                    "unknown section [{section}] — a deployment spec has \
+                     [engine], [topology], [batch], [admission] and the \
+                     top-level keys model, capacity, aggregation, quant"
+                );
+            }
+        }
+        let mut spec = DeploymentSpec::default();
+
+        check_keys(doc, "", &["model", "capacity", "aggregation", "quant"])?;
+        if let Some(v) = doc.get("", "model") {
+            spec.model = str_of(v, "", "model")?.to_string();
+        }
+        if let Some(v) = doc.get("", "capacity") {
+            spec.capacity = usize_of(v, "", "capacity")?;
+        }
+        if let Some(v) = doc.get("", "aggregation") {
+            spec.aggregation = Aggregation::parse(str_of(v, "", "aggregation")?)?;
+        }
+        if let Some(v) = doc.get("", "quant") {
+            spec.quant = bool_of(v, "", "quant")?;
+        }
+
+        if let Some(table) = doc.section("engine") {
+            let mut engine = EngineSpec::named(&spec.engine.name);
+            for (key, value) in table {
+                if key == "name" {
+                    engine.name = str_of(value, "engine", "name")?.to_string();
+                } else {
+                    engine.options.insert(key.clone(), value.clone());
+                }
+            }
+            spec.engine = engine;
+        }
+
+        if let Some(_table) = doc.section("topology") {
+            check_keys(doc, "topology", &["shards", "devices", "dtype_bytes"])?;
+            if let Some(v) = doc.get("topology", "shards") {
+                spec.topology.shards = usize_of(v, "topology", "shards")?;
+            }
+            if let Some(v) = doc.get("topology", "devices") {
+                let arr = v.as_array().ok_or_else(|| {
+                    anyhow!("[topology] devices must be an array of preset names")
+                })?;
+                spec.topology.devices = arr
+                    .iter()
+                    .map(|d| {
+                        d.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow!("[topology] devices entries must be strings, got {d:?}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(v) = doc.get("topology", "dtype_bytes") {
+                spec.topology.dtype_bytes = usize_of(v, "topology", "dtype_bytes")?;
+            }
+        }
+
+        if let Some(_table) = doc.section("batch") {
+            check_keys(doc, "batch", &["max_batch", "max_wait_us"])?;
+            if let Some(v) = doc.get("batch", "max_batch") {
+                spec.batch.max_batch = usize_of(v, "batch", "max_batch")?;
+            }
+            if let Some(v) = doc.get("batch", "max_wait_us") {
+                spec.batch.max_wait_us = usize_of(v, "batch", "max_wait_us")? as u64;
+            }
+        }
+
+        if let Some(_table) = doc.section("admission") {
+            check_keys(doc, "admission", &["max_pending"])?;
+            if let Some(v) = doc.get("admission", "max_pending") {
+                spec.admission.max_pending = usize_of(v, "admission", "max_pending")?;
+            }
+        }
+
+        Ok(spec)
+    }
+
+    /// Emit the spec as TOML-subset text that [`Self::parse_toml`]
+    /// reads back to an equal value.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# grannite deployment spec\n");
+        out.push_str(&format!("model = \"{}\"\n", self.model));
+        out.push_str(&format!("capacity = {}\n", self.capacity));
+        out.push_str(&format!("aggregation = \"{}\"\n", self.aggregation.name()));
+        out.push_str(&format!("quant = {}\n", self.quant));
+        out.push_str("\n[engine]\n");
+        out.push_str(&format!("name = \"{}\"\n", self.engine.name));
+        for (key, value) in &self.engine.options {
+            out.push_str(&format!("{key} = {}\n", emit_value(value)));
+        }
+        out.push_str("\n[topology]\n");
+        out.push_str(&format!("shards = {}\n", self.topology.shards));
+        let devices: Vec<String> = self
+            .topology
+            .devices
+            .iter()
+            .map(|d| format!("\"{d}\""))
+            .collect();
+        out.push_str(&format!("devices = [{}]\n", devices.join(", ")));
+        out.push_str(&format!("dtype_bytes = {}\n", self.topology.dtype_bytes));
+        out.push_str("\n[batch]\n");
+        out.push_str(&format!("max_batch = {}\n", self.batch.max_batch));
+        out.push_str(&format!("max_wait_us = {}\n", self.batch.max_wait_us));
+        out.push_str("\n[admission]\n");
+        out.push_str(&format!("max_pending = {}\n", self.admission.max_pending));
+        out
+    }
+
+    /// Structural validation (everything checkable without an engine
+    /// registry). Every rejection names the offending key and what would
+    /// fix it.
+    pub fn validate(&self) -> Result<()> {
+        if self.model.is_empty() {
+            bail!("model is empty — offline engines serve \"gcn\"");
+        }
+        // the TOML subset has no string escapes, so a quote inside any
+        // string would make to_toml() emit text parse_toml() rejects —
+        // fail loudly here instead of at reload time
+        quote_free("model", &self.model)?;
+        quote_free("[engine] name", &self.engine.name)?;
+        for (key, value) in &self.engine.options {
+            if let Value::Str(s) = value {
+                quote_free(&format!("[engine] {key}"), s)?;
+            }
+        }
+        for d in &self.topology.devices {
+            quote_free("topology.devices entry", d)?;
+        }
+        if self.topology.shards == 0 {
+            bail!(
+                "topology.shards must be ≥ 1 (got 0) — the single-leader \
+                 server is shards = 1, not 0"
+            );
+        }
+        self.topology.roster()?;
+        if ![1, 2, 4].contains(&self.topology.dtype_bytes) {
+            bail!(
+                "topology.dtype_bytes must be 1 (INT8), 2 (FP16) or 4 \
+                 (FP32), got {}",
+                self.topology.dtype_bytes
+            );
+        }
+        if self.batch.max_batch == 0 {
+            bail!("batch.max_batch must be ≥ 1 (got 0)");
+        }
+        Ok(())
+    }
+
+    /// Full validation: structure, engine-name resolution against the
+    /// registry (the error lists every registered engine), then the
+    /// selected factory's own checks (quant support, model support,
+    /// dense-mask budget, option types).
+    pub fn validate_with(&self, registry: &crate::serve::EngineRegistry) -> Result<()> {
+        self.validate()?;
+        let factory = registry.get(&self.engine.name)?;
+        factory.validate(self)
+    }
+
+    /// The NodePad capacity this spec serves a graph of `nodes` at:
+    /// `capacity = 0` derives `nodes + nodes/8` slack, an explicit
+    /// capacity must cover the graph.
+    pub fn resolved_capacity(&self, nodes: usize) -> Result<usize> {
+        if self.capacity == 0 {
+            Ok(nodes + nodes / 8)
+        } else if self.capacity < nodes {
+            bail!(
+                "capacity {} is smaller than the graph's {nodes} nodes — \
+                 raise it or set capacity = 0 to derive nodes + 12.5% \
+                 NodePad slack",
+                self.capacity
+            )
+        } else {
+            Ok(self.capacity)
+        }
+    }
+
+    /// Lower the spec to the fleet layer's runtime config. Devices
+    /// resolve through [`Topology::roster`] →
+    /// [`HardwareConfig::preset`] — the one name→device table the CLI
+    /// and [`FleetConfig::from_names`] also use.
+    pub fn fleet_config(&self) -> Result<FleetConfig> {
+        let mut cfg = FleetConfig::homogeneous(1);
+        cfg.devices = self.topology.roster()?;
+        cfg.batch = self.batch.server_config();
+        cfg.admission = self.admission;
+        cfg.dtype_bytes = self.topology.dtype_bytes;
+        cfg.aggregation = self.aggregation;
+        Ok(cfg)
+    }
+}
+
+/// The TOML subset cannot represent embedded quotes; reject them at
+/// validation so specs stay serializable.
+fn quote_free(what: &str, s: &str) -> Result<()> {
+    if s.contains('"') || s.contains('\'') {
+        bail!(
+            "{what} value {s:?} contains a quote character — not \
+             representable in the TOML-subset spec format"
+        );
+    }
+    Ok(())
+}
+
+/// Reject unknown keys in a fixed-schema section.
+fn check_keys(doc: &Document, section: &str, known: &[&str]) -> Result<()> {
+    if let Some(table) = doc.section(section) {
+        for key in table.keys() {
+            if !known.contains(&key.as_str()) {
+                let at = if section.is_empty() { "top level".to_string() } else { format!("[{section}]") };
+                bail!("unknown key {key:?} at {at} — expected one of: {}", known.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn str_of<'v>(v: &'v Value, section: &str, key: &str) -> Result<&'v str> {
+    v.as_str()
+        .ok_or_else(|| anyhow!("[{section}] {key} must be a string, got {v:?}"))
+}
+
+fn usize_of(v: &Value, section: &str, key: &str) -> Result<usize> {
+    match v.as_int() {
+        Some(i) if i >= 0 => Ok(i as usize),
+        _ => bail!("[{section}] {key} must be a non-negative integer, got {v:?}"),
+    }
+}
+
+fn bool_of(v: &Value, section: &str, key: &str) -> Result<bool> {
+    v.as_bool()
+        .ok_or_else(|| anyhow!("[{section}] {key} must be true or false, got {v:?}"))
+}
+
+/// Emit a [`Value`] so the TOML-subset parser reads the same value back
+/// (floats always carry a decimal point so they stay floats).
+fn emit_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{s}\""),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            let s = format!("{f}");
+            if s.contains('.') || s.contains('e') || s.contains("inf") || s.contains("NaN") {
+                s
+            } else {
+                format!("{s}.0")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        Value::Array(items) => {
+            let inner: Vec<String> = items.iter().map(emit_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_single_leader_plan() {
+        let spec = DeploymentSpec::default();
+        assert_eq!(spec.engine.name, "plan");
+        assert_eq!(spec.topology.shards, 1);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_document_parses_to_default() {
+        assert_eq!(DeploymentSpec::parse_toml("").unwrap(), DeploymentSpec::default());
+    }
+
+    #[test]
+    fn unknown_section_and_keys_are_loud() {
+        let err = DeploymentSpec::parse_toml("[topolgy]\nshards = 2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[topolgy]"), "{err}");
+        let err = DeploymentSpec::parse_toml("[topology]\nshard = 2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"shard\"") && err.contains("shards"), "{err}");
+    }
+
+    #[test]
+    fn roster_cycles_and_rejects_unknowns() {
+        let t = Topology { shards: 5, ..Topology::zoo(5) };
+        let roster = t.roster().unwrap();
+        assert_eq!(roster.len(), 5);
+        assert_eq!(roster[4].name, roster[0].name, "roster cycles");
+        let bad = Topology {
+            devices: vec!["tpu".to_string()],
+            ..Topology::default()
+        };
+        let err = bad.roster().unwrap_err();
+        assert!(format!("{err:#}").contains("series2"), "{err:#}");
+    }
+
+    #[test]
+    fn quoted_strings_are_rejected_at_validation() {
+        let mut s = DeploymentSpec::default();
+        s.model = "g\"cn".into();
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("quote"), "{err}");
+
+        let mut s = DeploymentSpec::default();
+        s.engine = EngineSpec::named("plan")
+            .with_option("artifact", Value::Str("a'b".into()));
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("quote"), "{err}");
+    }
+
+    #[test]
+    fn float_emission_round_trips() {
+        assert_eq!(emit_value(&Value::Float(2.0)), "2.0");
+        assert_eq!(emit_value(&Value::Float(0.75)), "0.75");
+        let doc = Document::parse("x = 2.0").unwrap();
+        assert_eq!(doc.get("", "x"), Some(&Value::Float(2.0)));
+    }
+}

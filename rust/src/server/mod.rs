@@ -61,6 +61,33 @@ pub trait InferenceEngine {
     }
 }
 
+/// Boxed engines pass through unchanged — this is what lets the
+/// [`crate::serve::EngineRegistry`]'s factories (which produce
+/// `Box<dyn InferenceEngine>`) feed the same generic
+/// [`crate::fleet::Fleet::spawn`] / [`ServerHandle::spawn_with`] paths
+/// as concrete engine types.
+impl InferenceEngine for Box<dyn InferenceEngine> {
+    fn apply(&mut self, update: &Update) -> Result<u64> {
+        (**self).apply(update)
+    }
+
+    fn infer(&mut self) -> Result<Mat> {
+        (**self).infer()
+    }
+
+    fn num_nodes(&self) -> usize {
+        (**self).num_nodes()
+    }
+
+    fn halo_imports(&self) -> Option<usize> {
+        (**self).halo_imports()
+    }
+
+    fn round_stats(&mut self) -> Option<crate::metrics::RoundStats> {
+        (**self).round_stats()
+    }
+}
+
 /// GrAd structure updates.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Update {
@@ -109,7 +136,19 @@ impl ServerHandle {
         F: FnOnce() -> Result<E> + Send + 'static,
         E: InferenceEngine,
     {
-        let shard = ShardWorker::spawn(0, factory, ShardConfig::leader(config));
+        ServerHandle::spawn_with(factory, ShardConfig::leader(config))
+    }
+
+    /// [`ServerHandle::spawn`] with the full shard config — how
+    /// [`crate::serve::Deployment::launch`] gives the 1-shard topology
+    /// the same admission policy a fleet shard would get (halo is
+    /// meaningless on a single leader and stays `None` either way).
+    pub fn spawn_with<F, E>(factory: F, config: ShardConfig) -> ServerHandle
+    where
+        F: FnOnce() -> Result<E> + Send + 'static,
+        E: InferenceEngine,
+    {
+        let shard = ShardWorker::spawn(0, factory, config);
         ServerHandle {
             metrics: shard.metrics.clone(),
             shard: Some(shard),
@@ -135,14 +174,6 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server stopped"))
     }
 
-    /// Blocking convenience: query and wait.
-    pub fn query_wait(&self, node: Option<usize>) -> Result<QueryResponse> {
-        let rx = self.query(node)?;
-        rx.recv()
-            .map_err(|_| anyhow!("server dropped response"))?
-            .map_err(|e| anyhow!(e))
-    }
-
     /// Stop the leader and join it. A worker panic surfaces here as an
     /// `Err` carrying the panic message (in-flight queries were already
     /// answered with rejections and counted).
@@ -151,6 +182,45 @@ impl ServerHandle {
             Some(s) => s.shutdown(),
             None => Ok(()),
         }
+    }
+}
+
+/// The single-leader server is the 1-shard [`crate::serve::Serving`]
+/// topology: blocking waits ([`crate::serve::Serving::query_wait`],
+/// [`crate::serve::Serving::query_deadline`]) come from the trait's
+/// provided methods.
+impl crate::serve::Serving for ServerHandle {
+    fn update(&self, u: Update) -> Result<()> {
+        ServerHandle::update(self, u)
+    }
+
+    fn query(&self, node: Option<usize>)
+             -> Result<Receiver<Result<QueryResponse, String>>> {
+        ServerHandle::query(self, node)
+    }
+
+    fn sync(&self) -> Result<Vec<u64>> {
+        Ok(vec![self.shard().sync()?])
+    }
+
+    fn metrics(&self) -> crate::metrics::Snapshot {
+        self.metrics.snapshot()
+    }
+
+    fn shard_metrics(&self) -> Vec<crate::metrics::Snapshot> {
+        vec![self.metrics.snapshot()]
+    }
+
+    fn num_shards(&self) -> usize {
+        1
+    }
+
+    fn record_shed(&self, _node: Option<usize>) {
+        self.metrics.record_rejected();
+    }
+
+    fn shutdown(self: Box<Self>) -> Result<()> {
+        ServerHandle::shutdown(*self)
     }
 }
 
@@ -192,6 +262,7 @@ mod tests {
     use super::*;
     use crate::coordinator::ModelState;
     use crate::graph::datasets::synthesize;
+    use crate::serve::Serving;
 
     /// Mock engine: logits = one-hot of (node id + version) % classes so
     /// tests can verify update ordering effects deterministically.

@@ -18,11 +18,14 @@ use anyhow::Result;
 
 use grannite::coordinator::ModelState;
 use grannite::engine::WorkerPool;
-use grannite::fleet::{synthesize_weights, Fleet, FleetConfig};
+use grannite::fleet::synthesize_weights;
 use grannite::graph::datasets::{synthesize, Dataset};
 use grannite::incremental::{Frontier, IncrementalConfig, IncrementalEngine};
 use grannite::ops::build::{self, GnnDims};
 use grannite::ops::exec;
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+};
 use grannite::server::{InferenceEngine, ServerConfig, ServerHandle, Update};
 use grannite::tensor::Mat;
 use grannite::util::propcheck::forall;
@@ -254,9 +257,15 @@ fn incremental_fleet_matches_single_leader_under_boundary_churn() {
     let leader_metrics = server.metrics.snapshot();
     server.shutdown().unwrap();
 
-    // 3-shard incremental fleet over the same script
-    let fleet =
-        Fleet::spawn_incremental(&ds, 64, &FleetConfig::homogeneous(3), cfg).unwrap();
+    // 3-shard incremental fleet over the same script, launched through
+    // the unified front door (same IncrementalConfig defaults)
+    let spec = DeploymentSpec {
+        engine: EngineSpec::named("incremental"),
+        topology: Topology::homogeneous(3),
+        capacity: 64,
+        ..DeploymentSpec::default()
+    };
+    let fleet = Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
     let mut fleet_preds: Vec<(usize, i32)> = Vec::new();
     boundary_churn(
         |u| fleet.update(u).unwrap(),

@@ -7,7 +7,8 @@ use std::path::Path;
 
 use grannite::coordinator::Coordinator;
 use grannite::graph::datasets::Dataset;
-use grannite::server::{CoordinatorEngine, ServerConfig, ServerHandle, Update};
+use grannite::serve::{DataSource, Deployment, DeploymentSpec, EngineSpec, Serving};
+use grannite::server::Update;
 
 fn artifacts() -> Option<&'static Path> {
     let p = Path::new("artifacts");
@@ -123,14 +124,16 @@ fn citeseer_artifacts_execute() {
 
 #[test]
 fn serving_stack_end_to_end() {
-    let Some(_) = artifacts() else { return };
-    let server = ServerHandle::spawn(
-        || {
-            let coordinator = Coordinator::open(Path::new("artifacts"), "cora")?;
-            Ok(CoordinatorEngine { coordinator, artifact: "gcn_grad_cora".into() })
-        },
-        ServerConfig::default(),
-    );
+    let Some(dir) = artifacts() else { return };
+    // the production path: a coordinator deployment (single leader)
+    // launched from a spec through the unified front door
+    let spec = DeploymentSpec {
+        engine: EngineSpec::named("coordinator"),
+        capacity: 3000,
+        ..DeploymentSpec::default()
+    };
+    let data = DataSource::Artifacts { dir: dir.to_path_buf(), dataset: "cora".into() };
+    let server = Deployment::launch(&spec, &data).unwrap();
     // interleave updates and queries
     server.update(Update::AddEdge(1, 2000)).unwrap();
     let r1 = server.query_wait(Some(5)).unwrap();
@@ -138,7 +141,7 @@ fn serving_stack_end_to_end() {
     server.update(Update::AddNode).unwrap();
     let r2 = server.query_wait(Some(2708)).unwrap(); // the new node
     assert!(r2.prediction >= 0);
-    let snap = server.metrics.snapshot();
+    let snap = server.metrics();
     assert_eq!(snap.queries, 2);
     assert_eq!(snap.mask_updates, 2);
     server.shutdown().unwrap();

@@ -1,0 +1,429 @@
+//! The unified serving API, end to end: spec parsing round-trips,
+//! actionable rejection of every invalid combination, topology
+//! equivalence (the same `DeploymentSpec` through the 1-shard
+//! `Serving` and the N-shard `Serving` answers identically), metrics
+//! consistency through the merge, deadline shedding, and registry
+//! extension with a test-only engine that touches neither `server/`,
+//! `fleet/`, nor `main.rs`.
+
+use std::time::Duration;
+
+use grannite::config::parse::Value;
+use grannite::graph::datasets::{synthesize, Dataset};
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineFactory, EngineInit,
+    EngineRegistry, EngineSpec, LaunchContext, Serving, ShardFactory, Topology,
+};
+use grannite::server::{InferenceEngine, QueryResponse, Update};
+use grannite::tensor::Mat;
+use grannite::util::Rng;
+
+fn twin() -> Dataset {
+    synthesize("serve-spec", 60, 150, 4, 12, 23)
+}
+
+fn spec(engine: &str, shards: usize) -> DeploymentSpec {
+    DeploymentSpec {
+        engine: EngineSpec::named(engine),
+        topology: Topology::zoo(shards),
+        capacity: 64,
+        ..DeploymentSpec::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spec parsing: round trip + rejections
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_spec_round_trips_through_toml() {
+    let mut spec = DeploymentSpec {
+        model: "gcn".into(),
+        capacity: 4096,
+        aggregation: grannite::ops::build::Aggregation::Sparse,
+        quant: true,
+        engine: EngineSpec::named("plan")
+            .with_option("cost_margin", Value::Float(0.5))
+            .with_option("tile_min", Value::Int(64))
+            .with_option("artifact", Value::Str("gcn_grad_cora".into())),
+        topology: Topology {
+            shards: 3,
+            devices: vec!["series2".into(), "cpu".into()],
+            dtype_bytes: 1,
+        },
+        ..DeploymentSpec::default()
+    };
+    spec.batch.max_batch = 32;
+    spec.batch.max_wait_us = 750;
+    spec.admission.max_pending = 9;
+
+    let text = spec.to_toml();
+    let parsed = DeploymentSpec::parse_toml(&text).unwrap();
+    assert_eq!(parsed, spec, "to_toml → parse_toml must be the identity:\n{text}");
+
+    // and the emitted form is stable (parse → emit → parse fixed point)
+    assert_eq!(parsed.to_toml(), text);
+}
+
+#[test]
+fn checked_in_example_specs_parse_and_validate() {
+    let reg = EngineRegistry::builtin();
+    for name in [
+        "single_leader_plan.toml",
+        "incremental_4shard_sparse.toml",
+        "int8_fleet.toml",
+    ] {
+        let path = std::path::Path::new("../examples/specs").join(name);
+        let spec = DeploymentSpec::load(&path)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        spec.validate_with(&reg)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+}
+
+#[test]
+fn zero_shards_is_rejected_with_guidance() {
+    let mut s = spec("local", 1);
+    s.topology.shards = 0;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("topology.shards"), "{err}");
+    assert!(err.contains("shards = 1"), "{err}");
+}
+
+#[test]
+fn unknown_engine_lists_registered_engines() {
+    let s = spec("warp-drive", 2);
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("warp-drive"), "{err}");
+    for known in ["coordinator", "incremental", "local", "plan"] {
+        assert!(err.contains(known), "missing {known} in: {err}");
+    }
+}
+
+#[test]
+fn unknown_aggregation_string_is_rejected_at_parse() {
+    let err = DeploymentSpec::parse_toml("aggregation = \"csr\"")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("dense|sparse|auto"), "{err}");
+}
+
+#[test]
+fn unknown_device_lists_the_valid_names() {
+    let mut s = spec("local", 2);
+    s.topology.devices = vec!["series2".into(), "tpu".into()];
+    let err = format!("{:#}", s.validate().unwrap_err());
+    assert!(err.contains("tpu"), "{err}");
+    assert!(err.contains("entry 1"), "which roster entry was wrong: {err}");
+    for known in ["series2", "series1", "cpu", "gpu"] {
+        assert!(err.contains(known), "missing {known} in: {err}");
+    }
+}
+
+#[test]
+fn incremental_dense_capacity_overflow_is_rejected() {
+    let mut s = spec("incremental", 2);
+    s.aggregation = grannite::ops::build::Aggregation::Dense;
+    s.capacity = 20_000; // 20000² × 4B = 1.6 GB dense mask
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("dense"), "{err}");
+    assert!(err.contains("sparse"), "must point at the fix: {err}");
+    assert!(err.contains("20000"), "must name the capacity: {err}");
+
+    // auto never materializes the dense mask at this scale → accepted
+    s.aggregation = grannite::ops::build::Aggregation::Auto;
+    s.validate_with(&EngineRegistry::builtin()).unwrap();
+}
+
+#[test]
+fn quant_on_non_plan_engines_is_rejected() {
+    for engine in ["local", "incremental"] {
+        let mut s = spec(engine, 1);
+        s.quant = true;
+        let err =
+            format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+        assert!(err.contains("plan"), "{engine}: must point at plan: {err}");
+    }
+}
+
+#[test]
+fn wrong_option_types_are_loud() {
+    let mut s = spec("incremental", 1);
+    s.engine = EngineSpec::named("incremental")
+        .with_option("cost_margin", Value::Str("high".into()));
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("cost_margin"), "{err}");
+
+    let mut s = spec("incremental", 1);
+    s.engine =
+        EngineSpec::named("incremental").with_option("tile_size", Value::Int(8));
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("tile_size") && err.contains("tile_min"), "{err}");
+
+    // engines with a closed (empty) option set reject strays too —
+    // an option must never silently become a no-op
+    let mut s = spec("plan", 1);
+    s.engine = EngineSpec::named("plan").with_option("cost_margin", Value::Float(0.5));
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("no [engine] options"), "{err}");
+
+    // a wrong-typed coordinator artifact is loud, not a silent default
+    let mut s = spec("coordinator", 1);
+    s.engine = EngineSpec::named("coordinator").with_option("artifact", Value::Int(42));
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("artifact") && err.contains("string"), "{err}");
+}
+
+#[test]
+fn capacity_below_graph_size_is_rejected_at_launch() {
+    let ds = twin(); // 60 nodes
+    let mut s = spec("local", 1);
+    s.capacity = 10;
+    let err = format!(
+        "{:#}",
+        Deployment::launch(&s, &DataSource::Dataset(ds)).unwrap_err()
+    );
+    assert!(err.contains("capacity 10"), "{err}");
+    assert!(err.contains("60"), "{err}");
+}
+
+#[test]
+fn coordinator_without_artifacts_fails_actionably() {
+    let err = format!(
+        "{:#}",
+        DataSource::Artifacts {
+            dir: "does-not-exist".into(),
+            dataset: "cora".into(),
+        }
+        .dataset()
+        .unwrap_err()
+    );
+    assert!(err.contains("make artifacts"), "{err}");
+
+    // and from a Dataset source, the coordinator factory itself objects
+    let err = format!(
+        "{:#}",
+        Deployment::launch(&spec("coordinator", 1), &DataSource::Dataset(twin()))
+            .unwrap_err()
+    );
+    assert!(err.contains("DataSource::Artifacts"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// topology equivalence: 1 shard (ServerHandle) vs N shards (Fleet)
+// ---------------------------------------------------------------------------
+
+/// Drive a deterministic churn/query script and return (predictions,
+/// queries issued).
+fn drive(serving: &dyn Serving, nodes: usize) -> (Vec<(usize, i32)>, usize) {
+    let mut rng = Rng::new(41);
+    let mut preds = Vec::new();
+    let mut queries = 0usize;
+    for step in 0..120 {
+        if step % 3 == 0 {
+            let u = rng.usize(nodes);
+            let v = (u + 1 + rng.usize(nodes - 1)) % nodes;
+            serving.update(Update::AddEdge(u.min(v), u.max(v))).unwrap();
+        } else {
+            let n = rng.usize(nodes);
+            preds.push((n, serving.query_wait(Some(n)).unwrap().prediction));
+            queries += 1;
+        }
+    }
+    (preds, queries)
+}
+
+#[test]
+fn same_spec_serves_identically_at_one_and_n_shards() {
+    let ds = twin();
+    // every offline engine family, and the INT8 plan variant
+    for (engine, quant) in [("local", false), ("plan", false), ("plan", true),
+                            ("incremental", false)] {
+        let mut reference: Option<Vec<(usize, i32)>> = None;
+        for shards in [1usize, 3] {
+            let mut s = spec(engine, shards);
+            s.quant = quant;
+            let serving =
+                Deployment::launch(&s, &DataSource::Dataset(ds.clone())).unwrap();
+            assert_eq!(serving.num_shards(), shards);
+            let (preds, queries) = drive(serving.as_ref(), 60);
+
+            // merged-metrics consistency: the deployment-wide snapshot
+            // counts exactly the issued queries, and equals the per-shard
+            // sum whatever the topology
+            let total = serving.metrics();
+            assert_eq!(total.queries, queries, "{engine}×{shards}");
+            let per: usize = serving.shard_metrics().iter().map(|s| s.queries).sum();
+            assert_eq!(per, total.queries, "{engine}×{shards} shard sum");
+            assert_eq!(serving.shard_metrics().len(), shards);
+
+            match &reference {
+                None => reference = Some(preds),
+                Some(r) => assert_eq!(
+                    r, &preds,
+                    "{engine} (quant {quant}): {shards}-shard answers diverged \
+                     from the single leader"
+                ),
+            }
+            serving.shutdown().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// query_wait / query_deadline (trait-provided waits)
+// ---------------------------------------------------------------------------
+
+/// An engine whose inference blocks long enough to trip deadlines.
+struct Slow {
+    nodes: usize,
+    delay: Duration,
+}
+
+impl InferenceEngine for Slow {
+    fn apply(&mut self, _u: &Update) -> anyhow::Result<u64> {
+        Ok(0)
+    }
+    fn infer(&mut self) -> anyhow::Result<Mat> {
+        std::thread::sleep(self.delay);
+        Ok(Mat::zeros(self.nodes, 2))
+    }
+    fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+}
+
+/// Registry factory for [`Slow`] — registered from this test file only.
+struct SlowFactory {
+    delay: Duration,
+}
+
+impl EngineFactory for SlowFactory {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn prepare(&self, ctx: &LaunchContext) -> anyhow::Result<ShardFactory> {
+        let nodes = ctx.dataset.num_nodes();
+        let delay = self.delay;
+        Ok(Box::new(move |_s: &grannite::fleet::ShardSpec| -> EngineInit {
+            Box::new(move || {
+                Ok(Box::new(Slow { nodes, delay })
+                    as Box<dyn InferenceEngine>)
+            })
+        }))
+    }
+}
+
+fn slow_registry(delay: Duration) -> EngineRegistry {
+    let mut reg = EngineRegistry::builtin();
+    reg.register(Box::new(SlowFactory { delay }));
+    reg
+}
+
+#[test]
+fn query_deadline_sheds_and_counts_on_both_topologies() {
+    let ds = twin();
+    for shards in [1usize, 2] {
+        let reg = slow_registry(Duration::from_millis(300));
+        let serving = Deployment::launch_with(
+            &reg,
+            &spec("slow", shards),
+            &DataSource::Dataset(ds.clone()),
+        )
+        .unwrap();
+        let err = serving
+            .query_deadline(Some(3), Duration::from_millis(10))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadline"), "{shards} shards: {err}");
+        // the abandoned query lands in the admission accounting
+        assert!(
+            serving.metrics().rejected >= 1,
+            "{shards} shards: shed not counted"
+        );
+        // a generous deadline answers normally
+        let r: QueryResponse = serving
+            .query_deadline(Some(3), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(r.prediction, 0);
+        serving.shutdown().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry extension: a dummy engine, zero edits to server/fleet/main
+// ---------------------------------------------------------------------------
+
+/// Test-only engine: prediction = (node + version) % 4, like the
+/// in-tree mocks — everything it needs comes through the registry.
+struct Dummy {
+    nodes: usize,
+    version: u64,
+}
+
+impl InferenceEngine for Dummy {
+    fn apply(&mut self, _u: &Update) -> anyhow::Result<u64> {
+        self.version += 1;
+        Ok(self.version)
+    }
+    fn infer(&mut self) -> anyhow::Result<Mat> {
+        let mut m = Mat::zeros(self.nodes, 4);
+        for i in 0..self.nodes {
+            m[(i, (i + self.version as usize) % 4)] = 1.0;
+        }
+        Ok(m)
+    }
+    fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+}
+
+struct DummyFactory;
+
+impl EngineFactory for DummyFactory {
+    fn name(&self) -> &str {
+        "dummy"
+    }
+    fn validate(&self, spec: &DeploymentSpec) -> anyhow::Result<()> {
+        if spec.quant {
+            anyhow::bail!("engine \"dummy\" has no INT8 path");
+        }
+        Ok(())
+    }
+    fn prepare(&self, ctx: &LaunchContext) -> anyhow::Result<ShardFactory> {
+        let nodes = ctx.dataset.num_nodes();
+        Ok(Box::new(move |_s: &grannite::fleet::ShardSpec| -> EngineInit {
+            Box::new(move || {
+                Ok(Box::new(Dummy { nodes, version: 0 })
+                    as Box<dyn InferenceEngine>)
+            })
+        }))
+    }
+}
+
+#[test]
+fn dummy_engine_registers_and_serves_both_topologies() {
+    let ds = twin();
+    let mut reg = EngineRegistry::builtin();
+    reg.register(Box::new(DummyFactory));
+    assert!(reg.names().contains(&"dummy".to_string()));
+
+    for shards in [1usize, 3] {
+        let serving = Deployment::launch_with(
+            &reg,
+            &spec("dummy", shards),
+            &DataSource::Dataset(ds.clone()),
+        )
+        .unwrap();
+        serving.update(Update::AddNode).unwrap(); // version 1
+        let r = serving.query_wait(Some(5)).unwrap();
+        assert_eq!(r.prediction, (5 + 1) % 4, "{shards} shards");
+        serving.shutdown().unwrap();
+    }
+
+    // its validate hook runs through the same path as the built-ins
+    let mut s = spec("dummy", 1);
+    s.quant = true;
+    let err = format!("{:#}", s.validate_with(&reg).unwrap_err());
+    assert!(err.contains("dummy"), "{err}");
+}

@@ -11,11 +11,14 @@
 use std::sync::Arc;
 
 use grannite::engine::{kernels, run_graph_mat, WorkerPool};
-use grannite::fleet::{engine::synthesize_weights, Fleet, FleetConfig};
+use grannite::fleet::engine::synthesize_weights;
 use grannite::graph::{datasets::synthesize, pad_features, Graph};
 use grannite::incremental::{IncrementalConfig, IncrementalEngine};
 use grannite::ops::build::{self, Aggregation, GnnDims};
 use grannite::ops::exec::{self, Bindings};
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+};
 use grannite::server::{InferenceEngine, Update};
 use grannite::tensor::{CsrMat, Mat, Tensor};
 use grannite::util::propcheck::forall;
@@ -249,9 +252,15 @@ fn sparse_fleet_matches_dense_fleet_and_oracle() {
         Update::RemoveEdge(0, 31),
     ];
     let run = |shards: usize, agg: Aggregation| -> Vec<i32> {
-        let mut cfg = FleetConfig::homogeneous(shards);
-        cfg.aggregation = agg;
-        let fleet = Fleet::spawn_planned(&ds, cap, &cfg).unwrap();
+        let spec = DeploymentSpec {
+            engine: EngineSpec::named("plan"),
+            topology: Topology::homogeneous(shards),
+            capacity: cap,
+            aggregation: agg,
+            ..DeploymentSpec::default()
+        };
+        let fleet =
+            Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
         for u in &churn {
             fleet.update(u.clone()).unwrap();
         }
