@@ -31,6 +31,7 @@ use grannite::graph::{DynamicGraph, Graph};
 use grannite::ops::build::{self, Aggregation, GnnDims, QuantScales};
 use grannite::ops::exec::{self, Bindings};
 use grannite::ops::plan::ExecPlan;
+use grannite::telemetry::{SpanKind, Telemetry, TelemetryConfig};
 use grannite::tensor::{Mat, Tensor};
 use grannite::util::timing::Stats;
 use grannite::util::{human_bytes, json_escape, Rng};
@@ -229,6 +230,47 @@ fn main() -> anyhow::Result<()> {
     );
     record("planned_exec_sparse", sparse_exec.clone());
 
+    // 6b. the same sparse hot path with telemetry ENABLED: profiler
+    //     attached to the plan, plus the per-round recorder calls the
+    //     shard loop makes (engine-round span + per-op span drain). The
+    //     ratio below is the advertised overhead bound, gated in CI.
+    let telemetry = Telemetry::new(TelemetryConfig {
+        enabled: true,
+        ring_capacity: 4096,
+        sample_rate: 1.0,
+    });
+    let recorder = telemetry.recorder(0);
+    let mut traced_inst =
+        PlanInstance::new(Arc::clone(&sparse_plan), Arc::clone(&pool));
+    traced_inst.attach_profiler(telemetry.plan_profiler(0, &sparse_plan));
+    traced_inst.run(&sparse_bindings)?; // warm
+    let mut trace_id = 0u64;
+    let (w, n) = tier(2, 10);
+    let traced_exec = run_bench(
+        &format!("planned SpMM + telemetry on ({nodes}-node GCN e2e)"),
+        w,
+        n,
+        || {
+            trace_id += 1;
+            let t0 = recorder.now_us();
+            traced_inst.run(&sparse_bindings).unwrap();
+            let dur = recorder.now_us() - t0;
+            recorder.record(trace_id, SpanKind::EngineRound, "round", t0, dur, 1);
+            let mut off = t0;
+            for obs in telemetry.drain_last_round(0) {
+                recorder.record(trace_id, SpanKind::Op, obs.kind, off, obs.dur_us, 0);
+                off += obs.dur_us;
+            }
+        },
+    );
+    record("planned_exec_sparse_telemetry", traced_exec.clone());
+    let telemetry_overhead = traced_exec.p50 / sparse_exec.p50;
+    let (spans_total, _) = telemetry.span_counts();
+    println!(
+        "  telemetry overhead: {telemetry_overhead:.3}x on the sparse hot \
+         path ({spans_total} spans recorded)"
+    );
+
     if dense_ok {
         let gcn = build::gcn_stagr(d, "stagr");
         let bindings = gcn_bindings(&ds, d, 42, true);
@@ -347,6 +389,9 @@ fn main() -> anyhow::Result<()> {
                 "  \"sparse_vs_dense_agg_speedup\": {s:.4},\n"
             ));
         }
+        out.push_str(&format!(
+            "  \"telemetry_overhead_ratio\": {telemetry_overhead:.4},\n"
+        ));
         if let Some(q) = int8_speedup {
             out.push_str(&format!(
                 "  \"int8_plan_vs_reference_speedup\": {q:.4},\n"

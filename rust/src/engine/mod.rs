@@ -88,6 +88,11 @@ pub struct PlanInstance {
     w8: Vec<Option<CachedWeights>>,
     /// Reusable chain-operand scratch (capacity persists across runs).
     scratch: Vec<RawView>,
+    /// Optional per-step telemetry profiler
+    /// ([`crate::telemetry::Telemetry::plan_profiler`]). `None` (the
+    /// default) keeps `run` on the proven zero-allocation, zero-clock
+    /// path.
+    profiler: Option<crate::telemetry::PlanProfiler>,
 }
 
 impl PlanInstance {
@@ -103,18 +108,28 @@ impl PlanInstance {
             .map(|&e| vec![0i8; e].into_boxed_slice())
             .collect();
         let w8 = (0..plan.graph.ops.len()).map(|_| None).collect();
-        PlanInstance { plan, pool, slabs, i8_slabs, w8, scratch: Vec::new() }
+        PlanInstance { plan, pool, slabs, i8_slabs, w8, scratch: Vec::new(), profiler: None }
     }
 
     pub fn plan(&self) -> &Arc<ExecPlan> {
         &self.plan
     }
 
+    /// Attach (or detach, with `None`) a telemetry profiler. Enabled,
+    /// each step is wall-timed and folded into the shard's calibration
+    /// sink after the run; detached, `run` takes the original
+    /// branch-only path.
+    pub fn attach_profiler(&mut self, profiler: Option<crate::telemetry::PlanProfiler>) {
+        self.profiler = profiler;
+    }
+
     /// Execute every step against `bindings`. Steady-state (same plan,
     /// same binding storage) this performs no heap allocation.
     pub fn run(&mut self, bindings: &Bindings) -> Result<()> {
         let plan = Arc::clone(&self.plan);
+        let profiling = self.profiler.is_some();
         for si in 0..plan.steps.len() {
+            let t0 = if profiling { Some(std::time::Instant::now()) } else { None };
             self.exec_step(&plan, &plan.steps[si], bindings).with_context(|| {
                 let op = &plan.graph.ops[plan.steps[si].op];
                 format!(
@@ -124,6 +139,12 @@ impl PlanInstance {
                     op.kind.name()
                 )
             })?;
+            if let (Some(t0), Some(p)) = (t0, self.profiler.as_mut()) {
+                p.observe(si, t0.elapsed().as_secs_f64() * 1e6);
+            }
+        }
+        if let Some(p) = self.profiler.as_mut() {
+            p.flush();
         }
         Ok(())
     }
@@ -696,6 +717,9 @@ pub struct TileRunner {
     max_rows: usize,
     max_ring: usize,
     tiles: std::collections::BTreeMap<(usize, usize), Tile>,
+    /// When set, every tile's [`PlanInstance`] gets a profiler feeding
+    /// this hub's per-shard calibration sink.
+    telemetry: Option<(Arc<crate::telemetry::Telemetry>, usize)>,
 }
 
 impl TileRunner {
@@ -715,7 +739,19 @@ impl TileRunner {
             max_rows,
             max_ring,
             tiles: std::collections::BTreeMap::new(),
+            telemetry: None,
         }
+    }
+
+    /// Route per-step profiling of every tile (already-compiled and
+    /// future) into `telemetry`'s sink for `shard`. A disabled hub hands
+    /// out `None` profilers, so this is safe to call unconditionally.
+    pub fn set_telemetry(&mut self, telemetry: Arc<crate::telemetry::Telemetry>, shard: usize) {
+        for tile in self.tiles.values_mut() {
+            let plan = Arc::clone(tile.instance.plan());
+            tile.instance.attach_profiler(telemetry.plan_profiler(shard, &plan));
+        }
+        self.telemetry = Some((telemetry, shard));
     }
 
     /// The padded geometry a `(rows, ring)` subset executes at.
@@ -748,7 +784,10 @@ impl TileRunner {
                     );
                 }
             }
-            let instance = PlanInstance::new(plan, Arc::clone(&self.pool));
+            let mut instance = PlanInstance::new(Arc::clone(&plan), Arc::clone(&self.pool));
+            if let Some((tel, shard)) = &self.telemetry {
+                instance.attach_profiler(tel.plan_profiler(*shard, &plan));
+            }
             self.tiles.insert(
                 key,
                 Tile { instance, bindings, rows: key.0, ring: key.1 },

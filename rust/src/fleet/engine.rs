@@ -323,6 +323,18 @@ impl InferenceEngine for PlanEngine {
     fn round_stats(&mut self) -> Option<RoundStats> {
         self.pending_round.take()
     }
+
+    /// Attach per-step plan profiling: a no-op for a disabled hub
+    /// (`plan_profiler` returns `None`, keeping [`PlanInstance::run`]
+    /// timer-free and allocation-free).
+    fn attach_telemetry(
+        &mut self,
+        telemetry: &Arc<crate::telemetry::Telemetry>,
+        shard: usize,
+    ) {
+        let plan = Arc::clone(self.instance.plan());
+        self.instance.attach_profiler(telemetry.plan_profiler(shard, &plan));
+    }
 }
 
 #[cfg(test)]

@@ -48,6 +48,7 @@ pub use router::Router;
 pub use shard::{ShardConfig, ShardEvent, ShardWorker};
 
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -69,6 +70,9 @@ pub struct FleetConfig {
     /// How plan-backed shards lower the aggregation
     /// (`--aggregation dense|sparse|auto`; auto resolves by density).
     pub aggregation: crate::ops::build::Aggregation,
+    /// Deployment-wide telemetry hub, shared by every shard worker and
+    /// the router (disabled by default — see [`crate::telemetry`]).
+    pub telemetry: Arc<crate::telemetry::Telemetry>,
 }
 
 impl FleetConfig {
@@ -80,6 +84,7 @@ impl FleetConfig {
             admission: AdmissionConfig::unbounded(),
             dtype_bytes: 2,
             aggregation: crate::ops::build::Aggregation::Auto,
+            telemetry: crate::telemetry::Telemetry::disabled(),
         }
     }
 
@@ -124,6 +129,7 @@ impl FleetConfig {
 pub struct Fleet {
     pub plan: FleetPlan,
     router: Router,
+    telemetry: Arc<crate::telemetry::Telemetry>,
 }
 
 impl Fleet {
@@ -159,11 +165,15 @@ impl Fleet {
                     batch: cfg.batch.clone(),
                     admission: cfg.admission,
                     halo: Some(halo),
+                    telemetry: Arc::clone(&cfg.telemetry),
                 },
             ));
         }
-        let router = Router::new(plan.owner.clone(), workers);
-        Fleet { plan, router }
+        let mut router = Router::new(plan.owner.clone(), workers);
+        router.set_recorder(
+            cfg.telemetry.recorder(crate::telemetry::ROUTER_SHARD),
+        );
+        Fleet { plan, router, telemetry: Arc::clone(&cfg.telemetry) }
     }
 
     /// Deprecated shim: a fleet of [`LocalEngine`]s. Construct through
@@ -287,6 +297,10 @@ impl crate::serve::Serving for Fleet {
 
     fn record_shed(&self, node: Option<usize>) {
         self.router.record_shed(node);
+    }
+
+    fn telemetry(&self) -> Option<Arc<crate::telemetry::Telemetry>> {
+        Some(Arc::clone(&self.telemetry))
     }
 
     fn shutdown(self: Box<Self>) -> Result<()> {

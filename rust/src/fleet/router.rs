@@ -20,6 +20,7 @@ use anyhow::{anyhow, Result};
 
 use crate::metrics::{Metrics, Snapshot};
 use crate::server::{QueryResponse, Update};
+use crate::telemetry::{Recorder, SpanKind};
 
 use super::shard::ShardWorker;
 
@@ -31,13 +32,28 @@ pub struct Router {
     /// Updates sequenced to each shard (the router's half of the vector).
     expected: Vec<AtomicU64>,
     next_id: AtomicU64,
+    /// Route-decision spans land here under the query's trace id (shard =
+    /// [`crate::telemetry::ROUTER_SHARD`]); disabled by default.
+    recorder: Recorder,
 }
 
 impl Router {
     pub fn new(owner: Vec<usize>, shards: Vec<ShardWorker>) -> Router {
         assert!(!shards.is_empty(), "router needs at least one shard");
         let expected = shards.iter().map(|_| AtomicU64::new(0)).collect();
-        Router { owner, shards, expected, next_id: AtomicU64::new(1) }
+        Router {
+            owner,
+            shards,
+            expected,
+            next_id: AtomicU64::new(1),
+            recorder: Recorder::disabled(),
+        }
+    }
+
+    /// Attach a telemetry recorder (the fleet passes its hub's
+    /// [`crate::telemetry::ROUTER_SHARD`] recorder here at spawn).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     pub fn num_shards(&self) -> usize {
@@ -84,6 +100,14 @@ impl Router {
                  -> Result<Receiver<Result<QueryResponse, String>>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let shard = self.owner_of(node.unwrap_or(0));
+        self.recorder.record(
+            id,
+            SpanKind::Route,
+            "route",
+            self.recorder.now_us(),
+            0.0,
+            shard as u64,
+        );
         self.shards[shard].query_with_id(id, node)
     }
 
@@ -188,6 +212,7 @@ mod tests {
             batch: ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
             admission: AdmissionConfig::unbounded(),
             halo: None,
+            telemetry: crate::telemetry::Telemetry::disabled(),
         }
     }
 

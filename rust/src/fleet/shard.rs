@@ -11,6 +11,9 @@
 //! - coalesces queries through a [`Batcher`], shedding load at arrival
 //!   when the [`Admission`] bound is hit,
 //! - charges its [`HaloSpec`] link traffic before every inference round,
+//! - records admission/queue/batch/engine-round/halo/per-op spans into
+//!   its own telemetry ring when tracing is enabled (branch-only no-ops
+//!   otherwise — see [`crate::telemetry`]),
 //! - and on panic rejects every in-flight query explicitly (counted in
 //!   `Metrics::rejected`) before surfacing the panic message as an `Err`
 //!   from [`ShardWorker::shutdown`] — a crash must never strand callers
@@ -52,12 +55,21 @@ pub struct ShardConfig {
     pub admission: AdmissionConfig,
     /// Boundary traffic charged per inference round (None = no halo).
     pub halo: Option<HaloSpec>,
+    /// Deployment-wide telemetry hub; a disabled hub hands this worker a
+    /// no-op recorder and no profiler, keeping the loop branch-only.
+    pub telemetry: Arc<crate::telemetry::Telemetry>,
 }
 
 impl ShardConfig {
-    /// The single-leader server's historical behavior: no halo, no shed.
+    /// The single-leader server's historical behavior: no halo, no shed,
+    /// no telemetry.
     pub fn leader(batch: ServerConfig) -> ShardConfig {
-        ShardConfig { batch, admission: AdmissionConfig::unbounded(), halo: None }
+        ShardConfig {
+            batch,
+            admission: AdmissionConfig::unbounded(),
+            halo: None,
+            telemetry: crate::telemetry::Telemetry::disabled(),
+        }
     }
 }
 
@@ -187,6 +199,7 @@ where
             return Err(anyhow!(msg));
         }
     };
+    engine.attach_telemetry(&config.telemetry, id);
     let batcher = Batcher::new(config.batch.max_batch, config.batch.max_wait);
     let mut admission = Admission::new(config.admission);
     let mut waiting = Waiting::new();
@@ -243,6 +256,8 @@ fn shard_loop<E: InferenceEngine>(
     waiting: &mut Waiting, admission: &mut Admission, metrics: &Metrics,
     applied: &Arc<AtomicU64>, config: &ShardConfig,
 ) -> Result<()> {
+    use crate::telemetry::SpanKind;
+    let recorder = config.telemetry.recorder(id);
     let mut open = true;
     while open || batcher.pending() > 0 {
         // ingest events for up to the batching window
@@ -272,6 +287,14 @@ fn shard_loop<E: InferenceEngine>(
                 }
                 if !admission.admit(batcher.pending()) {
                     metrics.record_rejected();
+                    recorder.record(
+                        req.id,
+                        SpanKind::Admission,
+                        "shed",
+                        recorder.now_us(),
+                        0.0,
+                        batcher.pending() as u64,
+                    );
                     let _ = resp.send(Err(format!(
                         "shard {id} overloaded: {} queries pending (cap {})",
                         batcher.pending(),
@@ -279,6 +302,14 @@ fn shard_loop<E: InferenceEngine>(
                     )));
                     continue;
                 }
+                recorder.record(
+                    req.id,
+                    SpanKind::Admission,
+                    "admit",
+                    recorder.now_us(),
+                    0.0,
+                    batcher.pending() as u64,
+                );
                 waiting.insert(req.id, resp);
                 batcher.submit(req);
             }
@@ -294,6 +325,11 @@ fn shard_loop<E: InferenceEngine>(
 
         // flush a batch if ready
         if let Some(batch) = batcher.try_batch() {
+            let flush_us = recorder.now_us();
+            // batch-level spans (halo, batch assembly, per-op breakdown)
+            // hang off the first request's trace: the whole round is that
+            // query's critical path, batch-mates share it for free.
+            let trace0 = batch.requests.first().map(|r| r.id).unwrap_or(0);
             // halo exchange precedes the round: boundary features must be
             // resident before aggregation can touch cut edges. Prefer the
             // engine's live import count (tracks GrAd churn); fall back
@@ -308,9 +344,18 @@ fn shard_loop<E: InferenceEngine>(
                 };
                 if bytes > 0 {
                     metrics.record_halo(bytes, us);
+                    recorder.record(
+                        trace0,
+                        SpanKind::Halo,
+                        "halo",
+                        recorder.now_us(),
+                        us,
+                        bytes as u64,
+                    );
                 }
             }
             let t0 = Instant::now();
+            let t0_us = recorder.now_us();
             let result = engine.infer();
             let latency_us = t0.elapsed().as_secs_f64() * 1e6;
             let size = batch.requests.len();
@@ -319,12 +364,48 @@ fn shard_loop<E: InferenceEngine>(
                     if let Some(rs) = engine.round_stats() {
                         metrics.record_round(&rs);
                     }
+                    if recorder.enabled() {
+                        recorder.record(
+                            trace0,
+                            SpanKind::Batch,
+                            "flush",
+                            flush_us,
+                            (t0_us - flush_us).max(0.0),
+                            size as u64,
+                        );
+                        // the profiler stashed per-step wall times during
+                        // infer(); replay them as Op spans at cumulative
+                        // offsets inside the engine round.
+                        let mut off = t0_us;
+                        for obs in config.telemetry.drain_last_round(id) {
+                            recorder
+                                .record(trace0, SpanKind::Op, obs.kind, off, obs.dur_us, 0);
+                            off += obs.dur_us;
+                        }
+                    }
                     let preds = logits.argmax_rows();
                     for req in batch.requests {
                         let node = req.node.unwrap_or(0);
                         let queue_us =
                             req.enqueued.elapsed().as_secs_f64() * 1e6 - latency_us;
-                        metrics.record_query(latency_us, queue_us.max(0.0), size);
+                        let queue_us = queue_us.max(0.0);
+                        metrics.record_query(latency_us, queue_us, size);
+                        recorder.record(
+                            req.id,
+                            SpanKind::Queue,
+                            "queue",
+                            t0_us - queue_us,
+                            queue_us,
+                            0,
+                        );
+                        recorder.record(
+                            req.id,
+                            SpanKind::EngineRound,
+                            "round",
+                            t0_us,
+                            latency_us,
+                            size as u64,
+                        );
                         if let Some(resp) = waiting.remove(&req.id) {
                             let _ = resp.send(Ok(QueryResponse {
                                 id: req.id,
@@ -429,6 +510,7 @@ mod tests {
                 },
                 admission: AdmissionConfig::bounded(2),
                 halo: None,
+                telemetry: crate::telemetry::Telemetry::disabled(),
             },
         );
         let rxs: Vec<_> = (0..12)
@@ -463,6 +545,7 @@ mod tests {
                 },
                 admission: AdmissionConfig::unbounded(),
                 halo: Some(halo),
+                telemetry: crate::telemetry::Telemetry::disabled(),
             },
         );
         let _ = w.query_with_id(1, Some(0)).unwrap().recv().unwrap().unwrap();

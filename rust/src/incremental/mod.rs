@@ -783,6 +783,19 @@ impl InferenceEngine for IncrementalEngine {
     fn round_stats(&mut self) -> Option<RoundStats> {
         self.last_stats.take()
     }
+
+    /// Attach per-step plan profiling to every layer's tile runner —
+    /// tiles compiled later (new frontier buckets) pick it up lazily.
+    /// No-op for a disabled hub.
+    fn attach_telemetry(
+        &mut self,
+        telemetry: &std::sync::Arc<crate::telemetry::Telemetry>,
+        shard: usize,
+    ) {
+        for tiles in &mut self.tiles {
+            tiles.set_telemetry(std::sync::Arc::clone(telemetry), shard);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -36,7 +36,8 @@
 //! | [`serve`] | **the serving front door**: [`serve::DeploymentSpec`] + [`serve::Deployment`] + the object-safe [`serve::Serving`] trait + the engine registry |
 //! | [`server`] | the single-leader worker loop (the 1-shard [`serve::Serving`] topology) |
 //! | [`fleet`] | sharded multi-device serving: placement, halo exchange, routing, admission (the N-shard topology) |
-//! | [`metrics`] | latency/energy/throughput/halo accounting (per-shard sinks) |
+//! | [`metrics`] | latency/energy/throughput/halo accounting (per-shard sinks, bounded reservoirs) |
+//! | [`telemetry`] | query tracing (per-worker span rings), per-op plan profiling, cost-model calibration, Prometheus/JSON exporters — off by default, zero hot-path cost when disabled |
 //! | [`bench`] | the in-tree benchmark harness + paper-figure drivers |
 //!
 //! ## Serving (the `serve` front door)
@@ -120,6 +121,7 @@ pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod server;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

@@ -8,6 +8,7 @@
 //! grannite split     [--model gcn --variant baseline]  # GraphSplit report
 //! grannite serve     [--spec file.toml …]      # dynamic KG serving demo
 //! grannite fleet     [--spec file.toml …]      # sharded serving demo
+//! grannite trace     [--spec file.toml …]      # telemetry: traces + calibration
 //! grannite artifacts                           # list loaded artifacts
 //! ```
 //!
@@ -142,6 +143,22 @@ fn main() -> Result<()> {
             serving_demo(&spec, &grannite::serve::DataSource::Dataset(ds), events,
                          query_ratio)?;
         }
+        Some("trace") => {
+            // end-to-end telemetry demo: force-enable tracing on the
+            // spec, drive a churn+query workload, then print the slowest
+            // stitched traces, the cost-model calibration table, and
+            // validated exporter output
+            let mut spec = deployment_spec(&args, 4, "incremental")?;
+            spec.telemetry.enabled = true;
+            let nodes = args.usize_opt("nodes", 256)?;
+            let edges = args.usize_opt("edges", 1024)?;
+            let events = args.usize_opt("events", 800)?;
+            let query_ratio = args.f64_opt("query-ratio", 0.4)?;
+            let top = args.usize_opt("top", 3)?;
+            let raw = args.has("raw");
+            let ds = datasets::synthesize("trace", nodes, edges, 6, 64, 42);
+            trace_demo(&spec, &ds, events, query_ratio, top, raw)?;
+        }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
     }
@@ -164,6 +181,12 @@ subcommands:
                      engine runs offline)
   fleet              sharded multi-device serving demo (offline, no
                      artifacts; --nodes --edges size the synthetic graph)
+  trace              end-to-end telemetry demo: tracing force-enabled,
+                     prints the slowest stitched traces (admission/queue/
+                     batch/engine/halo/per-op spans), the cost-model
+                     calibration table, and validated Prometheus +
+                     JSON-lines exporter output (--top N, --raw dumps
+                     the exporter text)
 
 both serving subcommands construct through serve::Deployment::launch from
 one deployment spec:
@@ -405,6 +428,153 @@ fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
         );
     }
     println!("applied version vector: {:?}", serving.sync()?);
+    serving.shutdown()?;
+    Ok(())
+}
+
+/// The `trace` subcommand body: launch with telemetry enabled, drive a
+/// churn+query workload, then print the slowest stitched traces
+/// (flamegraph-style span breakdowns), the predicted-vs-observed
+/// calibration table, and exporter output — which is **validated**
+/// (Prometheus text format + JSON lines), so this doubles as the CI
+/// exporter-parses check.
+fn trace_demo(spec: &grannite::serve::DeploymentSpec,
+              ds: &grannite::graph::datasets::Dataset, events: usize,
+              query_ratio: f64, top: usize, raw: bool) -> Result<()> {
+    use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+    use grannite::serve::{DataSource, Deployment, Serving};
+    use grannite::server::Update;
+    use grannite::telemetry::{export, SpanKind, ROUTER_SHARD};
+    use grannite::util::human_us;
+
+    let serving = Deployment::launch(spec, &DataSource::Dataset(ds.clone()))?;
+    let tel = serving.telemetry().ok_or_else(|| {
+        anyhow::anyhow!("this deployment carries no telemetry hub")
+    })?;
+    println!(
+        "telemetry: enabled (ring capacity {}, sample rate {})",
+        tel.config().ring_capacity,
+        tel.config().sample_rate
+    );
+
+    let nodes = ds.num_nodes();
+    let stream = KnowledgeGraphStream::new(nodes, nodes + nodes / 8, query_ratio, 7);
+    let mut rng = grannite::util::Rng::new(3);
+    let mut pending = Vec::new();
+    for ev in stream.take(events) {
+        match ev {
+            GraphEvent::AddEdge(u, v) => serving.update(Update::AddEdge(u, v))?,
+            GraphEvent::RemoveEdge(u, v) => {
+                serving.update(Update::RemoveEdge(u, v))?
+            }
+            GraphEvent::AddNode => serving.update(Update::AddNode)?,
+            GraphEvent::Query => {
+                pending.push(serving.query(Some(rng.usize(nodes)))?)
+            }
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    println!("answered {ok} queries over {events} events");
+
+    // slowest stitched traces, flamegraph-style
+    let traces = tel.traces();
+    let (total, kept) = tel.span_counts();
+    println!(
+        "\n{} traces stitched from {kept} retained spans ({total} recorded); \
+         slowest {}:",
+        traces.len(),
+        top.min(traces.len())
+    );
+    for tr in traces.iter().take(top) {
+        let origin =
+            tr.spans.first().map(|s| s.start_us).unwrap_or(0.0);
+        println!(
+            "trace {:>6}  {}  — {} spans over {} shard(s)",
+            tr.trace_id,
+            human_us(tr.latency_us()),
+            tr.spans.len(),
+            tr.shard_count()
+        );
+        for s in &tr.spans {
+            let who = if s.shard == ROUTER_SHARD {
+                "router".to_string()
+            } else {
+                format!("shard {}", s.shard)
+            };
+            let detail = match s.kind {
+                SpanKind::Route => format!("→ shard {}", s.value),
+                SpanKind::Admission => format!("{} (pending {})", s.label, s.value),
+                SpanKind::Batch => format!("size {}", s.value),
+                SpanKind::Halo => {
+                    format!("{}", grannite::util::human_bytes(s.value as usize))
+                }
+                SpanKind::Op => s.label.to_string(),
+                SpanKind::Queue | SpanKind::EngineRound => String::new(),
+            };
+            let indent = if s.kind == SpanKind::Op { "  " } else { "" };
+            println!(
+                "    {who:<9} {indent}{:<12} +{:<9} {:<9} {detail}",
+                s.kind.name(),
+                human_us(s.start_us - origin),
+                human_us(s.dur_us),
+            );
+        }
+    }
+
+    // predicted-vs-observed calibration, per executed (op kind, bucket)
+    let cal = tel.calibration();
+    let mut ct = Table::new(
+        "cost-model calibration — observed/predicted per op kind × row bucket",
+        &["kind", "bucket", "runs", "pred µs/run", "obs µs/run", "ratio p50",
+          "ratio p99"],
+    );
+    for r in &cal.rows {
+        ct.row(&[
+            r.kind.clone(),
+            r.bucket.to_string(),
+            r.runs.to_string(),
+            format!("{:.2}", r.predicted_us),
+            format!("{:.2}", r.observed_us),
+            format!("{:.3}", r.ratio_p50),
+            format!("{:.3}", r.ratio_p99),
+        ]);
+    }
+    ct.print();
+    let scales = cal.scales();
+    if !scales.is_empty() {
+        let fitted: Vec<String> = scales
+            .iter()
+            .map(|(k, f)| format!("{k}={f:.3}"))
+            .collect();
+        println!(
+            "fitted cost scales (apply via npu::cost::op_cost_scaled): {}",
+            fitted.join("  ")
+        );
+    }
+
+    // exporters — validated, so a malformed emission fails the command
+    let shards = serving.shard_metrics();
+    let prom = export::prometheus(&shards, &cal);
+    let prom_samples = export::validate_prometheus(&prom)
+        .context("prometheus exporter output failed validation")?;
+    let jl = export::json_lines(&traces, &shards, &cal);
+    let jl_records = export::validate_json_lines(&jl)
+        .context("json-lines exporter output failed validation")?;
+    println!(
+        "\nexporters validated: {prom_samples} prometheus samples, \
+         {jl_records} json-lines records"
+    );
+    if raw {
+        println!("\n--- prometheus ---\n{prom}");
+        println!("--- json lines ---\n{jl}");
+    }
+
+    serving.sync()?;
     serving.shutdown()?;
     Ok(())
 }

@@ -6,11 +6,25 @@
 //! global lock; fleet-level reporting merges per-shard sinks at snapshot
 //! time ([`Metrics::merged`]) so aggregate p50/p99 come from the raw
 //! samples, not from lossy per-shard summaries.
+//!
+//! Sample storage is **bounded**: each distribution (latency, queue
+//! time, batch size, frontier size) lives in a deterministic
+//! [`Reservoir`] of [`SAMPLE_CAP`] slots, so a long-lived deployment's
+//! sinks stop growing while `n`/`mean`/`min`/`max` stay exact and
+//! percentiles degrade to a uniform subsample. Snapshots obey the
+//! invariant `throughput_qps == queries / elapsed_s` on every path
+//! (per-sink, [`Metrics::merged`], [`Snapshot::merge`]).
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::reservoir::{self, Reservoir};
 use crate::util::timing::Stats;
+
+/// Per-distribution reservoir capacity. Small enough that a sink is a
+/// few tens of KiB forever, large enough that p99 over a subsample is
+/// tight.
+pub const SAMPLE_CAP: usize = 4096;
 
 /// Thread-safe metrics sink for one serving worker (shard or leader).
 #[derive(Debug, Default)]
@@ -46,15 +60,34 @@ pub struct RoundStats {
     pub dma_bytes_shipped: usize,
 }
 
-#[derive(Debug, Default)]
+impl RoundStats {
+    /// Stable one-line JSON encoding (keys in declaration order) for the
+    /// telemetry exporters.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"recomputed_rows\":{},\"eligible_rows\":{},\"frontier\":{},\
+             \"cache_hits\":{},\"cache_misses\":{},\"dma_bytes_dense\":{},\
+             \"dma_bytes_shipped\":{}}}",
+            self.recomputed_rows,
+            self.eligible_rows,
+            self.frontier,
+            self.cache_hits,
+            self.cache_misses,
+            self.dma_bytes_dense,
+            self.dma_bytes_shipped,
+        )
+    }
+}
+
+#[derive(Debug)]
 struct Inner {
     /// Shard label. Every worker-owned sink carries one — the
     /// single-leader server is shard 0 of a one-shard fleet. None only
     /// for unlabeled standalone sinks and merged snapshots.
     shard: Option<usize>,
-    latencies_us: Vec<f64>,
-    queue_us: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    latencies_us: Reservoir,
+    queue_us: Reservoir,
+    batch_sizes: Reservoir,
     mask_updates: usize,
     queries: usize,
     rejected: usize,
@@ -67,11 +100,39 @@ struct Inner {
     eligible_rows: usize,
     cache_row_hits: usize,
     cache_row_misses: usize,
-    frontier_sizes: Vec<f64>,
+    frontier_sizes: Reservoir,
     /// Mask-traffic accounting (sparse/compressed aggregation operands).
     dma_bytes_dense: usize,
     dma_bytes_shipped: usize,
     started: Option<Instant>,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        // fixed per-distribution seeds: two sinks fed the same sample
+        // stream produce identical reservoirs (and so identical
+        // percentile estimates) — tested below
+        Inner {
+            shard: None,
+            latencies_us: Reservoir::new(SAMPLE_CAP, 0xA11C_E001),
+            queue_us: Reservoir::new(SAMPLE_CAP, 0xA11C_E002),
+            batch_sizes: Reservoir::new(SAMPLE_CAP, 0xA11C_E003),
+            mask_updates: 0,
+            queries: 0,
+            rejected: 0,
+            halo_bytes: 0,
+            halo_us: 0.0,
+            halo_rounds: 0,
+            recomputed_rows: 0,
+            eligible_rows: 0,
+            cache_row_hits: 0,
+            cache_row_misses: 0,
+            frontier_sizes: Reservoir::new(SAMPLE_CAP, 0xA11C_E004),
+            dma_bytes_dense: 0,
+            dma_bytes_shipped: 0,
+            started: None,
+        }
+    }
 }
 
 /// A snapshot of aggregated serving metrics.
@@ -129,9 +190,9 @@ impl Metrics {
 
     pub fn record_query(&self, latency_us: f64, queue_us: f64, batch: usize) {
         let mut i = self.inner.lock().unwrap();
-        i.latencies_us.push(latency_us);
-        i.queue_us.push(queue_us);
-        i.batch_sizes.push(batch);
+        i.latencies_us.record(latency_us);
+        i.queue_us.record(queue_us);
+        i.batch_sizes.record(batch as f64);
         i.queries += 1;
     }
 
@@ -165,7 +226,7 @@ impl Metrics {
         i.dma_bytes_dense += rs.dma_bytes_dense;
         i.dma_bytes_shipped += rs.dma_bytes_shipped;
         if rs.eligible_rows > 0 {
-            i.frontier_sizes.push(rs.frontier as f64);
+            i.frontier_sizes.record(rs.frontier as f64);
         }
     }
 
@@ -194,45 +255,34 @@ impl Metrics {
             cache_row_misses: i.cache_row_misses,
             dma_bytes_dense: i.dma_bytes_dense,
             dma_bytes_shipped: i.dma_bytes_shipped,
-            frontier: if i.frontier_sizes.is_empty() {
-                None
-            } else {
-                Some(Stats::from_samples(&i.frontier_sizes))
-            },
-            latency: if i.latencies_us.is_empty() {
-                None
-            } else {
-                Some(Stats::from_samples(&i.latencies_us))
-            },
-            queue: if i.queue_us.is_empty() {
-                None
-            } else {
-                Some(Stats::from_samples(&i.queue_us))
-            },
+            frontier: i.frontier_sizes.stats(),
+            latency: i.latencies_us.stats(),
+            queue: i.queue_us.stats(),
             mean_batch: if i.batch_sizes.is_empty() {
                 0.0
             } else {
-                i.batch_sizes.iter().sum::<usize>() as f64
-                    / i.batch_sizes.len() as f64
+                // exact: reservoir sum/count never degrade
+                i.batch_sizes.sum() / i.batch_sizes.seen() as f64
             },
             throughput_qps: i.queries as f64 / elapsed,
             elapsed_s: elapsed,
         }
     }
 
-    /// Exact fleet-level aggregate: concatenates the raw samples of every
-    /// sink (so p50/p99 are true percentiles over all shards), sums the
-    /// counters, and computes throughput over the longest-lived sink.
-    /// This is why shards keep private sinks: no serving-path lock is
-    /// shared, and nothing is lost at merge time.
+    /// Exact fleet-level aggregate: pools the retained samples of every
+    /// sink (so p50/p99 are true percentiles over the union of the
+    /// subsamples), sums the counters exactly, and computes throughput
+    /// over the longest-lived sink — the same `queries / elapsed_s` rule
+    /// every snapshot path uses. This is why shards keep private sinks:
+    /// no serving-path lock is shared, and nothing is lost at merge time.
     pub fn merged<'a, I>(sinks: I) -> Snapshot
     where
         I: IntoIterator<Item = &'a Metrics>,
     {
-        let mut lat: Vec<f64> = Vec::new();
-        let mut que: Vec<f64> = Vec::new();
-        let mut batches: Vec<usize> = Vec::new();
-        let mut frontiers: Vec<f64> = Vec::new();
+        let mut lat: Vec<Reservoir> = Vec::new();
+        let mut que: Vec<Reservoir> = Vec::new();
+        let mut batches: Vec<Reservoir> = Vec::new();
+        let mut frontiers: Vec<Reservoir> = Vec::new();
         let (mut queries, mut rejected, mut mask_updates) = (0usize, 0usize, 0usize);
         let (mut halo_bytes, mut halo_us, mut halo_rounds) = (0usize, 0.0f64, 0usize);
         let (mut recomputed, mut eligible) = (0usize, 0usize);
@@ -241,10 +291,10 @@ impl Metrics {
         let mut elapsed = 1e-9f64;
         for m in sinks {
             let i = m.inner.lock().unwrap();
-            lat.extend_from_slice(&i.latencies_us);
-            que.extend_from_slice(&i.queue_us);
-            batches.extend_from_slice(&i.batch_sizes);
-            frontiers.extend_from_slice(&i.frontier_sizes);
+            lat.push(i.latencies_us.clone());
+            que.push(i.queue_us.clone());
+            batches.push(i.batch_sizes.clone());
+            frontiers.push(i.frontier_sizes.clone());
             queries += i.queries;
             rejected += i.rejected;
             mask_updates += i.mask_updates;
@@ -275,17 +325,16 @@ impl Metrics {
             cache_row_misses: row_misses,
             dma_bytes_dense: dma_dense,
             dma_bytes_shipped: dma_shipped,
-            frontier: if frontiers.is_empty() {
-                None
-            } else {
-                Some(Stats::from_samples(&frontiers))
-            },
-            latency: if lat.is_empty() { None } else { Some(Stats::from_samples(&lat)) },
-            queue: if que.is_empty() { None } else { Some(Stats::from_samples(&que)) },
-            mean_batch: if batches.is_empty() {
-                0.0
-            } else {
-                batches.iter().sum::<usize>() as f64 / batches.len() as f64
+            frontier: reservoir::merged_stats(&frontiers.iter().collect::<Vec<_>>()),
+            latency: reservoir::merged_stats(&lat.iter().collect::<Vec<_>>()),
+            queue: reservoir::merged_stats(&que.iter().collect::<Vec<_>>()),
+            mean_batch: {
+                let seen: usize = batches.iter().map(Reservoir::seen).sum();
+                if seen == 0 {
+                    0.0
+                } else {
+                    batches.iter().map(Reservoir::sum).sum::<f64>() / seen as f64
+                }
             },
             throughput_qps: queries as f64 / elapsed,
             elapsed_s: elapsed,
@@ -325,11 +374,56 @@ impl Snapshot {
         self.dma_bytes_dense.saturating_sub(self.dma_bytes_shipped)
     }
 
+    /// Stable one-line JSON encoding (keys in declaration order; nested
+    /// stats objects or `null`) for the telemetry exporters. All values
+    /// are plain JSON numbers — non-finite floats encode as `null`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(512);
+        out.push('{');
+        match self.shard {
+            Some(s) => out.push_str(&format!("\"shard\":{s}")),
+            None => out.push_str("\"shard\":null"),
+        }
+        out.push_str(&format!(
+            ",\"queries\":{},\"rejected\":{},\"mask_updates\":{}",
+            self.queries, self.rejected, self.mask_updates
+        ));
+        out.push_str(&format!(
+            ",\"halo_bytes\":{},\"halo_us\":{},\"halo_rounds\":{}",
+            self.halo_bytes,
+            json_num(self.halo_us),
+            self.halo_rounds
+        ));
+        out.push_str(&format!(
+            ",\"recomputed_rows\":{},\"eligible_rows\":{},\
+             \"cache_row_hits\":{},\"cache_row_misses\":{}",
+            self.recomputed_rows, self.eligible_rows, self.cache_row_hits,
+            self.cache_row_misses
+        ));
+        out.push_str(&format!(
+            ",\"dma_bytes_dense\":{},\"dma_bytes_shipped\":{}",
+            self.dma_bytes_dense, self.dma_bytes_shipped
+        ));
+        out.push_str(&format!(",\"frontier\":{}", stats_json(&self.frontier)));
+        out.push_str(&format!(",\"latency\":{}", stats_json(&self.latency)));
+        out.push_str(&format!(",\"queue\":{}", stats_json(&self.queue)));
+        out.push_str(&format!(
+            ",\"mean_batch\":{},\"throughput_qps\":{},\"elapsed_s\":{}}}",
+            json_num(self.mean_batch),
+            json_num(self.throughput_qps),
+            json_num(self.elapsed_s)
+        ));
+        out
+    }
+
     /// Aggregate-level merge for snapshots whose raw samples are gone
     /// (e.g. collected from remote shards). Counters are exact; latency
     /// percentiles are conservative (max of the inputs) and means are
-    /// sample-weighted. Prefer [`Metrics::merged`] when the sinks are in
-    /// process.
+    /// sample-weighted. The elapsed/throughput rule matches every other
+    /// snapshot path: `elapsed_s` is the longest-lived input (the sinks
+    /// ran concurrently, not sequentially) and `throughput_qps` is
+    /// recomputed as `queries / elapsed_s` — never averaged. Prefer
+    /// [`Metrics::merged`] when the sinks are in process.
     pub fn merge(&self, other: &Snapshot) -> Snapshot {
         let total_batches =
             |s: &Snapshot| if s.mean_batch > 0.0 { s.queries } else { 0 };
@@ -361,6 +455,35 @@ impl Snapshot {
                 / self.elapsed_s.max(other.elapsed_s).max(1e-9),
             elapsed_s: self.elapsed_s.max(other.elapsed_s),
         }
+    }
+}
+
+/// A finite f64 as a JSON number (non-finite → `null`, which the subset
+/// grammar and every JSON parser accept).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A [`Stats`] summary as a stable JSON object (`null` when absent).
+fn stats_json(s: &Option<Stats>) -> String {
+    match s {
+        None => "null".to_string(),
+        Some(s) => format!(
+            "{{\"n\":{},\"mean\":{},\"std\":{},\"min\":{},\"p50\":{},\
+             \"p95\":{},\"p99\":{},\"max\":{}}}",
+            s.n,
+            json_num(s.mean),
+            json_num(s.std),
+            json_num(s.min),
+            json_num(s.p50),
+            json_num(s.p95),
+            json_num(s.p99),
+            json_num(s.max),
+        ),
     }
 }
 
@@ -592,5 +715,132 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(m.snapshot().queries, 800);
+    }
+
+    #[test]
+    fn long_lived_sink_is_bounded_with_exact_aggregates() {
+        // 3× capacity: the old Vec-backed sink would hold 12288 samples
+        // per distribution; the reservoir holds SAMPLE_CAP forever
+        let m = Metrics::new_shard(0);
+        let total = SAMPLE_CAP * 3;
+        // 1024 divides total, so the stream mean is exactly 511.5
+        for i in 0..total {
+            m.record_query((i % 1024) as f64, 1.0, 2);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.queries, total);
+        let lat = s.latency.unwrap();
+        assert_eq!(lat.n, total, "exact count survives the reservoir");
+        assert_eq!(lat.min, 0.0);
+        assert_eq!(lat.max, 1023.0);
+        assert!((lat.mean - 511.5).abs() < 1e-6, "exact mean: {}", lat.mean);
+        assert!(lat.p50 > 256.0 && lat.p50 < 768.0, "subsampled p50 {}", lat.p50);
+        assert_eq!(s.mean_batch, 2.0, "batch mean exact past capacity");
+    }
+
+    #[test]
+    fn merged_percentiles_consistent_past_capacity() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        for i in 0..(SAMPLE_CAP + 100) {
+            a.record_query((i % 100) as f64, 0.5, 1);
+        }
+        for _ in 0..10 {
+            b.record_query(10_000.0, 0.5, 3);
+        }
+        let s = Metrics::merged([&a, &b]);
+        let lat = s.latency.unwrap();
+        assert_eq!(lat.n, SAMPLE_CAP + 110, "exact pooled count");
+        assert_eq!(lat.max, 10_000.0, "exact pooled max");
+        assert_eq!(lat.min, 0.0);
+        // shard 1's 10 outliers cannot move the pooled median
+        assert!(lat.p50 < 100.0, "p50 {}", lat.p50);
+        // snapshot invariant holds on the merged path too
+        assert!(
+            (s.throughput_qps - s.queries as f64 / s.elapsed_s).abs()
+                / s.throughput_qps.max(1e-9)
+                < 1e-9,
+            "throughput_qps must equal queries / elapsed_s"
+        );
+    }
+
+    #[test]
+    fn identical_streams_produce_identical_percentiles() {
+        let feed = || {
+            let m = Metrics::new();
+            for i in 0..(SAMPLE_CAP * 2) {
+                m.record_query((i * 13 % 997) as f64, 1.0, 1);
+            }
+            m.snapshot().latency.unwrap()
+        };
+        let (a, b) = (feed(), feed());
+        assert_eq!(a.p50, b.p50, "fixed seeds make subsampling deterministic");
+        assert_eq!(a.p99, b.p99);
+    }
+
+    #[test]
+    fn snapshot_merge_keeps_throughput_invariant() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        for _ in 0..30 {
+            a.record_query(10.0, 0.0, 1);
+        }
+        for _ in 0..70 {
+            b.record_query(10.0, 0.0, 1);
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let m = sa.merge(&sb);
+        assert_eq!(m.queries, 100);
+        assert_eq!(m.elapsed_s, sa.elapsed_s.max(sb.elapsed_s));
+        assert!(
+            (m.throughput_qps - m.queries as f64 / m.elapsed_s).abs()
+                / m.throughput_qps.max(1e-9)
+                < 1e-6,
+            "merge() recomputes throughput from the merged elapsed"
+        );
+    }
+
+    #[test]
+    fn json_encodings_are_stable_and_balanced() {
+        let m = Metrics::new_shard(2);
+        m.record_query(100.0, 5.0, 2);
+        m.record_round(&RoundStats {
+            recomputed_rows: 1,
+            eligible_rows: 4,
+            frontier: 1,
+            ..Default::default()
+        });
+        let j = m.snapshot().to_json();
+        assert!(j.starts_with("{\"shard\":2,"), "{j}");
+        assert!(j.contains("\"queries\":1"));
+        assert!(j.contains("\"latency\":{\"n\":1,"));
+        assert!(j.contains("\"queue\":{"));
+        assert!(j.ends_with('}'));
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "balanced: {j}"
+        );
+        // empty sink: optional stats encode as null
+        let empty = Metrics::new().snapshot().to_json();
+        assert!(empty.contains("\"shard\":null"));
+        assert!(empty.contains("\"latency\":null"));
+
+        let r = RoundStats {
+            recomputed_rows: 3,
+            eligible_rows: 9,
+            frontier: 2,
+            cache_hits: 5,
+            cache_misses: 4,
+            dma_bytes_dense: 100,
+            dma_bytes_shipped: 10,
+        }
+        .to_json();
+        assert_eq!(
+            r,
+            "{\"recomputed_rows\":3,\"eligible_rows\":9,\"frontier\":2,\
+             \"cache_hits\":5,\"cache_misses\":4,\"dma_bytes_dense\":100,\
+             \"dma_bytes_shipped\":10}"
+        );
     }
 }

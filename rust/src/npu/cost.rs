@@ -264,6 +264,53 @@ pub fn is_mask_name(name: &str) -> bool {
     matches!(name, "norm" | "adj" | "mask" | "norm_mask" | "neg_bias" | "norm_pad")
 }
 
+/// Per-op-kind multiplicative latency corrections, fitted from observed
+/// executions by the telemetry calibration loop
+/// ([`crate::telemetry::profile::CalibrationReport::scales`]). Kinds
+/// without an observation pass through at 1.0, so an empty `CostScales`
+/// makes [`op_cost_scaled`] identical to [`op_cost`] — the model stays
+/// usable before any telemetry exists.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostScales {
+    factors: std::collections::BTreeMap<String, f64>,
+}
+
+impl CostScales {
+    /// Set the correction for one op-kind mnemonic
+    /// ([`OpKind::name`]). Non-finite or non-positive factors are
+    /// ignored (a degenerate fit must not zero the cost model).
+    pub fn set(&mut self, kind: &str, factor: f64) {
+        if factor.is_finite() && factor > 0.0 {
+            self.factors.insert(kind.to_string(), factor);
+        }
+    }
+
+    /// The correction for `kind` (1.0 when unfitted).
+    pub fn factor(&self, kind: &str) -> f64 {
+        *self.factors.get(kind).unwrap_or(&1.0)
+    }
+
+    /// True when no kind has a fitted correction.
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+
+    /// Fitted (kind, factor) pairs in kind order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.factors.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+/// [`op_cost`] with the fitted per-kind latency correction applied (the
+/// observed/predicted energy split is not calibrated — only `us` moves).
+pub fn op_cost_scaled(g: &OpGraph, id: usize, hw: &HardwareConfig,
+                      engine: Engine, opts: CostOpts,
+                      scales: &CostScales) -> OpCost {
+    let mut c = op_cost(g, id, hw, engine, opts);
+    c.us *= scales.factor(g.ops[id].kind.name());
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,6 +486,33 @@ mod tests {
                 assert!(c.pj.is_finite() && c.pj >= 0.0);
             }
         }
+    }
+
+    #[test]
+    fn cost_scales_correct_only_fitted_kinds() {
+        let g = graph_with(OpKind::MatMul, &[256, 64], Some(&[64, 32]), &[256, 32]);
+        let base = op_cost(&g, 2, &hw(), Engine::Dpu, CostOpts::default());
+
+        let mut scales = CostScales::default();
+        assert!(scales.is_empty());
+        scales.set("MatMul", 2.5);
+        scales.set("Softmax", 0.5);
+        scales.set("Relu", f64::NAN); // ignored
+        scales.set("Add", 0.0); // ignored
+
+        let scaled = op_cost_scaled(&g, 2, &hw(), Engine::Dpu,
+                                    CostOpts::default(), &scales);
+        assert!((scaled.us - base.us * 2.5).abs() < 1e-9);
+        assert_eq!(scaled.macs, base.macs, "only latency is corrected");
+        assert_eq!(scales.factor("Relu"), 1.0, "degenerate fits ignored");
+        assert_eq!(scales.factor("Add"), 1.0);
+        assert_eq!(scales.factor("Transpose"), 1.0, "unfitted passes through");
+        assert_eq!(scales.iter().count(), 2);
+
+        // empty scales: identical to the unscaled model
+        let noop = op_cost_scaled(&g, 2, &hw(), Engine::Dpu,
+                                  CostOpts::default(), &CostScales::default());
+        assert_eq!(noop.us, base.us);
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod spec;
 pub use registry::{
     BoxedEngine, EngineFactory, EngineInit, EngineRegistry, LaunchContext, ShardFactory,
 };
-pub use spec::{BatchSpec, DeploymentSpec, EngineSpec, Topology};
+pub use spec::{BatchSpec, DeploymentSpec, EngineSpec, TelemetrySpec, Topology};
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::Duration;
@@ -76,6 +76,14 @@ pub trait Serving: Send {
     /// admission accounting (`rejected` in [`Snapshot`]) — the hook
     /// [`Serving::query_deadline`] sheds through.
     fn record_shed(&self, node: Option<usize>);
+
+    /// The deployment's telemetry hub (span rings, plan-profiler sinks,
+    /// calibration report), when the topology carries one. The provided
+    /// default returns `None` so bare test doubles stay one-method
+    /// impls; both built-in topologies override it.
+    fn telemetry(&self) -> Option<std::sync::Arc<crate::telemetry::Telemetry>> {
+        None
+    }
 
     /// Stop every worker and join them; the first failure (e.g. a shard
     /// panic message) surfaces as the `Err`.
@@ -206,7 +214,10 @@ impl Deployment {
         resolved.capacity = capacity;
         resolved.validate_with(registry)?;
 
-        let cfg = resolved.fleet_config()?;
+        let mut cfg = resolved.fleet_config()?;
+        // one telemetry hub per launch: every worker ring and profile
+        // sink shares this hub's epoch, so cross-shard spans stitch
+        cfg.telemetry = crate::telemetry::Telemetry::new(resolved.telemetry.config());
         let plan = match plan {
             Some(p) if p.owner.len() == capacity
                 && p.shards.len() == cfg.devices.len() => p,
@@ -238,6 +249,7 @@ impl Deployment {
                 batch: cfg.batch.clone(),
                 admission: cfg.admission,
                 halo: None,
+                telemetry: std::sync::Arc::clone(&cfg.telemetry),
             };
             Ok(Box::new(ServerHandle::spawn_with(init, config)))
         } else {

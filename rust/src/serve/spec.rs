@@ -188,12 +188,49 @@ impl Default for BatchSpec {
     }
 }
 
+/// Telemetry knobs (`[telemetry]` in TOML): query tracing + per-op plan
+/// profiling + the cost-model calibration loop, **off by default** —
+/// disabled telemetry keeps every hot path branch-only and
+/// allocation-free (see [`crate::telemetry`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetrySpec {
+    /// Master switch.
+    pub enabled: bool,
+    /// Span capacity of each per-worker ring (oldest spans overwritten).
+    pub ring_capacity: usize,
+    /// Fraction of traces recorded, in (0, 1]; 1.0 records everything.
+    pub sample_rate: f64,
+}
+
+impl TelemetrySpec {
+    /// Lower to the telemetry layer's runtime config.
+    pub fn config(&self) -> crate::telemetry::TelemetryConfig {
+        crate::telemetry::TelemetryConfig {
+            enabled: self.enabled,
+            ring_capacity: self.ring_capacity,
+            sample_rate: self.sample_rate,
+        }
+    }
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        let d = crate::telemetry::TelemetryConfig::default();
+        TelemetrySpec {
+            enabled: d.enabled,
+            ring_capacity: d.ring_capacity,
+            sample_rate: d.sample_rate,
+        }
+    }
+}
+
 /// One typed deployment: everything
 /// [`crate::serve::Deployment::launch`] needs to serve a graph, and
 /// nothing it has to re-parse per subsystem.
 ///
 /// The TOML shape mirrors the struct — top-level scalars plus
-/// `[engine]`, `[topology]`, `[batch]`, `[admission]` tables — and
+/// `[engine]`, `[topology]`, `[batch]`, `[admission]`, `[telemetry]`
+/// tables — and
 /// `parse_toml(to_toml(spec)) == spec` holds for every spec that
 /// passes [`DeploymentSpec::validate`] (the subset has no string
 /// escapes, so validation rejects embedded quotes; tested in
@@ -222,6 +259,8 @@ pub struct DeploymentSpec {
     /// Per-shard load shedding (0 = unbounded, the single-leader
     /// historical behavior).
     pub admission: AdmissionConfig,
+    /// Query tracing + plan profiling (off by default).
+    pub telemetry: TelemetrySpec,
 }
 
 impl Default for DeploymentSpec {
@@ -235,6 +274,7 @@ impl Default for DeploymentSpec {
             topology: Topology::default(),
             batch: BatchSpec::default(),
             admission: AdmissionConfig::unbounded(),
+            telemetry: TelemetrySpec::default(),
         }
     }
 }
@@ -256,13 +296,15 @@ impl DeploymentSpec {
 
     /// Parse from an already-loaded [`Document`].
     pub fn from_doc(doc: &Document) -> Result<DeploymentSpec> {
-        const SECTIONS: &[&str] = &["", "engine", "topology", "batch", "admission"];
+        const SECTIONS: &[&str] =
+            &["", "engine", "topology", "batch", "admission", "telemetry"];
         for section in doc.section_names() {
             if !SECTIONS.contains(&section) {
                 bail!(
                     "unknown section [{section}] — a deployment spec has \
-                     [engine], [topology], [batch], [admission] and the \
-                     top-level keys model, capacity, aggregation, quant"
+                     [engine], [topology], [batch], [admission], \
+                     [telemetry] and the top-level keys model, capacity, \
+                     aggregation, quant"
                 );
             }
         }
@@ -334,6 +376,26 @@ impl DeploymentSpec {
             }
         }
 
+        if let Some(_table) = doc.section("telemetry") {
+            check_keys(
+                doc,
+                "telemetry",
+                &["enabled", "ring_capacity", "sample_rate"],
+            )?;
+            if let Some(v) = doc.get("telemetry", "enabled") {
+                spec.telemetry.enabled = bool_of(v, "telemetry", "enabled")?;
+            }
+            if let Some(v) = doc.get("telemetry", "ring_capacity") {
+                spec.telemetry.ring_capacity =
+                    usize_of(v, "telemetry", "ring_capacity")?;
+            }
+            if let Some(v) = doc.get("telemetry", "sample_rate") {
+                spec.telemetry.sample_rate = v.as_float().ok_or_else(|| {
+                    anyhow!("[telemetry] sample_rate must be a number, got {v:?}")
+                })?;
+            }
+        }
+
         Ok(spec)
     }
 
@@ -366,6 +428,16 @@ impl DeploymentSpec {
         out.push_str(&format!("max_wait_us = {}\n", self.batch.max_wait_us));
         out.push_str("\n[admission]\n");
         out.push_str(&format!("max_pending = {}\n", self.admission.max_pending));
+        out.push_str("\n[telemetry]\n");
+        out.push_str(&format!("enabled = {}\n", self.telemetry.enabled));
+        out.push_str(&format!(
+            "ring_capacity = {}\n",
+            self.telemetry.ring_capacity
+        ));
+        out.push_str(&format!(
+            "sample_rate = {}\n",
+            emit_value(&Value::Float(self.telemetry.sample_rate))
+        ));
         out
     }
 
@@ -405,6 +477,20 @@ impl DeploymentSpec {
         }
         if self.batch.max_batch == 0 {
             bail!("batch.max_batch must be ≥ 1 (got 0)");
+        }
+        if self.telemetry.ring_capacity == 0 {
+            bail!(
+                "telemetry.ring_capacity must be ≥ 1 (got 0) — disable \
+                 telemetry with enabled = false instead of a zero ring"
+            );
+        }
+        if !(self.telemetry.sample_rate > 0.0 && self.telemetry.sample_rate <= 1.0)
+        {
+            bail!(
+                "telemetry.sample_rate must be in (0, 1], got {} — 1.0 \
+                 records every trace",
+                self.telemetry.sample_rate
+            );
         }
         Ok(())
     }

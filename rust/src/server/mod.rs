@@ -59,6 +59,16 @@ pub trait InferenceEngine {
     fn round_stats(&mut self) -> Option<crate::metrics::RoundStats> {
         None
     }
+    /// Offer the engine the deployment's telemetry hub (called once by
+    /// the shard worker, after construction). Plan-backed engines attach
+    /// per-op profilers here; the default ignores it — engines without a
+    /// compiled plan have nothing to profile.
+    fn attach_telemetry(
+        &mut self,
+        _telemetry: &Arc<crate::telemetry::Telemetry>,
+        _shard: usize,
+    ) {
+    }
 }
 
 /// Boxed engines pass through unchanged — this is what lets the
@@ -85,6 +95,14 @@ impl InferenceEngine for Box<dyn InferenceEngine> {
 
     fn round_stats(&mut self) -> Option<crate::metrics::RoundStats> {
         (**self).round_stats()
+    }
+
+    fn attach_telemetry(
+        &mut self,
+        telemetry: &Arc<crate::telemetry::Telemetry>,
+        shard: usize,
+    ) {
+        (**self).attach_telemetry(telemetry, shard)
     }
 }
 
@@ -125,6 +143,7 @@ impl Default for ServerConfig {
 pub struct ServerHandle {
     shard: Option<ShardWorker>,
     pub metrics: Arc<Metrics>,
+    telemetry: Arc<crate::telemetry::Telemetry>,
     next_id: AtomicU64,
 }
 
@@ -148,10 +167,12 @@ impl ServerHandle {
         F: FnOnce() -> Result<E> + Send + 'static,
         E: InferenceEngine,
     {
+        let telemetry = Arc::clone(&config.telemetry);
         let shard = ShardWorker::spawn(0, factory, config);
         ServerHandle {
             metrics: shard.metrics.clone(),
             shard: Some(shard),
+            telemetry,
             next_id: AtomicU64::new(1),
         }
     }
@@ -213,6 +234,10 @@ impl crate::serve::Serving for ServerHandle {
 
     fn num_shards(&self) -> usize {
         1
+    }
+
+    fn telemetry(&self) -> Option<Arc<crate::telemetry::Telemetry>> {
+        Some(Arc::clone(&self.telemetry))
     }
 
     fn record_shed(&self, _node: Option<usize>) {

@@ -1,0 +1,360 @@
+//! Telemetry exporters: Prometheus text format and JSON lines.
+//!
+//! Both exporters are pure functions over already-collected data
+//! ([`crate::metrics::Snapshot`], [`super::Trace`],
+//! [`super::profile::CalibrationReport`]) — no I/O, no locks — so the
+//! CLI, a scrape endpoint, or a test can render the same state. Each
+//! comes with a small structural validator ([`validate_prometheus`],
+//! [`validate_json_lines`]); the `grannite trace` example job runs the
+//! validators over live exporter output so a formatting regression fails
+//! CI, not a dashboard.
+
+use anyhow::{bail, Result};
+
+use super::profile::CalibrationReport;
+use super::{Span, Trace, ROUTER_SHARD};
+use crate::metrics::Snapshot;
+use crate::util::json_escape;
+
+/// A finite float as a JSON/Prometheus number (`null`/`NaN` never occur
+/// in practice; non-finite values render as 0 to keep scrapes parseable).
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn shard_label(s: &Snapshot) -> String {
+    match s.shard {
+        Some(i) => i.to_string(),
+        None => "all".to_string(),
+    }
+}
+
+/// Render per-shard snapshots plus the calibration table in the
+/// Prometheus text exposition format (counters, gauges, and summary
+/// quantiles, all under the `grannite_` prefix).
+pub fn prometheus(shards: &[Snapshot], cal: &CalibrationReport) -> String {
+    let mut out = String::with_capacity(4096);
+    let header = |name: &str, kind: &str, help: &str, out: &mut String| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    };
+
+    header("grannite_queries_total", "counter", "Queries served.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_queries_total{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            s.queries
+        ));
+    }
+    header("grannite_rejected_total", "counter", "Queries shed at admission.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_rejected_total{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            s.rejected
+        ));
+    }
+    header("grannite_halo_bytes_total", "counter",
+           "Boundary feature bytes exchanged between shards.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_halo_bytes_total{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            s.halo_bytes
+        ));
+    }
+    header("grannite_throughput_qps", "gauge", "Observed queries per second.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_throughput_qps{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            num(s.throughput_qps)
+        ));
+    }
+    header("grannite_latency_us", "summary",
+           "End-to-end query latency, microseconds.", &mut out);
+    for s in shards {
+        if let Some(lat) = &s.latency {
+            let shard = shard_label(s);
+            for (q, v) in [("0.5", lat.p50), ("0.95", lat.p95), ("0.99", lat.p99)] {
+                out.push_str(&format!(
+                    "grannite_latency_us{{shard=\"{shard}\",quantile=\"{q}\"}} {}\n",
+                    num(v)
+                ));
+            }
+            out.push_str(&format!(
+                "grannite_latency_us_count{{shard=\"{shard}\"}} {}\n",
+                lat.n
+            ));
+        }
+    }
+    header("grannite_queue_us", "summary",
+           "Time from enqueue to inference start, microseconds.", &mut out);
+    for s in shards {
+        if let Some(q) = &s.queue {
+            let shard = shard_label(s);
+            out.push_str(&format!(
+                "grannite_queue_us{{shard=\"{shard}\",quantile=\"0.5\"}} {}\n",
+                num(q.p50)
+            ));
+            out.push_str(&format!(
+                "grannite_queue_us{{shard=\"{shard}\",quantile=\"0.99\"}} {}\n",
+                num(q.p99)
+            ));
+        }
+    }
+    header("grannite_cache_hit_rate", "gauge",
+           "Fraction of activation rows served from the layer cache.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_cache_hit_rate{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            num(s.cache_hit_rate())
+        ));
+    }
+
+    header("grannite_cost_ratio", "gauge",
+           "Observed/predicted per-op cost ratio (median).", &mut out);
+    for r in &cal.rows {
+        out.push_str(&format!(
+            "grannite_cost_ratio{{kind=\"{}\",bucket=\"{}\"}} {}\n",
+            r.kind, r.bucket, num(r.ratio_p50)
+        ));
+    }
+    header("grannite_cost_scale", "gauge",
+           "Fitted per-op-kind cost-model scale factor.", &mut out);
+    for (kind, f) in cal.scales().iter() {
+        out.push_str(&format!(
+            "grannite_cost_scale{{kind=\"{kind}\"}} {}\n",
+            num(f)
+        ));
+    }
+    out
+}
+
+fn span_json(s: &Span) -> String {
+    let shard = if s.shard == ROUTER_SHARD {
+        "null".to_string()
+    } else {
+        s.shard.to_string()
+    };
+    format!(
+        "{{\"shard\":{shard},\"kind\":\"{}\",\"label\":\"{}\",\
+         \"start_us\":{},\"dur_us\":{},\"value\":{}}}",
+        s.kind.name(),
+        json_escape(s.label),
+        num(s.start_us),
+        num(s.dur_us),
+        s.value
+    )
+}
+
+/// Render the full telemetry state as JSON lines: one `snapshot` object
+/// per shard, one `calibration` object per table row, one `trace` object
+/// per stitched trace — each a self-describing single-line record.
+pub fn json_lines(traces: &[Trace], shards: &[Snapshot], cal: &CalibrationReport) -> String {
+    let mut out = String::with_capacity(4096);
+    for s in shards {
+        out.push_str(&format!(
+            "{{\"type\":\"snapshot\",\"snapshot\":{}}}\n",
+            s.to_json()
+        ));
+    }
+    for r in &cal.rows {
+        out.push_str(&format!(
+            "{{\"type\":\"calibration\",\"kind\":\"{}\",\"bucket\":{},\
+             \"runs\":{},\"predicted_us\":{},\"observed_us\":{},\
+             \"ratio_p50\":{},\"ratio_p99\":{}}}\n",
+            json_escape(&r.kind),
+            r.bucket,
+            r.runs,
+            num(r.predicted_us),
+            num(r.observed_us),
+            num(r.ratio_p50),
+            num(r.ratio_p99)
+        ));
+    }
+    for t in traces {
+        let spans: Vec<String> = t.spans.iter().map(span_json).collect();
+        out.push_str(&format!(
+            "{{\"type\":\"trace\",\"trace_id\":{},\"latency_us\":{},\
+             \"spans\":[{}]}}\n",
+            t.trace_id,
+            num(t.latency_us()),
+            spans.join(",")
+        ));
+    }
+    out
+}
+
+/// Structural check over Prometheus text output: every non-comment line
+/// must be `name[{labels}] value` with a legal metric name, balanced
+/// quoted labels, and a parseable float. Returns the sample count.
+pub fn validate_prometheus(text: &str) -> Result<usize> {
+    let mut samples = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(parts) => parts,
+            None => bail!("line {}: no value separator: {line:?}", ln + 1),
+        };
+        if value.parse::<f64>().is_err() {
+            bail!("line {}: unparseable value {value:?}", ln + 1);
+        }
+        let name = match series.split_once('{') {
+            Some((name, rest)) => {
+                let labels = match rest.strip_suffix('}') {
+                    Some(l) => l,
+                    None => bail!("line {}: unclosed label set: {series:?}", ln + 1),
+                };
+                if labels.matches('"').count() % 2 != 0 {
+                    bail!("line {}: unbalanced label quotes: {labels:?}", ln + 1);
+                }
+                for pair in labels.split(',') {
+                    let (_, v) = match pair.split_once('=') {
+                        Some(kv) => kv,
+                        None => bail!("line {}: label without '=': {pair:?}", ln + 1),
+                    };
+                    if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                        bail!("line {}: unquoted label value: {pair:?}", ln + 1);
+                    }
+                }
+                name
+            }
+            None => series,
+        };
+        let mut chars = name.chars();
+        let head_ok = chars
+            .next()
+            .map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            .unwrap_or(false);
+        if !head_ok || !chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':') {
+            bail!("line {}: illegal metric name {name:?}", ln + 1);
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        bail!("no samples in Prometheus output");
+    }
+    Ok(samples)
+}
+
+/// Structural check over JSON-lines output: every line must be one
+/// object with balanced braces/brackets outside string literals and
+/// properly terminated strings. Returns the line count.
+pub fn validate_json_lines(text: &str) -> Result<usize> {
+    let mut lines = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if !line.starts_with('{') || !line.ends_with('}') {
+            bail!("line {}: not a JSON object: {line:?}", ln + 1);
+        }
+        let (mut brace, mut bracket) = (0i64, 0i64);
+        let mut in_str = false;
+        let mut escape = false;
+        for c in line.chars() {
+            if in_str {
+                if escape {
+                    escape = false;
+                } else if c == '\\' {
+                    escape = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' => brace += 1,
+                '}' => brace -= 1,
+                '[' => bracket += 1,
+                ']' => bracket -= 1,
+                _ => {}
+            }
+            if brace < 0 || bracket < 0 {
+                bail!("line {}: unbalanced nesting: {line:?}", ln + 1);
+            }
+        }
+        if in_str {
+            bail!("line {}: unterminated string: {line:?}", ln + 1);
+        }
+        if brace != 0 || bracket != 0 {
+            bail!("line {}: unbalanced nesting: {line:?}", ln + 1);
+        }
+        lines += 1;
+    }
+    if lines == 0 {
+        bail!("no records in JSON-lines output");
+    }
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::telemetry::{SpanKind, Telemetry, TelemetryConfig};
+
+    fn sample_state() -> (Vec<Trace>, Vec<Snapshot>, CalibrationReport) {
+        let m = Metrics::new_shard(0);
+        m.record_query(120.0, 4.0, 2);
+        m.record_halo(256, 3.0);
+        let tel = Telemetry::new(TelemetryConfig {
+            enabled: true,
+            ring_capacity: 64,
+            sample_rate: 1.0,
+        });
+        let rec = tel.recorder(0);
+        rec.record(1, SpanKind::Queue, "queue", 0.0, 4.0, 0);
+        rec.record(1, SpanKind::EngineRound, "round", 4.0, 116.0, 0);
+        rec.record(1, SpanKind::Op, "MatMul", 5.0, 50.0, 0);
+        (tel.traces(), vec![m.snapshot()], tel.calibration())
+    }
+
+    #[test]
+    fn prometheus_output_validates() {
+        let (_, shards, cal) = sample_state();
+        let text = prometheus(&shards, &cal);
+        let n = validate_prometheus(&text).unwrap();
+        assert!(n >= 5, "expected several samples, got {n}:\n{text}");
+        assert!(text.contains("grannite_queries_total{shard=\"0\"} 1"));
+        assert!(text.contains("# TYPE grannite_latency_us summary"));
+    }
+
+    #[test]
+    fn json_lines_output_validates() {
+        let (traces, shards, cal) = sample_state();
+        let text = json_lines(&traces, &shards, &cal);
+        let n = validate_json_lines(&text).unwrap();
+        assert_eq!(n, shards.len() + cal.rows.len() + traces.len());
+        assert!(text.contains("\"type\":\"snapshot\""));
+        assert!(text.contains("\"type\":\"trace\""));
+        assert!(text.contains("\"kind\":\"engine_round\""));
+    }
+
+    #[test]
+    fn validators_reject_malformed_output() {
+        assert!(validate_prometheus("").is_err());
+        assert!(validate_prometheus("1metric 5\n").is_err());
+        assert!(validate_prometheus("m{a=\"b\" 5\n").is_err(), "unclosed labels");
+        assert!(validate_prometheus("m{a=b} 5\n").is_err(), "unquoted label");
+        assert!(validate_prometheus("m notafloat\n").is_err());
+        assert!(validate_prometheus("ok_metric{x=\"y\"} 1.5\n").is_ok());
+
+        assert!(validate_json_lines("").is_err());
+        assert!(validate_json_lines("[1,2]\n").is_err(), "not an object");
+        assert!(validate_json_lines("{\"a\":[1,2}\n").is_err(), "unbalanced");
+        assert!(validate_json_lines("{\"a\":\"unterminated}\n").is_err());
+        assert!(validate_json_lines("{\"a\":{\"b\":[1,2]}}\n").is_ok());
+    }
+}

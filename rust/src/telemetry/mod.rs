@@ -1,0 +1,530 @@
+//! End-to-end telemetry: query tracing, per-op plan profiling, and the
+//! cost-model calibration loop.
+//!
+//! GraNNite's techniques are all justified by knowing where time goes on
+//! the accelerator (GraphSplit's cost model, EffOp's control-path
+//! accounting, GraSp's density pricing) — but a serving deployment could
+//! only report end-of-run histograms. This module makes a single query
+//! observable end to end:
+//!
+//! - **Span recorder** ([`Recorder`] over per-worker [`SpanRing`]s):
+//!   typed spans `admission → queue → batch → engine round → halo →
+//!   per-op kernel`, keyed by the trace ID minted at
+//!   [`crate::serve::Serving::query`] (the query id) and propagated
+//!   through router fan-out, so a fleet query stitches into one
+//!   [`Trace`] across shard rings.
+//! - **Plan profiler** ([`profile::PlanProfiler`], attached to
+//!   [`crate::engine::PlanInstance`]): per-step wall time keyed by
+//!   `OpKind` and row bucket, paired with the [`crate::npu::cost`]
+//!   prediction — surfaced as a [`profile::CalibrationReport`] and a
+//!   fitted [`crate::npu::cost::CostScales`] the cost model can apply.
+//! - **Exporters** ([`export`]): Prometheus text format and JSON lines
+//!   over [`crate::metrics::Snapshot`] + trace/calibration data.
+//!
+//! Overhead contract: telemetry is always compiled and **off by
+//! default**. A disabled [`Recorder`] is `Option::None` inside — every
+//! call is a branch, no `Instant::now()`, no lock, no allocation — and a
+//! disabled [`Telemetry::plan_profiler`] returns `None`, so the planned
+//! engine's zero-steady-state-allocation proof
+//! (`rust/tests/plan_alloc.rs`) extends over the disabled paths.
+//! Enabled, each worker owns a fixed-capacity ring (allocated once, at
+//! `recorder()` time) and recording is one short mutex on a ring no
+//! other worker touches.
+
+pub mod export;
+pub mod profile;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::ops::ExecPlan;
+
+pub use profile::{CalibrationReport, CalibrationRow, PlanProfiler, StepObs};
+
+/// Shard id spans recorded by the fleet router carry (the router is not
+/// a shard; `usize::MAX` can never collide with a worker index).
+pub const ROUTER_SHARD: usize = usize::MAX;
+
+/// Fibonacci-hash multiplier for deterministic per-trace sampling: a
+/// trace is sampled iff `trace_id * PHI64 <= threshold`, so every worker
+/// makes the same keep/drop call for one trace without coordination.
+const PHI64: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Telemetry knobs, normally set via the `[telemetry]` spec section
+/// ([`crate::serve::spec::TelemetrySpec`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch; `false` (the default) keeps every hot path
+    /// branch-only and allocation-free.
+    pub enabled: bool,
+    /// Span capacity of each per-worker ring (oldest spans overwritten).
+    pub ring_capacity: usize,
+    /// Fraction of traces recorded, in (0, 1]; 1.0 records everything.
+    pub sample_rate: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: false, ring_capacity: 4096, sample_rate: 1.0 }
+    }
+}
+
+/// What a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Admission decision (point span; value = pending depth).
+    Admission,
+    /// Time from enqueue to the start of the serving inference round.
+    Queue,
+    /// Batch assembly: flush start to inference start (value = batch size).
+    Batch,
+    /// One engine inference round (the query's compute latency).
+    EngineRound,
+    /// Halo exchange charged to this round (value = bytes shipped).
+    Halo,
+    /// One plan step (fused chain / kernel) inside the round.
+    Op,
+    /// Router fan-out decision (point span; value = target shard).
+    Route,
+}
+
+impl SpanKind {
+    /// Stable lowercase mnemonic (exporter label / CLI column).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::Queue => "queue",
+            SpanKind::Batch => "batch",
+            SpanKind::EngineRound => "engine_round",
+            SpanKind::Halo => "halo",
+            SpanKind::Op => "op",
+            SpanKind::Route => "route",
+        }
+    }
+}
+
+/// One recorded span. `start_us` is relative to the owning
+/// [`Telemetry`]'s epoch, so spans from different worker rings share a
+/// clock and stitch into ordered traces.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    /// Trace (= query) id this span belongs to.
+    pub trace_id: u64,
+    /// Recording worker (or [`ROUTER_SHARD`]).
+    pub shard: usize,
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Static detail label (op kind name, "admit"/"shed", …).
+    pub label: &'static str,
+    /// Start, µs since the telemetry epoch.
+    pub start_us: f64,
+    /// Duration, µs (0 for point spans).
+    pub dur_us: f64,
+    /// Kind-specific magnitude (batch size, halo bytes, pending depth).
+    pub value: u64,
+}
+
+#[derive(Debug)]
+struct RingInner {
+    spans: Vec<Span>,
+    head: usize,
+    total: u64,
+}
+
+/// Fixed-capacity span ring. The backing `Vec` is allocated once at
+/// construction; `push` never allocates (fill phase appends into reserved
+/// capacity, wrap phase overwrites in place).
+#[derive(Debug)]
+pub struct SpanRing {
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl SpanRing {
+    fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing {
+            cap,
+            inner: Mutex::new(RingInner {
+                spans: Vec::with_capacity(cap),
+                head: 0,
+                total: 0,
+            }),
+        }
+    }
+
+    fn push(&self, span: Span) {
+        let mut g = self.inner.lock().unwrap();
+        if g.spans.len() < self.cap {
+            g.spans.push(span);
+        } else {
+            let h = g.head;
+            g.spans[h] = span;
+        }
+        g.head = (g.head + 1) % self.cap;
+        g.total += 1;
+    }
+
+    /// All retained spans (unordered) plus the total ever pushed.
+    fn snapshot(&self) -> (Vec<Span>, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.spans.clone(), g.total)
+    }
+}
+
+#[derive(Clone)]
+struct RecorderInner {
+    ring: Arc<SpanRing>,
+    epoch: Instant,
+    shard: usize,
+    threshold: u64,
+}
+
+/// A worker's handle for recording spans. Cloneable; a disabled recorder
+/// (from a disabled [`Telemetry`]) is a `None` inside and every method
+/// is a branch-only no-op — no clock read, no lock, no allocation.
+#[derive(Clone)]
+pub struct Recorder {
+    inner: Option<RecorderInner>,
+}
+
+impl Recorder {
+    /// A recorder that drops everything (what disabled telemetry hands
+    /// out).
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// Whether spans are actually being kept.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Microseconds since the telemetry epoch; `0.0` when disabled (the
+    /// disabled path must not touch the clock).
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        match &self.inner {
+            Some(r) => r.epoch.elapsed().as_secs_f64() * 1e6,
+            None => 0.0,
+        }
+    }
+
+    /// Whether `trace_id` falls inside the sample (deterministic across
+    /// workers); `false` when disabled.
+    #[inline]
+    pub fn sampled(&self, trace_id: u64) -> bool {
+        match &self.inner {
+            Some(r) => trace_id.wrapping_mul(PHI64) <= r.threshold,
+            None => false,
+        }
+    }
+
+    /// Record one span (dropped when disabled or the trace is sampled
+    /// out).
+    #[inline]
+    pub fn record(
+        &self,
+        trace_id: u64,
+        kind: SpanKind,
+        label: &'static str,
+        start_us: f64,
+        dur_us: f64,
+        value: u64,
+    ) {
+        if let Some(r) = &self.inner {
+            if trace_id.wrapping_mul(PHI64) <= r.threshold {
+                r.ring.push(Span {
+                    trace_id,
+                    shard: r.shard,
+                    kind,
+                    label,
+                    start_us,
+                    dur_us,
+                    value,
+                });
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Recorder(enabled={})", self.enabled())
+    }
+}
+
+/// One stitched trace: every retained span sharing a trace id, ordered
+/// by start time, possibly spanning several shard rings (a fleet query).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// The query id minted at [`crate::serve::Serving::query`].
+    pub trace_id: u64,
+    /// Member spans, sorted by `start_us`.
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// Queue + engine time of the query itself (the spans recorded under
+    /// this trace's own id, not batch-mates') — the sort key for
+    /// "slowest traces".
+    pub fn latency_us(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| matches!(s.kind, SpanKind::Queue | SpanKind::EngineRound))
+            .map(|s| s.dur_us)
+            .sum()
+    }
+
+    /// Number of distinct recording workers (router excluded).
+    pub fn shard_count(&self) -> usize {
+        let mut shards: Vec<usize> = self
+            .spans
+            .iter()
+            .map(|s| s.shard)
+            .filter(|&s| s != ROUTER_SHARD)
+            .collect();
+        shards.sort_unstable();
+        shards.dedup();
+        shards.len()
+    }
+}
+
+/// The deployment-wide telemetry hub: owns the epoch, hands out
+/// per-worker [`Recorder`]s and per-shard [`profile::ProfileSink`]s, and
+/// assembles traces and the calibration report on demand.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    epoch: Instant,
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    sinks: Mutex<Vec<(usize, Arc<profile::ProfileSink>)>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("cfg", &self.cfg).finish()
+    }
+}
+
+impl Telemetry {
+    /// A telemetry hub with the given knobs (shared across every worker
+    /// of one deployment).
+    pub fn new(cfg: TelemetryConfig) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            cfg,
+            epoch: Instant::now(),
+            rings: Mutex::new(Vec::new()),
+            sinks: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The off-by-default hub: recorders are no-ops, profilers are
+    /// `None`, nothing is retained.
+    pub fn disabled() -> Arc<Telemetry> {
+        Telemetry::new(TelemetryConfig::default())
+    }
+
+    /// Master switch state.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The knobs this hub was built with.
+    pub fn config(&self) -> &TelemetryConfig {
+        &self.cfg
+    }
+
+    /// A recorder for worker `shard`. Enabled hubs allocate the ring
+    /// here (once, outside any hot path) and register it for
+    /// [`Telemetry::traces`]; disabled hubs return the no-op recorder.
+    pub fn recorder(&self, shard: usize) -> Recorder {
+        if !self.cfg.enabled {
+            return Recorder::disabled();
+        }
+        let ring = Arc::new(SpanRing::new(self.cfg.ring_capacity));
+        self.rings.lock().unwrap().push(Arc::clone(&ring));
+        let rate = self.cfg.sample_rate;
+        let threshold = if rate >= 1.0 {
+            u64::MAX
+        } else {
+            (rate.max(0.0) * u64::MAX as f64) as u64
+        };
+        Recorder {
+            inner: Some(RecorderInner { ring, epoch: self.epoch, shard, threshold }),
+        }
+    }
+
+    /// A per-plan profiler feeding shard `shard`'s calibration sink, or
+    /// `None` when disabled (the engine then skips all timing). Multiple
+    /// plans on one shard (the incremental engine's tile cache) share
+    /// one sink, so their observations merge.
+    pub fn plan_profiler(&self, shard: usize, plan: &ExecPlan) -> Option<PlanProfiler> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let sink = self.sink_for(shard);
+        Some(PlanProfiler::new(sink, plan))
+    }
+
+    fn sink_for(&self, shard: usize) -> Arc<profile::ProfileSink> {
+        let mut sinks = self.sinks.lock().unwrap();
+        if let Some((_, s)) = sinks.iter().find(|(id, _)| *id == shard) {
+            return Arc::clone(s);
+        }
+        let s = Arc::new(profile::ProfileSink::new(shard));
+        sinks.push((shard, Arc::clone(&s)));
+        s
+    }
+
+    /// Per-step observations of shard `shard`'s most recent engine
+    /// round, consumed (the shard loop turns these into `Op` spans).
+    pub fn drain_last_round(&self, shard: usize) -> Vec<StepObs> {
+        let sinks = self.sinks.lock().unwrap();
+        match sinks.iter().find(|(id, _)| *id == shard) {
+            Some((_, s)) => s.drain_last_round(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Every retained span across all worker rings (unordered).
+    pub fn spans(&self) -> Vec<Span> {
+        let rings = self.rings.lock().unwrap();
+        let mut out = Vec::new();
+        for ring in rings.iter() {
+            let (spans, _) = ring.snapshot();
+            out.extend(spans);
+        }
+        out
+    }
+
+    /// Total spans ever recorded vs retained (rings overwrite oldest).
+    pub fn span_counts(&self) -> (u64, usize) {
+        let rings = self.rings.lock().unwrap();
+        let mut total = 0u64;
+        let mut kept = 0usize;
+        for ring in rings.iter() {
+            let (spans, t) = ring.snapshot();
+            total += t;
+            kept += spans.len();
+        }
+        (total, kept)
+    }
+
+    /// Stitch retained spans into per-query traces, slowest first.
+    pub fn traces(&self) -> Vec<Trace> {
+        let mut by_id: std::collections::BTreeMap<u64, Vec<Span>> =
+            std::collections::BTreeMap::new();
+        for span in self.spans() {
+            by_id.entry(span.trace_id).or_default().push(span);
+        }
+        let mut traces: Vec<Trace> = by_id
+            .into_iter()
+            .map(|(trace_id, mut spans)| {
+                spans.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+                Trace { trace_id, spans }
+            })
+            .collect();
+        traces.sort_by(|a, b| b.latency_us().total_cmp(&a.latency_us()));
+        traces
+    }
+
+    /// The predicted-vs-observed calibration report, merged across every
+    /// shard's profile sink.
+    pub fn calibration(&self) -> CalibrationReport {
+        let sinks = self.sinks.lock().unwrap();
+        let parts: Vec<Arc<profile::ProfileSink>> =
+            sinks.iter().map(|(_, s)| Arc::clone(s)).collect();
+        drop(sinks);
+        profile::CalibrationReport::merged(&parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let tel = Telemetry::disabled();
+        assert!(!tel.enabled());
+        let rec = tel.recorder(0);
+        assert!(!rec.enabled());
+        assert_eq!(rec.now_us(), 0.0);
+        rec.record(1, SpanKind::Queue, "queue", 0.0, 5.0, 0);
+        assert!(tel.spans().is_empty());
+        assert!(tel.traces().is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_at_capacity() {
+        let tel = Telemetry::new(TelemetryConfig {
+            enabled: true,
+            ring_capacity: 8,
+            sample_rate: 1.0,
+        });
+        let rec = tel.recorder(0);
+        for i in 0..20u64 {
+            rec.record(i, SpanKind::Queue, "queue", i as f64, 1.0, 0);
+        }
+        let (total, kept) = tel.span_counts();
+        assert_eq!(total, 20);
+        assert_eq!(kept, 8, "ring retains exactly its capacity");
+        // the retained spans are the most recent 8
+        let mut ids: Vec<u64> = tel.spans().iter().map(|s| s.trace_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn traces_stitch_across_rings_and_sort_by_latency() {
+        let tel = Telemetry::new(TelemetryConfig {
+            enabled: true,
+            ring_capacity: 64,
+            sample_rate: 1.0,
+        });
+        let r0 = tel.recorder(0);
+        let r1 = tel.recorder(1);
+        let router = tel.recorder(ROUTER_SHARD);
+        router.record(7, SpanKind::Route, "route", 0.0, 0.0, 0);
+        r0.record(7, SpanKind::Queue, "queue", 1.0, 4.0, 0);
+        r0.record(7, SpanKind::EngineRound, "round", 5.0, 10.0, 0);
+        r1.record(7, SpanKind::Halo, "halo", 2.0, 1.0, 64);
+        router.record(9, SpanKind::Route, "route", 20.0, 0.0, 1);
+        r1.record(9, SpanKind::Queue, "queue", 21.0, 1.0, 0);
+        r1.record(9, SpanKind::EngineRound, "round", 22.0, 2.0, 0);
+
+        let traces = tel.traces();
+        assert_eq!(traces.len(), 2);
+        let slow = &traces[0];
+        assert_eq!(slow.trace_id, 7, "slowest first");
+        assert_eq!(slow.spans.len(), 4);
+        assert_eq!(slow.shard_count(), 2, "stitched across two shard rings");
+        assert!((slow.latency_us() - 14.0).abs() < 1e-9);
+        // sorted by start time
+        for w in slow.spans.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us);
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_proportional() {
+        let tel = Telemetry::new(TelemetryConfig {
+            enabled: true,
+            ring_capacity: 4096,
+            sample_rate: 0.25,
+        });
+        let r0 = tel.recorder(0);
+        let r1 = tel.recorder(1);
+        let mut kept = 0;
+        for id in 1..=1000u64 {
+            assert_eq!(r0.sampled(id), r1.sampled(id), "workers agree on {id}");
+            if r0.sampled(id) {
+                kept += 1;
+            }
+            r0.record(id, SpanKind::Queue, "queue", id as f64, 1.0, 0);
+        }
+        assert_eq!(tel.spans().len(), kept, "record honors the sample");
+        assert!((150..350).contains(&kept), "~25% of 1000, got {kept}");
+    }
+}

@@ -1,0 +1,369 @@
+//! Per-op plan profiling and the predicted-vs-observed calibration loop.
+//!
+//! A [`PlanProfiler`] rides inside one [`crate::engine::PlanInstance`]:
+//! at attach time it walks the compiled plan once, resolving each step's
+//! op-kind mnemonic, row bucket (next power of two — the same geometry
+//! the tile cache keys on) and the [`crate::npu::cost::op_cost`]
+//! prediction for the reference device
+//! ([`crate::config::HardwareConfig::npu_series2`], the cost model every
+//! placement decision prices against). At run time `observe` is a plain
+//! slot store (no lock, no allocation) and `flush` folds the round into
+//! the shard's shared [`ProfileSink`] under one short lock.
+//!
+//! The sink aggregates per `(kind, bucket)` slot: exact run counts and
+//! predicted/observed sums plus a bounded [`Reservoir`] of
+//! observed/predicted ratios — which is exactly the signal the ROADMAP's
+//! self-tuning `auto` engine needs, surfaced as a [`CalibrationReport`]
+//! and a fitted per-kind [`CostScales`].
+
+use std::sync::{Arc, Mutex};
+
+use crate::config::HardwareConfig;
+use crate::npu::cost::{op_cost, CostOpts, CostScales};
+use crate::ops::plan::{rc, StepKind};
+use crate::ops::ExecPlan;
+use crate::util::reservoir::Reservoir;
+use crate::util::timing::Stats;
+
+/// Ratio samples retained per `(kind, bucket)` slot.
+const RATIO_CAP: usize = 128;
+
+/// Per-round observations retained for span emission when the shard loop
+/// is not draining (e.g. the bench harness) — bounds sink memory.
+const LAST_ROUND_CAP: usize = 4096;
+
+/// One step observation of the most recent engine round.
+#[derive(Debug, Clone, Copy)]
+pub struct StepObs {
+    /// Op-kind mnemonic of the step (fused chains report the tail op).
+    pub kind: &'static str,
+    /// Observed wall time, µs.
+    pub dur_us: f64,
+}
+
+#[derive(Debug)]
+struct Slot {
+    kind: &'static str,
+    bucket: usize,
+    runs: u64,
+    predicted_sum: f64,
+    observed_sum: f64,
+    /// observed/predicted per run (bounded, deterministic).
+    ratios: Reservoir,
+}
+
+#[derive(Debug)]
+struct SinkInner {
+    slots: Vec<Slot>,
+    last_round: Vec<StepObs>,
+}
+
+/// One shard's profile aggregation point, shared by every plan instance
+/// the shard executes (the incremental engine's whole tile cache feeds
+/// one sink).
+#[derive(Debug)]
+pub struct ProfileSink {
+    shard: usize,
+    inner: Mutex<SinkInner>,
+}
+
+impl ProfileSink {
+    pub(crate) fn new(shard: usize) -> ProfileSink {
+        ProfileSink {
+            shard,
+            inner: Mutex::new(SinkInner { slots: Vec::new(), last_round: Vec::new() }),
+        }
+    }
+
+    /// Find-or-create the slot index for `(kind, bucket)`.
+    fn slot_index(&self, kind: &'static str, bucket: usize) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(i) = g
+            .slots
+            .iter()
+            .position(|s| s.kind == kind && s.bucket == bucket)
+        {
+            return i;
+        }
+        // deterministic per-slot seed: same (shard, kind, bucket) →
+        // same reservoir stream across runs
+        let seed = 0x7e1e_c0de
+            ^ (self.shard as u64).rotate_left(32)
+            ^ (bucket as u64).rotate_left(16)
+            ^ kind.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+        g.slots.push(Slot {
+            kind,
+            bucket,
+            runs: 0,
+            predicted_sum: 0.0,
+            observed_sum: 0.0,
+            ratios: Reservoir::new(RATIO_CAP, seed),
+        });
+        g.slots.len() - 1
+    }
+
+    /// Per-step observations of the most recent flushed round, consumed.
+    pub(crate) fn drain_last_round(&self) -> Vec<StepObs> {
+        std::mem::take(&mut self.inner.lock().unwrap().last_round)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct StepMeta {
+    kind: &'static str,
+    predicted_us: f64,
+    slot: usize,
+}
+
+/// Per-plan-instance profiler: `observe` per step, `flush` per round.
+#[derive(Debug)]
+pub struct PlanProfiler {
+    sink: Arc<ProfileSink>,
+    meta: Vec<StepMeta>,
+    /// Last observed µs per step; negative = not observed this round.
+    last: Vec<f64>,
+}
+
+impl PlanProfiler {
+    pub(crate) fn new(sink: Arc<ProfileSink>, plan: &ExecPlan) -> PlanProfiler {
+        let hw = HardwareConfig::npu_series2();
+        let g = &plan.graph;
+        let meta = plan
+            .steps
+            .iter()
+            .map(|step| {
+                let tail = &g.ops[step.op];
+                let kind = tail.kind.name();
+                let (rows, _cols) = rc(&tail.shape).unwrap_or((1, 1));
+                let bucket = rows.max(1).next_power_of_two();
+                // a fused chain executes all member ops in one loop —
+                // its prediction is the sum of the members' costs
+                let predicted_us = match &step.kind {
+                    StepKind::Chain(chain) => chain
+                        .ops
+                        .iter()
+                        .map(|&id| {
+                            op_cost(g, id, &hw, g.ops[id].kind.default_engine(),
+                                    CostOpts::default())
+                            .us
+                        })
+                        .sum(),
+                    _ => op_cost(g, step.op, &hw, tail.kind.default_engine(),
+                                 CostOpts::default())
+                        .us,
+                };
+                let slot = sink.slot_index(kind, bucket);
+                StepMeta { kind, predicted_us, slot }
+            })
+            .collect::<Vec<_>>();
+        let last = vec![-1.0; meta.len()];
+        PlanProfiler { sink, meta, last }
+    }
+
+    /// Record step `si`'s wall time for this round (no lock, no
+    /// allocation — a single slot store on the engine's hot path).
+    #[inline]
+    pub fn observe(&mut self, si: usize, us: f64) {
+        if let Some(v) = self.last.get_mut(si) {
+            *v = us;
+        }
+    }
+
+    /// Fold the round's observations into the shard sink (one lock per
+    /// round) and reset for the next round.
+    pub fn flush(&mut self) {
+        let mut g = self.sink.inner.lock().unwrap();
+        for (meta, us) in self.meta.iter().zip(self.last.iter_mut()) {
+            if *us < 0.0 {
+                continue;
+            }
+            let slot = &mut g.slots[meta.slot];
+            slot.runs += 1;
+            slot.predicted_sum += meta.predicted_us;
+            slot.observed_sum += *us;
+            if meta.predicted_us > 0.0 {
+                slot.ratios.record(*us / meta.predicted_us);
+            }
+            if g.last_round.len() < LAST_ROUND_CAP {
+                g.last_round.push(StepObs { kind: meta.kind, dur_us: *us });
+            }
+            *us = -1.0;
+        }
+    }
+}
+
+/// One `(op kind, row bucket)` line of the calibration table.
+#[derive(Debug, Clone)]
+pub struct CalibrationRow {
+    /// Op-kind mnemonic ([`crate::ops::OpKind::name`]).
+    pub kind: String,
+    /// Row-count bucket (next power of two of the step's output rows).
+    pub bucket: usize,
+    /// Exact number of observed executions.
+    pub runs: u64,
+    /// Mean predicted µs per execution ([`crate::npu::cost::op_cost`]).
+    pub predicted_us: f64,
+    /// Mean observed wall µs per execution.
+    pub observed_us: f64,
+    /// Median observed/predicted ratio.
+    pub ratio_p50: f64,
+    /// Tail observed/predicted ratio.
+    pub ratio_p99: f64,
+}
+
+/// The cost model's audit: per-(kind, bucket) predicted vs observed,
+/// merged across shards, plus the fitted per-kind scale factors.
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationReport {
+    /// Table rows, sorted by kind then bucket.
+    pub rows: Vec<CalibrationRow>,
+}
+
+impl CalibrationReport {
+    pub(crate) fn merged(sinks: &[Arc<ProfileSink>]) -> CalibrationReport {
+        // (kind, bucket) → (runs, pred_sum, obs_sum, pooled ratios)
+        let mut merged: std::collections::BTreeMap<
+            (&'static str, usize),
+            (u64, f64, f64, Vec<f64>),
+        > = std::collections::BTreeMap::new();
+        for sink in sinks {
+            let g = sink.inner.lock().unwrap();
+            for slot in &g.slots {
+                if slot.runs == 0 {
+                    continue;
+                }
+                let e = merged
+                    .entry((slot.kind, slot.bucket))
+                    .or_insert((0, 0.0, 0.0, Vec::new()));
+                e.0 += slot.runs;
+                e.1 += slot.predicted_sum;
+                e.2 += slot.observed_sum;
+                e.3.extend_from_slice(slot.ratios.samples());
+            }
+        }
+        let rows = merged
+            .into_iter()
+            .map(|((kind, bucket), (runs, pred, obs, ratios))| {
+                let (p50, p99) = if ratios.is_empty() {
+                    (0.0, 0.0)
+                } else {
+                    let s = Stats::from_samples(&ratios);
+                    (s.p50, s.p99)
+                };
+                CalibrationRow {
+                    kind: kind.to_string(),
+                    bucket,
+                    runs,
+                    predicted_us: pred / runs as f64,
+                    observed_us: obs / runs as f64,
+                    ratio_p50: p50,
+                    ratio_p99: p99,
+                }
+            })
+            .collect();
+        CalibrationReport { rows }
+    }
+
+    /// Fitted per-kind multiplicative corrections: total observed over
+    /// total predicted, bucket-pooled. Feed to
+    /// [`crate::npu::cost::op_cost_scaled`] to close the loop.
+    pub fn scales(&self) -> CostScales {
+        let mut pred: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
+        let mut obs: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
+        for r in &self.rows {
+            *pred.entry(r.kind.as_str()).or_default() += r.predicted_us * r.runs as f64;
+            *obs.entry(r.kind.as_str()).or_default() += r.observed_us * r.runs as f64;
+        }
+        let mut scales = CostScales::default();
+        for (kind, p) in pred {
+            if p > 0.0 {
+                scales.set(kind, obs[kind] / p);
+            }
+        }
+        scales
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::build::{self, GnnDims};
+
+    fn plan() -> ExecPlan {
+        let d = GnnDims::model(32, 80, 16, 4);
+        ExecPlan::compile(&build::gcn_stagr(d, "stagr")).unwrap()
+    }
+
+    #[test]
+    fn profiler_aggregates_into_calibration_rows() {
+        let sink = Arc::new(ProfileSink::new(0));
+        let p = plan();
+        let mut prof = PlanProfiler::new(Arc::clone(&sink), &p);
+        for round in 0..3 {
+            for si in 0..p.steps.len() {
+                prof.observe(si, 10.0 + round as f64);
+            }
+            prof.flush();
+        }
+        let report = CalibrationReport::merged(&[Arc::clone(&sink)]);
+        assert!(!report.rows.is_empty());
+        for row in &report.rows {
+            assert_eq!(row.runs % 3, 0, "{}: every step ran 3 rounds", row.kind);
+            assert!(row.observed_us > 0.0 && row.predicted_us > 0.0);
+            assert!(row.ratio_p50 > 0.0);
+        }
+        // every executed step kind appears in the table
+        let kinds: std::collections::BTreeSet<&str> =
+            report.rows.iter().map(|r| r.kind.as_str()).collect();
+        for step in &p.steps {
+            let name = p.graph.ops[step.op].kind.name();
+            assert!(kinds.contains(name), "missing kind {name}");
+        }
+    }
+
+    #[test]
+    fn unobserved_steps_do_not_pollute_the_sink() {
+        let sink = Arc::new(ProfileSink::new(1));
+        let p = plan();
+        let mut prof = PlanProfiler::new(Arc::clone(&sink), &p);
+        prof.observe(0, 5.0);
+        prof.flush();
+        prof.flush(); // second flush with nothing observed: no-op
+        let report = CalibrationReport::merged(&[sink]);
+        let total_runs: u64 = report.rows.iter().map(|r| r.runs).sum();
+        assert_eq!(total_runs, 1, "only the one observed step counted");
+    }
+
+    #[test]
+    fn scales_fit_observed_over_predicted() {
+        let sink = Arc::new(ProfileSink::new(0));
+        let p = plan();
+        let mut prof = PlanProfiler::new(Arc::clone(&sink), &p);
+        // observe exactly 2× the prediction for every step
+        let preds: Vec<f64> = prof.meta.iter().map(|m| m.predicted_us).collect();
+        for (si, pred) in preds.iter().enumerate() {
+            prof.observe(si, pred * 2.0);
+        }
+        prof.flush();
+        let scales = CalibrationReport::merged(&[sink]).scales();
+        for (kind, f) in scales.iter() {
+            assert!((f - 2.0).abs() < 1e-6, "{kind}: fitted {f}");
+        }
+        assert!((scales.factor("MatMul") - 2.0).abs() < 1e-6);
+        assert_eq!(scales.factor("NoSuchKind"), 1.0, "unknown kinds pass through");
+    }
+
+    #[test]
+    fn last_round_drains_once() {
+        let sink = Arc::new(ProfileSink::new(0));
+        let p = plan();
+        let mut prof = PlanProfiler::new(Arc::clone(&sink), &p);
+        for si in 0..p.steps.len() {
+            prof.observe(si, 1.0);
+        }
+        prof.flush();
+        let obs = sink.drain_last_round();
+        assert_eq!(obs.len(), p.steps.len());
+        assert!(sink.drain_last_round().is_empty(), "drained");
+    }
+}

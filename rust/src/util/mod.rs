@@ -3,6 +3,7 @@
 
 pub mod alloc;
 pub mod propcheck;
+pub mod reservoir;
 pub mod rng;
 pub mod table;
 pub mod timing;

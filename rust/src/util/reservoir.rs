@@ -1,0 +1,194 @@
+//! Bounded reservoir sampling (Algorithm R) for long-lived metric sinks.
+//!
+//! A serving deployment runs indefinitely; the metrics layer used to push
+//! every latency sample into an unbounded `Vec`, which is a slow leak.
+//! [`Reservoir`] keeps a fixed-capacity uniform sample for percentile
+//! estimation while tracking the *exact* count, sum, min and max — so
+//! `n`, `mean`, `min` and `max` in a derived [`Stats`] are exact no
+//! matter how many samples passed through, and only the percentiles
+//! degrade (gracefully, to a uniform subsample) past capacity.
+//!
+//! Determinism: the replacement stream comes from the crate's own
+//! [`Rng`], seeded at construction, so two runs that feed the same
+//! sample sequence produce the same reservoir (tested below and in
+//! `rust/src/metrics/mod.rs`).
+
+use super::timing::Stats;
+use super::Rng;
+
+/// Fixed-capacity uniform sample with exact count/sum/min/max.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    /// A reservoir holding at most `cap` samples (`cap` ≥ 1 enforced),
+    /// with a deterministic replacement stream from `seed`.
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        let cap = cap.max(1);
+        Reservoir {
+            cap,
+            seen: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::with_capacity(cap),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Record one observation (Algorithm R: the t-th item replaces a
+    /// random slot with probability cap/t once the reservoir is full).
+    pub fn record(&mut self, x: f64) {
+        self.seen += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.usize(self.seen);
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Exact number of observations recorded (not the retained count).
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// True if nothing was ever recorded.
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Exact running sum.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact minimum (`+inf` when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact maximum (`-inf` when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// The retained uniform subsample (equals the full stream while
+    /// `seen ≤ cap`).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Summary statistics: exact `n`/`mean`/`min`/`max`, percentiles and
+    /// std estimated from the retained subsample. `None` when empty.
+    pub fn stats(&self) -> Option<Stats> {
+        if self.seen == 0 {
+            return None;
+        }
+        let mut s = Stats::from_samples(&self.samples);
+        s.n = self.seen;
+        s.mean = self.sum / self.seen as f64;
+        s.min = self.min;
+        s.max = self.max;
+        Some(s)
+    }
+}
+
+/// Stats over the union of several reservoirs (the `Metrics::merged`
+/// path): exact totals are summed, percentiles come from the pooled
+/// subsamples — consistent with per-sink [`Reservoir::stats`] when every
+/// sink is below capacity.
+pub fn merged_stats(parts: &[&Reservoir]) -> Option<Stats> {
+    let seen: usize = parts.iter().map(|r| r.seen()).sum();
+    if seen == 0 {
+        return None;
+    }
+    let pooled: Vec<f64> = parts
+        .iter()
+        .flat_map(|r| r.samples().iter().copied())
+        .collect();
+    let mut s = Stats::from_samples(&pooled);
+    s.n = seen;
+    s.mean = parts.iter().map(|r| r.sum()).sum::<f64>() / seen as f64;
+    s.min = parts.iter().map(|r| r.min()).fold(f64::INFINITY, f64::min);
+    s.max = parts.iter().map(|r| r.max()).fold(f64::NEG_INFINITY, f64::max);
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_capacity_is_exact() {
+        let mut r = Reservoir::new(100, 7);
+        for i in 1..=50 {
+            r.record(i as f64);
+        }
+        let s = r.stats().unwrap();
+        assert_eq!(s.n, 50);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 50.0);
+        assert!((s.mean - 25.5).abs() < 1e-9);
+        assert_eq!(r.samples().len(), 50);
+    }
+
+    #[test]
+    fn above_capacity_bounds_storage_and_keeps_exact_aggregates() {
+        let mut r = Reservoir::new(64, 7);
+        for i in 1..=10_000 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.samples().len(), 64, "storage bounded");
+        let s = r.stats().unwrap();
+        assert_eq!(s.n, 10_000, "count exact");
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10_000.0);
+        assert!((s.mean - 5000.5).abs() < 1e-9, "mean exact: {}", s.mean);
+        // uniform subsample: the median estimate should land in the
+        // middle half of the range with overwhelming probability
+        assert!(s.p50 > 2_500.0 && s.p50 < 7_500.0, "p50 {}", s.p50);
+    }
+
+    #[test]
+    fn deterministic_under_same_seed() {
+        let feed = |seed| {
+            let mut r = Reservoir::new(16, seed);
+            for i in 0..1000 {
+                r.record((i * 37 % 101) as f64);
+            }
+            r.samples().to_vec()
+        };
+        assert_eq!(feed(42), feed(42));
+        assert_ne!(feed(42), feed(43), "different seeds diverge");
+    }
+
+    #[test]
+    fn merged_stats_pools_exactly_below_capacity() {
+        let mut a = Reservoir::new(100, 1);
+        let mut b = Reservoir::new(100, 2);
+        for i in 1..=10 {
+            a.record(i as f64);
+            b.record((i + 10) as f64);
+        }
+        let m = merged_stats(&[&a, &b]).unwrap();
+        assert_eq!(m.n, 20);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 20.0);
+        assert!((m.mean - 10.5).abs() < 1e-9);
+        assert!(merged_stats(&[]).is_none());
+    }
+}

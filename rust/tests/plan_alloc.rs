@@ -4,7 +4,11 @@
 //! SINGLE test function, so no unrelated concurrent test can pollute the
 //! counter. The claim under test: after warmup (arena slabs allocated,
 //! INT8 weight caches populated, scratch capacity grown),
-//! `PlanInstance::run` performs **zero** heap allocations.
+//! `PlanInstance::run` performs **zero** heap allocations — including
+//! with **disabled telemetry** in the loop: a disabled recorder's
+//! `now_us`/`record`/`sampled` calls and a `None` plan profiler must add
+//! no clock reads that allocate, no locks, and no heap traffic, which is
+//! the overhead contract `[telemetry] enabled = false` advertises.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -47,6 +51,11 @@ fn bindings_for(d: GnnDims, quant: bool, seed: u64) -> Bindings {
 #[test]
 fn steady_state_run_allocates_nothing() {
     let d = GnnDims::model(64, 200, 32, 5);
+    // disabled-telemetry handles, created BEFORE counting starts: the
+    // hub itself allocates (Arc), but every use below must not
+    let telemetry = grannite::telemetry::Telemetry::disabled();
+    let recorder = telemetry.recorder(0);
+    assert!(!recorder.enabled());
     for (label, graph, quant) in [
         ("gcn_stagr", build::gcn_stagr(d, "stagr"), false),
         ("gcn_quant", build::gcn_quant(d, QuantScales::default()), true),
@@ -55,20 +64,38 @@ fn steady_state_run_allocates_nothing() {
         let plan = Arc::new(ExecPlan::compile(&graph).unwrap());
         // serial pool: the parallel pool's dispatch is also alloc-free,
         // but worker threads would race the global counter
-        let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::serial()));
+        let mut inst = PlanInstance::new(Arc::clone(&plan), Arc::new(WorkerPool::serial()));
+        // a disabled hub hands out no profiler, so attaching is the
+        // engine's no-telemetry configuration (profiler = None)
+        let profiler = telemetry.plan_profiler(0, &plan);
+        assert!(profiler.is_none(), "disabled hub must not profile");
+        inst.attach_profiler(profiler);
         // warmup: arena already sized; INT8 conversion + scratch growth
         inst.run(&bindings).unwrap();
         inst.run(&bindings).unwrap();
         let reference = inst.output_mat(0).unwrap();
 
         let before = allocation_count();
-        for _ in 0..10 {
+        for i in 0..10u64 {
+            // the disabled-recorder calls the shard hot loop makes per
+            // round, inside the counted region: all branch-only no-ops
+            let t = recorder.now_us();
+            let _ = recorder.sampled(i);
+            recorder.record(
+                i,
+                grannite::telemetry::SpanKind::EngineRound,
+                "round",
+                t,
+                0.0,
+                0,
+            );
             inst.run(&bindings).unwrap();
         }
         let allocs = allocation_count() - before;
         assert_eq!(
             allocs, 0,
-            "{label}: {allocs} allocations across 10 steady-state runs"
+            "{label}: {allocs} allocations across 10 steady-state runs \
+             (disabled telemetry must add none)"
         );
         assert_eq!(inst.output_mat(0).unwrap(), reference, "{label} drifted");
     }

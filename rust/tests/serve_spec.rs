@@ -12,7 +12,8 @@ use grannite::config::parse::Value;
 use grannite::graph::datasets::{synthesize, Dataset};
 use grannite::serve::{
     DataSource, Deployment, DeploymentSpec, EngineFactory, EngineInit,
-    EngineRegistry, EngineSpec, LaunchContext, Serving, ShardFactory, Topology,
+    EngineRegistry, EngineSpec, LaunchContext, Serving, ShardFactory,
+    TelemetrySpec, Topology,
 };
 use grannite::server::{InferenceEngine, QueryResponse, Update};
 use grannite::tensor::Mat;
@@ -56,6 +57,11 @@ fn full_spec_round_trips_through_toml() {
     spec.batch.max_batch = 32;
     spec.batch.max_wait_us = 750;
     spec.admission.max_pending = 9;
+    spec.telemetry = TelemetrySpec {
+        enabled: true,
+        ring_capacity: 512,
+        sample_rate: 0.25,
+    };
 
     let text = spec.to_toml();
     let parsed = DeploymentSpec::parse_toml(&text).unwrap();
@@ -97,6 +103,26 @@ fn unknown_engine_lists_registered_engines() {
     assert!(err.contains("warp-drive"), "{err}");
     for known in ["coordinator", "incremental", "local", "plan"] {
         assert!(err.contains(known), "missing {known} in: {err}");
+    }
+}
+
+#[test]
+fn zero_telemetry_ring_is_rejected_with_guidance() {
+    let mut s = spec("local", 1);
+    s.telemetry.enabled = true;
+    s.telemetry.ring_capacity = 0;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("ring_capacity"), "{err}");
+    assert!(err.contains("enabled = false"), "{err}");
+}
+
+#[test]
+fn out_of_range_sample_rate_is_rejected() {
+    for bad in [0.0, -0.5, 1.5] {
+        let mut s = spec("local", 1);
+        s.telemetry.sample_rate = bad;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("sample_rate"), "rate {bad}: {err}");
     }
 }
 
