@@ -1,0 +1,121 @@
+//! Autotuner gate: `Deployment::autotune` against the default hand
+//! mapping (`DeploymentSpec::default()` — FP32 plan engine, 1 shard) on
+//! the hotpath serving workload (a GrAd churn burst, then a query
+//! storm). The headline number is
+//! `autotuned_vs_default_speedup = tuned q/s ÷ default q/s`; CI gates it
+//! at ≥ 0.95 — the tuner may tie the default (the default mapping is in
+//! its search space) but must never pick something materially worse.
+//!
+//! ```sh
+//! cargo bench --bench autotune                     # full sizes
+//! cargo bench --bench autotune -- --quick          # CI smoke sizes
+//! cargo bench --bench autotune -- --json out.json  # machine-readable
+//! ```
+
+use std::time::Instant;
+
+use grannite::bench::banner;
+use grannite::cli::Args;
+use grannite::graph::datasets::synthesize;
+use grannite::serve::{DataSource, Deployment, DeploymentSpec, Serving};
+use grannite::server::Update;
+use grannite::util::{json_escape, Rng, Table};
+
+struct Sizes {
+    nodes: usize,
+    edges: usize,
+    queries: usize,
+    churn: usize,
+    probe_budget: usize,
+}
+
+/// Churn burst, then a query storm; returns measured queries/second
+/// over the storm (the same shape the tuner's live probes measure).
+fn drive(serving: &dyn Serving, sz: &Sizes) -> anyhow::Result<f64> {
+    let mut rng = Rng::new(17);
+    for _ in 0..sz.churn {
+        let u = rng.usize(sz.nodes);
+        let v = (u + 1 + rng.usize(sz.nodes - 1)) % sz.nodes;
+        serving.update(Update::AddEdge(u.min(v), u.max(v)))?;
+    }
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..sz.queries)
+        .map(|_| serving.query(Some(rng.usize(sz.nodes))))
+        .collect::<anyhow::Result<_>>()?;
+    for rx in pending {
+        rx.recv()?.map_err(anyhow::Error::msg)?;
+    }
+    Ok(sz.queries as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.has("quick");
+    let json_path = args.options.get("json").cloned();
+    banner("autotune vs default mapping (hotpath serving workload)");
+
+    let sz = if quick {
+        Sizes { nodes: 256, edges: 1024, queries: 300, churn: 64, probe_budget: 32 }
+    } else {
+        Sizes { nodes: 1024, edges: 4096, queries: 1200, churn: 200, probe_budget: 128 }
+    };
+    let ds = synthesize("autotune-bench", sz.nodes, sz.edges, 6, 64, 29);
+    let data = DataSource::Dataset(ds.clone());
+
+    // the default hand mapping: what a user gets without tuning
+    let mut base = DeploymentSpec::default();
+    base.tuning.objective = "throughput".to_string();
+    base.tuning.probe_budget = sz.probe_budget;
+
+    let default_serving = Deployment::launch(&base, &data)?;
+    let default_qps = drive(default_serving.as_ref(), &sz)?;
+    default_serving.shutdown()?;
+
+    let t0 = Instant::now();
+    let tuned = Deployment::autotune(&base, &data)?;
+    let tune_secs = t0.elapsed().as_secs_f64();
+    println!("\n{}", tuned.report.render());
+
+    let tuned_serving = tuned.launch(&data)?;
+    let tuned_qps = drive(tuned_serving.as_ref(), &sz)?;
+    tuned_serving.shutdown()?;
+
+    let speedup = tuned_qps / default_qps.max(1e-9);
+    let winner = tuned.report.rows[0].label.clone();
+
+    let mut t = Table::new(
+        "autotuned vs default mapping".to_string(),
+        &["mapping", "measured q/s", "speedup"],
+    );
+    t.row(&["default (plan ×1)".to_string(), format!("{default_qps:.0}"),
+            "1.00x".to_string()]);
+    t.row(&[winner.clone(), format!("{tuned_qps:.0}"), format!("{speedup:.2}x")]);
+    t.print();
+    println!(
+        "tuning pass: {:.2}s ({} candidates scored, {} pruned, cost model {})",
+        tune_secs,
+        tuned.report.rows.len(),
+        tuned.report.pruned.len(),
+        if tuned.report.calibrated { "calibrated" } else { "unit scales" },
+    );
+
+    if let Some(path) = json_path {
+        let out = format!(
+            "{{\n  \"bench\": \"autotune\",\n  \"quick\": {quick},\n  \
+             \"nodes\": {}, \"queries\": {},\n  \
+             \"default_qps\": {default_qps:.2},\n  \
+             \"tuned_qps\": {tuned_qps:.2},\n  \
+             \"autotuned_vs_default_speedup\": {speedup:.4},\n  \
+             \"winner\": \"{}\",\n  \
+             \"candidates\": {},\n  \"calibrated\": {}\n}}\n",
+            sz.nodes,
+            sz.queries,
+            json_escape(&winner),
+            tuned.report.rows.len(),
+            tuned.report.calibrated,
+        );
+        std::fs::write(&path, out)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

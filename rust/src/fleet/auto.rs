@@ -1,0 +1,459 @@
+//! The runtime-adaptive `auto` engine: one shard engine that carries
+//! **both** offline strategies — the full planned recompute
+//! ([`PlanEngine`]) and the delta-driven frontier path
+//! ([`IncrementalEngine`]) — and switches between them from observed
+//! telemetry instead of a launch-time guess.
+//!
+//! The paper's own results motivate this: which Step-2 technique wins
+//! flips with the workload. Low churn makes the incremental frontier a
+//! tiny fraction of the graph (recompute `O(|dirty|)` instead of
+//! `O(|V|)`); churn-dominated streams pay the frontier bookkeeping for
+//! nothing and want the straight-line plan; and a graph whose live
+//! density crosses the sparse/dense line stops benefiting from frontier
+//! gathers entirely. The signals:
+//!
+//! - **churn rate** — GrAd updates per inference round, smoothed with an
+//!   EWMA so one quiet round inside a burst doesn't read as a regime
+//!   change;
+//! - **live density** — [`PlanEngine::live_density`], the same
+//!   `(2·edges + nodes)/capacity²` the plan builders resolve
+//!   [`Aggregation::Auto`](crate::ops::build::Aggregation) against;
+//! - **queue depth** — the shard worker's backlog, delivered through
+//!   [`InferenceEngine::note_queue_depth`].
+//!
+//! Switching is damped twice so the engine never flaps: a **hysteresis
+//! band** (`hysteresis_low` ≤ dead band ≤ `hysteresis_high`, from the
+//! spec's `[tuning]` section) and a **cooldown** of at least
+//! `cooldown_rounds` rounds between switches. A deep queue waives the
+//! cooldown — a backlog is proof the current strategy is not keeping up,
+//! and waiting out the cooldown just grows it.
+//!
+//! Both inner engines see every update (applies are cheap mask/frontier
+//! bookkeeping; inference is what costs), so a switch needs no state
+//! migration: the plan engine rebinds its mask on the next round, the
+//! incremental engine's accumulated frontier is exactly the recompute it
+//! owes. Both synthesize the same deterministic weights
+//! ([`synthesize_weights`](crate::fleet::engine::synthesize_weights)),
+//! so answers are strategy-independent — property-tested at every switch
+//! point in this module's tests, and end to end (serving topologies,
+//! metrics gauges) in `rust/tests/auto_tune.rs`.
+
+use anyhow::Result;
+
+use crate::incremental::IncrementalEngine;
+use crate::metrics::RoundStats;
+use crate::ops::build::SPMM_DENSITY_THRESHOLD;
+use crate::server::{InferenceEngine, Update};
+use crate::tensor::Mat;
+
+use super::engine::PlanEngine;
+
+/// EWMA weight of the newest round's mutation count (0.5 halves the
+/// influence of each older round — bursts register within ~2 rounds,
+/// single outlier rounds don't).
+const CHURN_EWMA_ALPHA: f64 = 0.5;
+
+/// Which inner strategy the `auto` engine is executing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Full planned recompute every round ([`PlanEngine`]).
+    Plan,
+    /// Delta-driven frontier recompute ([`IncrementalEngine`]).
+    Incremental,
+}
+
+impl Strategy {
+    /// The [`RoundStats::active_strategy`] gauge code.
+    pub fn code(self) -> u8 {
+        match self {
+            Strategy::Plan => RoundStats::STRATEGY_PLAN,
+            Strategy::Incremental => RoundStats::STRATEGY_INCREMENTAL,
+        }
+    }
+
+    fn other(self) -> Strategy {
+        match self {
+            Strategy::Plan => Strategy::Incremental,
+            Strategy::Incremental => Strategy::Plan,
+        }
+    }
+}
+
+/// Switching policy for the [`AutoEngine`] (lowered from the deployment
+/// spec's `[tuning]` section by the `auto` engine factory).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoConfig {
+    /// Smoothed mutations-per-round at or below which the incremental
+    /// strategy is preferred.
+    pub hysteresis_low: f64,
+    /// Smoothed mutations-per-round at or above which the planned full
+    /// recompute is preferred; the gap to `hysteresis_low` is the dead
+    /// band where the current strategy is kept.
+    pub hysteresis_high: f64,
+    /// Minimum inference rounds between two switches.
+    pub cooldown_rounds: usize,
+    /// Queue backlog at which the cooldown is waived (the shard is
+    /// demonstrably behind; react now).
+    pub queue_pressure: usize,
+}
+
+impl Default for AutoConfig {
+    fn default() -> Self {
+        let t = crate::serve::spec::TuningSpec::default();
+        AutoConfig {
+            hysteresis_low: t.hysteresis_low,
+            hysteresis_high: t.hysteresis_high,
+            cooldown_rounds: t.cooldown_rounds,
+            queue_pressure: 8,
+        }
+    }
+}
+
+impl AutoConfig {
+    /// The switching policy a `[tuning]` section describes.
+    pub fn from_tuning(t: &crate::serve::spec::TuningSpec) -> AutoConfig {
+        AutoConfig {
+            hysteresis_low: t.hysteresis_low,
+            hysteresis_high: t.hysteresis_high,
+            cooldown_rounds: t.cooldown_rounds,
+            ..AutoConfig::default()
+        }
+    }
+}
+
+/// The adaptive engine. See the module docs for the switching model.
+pub struct AutoEngine {
+    plan: PlanEngine,
+    incremental: IncrementalEngine,
+    cfg: AutoConfig,
+    active: Strategy,
+    /// GrAd updates applied since the last inference round.
+    updates_since_round: usize,
+    /// EWMA of mutations per round (the smoothed churn signal).
+    churn_ewma: f64,
+    rounds_since_switch: usize,
+    queue_depth: usize,
+    /// Switches performed since the last `round_stats` drain.
+    pending_switches: usize,
+    total_switches: usize,
+    last_stats: Option<RoundStats>,
+}
+
+impl AutoEngine {
+    /// Wrap two pre-built inner engines (the factory path: the plan is
+    /// compiled once per launch and shared across shards).
+    pub fn from_engines(
+        plan: PlanEngine,
+        incremental: IncrementalEngine,
+        cfg: AutoConfig,
+    ) -> AutoEngine {
+        AutoEngine {
+            plan,
+            incremental,
+            cfg,
+            // churn starts at 0 — below the band — so serving opens on
+            // the incremental path and earns the plan path with churn
+            active: Strategy::Incremental,
+            updates_since_round: 0,
+            churn_ewma: 0.0,
+            // no switch debt at launch: a burst in the very first rounds
+            // may switch immediately
+            rounds_since_switch: cfg.cooldown_rounds,
+            queue_depth: 0,
+            pending_switches: 0,
+            total_switches: 0,
+            last_stats: None,
+        }
+    }
+
+    /// Shard engine over `ds` at `capacity`, answering for `owned` only;
+    /// compiles its own plan (fleets share one compile through the
+    /// registry's `auto` factory instead).
+    pub fn shard(
+        ds: &crate::graph::datasets::Dataset,
+        capacity: usize,
+        owned: std::ops::Range<usize>,
+        pool: std::sync::Arc<crate::engine::WorkerPool>,
+        inc_cfg: crate::incremental::IncrementalConfig,
+        cfg: AutoConfig,
+    ) -> Result<AutoEngine> {
+        let plan =
+            PlanEngine::shard(ds, capacity, owned.clone(), std::sync::Arc::clone(&pool))?;
+        let incremental = IncrementalEngine::shard(ds, capacity, owned, pool, inc_cfg)?;
+        Ok(AutoEngine::from_engines(plan, incremental, cfg))
+    }
+
+    /// Engine answering for every node (the single-leader server).
+    pub fn full(
+        ds: &crate::graph::datasets::Dataset,
+        capacity: usize,
+        pool: std::sync::Arc<crate::engine::WorkerPool>,
+        inc_cfg: crate::incremental::IncrementalConfig,
+        cfg: AutoConfig,
+    ) -> Result<AutoEngine> {
+        let capacity = capacity.max(ds.num_nodes());
+        AutoEngine::shard(ds, capacity, 0..capacity, pool, inc_cfg, cfg)
+    }
+
+    /// The strategy the next round will execute (before any pending
+    /// re-decision).
+    pub fn active_strategy(&self) -> Strategy {
+        self.active
+    }
+
+    /// Strategy switches performed over this engine's lifetime.
+    pub fn total_switches(&self) -> usize {
+        self.total_switches
+    }
+
+    /// The smoothed churn signal (mutations per round, EWMA).
+    pub fn churn_signal(&self) -> f64 {
+        self.churn_ewma
+    }
+
+    /// Re-decide the active strategy from the smoothed churn, the live
+    /// density, and the queue backlog. Called at the top of every
+    /// inference round.
+    fn decide(&mut self) {
+        let churn = self.updates_since_round as f64;
+        self.churn_ewma =
+            CHURN_EWMA_ALPHA * churn + (1.0 - CHURN_EWMA_ALPHA) * self.churn_ewma;
+        // past the sparse/dense crossover the frontier covers most of the
+        // graph every round — delta bookkeeping cannot pay for itself,
+        // whatever the churn rate says
+        let want = if self.plan.live_density() >= SPMM_DENSITY_THRESHOLD {
+            Strategy::Plan
+        } else if self.churn_ewma >= self.cfg.hysteresis_high {
+            Strategy::Plan
+        } else if self.churn_ewma <= self.cfg.hysteresis_low {
+            Strategy::Incremental
+        } else {
+            self.active // dead band: keep what runs
+        };
+        let cooldown_over = self.rounds_since_switch >= self.cfg.cooldown_rounds
+            || self.queue_depth >= self.cfg.queue_pressure;
+        if want != self.active && cooldown_over {
+            debug_assert_eq!(want, self.active.other());
+            self.active = want;
+            self.pending_switches += 1;
+            self.total_switches += 1;
+            self.rounds_since_switch = 0;
+        }
+    }
+}
+
+impl InferenceEngine for AutoEngine {
+    /// Both inner engines see every update, so a later switch needs no
+    /// state migration. Both validate against the same
+    /// [`crate::coordinator::ModelState`] rules at the same capacity, so
+    /// they accept and reject identically; the planned engine applies
+    /// first and an error there leaves the incremental engine untouched.
+    fn apply(&mut self, update: &Update) -> Result<u64> {
+        let v = self.plan.apply(update)?;
+        self.incremental.apply(update)?;
+        self.updates_since_round += 1;
+        Ok(v)
+    }
+
+    fn infer(&mut self) -> Result<Mat> {
+        self.decide();
+        self.updates_since_round = 0;
+        let out = match self.active {
+            Strategy::Plan => self.plan.infer()?,
+            Strategy::Incremental => self.incremental.infer()?,
+        };
+        self.rounds_since_switch = self.rounds_since_switch.saturating_add(1);
+        // the inactive engine's stale accounting must not leak into a
+        // later round's stats when strategies swap
+        let inner = match self.active {
+            Strategy::Plan => {
+                let _ = self.incremental.round_stats();
+                self.plan.round_stats()
+            }
+            Strategy::Incremental => {
+                let _ = self.plan.round_stats();
+                self.incremental.round_stats()
+            }
+        };
+        let mut stats = inner.unwrap_or_default();
+        stats.engine_switches = std::mem::take(&mut self.pending_switches);
+        stats.active_strategy = self.active.code();
+        self.last_stats = Some(stats);
+        Ok(out)
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.plan.num_nodes()
+    }
+
+    fn halo_imports(&self) -> Option<usize> {
+        match self.active {
+            Strategy::Plan => self.plan.halo_imports(),
+            Strategy::Incremental => self.incremental.halo_imports(),
+        }
+    }
+
+    fn round_stats(&mut self) -> Option<RoundStats> {
+        self.last_stats.take()
+    }
+
+    fn attach_telemetry(
+        &mut self,
+        telemetry: &std::sync::Arc<crate::telemetry::Telemetry>,
+        shard: usize,
+    ) {
+        // only the active strategy executes a round, so profiling both
+        // never double-counts a step
+        self.plan.attach_telemetry(telemetry, shard);
+        self.incremental.attach_telemetry(telemetry, shard);
+    }
+
+    fn note_queue_depth(&mut self, pending: usize) {
+        self.queue_depth = pending;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::WorkerPool;
+    use crate::graph::datasets::synthesize;
+    use crate::incremental::IncrementalConfig;
+    use std::sync::Arc;
+
+    fn engine(cfg: AutoConfig) -> AutoEngine {
+        let ds = synthesize("auto-engine", 40, 90, 4, 12, 7);
+        AutoEngine::full(
+            &ds,
+            48,
+            Arc::new(WorkerPool::serial()),
+            IncrementalConfig::default(),
+            cfg,
+        )
+        .unwrap()
+    }
+
+    fn tight() -> AutoConfig {
+        AutoConfig {
+            hysteresis_low: 1.0,
+            hysteresis_high: 4.0,
+            cooldown_rounds: 2,
+            queue_pressure: 8,
+        }
+    }
+
+    #[test]
+    fn opens_incremental_and_switches_under_burst() {
+        let mut e = engine(tight());
+        assert_eq!(e.active_strategy(), Strategy::Incremental);
+        let _ = e.infer().unwrap();
+        // a churn burst: 10 mutations before the next round
+        for i in 0..10 {
+            e.apply(&Update::AddEdge(i % 40, (i * 7 + 1) % 40)).unwrap();
+        }
+        let _ = e.infer().unwrap();
+        assert_eq!(e.active_strategy(), Strategy::Plan, "burst must switch");
+        let rs = InferenceEngine::round_stats(&mut e).unwrap();
+        assert_eq!(rs.engine_switches, 1);
+        assert_eq!(rs.active_strategy, RoundStats::STRATEGY_PLAN);
+        assert_eq!(e.total_switches(), 1);
+    }
+
+    #[test]
+    fn cooldown_and_dead_band_prevent_flapping() {
+        let mut e = engine(tight());
+        for i in 0..10 {
+            e.apply(&Update::AddEdge(i % 40, (i * 7 + 1) % 40)).unwrap();
+        }
+        let _ = e.infer().unwrap();
+        assert_eq!(e.active_strategy(), Strategy::Plan);
+        // quiet rounds: the EWMA decays (5 → 2.5 → …) through the dead
+        // band; cooldown holds the first eligible switch back, and no
+        // round may ever switch twice
+        let mut switches_seen = 0;
+        for _ in 0..6 {
+            let _ = e.infer().unwrap();
+            let rs = InferenceEngine::round_stats(&mut e).unwrap();
+            assert!(rs.engine_switches <= 1, "one switch per round at most");
+            switches_seen += rs.engine_switches;
+        }
+        assert_eq!(e.active_strategy(), Strategy::Incremental);
+        assert_eq!(switches_seen, 1, "decay causes exactly one switch back");
+    }
+
+    #[test]
+    fn queue_pressure_waives_the_cooldown() {
+        let cfg = AutoConfig { cooldown_rounds: 1000, ..tight() };
+        let mut e = engine(cfg);
+        let _ = e.infer().unwrap();
+        // consume the launch grace so the giant cooldown now binds
+        for i in 0..10 {
+            e.apply(&Update::AddEdge(i % 40, (i * 7 + 1) % 40)).unwrap();
+        }
+        let _ = e.infer().unwrap();
+        assert_eq!(e.active_strategy(), Strategy::Plan);
+        // churn stops; without pressure the 1000-round cooldown pins plan
+        for _ in 0..5 {
+            let _ = e.infer().unwrap();
+        }
+        assert_eq!(e.active_strategy(), Strategy::Plan, "cooldown holds");
+        // a deep backlog waives it
+        e.note_queue_depth(9);
+        let _ = e.infer().unwrap();
+        assert_eq!(e.active_strategy(), Strategy::Incremental);
+    }
+
+    #[test]
+    fn answers_match_both_inner_strategies() {
+        let ds = synthesize("auto-engine", 40, 90, 4, 12, 7);
+        let pool = Arc::new(WorkerPool::serial());
+        let mut auto_eng = engine(tight());
+        let mut plan = PlanEngine::full(&ds, 48, Arc::clone(&pool)).unwrap();
+        let script: Vec<Update> = (0..33)
+            .map(|i| Update::AddEdge((i * 3) % 40, (i * 11 + 2) % 40))
+            .collect();
+        for (r, u) in script.iter().enumerate() {
+            auto_eng.apply(u).unwrap();
+            plan.apply(u).unwrap();
+            // burst shape: rounds 0-7 one mutation each (the EWMA settles
+            // at ~1, incremental), then chunks of 8 mutations per round
+            // (EWMA 0.5·8 + 0.5·1 ≈ 4.5 crosses hysteresis_high = 4 on
+            // the first burst round) — both regimes and the switch point
+            // in one script
+            if r < 8 || r % 8 == 0 {
+                let a = auto_eng.infer().unwrap();
+                let b = plan.infer().unwrap();
+                assert_eq!(a.shape(), b.shape());
+                for i in 0..a.rows {
+                    for j in 0..a.cols {
+                        let d = (a[(i, j)] - b[(i, j)]).abs();
+                        assert!(d < 1e-4, "round {r} ({i},{j}) drift {d}");
+                    }
+                }
+            }
+        }
+        assert!(auto_eng.total_switches() > 0, "script must cross the band");
+    }
+
+    #[test]
+    fn high_density_forces_the_plan_path() {
+        // a tiny capacity makes the padded density blow past the
+        // sparse/dense crossover once edges pile in
+        let ds = synthesize("auto-dense", 12, 50, 3, 6, 5);
+        let mut e = AutoEngine::full(
+            &ds,
+            12,
+            Arc::new(WorkerPool::serial()),
+            IncrementalConfig::default(),
+            tight(),
+        )
+        .unwrap();
+        assert!(e.plan.live_density() >= SPMM_DENSITY_THRESHOLD);
+        let _ = e.infer().unwrap();
+        assert_eq!(
+            e.active_strategy(),
+            Strategy::Plan,
+            "past the crossover churn is irrelevant"
+        );
+    }
+}

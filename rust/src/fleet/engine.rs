@@ -227,6 +227,18 @@ impl PlanEngine {
         self.sparse
     }
 
+    /// Live padded-mask density of the GrAd graph this engine serves —
+    /// the same `(2·edges + nodes) / capacity²` formula the plan
+    /// builders resolve [`Aggregation::Auto`] against, but computed from
+    /// the *current* counters so it tracks churn. The adaptive `auto`
+    /// engine reads it as a switching signal.
+    pub fn live_density(&self) -> f64 {
+        let cap = (self.state.capacity as f64).max(1.0);
+        (2.0 * self.state.num_edges() as f64
+            + self.state.num_active_nodes() as f64)
+            / (cap * cap)
+    }
+
     /// Refresh the CacheG-cached mask/feature bindings if GrAd moved,
     /// and account the mask bytes the re-fetch shipped: CSR arrays on
     /// the sparse path; GraSp (ZVC) over the SymG-packed upper triangle

@@ -34,6 +34,7 @@
 //! `benches/fleet_scaling.rs` sweep this tradeoff 1→8 shards.
 
 pub mod admission;
+pub mod auto;
 pub mod engine;
 pub mod halo;
 pub mod placement;
@@ -41,6 +42,7 @@ pub mod router;
 pub mod shard;
 
 pub use admission::{Admission, AdmissionConfig};
+pub use auto::{AutoConfig, AutoEngine, Strategy};
 pub use engine::{synthesize_weights, PlanEngine};
 pub use halo::{build_halos, link_cost_us, HaloSpec};
 pub use placement::{per_node_us, plan, FleetPlan, ShardSpec, Workload};
@@ -174,54 +176,6 @@ impl Fleet {
             cfg.telemetry.recorder(crate::telemetry::ROUTER_SHARD),
         );
         Fleet { plan, router, telemetry: Arc::clone(&cfg.telemetry) }
-    }
-
-    /// Deprecated shim: a fleet of [`LocalEngine`]s. Construct through
-    /// [`crate::serve::Deployment::launch`] with `[engine] name =
-    /// "local"` instead (see the README migration table).
-    #[doc(hidden)]
-    #[deprecated(note = "use serve::Deployment::launch with engine \"local\"")]
-    pub fn spawn_local(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
-                       -> Result<Fleet> {
-        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
-                                   ds.num_classes(), cfg)?;
-        let make = crate::serve::registry::local_shards(ds, capacity);
-        Ok(Fleet::spawn(plan, &ds.graph, ds.num_features(), cfg, make))
-    }
-
-    /// Deprecated shim: a fleet of [`PlanEngine`]s sharing one compiled
-    /// plan. Construct through [`crate::serve::Deployment::launch`] with
-    /// `[engine] name = "plan"` instead (see the README migration
-    /// table).
-    #[doc(hidden)]
-    #[deprecated(note = "use serve::Deployment::launch with engine \"plan\"")]
-    pub fn spawn_planned(ds: &Dataset, capacity: usize, cfg: &FleetConfig)
-                         -> Result<Fleet> {
-        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
-                                   ds.num_classes(), cfg)?;
-        let make = crate::serve::registry::plan_shards(
-            ds, capacity, cfg.aggregation, false, false,
-        )?;
-        Ok(Fleet::spawn(plan, &ds.graph, ds.num_features(), cfg, make))
-    }
-
-    /// Deprecated shim: a fleet of
-    /// [`crate::incremental::IncrementalEngine`]s. Construct through
-    /// [`crate::serve::Deployment::launch`] with `[engine] name =
-    /// "incremental"` instead (see the README migration table).
-    #[doc(hidden)]
-    #[deprecated(note = "use serve::Deployment::launch with engine \"incremental\"")]
-    pub fn spawn_incremental(
-        ds: &Dataset,
-        capacity: usize,
-        cfg: &FleetConfig,
-        inc: crate::incremental::IncrementalConfig,
-    ) -> Result<Fleet> {
-        let plan = Fleet::plan_for(&ds.graph, capacity, ds.num_features(),
-                                   ds.num_classes(), cfg)?;
-        let make =
-            crate::serve::registry::incremental_shards(ds, capacity, inc, false);
-        Ok(Fleet::spawn(plan, &ds.graph, ds.num_features(), cfg, make))
     }
 
     pub fn update(&self, u: Update) -> Result<()> {

@@ -354,6 +354,9 @@ fn shard_loop<E: InferenceEngine>(
                     );
                 }
             }
+            // the queue depth *behind* this batch is the backlog signal
+            // adaptive engines fold into their strategy choice
+            engine.note_queue_depth(batcher.pending());
             let t0 = Instant::now();
             let t0_us = recorder.now_us();
             let result = engine.infer();

@@ -597,6 +597,7 @@ impl IncrementalEngine {
                 cache_misses: 0,
                 dma_bytes_dense,
                 dma_bytes_shipped,
+                ..Default::default()
             },
             RoundMode::Full | RoundMode::Incremental => {
                 let k = self.num_layers();
@@ -620,6 +621,7 @@ impl IncrementalEngine {
                     cache_misses: misses,
                     dma_bytes_dense,
                     dma_bytes_shipped,
+                    ..Default::default()
                 }
             }
         }

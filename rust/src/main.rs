@@ -9,6 +9,7 @@
 //! grannite serve     [--spec file.toml …]      # dynamic KG serving demo
 //! grannite fleet     [--spec file.toml …]      # sharded serving demo
 //! grannite trace     [--spec file.toml …]      # telemetry: traces + calibration
+//! grannite tune      [--spec file.toml …]      # spec-space autotuner report
 //! grannite artifacts                           # list loaded artifacts
 //! ```
 //!
@@ -159,6 +160,16 @@ fn main() -> Result<()> {
             let ds = datasets::synthesize("trace", nodes, edges, 6, 64, 42);
             trace_demo(&spec, &ds, events, query_ratio, top, raw)?;
         }
+        Some("tune") => {
+            // spec-space autotuner: the spec is the *base point* of the
+            // search (capacity, roster, batching, [tuning] knobs); the
+            // tuner varies engine × aggregation × quant × shards around it
+            let spec = deployment_spec(&args, 1, "plan")?;
+            let nodes = args.usize_opt("nodes", 256)?;
+            let edges = args.usize_opt("edges", 1024)?;
+            let ds = datasets::synthesize("tune", nodes, edges, 6, 64, 42);
+            tune_demo(&spec, &ds)?;
+        }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
     }
@@ -187,11 +198,17 @@ subcommands:
                      calibration table, and validated Prometheus +
                      JSON-lines exporter output (--top N, --raw dumps
                      the exporter text)
+  tune               spec-space autotuner: enumerate engine × aggregation
+                     × quant × shards around the base spec, score with
+                     the calibrated cost model, confirm top-K with live
+                     probes, print the ranked report and the winning spec
+                     ([tuning] sets objective/probe_budget/top_k;
+                     --nodes --edges size the synthetic graph)
 
 both serving subcommands construct through serve::Deployment::launch from
 one deployment spec:
   --spec file.toml   load a DeploymentSpec (see examples/specs/*.toml)
-  --engine NAME      override [engine] name (local|plan|incremental|
+  --engine NAME      override [engine] name (local|plan|incremental|auto|
                      coordinator, or anything registered)
   --shards N         override [topology] shards (1 = single leader)
   --devices a,b,…    override [topology] devices (series2|series1|gpu|cpu)
@@ -428,6 +445,46 @@ fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
         );
     }
     println!("applied version vector: {:?}", serving.sync()?);
+    serving.shutdown()?;
+    Ok(())
+}
+
+/// The `tune` subcommand body: run the three-stage autotuner over a
+/// synthetic knowledge graph, print the ranked report, the winning spec
+/// as TOML (paste-able into `--spec`), and a short verification run of
+/// the winner through the real launch path.
+fn tune_demo(spec: &DeploymentSpec,
+             ds: &grannite::graph::datasets::Dataset) -> Result<()> {
+    use grannite::serve::{DataSource, Deployment, Serving};
+
+    println!(
+        "autotuning over {} nodes / {} edges (objective: {}, probe budget {}, \
+         top-{} live probes)",
+        ds.num_nodes(),
+        ds.graph.num_edges(),
+        spec.tuning.objective,
+        spec.tuning.probe_budget,
+        spec.tuning.top_k
+    );
+    let data = DataSource::Dataset(ds.clone());
+    let tuned = Deployment::autotune(spec, &data)?;
+    println!("\n{}", tuned.report.render());
+    println!("winning spec:\n{}", tuned.spec.to_toml());
+
+    // verification: the winner must launch and answer through the same
+    // path any hand-written spec would
+    let serving = tuned.launch(&data)?;
+    let mut ok = 0usize;
+    for i in 0..16 {
+        if serving.query_wait(Some(i % ds.num_nodes())).is_ok() {
+            ok += 1;
+        }
+    }
+    let totals = serving.metrics();
+    println!(
+        "winner verified: {ok}/16 probe queries answered at {:.1} q/s",
+        totals.throughput_qps
+    );
     serving.shutdown()?;
     Ok(())
 }

@@ -58,16 +58,43 @@ pub struct RoundStats {
     /// ZVC/SymG-compressed form on the dense path — the GraSp/SymG
     /// machinery feeding a real gauge instead of orphaned stats.
     pub dma_bytes_shipped: usize,
+    /// Strategy switches the adaptive `auto` engine performed before this
+    /// round (0 for every static engine; normally 0 or 1).
+    pub engine_switches: usize,
+    /// Strategy that executed this round: [`RoundStats::STRATEGY_STATIC`]
+    /// for engines with exactly one strategy,
+    /// [`RoundStats::STRATEGY_PLAN`] / [`RoundStats::STRATEGY_INCREMENTAL`]
+    /// from the adaptive `auto` engine.
+    pub active_strategy: u8,
 }
 
 impl RoundStats {
+    /// `active_strategy` for engines that have exactly one strategy.
+    pub const STRATEGY_STATIC: u8 = 0;
+    /// `active_strategy` when the `auto` engine ran the full planned
+    /// recompute this round.
+    pub const STRATEGY_PLAN: u8 = 1;
+    /// `active_strategy` when the `auto` engine ran the delta-driven
+    /// incremental path this round.
+    pub const STRATEGY_INCREMENTAL: u8 = 2;
+
+    /// Human name of an `active_strategy` code (None for static engines).
+    pub fn strategy_name(code: u8) -> Option<&'static str> {
+        match code {
+            Self::STRATEGY_PLAN => Some("plan"),
+            Self::STRATEGY_INCREMENTAL => Some("incremental"),
+            _ => None,
+        }
+    }
+
     /// Stable one-line JSON encoding (keys in declaration order) for the
     /// telemetry exporters.
     pub fn to_json(&self) -> String {
         format!(
             "{{\"recomputed_rows\":{},\"eligible_rows\":{},\"frontier\":{},\
              \"cache_hits\":{},\"cache_misses\":{},\"dma_bytes_dense\":{},\
-             \"dma_bytes_shipped\":{}}}",
+             \"dma_bytes_shipped\":{},\"engine_switches\":{},\
+             \"active_strategy\":{}}}",
             self.recomputed_rows,
             self.eligible_rows,
             self.frontier,
@@ -75,6 +102,8 @@ impl RoundStats {
             self.cache_misses,
             self.dma_bytes_dense,
             self.dma_bytes_shipped,
+            self.engine_switches,
+            self.active_strategy,
         )
     }
 }
@@ -104,6 +133,9 @@ struct Inner {
     /// Mask-traffic accounting (sparse/compressed aggregation operands).
     dma_bytes_dense: usize,
     dma_bytes_shipped: usize,
+    /// Adaptive-engine accounting (the `auto` engine's strategy gauges).
+    engine_switches: usize,
+    active_strategy: u8,
     started: Option<Instant>,
 }
 
@@ -130,6 +162,8 @@ impl Default for Inner {
             frontier_sizes: Reservoir::new(SAMPLE_CAP, 0xA11C_E004),
             dma_bytes_dense: 0,
             dma_bytes_shipped: 0,
+            engine_switches: 0,
+            active_strategy: RoundStats::STRATEGY_STATIC,
             started: None,
         }
     }
@@ -164,6 +198,15 @@ pub struct Snapshot {
     /// Bytes actually shipped (CSR / ZVC / SymG-packed); see
     /// [`Snapshot::dma_bytes_saved`].
     pub dma_bytes_shipped: usize,
+    /// Strategy switches the adaptive `auto` engine performed (plain
+    /// counter — sums exactly through [`Metrics::merged`] and
+    /// [`Snapshot::merge`]).
+    pub engine_switches: usize,
+    /// The `auto` engine's currently-active strategy (`"plan"` /
+    /// `"incremental"`): per shard the last recorded round's strategy;
+    /// merged snapshots report the common value, or `"mixed"` when shards
+    /// disagree. `None` for static engines.
+    pub active_strategy: Option<String>,
     /// Dirty-frontier size distribution (one sample per round).
     pub frontier: Option<Stats>,
     pub latency: Option<Stats>,
@@ -225,6 +268,10 @@ impl Metrics {
         i.cache_row_misses += rs.cache_misses;
         i.dma_bytes_dense += rs.dma_bytes_dense;
         i.dma_bytes_shipped += rs.dma_bytes_shipped;
+        i.engine_switches += rs.engine_switches;
+        if rs.active_strategy != RoundStats::STRATEGY_STATIC {
+            i.active_strategy = rs.active_strategy;
+        }
         if rs.eligible_rows > 0 {
             i.frontier_sizes.record(rs.frontier as f64);
         }
@@ -255,6 +302,9 @@ impl Metrics {
             cache_row_misses: i.cache_row_misses,
             dma_bytes_dense: i.dma_bytes_dense,
             dma_bytes_shipped: i.dma_bytes_shipped,
+            engine_switches: i.engine_switches,
+            active_strategy: RoundStats::strategy_name(i.active_strategy)
+                .map(str::to_string),
             frontier: i.frontier_sizes.stats(),
             latency: i.latencies_us.stats(),
             queue: i.queue_us.stats(),
@@ -288,6 +338,8 @@ impl Metrics {
         let (mut recomputed, mut eligible) = (0usize, 0usize);
         let (mut row_hits, mut row_misses) = (0usize, 0usize);
         let (mut dma_dense, mut dma_shipped) = (0usize, 0usize);
+        let mut switches = 0usize;
+        let mut strategy: Option<String> = None;
         let mut elapsed = 1e-9f64;
         for m in sinks {
             let i = m.inner.lock().unwrap();
@@ -307,6 +359,11 @@ impl Metrics {
             row_misses += i.cache_row_misses;
             dma_dense += i.dma_bytes_dense;
             dma_shipped += i.dma_bytes_shipped;
+            switches += i.engine_switches;
+            strategy = combine_strategy(
+                strategy.as_deref(),
+                RoundStats::strategy_name(i.active_strategy),
+            );
             if let Some(s) = i.started {
                 elapsed = elapsed.max(s.elapsed().as_secs_f64());
             }
@@ -325,6 +382,8 @@ impl Metrics {
             cache_row_misses: row_misses,
             dma_bytes_dense: dma_dense,
             dma_bytes_shipped: dma_shipped,
+            engine_switches: switches,
+            active_strategy: strategy,
             frontier: reservoir::merged_stats(&frontiers.iter().collect::<Vec<_>>()),
             latency: reservoir::merged_stats(&lat.iter().collect::<Vec<_>>()),
             queue: reservoir::merged_stats(&que.iter().collect::<Vec<_>>()),
@@ -404,6 +463,14 @@ impl Snapshot {
             ",\"dma_bytes_dense\":{},\"dma_bytes_shipped\":{}",
             self.dma_bytes_dense, self.dma_bytes_shipped
         ));
+        out.push_str(&format!(
+            ",\"engine_switches\":{},\"active_strategy\":{}",
+            self.engine_switches,
+            match &self.active_strategy {
+                Some(s) => format!("\"{s}\""),
+                None => "null".to_string(),
+            }
+        ));
         out.push_str(&format!(",\"frontier\":{}", stats_json(&self.frontier)));
         out.push_str(&format!(",\"latency\":{}", stats_json(&self.latency)));
         out.push_str(&format!(",\"queue\":{}", stats_json(&self.queue)));
@@ -442,6 +509,11 @@ impl Snapshot {
             cache_row_misses: self.cache_row_misses + other.cache_row_misses,
             dma_bytes_dense: self.dma_bytes_dense + other.dma_bytes_dense,
             dma_bytes_shipped: self.dma_bytes_shipped + other.dma_bytes_shipped,
+            engine_switches: self.engine_switches + other.engine_switches,
+            active_strategy: combine_strategy(
+                self.active_strategy.as_deref(),
+                other.active_strategy.as_deref(),
+            ),
             frontier: merge_stats(&self.frontier, &other.frontier),
             latency: merge_stats(&self.latency, &other.latency),
             queue: merge_stats(&self.queue, &other.queue),
@@ -455,6 +527,18 @@ impl Snapshot {
                 / self.elapsed_s.max(other.elapsed_s).max(1e-9),
             elapsed_s: self.elapsed_s.max(other.elapsed_s),
         }
+    }
+}
+
+/// Exact gauge merge for the `auto` engine's active strategy: absent
+/// inputs pass through, agreeing inputs keep their value, disagreeing
+/// shards report `"mixed"` — deterministic whichever order sinks merge in.
+fn combine_strategy(a: Option<&str>, b: Option<&str>) -> Option<String> {
+    match (a, b) {
+        (None, None) => None,
+        (Some(s), None) | (None, Some(s)) => Some(s.to_string()),
+        (Some(a), Some(b)) if a == b => Some(a.to_string()),
+        _ => Some("mixed".to_string()),
     }
 }
 
@@ -834,13 +918,56 @@ mod tests {
             cache_misses: 4,
             dma_bytes_dense: 100,
             dma_bytes_shipped: 10,
+            engine_switches: 1,
+            active_strategy: RoundStats::STRATEGY_INCREMENTAL,
         }
         .to_json();
         assert_eq!(
             r,
             "{\"recomputed_rows\":3,\"eligible_rows\":9,\"frontier\":2,\
              \"cache_hits\":5,\"cache_misses\":4,\"dma_bytes_dense\":100,\
-             \"dma_bytes_shipped\":10}"
+             \"dma_bytes_shipped\":10,\"engine_switches\":1,\
+             \"active_strategy\":2}"
         );
+    }
+
+    #[test]
+    fn strategy_gauges_exact_through_merged_and_merge() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        // static engines never set a strategy
+        a.record_round(&RoundStats::default());
+        assert_eq!(a.snapshot().active_strategy, None);
+        assert_eq!(a.snapshot().engine_switches, 0);
+        // shard 0 switched to plan, shard 1 is still incremental
+        a.record_round(&RoundStats {
+            engine_switches: 1,
+            active_strategy: RoundStats::STRATEGY_PLAN,
+            ..Default::default()
+        });
+        b.record_round(&RoundStats {
+            active_strategy: RoundStats::STRATEGY_INCREMENTAL,
+            ..Default::default()
+        });
+        b.record_round(&RoundStats {
+            engine_switches: 1,
+            active_strategy: RoundStats::STRATEGY_INCREMENTAL,
+            ..Default::default()
+        });
+        assert_eq!(a.snapshot().active_strategy.as_deref(), Some("plan"));
+        assert_eq!(b.snapshot().active_strategy.as_deref(), Some("incremental"));
+        let merged = Metrics::merged([&a, &b]);
+        assert_eq!(merged.engine_switches, 2, "switch counter sums exactly");
+        assert_eq!(merged.active_strategy.as_deref(), Some("mixed"));
+        // agreeing shards keep the common value
+        let agree = Metrics::merged([&b]);
+        assert_eq!(agree.active_strategy.as_deref(), Some("incremental"));
+        // aggregate-level merge follows the same rules
+        let coarse = a.snapshot().merge(&b.snapshot());
+        assert_eq!(coarse.engine_switches, 2);
+        assert_eq!(coarse.active_strategy.as_deref(), Some("mixed"));
+        let j = merged.to_json();
+        assert!(j.contains("\"engine_switches\":2"), "{j}");
+        assert!(j.contains("\"active_strategy\":\"mixed\""), "{j}");
     }
 }

@@ -311,6 +311,19 @@ pub fn op_cost_scaled(g: &OpGraph, id: usize, hw: &HardwareConfig,
     c
 }
 
+/// Calibrated compute µs of one full execution of `g` on `hw`: every op
+/// priced at its default engine placement through [`op_cost_scaled`].
+/// This is the whole-graph score the spec autotuner ranks candidate
+/// deployments with; an empty [`CostScales`] makes it the raw model.
+pub fn graph_cost_scaled(g: &OpGraph, hw: &HardwareConfig, opts: CostOpts,
+                         scales: &CostScales) -> f64 {
+    (0..g.ops.len())
+        .map(|id| {
+            op_cost_scaled(g, id, hw, g.ops[id].kind.default_engine(), opts, scales).us
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,14 +23,21 @@
 //! - [`registry::EngineRegistry`]: engine name → factory. A new engine
 //!   is one factory impl + one `register` call — no edits to `server/`,
 //!   `fleet/`, or `main.rs`.
+//! - [`tune::TunedDeployment`]: `Deployment::autotune` searches the spec
+//!   space (engine × aggregation × quant × shards) with the calibrated
+//!   cost model and short live probes, so nobody has to hand-pick a
+//!   spec; the runtime-adaptive `auto` engine handles whatever the
+//!   tuner couldn't foresee.
 
 pub mod registry;
 pub mod spec;
+pub mod tune;
 
 pub use registry::{
     BoxedEngine, EngineFactory, EngineInit, EngineRegistry, LaunchContext, ShardFactory,
 };
-pub use spec::{BatchSpec, DeploymentSpec, EngineSpec, TelemetrySpec, Topology};
+pub use spec::{BatchSpec, DeploymentSpec, EngineSpec, TelemetrySpec, Topology, TuningSpec};
+pub use tune::{Objective, TunedDeployment, TuningReport, TuningRow};
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::Duration;

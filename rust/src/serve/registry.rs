@@ -1,10 +1,10 @@
 //! The engine registry: `EngineSpec -> Box<dyn EngineFactory>`.
 //!
-//! This replaces the hand-written `spawn_local` / `spawn_planned` /
-//! `spawn_incremental` lattice: every engine is a factory keyed by name,
+//! This replaced the hand-written `Fleet::spawn_*` constructor lattice
+//! (removed after the PR 5 migration): every engine is a factory keyed by name,
 //! [`crate::serve::Deployment::launch`] looks the name up once, and the
 //! factory hands back one per-shard constructor closure per
-//! [`ShardSpec`]. Adding engine #5 is a new [`EngineFactory`] impl plus
+//! [`ShardSpec`]. Adding engine #6 is a new [`EngineFactory`] impl plus
 //! one `register` call — no edits to `server/`, `fleet/`, or `main.rs`
 //! (property-tested with a dummy engine in `rust/tests/serve_spec.rs`).
 //!
@@ -21,7 +21,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::engine::WorkerPool;
-use crate::fleet::{LocalEngine, PlanEngine, ShardSpec};
+use crate::fleet::{AutoConfig, AutoEngine, LocalEngine, PlanEngine, ShardSpec};
 use crate::graph::datasets::Dataset;
 use crate::incremental::{IncrementalConfig, IncrementalEngine};
 use crate::ops::build::Aggregation;
@@ -74,11 +74,19 @@ pub trait EngineFactory: Send + Sync {
         Ok(())
     }
 
+    /// The `[engine]` option keys this engine accepts. Surfaced through
+    /// [`EngineRegistry::options_for`] and quoted by the unknown-option
+    /// rejection, so a typo'd knob names its real spelling. Default:
+    /// a closed empty set (no options).
+    fn options(&self) -> &'static [&'static str] {
+        &[]
+    }
+
     /// Called once per launch; returns the per-shard constructor maker.
     fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory>;
 }
 
-/// Name → factory table. [`EngineRegistry::builtin`] carries the four
+/// Name → factory table. [`EngineRegistry::builtin`] carries the five
 /// in-tree engines; tests and downstream scenarios extend it with
 /// [`EngineRegistry::register`].
 pub struct EngineRegistry {
@@ -93,13 +101,15 @@ impl EngineRegistry {
 
     /// The built-in engines: `local` (label voting, artifact-free),
     /// `plan` (compiled GCN `ExecPlan`, optionally QuantGr INT8),
-    /// `incremental` (delta-driven frontier recompute), `coordinator`
+    /// `incremental` (delta-driven frontier recompute), `auto`
+    /// (runtime-adaptive plan/incremental switcher), `coordinator`
     /// (PJRT artifacts).
     pub fn builtin() -> EngineRegistry {
         let mut reg = EngineRegistry::empty();
         reg.register(Box::new(LocalFactory));
         reg.register(Box::new(PlanFactory));
         reg.register(Box::new(IncrementalFactory));
+        reg.register(Box::new(AutoFactory));
         reg.register(Box::new(CoordinatorFactory));
         reg
     }
@@ -122,6 +132,13 @@ impl EngineRegistry {
     /// Registered engine names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.factories.keys().cloned().collect()
+    }
+
+    /// The `[engine]` option keys `name` accepts (empty slice = the
+    /// engine is closed over zero options). Errors like [`Self::get`]
+    /// when the engine is unknown.
+    pub fn options_for(&self, name: &str) -> Result<&'static [&'static str]> {
+        Ok(self.get(name)?.options())
     }
 }
 
@@ -176,21 +193,45 @@ fn shard_pool(parallel: bool) -> Arc<WorkerPool> {
 
 /// Engines with a closed option set reject anything else — the spec
 /// layer's "a typo'd knob must not silently become a default" contract,
-/// enforced uniformly across factories.
+/// enforced uniformly across factories. A near-miss (edit distance ≤ 2,
+/// the fat-finger radius) names the option it was probably meant to be.
 fn check_known_options(engine: &str, spec: &DeploymentSpec, known: &[&str]) -> Result<()> {
     for key in spec.engine.options.keys() {
         if !known.contains(&key.as_str()) {
             if known.is_empty() {
                 bail!("engine {engine:?} takes no [engine] options, got {key:?}");
             }
+            let hint = known
+                .iter()
+                .map(|k| (edit_distance(key, k), *k))
+                .min()
+                .filter(|(d, _)| *d <= 2)
+                .map(|(_, k)| format!(" — did you mean {k:?}?"))
+                .unwrap_or_default();
             bail!(
-                "engine {engine:?} does not take option {key:?} — known \
+                "engine {engine:?} does not take option {key:?}{hint} — known \
                  options: {}",
                 known.join(", ")
             );
         }
     }
     Ok(())
+}
+
+/// Levenshtein distance (option keys are short, the O(len²) DP is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 // ---------------------------------------------------------------------------
@@ -222,8 +263,7 @@ impl EngineFactory for LocalFactory {
     }
 }
 
-/// Per-shard [`LocalEngine`] constructors (also the body of the
-/// deprecated `Fleet::spawn_local` shim).
+/// Per-shard [`LocalEngine`] constructors.
 pub(crate) fn local_shards(ds: &Dataset, capacity: usize) -> ShardFactory {
     let ds = ds.clone();
     Box::new(move |spec: &ShardSpec| {
@@ -264,8 +304,7 @@ impl EngineFactory for PlanFactory {
 }
 
 /// Per-shard [`PlanEngine`] constructors sharing **one** compiled plan +
-/// weight set (also the body of the deprecated `Fleet::spawn_planned`
-/// shim, with `quant = false`).
+/// weight set.
 pub(crate) fn plan_shards(
     ds: &Dataset,
     capacity: usize,
@@ -321,6 +360,10 @@ impl EngineFactory for IncrementalFactory {
         Ok(())
     }
 
+    fn options(&self) -> &'static [&'static str] {
+        INCREMENTAL_OPTIONS
+    }
+
     fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {
         let cfg = self.config(ctx.spec)?;
         check_dense_budget(
@@ -332,23 +375,31 @@ impl EngineFactory for IncrementalFactory {
     }
 }
 
+/// The frontier-recompute knobs; also accepted by `auto`, which forwards
+/// them to its inner incremental engine.
+const INCREMENTAL_OPTIONS: &[&str] = &["cost_margin", "tile_min"];
+
+/// `[engine]` options → [`IncrementalConfig`] (defaults preserved);
+/// shared by the `incremental` and `auto` factories.
+fn incremental_config(engine: &str, spec: &DeploymentSpec) -> Result<IncrementalConfig> {
+    let mut cfg = IncrementalConfig { aggregation: spec.aggregation, ..Default::default() };
+    if let Some(m) = spec.engine.f64_opt("cost_margin")? {
+        cfg.cost_margin = m;
+    }
+    if let Some(t) = spec.engine.usize_opt("tile_min")? {
+        cfg.tile_min = t;
+    }
+    check_known_options(engine, spec, INCREMENTAL_OPTIONS)?;
+    Ok(cfg)
+}
+
 impl IncrementalFactory {
-    /// `[engine]` options → [`IncrementalConfig`] (defaults preserved).
     fn config(&self, spec: &DeploymentSpec) -> Result<IncrementalConfig> {
-        let mut cfg = IncrementalConfig { aggregation: spec.aggregation, ..Default::default() };
-        if let Some(m) = spec.engine.f64_opt("cost_margin")? {
-            cfg.cost_margin = m;
-        }
-        if let Some(t) = spec.engine.usize_opt("tile_min")? {
-            cfg.tile_min = t;
-        }
-        check_known_options("incremental", spec, &["cost_margin", "tile_min"])?;
-        Ok(cfg)
+        incremental_config("incremental", spec)
     }
 }
 
-/// Per-shard [`IncrementalEngine`] constructors (also the body of the
-/// deprecated `Fleet::spawn_incremental` shim).
+/// Per-shard [`IncrementalEngine`] constructors.
 pub(crate) fn incremental_shards(
     ds: &Dataset,
     capacity: usize,
@@ -365,6 +416,77 @@ pub(crate) fn incremental_shards(
                 as BoxedEngine)
         })
     })
+}
+
+// ---------------------------------------------------------------------------
+// auto — runtime-adaptive plan/incremental switcher
+// ---------------------------------------------------------------------------
+
+struct AutoFactory;
+
+impl EngineFactory for AutoFactory {
+    fn name(&self) -> &str {
+        "auto"
+    }
+
+    fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
+        check_offline_model("auto", spec)?;
+        check_dense_budget("auto", spec.aggregation, spec.capacity)?;
+        if spec.quant {
+            bail!(
+                "engine \"auto\" switches between FP32 plan and incremental \
+                 strategies — quant = true would make answers depend on \
+                 which strategy is active; use engine \"plan\" for QuantGr \
+                 INT8"
+            );
+        }
+        // hysteresis/cooldown live in [tuning] and are validated by the
+        // spec layer; only the inner incremental knobs are [engine] options
+        let _ = incremental_config("auto", spec)?;
+        Ok(())
+    }
+
+    fn options(&self) -> &'static [&'static str] {
+        INCREMENTAL_OPTIONS
+    }
+
+    fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {
+        let inc_cfg = incremental_config("auto", ctx.spec)?;
+        check_dense_budget(
+            "auto",
+            resolve_aggregation(ctx.spec.aggregation, ctx.dataset, ctx.capacity),
+            ctx.capacity,
+        )?;
+        // compile the plan strategy once; every shard's inner PlanEngine
+        // shares it, exactly like the plain "plan" engine
+        let (plan, weights) =
+            PlanEngine::compile_parts_with(ctx.dataset, ctx.capacity, ctx.spec.aggregation)?;
+        let auto_cfg = AutoConfig::from_tuning(&ctx.spec.tuning);
+        let ds = ctx.dataset.clone();
+        let capacity = ctx.capacity;
+        let parallel = ctx.parallel_pool();
+        Ok(Box::new(move |spec: &ShardSpec| {
+            let ds = ds.clone();
+            let owned = spec.nodes.clone();
+            let plan = Arc::clone(&plan);
+            let weights = weights.clone();
+            Box::new(move || {
+                let pool = shard_pool(parallel);
+                let plan_eng = PlanEngine::from_parts(
+                    &ds,
+                    capacity,
+                    owned.clone(),
+                    Arc::clone(&pool),
+                    plan,
+                    weights,
+                )?;
+                let inc_eng =
+                    IncrementalEngine::shard(&ds, capacity, owned, pool, inc_cfg)?;
+                Ok(Box::new(AutoEngine::from_engines(plan_eng, inc_eng, auto_cfg))
+                    as BoxedEngine)
+            })
+        }))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -386,13 +508,17 @@ impl EngineFactory for CoordinatorFactory {
                  artifact instead of setting quant = true"
             );
         }
-        check_known_options("coordinator", spec, &["artifact"])?;
+        check_known_options("coordinator", spec, self.options())?;
         if let Some(v) = spec.engine.options.get("artifact") {
             if v.as_str().is_none() {
                 bail!("[engine] artifact must be a string, got {v:?}");
             }
         }
         Ok(())
+    }
+
+    fn options(&self) -> &'static [&'static str] {
+        &["artifact"]
     }
 
     fn prepare(&self, ctx: &LaunchContext) -> Result<ShardFactory> {

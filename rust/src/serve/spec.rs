@@ -1,7 +1,7 @@
 //! The typed deployment specification — one declarative object that
-//! names everything the old constructor matrix spread across
-//! `Fleet::spawn_local/spawn_planned/spawn_incremental`,
-//! `ServerHandle::spawn`, and per-subsystem CLI flag parsing.
+//! names everything the old constructor matrix (the per-engine
+//! `Fleet::spawn_*` lattice, removed after the PR 5 migration),
+//! `ServerHandle::spawn`, and per-subsystem CLI flag parsing spread out.
 //!
 //! A [`DeploymentSpec`] is the paper's "configurable pipeline" framing
 //! made concrete: which execution engine (StaGr plans, QuantGr INT8,
@@ -224,6 +224,49 @@ impl Default for TelemetrySpec {
     }
 }
 
+/// Autotuner + runtime-adaptive engine knobs (`[tuning]` in TOML).
+///
+/// The same section feeds two consumers: `Deployment::autotune` (how
+/// many live probes, how long each runs, which objective ranks the
+/// candidates) and the `auto` engine (the hysteresis band and cooldown
+/// that keep its runtime plan↔incremental switching from flapping).
+/// Defaults are usable without a `[tuning]` section at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningSpec {
+    /// What the tuner optimizes: `"latency"` (p50 query latency) or
+    /// `"throughput"` (answered queries per second).
+    pub objective: String,
+    /// Queries issued per live probe (and per calibration probe) during
+    /// autotuning; must be ≥ 1 — a zero-query probe measures nothing.
+    pub probe_budget: usize,
+    /// How many cost-model-ranked candidates are confirmed with live
+    /// probes through the real launch path; must be ≥ 1.
+    pub top_k: usize,
+    /// `auto` engine: mutations-per-round at or below which it favors
+    /// the incremental (delta-driven) strategy.
+    pub hysteresis_low: f64,
+    /// `auto` engine: mutations-per-round at or above which it favors
+    /// the full planned recompute; must exceed `hysteresis_low` (the gap
+    /// is the dead band that prevents flapping).
+    pub hysteresis_high: f64,
+    /// `auto` engine: minimum inference rounds between two strategy
+    /// switches, whatever the signals say.
+    pub cooldown_rounds: usize,
+}
+
+impl Default for TuningSpec {
+    fn default() -> Self {
+        TuningSpec {
+            objective: "latency".to_string(),
+            probe_budget: 64,
+            top_k: 3,
+            hysteresis_low: 1.0,
+            hysteresis_high: 8.0,
+            cooldown_rounds: 4,
+        }
+    }
+}
+
 /// One typed deployment: everything
 /// [`crate::serve::Deployment::launch`] needs to serve a graph, and
 /// nothing it has to re-parse per subsystem.
@@ -261,6 +304,8 @@ pub struct DeploymentSpec {
     pub admission: AdmissionConfig,
     /// Query tracing + plan profiling (off by default).
     pub telemetry: TelemetrySpec,
+    /// Autotuner probes/objective + `auto` engine switching bands.
+    pub tuning: TuningSpec,
 }
 
 impl Default for DeploymentSpec {
@@ -275,6 +320,7 @@ impl Default for DeploymentSpec {
             batch: BatchSpec::default(),
             admission: AdmissionConfig::unbounded(),
             telemetry: TelemetrySpec::default(),
+            tuning: TuningSpec::default(),
         }
     }
 }
@@ -297,14 +343,14 @@ impl DeploymentSpec {
     /// Parse from an already-loaded [`Document`].
     pub fn from_doc(doc: &Document) -> Result<DeploymentSpec> {
         const SECTIONS: &[&str] =
-            &["", "engine", "topology", "batch", "admission", "telemetry"];
+            &["", "engine", "topology", "batch", "admission", "telemetry", "tuning"];
         for section in doc.section_names() {
             if !SECTIONS.contains(&section) {
                 bail!(
                     "unknown section [{section}] — a deployment spec has \
                      [engine], [topology], [batch], [admission], \
-                     [telemetry] and the top-level keys model, capacity, \
-                     aggregation, quant"
+                     [telemetry], [tuning] and the top-level keys model, \
+                     capacity, aggregation, quant"
                 );
             }
         }
@@ -396,6 +442,44 @@ impl DeploymentSpec {
             }
         }
 
+        if let Some(_table) = doc.section("tuning") {
+            check_keys(
+                doc,
+                "tuning",
+                &[
+                    "objective",
+                    "probe_budget",
+                    "top_k",
+                    "hysteresis_low",
+                    "hysteresis_high",
+                    "cooldown_rounds",
+                ],
+            )?;
+            if let Some(v) = doc.get("tuning", "objective") {
+                spec.tuning.objective = str_of(v, "tuning", "objective")?.to_string();
+            }
+            if let Some(v) = doc.get("tuning", "probe_budget") {
+                spec.tuning.probe_budget = usize_of(v, "tuning", "probe_budget")?;
+            }
+            if let Some(v) = doc.get("tuning", "top_k") {
+                spec.tuning.top_k = usize_of(v, "tuning", "top_k")?;
+            }
+            if let Some(v) = doc.get("tuning", "hysteresis_low") {
+                spec.tuning.hysteresis_low = v.as_float().ok_or_else(|| {
+                    anyhow!("[tuning] hysteresis_low must be a number, got {v:?}")
+                })?;
+            }
+            if let Some(v) = doc.get("tuning", "hysteresis_high") {
+                spec.tuning.hysteresis_high = v.as_float().ok_or_else(|| {
+                    anyhow!("[tuning] hysteresis_high must be a number, got {v:?}")
+                })?;
+            }
+            if let Some(v) = doc.get("tuning", "cooldown_rounds") {
+                spec.tuning.cooldown_rounds =
+                    usize_of(v, "tuning", "cooldown_rounds")?;
+            }
+        }
+
         Ok(spec)
     }
 
@@ -437,6 +521,22 @@ impl DeploymentSpec {
         out.push_str(&format!(
             "sample_rate = {}\n",
             emit_value(&Value::Float(self.telemetry.sample_rate))
+        ));
+        out.push_str("\n[tuning]\n");
+        out.push_str(&format!("objective = \"{}\"\n", self.tuning.objective));
+        out.push_str(&format!("probe_budget = {}\n", self.tuning.probe_budget));
+        out.push_str(&format!("top_k = {}\n", self.tuning.top_k));
+        out.push_str(&format!(
+            "hysteresis_low = {}\n",
+            emit_value(&Value::Float(self.tuning.hysteresis_low))
+        ));
+        out.push_str(&format!(
+            "hysteresis_high = {}\n",
+            emit_value(&Value::Float(self.tuning.hysteresis_high))
+        ));
+        out.push_str(&format!(
+            "cooldown_rounds = {}\n",
+            self.tuning.cooldown_rounds
         ));
         out
     }
@@ -490,6 +590,31 @@ impl DeploymentSpec {
                 "telemetry.sample_rate must be in (0, 1], got {} — 1.0 \
                  records every trace",
                 self.telemetry.sample_rate
+            );
+        }
+        if !matches!(self.tuning.objective.as_str(), "latency" | "throughput") {
+            bail!(
+                "tuning.objective must be \"latency\" or \"throughput\", \
+                 got {:?}",
+                self.tuning.objective
+            );
+        }
+        if self.tuning.probe_budget == 0 {
+            bail!(
+                "tuning.probe_budget must be ≥ 1 (got 0) — a zero-query \
+                 live probe cannot rank candidates"
+            );
+        }
+        if self.tuning.top_k == 0 {
+            bail!("tuning.top_k must be ≥ 1 (got 0) — at least the cost-model \
+                   winner gets a live probe");
+        }
+        let (lo, hi) = (self.tuning.hysteresis_low, self.tuning.hysteresis_high);
+        if !(lo.is_finite() && hi.is_finite() && lo >= 0.0 && lo < hi) {
+            bail!(
+                "tuning hysteresis band must satisfy 0 ≤ hysteresis_low < \
+                 hysteresis_high (got low = {lo}, high = {hi}) — the gap is \
+                 the dead band that keeps the auto engine from flapping"
             );
         }
         Ok(())

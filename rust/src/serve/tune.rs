@@ -1,0 +1,569 @@
+//! The spec-space autotuner: `Deployment::autotune` searches the
+//! deployment spec space for the best way to serve a dataset, instead of
+//! making the user hand-pick engine × aggregation × quant × shard count.
+//!
+//! Three stages, cheapest first:
+//!
+//! 1. **Enumerate + prune.** Candidate specs are generated around the
+//!    base spec (engine family, aggregation lowering, QuantGr INT8,
+//!    shard count) and pruned by the same
+//!    [`DeploymentSpec::validate_with`] a launch would run — a candidate
+//!    the registry would reject (dense mask over budget, quant on an
+//!    engine without a MAC datapath) never costs a probe.
+//! 2. **Score with the calibrated cost model.** Every surviving
+//!    candidate's model graph is priced with
+//!    [`crate::npu::cost::graph_cost_scaled`] on its own device roster —
+//!    per-shard compute prorated by owned nodes, plus the placement's
+//!    halo estimate — using [`CostScales`] fitted from a short
+//!    telemetry-enabled probe of the base spec. When the probe observed
+//!    nothing (or telemetry is unavailable) the scales are empty and the
+//!    score falls back to the raw model, exactly as
+//!    [`crate::npu::cost::op_cost_scaled`] documents.
+//! 3. **Confirm top-K live.** The `top_k` best-scored candidates are
+//!    launched through the real [`Deployment::launch`] path and driven
+//!    with a short deterministic query/update workload; the winner is
+//!    the best *observed* objective (`latency` = mean µs per query,
+//!    `throughput` = queries per second). The model proposes, the
+//!    probe disposes — a candidate the cost model loves but that loses
+//!    on the wire never wins.
+//!
+//! The model score is a **full-recompute bound**: delta-driven engines
+//! (`incremental`, `auto`) are priced as if every round recomputed
+//! everything, so their caching advantage shows up only in the live
+//! probes. That is deliberate — how much caching helps depends on the
+//! probe workload's churn, which stage 2 cannot know.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::npu::cost::{graph_cost_scaled, CostOpts, CostScales};
+use crate::ops::build::{self, Aggregation, GnnDims};
+use crate::serve::spec::TuningSpec;
+use crate::serve::{DataSource, Deployment, DeploymentSpec, EngineRegistry, Serving};
+use crate::server::Update;
+
+/// What the tuner ranks live probes by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize mean per-query latency (µs).
+    Latency,
+    /// Maximize sustained queries per second.
+    Throughput,
+}
+
+impl Objective {
+    /// Parse a `[tuning] objective` name (the spec layer has already
+    /// validated it; this keeps the mapping in one place).
+    pub fn from_name(name: &str) -> Result<Objective> {
+        match name {
+            "latency" => Ok(Objective::Latency),
+            "throughput" => Ok(Objective::Throughput),
+            other => bail!(
+                "unknown tuning objective {other:?} — \
+                 pick \"latency\" or \"throughput\""
+            ),
+        }
+    }
+
+    /// The spec-level name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Throughput => "throughput",
+        }
+    }
+
+    /// Is observed score `a` better than `b` under this objective?
+    fn better(self, a: f64, b: f64) -> bool {
+        match self {
+            Objective::Latency => a < b,
+            Objective::Throughput => a > b,
+        }
+    }
+
+    /// Unit suffix for report rendering.
+    fn unit(self) -> &'static str {
+        match self {
+            Objective::Latency => "µs/query",
+            Objective::Throughput => "qps",
+        }
+    }
+}
+
+/// One ranked line of the tuning report.
+#[derive(Debug, Clone)]
+pub struct TuningRow {
+    /// Human-readable candidate summary (`plan int8 sparse ×2`).
+    pub label: String,
+    /// Engine factory name.
+    pub engine: String,
+    /// Shard count.
+    pub shards: usize,
+    /// Stage-2 model score: estimated worst-shard round µs.
+    pub predicted_us: f64,
+    /// Stage-3 observed objective, when this candidate was probed and
+    /// the probe succeeded (`latency` = mean µs/query, `throughput` =
+    /// qps).
+    pub observed: Option<f64>,
+    /// Why the probe was skipped or failed (`None` when it ran clean).
+    pub note: Option<String>,
+}
+
+/// The autotuner's full ranking, winner first.
+#[derive(Debug, Clone)]
+pub struct TuningReport {
+    /// The objective the ranking is ordered by.
+    pub objective: Objective,
+    /// All scored candidates: probed rows first (by observed objective),
+    /// then unprobed rows by model score.
+    pub rows: Vec<TuningRow>,
+    /// Whether stage 2 priced candidates with fitted [`CostScales`]
+    /// (false = no calibration observations; raw model used).
+    pub calibrated: bool,
+    /// Candidates rejected by spec/registry validation, with reasons —
+    /// the prune stage's receipts.
+    pub pruned: Vec<String>,
+}
+
+impl TuningReport {
+    /// Fixed-width table for terminal output (`grannite tune`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "objective: {}   cost model: {}\n",
+            self.objective.name(),
+            if self.calibrated { "calibrated" } else { "uncalibrated (unit scales)" },
+        ));
+        out.push_str(&format!(
+            "{:<4} {:<26} {:>14} {:>18}\n",
+            "rank", "candidate", "predicted µs", "observed"
+        ));
+        for (i, r) in self.rows.iter().enumerate() {
+            let observed = match (r.observed, &r.note) {
+                (Some(v), _) => format!("{v:.1} {}", self.objective.unit()),
+                (None, Some(note)) => note.clone(),
+                (None, None) => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<4} {:<26} {:>14.1} {:>18}\n",
+                i + 1,
+                r.label,
+                r.predicted_us,
+                observed
+            ));
+        }
+        for p in &self.pruned {
+            out.push_str(&format!("pruned: {p}\n"));
+        }
+        out
+    }
+}
+
+/// What [`Deployment::autotune`] returns: the winning spec plus the
+/// ranking that justified it.
+pub struct TunedDeployment {
+    /// The winner — a complete, validated spec; launch it like any
+    /// hand-written one.
+    pub spec: DeploymentSpec,
+    /// The full ranked report.
+    pub report: TuningReport,
+}
+
+impl TunedDeployment {
+    /// Launch the winning spec (sugar for [`Deployment::launch`]).
+    pub fn launch(&self, data: &DataSource) -> Result<Box<dyn Serving>> {
+        Deployment::launch(&self.spec, data)
+    }
+}
+
+/// One enumerated spec-space point, pre-probe.
+struct Candidate {
+    spec: DeploymentSpec,
+    label: String,
+    predicted_us: f64,
+}
+
+impl Deployment {
+    /// Search the spec space around `base` for the best deployment of
+    /// `data` under `base.tuning.objective`. See the module docs for the
+    /// three stages. `base` supplies everything the search holds fixed:
+    /// the model, capacity, batching, admission, device roster, and the
+    /// `[tuning]` knobs (`objective`, `probe_budget`, `top_k`).
+    pub fn autotune(base: &DeploymentSpec, data: &DataSource) -> Result<TunedDeployment> {
+        Deployment::autotune_with(&EngineRegistry::builtin(), base, data)
+    }
+
+    /// [`Deployment::autotune`] with a caller-extended registry.
+    pub fn autotune_with(
+        registry: &EngineRegistry,
+        base: &DeploymentSpec,
+        data: &DataSource,
+    ) -> Result<TunedDeployment> {
+        let objective = Objective::from_name(&base.tuning.objective)?;
+        let ds = data.dataset()?;
+        let budget = base.tuning.probe_budget;
+
+        // stage 0: fit CostScales from a short telemetry-enabled probe
+        // of the base spec (unit scales when nothing was observed)
+        let scales = calibration_probe(registry, base, &ds, budget)
+            .unwrap_or_default();
+        let calibrated = !scales.is_empty();
+
+        // stage 1: enumerate + prune
+        let mut pruned = Vec::new();
+        let mut candidates = Vec::new();
+        for spec in enumerate(registry, base, &ds)? {
+            let label = label_of(&spec);
+            match spec.validate_with(registry) {
+                Ok(()) => candidates.push((spec, label)),
+                Err(e) => pruned.push(format!("{label}: {e:#}")),
+            }
+        }
+        if candidates.is_empty() {
+            bail!(
+                "autotune pruned every candidate — first rejection: {}",
+                pruned.first().map(String::as_str).unwrap_or("(none enumerated)")
+            );
+        }
+
+        // stage 2: model score, cheapest ranking
+        let mut scored: Vec<Candidate> = candidates
+            .into_iter()
+            .map(|(spec, label)| {
+                let predicted_us = model_score(&spec, &ds, &scales)?;
+                Ok(Candidate { spec, label, predicted_us })
+            })
+            .collect::<Result<_>>()?;
+        scored.sort_by(|a, b| a.predicted_us.total_cmp(&b.predicted_us));
+
+        // stage 3: confirm top-K through the real launch path
+        let top_k = base.tuning.top_k.min(scored.len());
+        let mut rows = Vec::with_capacity(scored.len());
+        let mut winner: Option<(usize, f64)> = None;
+        for (i, c) in scored.iter().enumerate() {
+            let (observed, note) = if i < top_k {
+                match live_probe(registry, &c.spec, &ds, budget, objective) {
+                    Ok(v) => (Some(v), None),
+                    Err(e) => (None, Some(format!("probe failed: {e:#}"))),
+                }
+            } else {
+                (None, None)
+            };
+            if let Some(v) = observed {
+                let improves = match winner {
+                    None => true,
+                    Some((_, best)) => objective.better(v, best),
+                };
+                if improves {
+                    winner = Some((i, v));
+                }
+            }
+            rows.push(TuningRow {
+                label: c.label.clone(),
+                engine: c.spec.engine.name.clone(),
+                shards: c.spec.topology.shards,
+                predicted_us: c.predicted_us,
+                observed,
+                note,
+            });
+        }
+        // every probe failing still yields an answer: the model's pick
+        let winner_idx = winner.map(|(i, _)| i).unwrap_or(0);
+
+        // winner first; then probed rows by observed objective; then
+        // unprobed rows by model score (already in predicted order)
+        let mut order: Vec<usize> = (0..rows.len()).collect();
+        order.sort_by(|&a, &b| {
+            let key = |i: usize| {
+                (
+                    usize::from(i != winner_idx),
+                    usize::from(rows[i].observed.is_none()),
+                )
+            };
+            key(a).cmp(&key(b)).then_with(|| match (rows[a].observed, rows[b].observed) {
+                (Some(x), Some(y)) => {
+                    if objective.better(x, y) {
+                        std::cmp::Ordering::Less
+                    } else {
+                        std::cmp::Ordering::Greater
+                    }
+                }
+                _ => rows[a].predicted_us.total_cmp(&rows[b].predicted_us),
+            })
+        });
+        let rows: Vec<TuningRow> = order.iter().map(|&i| rows[i].clone()).collect();
+        let spec = scored.swap_remove(winner_idx).spec;
+        Ok(TunedDeployment {
+            spec,
+            report: TuningReport { objective, rows, calibrated, pruned },
+        })
+    }
+}
+
+/// The candidate spec space around `base`: engine family × aggregation
+/// lowering × quant × shard count, everything else inherited. Engine
+/// options are carried over only where the target engine accepts them
+/// (per [`EngineRegistry::options_for`]) so e.g. a base `tile_min`
+/// doesn't disqualify the plan candidates.
+fn enumerate(
+    registry: &EngineRegistry,
+    base: &DeploymentSpec,
+    ds: &crate::graph::datasets::Dataset,
+) -> Result<Vec<DeploymentSpec>> {
+    // `local` answers by label voting and `coordinator` needs AOT
+    // artifacts — neither is exchangeable with the synthesized-GCN
+    // engines, so the search stays inside the offline-GCN family
+    const ENGINES: &[(&str, &[bool])] =
+        &[("plan", &[false, true]), ("incremental", &[false]), ("auto", &[false])];
+    let mut shard_counts = vec![1usize, 2, 4];
+    shard_counts.push(base.topology.shards);
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+    // a shard must own at least one node
+    shard_counts.retain(|&s| s >= 1 && s <= ds.num_nodes());
+
+    let capacity = base.resolved_capacity(ds.num_nodes())?;
+    let mut out = Vec::new();
+    for &(engine, quants) in ENGINES {
+        let accepted = registry.options_for(engine).unwrap_or(&[]);
+        for &quant in quants {
+            for agg in [Aggregation::Sparse, Aggregation::Dense] {
+                for &shards in &shard_counts {
+                    let mut spec = base.clone();
+                    spec.capacity = capacity;
+                    spec.engine.name = engine.to_string();
+                    spec.engine
+                        .options
+                        .retain(|k, _| accepted.contains(&k.as_str()));
+                    spec.quant = quant;
+                    spec.aggregation = agg;
+                    spec.topology.shards = shards;
+                    out.push(spec);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `plan int8 sparse ×2`-style candidate summary.
+fn label_of(spec: &DeploymentSpec) -> String {
+    format!(
+        "{}{} {} ×{}",
+        spec.engine.name,
+        if spec.quant { " int8" } else { "" },
+        spec.aggregation.name(),
+        spec.topology.shards,
+    )
+}
+
+/// Stage-2 score: estimated worst-shard round µs. Per shard, the
+/// candidate's model graph is priced on that shard's device with
+/// [`graph_cost_scaled`], prorated by the shard's owned-node fraction
+/// (the placement layer's compute model), plus the placement's halo
+/// estimate for the link.
+fn model_score(
+    spec: &DeploymentSpec,
+    ds: &crate::graph::datasets::Dataset,
+    scales: &CostScales,
+) -> Result<f64> {
+    let capacity = spec.resolved_capacity(ds.num_nodes())?;
+    let density = (2.0 * ds.graph.num_edges() as f64 + ds.num_nodes() as f64)
+        / (capacity as f64 * capacity as f64);
+    let agg = spec.aggregation.resolve(density);
+    let dims = GnnDims::model(capacity, ds.graph.num_edges(), ds.num_features(),
+                              ds.num_classes());
+    let g = build::gcn_stagr_with(dims, "tune", agg);
+    let opts = CostOpts {
+        spmm_density: density,
+        // QuantGr candidates run the INT8 datapath
+        dense_dtype_bytes: if spec.quant { 1 } else { 0 },
+        ..CostOpts::default()
+    };
+    let roster = spec.topology.roster()?;
+    let plan = Deployment::plan(spec, ds)
+        .with_context(|| format!("placement for candidate {}", label_of(spec)))?;
+    let mut worst: f64 = 0.0;
+    for (shard, hw) in plan.shards.iter().zip(&roster) {
+        let full_round = graph_cost_scaled(&g, hw, opts, scales);
+        let owned_frac = shard.nodes.len() as f64 / capacity as f64;
+        worst = worst.max(full_round * owned_frac + shard.est_halo_us);
+    }
+    Ok(worst)
+}
+
+/// Stage-0 probe: launch the base spec with telemetry forced on, drive
+/// the deterministic probe workload, and fit [`CostScales`] from the
+/// observed per-op executions. Any failure (engine without a plan to
+/// profile, launch error) degrades to `Err` → unit scales at the caller.
+fn calibration_probe(
+    registry: &EngineRegistry,
+    base: &DeploymentSpec,
+    ds: &crate::graph::datasets::Dataset,
+    budget: usize,
+) -> Result<CostScales> {
+    let mut spec = base.clone();
+    spec.telemetry.enabled = true;
+    spec.telemetry.sample_rate = 1.0;
+    let serving = Deployment::launch_at(registry, &spec, ds, None, None)?;
+    let result = drive_workload(serving.as_ref(), ds, budget);
+    let scales = serving
+        .telemetry()
+        .map(|t| t.calibration().scales())
+        .unwrap_or_default();
+    serving.shutdown()?;
+    result?;
+    Ok(scales)
+}
+
+/// Stage-3 probe: launch the candidate for real and measure the
+/// objective over the deterministic workload.
+fn live_probe(
+    registry: &EngineRegistry,
+    spec: &DeploymentSpec,
+    ds: &crate::graph::datasets::Dataset,
+    budget: usize,
+    objective: Objective,
+) -> Result<f64> {
+    let serving = Deployment::launch_at(registry, spec, ds, None, None)?;
+    let t0 = Instant::now();
+    let result = drive_workload(serving.as_ref(), ds, budget);
+    let wall = t0.elapsed();
+    let shutdown = serving.shutdown();
+    let lat_sum = result?;
+    shutdown?;
+    Ok(match objective {
+        Objective::Latency => lat_sum / budget.max(1) as f64,
+        Objective::Throughput => budget as f64 / wall.as_secs_f64().max(1e-9),
+    })
+}
+
+/// The deterministic probe workload every stage shares: `budget`
+/// queries round-robined over the nodes, one GrAd edge mutation every
+/// fourth step (so delta-driven engines see churn, not a frozen graph).
+/// Returns the summed query latency in µs.
+fn drive_workload(
+    serving: &dyn Serving,
+    ds: &crate::graph::datasets::Dataset,
+    budget: usize,
+) -> Result<f64> {
+    let n = ds.num_nodes();
+    let mut lat_sum = 0.0;
+    for i in 0..budget {
+        if i % 4 == 3 {
+            let (u, mut v) = (i % n, (i * 7 + 3) % n);
+            if u == v {
+                v = (v + 1) % n;
+            }
+            serving.update(Update::AddEdge(u, v))?;
+        }
+        let r = serving.query_wait(Some(i % n))?;
+        lat_sum += r.latency_us;
+    }
+    Ok(lat_sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::synthesize;
+
+    fn twin() -> crate::graph::datasets::Dataset {
+        synthesize("tune", 40, 90, 4, 12, 11)
+    }
+
+    fn base(budget: usize) -> DeploymentSpec {
+        let mut spec = DeploymentSpec::default();
+        spec.capacity = 48;
+        spec.tuning.probe_budget = budget;
+        spec.tuning.top_k = 2;
+        spec
+    }
+
+    #[test]
+    fn enumerate_covers_engines_and_prunes_nothing_valid() {
+        let reg = EngineRegistry::builtin();
+        let ds = twin();
+        let specs = enumerate(&reg, &base(8), &ds).unwrap();
+        let engines: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.engine.name.as_str()).collect();
+        assert_eq!(
+            engines.into_iter().collect::<Vec<_>>(),
+            vec!["auto", "incremental", "plan"]
+        );
+        // quant only enumerated for plan
+        assert!(specs.iter().all(|s| !s.quant || s.engine.name == "plan"));
+        // candidate labels are unique — the report is unambiguous
+        let labels: std::collections::BTreeSet<String> =
+            specs.iter().map(label_of).collect();
+        assert_eq!(labels.len(), specs.len());
+    }
+
+    #[test]
+    fn base_engine_options_survive_only_where_accepted() {
+        let reg = EngineRegistry::builtin();
+        let ds = twin();
+        let mut b = base(8);
+        b.engine = crate::serve::spec::EngineSpec::named("incremental")
+            .with_option("tile_min", crate::config::parse::Value::Int(16));
+        for spec in enumerate(&reg, &b, &ds).unwrap() {
+            let has = spec.engine.options.contains_key("tile_min");
+            match spec.engine.name.as_str() {
+                "incremental" | "auto" => assert!(has, "{}", label_of(&spec)),
+                other => assert!(!has, "{other} must drop tile_min"),
+            }
+            spec.validate_with(&reg).unwrap();
+        }
+    }
+
+    #[test]
+    fn model_score_prefers_sparse_on_a_sparse_graph() {
+        let ds = twin();
+        let scales = CostScales::default();
+        let mut sparse = base(8);
+        sparse.aggregation = Aggregation::Sparse;
+        let mut dense = base(8);
+        dense.aggregation = Aggregation::Dense;
+        let s = model_score(&sparse, &ds, &scales).unwrap();
+        let d = model_score(&dense, &ds, &scales).unwrap();
+        assert!(
+            s < d,
+            "twin density is far below the SpMM crossover: sparse {s} vs dense {d}"
+        );
+    }
+
+    #[test]
+    fn scales_move_the_score() {
+        let ds = twin();
+        let spec = base(8);
+        let unit = model_score(&spec, &ds, &CostScales::default()).unwrap();
+        let mut scales = CostScales::default();
+        for kind in ["MatMul", "SpMM", "Add", "Mul", "Relu", "Div", "Rsqrt",
+                     "ReduceSumRows", "BroadcastCol", "Transpose"] {
+            scales.set(kind, 3.0);
+        }
+        let scaled = model_score(&spec, &ds, &scales).unwrap();
+        assert!(scaled > unit * 1.5, "calibration must reprice: {scaled} vs {unit}");
+    }
+
+    #[test]
+    fn autotune_returns_a_launchable_winner_with_ranked_report() {
+        let ds = twin();
+        let tuned = Deployment::autotune(&base(6), &DataSource::Dataset(ds.clone()))
+            .unwrap();
+        // the report ranks every candidate, winner first and probed
+        assert!(tuned.report.rows.len() >= 4);
+        assert!(tuned.report.rows[0].observed.is_some(), "winner was probed");
+        assert_eq!(tuned.report.rows[0].engine, tuned.spec.engine.name);
+        let rendered = tuned.report.render();
+        assert!(rendered.contains("objective: latency"), "{rendered}");
+        assert!(rendered.contains("rank"), "{rendered}");
+        // the winner is a complete spec: it validates and launches
+        tuned.spec.validate_with(&EngineRegistry::builtin()).unwrap();
+        let serving = tuned.launch(&DataSource::Dataset(ds)).unwrap();
+        let r = serving.query_wait(Some(0)).unwrap();
+        assert!(r.prediction >= 0);
+        serving.shutdown().unwrap();
+    }
+}

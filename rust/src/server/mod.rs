@@ -69,6 +69,11 @@ pub trait InferenceEngine {
         _shard: usize,
     ) {
     }
+    /// The shard worker reports its live query-queue depth here just
+    /// before each inference round. Adaptive engines (the `auto`
+    /// strategy switcher) fold it into their switching signals; the
+    /// default ignores it — static engines have nothing to adapt.
+    fn note_queue_depth(&mut self, _pending: usize) {}
 }
 
 /// Boxed engines pass through unchanged — this is what lets the
@@ -103,6 +108,10 @@ impl InferenceEngine for Box<dyn InferenceEngine> {
         shard: usize,
     ) {
         (**self).attach_telemetry(telemetry, shard)
+    }
+
+    fn note_queue_depth(&mut self, pending: usize) {
+        (**self).note_queue_depth(pending)
     }
 }
 

@@ -220,6 +220,14 @@ pub struct CalibrationReport {
 }
 
 impl CalibrationReport {
+    /// True when no execution was observed — [`Self::scales`] would fit
+    /// nothing and scaled costing falls back to the raw model. The
+    /// autotuner checks this to report whether its ranking is
+    /// calibrated or model-only.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
     pub(crate) fn merged(sinks: &[Arc<ProfileSink>]) -> CalibrationReport {
         // (kind, bucket) → (runs, pred_sum, obs_sum, pooled ratios)
         let mut merged: std::collections::BTreeMap<

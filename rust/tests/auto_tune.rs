@@ -1,0 +1,203 @@
+//! The self-tuning surface end to end: the runtime-adaptive `auto`
+//! engine crosses its hysteresis band under a churn-burst stream
+//! without changing answers (and reports the switch through the exact
+//! merged metrics), and `Deployment::autotune` returns a winner that
+//! launches and answers identically to the same spec written by hand.
+
+use grannite::graph::datasets::{synthesize, Dataset};
+use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+};
+use grannite::server::Update;
+
+fn twin() -> Dataset {
+    synthesize("auto-serve", 40, 90, 4, 12, 7)
+}
+
+/// An `auto`-engine spec with a tight hysteresis band and a short
+/// cooldown, so the burst phase of the script below forces at least one
+/// strategy switch within the script's length.
+fn auto_spec(shards: usize) -> DeploymentSpec {
+    let mut s = DeploymentSpec {
+        engine: EngineSpec::named("auto"),
+        topology: Topology::homogeneous(shards),
+        capacity: 48,
+        ..DeploymentSpec::default()
+    };
+    s.tuning.hysteresis_low = 1.0;
+    s.tuning.hysteresis_high = 4.0;
+    s.tuning.cooldown_rounds = 2;
+    s
+}
+
+/// Quiet phase (exactly 1 mutation per query — the churn EWMA settles
+/// below the low threshold) followed by a burst phase (24 mutations,
+/// then 2 queries, per cycle — the EWMA jumps past the high threshold).
+/// Deterministic for the fixed seeds; the stream capacities stay below
+/// the spec capacity (48) so `AddNode` events from both phases fit.
+fn churn_burst_script() -> Vec<GraphEvent> {
+    let mut events: Vec<GraphEvent> =
+        KnowledgeGraphStream::with_churn(40, 44, 1.0, 9).take(24).collect();
+    events.extend(
+        KnowledgeGraphStream::with_churn(40, 44, 12.0, 33)
+            .with_burst(2)
+            .take(40),
+    );
+    events
+}
+
+/// Replay the script against a deployment, answering each `Query` event
+/// at a deterministic node id; returns the `(node, prediction)` log.
+fn replay(serving: &dyn Serving, script: &[GraphEvent]) -> Vec<(usize, i32)> {
+    let mut preds = Vec::new();
+    let mut q = 0usize;
+    for ev in script {
+        match ev {
+            GraphEvent::AddEdge(u, v) => {
+                serving.update(Update::AddEdge(*u, *v)).unwrap()
+            }
+            GraphEvent::RemoveEdge(u, v) => {
+                serving.update(Update::RemoveEdge(*u, *v)).unwrap()
+            }
+            GraphEvent::AddNode => serving.update(Update::AddNode).unwrap(),
+            GraphEvent::Query => {
+                let node = (q * 7) % 40;
+                q += 1;
+                preds.push((node, serving.query_wait(Some(node)).unwrap().prediction));
+            }
+        }
+    }
+    preds
+}
+
+#[test]
+fn auto_engine_switches_under_burst_without_changing_answers() {
+    let ds = twin();
+    let script = churn_burst_script();
+
+    // reference: the static plan engine over the same script
+    let plan_spec = DeploymentSpec {
+        engine: EngineSpec::named("plan"),
+        capacity: 48,
+        ..DeploymentSpec::default()
+    };
+    let reference = {
+        let serving =
+            Deployment::launch(&plan_spec, &DataSource::Dataset(ds.clone())).unwrap();
+        let preds = replay(serving.as_ref(), &script);
+        serving.shutdown().unwrap();
+        preds
+    };
+    assert!(!reference.is_empty(), "script produced no queries");
+
+    let serving =
+        Deployment::launch(&auto_spec(1), &DataSource::Dataset(ds.clone())).unwrap();
+    let preds = replay(serving.as_ref(), &script);
+    assert_eq!(
+        preds, reference,
+        "the auto engine changed answers while switching strategies"
+    );
+
+    // the switch is observable through the exact merged metrics: at
+    // least one incremental→plan transition when the burst lands, and
+    // the burst tail leaves the plan strategy active
+    let snap = serving.metrics();
+    assert!(
+        snap.engine_switches >= 1,
+        "no strategy switch recorded under the burst: {snap:?}"
+    );
+    assert_eq!(
+        snap.active_strategy.as_deref(),
+        Some("plan"),
+        "burst tail should leave the planned strategy active"
+    );
+    serving.shutdown().unwrap();
+}
+
+#[test]
+fn auto_fleet_switches_and_matches_the_plan_reference() {
+    let ds = twin();
+    let script = churn_burst_script();
+
+    let plan_spec = DeploymentSpec {
+        engine: EngineSpec::named("plan"),
+        capacity: 48,
+        ..DeploymentSpec::default()
+    };
+    let reference = {
+        let serving =
+            Deployment::launch(&plan_spec, &DataSource::Dataset(ds.clone())).unwrap();
+        let preds = replay(serving.as_ref(), &script);
+        serving.shutdown().unwrap();
+        preds
+    };
+
+    let serving =
+        Deployment::launch(&auto_spec(2), &DataSource::Dataset(ds.clone())).unwrap();
+    assert_eq!(serving.num_shards(), 2);
+    let preds = replay(serving.as_ref(), &script);
+    assert_eq!(
+        preds, reference,
+        "the 2-shard auto fleet diverged from the plan reference"
+    );
+
+    let snap = serving.metrics();
+    assert!(
+        snap.engine_switches >= 1,
+        "no shard switched strategy under the burst: {snap:?}"
+    );
+    // shards see different query/churn interleavings, so the fleet-wide
+    // gauge may be a single strategy or "mixed" — but never absent
+    assert!(
+        snap.active_strategy.is_some(),
+        "adaptive engine must report an active strategy: {snap:?}"
+    );
+    // per-shard gauges merge exactly: the deployment-wide switch count
+    // is the sum of the shard counts
+    let per: usize = serving
+        .shard_metrics()
+        .iter()
+        .map(|s| s.engine_switches)
+        .sum();
+    assert_eq!(per, snap.engine_switches, "shard sum vs merged snapshot");
+    serving.shutdown().unwrap();
+}
+
+#[test]
+fn autotune_winner_launches_and_matches_the_hand_written_equivalent() {
+    let ds = synthesize("auto-tune-accept", 40, 90, 4, 12, 11);
+    let data = DataSource::Dataset(ds.clone());
+    let mut base = DeploymentSpec { capacity: 48, ..DeploymentSpec::default() };
+    base.tuning.probe_budget = 6;
+    base.tuning.top_k = 1;
+
+    let tuned = Deployment::autotune(&base, &data).unwrap();
+    assert!(
+        !tuned.report.rows.is_empty(),
+        "tuning report lists no candidates"
+    );
+    assert!(
+        tuned.report.rows[0].observed.is_some(),
+        "the winner must have been confirmed by a live probe"
+    );
+    let rendered = tuned.report.render();
+    assert!(rendered.contains("objective: latency"), "{rendered}");
+
+    // "a user copying the winning spec by hand" is the TOML round trip:
+    // the emitted spec parses back to exactly the tuned value
+    let hand_written = DeploymentSpec::parse_toml(&tuned.spec.to_toml()).unwrap();
+    assert_eq!(hand_written, tuned.spec);
+
+    let script = churn_burst_script();
+    let a = tuned.launch(&data).unwrap();
+    let b = Deployment::launch(&hand_written, &DataSource::Dataset(ds.clone())).unwrap();
+    let pa = replay(a.as_ref(), &script);
+    let pb = replay(b.as_ref(), &script);
+    assert_eq!(
+        pa, pb,
+        "autotuned winner must answer exactly like its hand-written twin"
+    );
+    a.shutdown().unwrap();
+    b.shutdown().unwrap();
+}

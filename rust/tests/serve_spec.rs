@@ -78,6 +78,7 @@ fn checked_in_example_specs_parse_and_validate() {
         "single_leader_plan.toml",
         "incremental_4shard_sparse.toml",
         "int8_fleet.toml",
+        "self_tuning_auto.toml",
     ] {
         let path = std::path::Path::new("../examples/specs").join(name);
         let spec = DeploymentSpec::load(&path)
@@ -85,6 +86,75 @@ fn checked_in_example_specs_parse_and_validate() {
         spec.validate_with(&reg)
             .unwrap_or_else(|e| panic!("{name}: {e:#}"));
     }
+}
+
+#[test]
+fn tuning_section_round_trips_and_validates() {
+    let mut s = spec("auto", 2);
+    s.tuning.objective = "throughput".into();
+    s.tuning.probe_budget = 128;
+    s.tuning.top_k = 5;
+    s.tuning.hysteresis_low = 0.5;
+    s.tuning.hysteresis_high = 12.0;
+    s.tuning.cooldown_rounds = 7;
+
+    let text = s.to_toml();
+    assert!(text.contains("[tuning]"), "{text}");
+    let parsed = DeploymentSpec::parse_toml(&text).unwrap();
+    assert_eq!(parsed, s, "to_toml → parse_toml must keep [tuning]:\n{text}");
+    parsed.validate_with(&EngineRegistry::builtin()).unwrap();
+}
+
+#[test]
+fn bad_tuning_values_are_rejected_actionably() {
+    // an unknown objective names the two valid ones
+    let mut s = spec("auto", 1);
+    s.tuning.objective = "speed".into();
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("tuning.objective"), "{err}");
+    assert!(err.contains("latency") && err.contains("throughput"), "{err}");
+
+    // a zero-query probe can never rank candidates
+    let mut s = spec("auto", 1);
+    s.tuning.probe_budget = 0;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("tuning.probe_budget must be ≥ 1 (got 0)"), "{err}");
+
+    // inverted / degenerate / non-finite hysteresis bands would pin or
+    // flap the auto engine
+    for (lo, hi) in [(8.0, 1.0), (3.0, 3.0), (-1.0, 2.0), (1.0, f64::NAN)] {
+        let mut s = spec("auto", 1);
+        s.tuning.hysteresis_low = lo;
+        s.tuning.hysteresis_high = hi;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("hysteresis band must satisfy"),
+            "(low {lo}, high {hi}): {err}"
+        );
+    }
+}
+
+#[test]
+fn typoed_engine_option_gets_a_did_you_mean() {
+    let mut s = spec("incremental", 1);
+    s.engine = EngineSpec::named("incremental")
+        .with_option("cost_margen", Value::Float(0.5));
+    let err = format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+    assert!(err.contains("did you mean \"cost_margin\"?"), "{err}");
+    assert!(err.contains("tile_min"), "must still list every option: {err}");
+}
+
+#[test]
+fn registry_surfaces_each_engines_accepted_options() {
+    let reg = EngineRegistry::builtin();
+    assert_eq!(reg.options_for("incremental").unwrap(), ["cost_margin", "tile_min"]);
+    // the auto engine forwards the same knobs to its incremental half
+    assert_eq!(reg.options_for("auto").unwrap(), ["cost_margin", "tile_min"]);
+    assert_eq!(reg.options_for("coordinator").unwrap(), ["artifact"]);
+    assert!(reg.options_for("plan").unwrap().is_empty());
+    assert!(reg.options_for("local").unwrap().is_empty());
+    let err = format!("{:#}", reg.options_for("warp-drive").unwrap_err());
+    assert!(err.contains("warp-drive"), "{err}");
 }
 
 #[test]
