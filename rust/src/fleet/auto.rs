@@ -26,7 +26,12 @@
 //! spec's `[tuning]` section) and a **cooldown** of at least
 //! `cooldown_rounds` rounds between switches. A deep queue waives the
 //! cooldown — a backlog is proof the current strategy is not keeping up,
-//! and waiting out the cooldown just grows it.
+//! and waiting out the cooldown just grows it. An active SLO breach
+//! rides the same hook: the shard loop adds
+//! [`SLO_PRESSURE_BOOST`](crate::monitor::SLO_PRESSURE_BOOST) to the
+//! reported depth while the monitor's breach flag is up (`[slo]`
+//! `pressure = true`), so a burning error budget reads as a maximally
+//! deep queue and the engine may react immediately.
 //!
 //! Both inner engines see every update (applies are cheap mask/frontier
 //! bookkeeping; inference is what costs), so a switch needs no state

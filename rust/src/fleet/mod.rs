@@ -75,6 +75,10 @@ pub struct FleetConfig {
     /// Deployment-wide telemetry hub, shared by every shard worker and
     /// the router (disabled by default — see [`crate::telemetry`]).
     pub telemetry: Arc<crate::telemetry::Telemetry>,
+    /// Deployment-wide operational monitor: heartbeats, history rings,
+    /// SLO evaluation, scrape endpoint (disabled by default — see
+    /// [`crate::monitor`]).
+    pub monitor: crate::monitor::Monitor,
 }
 
 impl FleetConfig {
@@ -87,6 +91,7 @@ impl FleetConfig {
             dtype_bytes: 2,
             aggregation: crate::ops::build::Aggregation::Auto,
             telemetry: crate::telemetry::Telemetry::disabled(),
+            monitor: crate::monitor::Monitor::disabled(),
         }
     }
 
@@ -132,6 +137,7 @@ pub struct Fleet {
     pub plan: FleetPlan,
     router: Router,
     telemetry: Arc<crate::telemetry::Telemetry>,
+    monitor: crate::monitor::Monitor,
 }
 
 impl Fleet {
@@ -168,6 +174,7 @@ impl Fleet {
                     admission: cfg.admission,
                     halo: Some(halo),
                     telemetry: Arc::clone(&cfg.telemetry),
+                    monitor: cfg.monitor.clone(),
                 },
             ));
         }
@@ -175,7 +182,12 @@ impl Fleet {
         router.set_recorder(
             cfg.telemetry.recorder(crate::telemetry::ROUTER_SHARD),
         );
-        Fleet { plan, router, telemetry: Arc::clone(&cfg.telemetry) }
+        Fleet {
+            plan,
+            router,
+            telemetry: Arc::clone(&cfg.telemetry),
+            monitor: cfg.monitor.clone(),
+        }
     }
 
     pub fn update(&self, u: Update) -> Result<()> {
@@ -215,7 +227,14 @@ impl Fleet {
     }
 
     pub fn shutdown(self) -> Result<()> {
-        self.router.shutdown()
+        let result = self.router.shutdown();
+        if result.is_err() && self.monitor.enabled() {
+            // a worker died abnormally: dump the flight recorder so the
+            // breadcrumbs survive the process
+            eprintln!("{}", self.monitor.post_mortem());
+        }
+        self.monitor.stop();
+        result
     }
 }
 
@@ -255,6 +274,14 @@ impl crate::serve::Serving for Fleet {
 
     fn telemetry(&self) -> Option<Arc<crate::telemetry::Telemetry>> {
         Some(Arc::clone(&self.telemetry))
+    }
+
+    fn monitor(&self) -> Option<crate::monitor::Monitor> {
+        if self.monitor.enabled() {
+            Some(self.monitor.clone())
+        } else {
+            None
+        }
     }
 
     fn shutdown(self: Box<Self>) -> Result<()> {

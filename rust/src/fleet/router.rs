@@ -213,6 +213,7 @@ mod tests {
             admission: AdmissionConfig::unbounded(),
             halo: None,
             telemetry: crate::telemetry::Telemetry::disabled(),
+            monitor: crate::monitor::Monitor::disabled(),
         }
     }
 

@@ -58,17 +58,21 @@ pub struct ShardConfig {
     /// Deployment-wide telemetry hub; a disabled hub hands this worker a
     /// no-op recorder and no profiler, keeping the loop branch-only.
     pub telemetry: Arc<crate::telemetry::Telemetry>,
+    /// Deployment-wide monitor; a disabled monitor hands this worker an
+    /// inert heartbeat pulse (same branch-only contract).
+    pub monitor: crate::monitor::Monitor,
 }
 
 impl ShardConfig {
     /// The single-leader server's historical behavior: no halo, no shed,
-    /// no telemetry.
+    /// no telemetry, no monitor.
     pub fn leader(batch: ServerConfig) -> ShardConfig {
         ShardConfig {
             batch,
             admission: AdmissionConfig::unbounded(),
             halo: None,
             telemetry: crate::telemetry::Telemetry::disabled(),
+            monitor: crate::monitor::Monitor::disabled(),
         }
     }
 }
@@ -93,8 +97,13 @@ impl ShardWorker {
         let metrics = Arc::new(Metrics::new_shard(id));
         let applied = Arc::new(AtomicU64::new(0));
         let (m, a) = (metrics.clone(), applied.clone());
-        let join =
-            std::thread::spawn(move || run_shard(id, factory, rx, m, a, config));
+        // register with the monitor here (not in the thread) so shard
+        // registration order is deterministic; the pulse moves into the
+        // worker, which beats it every loop iteration
+        let pulse = config.monitor.register_shard(id, metrics.clone());
+        let join = std::thread::spawn(move || {
+            run_shard(id, factory, rx, m, a, config, pulse)
+        });
         ShardWorker { id, tx, metrics, join: Some(join), applied }
     }
 
@@ -178,7 +187,8 @@ type Waiting = std::collections::BTreeMap<u64, Sender<Result<QueryResponse, Stri
 
 fn run_shard<F, E>(id: usize, factory: F, rx: Receiver<ShardEvent>,
                    metrics: Arc<Metrics>, applied: Arc<AtomicU64>,
-                   config: ShardConfig) -> Result<()>
+                   config: ShardConfig, pulse: crate::monitor::Pulse)
+                   -> Result<()>
 where
     F: FnOnce() -> Result<E>,
     E: InferenceEngine,
@@ -187,6 +197,7 @@ where
         Ok(Ok(e)) => e,
         Ok(Err(e)) => {
             let msg = format!("shard {id} engine init failed: {e:#}");
+            pulse.panicked(&msg);
             reject_all(&rx, &mut Waiting::new(), &metrics, &msg);
             return Err(anyhow!(msg));
         }
@@ -195,6 +206,7 @@ where
                 "shard {id} engine init panicked: {}",
                 panic_message(&payload)
             );
+            pulse.panicked(&msg);
             reject_all(&rx, &mut Waiting::new(), &metrics, &msg);
             return Err(anyhow!(msg));
         }
@@ -215,6 +227,7 @@ where
             &metrics,
             &applied,
             &config,
+            &pulse,
         )
     }));
     match result {
@@ -222,6 +235,7 @@ where
         Err(payload) => {
             let msg =
                 format!("shard {id} worker panicked: {}", panic_message(&payload));
+            pulse.panicked(&msg);
             reject_all(&rx, &mut waiting, &metrics, &msg);
             Err(anyhow!(msg))
         }
@@ -255,11 +269,16 @@ fn shard_loop<E: InferenceEngine>(
     id: usize, engine: &mut E, rx: &Receiver<ShardEvent>, batcher: &Batcher,
     waiting: &mut Waiting, admission: &mut Admission, metrics: &Metrics,
     applied: &Arc<AtomicU64>, config: &ShardConfig,
+    pulse: &crate::monitor::Pulse,
 ) -> Result<()> {
     use crate::telemetry::SpanKind;
     let recorder = config.telemetry.recorder(id);
     let mut open = true;
     while open || batcher.pending() > 0 {
+        // heartbeat: the ≤1 ms ingest timeout below means a healthy
+        // shard beats far faster than any monitor interval; a stale
+        // stamp is the watchdog's wedge signal
+        pulse.touch();
         // ingest events for up to the batching window
         match rx.recv_timeout(config.batch.max_wait.min(Duration::from_millis(1))) {
             Ok(ShardEvent::Update(u)) => {
@@ -355,8 +374,10 @@ fn shard_loop<E: InferenceEngine>(
                 }
             }
             // the queue depth *behind* this batch is the backlog signal
-            // adaptive engines fold into their strategy choice
-            engine.note_queue_depth(batcher.pending());
+            // adaptive engines fold into their strategy choice; an
+            // active SLO breach rides along as a synthetic deep queue
+            // so `auto` engines may switch strategy without cooldown
+            engine.note_queue_depth(batcher.pending() + pulse.pressure_boost());
             let t0 = Instant::now();
             let t0_us = recorder.now_us();
             let result = engine.infer();
@@ -514,6 +535,7 @@ mod tests {
                 admission: AdmissionConfig::bounded(2),
                 halo: None,
                 telemetry: crate::telemetry::Telemetry::disabled(),
+                monitor: crate::monitor::Monitor::disabled(),
             },
         );
         let rxs: Vec<_> = (0..12)
@@ -549,6 +571,7 @@ mod tests {
                 admission: AdmissionConfig::unbounded(),
                 halo: Some(halo),
                 telemetry: crate::telemetry::Telemetry::disabled(),
+                monitor: crate::monitor::Monitor::disabled(),
             },
         );
         let _ = w.query_with_id(1, Some(0)).unwrap().recv().unwrap().unwrap();

@@ -38,6 +38,7 @@
 //! | [`fleet`] | sharded multi-device serving: placement, halo exchange, routing, admission (the N-shard topology) |
 //! | [`metrics`] | latency/energy/throughput/halo accounting (per-shard sinks, bounded reservoirs) |
 //! | [`telemetry`] | query tracing (per-worker span rings), per-op plan profiling, cost-model calibration, Prometheus/JSON exporters — off by default, zero hot-path cost when disabled |
+//! | [`monitor`] | operational surface: history rings, SLO burn-rate monitor, stall watchdog, flight recorder, `std::net` scrape endpoint (`/metrics`, `/health`, `/traces`, `/events`) — off by default, branch-only when disabled |
 //! | [`bench`] | the in-tree benchmark harness + paper-figure drivers |
 //!
 //! ## Serving (the `serve` front door)
@@ -115,6 +116,7 @@ pub mod fleet;
 pub mod graph;
 pub mod incremental;
 pub mod metrics;
+pub mod monitor;
 pub mod npu;
 pub mod ops;
 pub mod quant;

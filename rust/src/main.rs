@@ -10,6 +10,8 @@
 //! grannite fleet     [--spec file.toml …]      # sharded serving demo
 //! grannite trace     [--spec file.toml …]      # telemetry: traces + calibration
 //! grannite tune      [--spec file.toml …]      # spec-space autotuner report
+//! grannite top       [--spec file.toml …]      # live monitor dashboard
+//! grannite monitor   [--spec file.toml …]      # serve + scrape endpoint
 //! grannite artifacts                           # list loaded artifacts
 //! ```
 //!
@@ -170,6 +172,36 @@ fn main() -> Result<()> {
             let ds = datasets::synthesize("tune", nodes, edges, 6, 64, 42);
             tune_demo(&spec, &ds)?;
         }
+        Some("top") => {
+            // live operational dashboard over the monitor's history rings:
+            // drive a workload burst per tick and render windowed rates
+            let mut spec = deployment_spec(&args, 4, "local")?;
+            spec.monitor.enabled = true;
+            let ticks = args.usize_opt("ticks", 12)?;
+            let nodes = args.usize_opt("nodes", 256)?;
+            let edges = args.usize_opt("edges", 1024)?;
+            let query_ratio = args.f64_opt("query-ratio", 0.5)?;
+            let ds = datasets::synthesize("top", nodes, edges, 6, 64, 42);
+            top_demo(&spec, &ds, ticks, query_ratio)?;
+        }
+        Some("monitor") => {
+            // serve with the scrape endpoint up for --duration-ms, then
+            // self-scrape and validate the endpoint's own output
+            let mut spec = deployment_spec(&args, 4, "local")?;
+            spec.monitor.enabled = true;
+            if let Some(a) = args.options.get("addr") {
+                spec.monitor.addr = a.clone();
+            }
+            if spec.monitor.addr.is_empty() {
+                spec.monitor.addr = "127.0.0.1:9898".to_string();
+            }
+            let duration_ms = args.usize_opt("duration-ms", 2_000)?;
+            let nodes = args.usize_opt("nodes", 256)?;
+            let edges = args.usize_opt("edges", 1024)?;
+            let query_ratio = args.f64_opt("query-ratio", 0.5)?;
+            let ds = datasets::synthesize("monitor", nodes, edges, 6, 64, 42);
+            monitor_demo(&spec, &ds, duration_ms, query_ratio)?;
+        }
         Some(other) => bail!("unknown subcommand {other:?} — run without args for help"),
         None => println!("{}", HELP.trim()),
     }
@@ -204,6 +236,15 @@ subcommands:
                      probes, print the ranked report and the winning spec
                      ([tuning] sets objective/probe_budget/top_k;
                      --nodes --edges size the synthetic graph)
+  top                live operational dashboard over the monitor's
+                     history rings: per-shard windowed QPS / shed rate /
+                     latency percentiles, heartbeat ages, SLO burn
+                     status, recent flight-recorder events (--ticks N
+                     renders, one per monitor interval)
+  monitor            serve with the scrape endpoint up (--addr HOST:PORT,
+                     default 127.0.0.1:9898) for --duration-ms, then
+                     self-scrape GET /metrics + /health and validate the
+                     Prometheus output — the CI endpoint check
 
 both serving subcommands construct through serve::Deployment::launch from
 one deployment spec:
@@ -634,4 +675,247 @@ fn trace_demo(spec: &grannite::serve::DeploymentSpec,
     serving.sync()?;
     serving.shutdown()?;
     Ok(())
+}
+
+/// The `top` subcommand body: launch with the monitor on, drive one
+/// workload burst per tick, and render the operational dashboard —
+/// per-shard windowed rates out of the history rings, heartbeat ages,
+/// SLO burn status, and the latest flight-recorder breadcrumbs.
+fn top_demo(spec: &DeploymentSpec, ds: &grannite::graph::datasets::Dataset,
+            ticks: usize, query_ratio: f64) -> Result<()> {
+    use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+    use grannite::serve::{DataSource, Deployment, Serving};
+    use grannite::server::Update;
+
+    let serving = Deployment::launch(spec, &DataSource::Dataset(ds.clone()))?;
+    let monitor = serving.monitor().ok_or_else(|| {
+        anyhow::anyhow!("spec did not activate the monitor")
+    })?;
+    let interval =
+        std::time::Duration::from_millis(spec.monitor.interval_ms.max(1) as u64);
+    let nodes = ds.num_nodes();
+    let capacity = spec.resolved_capacity(nodes)?;
+    println!(
+        "grannite top — {} shard(s), sampling every {:?}, {ticks} tick(s)",
+        serving.num_shards(),
+        interval
+    );
+    let mut stream = KnowledgeGraphStream::new(nodes, capacity, query_ratio, 7);
+    let mut rng = grannite::util::Rng::new(3);
+    for tick in 1..=ticks {
+        // one workload burst per tick, then let the sampler observe it
+        let mut pending = Vec::new();
+        for ev in stream.by_ref().take(200) {
+            match ev {
+                GraphEvent::AddEdge(u, v) => serving.update(Update::AddEdge(u, v))?,
+                GraphEvent::RemoveEdge(u, v) => {
+                    serving.update(Update::RemoveEdge(u, v))?
+                }
+                GraphEvent::AddNode => serving.update(Update::AddNode)?,
+                GraphEvent::Query => {
+                    pending.push(serving.query(Some(rng.usize(nodes)))?)
+                }
+            }
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        std::thread::sleep(interval);
+        monitor.sample_now();
+        render_top(&monitor, tick, ticks);
+    }
+    serving.shutdown()?;
+    Ok(())
+}
+
+/// One `grannite top` frame, rendered from the monitor's public state.
+fn render_top(monitor: &grannite::monitor::Monitor, tick: usize, ticks: usize) {
+    use grannite::monitor::{Sample, WindowRates};
+    use grannite::util::{human_bytes, human_us};
+
+    let Some(health) = monitor.health() else { return };
+    let us = |v: Option<f64>| v.map(human_us).unwrap_or_else(|| "n/a".into());
+    let slo_line = match &health.slo {
+        Some(s) => format!(
+            "slo {}: q{:.0} {} vs objective {} — burn fast {:.2}×/{:.2}× \
+             slow {:.2}×/{:.2}× (avail/lat)",
+            if s.breached { "BREACHED" } else { "ok" },
+            s.quantile * 100.0,
+            us(s.latency_q_us),
+            human_us(s.objective_us),
+            s.fast.availability_burn,
+            s.fast.latency_burn,
+            s.slow.availability_burn,
+            s.slow.latency_burn,
+        ),
+        None => "slo: none configured".to_string(),
+    };
+    println!(
+        "\n[tick {tick}/{ticks}] +{:.1}s  {}  {}",
+        health.at_ms as f64 / 1e3,
+        if health.healthy { "HEALTHY" } else { "UNHEALTHY" },
+        slo_line
+    );
+
+    // windowed rates over each ring's trailing samples
+    let window_rates = |hist: &[Sample]| -> Option<WindowRates> {
+        let refs: Vec<&Sample> = hist.iter().collect();
+        let tail = &refs[refs.len().saturating_sub(8)..];
+        WindowRates::over(tail)
+    };
+    let mut t = Table::new(
+        "windowed rates (trailing ring samples)",
+        &["shard", "qps", "shed", "p50", "p95", "p99", "halo B/s", "beat ms",
+          "state"],
+    );
+    let mut rows: Vec<(String, Option<WindowRates>, String, String)> = monitor
+        .shard_histories()
+        .into_iter()
+        .map(|(id, hist)| {
+            let sh = health.shards.iter().find(|s| s.id == id);
+            (
+                format!("#{id}"),
+                window_rates(&hist),
+                sh.map(|s| s.beat_age_ms.to_string()).unwrap_or_default(),
+                match sh {
+                    Some(s) if s.wedged => "WEDGED".to_string(),
+                    Some(_) => "ok".to_string(),
+                    None => String::new(),
+                },
+            )
+        })
+        .collect();
+    rows.push((
+        "fleet".to_string(),
+        window_rates(&monitor.fleet_history()),
+        String::new(),
+        if health.panicked { "PANICKED".to_string() } else { String::new() },
+    ));
+    for (label, w, beat, state) in rows {
+        match w {
+            Some(w) => t.row(&[
+                label,
+                format!("{:.1}", w.qps),
+                format!("{:.3}", w.shed_rate),
+                us(w.p50_us),
+                us(w.p95_us),
+                us(w.p99_us),
+                human_bytes(w.halo_bps as usize),
+                beat,
+                state,
+            ]),
+            None => t.row(&[
+                label,
+                "–".into(),
+                "–".into(),
+                "–".into(),
+                "–".into(),
+                "–".into(),
+                "–".into(),
+                beat,
+                state,
+            ]),
+        };
+    }
+    t.print();
+
+    let events = monitor.events();
+    if !events.is_empty() {
+        println!("recent events:");
+        for e in events.iter().rev().take(4).rev() {
+            println!("{}", e.render());
+        }
+    }
+}
+
+/// The `monitor` subcommand body: serve with the scrape endpoint bound,
+/// keep a workload running for `duration_ms`, then scrape the
+/// deployment's **own** endpoint over TCP and validate what it serves —
+/// the same check the CI examples job makes with curl.
+fn monitor_demo(spec: &DeploymentSpec, ds: &grannite::graph::datasets::Dataset,
+                duration_ms: usize, query_ratio: f64) -> Result<()> {
+    use grannite::graph::stream::{GraphEvent, KnowledgeGraphStream};
+    use grannite::serve::{DataSource, Deployment, Serving};
+    use grannite::server::Update;
+    use std::time::{Duration, Instant};
+
+    let serving = Deployment::launch(spec, &DataSource::Dataset(ds.clone()))?;
+    let monitor = serving.monitor().ok_or_else(|| {
+        anyhow::anyhow!("spec did not activate the monitor")
+    })?;
+    let addr = monitor.addr().ok_or_else(|| {
+        anyhow::anyhow!("no scrape address bound — set [monitor] addr or --addr")
+    })?;
+    println!(
+        "serving {} shard(s); scrape endpoint http://{addr} \
+         (/metrics /health /traces /events) for {duration_ms} ms",
+        serving.num_shards()
+    );
+
+    let nodes = ds.num_nodes();
+    let capacity = spec.resolved_capacity(nodes)?;
+    let mut stream = KnowledgeGraphStream::new(nodes, capacity, query_ratio, 7);
+    let mut rng = grannite::util::Rng::new(3);
+    let deadline = Instant::now() + Duration::from_millis(duration_ms as u64);
+    let mut answered = 0usize;
+    while Instant::now() < deadline {
+        let mut pending = Vec::new();
+        for ev in stream.by_ref().take(100) {
+            match ev {
+                GraphEvent::AddEdge(u, v) => serving.update(Update::AddEdge(u, v))?,
+                GraphEvent::RemoveEdge(u, v) => {
+                    serving.update(Update::RemoveEdge(u, v))?
+                }
+                GraphEvent::AddNode => serving.update(Update::AddNode)?,
+                GraphEvent::Query => {
+                    pending.push(serving.query(Some(rng.usize(nodes)))?)
+                }
+            }
+        }
+        for rx in pending {
+            if matches!(rx.recv(), Ok(Ok(_))) {
+                answered += 1;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("answered {answered} queries while the endpoint was up");
+
+    // self-scrape: validate what the endpoint actually serves over TCP
+    let (status, metrics_body) = http_get(addr, "/metrics")?;
+    anyhow::ensure!(
+        status.contains("200"),
+        "GET /metrics returned {status:?}"
+    );
+    let samples = grannite::telemetry::export::validate_prometheus(&metrics_body)
+        .context("scraped /metrics failed Prometheus validation")?;
+    let (health_status, health_body) = http_get(addr, "/health")?;
+    println!(
+        "self-scrape: /metrics {samples} samples (validated); /health {}",
+        health_status.trim()
+    );
+    println!("{}", health_body.trim());
+    serving.shutdown()?;
+    Ok(())
+}
+
+/// Minimal HTTP GET against the deployment's own scrape endpoint:
+/// returns `(status line, body)`.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> Result<(String, String)> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to scrape endpoint {addr}"))?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    write!(
+        s,
+        "GET {path} HTTP/1.1\r\nHost: grannite\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    let status = raw.lines().next().unwrap_or("").to_string();
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
 }

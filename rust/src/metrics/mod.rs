@@ -399,6 +399,32 @@ impl Metrics {
             elapsed_s: elapsed,
         }
     }
+
+    /// Interpolated latency quantile over this sink's retained samples
+    /// (`None` before any query completed). The SLO monitor samples this
+    /// per tick — see [`crate::monitor::history::Sample`].
+    pub fn latency_quantile(&self, q: f64) -> Option<f64> {
+        self.inner.lock().unwrap().latencies_us.quantile(q)
+    }
+
+    /// Interpolated latency quantile over the **union** of several
+    /// sinks' retained samples — the deployment-level number an SLO
+    /// objective is held against (a quantile of merged shards is not the
+    /// mean of per-shard quantiles).
+    pub fn pooled_latency_quantile<'a, I>(sinks: I, q: f64) -> Option<f64>
+    where
+        I: IntoIterator<Item = &'a Metrics>,
+    {
+        let mut pooled: Vec<f64> = Vec::new();
+        for m in sinks {
+            pooled.extend_from_slice(m.inner.lock().unwrap().latencies_us.samples());
+        }
+        if pooled.is_empty() {
+            return None;
+        }
+        pooled.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(reservoir::quantile_sorted(&pooled, q))
+    }
 }
 
 impl Snapshot {
@@ -616,6 +642,29 @@ mod tests {
         assert_eq!(s.mean_batch, 3.0);
         assert_eq!(s.latency.unwrap().mean, 150.0);
         assert_eq!(s.shard, None);
+    }
+
+    #[test]
+    fn latency_quantiles_single_and_pooled() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        assert_eq!(a.latency_quantile(0.5), None, "no queries yet");
+        assert_eq!(Metrics::pooled_latency_quantile([&a, &b], 0.5), None);
+        // shard 0 holds 1..=50, shard 1 holds 51..=100: the pooled
+        // median must land mid-range even though each shard's own
+        // median sits in its half
+        for v in 1..=50 {
+            a.record_query(v as f64, 1.0, 1);
+        }
+        for v in 51..=100 {
+            b.record_query(v as f64, 1.0, 1);
+        }
+        let ma = a.latency_quantile(0.5).unwrap();
+        let pooled = Metrics::pooled_latency_quantile([&a, &b], 0.5).unwrap();
+        assert!((ma - 25.5).abs() < 1e-9, "shard median {ma}");
+        assert!((pooled - 50.5).abs() < 1e-9, "pooled median {pooled}");
+        assert_eq!(a.latency_quantile(1.0), Some(50.0));
+        assert_eq!(Metrics::pooled_latency_quantile([&a, &b], 1.0), Some(100.0));
     }
 
     #[test]

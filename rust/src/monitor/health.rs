@@ -1,0 +1,426 @@
+//! Heartbeats, the stall watchdog, and the flight recorder.
+//!
+//! Every shard worker holds a [`Pulse`] and touches it once per loop
+//! iteration. The loop ingests events with a ≤ 1 ms receive timeout, so
+//! a **healthy** shard beats hundreds of times per monitor interval and
+//! a shard whose heartbeat is older than one interval is wedged — stuck
+//! inside an engine round, deadlocked, or dead. The watchdog check is
+//! computed on demand from the atomic beat stamp (no watchdog thread
+//! needs to be scheduled for `health()` to tell the truth).
+//!
+//! The [`FlightRecorder`] is a small bounded ring of structured
+//! [`Event`]s — sheds, engine switches, halo spikes, SLO transitions,
+//! wedge transitions, panics — that answers "what happened just before
+//! it broke?" Events are *derived by the sampler thread from snapshot
+//! deltas* (the hot path never pushes an event); the one exception is
+//! [`Pulse::panicked`], which runs on a shard's already-cold crash path.
+//!
+//! Disabled contract: a disabled [`Pulse`] is `Option::None` inside —
+//! [`Pulse::touch`] is a branch, [`Pulse::pressure_boost`] returns 0,
+//! no clock is read, nothing locks, nothing allocates (proven in
+//! `rust/tests/plan_alloc.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Queue-depth boost an SLO breach injects through
+/// [`crate::server::InferenceEngine::note_queue_depth`]: far above any
+/// real backlog and any configured `queue_pressure` threshold
+/// ([`crate::fleet::AutoConfig`], default 8), so adaptive engines treat
+/// a breach exactly like a deep queue — cooldown waived, switch now.
+pub const SLO_PRESSURE_BOOST: usize = 1_000_000;
+
+/// What a flight-recorder event records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Deployment monitor started.
+    Launch,
+    /// Monitor stopped (clean shutdown marker).
+    Shutdown,
+    /// Admission rejections observed this tick (value = how many).
+    Shed,
+    /// Adaptive-engine strategy switches observed this tick.
+    EngineSwitch,
+    /// Halo traffic this tick spiked far above its moving average.
+    HaloSpike,
+    /// The SLO transitioned healthy → breached.
+    SloBreach,
+    /// The SLO transitioned breached → healthy.
+    SloRecovered,
+    /// A shard's heartbeat went stale (wedged/stalled/dead).
+    ShardWedged,
+    /// A previously-wedged shard resumed beating.
+    ShardRecovered,
+    /// A shard worker panicked (recorded from its crash path).
+    ShardPanic,
+}
+
+impl EventKind {
+    /// Stable lowercase mnemonic (JSON `kind` field, post-mortem lines).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Launch => "launch",
+            EventKind::Shutdown => "shutdown",
+            EventKind::Shed => "shed",
+            EventKind::EngineSwitch => "engine_switch",
+            EventKind::HaloSpike => "halo_spike",
+            EventKind::SloBreach => "slo_breach",
+            EventKind::SloRecovered => "slo_recovered",
+            EventKind::ShardWedged => "shard_wedged",
+            EventKind::ShardRecovered => "shard_recovered",
+            EventKind::ShardPanic => "shard_panic",
+        }
+    }
+}
+
+/// One flight-recorder breadcrumb.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Milliseconds since the monitor epoch.
+    pub at_ms: u64,
+    /// Shard the event concerns (`None` = deployment-wide).
+    pub shard: Option<usize>,
+    pub kind: EventKind,
+    /// Human detail ("12 rejections", the panic message, …).
+    pub detail: String,
+}
+
+impl Event {
+    /// Stable one-line JSON encoding (the `/events` endpoint emits one
+    /// per line).
+    pub fn to_json(&self) -> String {
+        let shard = match self.shard {
+            Some(s) => s.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"at_ms\":{},\"shard\":{shard},\"kind\":\"{}\",\
+             \"detail\":\"{}\"}}",
+            self.at_ms,
+            self.kind.name(),
+            self.detail.replace('\\', "\\\\").replace('"', "\\\""),
+        )
+    }
+
+    /// One post-mortem report line.
+    pub fn render(&self) -> String {
+        let who = match self.shard {
+            Some(s) => format!("shard {s}"),
+            None => "fleet".to_string(),
+        };
+        format!(
+            "  +{:>8.3}s  {:<9} {:<15} {}",
+            self.at_ms as f64 / 1e3,
+            who,
+            self.kind.name(),
+            self.detail
+        )
+    }
+}
+
+/// Bounded event ring (oldest overwritten) with an exact total count.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    events: VecDeque<Event>,
+    total: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        let cap = cap.max(1);
+        FlightRecorder { cap, events: VecDeque::with_capacity(cap), total: 0 }
+    }
+
+    pub fn push(&mut self, e: Event) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+        }
+        self.events.push_back(e);
+        self.total += 1;
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.iter().cloned().collect()
+    }
+
+    /// Events ever recorded (≥ retained).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The post-mortem report: every retained breadcrumb in order, with
+    /// how many older ones the ring dropped.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let dropped = self.total - self.events.len() as u64;
+        out.push_str(&format!(
+            "flight recorder — {} event(s) retained ({} dropped):\n",
+            self.events.len(),
+            dropped
+        ));
+        for e in &self.events {
+            out.push_str(&e.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Shared heartbeat + pressure state between one shard worker and the
+/// monitor. The shard side only ever touches atomics.
+#[derive(Debug)]
+pub(crate) struct PulseShared {
+    pub(crate) shard: usize,
+    /// Monitor epoch (every beat stamp is relative to it).
+    pub(crate) epoch: Instant,
+    /// Last heartbeat, ms since epoch.
+    pub(crate) beat_ms: AtomicU64,
+    /// Deployment-wide SLO breach flag, written by the sampler.
+    pub(crate) breached: Arc<AtomicBool>,
+    /// Whether a breach should be fed to the engines as queue pressure.
+    pub(crate) pressure: bool,
+    /// Any-shard-panicked flag (read by `health()`).
+    pub(crate) panic_flag: Arc<AtomicBool>,
+    /// The deployment's flight recorder (panic breadcrumbs only — the
+    /// hot path never locks this).
+    pub(crate) recorder: Arc<Mutex<FlightRecorder>>,
+}
+
+/// A shard worker's heartbeat handle. Disabled (the default everywhere
+/// `[monitor]` is absent) it is a no-op: no clock, no lock, no
+/// allocation — just an `Option` branch.
+#[derive(Debug, Clone, Default)]
+pub struct Pulse {
+    pub(crate) inner: Option<Arc<PulseShared>>,
+}
+
+impl Pulse {
+    /// The inert pulse every unmonitored worker gets.
+    pub fn disabled() -> Pulse {
+        Pulse { inner: None }
+    }
+
+    /// Whether beats are actually recorded.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Stamp a heartbeat (called once per shard-loop iteration).
+    #[inline]
+    pub fn touch(&self) {
+        if let Some(p) = &self.inner {
+            p.beat_ms
+                .store(p.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Extra queue depth to report to the engine this round:
+    /// [`SLO_PRESSURE_BOOST`] while the SLO is breached and pressure
+    /// feedback is on, else 0 (always 0 when disabled).
+    #[inline]
+    pub fn pressure_boost(&self) -> usize {
+        match &self.inner {
+            Some(p) if p.pressure && p.breached.load(Ordering::Relaxed) => {
+                SLO_PRESSURE_BOOST
+            }
+            _ => 0,
+        }
+    }
+
+    /// Record a worker panic breadcrumb (crash path — cold by
+    /// definition, so locking the recorder here is fine).
+    pub fn panicked(&self, msg: &str) {
+        if let Some(p) = &self.inner {
+            p.panic_flag.store(true, Ordering::Relaxed);
+            if let Ok(mut rec) = p.recorder.lock() {
+                rec.push(Event {
+                    at_ms: p.epoch.elapsed().as_millis() as u64,
+                    shard: Some(p.shard),
+                    kind: EventKind::ShardPanic,
+                    detail: msg.to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// One shard's liveness as of a [`HealthReport`].
+#[derive(Debug, Clone)]
+pub struct ShardHealth {
+    pub id: usize,
+    /// Heartbeat age, ms (0 for a shard that just beat).
+    pub beat_age_ms: u64,
+    /// True when the heartbeat is older than one monitor interval.
+    pub wedged: bool,
+    /// Cumulative counters, for context.
+    pub queries: usize,
+    pub rejected: usize,
+}
+
+/// The deployment's liveness + SLO verdict, from
+/// [`crate::monitor::Monitor::health`] / `GET /health`.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    /// When the report was computed, ms since the monitor epoch.
+    pub at_ms: u64,
+    /// No wedged shard, no recorded panic, no active SLO breach.
+    pub healthy: bool,
+    /// Any worker panic was ever recorded.
+    pub panicked: bool,
+    /// SLO verdict (`None` when no `[slo]` section is enabled).
+    pub slo: Option<super::slo::SloStatus>,
+    pub shards: Vec<ShardHealth>,
+}
+
+impl HealthReport {
+    /// Stable JSON encoding (the `/health` body).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str(&format!(
+            "{{\"healthy\":{},\"at_ms\":{},\"panicked\":{},\"slo\":{}",
+            self.healthy,
+            self.at_ms,
+            self.panicked,
+            match &self.slo {
+                Some(s) => s.to_json(),
+                None => "null".to_string(),
+            }
+        ));
+        out.push_str(",\"shards\":[");
+        for (i, s) in self.shards.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"id\":{},\"beat_age_ms\":{},\"wedged\":{},\
+                 \"queries\":{},\"rejected\":{}}}",
+                s.id, s.beat_age_ms, s.wedged, s.queries, s.rejected
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_pulse_is_inert() {
+        let p = Pulse::disabled();
+        assert!(!p.enabled());
+        p.touch(); // must be a no-op, not a panic
+        assert_eq!(p.pressure_boost(), 0);
+        p.panicked("nothing listens");
+    }
+
+    #[test]
+    fn enabled_pulse_beats_and_boosts() {
+        let recorder = Arc::new(Mutex::new(FlightRecorder::new(8)));
+        let breached = Arc::new(AtomicBool::new(false));
+        let panic_flag = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(PulseShared {
+            shard: 3,
+            epoch: Instant::now(),
+            beat_ms: AtomicU64::new(u64::MAX),
+            breached: breached.clone(),
+            pressure: true,
+            panic_flag: panic_flag.clone(),
+            recorder: recorder.clone(),
+        });
+        let p = Pulse { inner: Some(shared.clone()) };
+        p.touch();
+        assert!(shared.beat_ms.load(Ordering::Relaxed) < 1_000, "fresh beat");
+        assert_eq!(p.pressure_boost(), 0, "no breach, no boost");
+        breached.store(true, Ordering::Relaxed);
+        assert_eq!(p.pressure_boost(), SLO_PRESSURE_BOOST);
+        p.panicked("engine round hung");
+        assert!(panic_flag.load(Ordering::Relaxed));
+        let evs = recorder.lock().unwrap().events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, EventKind::ShardPanic);
+        assert_eq!(evs[0].shard, Some(3));
+        assert!(evs[0].detail.contains("hung"));
+    }
+
+    #[test]
+    fn pressure_respects_the_spec_switch() {
+        let shared = Arc::new(PulseShared {
+            shard: 0,
+            epoch: Instant::now(),
+            beat_ms: AtomicU64::new(0),
+            breached: Arc::new(AtomicBool::new(true)),
+            pressure: false, // [slo] pressure = false
+            panic_flag: Arc::new(AtomicBool::new(false)),
+            recorder: Arc::new(Mutex::new(FlightRecorder::new(4))),
+        });
+        let p = Pulse { inner: Some(shared) };
+        assert_eq!(p.pressure_boost(), 0, "breached but pressure is off");
+    }
+
+    #[test]
+    fn recorder_ring_bounds_and_renders_in_order() {
+        let mut r = FlightRecorder::new(3);
+        for i in 0..5u64 {
+            r.push(Event {
+                at_ms: i * 100,
+                shard: Some(i as usize),
+                kind: EventKind::Shed,
+                detail: format!("{i} rejections"),
+            });
+        }
+        let evs = r.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(r.total(), 5);
+        let ats: Vec<u64> = evs.iter().map(|e| e.at_ms).collect();
+        assert_eq!(ats, vec![200, 300, 400], "oldest dropped, order kept");
+        let report = r.render();
+        assert!(report.contains("3 event(s) retained (2 dropped)"), "{report}");
+        let p2 = report.find("2 rejections").unwrap();
+        let p4 = report.find("4 rejections").unwrap();
+        assert!(p2 < p4, "breadcrumbs render in order");
+    }
+
+    #[test]
+    fn event_json_escapes_and_balances() {
+        let e = Event {
+            at_ms: 42,
+            shard: None,
+            kind: EventKind::ShardPanic,
+            detail: "say \"boom\"".to_string(),
+        };
+        let j = e.to_json();
+        assert!(j.contains("\\\"boom\\\""), "{j}");
+        assert!(j.contains("\"shard\":null"), "{j}");
+        assert!(j.contains("\"kind\":\"shard_panic\""), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn health_report_json_reflects_wedges() {
+        let r = HealthReport {
+            at_ms: 500,
+            healthy: false,
+            panicked: false,
+            slo: None,
+            shards: vec![
+                ShardHealth { id: 0, beat_age_ms: 1, wedged: false, queries: 10,
+                              rejected: 0 },
+                ShardHealth { id: 1, beat_age_ms: 900, wedged: true, queries: 2,
+                              rejected: 5 },
+            ],
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"healthy\":false"), "{j}");
+        assert!(j.contains("\"slo\":null"), "{j}");
+        assert!(j.contains("\"id\":1,\"beat_age_ms\":900,\"wedged\":true"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        assert_eq!(j.matches('[').count(), j.matches(']').count(), "{j}");
+    }
+}

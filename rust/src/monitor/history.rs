@@ -1,0 +1,241 @@
+//! Fixed-capacity time-series rings of metric snapshots.
+//!
+//! The sampling thread ([`crate::monitor::Monitor`]) appends one
+//! [`Sample`] per shard per tick — a timestamped [`Snapshot`] of the
+//! shard's cumulative counters plus the deployment's target-quantile
+//! latency — into a [`HistoryRing`] that overwrites its oldest entry
+//! past capacity. Everything windowed (`grannite top` columns, the SLO
+//! burn rates in [`crate::monitor::slo`]) is derived from **deltas
+//! between ring entries**, so the rings are the single source of "what
+//! happened over the last N seconds" and the hot path never computes a
+//! rate.
+
+use std::collections::VecDeque;
+
+use crate::metrics::Snapshot;
+
+/// One sampler tick for one sink: cumulative counters at a point in
+/// time, plus the latency quantile the SLO objective targets (pooled
+/// over the deployment for the fleet ring, per-sink otherwise).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Milliseconds since the monitor epoch.
+    pub at_ms: u64,
+    /// Cumulative counters at this tick (not a delta).
+    pub snap: Snapshot,
+    /// The SLO target-quantile latency estimate at this tick, µs
+    /// (`None` before any query completed).
+    pub latency_q_us: Option<f64>,
+}
+
+/// Bounded append-only ring of [`Sample`]s, oldest overwritten.
+#[derive(Debug)]
+pub struct HistoryRing {
+    cap: usize,
+    samples: VecDeque<Sample>,
+    /// Ticks ever pushed (so "how much history fell off" is knowable).
+    total: u64,
+}
+
+impl HistoryRing {
+    /// A ring retaining at most `cap` samples (`cap` ≥ 2 enforced: one
+    /// sample yields no delta).
+    pub fn new(cap: usize) -> HistoryRing {
+        let cap = cap.max(2);
+        HistoryRing { cap, samples: VecDeque::with_capacity(cap), total: 0 }
+    }
+
+    /// Append one sample, dropping the oldest past capacity.
+    pub fn push(&mut self, s: Sample) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(s);
+        self.total += 1;
+    }
+
+    /// Newest sample, if any tick ever ran.
+    pub fn latest(&self) -> Option<&Sample> {
+        self.samples.back()
+    }
+
+    /// Retained samples, oldest first.
+    pub fn samples(&self) -> impl Iterator<Item = &Sample> {
+        self.samples.iter()
+    }
+
+    /// Retained sample count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True before the first tick.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Ticks ever pushed (≥ [`HistoryRing::len`]).
+    pub fn total_pushed(&self) -> u64 {
+        self.total
+    }
+
+    /// The retained samples whose timestamp falls inside the trailing
+    /// `window_ms` ending at `now_ms`, oldest first. The sample
+    /// immediately *preceding* the window is included when available so
+    /// delta rates cover the full span (a window needs a baseline).
+    pub fn window(&self, now_ms: u64, window_ms: u64) -> Vec<&Sample> {
+        let start = now_ms.saturating_sub(window_ms);
+        let mut out: Vec<&Sample> = Vec::new();
+        for (i, s) in self.samples.iter().enumerate() {
+            if s.at_ms >= start {
+                // include the baseline sample just before the cutoff
+                if out.is_empty() && i > 0 {
+                    out.push(&self.samples[i - 1]);
+                }
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+/// Delta-derived rates over a run of samples — what `grannite top`
+/// renders per shard and per fleet, and what the SLO windows consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowRates {
+    /// Wall span the deltas cover, ms.
+    pub span_ms: u64,
+    /// Samples the window held (including the baseline).
+    pub ticks: usize,
+    /// Queries answered per second over the span.
+    pub qps: f64,
+    /// Fraction of arrivals rejected over the span
+    /// (`Δrejected / Δ(queries + rejected)`; 0 with no arrivals).
+    pub shed_rate: f64,
+    /// `Δrecomputed_rows / Δeligible_rows` over the span (0 with no
+    /// delta-aware rounds).
+    pub recompute_ratio: f64,
+    /// Halo bytes shipped per second over the span.
+    pub halo_bps: f64,
+    /// Latency percentiles at the window's newest tick, µs (cumulative
+    /// reservoir estimates — see [`crate::metrics::SAMPLE_CAP`]).
+    pub p50_us: Option<f64>,
+    pub p95_us: Option<f64>,
+    pub p99_us: Option<f64>,
+}
+
+impl WindowRates {
+    /// Rates over `samples` (oldest first, as [`HistoryRing::window`]
+    /// returns them). `None` with fewer than two samples — one point
+    /// has no delta.
+    pub fn over(samples: &[&Sample]) -> Option<WindowRates> {
+        let (first, last) = match (samples.first(), samples.last()) {
+            (Some(f), Some(l)) if samples.len() >= 2 => (*f, *l),
+            _ => return None,
+        };
+        let span_ms = last.at_ms.saturating_sub(first.at_ms).max(1);
+        let span_s = span_ms as f64 / 1e3;
+        let dq = last.snap.queries.saturating_sub(first.snap.queries);
+        let dr = last.snap.rejected.saturating_sub(first.snap.rejected);
+        let arrivals = dq + dr;
+        let d_elig =
+            last.snap.eligible_rows.saturating_sub(first.snap.eligible_rows);
+        let d_rec = last
+            .snap
+            .recomputed_rows
+            .saturating_sub(first.snap.recomputed_rows);
+        let d_halo = last.snap.halo_bytes.saturating_sub(first.snap.halo_bytes);
+        let lat = last.snap.latency.as_ref();
+        Some(WindowRates {
+            span_ms,
+            ticks: samples.len(),
+            qps: dq as f64 / span_s,
+            shed_rate: if arrivals == 0 {
+                0.0
+            } else {
+                dr as f64 / arrivals as f64
+            },
+            recompute_ratio: if d_elig == 0 {
+                0.0
+            } else {
+                d_rec as f64 / d_elig as f64
+            },
+            halo_bps: d_halo as f64 / span_s,
+            p50_us: lat.map(|l| l.p50),
+            p95_us: lat.map(|l| l.p95),
+            p99_us: lat.map(|l| l.p99),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    fn sample(at_ms: u64, queries: usize, rejected: usize) -> Sample {
+        let m = Metrics::new_shard(0);
+        for _ in 0..queries {
+            m.record_query(100.0, 1.0, 1);
+        }
+        for _ in 0..rejected {
+            m.record_rejected();
+        }
+        Sample { at_ms, snap: m.snapshot(), latency_q_us: Some(100.0) }
+    }
+
+    #[test]
+    fn ring_bounds_storage_and_keeps_newest() {
+        let mut r = HistoryRing::new(4);
+        for t in 0..10u64 {
+            r.push(sample(t * 100, t as usize, 0));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total_pushed(), 10);
+        assert_eq!(r.latest().unwrap().at_ms, 900);
+        let ats: Vec<u64> = r.samples().map(|s| s.at_ms).collect();
+        assert_eq!(ats, vec![600, 700, 800, 900], "oldest overwritten");
+    }
+
+    #[test]
+    fn window_includes_the_baseline_sample() {
+        let mut r = HistoryRing::new(16);
+        for t in 0..8u64 {
+            r.push(sample(t * 100, t as usize, 0));
+        }
+        // trailing 250 ms at t=700 covers 500..=700; the baseline at 400
+        // rides along so the delta spans the full window
+        let w = r.window(700, 250);
+        let ats: Vec<u64> = w.iter().map(|s| s.at_ms).collect();
+        assert_eq!(ats, vec![400, 500, 600, 700]);
+        // a window wider than history returns everything, no baseline
+        assert_eq!(r.window(700, 10_000).len(), 8);
+    }
+
+    #[test]
+    fn window_rates_are_delta_derived() {
+        // 10 queries + 10 rejections arrive over exactly one second
+        let a = sample(1_000, 5, 0);
+        let b = sample(2_000, 15, 10);
+        let w = WindowRates::over(&[&a, &b]).unwrap();
+        assert_eq!(w.span_ms, 1_000);
+        assert_eq!(w.ticks, 2);
+        assert!((w.qps - 10.0).abs() < 1e-9, "qps {}", w.qps);
+        assert!((w.shed_rate - 0.5).abs() < 1e-9, "shed {}", w.shed_rate);
+        assert_eq!(w.p50_us, Some(100.0));
+        // one sample has no delta
+        assert!(WindowRates::over(&[&a]).is_none());
+        assert!(WindowRates::over(&[]).is_none());
+    }
+
+    #[test]
+    fn idle_window_reads_zero_not_nan() {
+        let a = sample(0, 3, 0);
+        let b = sample(500, 3, 0);
+        let w = WindowRates::over(&[&a, &b]).unwrap();
+        assert_eq!(w.qps, 0.0);
+        assert_eq!(w.shed_rate, 0.0);
+        assert_eq!(w.recompute_ratio, 0.0);
+        assert_eq!(w.halo_bps, 0.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! The scrape endpoint: a dependency-free `std::net` HTTP/1.1 server.
+//!
+//! Bound only when the spec's `[monitor] addr` is set
+//! ([`crate::monitor::Monitor::bind`]); one accept thread serves one
+//! request per connection (`Connection: close`), which is exactly the
+//! shape Prometheus scrapes and `curl` checks take. Routes:
+//!
+//! | route      | body                                                  |
+//! |------------|-------------------------------------------------------|
+//! | `/metrics` | Prometheus text over live shard snapshots             |
+//! | `/health`  | liveness + SLO JSON — `200` healthy, `503` otherwise  |
+//! | `/traces`  | stitched query traces, JSON lines                     |
+//! | `/events`  | flight-recorder breadcrumbs, JSON lines               |
+//!
+//! Anything else is a `404` that lists the routes. The serving thread
+//! holds a [`Monitor`] clone and renders through its public accessors,
+//! so the endpoint can never observe half-updated state.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::Monitor;
+
+/// How long a connected client gets to send its request line.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Spawn the accept loop. [`Monitor::stop`] unblocks it with a
+/// throwaway connection after setting the stop flag.
+pub(crate) fn spawn(monitor: Monitor, listener: TcpListener) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if monitor.stopping() {
+                break;
+            }
+            if let Ok(mut stream) = stream {
+                let _ = handle(&monitor, &mut stream);
+            }
+        }
+    })
+}
+
+/// Serve one request on one connection, best effort.
+fn handle(monitor: &Monitor, stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let (method, path) = read_request_line(stream)?;
+    let (status, content_type, body) = route(monitor, &method, &path);
+    stream.write_all(response(status, content_type, &body).as_bytes())?;
+    stream.flush()
+}
+
+/// Read up to the end of the request line and split out method + path
+/// (query strings are ignored). Headers and body, if any, are left
+/// unread — we answer and close.
+fn read_request_line(stream: &mut TcpStream) -> std::io::Result<(String, String)> {
+    let mut line: Vec<u8> = Vec::with_capacity(128);
+    let mut byte = [0u8; 1];
+    while line.len() < 4096 {
+        let n = stream.read(&mut byte)?;
+        if n == 0 || byte[0] == b'\n' {
+            break;
+        }
+        if byte[0] != b'\r' {
+            line.push(byte[0]);
+        }
+    }
+    let line = String::from_utf8_lossy(&line);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts
+        .next()
+        .unwrap_or("/")
+        .split('?')
+        .next()
+        .unwrap_or("/")
+        .to_string();
+    Ok((method, path))
+}
+
+/// Map a request to `(status, content type, body)`.
+fn route(monitor: &Monitor, method: &str, path: &str) -> (u16, &'static str, String) {
+    if method != "GET" {
+        return (405, "text/plain; charset=utf-8",
+                "only GET is supported\n".to_string());
+    }
+    match path {
+        "/metrics" => (
+            200,
+            // the content type Prometheus' text exposition format uses
+            "text/plain; version=0.0.4; charset=utf-8",
+            monitor.render_prometheus(),
+        ),
+        "/health" => {
+            let Some(report) = monitor.health() else {
+                return (503, "application/json",
+                        "{\"healthy\":false,\"error\":\"monitor disabled\"}\n"
+                            .to_string());
+            };
+            let status = if report.healthy { 200 } else { 503 };
+            let mut body = report.to_json();
+            body.push('\n');
+            (status, "application/json", body)
+        }
+        "/traces" => (200, "application/json", monitor.render_traces()),
+        "/events" => (200, "application/json", monitor.render_events()),
+        _ => (
+            404,
+            "text/plain; charset=utf-8",
+            "not found — try /metrics, /health, /traces, /events\n".to_string(),
+        ),
+    }
+}
+
+/// Render a full HTTP/1.1 response.
+fn response(status: u16, content_type: &str, body: &str) -> String {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::monitor::MonitorConfig;
+    use std::sync::Arc;
+
+    /// Raw client: connect, send a request line, read to EOF.
+    fn get(addr: std::net::SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn live_monitor() -> (Monitor, std::net::SocketAddr) {
+        let m = Monitor::new(MonitorConfig {
+            interval: Duration::from_millis(50),
+            ..MonitorConfig::default()
+        });
+        let sink = Arc::new(Metrics::new_shard(0));
+        let pulse = m.register_shard(0, sink.clone());
+        sink.record_query(120.0, 2.0, 1);
+        pulse.touch();
+        let addr = m.bind("127.0.0.1:0").unwrap();
+        m.start();
+        (m, addr)
+    }
+
+    #[test]
+    fn metrics_health_and_404_over_a_real_socket() {
+        let (m, addr) = live_monitor();
+        let metrics = get(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
+        assert!(metrics.contains("text/plain; version=0.0.4"), "{metrics}");
+        let body = metrics.split("\r\n\r\n").nth(1).unwrap();
+        crate::telemetry::export::validate_prometheus(body).unwrap();
+
+        let health = get(addr, "GET /health HTTP/1.1\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200 OK"), "{health}");
+        assert!(health.contains("\"healthy\":true"), "{health}");
+
+        let miss = get(addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+        assert!(miss.contains("/metrics"), "404 lists the routes: {miss}");
+
+        let post = get(addr, "POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.1 405"), "{post}");
+        m.stop();
+    }
+
+    #[test]
+    fn health_goes_503_when_a_shard_wedges() {
+        let (m, addr) = live_monitor();
+        // the registered pulse stops beating; one 50 ms interval later
+        // the endpoint must report the wedge
+        std::thread::sleep(Duration::from_millis(120));
+        let health = get(addr, "GET /health HTTP/1.1\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 503"), "{health}");
+        assert!(health.contains("\"wedged\":true"), "{health}");
+        m.stop();
+    }
+
+    #[test]
+    fn traces_and_events_serve_json_lines() {
+        let (m, addr) = live_monitor();
+        m.sample_now();
+        let traces = get(addr, "GET /traces HTTP/1.1\r\n\r\n");
+        assert!(traces.starts_with("HTTP/1.1 200 OK"), "{traces}");
+        let body = traces.split("\r\n\r\n").nth(1).unwrap();
+        crate::telemetry::export::validate_json_lines(body).unwrap();
+        let events = get(addr, "GET /events HTTP/1.1\r\n\r\n");
+        assert!(events.contains("\"kind\":\"launch\""), "{events}");
+        m.stop();
+    }
+
+    #[test]
+    fn stop_unblocks_the_accept_loop() {
+        let (m, addr) = live_monitor();
+        m.stop(); // joins the accept thread — must not hang
+        // a later connection may be refused or reset; either is fine,
+        // the point is stop() returned
+        let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn responses_carry_exact_content_length() {
+        let r = response(200, "text/plain", "hello\n");
+        assert!(r.contains("Content-Length: 6\r\n"), "{r}");
+        assert!(r.ends_with("\r\n\r\nhello\n"), "{r}");
+        let r = response(503, "application/json", "{}");
+        assert!(r.starts_with("HTTP/1.1 503 Service Unavailable"), "{r}");
+    }
+}

@@ -1,0 +1,798 @@
+//! `monitor` — the operational surface: history rings, SLO burn-rate
+//! monitor, health watchdog, flight recorder, and scrape endpoint.
+//!
+//! PR 6 made a single query observable ([`crate::telemetry`]); this
+//! module answers the operator's questions — *is this deployment
+//! healthy right now, is it meeting its latency objective, and what
+//! happened just before that shard wedged?* One [`Monitor`] per
+//! deployment (created by [`crate::serve::Deployment::launch`] when the
+//! spec's `[monitor]`/`[slo]` sections ask for it) runs a sampling
+//! thread that, every `interval`:
+//!
+//! 1. snapshots every shard's [`crate::metrics::Metrics`] sink into
+//!    per-shard and fleet [`history::HistoryRing`]s (windowed QPS /
+//!    shed rate / recompute ratio / latency percentiles derive from
+//!    ring deltas — see [`history::WindowRates`]),
+//! 2. evaluates the `[slo]` objectives with fast/slow multi-window burn
+//!    rates ([`slo::evaluate`]) and feeds an active breach back to the
+//!    shard engines as queue pressure ([`health::Pulse::pressure_boost`]),
+//! 3. derives flight-recorder breadcrumbs from the snapshot deltas
+//!    (sheds, engine switches, halo spikes, SLO and wedge transitions —
+//!    the hot path never pushes an event),
+//! 4. checks each shard's heartbeat ([`health::Pulse`]) against the
+//!    stall watchdog: one missed interval flags the shard wedged.
+//!
+//! A `[monitor] addr` additionally binds a dependency-free
+//! `std::net::TcpListener` scrape endpoint ([`http`]) serving
+//! `GET /metrics` (Prometheus text), `/health` (JSON liveness + SLO
+//! status, 503 on breach/wedge), `/traces` and `/events` (JSON lines).
+//!
+//! Overhead contract, same as telemetry: always compiled, off by
+//! default. A disabled [`Monitor`] is `Option::None` inside — workers
+//! get a disabled [`Pulse`] whose every call is a branch (no clock, no
+//! lock, no allocation; proven in `rust/tests/plan_alloc.rs`), and no
+//! thread spawns. Enabled, the only hot-path additions are one relaxed
+//! atomic store per shard-loop iteration (the heartbeat) and one
+//! relaxed atomic load per inference round (the pressure check).
+
+pub mod health;
+pub mod history;
+pub mod http;
+pub mod slo;
+
+pub use health::{
+    Event, EventKind, FlightRecorder, HealthReport, Pulse, ShardHealth,
+    SLO_PRESSURE_BOOST,
+};
+pub use history::{HistoryRing, Sample, WindowRates};
+pub use slo::{BurnRates, SloParams, SloStatus};
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{Metrics, Snapshot};
+use crate::telemetry::Telemetry;
+
+/// Runtime monitor configuration, lowered from the spec
+/// ([`crate::serve::spec::DeploymentSpec::monitor_config`]).
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Sampling interval; also the stall-watchdog threshold.
+    pub interval: Duration,
+    /// Samples retained per history ring.
+    pub history: usize,
+    /// SLO objectives (`None` = liveness-only monitoring).
+    pub slo: Option<SloParams>,
+    /// Feed an active SLO breach to engines as queue pressure.
+    pub pressure: bool,
+    /// Flight-recorder event capacity.
+    pub events: usize,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            interval: Duration::from_millis(250),
+            history: 240,
+            slo: None,
+            pressure: true,
+            events: 128,
+        }
+    }
+}
+
+/// One registered shard: its metrics sink, heartbeat state, and ring.
+struct ShardEntry {
+    id: usize,
+    metrics: Arc<Metrics>,
+    pulse: Arc<health::PulseShared>,
+    ring: HistoryRing,
+}
+
+/// Per-shard sampler memory for delta-derived events.
+#[derive(Debug, Clone, Default)]
+struct ShardTick {
+    last_rejected: usize,
+    last_switches: usize,
+    last_halo: usize,
+    halo_ewma: f64,
+    wedged: bool,
+}
+
+struct Inner {
+    config: MonitorConfig,
+    epoch: Instant,
+    /// Latency quantile each tick estimates (the SLO target, or p95).
+    target_q: f64,
+    shards: Mutex<Vec<ShardEntry>>,
+    fleet_ring: Mutex<HistoryRing>,
+    ticks: Mutex<Vec<ShardTick>>,
+    /// Last SLO verdict (for breach/recovery transition events).
+    slo_breached_last: AtomicBool,
+    recorder: Arc<Mutex<FlightRecorder>>,
+    breached: Arc<AtomicBool>,
+    panicked: Arc<AtomicBool>,
+    telemetry: Mutex<Arc<Telemetry>>,
+    listener: Mutex<Option<TcpListener>>,
+    bound: Mutex<Option<SocketAddr>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    started: AtomicBool,
+    stopping: AtomicBool,
+    stopped: AtomicBool,
+}
+
+/// The deployment monitor handle. Cheap to clone (an `Option<Arc>`);
+/// [`Monitor::disabled`] is the inert default every unmonitored
+/// deployment carries.
+#[derive(Clone, Default)]
+pub struct Monitor {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Monitor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            None => write!(f, "Monitor(disabled)"),
+            Some(i) => f
+                .debug_struct("Monitor")
+                .field("interval", &i.config.interval)
+                .field("history", &i.config.history)
+                .field("slo", &i.config.slo.is_some())
+                .field("addr", &*i.bound.lock().unwrap())
+                .finish(),
+        }
+    }
+}
+
+impl Monitor {
+    /// The off-by-default monitor: no thread, no clock, inert pulses.
+    pub fn disabled() -> Monitor {
+        Monitor { inner: None }
+    }
+
+    /// A live monitor (no thread yet — see [`Monitor::start`]).
+    pub fn new(config: MonitorConfig) -> Monitor {
+        let target_q = config.slo.as_ref().map(|s| s.quantile).unwrap_or(0.95);
+        let history = config.history.max(2);
+        let events = config.events.max(1);
+        Monitor {
+            inner: Some(Arc::new(Inner {
+                target_q,
+                epoch: Instant::now(),
+                shards: Mutex::new(Vec::new()),
+                fleet_ring: Mutex::new(HistoryRing::new(history)),
+                ticks: Mutex::new(Vec::new()),
+                slo_breached_last: AtomicBool::new(false),
+                recorder: Arc::new(Mutex::new(FlightRecorder::new(events))),
+                breached: Arc::new(AtomicBool::new(false)),
+                panicked: Arc::new(AtomicBool::new(false)),
+                telemetry: Mutex::new(Telemetry::disabled()),
+                listener: Mutex::new(None),
+                bound: Mutex::new(None),
+                threads: Mutex::new(Vec::new()),
+                started: AtomicBool::new(false),
+                stopping: AtomicBool::new(false),
+                stopped: AtomicBool::new(false),
+                config,
+            })),
+        }
+    }
+
+    /// Whether anything is actually monitored.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Milliseconds since the monitor epoch (0 when disabled).
+    pub fn now_ms(&self) -> u64 {
+        match &self.inner {
+            Some(i) => i.epoch.elapsed().as_millis() as u64,
+            None => 0,
+        }
+    }
+
+    fn interval_ms(i: &Inner) -> u64 {
+        (i.config.interval.as_millis() as u64).max(1)
+    }
+
+    /// Register a shard's metrics sink; returns the heartbeat handle its
+    /// worker loop will touch. Called by [`crate::fleet::ShardWorker`]
+    /// at spawn (so registration order is deterministic); a disabled
+    /// monitor hands back a disabled pulse.
+    pub fn register_shard(&self, id: usize, metrics: Arc<Metrics>) -> Pulse {
+        let Some(i) = &self.inner else {
+            return Pulse::disabled();
+        };
+        let shared = Arc::new(health::PulseShared {
+            shard: id,
+            epoch: i.epoch,
+            // the first "beat" is registration time, so a shard that
+            // wedges before its first loop iteration is still caught
+            beat_ms: AtomicU64::new(i.epoch.elapsed().as_millis() as u64),
+            breached: Arc::clone(&i.breached),
+            pressure: i.config.pressure,
+            panic_flag: Arc::clone(&i.panicked),
+            recorder: Arc::clone(&i.recorder),
+        });
+        i.shards.lock().unwrap().push(ShardEntry {
+            id,
+            metrics,
+            pulse: Arc::clone(&shared),
+            ring: HistoryRing::new(i.config.history.max(2)),
+        });
+        i.ticks.lock().unwrap().push(ShardTick::default());
+        Pulse { inner: Some(shared) }
+    }
+
+    /// Attach the deployment's telemetry hub so `/metrics` and
+    /// `/traces` can serve calibration and trace data.
+    pub fn set_telemetry(&self, t: Arc<Telemetry>) {
+        if let Some(i) = &self.inner {
+            *i.telemetry.lock().unwrap() = t;
+        }
+    }
+
+    /// Bind the scrape endpoint (called before workers spawn so a bad
+    /// address fails the launch cleanly; port 0 picks a free port).
+    /// The accept loop starts with [`Monitor::start`].
+    pub fn bind(&self, addr: &str) -> Result<SocketAddr> {
+        let i = self
+            .inner
+            .as_ref()
+            .context("cannot bind a scrape endpoint on a disabled monitor")?;
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding monitor endpoint {addr}"))?;
+        let bound = listener.local_addr()?;
+        *i.listener.lock().unwrap() = Some(listener);
+        *i.bound.lock().unwrap() = Some(bound);
+        Ok(bound)
+    }
+
+    /// The bound scrape address, if [`Monitor::bind`] succeeded.
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.inner.as_ref().and_then(|i| *i.bound.lock().unwrap())
+    }
+
+    /// Start the sampling thread (and the accept loop, when bound).
+    /// Idempotent; a disabled monitor does nothing.
+    pub fn start(&self) {
+        let Some(i) = &self.inner else { return };
+        if i.started.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        i.recorder.lock().unwrap().push(Event {
+            at_ms: i.epoch.elapsed().as_millis() as u64,
+            shard: None,
+            kind: EventKind::Launch,
+            detail: format!(
+                "monitor started ({} shard(s), interval {:?})",
+                i.shards.lock().unwrap().len(),
+                i.config.interval
+            ),
+        });
+        let mut threads = i.threads.lock().unwrap();
+        let sampler = self.clone();
+        threads.push(std::thread::spawn(move || sampler.sampler_loop()));
+        let http_listener = i.listener.lock().unwrap().take();
+        if let Some(listener) = http_listener {
+            let m = self.clone();
+            threads.push(http::spawn(m, listener));
+        }
+    }
+
+    fn sampler_loop(&self) {
+        let Some(i) = &self.inner else { return };
+        let interval = i.config.interval.max(Duration::from_millis(1));
+        while !i.stopping.load(Ordering::SeqCst) {
+            // sleep in short slices so stop() is prompt even with a
+            // multi-second interval
+            let mut slept = Duration::ZERO;
+            while slept < interval && !i.stopping.load(Ordering::SeqCst) {
+                let slice = (interval - slept).min(Duration::from_millis(25));
+                std::thread::sleep(slice);
+                slept += slice;
+            }
+            if i.stopping.load(Ordering::SeqCst) {
+                break;
+            }
+            self.sample_now();
+        }
+    }
+
+    /// Take one sampler tick immediately: snapshot every shard, push
+    /// ring samples, derive flight-recorder events, re-evaluate the
+    /// SLO. The sampling thread calls this every interval; tests and
+    /// `grannite top` may call it directly.
+    pub fn sample_now(&self) {
+        let Some(i) = &self.inner else { return };
+        let now_ms = i.epoch.elapsed().as_millis() as u64;
+        let interval_ms = Self::interval_ms(i);
+        let mut events: Vec<Event> = Vec::new();
+
+        let mut shards = i.shards.lock().unwrap();
+        let mut ticks = i.ticks.lock().unwrap();
+        let fleet_snap = Metrics::merged(shards.iter().map(|e| e.metrics.as_ref()));
+        let fleet_q = Metrics::pooled_latency_quantile(
+            shards.iter().map(|e| e.metrics.as_ref()),
+            i.target_q,
+        );
+        for (e, t) in shards.iter_mut().zip(ticks.iter_mut()) {
+            let snap = e.metrics.snapshot();
+            // shed burst: rejections since the last tick
+            let d_rej = snap.rejected.saturating_sub(t.last_rejected);
+            if d_rej > 0 {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: Some(e.id),
+                    kind: EventKind::Shed,
+                    detail: format!(
+                        "{d_rej} rejection(s) this tick ({} total)",
+                        snap.rejected
+                    ),
+                });
+            }
+            t.last_rejected = snap.rejected;
+            // adaptive-engine strategy switches
+            let d_sw = snap.engine_switches.saturating_sub(t.last_switches);
+            if d_sw > 0 {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: Some(e.id),
+                    kind: EventKind::EngineSwitch,
+                    detail: format!(
+                        "{d_sw} strategy switch(es) → {}",
+                        snap.active_strategy.as_deref().unwrap_or("?")
+                    ),
+                });
+            }
+            t.last_switches = snap.engine_switches;
+            // halo spike: this tick's boundary traffic far above its
+            // moving average (and big enough to matter)
+            let d_halo = snap.halo_bytes.saturating_sub(t.last_halo) as f64;
+            if t.halo_ewma > 0.0 && d_halo > 4.0 * t.halo_ewma && d_halo > 4096.0
+            {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: Some(e.id),
+                    kind: EventKind::HaloSpike,
+                    detail: format!(
+                        "{} halo bytes this tick (moving avg {})",
+                        d_halo as usize, t.halo_ewma as usize
+                    ),
+                });
+            }
+            t.halo_ewma = if t.halo_ewma == 0.0 {
+                d_halo
+            } else {
+                0.8 * t.halo_ewma + 0.2 * d_halo
+            };
+            t.last_halo = snap.halo_bytes;
+            // stall-watchdog transitions
+            let beat = e.pulse.beat_ms.load(Ordering::Relaxed);
+            let age = now_ms.saturating_sub(beat);
+            let wedged = age > interval_ms;
+            if wedged && !t.wedged {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: Some(e.id),
+                    kind: EventKind::ShardWedged,
+                    detail: format!("heartbeat {age} ms stale (> {interval_ms})"),
+                });
+            } else if !wedged && t.wedged {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: Some(e.id),
+                    kind: EventKind::ShardRecovered,
+                    detail: "heartbeat resumed".to_string(),
+                });
+            }
+            t.wedged = wedged;
+            let latency_q_us = e.metrics.latency_quantile(i.target_q);
+            e.ring.push(Sample { at_ms: now_ms, snap, latency_q_us });
+        }
+        drop(ticks);
+        drop(shards);
+
+        let mut fleet_ring = i.fleet_ring.lock().unwrap();
+        fleet_ring.push(Sample {
+            at_ms: now_ms,
+            snap: fleet_snap,
+            latency_q_us: fleet_q,
+        });
+        // SLO verdict over the fleet ring, with transition breadcrumbs
+        if let Some(params) = &i.config.slo {
+            let samples: Vec<&Sample> = fleet_ring.samples().collect();
+            let status = slo::evaluate(params, &samples, now_ms);
+            let was = i.slo_breached_last.swap(status.breached, Ordering::SeqCst);
+            i.breached.store(status.breached, Ordering::Relaxed);
+            if status.breached && !was {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: None,
+                    kind: EventKind::SloBreach,
+                    detail: format!(
+                        "burn fast {:.1}×/{:.1}× slow {:.1}×/{:.1}× \
+                         (avail/latency, threshold {:.1}×)",
+                        status.fast.availability_burn,
+                        status.fast.latency_burn,
+                        status.slow.availability_burn,
+                        status.slow.latency_burn,
+                        params.burn_threshold
+                    ),
+                });
+            } else if !status.breached && was {
+                events.push(Event {
+                    at_ms: now_ms,
+                    shard: None,
+                    kind: EventKind::SloRecovered,
+                    detail: "burn rates back under threshold".to_string(),
+                });
+            }
+        }
+        drop(fleet_ring);
+
+        if !events.is_empty() {
+            let mut rec = i.recorder.lock().unwrap();
+            for e in events {
+                rec.push(e);
+            }
+        }
+    }
+
+    /// The deployment's liveness + SLO verdict, computed on demand —
+    /// heartbeat staleness is read directly from the atomic stamps, so
+    /// a wedged shard is visible within one interval even between
+    /// sampler ticks. `None` when disabled.
+    pub fn health(&self) -> Option<HealthReport> {
+        let i = self.inner.as_ref()?;
+        let now_ms = i.epoch.elapsed().as_millis() as u64;
+        let interval_ms = Self::interval_ms(i);
+        let shards = i.shards.lock().unwrap();
+        let mut any_wedged = false;
+        let shard_health: Vec<ShardHealth> = shards
+            .iter()
+            .map(|e| {
+                let beat = e.pulse.beat_ms.load(Ordering::Relaxed);
+                let age = now_ms.saturating_sub(beat);
+                let wedged = age > interval_ms;
+                any_wedged |= wedged;
+                let snap = e.metrics.snapshot();
+                ShardHealth {
+                    id: e.id,
+                    beat_age_ms: age,
+                    wedged,
+                    queries: snap.queries,
+                    rejected: snap.rejected,
+                }
+            })
+            .collect();
+        drop(shards);
+        let slo_status = self.slo_status();
+        let breached = slo_status.as_ref().map(|s| s.breached).unwrap_or(false);
+        let panicked = i.panicked.load(Ordering::Relaxed);
+        Some(HealthReport {
+            at_ms: now_ms,
+            healthy: !any_wedged && !panicked && !breached,
+            panicked,
+            slo: slo_status,
+            shards: shard_health,
+        })
+    }
+
+    /// The current SLO verdict (`None` when disabled or no `[slo]`).
+    pub fn slo_status(&self) -> Option<SloStatus> {
+        let i = self.inner.as_ref()?;
+        let params = i.config.slo.as_ref()?;
+        let now_ms = i.epoch.elapsed().as_millis() as u64;
+        let ring = i.fleet_ring.lock().unwrap();
+        let samples: Vec<&Sample> = ring.samples().collect();
+        Some(slo::evaluate(params, &samples, now_ms))
+    }
+
+    /// Flight-recorder breadcrumbs, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        match &self.inner {
+            Some(i) => i.recorder.lock().unwrap().events(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The post-mortem report: health summary + every retained
+    /// breadcrumb in order. Printed by the topologies when shutdown
+    /// surfaces a worker failure, and servable on demand.
+    pub fn post_mortem(&self) -> String {
+        let Some(i) = &self.inner else {
+            return "monitor disabled — no flight data".to_string();
+        };
+        let mut out = String::new();
+        if let Some(h) = self.health() {
+            out.push_str(&format!(
+                "post-mortem at +{:.3}s — healthy: {}, panicked: {}, \
+                 slo breached: {}\n",
+                h.at_ms as f64 / 1e3,
+                h.healthy,
+                h.panicked,
+                h.slo.as_ref().map(|s| s.breached).unwrap_or(false)
+            ));
+            for s in &h.shards {
+                out.push_str(&format!(
+                    "  shard {}: beat {} ms ago{}, {} queries, {} rejected\n",
+                    s.id,
+                    s.beat_age_ms,
+                    if s.wedged { " (WEDGED)" } else { "" },
+                    s.queries,
+                    s.rejected
+                ));
+            }
+        }
+        out.push_str(&i.recorder.lock().unwrap().render());
+        out
+    }
+
+    /// The fleet history ring's retained samples, oldest first.
+    pub fn fleet_history(&self) -> Vec<Sample> {
+        match &self.inner {
+            Some(i) => i.fleet_ring.lock().unwrap().samples().cloned().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Per-shard history rings: `(shard id, samples oldest first)`.
+    pub fn shard_histories(&self) -> Vec<(usize, Vec<Sample>)> {
+        match &self.inner {
+            Some(i) => i
+                .shards
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|e| (e.id, e.ring.samples().cloned().collect()))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Live per-shard metric snapshots (what `/metrics` exports).
+    pub fn metric_snapshots(&self) -> Vec<Snapshot> {
+        match &self.inner {
+            Some(i) => i
+                .shards
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|e| e.metrics.snapshot())
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The `/metrics` body: Prometheus text over live shard snapshots
+    /// and the telemetry hub's calibration report.
+    pub fn render_prometheus(&self) -> String {
+        let Some(i) = &self.inner else {
+            return String::new();
+        };
+        let snaps = self.metric_snapshots();
+        let cal = i.telemetry.lock().unwrap().calibration();
+        crate::telemetry::export::prometheus(&snaps, &cal)
+    }
+
+    /// The `/traces` body: JSON lines over stitched traces, snapshots,
+    /// and calibration (empty traces when telemetry is disabled).
+    pub fn render_traces(&self) -> String {
+        let Some(i) = &self.inner else {
+            return String::new();
+        };
+        let tel = Arc::clone(&i.telemetry.lock().unwrap());
+        let snaps = self.metric_snapshots();
+        crate::telemetry::export::json_lines(&tel.traces(), &snaps,
+                                             &tel.calibration())
+    }
+
+    /// The `/events` body: one JSON object per breadcrumb, oldest first.
+    pub fn render_events(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&e.to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub(crate) fn stopping(&self) -> bool {
+        match &self.inner {
+            Some(i) => i.stopping.load(Ordering::SeqCst),
+            None => true,
+        }
+    }
+
+    /// Stop the sampler and accept threads and join them. Records the
+    /// shutdown breadcrumb. Idempotent; safe to call without `start`.
+    pub fn stop(&self) {
+        let Some(i) = &self.inner else { return };
+        if i.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        i.recorder.lock().unwrap().push(Event {
+            at_ms: i.epoch.elapsed().as_millis() as u64,
+            shard: None,
+            kind: EventKind::Shutdown,
+            detail: "monitor stopped".to_string(),
+        });
+        i.stopping.store(true, Ordering::SeqCst);
+        // unblock a blocking accept() with a throwaway connection
+        if let Some(addr) = *i.bound.lock().unwrap() {
+            let _ = std::net::TcpStream::connect_timeout(
+                &addr,
+                Duration::from_millis(200),
+            );
+        }
+        let threads = std::mem::take(&mut *i.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config() -> MonitorConfig {
+        MonitorConfig {
+            interval: Duration::from_millis(20),
+            history: 32,
+            slo: None,
+            pressure: true,
+            events: 16,
+        }
+    }
+
+    #[test]
+    fn disabled_monitor_is_inert() {
+        let m = Monitor::disabled();
+        assert!(!m.enabled());
+        let pulse = m.register_shard(0, Arc::new(Metrics::new_shard(0)));
+        assert!(!pulse.enabled());
+        m.sample_now();
+        m.start();
+        m.stop();
+        assert!(m.health().is_none());
+        assert!(m.events().is_empty());
+        assert!(m.fleet_history().is_empty());
+        assert_eq!(format!("{m:?}"), "Monitor(disabled)");
+    }
+
+    #[test]
+    fn ticks_fill_rings_and_derive_shed_events() {
+        let m = Monitor::new(quick_config());
+        let sink = Arc::new(Metrics::new_shard(0));
+        let pulse = m.register_shard(0, sink.clone());
+        pulse.touch();
+        m.sample_now();
+        sink.record_query(100.0, 1.0, 1);
+        sink.record_rejected();
+        sink.record_rejected();
+        pulse.touch();
+        m.sample_now();
+        assert_eq!(m.fleet_history().len(), 2);
+        let (id, hist) = &m.shard_histories()[0];
+        assert_eq!(*id, 0);
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[1].snap.queries, 1);
+        let sheds: Vec<Event> = m
+            .events()
+            .into_iter()
+            .filter(|e| e.kind == EventKind::Shed)
+            .collect();
+        assert_eq!(sheds.len(), 1, "one shed burst breadcrumb");
+        assert!(sheds[0].detail.contains("2 rejection(s)"), "{:?}", sheds[0]);
+        m.stop();
+    }
+
+    #[test]
+    fn watchdog_flags_a_silent_shard_on_demand() {
+        let m = Monitor::new(quick_config());
+        let live = m.register_shard(0, Arc::new(Metrics::new_shard(0)));
+        let _dead = m.register_shard(1, Arc::new(Metrics::new_shard(1)));
+        // shard 1 never beats after registration; one interval later the
+        // on-demand health check must flag it without any sampler tick
+        std::thread::sleep(Duration::from_millis(45));
+        live.touch();
+        let h = m.health().unwrap();
+        assert!(!h.healthy);
+        assert!(!h.shards[0].wedged, "beating shard is fine");
+        assert!(h.shards[1].wedged, "silent shard flagged: {h:?}");
+        assert!(h.to_json().contains("\"wedged\":true"));
+        m.stop();
+    }
+
+    #[test]
+    fn slo_breach_sets_the_pressure_flag_and_breadcrumbs() {
+        let mut cfg = quick_config();
+        cfg.slo = Some(SloParams {
+            latency_us: 100_000.0,
+            quantile: 0.95,
+            availability: 0.9,
+            fast_window_ms: 10_000,
+            slow_window_ms: 20_000,
+            burn_threshold: 2.0,
+        });
+        let m = Monitor::new(cfg);
+        let sink = Arc::new(Metrics::new_shard(0));
+        let pulse = m.register_shard(0, sink.clone());
+        pulse.touch();
+        m.sample_now();
+        // every arrival rejected: failure fraction 1.0 / budget 0.1 = 10×
+        for _ in 0..20 {
+            sink.record_rejected();
+        }
+        pulse.touch();
+        m.sample_now();
+        let status = m.slo_status().unwrap();
+        assert!(status.breached, "{status:?}");
+        assert_eq!(pulse.pressure_boost(), SLO_PRESSURE_BOOST);
+        assert!(m
+            .events()
+            .iter()
+            .any(|e| e.kind == EventKind::SloBreach));
+        let h = m.health().unwrap();
+        assert!(!h.healthy);
+        // recovery: lots of clean traffic drives the windows back down
+        for _ in 0..2_000 {
+            sink.record_query(50.0, 1.0, 1);
+        }
+        pulse.touch();
+        m.sample_now();
+        assert!(!m.slo_status().unwrap().breached);
+        assert_eq!(pulse.pressure_boost(), 0);
+        assert!(m
+            .events()
+            .iter()
+            .any(|e| e.kind == EventKind::SloRecovered));
+        m.stop();
+    }
+
+    #[test]
+    fn panic_breadcrumb_lands_in_the_post_mortem() {
+        let m = Monitor::new(quick_config());
+        let pulse = m.register_shard(2, Arc::new(Metrics::new_shard(2)));
+        m.start();
+        pulse.panicked("mask buffer corrupted");
+        m.stop();
+        let report = m.post_mortem();
+        assert!(report.contains("panicked: true"), "{report}");
+        assert!(report.contains("shard_panic"), "{report}");
+        assert!(report.contains("mask buffer corrupted"), "{report}");
+        // launch ... panic ... shutdown, in order
+        let launch = report.find("launch").unwrap();
+        let panic_at = report.find("shard_panic").unwrap();
+        let shutdown = report.find("shutdown").unwrap();
+        assert!(launch < panic_at && panic_at < shutdown, "{report}");
+        let h = m.health().unwrap();
+        assert!(h.panicked && !h.healthy);
+    }
+
+    #[test]
+    fn start_and_stop_are_idempotent() {
+        let m = Monitor::new(quick_config());
+        let _p = m.register_shard(0, Arc::new(Metrics::new_shard(0)));
+        m.start();
+        m.start();
+        std::thread::sleep(Duration::from_millis(60));
+        m.stop();
+        m.stop();
+        // the sampler thread ticked at least once before the join
+        assert!(!m.fleet_history().is_empty());
+        let kinds: Vec<EventKind> = m.events().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == EventKind::Launch).count(), 1);
+        assert_eq!(
+            kinds.iter().filter(|k| **k == EventKind::Shutdown).count(),
+            1
+        );
+    }
+}

@@ -1,0 +1,266 @@
+//! SLO evaluation: multi-window burn rates over the fleet history ring.
+//!
+//! The `[slo]` spec section ([`crate::serve::spec::SloSpec`]) states two
+//! objectives — a target-quantile latency bound and an availability
+//! target — and this module answers "are we burning the error budget
+//! too fast?" the way production SLO alerting does: a breach requires
+//! the burn rate to exceed the threshold in **both** a fast window
+//! (catches sudden regressions quickly) and a slow window (filters
+//! blips), for either objective. One bad tick cannot page anyone, and a
+//! slow leak cannot hide behind a calm last second.
+//!
+//! Burn rate is measured against the error budget `1 − availability`:
+//!
+//! - **availability burn** over a window =
+//!   `(Δrejected / Δ(queries + rejected)) / (1 − availability)` — the
+//!   observed failure fraction as a multiple of the sustainable one;
+//! - **latency burn** over a window = the fraction of ticks whose
+//!   target-quantile latency estimate exceeded the objective, again
+//!   divided by the budget. (Tick latency comes from the cumulative
+//!   metrics reservoirs — see [`crate::monitor::history::Sample`] — so
+//!   it is an estimate of "the deployment's quantile as of that tick",
+//!   not a per-window quantile.)
+//!
+//! Evaluation is pure over `&[Sample]` so it is unit-testable without
+//! threads or clocks.
+
+use super::history::Sample;
+
+/// Runtime SLO parameters, lowered from the spec
+/// ([`crate::serve::spec::SloSpec::params`]) after validation — every
+/// field here can be assumed in-range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloParams {
+    /// Latency objective, µs: the target quantile must stay ≤ this.
+    pub latency_us: f64,
+    /// Which latency quantile the objective targets, in (0, 1).
+    pub quantile: f64,
+    /// Availability target in (0, 1); error budget = `1 − availability`.
+    pub availability: f64,
+    /// Fast burn window, ms.
+    pub fast_window_ms: u64,
+    /// Slow burn window, ms (> fast).
+    pub slow_window_ms: u64,
+    /// Burn-rate multiple that constitutes a breach (> 1).
+    pub burn_threshold: f64,
+}
+
+/// Burn rates over one window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurnRates {
+    /// Window span this was computed over, ms.
+    pub window_ms: u64,
+    /// Failure-fraction burn as a multiple of the budget (0 = no
+    /// rejections, 1 = exactly on budget).
+    pub availability_burn: f64,
+    /// Latency-objective burn: fraction of over-objective ticks as a
+    /// multiple of the budget.
+    pub latency_burn: f64,
+}
+
+impl BurnRates {
+    fn over(params: &SloParams, samples: &[&Sample], window_ms: u64) -> BurnRates {
+        let budget = (1.0 - params.availability).max(1e-12);
+        let (mut avail, mut lat) = (0.0, 0.0);
+        if let (Some(first), Some(last)) = (samples.first(), samples.last()) {
+            let dq = last.snap.queries.saturating_sub(first.snap.queries);
+            let dr = last.snap.rejected.saturating_sub(first.snap.rejected);
+            if dq + dr > 0 {
+                avail = (dr as f64 / (dq + dr) as f64) / budget;
+            }
+            // ticks past the baseline with a latency estimate
+            let measured: Vec<&&Sample> = samples
+                .iter()
+                .skip(1)
+                .filter(|s| s.latency_q_us.is_some())
+                .collect();
+            if !measured.is_empty() {
+                let bad = measured
+                    .iter()
+                    .filter(|s| s.latency_q_us.unwrap() > params.latency_us)
+                    .count();
+                lat = (bad as f64 / measured.len() as f64) / budget;
+            }
+        }
+        BurnRates { window_ms, availability_burn: avail, latency_burn: lat }
+    }
+}
+
+/// The monitor's current SLO verdict, surfaced through
+/// [`crate::serve::Serving::health`] and `GET /health`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloStatus {
+    /// True when either objective burns past the threshold in **both**
+    /// windows.
+    pub breached: bool,
+    /// Latest target-quantile latency estimate, µs.
+    pub latency_q_us: Option<f64>,
+    /// The objective the estimate is held against, µs.
+    pub objective_us: f64,
+    /// Target quantile (so reports can label the number).
+    pub quantile: f64,
+    pub fast: BurnRates,
+    pub slow: BurnRates,
+}
+
+impl SloStatus {
+    /// Stable one-line JSON encoding for `/health` and the flight
+    /// recorder.
+    pub fn to_json(&self) -> String {
+        let lat = match self.latency_q_us {
+            Some(v) if v.is_finite() => format!("{v}"),
+            _ => "null".to_string(),
+        };
+        format!(
+            "{{\"breached\":{},\"latency_q_us\":{lat},\"objective_us\":{},\
+             \"quantile\":{},\"fast\":{{\"window_ms\":{},\
+             \"availability_burn\":{:.4},\"latency_burn\":{:.4}}},\
+             \"slow\":{{\"window_ms\":{},\"availability_burn\":{:.4},\
+             \"latency_burn\":{:.4}}}}}",
+            self.breached,
+            self.objective_us,
+            self.quantile,
+            self.fast.window_ms,
+            self.fast.availability_burn,
+            self.fast.latency_burn,
+            self.slow.window_ms,
+            self.slow.availability_burn,
+            self.slow.latency_burn,
+        )
+    }
+}
+
+/// Evaluate the SLO over the fleet history ring's retained samples
+/// (oldest first), as of `now_ms`.
+pub fn evaluate(params: &SloParams, samples: &[&Sample], now_ms: u64) -> SloStatus {
+    let in_window = |window_ms: u64| -> Vec<&Sample> {
+        let start = now_ms.saturating_sub(window_ms);
+        let mut out: Vec<&Sample> = Vec::new();
+        for (i, s) in samples.iter().enumerate() {
+            if s.at_ms >= start {
+                if out.is_empty() && i > 0 {
+                    out.push(samples[i - 1]); // baseline for the delta
+                }
+                out.push(s);
+            }
+        }
+        out
+    };
+    let fast = BurnRates::over(params, &in_window(params.fast_window_ms),
+                               params.fast_window_ms);
+    let slow = BurnRates::over(params, &in_window(params.slow_window_ms),
+                               params.slow_window_ms);
+    let t = params.burn_threshold;
+    let breached = (fast.availability_burn > t && slow.availability_burn > t)
+        || (fast.latency_burn > t && slow.latency_burn > t);
+    SloStatus {
+        breached,
+        latency_q_us: samples.last().and_then(|s| s.latency_q_us),
+        objective_us: params.latency_us,
+        quantile: params.quantile,
+        fast,
+        slow,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    fn params() -> SloParams {
+        SloParams {
+            latency_us: 1_000.0,
+            quantile: 0.95,
+            availability: 0.9, // budget = 0.1, so burns are fractions × 10
+            fast_window_ms: 200,
+            slow_window_ms: 1_000,
+            burn_threshold: 2.0,
+        }
+    }
+
+    fn sample(at_ms: u64, queries: usize, rejected: usize,
+              lat_us: Option<f64>) -> Sample {
+        let m = Metrics::new_shard(0);
+        for _ in 0..queries {
+            m.record_query(lat_us.unwrap_or(100.0), 1.0, 1);
+        }
+        for _ in 0..rejected {
+            m.record_rejected();
+        }
+        Sample { at_ms, snap: m.snapshot(), latency_q_us: lat_us }
+    }
+
+    #[test]
+    fn healthy_traffic_does_not_breach() {
+        let s: Vec<Sample> = (0..12u64)
+            .map(|t| sample(t * 100, (t as usize + 1) * 10, 0, Some(200.0)))
+            .collect();
+        let refs: Vec<&Sample> = s.iter().collect();
+        let st = evaluate(&params(), &refs, 1_100);
+        assert!(!st.breached);
+        assert_eq!(st.fast.availability_burn, 0.0);
+        assert_eq!(st.fast.latency_burn, 0.0);
+        assert_eq!(st.latency_q_us, Some(200.0));
+    }
+
+    #[test]
+    fn sustained_shedding_breaches_both_windows() {
+        // half of all arrivals rejected, for the whole slow window:
+        // failure fraction 0.5 / budget 0.1 = burn 5 > threshold 2
+        let s: Vec<Sample> = (0..12u64)
+            .map(|t| {
+                sample(t * 100, (t as usize + 1) * 5, (t as usize + 1) * 5,
+                       Some(200.0))
+            })
+            .collect();
+        let refs: Vec<&Sample> = s.iter().collect();
+        let st = evaluate(&params(), &refs, 1_100);
+        assert!(st.breached, "{st:?}");
+        assert!(st.fast.availability_burn > 2.0);
+        assert!(st.slow.availability_burn > 2.0);
+    }
+
+    #[test]
+    fn a_blip_in_the_fast_window_alone_does_not_breach() {
+        // rejections only in the final 200 ms: the fast window burns hot
+        // but the slow window (mostly clean) stays under threshold
+        let mut s: Vec<Sample> = Vec::new();
+        for t in 0..10u64 {
+            s.push(sample(t * 100, (t as usize + 1) * 100, 0, Some(200.0)));
+        }
+        // final tick: 5 new queries, 20 new rejections
+        s.push(sample(1_000, 1_005, 20, Some(200.0)));
+        let refs: Vec<&Sample> = s.iter().collect();
+        let st = evaluate(&params(), &refs, 1_000);
+        assert!(st.fast.availability_burn > 2.0, "{:?}", st.fast);
+        assert!(st.slow.availability_burn < 2.0, "{:?}", st.slow);
+        assert!(!st.breached, "one window alone must not page");
+    }
+
+    #[test]
+    fn sustained_slow_latency_breaches() {
+        // every tick's quantile estimate sits above the 1 ms objective:
+        // bad-tick fraction 1.0 / budget 0.1 = burn 10
+        let s: Vec<Sample> = (0..12u64)
+            .map(|t| sample(t * 100, (t as usize + 1) * 10, 0, Some(5_000.0)))
+            .collect();
+        let refs: Vec<&Sample> = s.iter().collect();
+        let st = evaluate(&params(), &refs, 1_100);
+        assert!(st.breached);
+        assert!(st.fast.latency_burn > 2.0);
+        assert!(st.slow.latency_burn > 2.0);
+        assert_eq!(st.fast.availability_burn, 0.0, "objectives independent");
+    }
+
+    #[test]
+    fn empty_history_is_healthy_and_json_is_balanced() {
+        let st = evaluate(&params(), &[], 0);
+        assert!(!st.breached);
+        assert_eq!(st.latency_q_us, None);
+        let j = st.to_json();
+        assert!(j.contains("\"breached\":false"), "{j}");
+        assert!(j.contains("\"latency_q_us\":null"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+    }
+}

@@ -36,7 +36,10 @@ pub mod tune;
 pub use registry::{
     BoxedEngine, EngineFactory, EngineInit, EngineRegistry, LaunchContext, ShardFactory,
 };
-pub use spec::{BatchSpec, DeploymentSpec, EngineSpec, TelemetrySpec, Topology, TuningSpec};
+pub use spec::{
+    BatchSpec, DeploymentSpec, EngineSpec, MonitorSpec, SloSpec, TelemetrySpec,
+    Topology, TuningSpec,
+};
 pub use tune::{Objective, TunedDeployment, TuningReport, TuningRow};
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
@@ -90,6 +93,21 @@ pub trait Serving: Send {
     /// impls; both built-in topologies override it.
     fn telemetry(&self) -> Option<std::sync::Arc<crate::telemetry::Telemetry>> {
         None
+    }
+
+    /// The deployment's operational monitor (history rings, SLO state,
+    /// watchdog, flight recorder), when the spec activated one. Same
+    /// default-`None` contract as [`Serving::telemetry`].
+    fn monitor(&self) -> Option<crate::monitor::Monitor> {
+        None
+    }
+
+    /// Liveness + SLO verdict from the monitor: `None` when no monitor
+    /// is active, otherwise the same report `GET /health` serves (a
+    /// wedged shard, a recorded panic, or an active SLO breach all flip
+    /// `healthy` to false).
+    fn health(&self) -> Option<crate::monitor::HealthReport> {
+        self.monitor().and_then(|m| m.health())
     }
 
     /// Stop every worker and join them; the first failure (e.g. a shard
@@ -225,6 +243,21 @@ impl Deployment {
         // one telemetry hub per launch: every worker ring and profile
         // sink shares this hub's epoch, so cross-shard spans stitch
         cfg.telemetry = crate::telemetry::Telemetry::new(resolved.telemetry.config());
+        // one monitor per launch (the operational surface): created only
+        // when the spec asks — the disabled default keeps every hot path
+        // branch-only. Binding happens *before* workers spawn so a bad
+        // scrape address fails the launch instead of a background thread.
+        let monitor = if resolved.monitor_active() {
+            let m = crate::monitor::Monitor::new(resolved.monitor_config());
+            if !resolved.monitor.addr.is_empty() {
+                m.bind(&resolved.monitor.addr)?;
+            }
+            m.set_telemetry(std::sync::Arc::clone(&cfg.telemetry));
+            m
+        } else {
+            crate::monitor::Monitor::disabled()
+        };
+        cfg.monitor = monitor.clone();
         let plan = match plan {
             Some(p) if p.owner.len() == capacity
                 && p.shards.len() == cfg.devices.len() => p,
@@ -248,7 +281,7 @@ impl Deployment {
         };
         let mut make = registry.get(&resolved.engine.name)?.prepare(&ctx)?;
 
-        if resolved.topology.shards == 1 {
+        let serving: Box<dyn Serving> = if resolved.topology.shards == 1 {
             // the single-leader server is the 1-shard topology: same
             // engine factory, same batching and admission, no halo
             let init = make(&plan.shards[0]);
@@ -257,12 +290,16 @@ impl Deployment {
                 admission: cfg.admission,
                 halo: None,
                 telemetry: std::sync::Arc::clone(&cfg.telemetry),
+                monitor: cfg.monitor.clone(),
             };
-            Ok(Box::new(ServerHandle::spawn_with(init, config)))
+            Box::new(ServerHandle::spawn_with(init, config))
         } else {
-            Ok(Box::new(Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg,
-                                     make)))
-        }
+            Box::new(Fleet::spawn(plan, &ds.graph, ds.num_features(), &cfg, make))
+        };
+        // start sampling (and the scrape endpoint) only after every
+        // shard registered, so the first tick sees the full topology
+        monitor.start();
+        Ok(serving)
     }
 
     /// The placement a spec would launch with (deterministic — the same

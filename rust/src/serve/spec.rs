@@ -224,6 +224,102 @@ impl Default for TelemetrySpec {
     }
 }
 
+/// Service-level objective (`[slo]` in TOML): what "healthy" means for
+/// this deployment, evaluated by the monitor thread with fast/slow
+/// multi-window burn rates (see [`crate::monitor::slo`]) and surfaced
+/// through [`crate::serve::Serving::health`]. Off by default; enabling
+/// it implies monitor sampling even without a `[monitor]` section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// Master switch: evaluate the objective and surface breaches.
+    pub enabled: bool,
+    /// Latency objective in microseconds: the `quantile` latency must
+    /// stay at or below this.
+    pub latency_us: usize,
+    /// Which latency quantile the objective targets, strictly inside
+    /// (0, 1) — e.g. `0.95` for a p95 objective.
+    pub quantile: f64,
+    /// Availability target, strictly inside (0, 1) — e.g. `0.999`. The
+    /// error budget is `1 − availability`; burn rates are measured
+    /// against it.
+    pub availability: f64,
+    /// Fast burn window, milliseconds (catches sudden regressions).
+    pub fast_window_ms: usize,
+    /// Slow burn window, milliseconds (filters blips; must exceed the
+    /// fast window).
+    pub slow_window_ms: usize,
+    /// Burn-rate threshold: a breach requires the budget to burn faster
+    /// than this multiple of sustainable in **both** windows; must be
+    /// > 1 (a threshold ≤ 1 alerts on exactly-on-budget behavior).
+    pub burn_threshold: f64,
+    /// Feed an active breach to the shard engines as queue pressure
+    /// (waives the `auto` engine's anti-flap cooldown so it can switch
+    /// strategies immediately).
+    pub pressure: bool,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            enabled: false,
+            latency_us: 50_000,
+            quantile: 0.95,
+            availability: 0.999,
+            fast_window_ms: 5_000,
+            slow_window_ms: 60_000,
+            burn_threshold: 2.0,
+            pressure: true,
+        }
+    }
+}
+
+impl SloSpec {
+    /// Lower to the monitor's runtime parameters (validated fields are
+    /// assumed in-range past this point).
+    pub fn params(&self) -> crate::monitor::SloParams {
+        crate::monitor::SloParams {
+            latency_us: self.latency_us as f64,
+            quantile: self.quantile,
+            availability: self.availability,
+            fast_window_ms: self.fast_window_ms as u64,
+            slow_window_ms: self.slow_window_ms as u64,
+            burn_threshold: self.burn_threshold,
+        }
+    }
+}
+
+/// Monitor knobs (`[monitor]` in TOML): the sampling thread behind the
+/// history rings, health watchdog, flight recorder and scrape endpoint
+/// (see [`crate::monitor`]). Off by default — with the section absent
+/// the hot path performs no extra clock read, lock, or allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorSpec {
+    /// Master switch for the sampling thread (also implied by a
+    /// non-empty `addr` or an enabled `[slo]`).
+    pub enabled: bool,
+    /// Sampling interval, milliseconds. Also the stall-watchdog
+    /// threshold: a shard whose heartbeat is older than one interval is
+    /// flagged wedged.
+    pub interval_ms: usize,
+    /// Samples retained per shard history ring (oldest overwritten).
+    pub history: usize,
+    /// Scrape endpoint bind address (`"127.0.0.1:9898"`); empty = no
+    /// HTTP listener. Serves `GET /metrics`, `/health`, `/traces`,
+    /// `/events`.
+    pub addr: String,
+}
+
+impl Default for MonitorSpec {
+    fn default() -> Self {
+        MonitorSpec {
+            enabled: false,
+            interval_ms: 250,
+            history: 240,
+            addr: String::new(),
+        }
+    }
+}
+
 /// Autotuner + runtime-adaptive engine knobs (`[tuning]` in TOML).
 ///
 /// The same section feeds two consumers: `Deployment::autotune` (how
@@ -272,8 +368,8 @@ impl Default for TuningSpec {
 /// nothing it has to re-parse per subsystem.
 ///
 /// The TOML shape mirrors the struct — top-level scalars plus
-/// `[engine]`, `[topology]`, `[batch]`, `[admission]`, `[telemetry]`
-/// tables — and
+/// `[engine]`, `[topology]`, `[batch]`, `[admission]`, `[telemetry]`,
+/// `[slo]`, `[monitor]`, `[tuning]` tables — and
 /// `parse_toml(to_toml(spec)) == spec` holds for every spec that
 /// passes [`DeploymentSpec::validate`] (the subset has no string
 /// escapes, so validation rejects embedded quotes; tested in
@@ -304,6 +400,11 @@ pub struct DeploymentSpec {
     pub admission: AdmissionConfig,
     /// Query tracing + plan profiling (off by default).
     pub telemetry: TelemetrySpec,
+    /// Latency/availability objective the monitor evaluates (off by
+    /// default).
+    pub slo: SloSpec,
+    /// Monitor sampling thread + scrape endpoint (off by default).
+    pub monitor: MonitorSpec,
     /// Autotuner probes/objective + `auto` engine switching bands.
     pub tuning: TuningSpec,
 }
@@ -320,6 +421,8 @@ impl Default for DeploymentSpec {
             batch: BatchSpec::default(),
             admission: AdmissionConfig::unbounded(),
             telemetry: TelemetrySpec::default(),
+            slo: SloSpec::default(),
+            monitor: MonitorSpec::default(),
             tuning: TuningSpec::default(),
         }
     }
@@ -342,15 +445,24 @@ impl DeploymentSpec {
 
     /// Parse from an already-loaded [`Document`].
     pub fn from_doc(doc: &Document) -> Result<DeploymentSpec> {
-        const SECTIONS: &[&str] =
-            &["", "engine", "topology", "batch", "admission", "telemetry", "tuning"];
+        const SECTIONS: &[&str] = &[
+            "",
+            "engine",
+            "topology",
+            "batch",
+            "admission",
+            "telemetry",
+            "slo",
+            "monitor",
+            "tuning",
+        ];
         for section in doc.section_names() {
             if !SECTIONS.contains(&section) {
                 bail!(
                     "unknown section [{section}] — a deployment spec has \
                      [engine], [topology], [batch], [admission], \
-                     [telemetry], [tuning] and the top-level keys model, \
-                     capacity, aggregation, quant"
+                     [telemetry], [slo], [monitor], [tuning] and the \
+                     top-level keys model, capacity, aggregation, quant"
                 );
             }
         }
@@ -442,6 +554,69 @@ impl DeploymentSpec {
             }
         }
 
+        if let Some(_table) = doc.section("slo") {
+            check_keys(
+                doc,
+                "slo",
+                &[
+                    "enabled",
+                    "latency_us",
+                    "quantile",
+                    "availability",
+                    "fast_window_ms",
+                    "slow_window_ms",
+                    "burn_threshold",
+                    "pressure",
+                ],
+            )?;
+            if let Some(v) = doc.get("slo", "enabled") {
+                spec.slo.enabled = bool_of(v, "slo", "enabled")?;
+            }
+            if let Some(v) = doc.get("slo", "latency_us") {
+                spec.slo.latency_us = usize_of(v, "slo", "latency_us")?;
+            }
+            if let Some(v) = doc.get("slo", "quantile") {
+                spec.slo.quantile = v.as_float().ok_or_else(|| {
+                    anyhow!("[slo] quantile must be a number, got {v:?}")
+                })?;
+            }
+            if let Some(v) = doc.get("slo", "availability") {
+                spec.slo.availability = v.as_float().ok_or_else(|| {
+                    anyhow!("[slo] availability must be a number, got {v:?}")
+                })?;
+            }
+            if let Some(v) = doc.get("slo", "fast_window_ms") {
+                spec.slo.fast_window_ms = usize_of(v, "slo", "fast_window_ms")?;
+            }
+            if let Some(v) = doc.get("slo", "slow_window_ms") {
+                spec.slo.slow_window_ms = usize_of(v, "slo", "slow_window_ms")?;
+            }
+            if let Some(v) = doc.get("slo", "burn_threshold") {
+                spec.slo.burn_threshold = v.as_float().ok_or_else(|| {
+                    anyhow!("[slo] burn_threshold must be a number, got {v:?}")
+                })?;
+            }
+            if let Some(v) = doc.get("slo", "pressure") {
+                spec.slo.pressure = bool_of(v, "slo", "pressure")?;
+            }
+        }
+
+        if let Some(_table) = doc.section("monitor") {
+            check_keys(doc, "monitor", &["enabled", "interval_ms", "history", "addr"])?;
+            if let Some(v) = doc.get("monitor", "enabled") {
+                spec.monitor.enabled = bool_of(v, "monitor", "enabled")?;
+            }
+            if let Some(v) = doc.get("monitor", "interval_ms") {
+                spec.monitor.interval_ms = usize_of(v, "monitor", "interval_ms")?;
+            }
+            if let Some(v) = doc.get("monitor", "history") {
+                spec.monitor.history = usize_of(v, "monitor", "history")?;
+            }
+            if let Some(v) = doc.get("monitor", "addr") {
+                spec.monitor.addr = str_of(v, "monitor", "addr")?.to_string();
+            }
+        }
+
         if let Some(_table) = doc.section("tuning") {
             check_keys(
                 doc,
@@ -522,6 +697,29 @@ impl DeploymentSpec {
             "sample_rate = {}\n",
             emit_value(&Value::Float(self.telemetry.sample_rate))
         ));
+        out.push_str("\n[slo]\n");
+        out.push_str(&format!("enabled = {}\n", self.slo.enabled));
+        out.push_str(&format!("latency_us = {}\n", self.slo.latency_us));
+        out.push_str(&format!(
+            "quantile = {}\n",
+            emit_value(&Value::Float(self.slo.quantile))
+        ));
+        out.push_str(&format!(
+            "availability = {}\n",
+            emit_value(&Value::Float(self.slo.availability))
+        ));
+        out.push_str(&format!("fast_window_ms = {}\n", self.slo.fast_window_ms));
+        out.push_str(&format!("slow_window_ms = {}\n", self.slo.slow_window_ms));
+        out.push_str(&format!(
+            "burn_threshold = {}\n",
+            emit_value(&Value::Float(self.slo.burn_threshold))
+        ));
+        out.push_str(&format!("pressure = {}\n", self.slo.pressure));
+        out.push_str("\n[monitor]\n");
+        out.push_str(&format!("enabled = {}\n", self.monitor.enabled));
+        out.push_str(&format!("interval_ms = {}\n", self.monitor.interval_ms));
+        out.push_str(&format!("history = {}\n", self.monitor.history));
+        out.push_str(&format!("addr = \"{}\"\n", self.monitor.addr));
         out.push_str("\n[tuning]\n");
         out.push_str(&format!("objective = \"{}\"\n", self.tuning.objective));
         out.push_str(&format!("probe_budget = {}\n", self.tuning.probe_budget));
@@ -592,6 +790,78 @@ impl DeploymentSpec {
                 self.telemetry.sample_rate
             );
         }
+        if !(self.slo.quantile > 0.0 && self.slo.quantile < 1.0) {
+            bail!(
+                "slo.quantile must be strictly inside (0, 1), got {} — e.g. \
+                 0.95 targets the p95 latency",
+                self.slo.quantile
+            );
+        }
+        if !(self.slo.availability > 0.0 && self.slo.availability < 1.0) {
+            bail!(
+                "slo.availability must be strictly inside (0, 1), got {} — \
+                 1.0 leaves a zero error budget, which every burn rate \
+                 divides by",
+                self.slo.availability
+            );
+        }
+        if self.slo.latency_us == 0 {
+            bail!(
+                "slo.latency_us must be ≥ 1 (got 0) — a zero-microsecond \
+                 latency objective is unmeetable; disable the SLO with \
+                 enabled = false instead"
+            );
+        }
+        if self.slo.fast_window_ms == 0 || self.slo.slow_window_ms == 0 {
+            bail!(
+                "slo windows must be ≥ 1 ms (got fast = {} ms, slow = {} \
+                 ms) — a zero-length window can never accumulate a burn \
+                 rate",
+                self.slo.fast_window_ms,
+                self.slo.slow_window_ms
+            );
+        }
+        if self.slo.fast_window_ms >= self.slo.slow_window_ms {
+            bail!(
+                "slo.fast_window_ms ({} ms) must be shorter than \
+                 slo.slow_window_ms ({} ms) — the fast window catches \
+                 sudden regressions, the slow window filters blips",
+                self.slo.fast_window_ms,
+                self.slo.slow_window_ms
+            );
+        }
+        if !(self.slo.burn_threshold > 1.0 && self.slo.burn_threshold.is_finite()) {
+            bail!(
+                "slo.burn_threshold must be > 1 (got {}) — a threshold ≤ 1 \
+                 fires on exactly-on-budget behavior; 2.0 alerts when the \
+                 budget burns twice as fast as sustainable",
+                self.slo.burn_threshold
+            );
+        }
+        if self.monitor.interval_ms == 0 {
+            bail!(
+                "monitor.interval_ms must be ≥ 1 (got 0) — disable the \
+                 monitor with enabled = false instead of a zero interval"
+            );
+        }
+        if self.monitor.history < 2 {
+            bail!(
+                "monitor.history must be ≥ 2 (got {}) — windowed rates \
+                 need at least two samples to difference",
+                self.monitor.history
+            );
+        }
+        quote_free("[monitor] addr", &self.monitor.addr)?;
+        if !self.monitor.addr.is_empty()
+            && self.monitor.addr.parse::<std::net::SocketAddr>().is_err()
+        {
+            bail!(
+                "monitor.addr {:?} is not a bindable socket address — use \
+                 \"host:port\" like \"127.0.0.1:9898\" (port 0 picks a \
+                 free port), or \"\" for no scrape endpoint",
+                self.monitor.addr
+            );
+        }
         if !matches!(self.tuning.objective.as_str(), "latency" | "throughput") {
             bail!(
                 "tuning.objective must be \"latency\" or \"throughput\", \
@@ -645,6 +915,29 @@ impl DeploymentSpec {
             )
         } else {
             Ok(self.capacity)
+        }
+    }
+
+    /// Is the monitor subsystem active for this spec? True when the
+    /// `[monitor]` section is enabled, when a scrape address is set, or
+    /// when an `[slo]` objective needs the sampling thread that
+    /// evaluates it. False (the default) keeps the monitor a branch-only
+    /// no-op on every hot path.
+    pub fn monitor_active(&self) -> bool {
+        self.monitor.enabled || !self.monitor.addr.is_empty() || self.slo.enabled
+    }
+
+    /// Lower the `[monitor]` + `[slo]` sections to the monitor's runtime
+    /// config (meaningful only when [`DeploymentSpec::monitor_active`]).
+    pub fn monitor_config(&self) -> crate::monitor::MonitorConfig {
+        crate::monitor::MonitorConfig {
+            interval: std::time::Duration::from_millis(
+                self.monitor.interval_ms.max(1) as u64,
+            ),
+            history: self.monitor.history,
+            slo: if self.slo.enabled { Some(self.slo.params()) } else { None },
+            pressure: self.slo.pressure,
+            events: 128,
         }
     }
 

@@ -153,6 +153,7 @@ pub struct ServerHandle {
     shard: Option<ShardWorker>,
     pub metrics: Arc<Metrics>,
     telemetry: Arc<crate::telemetry::Telemetry>,
+    monitor: crate::monitor::Monitor,
     next_id: AtomicU64,
 }
 
@@ -177,11 +178,13 @@ impl ServerHandle {
         E: InferenceEngine,
     {
         let telemetry = Arc::clone(&config.telemetry);
+        let monitor = config.monitor.clone();
         let shard = ShardWorker::spawn(0, factory, config);
         ServerHandle {
             metrics: shard.metrics.clone(),
             shard: Some(shard),
             telemetry,
+            monitor,
             next_id: AtomicU64::new(1),
         }
     }
@@ -208,10 +211,17 @@ impl ServerHandle {
     /// `Err` carrying the panic message (in-flight queries were already
     /// answered with rejections and counted).
     pub fn shutdown(mut self) -> Result<()> {
-        match self.shard.take() {
+        let result = match self.shard.take() {
             Some(s) => s.shutdown(),
             None => Ok(()),
+        };
+        if result.is_err() && self.monitor.enabled() {
+            // the worker died abnormally: dump the flight recorder so
+            // the breadcrumbs survive the process
+            eprintln!("{}", self.monitor.post_mortem());
         }
+        self.monitor.stop();
+        result
     }
 }
 
@@ -247,6 +257,14 @@ impl crate::serve::Serving for ServerHandle {
 
     fn telemetry(&self) -> Option<Arc<crate::telemetry::Telemetry>> {
         Some(Arc::clone(&self.telemetry))
+    }
+
+    fn monitor(&self) -> Option<crate::monitor::Monitor> {
+        if self.monitor.enabled() {
+            Some(self.monitor.clone())
+        } else {
+            None
+        }
     }
 
     fn record_shed(&self, _node: Option<usize>) {

@@ -7,7 +7,11 @@
 //! comes with a small structural validator ([`validate_prometheus`],
 //! [`validate_json_lines`]); the `grannite trace` example job runs the
 //! validators over live exporter output so a formatting regression fails
-//! CI, not a dashboard.
+//! CI, not a dashboard. The monitor's scrape endpoint serves these same
+//! renderings live — `GET /metrics` is [`prometheus`] and `GET /traces`
+//! is [`json_lines`] over the deployment's current state (see
+//! [`crate::monitor`]), so what CI validates is byte-for-byte what an
+//! operator scrapes.
 
 use anyhow::{bail, Result};
 

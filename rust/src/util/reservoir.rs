@@ -105,6 +105,32 @@ impl Reservoir {
         s.max = self.max;
         Some(s)
     }
+
+    /// Interpolated quantile estimate over the retained subsample
+    /// (linear between closest ranks — the SLO monitor's latency
+    /// objective check). `q` is clamped to `[0, 1]`; `None` when empty.
+    /// Exact while `seen ≤ cap`, a uniform-subsample estimate past it.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(quantile_sorted(&sorted, q))
+    }
+}
+
+/// Linear-interpolation quantile over an already-sorted non-empty slice
+/// (the reference definition [`Reservoir::quantile`] and the monitor's
+/// history windows share).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi.min(sorted.len() - 1)] - sorted[lo]) * frac
 }
 
 /// Stats over the union of several reservoirs (the `Metrics::merged`
@@ -174,6 +200,106 @@ mod tests {
         };
         assert_eq!(feed(42), feed(42));
         assert_ne!(feed(42), feed(43), "different seeds diverge");
+    }
+
+    #[test]
+    fn quantile_interpolates_and_clamps() {
+        let mut r = Reservoir::new(16, 7);
+        for x in [10.0, 20.0, 30.0, 40.0] {
+            r.record(x);
+        }
+        assert_eq!(r.quantile(0.0), Some(10.0));
+        assert_eq!(r.quantile(1.0), Some(40.0));
+        assert_eq!(r.quantile(0.5), Some(25.0), "linear between ranks");
+        assert_eq!(r.quantile(-3.0), Some(10.0), "clamped low");
+        assert_eq!(r.quantile(9.0), Some(40.0), "clamped high");
+        assert_eq!(Reservoir::new(4, 1).quantile(0.5), None);
+    }
+
+    /// Sorted-reference oracle: the textbook interpolated quantile over
+    /// the full (sorted) stream.
+    fn oracle_quantile(stream: &[f64], q: f64) -> f64 {
+        let mut sorted = stream.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let (lo, frac) = (pos.floor() as usize, pos.fract());
+        let hi = (lo + 1).min(sorted.len() - 1);
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    }
+
+    #[test]
+    fn quantile_matches_sorted_oracle_below_capacity() {
+        crate::util::propcheck::forall("reservoir quantile vs oracle", 128, |g| {
+            let n = g.dim(64);
+            let cap = n + g.usize(0, 32); // everything retained
+            let stream: Vec<f64> =
+                (0..n).map(|_| g.rng().f64() * 1e4 - 5e3).collect();
+            let mut r = Reservoir::new(cap, 11);
+            for &x in &stream {
+                r.record(x);
+            }
+            for i in 0..=10 {
+                let q = i as f64 / 10.0;
+                let got = r.quantile(q).unwrap();
+                let want = oracle_quantile(&stream, q);
+                assert!(
+                    (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                    "q={q}: got {got}, oracle {want}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quantile_is_monotone_and_bounded_above_capacity() {
+        crate::util::propcheck::forall("reservoir quantile monotone", 64, |g| {
+            let cap = g.dim(32);
+            let n = cap + g.usize(1, 512);
+            let mut r = Reservoir::new(cap, 3);
+            for _ in 0..n {
+                r.record(g.rng().f64() * 100.0);
+            }
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..=20 {
+                let v = r.quantile(i as f64 / 20.0).unwrap();
+                assert!(v >= prev, "quantiles must be nondecreasing");
+                assert!(v >= r.min() && v <= r.max(), "within exact bounds");
+                prev = v;
+            }
+        });
+    }
+
+    #[test]
+    fn merged_stats_matches_pooled_oracle_below_capacity() {
+        crate::util::propcheck::forall("merged_stats vs pooled oracle", 64, |g| {
+            let parts = g.usize(1, 5);
+            let mut reservoirs = Vec::new();
+            let mut pooled = Vec::new();
+            for p in 0..parts {
+                let n = g.dim(48);
+                let mut r = Reservoir::new(64, p as u64);
+                for _ in 0..n {
+                    let x = g.rng().f64() * 1e3;
+                    r.record(x);
+                    pooled.push(x);
+                }
+                reservoirs.push(r);
+            }
+            let refs: Vec<&Reservoir> = reservoirs.iter().collect();
+            let m = merged_stats(&refs).unwrap();
+            let want = Stats::from_samples(&pooled);
+            assert_eq!(m.n, want.n);
+            assert!((m.mean - want.mean).abs() < 1e-9 * (1.0 + want.mean.abs()));
+            assert_eq!(m.min, want.min);
+            assert_eq!(m.max, want.max);
+            // below capacity the pooled subsample IS the pooled stream,
+            // so even the estimated percentiles agree with the oracle
+            for (got, oracle) in
+                [(m.p50, want.p50), (m.p95, want.p95), (m.p99, want.p99)]
+            {
+                assert_eq!(got, oracle, "pooled percentile must be exact");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! Operational-monitor integration: the stall watchdog must flag a
+//! wedged shard within one sampling interval while its healthy peers
+//! keep serving, a panicked shard must leave an ordered breadcrumb
+//! trail in the flight recorder's post-mortem, an induced SLO breach
+//! must surface through `Serving::health()`, and the scrape endpoint of
+//! a **launched deployment** must serve validating Prometheus text and
+//! health JSON over a real socket.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use grannite::fleet::{AdmissionConfig, Router, ShardConfig, ShardWorker};
+use grannite::graph::datasets::{synthesize, Dataset};
+use grannite::monitor::{EventKind, Monitor, MonitorConfig};
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+};
+use grannite::server::{InferenceEngine, ServerConfig, Update};
+use grannite::tensor::Mat;
+
+const INTERVAL: Duration = Duration::from_millis(40);
+
+/// Fast engine: answers immediately, so its shard beats continuously.
+struct Echo {
+    nodes: usize,
+}
+
+impl InferenceEngine for Echo {
+    fn apply(&mut self, _: &Update) -> anyhow::Result<u64> {
+        Ok(0)
+    }
+    fn infer(&mut self) -> anyhow::Result<Mat> {
+        let mut m = Mat::zeros(self.nodes, 4);
+        for i in 0..self.nodes {
+            m[(i, i % 4)] = 1.0;
+        }
+        Ok(m)
+    }
+    fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+}
+
+/// Engine that blocks inside `infer` until the test releases it — a
+/// deterministic stand-in for a wedged kernel: the shard loop stops
+/// touching its heartbeat pulse mid-iteration, exactly like a hang.
+struct Stall {
+    nodes: usize,
+    release: Receiver<()>,
+}
+
+impl InferenceEngine for Stall {
+    fn apply(&mut self, _: &Update) -> anyhow::Result<u64> {
+        Ok(0)
+    }
+    fn infer(&mut self) -> anyhow::Result<Mat> {
+        let _ = self.release.recv_timeout(Duration::from_secs(5));
+        Ok(Mat::zeros(self.nodes, 4))
+    }
+    fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+}
+
+fn monitor() -> Monitor {
+    Monitor::new(MonitorConfig {
+        interval: INTERVAL,
+        history: 64,
+        slo: None,
+        pressure: true,
+        events: 64,
+    })
+}
+
+fn cfg(monitor: &Monitor) -> ShardConfig {
+    ShardConfig {
+        batch: ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        admission: AdmissionConfig::unbounded(),
+        halo: None,
+        telemetry: grannite::telemetry::Telemetry::disabled(),
+        monitor: monitor.clone(),
+    }
+}
+
+fn kinds(monitor: &Monitor) -> Vec<EventKind> {
+    monitor.events().iter().map(|e| e.kind).collect()
+}
+
+#[test]
+fn watchdog_flags_a_wedged_shard_while_its_peer_keeps_serving() {
+    let m = monitor();
+    let (release, rx_release) = channel::<()>();
+    let owner: Vec<usize> = (0..10).map(|n| usize::from(n >= 5)).collect();
+    let shards = vec![
+        ShardWorker::spawn(0, || Ok(Echo { nodes: 10 }), cfg(&m)),
+        ShardWorker::spawn(
+            1,
+            move || Ok(Stall { nodes: 10, release: rx_release }),
+            cfg(&m),
+        ),
+    ];
+    let router = Router::new(owner, shards);
+
+    // both shards alive and beating before the hang
+    let answered = router.query_wait(Some(2)).unwrap();
+    assert_eq!(answered.shard, 0);
+    m.sample_now();
+    let health = m.health().expect("enabled monitor must report");
+    assert!(health.healthy, "no shard has hung yet: {health:?}");
+
+    // wedge shard 1: its engine blocks inside infer, the heartbeat
+    // goes stale, and one interval later the watchdog must notice
+    let pending = router.query(Some(7)).unwrap();
+    std::thread::sleep(INTERVAL * 3);
+    m.sample_now();
+    let health = m.health().unwrap();
+    assert!(!health.healthy, "hung shard left the fleet healthy");
+    assert!(!health.panicked, "a hang is not a panic");
+    let by_id = |id: usize| health.shards.iter().find(|s| s.id == id).unwrap();
+    assert!(by_id(1).wedged, "shard 1 is mid-infer with a stale beat");
+    assert!(
+        by_id(1).beat_age_ms > INTERVAL.as_millis() as u64,
+        "wedge threshold is one sampling interval: {:?}",
+        by_id(1)
+    );
+    assert!(!by_id(0).wedged, "shard 0 never stopped beating");
+    assert!(
+        kinds(&m).contains(&EventKind::ShardWedged),
+        "no wedge breadcrumb in {:?}",
+        m.events()
+    );
+
+    // the healthy peer still answers while its neighbor hangs
+    let alive = router.query_wait(Some(3)).unwrap();
+    assert_eq!(alive.shard, 0);
+
+    // release the stall: the pending query completes, the heartbeat
+    // resumes, and the next tick records the recovery transition
+    release.send(()).unwrap();
+    assert!(pending.recv().unwrap().is_ok(), "released query must answer");
+    std::thread::sleep(Duration::from_millis(10));
+    m.sample_now();
+    let health = m.health().unwrap();
+    assert!(health.healthy, "recovered fleet still unhealthy: {health:?}");
+    assert!(
+        kinds(&m).contains(&EventKind::ShardRecovered),
+        "no recovery breadcrumb in {:?}",
+        m.events()
+    );
+
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn panicked_shard_leaves_ordered_breadcrumbs_in_the_post_mortem() {
+    struct Bomb;
+    impl InferenceEngine for Bomb {
+        fn apply(&mut self, _: &Update) -> anyhow::Result<u64> {
+            Ok(0)
+        }
+        fn infer(&mut self) -> anyhow::Result<Mat> {
+            panic!("kernel scratch overflow");
+        }
+        fn num_nodes(&self) -> usize {
+            10
+        }
+    }
+
+    let m = monitor();
+    let owner: Vec<usize> = (0..10).map(|n| usize::from(n >= 5)).collect();
+    let shards = vec![
+        ShardWorker::spawn(0, || Ok(Echo { nodes: 10 }), cfg(&m)),
+        ShardWorker::spawn(1, || Ok(Bomb), cfg(&m)),
+    ];
+    let router = Router::new(owner, shards);
+
+    // trip the bomb; the crash path stamps a ShardPanic breadcrumb
+    let err = router.query_wait(Some(7)).unwrap_err().to_string();
+    assert!(err.contains("panicked"), "{err}");
+    m.sample_now();
+
+    let health = m.health().unwrap();
+    assert!(health.panicked, "recorded panic must flip the report");
+    assert!(!health.healthy);
+
+    let events = m.events();
+    assert!(
+        events.iter().any(|e| {
+            e.kind == EventKind::ShardPanic
+                && e.shard == Some(1)
+                && e.detail.contains("kernel scratch overflow")
+        }),
+        "no panic breadcrumb in {events:?}"
+    );
+    // breadcrumbs are a timeline: timestamps never run backwards
+    for pair in events.windows(2) {
+        assert!(
+            pair[0].at_ms <= pair[1].at_ms,
+            "flight recorder out of order: {events:?}"
+        );
+    }
+    let post = m.post_mortem();
+    assert!(post.contains("flight recorder"), "{post}");
+    assert!(post.contains("shard_panic"), "{post}");
+    assert!(post.contains("kernel scratch overflow"), "{post}");
+
+    // the surviving shard is shut down cleanly; the dead one reports
+    let err = router.shutdown().unwrap_err().to_string();
+    assert!(err.contains("panicked"), "{err}");
+}
+
+fn twin() -> Dataset {
+    synthesize("monitor", 64, 160, 4, 12, 29)
+}
+
+fn monitored_spec(shards: usize) -> DeploymentSpec {
+    let mut s = DeploymentSpec {
+        engine: EngineSpec::named("incremental"),
+        topology: Topology::homogeneous(shards),
+        capacity: 72,
+        ..DeploymentSpec::default()
+    };
+    s.monitor.enabled = true;
+    s.monitor.interval_ms = 25;
+    s.monitor.history = 64;
+    s
+}
+
+#[test]
+fn induced_slo_breach_surfaces_through_serving_health() {
+    let ds = twin();
+    let mut spec = monitored_spec(2);
+    spec.slo.enabled = true;
+    spec.slo.availability = 0.9; // budget: 10% of answers may fail
+    spec.slo.latency_us = 60_000_000; // latency can never breach here
+    spec.slo.fast_window_ms = 150;
+    spec.slo.slow_window_ms = 300;
+    spec.slo.burn_threshold = 2.0;
+    let serving =
+        Deployment::launch(&spec, &DataSource::Dataset(ds)).unwrap();
+    let m = serving.monitor().expect("slo spec must activate the monitor");
+
+    // a clean warmup: some answered queries, zero sheds
+    for n in 0..8 {
+        serving.query_wait(Some(n)).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(60));
+    m.sample_now();
+    let health = serving.health().unwrap();
+    assert!(health.healthy, "clean workload breached: {health:?}");
+    let slo = health.slo.as_ref().expect("slo configured");
+    assert!(!slo.breached);
+
+    // burn the availability budget: every request sheds, across both
+    // windows — the breach must surface through Serving::health()
+    let deadline = Instant::now() + Duration::from_secs(3);
+    let breached = loop {
+        for _ in 0..20 {
+            serving.record_shed(Some(1));
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        m.sample_now();
+        let health = serving.health().unwrap();
+        if health.slo.as_ref().is_some_and(|s| s.breached) {
+            assert!(!health.healthy, "breach must unhealthy the report");
+            break true;
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+    };
+    assert!(breached, "sustained 100% shed never tripped the SLO");
+    let slo = serving.health().unwrap().slo.unwrap();
+    assert!(
+        slo.fast.availability_burn > spec.slo.burn_threshold
+            && slo.slow.availability_burn > spec.slo.burn_threshold,
+        "breach requires both windows over threshold: {slo:?}"
+    );
+    assert!(
+        m.events().iter().any(|e| e.kind == EventKind::SloBreach),
+        "no slo_breach breadcrumb in {:?}",
+        m.events()
+    );
+
+    serving.shutdown().unwrap();
+}
+
+/// Minimal HTTP GET over a raw socket: `(status line, body)`.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status = raw.lines().next().unwrap_or("").to_string();
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn launched_deployment_serves_a_validating_scrape_endpoint() {
+    let ds = twin();
+    let mut spec = monitored_spec(4);
+    spec.telemetry.enabled = true;
+    spec.monitor.addr = "127.0.0.1:0".to_string();
+    let serving =
+        Deployment::launch(&spec, &DataSource::Dataset(ds)).unwrap();
+    let m = serving.monitor().unwrap();
+    let addr = m.addr().expect("spec addr must bind at launch");
+
+    // put real traffic on the rings before scraping
+    for step in 0..24usize {
+        serving.update(Update::AddEdge(step % 64, (step + 37) % 64)).unwrap();
+        serving.query_wait(Some((step * 5) % 64)).unwrap();
+    }
+    m.sample_now();
+
+    let (status, body) = http_get(addr, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    let samples =
+        grannite::telemetry::export::validate_prometheus(&body).unwrap();
+    assert!(samples > 0, "scrape served an empty exposition");
+    assert!(
+        body.contains("grannite_queries_total"),
+        "no per-shard query counter in:\n{body}"
+    );
+
+    let (status, body) = http_get(addr, "/health");
+    assert!(status.contains("200"), "healthy fleet must 200: {status}");
+    assert!(body.contains("\"healthy\":true"), "{body}");
+    assert!(body.contains("\"shards\""), "{body}");
+
+    let (status, body) = http_get(addr, "/traces");
+    assert!(status.contains("200"), "{status}");
+    let lines =
+        grannite::telemetry::export::validate_json_lines(&body).unwrap();
+    assert!(lines > 0, "enabled telemetry must export trace lines");
+
+    let (status, _) = http_get(addr, "/nope");
+    assert!(status.contains("404"), "{status}");
+
+    serving.shutdown().unwrap();
+    // the listener dies with the deployment: connects stop succeeding
+    let gone = std::net::TcpStream::connect_timeout(
+        &addr,
+        Duration::from_millis(200),
+    );
+    // (a TIME_WAIT accept can race one last connect; only assert that
+    // a successful connect no longer yields a response)
+    if let Ok(mut s) = gone {
+        use std::io::{Read, Write};
+        let _ = write!(s, "GET /health HTTP/1.1\r\n\r\n");
+        let mut raw = String::new();
+        s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        let n = s.read_to_string(&mut raw).unwrap_or(0);
+        assert_eq!(n, 0, "stopped monitor still answered: {raw}");
+    }
+}

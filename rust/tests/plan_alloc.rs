@@ -8,7 +8,10 @@
 //! with **disabled telemetry** in the loop: a disabled recorder's
 //! `now_us`/`record`/`sampled` calls and a `None` plan profiler must add
 //! no clock reads that allocate, no locks, and no heap traffic, which is
-//! the overhead contract `[telemetry] enabled = false` advertises.
+//! the overhead contract `[telemetry] enabled = false` advertises. The
+//! disabled monitor pulse (`[monitor]` absent) rides the same contract:
+//! the shard loop's `touch()` heartbeat and `pressure_boost()` read are
+//! counted here too and must be branch-only.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -56,6 +59,10 @@ fn steady_state_run_allocates_nothing() {
     let telemetry = grannite::telemetry::Telemetry::disabled();
     let recorder = telemetry.recorder(0);
     assert!(!recorder.enabled());
+    // a disabled monitor's pulse, like the disabled recorder: every
+    // per-round call the shard loop makes through it must be inert
+    let pulse = grannite::monitor::Pulse::disabled();
+    assert!(!pulse.enabled());
     for (label, graph, quant) in [
         ("gcn_stagr", build::gcn_stagr(d, "stagr"), false),
         ("gcn_quant", build::gcn_quant(d, QuantScales::default()), true),
@@ -81,6 +88,8 @@ fn steady_state_run_allocates_nothing() {
             // round, inside the counted region: all branch-only no-ops
             let t = recorder.now_us();
             let _ = recorder.sampled(i);
+            pulse.touch();
+            assert_eq!(pulse.pressure_boost(), 0);
             recorder.record(
                 i,
                 grannite::telemetry::SpanKind::EngineRound,

@@ -62,6 +62,18 @@ fn full_spec_round_trips_through_toml() {
         ring_capacity: 512,
         sample_rate: 0.25,
     };
+    spec.slo.enabled = true;
+    spec.slo.latency_us = 25_000;
+    spec.slo.quantile = 0.99;
+    spec.slo.availability = 0.995;
+    spec.slo.fast_window_ms = 2_000;
+    spec.slo.slow_window_ms = 30_000;
+    spec.slo.burn_threshold = 3.5;
+    spec.slo.pressure = false;
+    spec.monitor.enabled = true;
+    spec.monitor.interval_ms = 100;
+    spec.monitor.history = 600;
+    spec.monitor.addr = "127.0.0.1:9890".into();
 
     let text = spec.to_toml();
     let parsed = DeploymentSpec::parse_toml(&text).unwrap();
@@ -79,6 +91,7 @@ fn checked_in_example_specs_parse_and_validate() {
         "incremental_4shard_sparse.toml",
         "int8_fleet.toml",
         "self_tuning_auto.toml",
+        "monitored_fleet.toml",
     ] {
         let path = std::path::Path::new("../examples/specs").join(name);
         let spec = DeploymentSpec::load(&path)
@@ -194,6 +207,96 @@ fn out_of_range_sample_rate_is_rejected() {
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("sample_rate"), "rate {bad}: {err}");
     }
+}
+
+#[test]
+fn bad_slo_values_are_rejected_actionably() {
+    // quantiles and availabilities live strictly inside (0, 1)
+    for bad in [0.0, 1.0, -0.5, 1.5] {
+        let mut s = spec("local", 1);
+        s.slo.quantile = bad;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("slo.quantile"), "quantile {bad}: {err}");
+
+        let mut s = spec("local", 1);
+        s.slo.availability = bad;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("slo.availability"), "availability {bad}: {err}");
+    }
+
+    // a zero-microsecond objective is unmeetable
+    let mut s = spec("local", 1);
+    s.slo.latency_us = 0;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("slo.latency_us"), "{err}");
+    assert!(err.contains("enabled = false"), "must point at the off switch: {err}");
+
+    // zero-length windows can never accumulate a burn rate
+    for (fast, slow) in [(0usize, 60_000usize), (5_000, 0)] {
+        let mut s = spec("local", 1);
+        s.slo.fast_window_ms = fast;
+        s.slo.slow_window_ms = slow;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("slo windows"), "({fast}, {slow}): {err}");
+    }
+
+    // the fast window must actually be faster
+    for (fast, slow) in [(60_000usize, 5_000usize), (5_000, 5_000)] {
+        let mut s = spec("local", 1);
+        s.slo.fast_window_ms = fast;
+        s.slo.slow_window_ms = slow;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("slo.fast_window_ms") && err.contains("shorter"),
+            "({fast}, {slow}): {err}"
+        );
+    }
+
+    // a threshold ≤ 1 fires on exactly-on-budget behavior
+    for bad in [1.0, 0.5, f64::NAN] {
+        let mut s = spec("local", 1);
+        s.slo.burn_threshold = bad;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("slo.burn_threshold"), "threshold {bad}: {err}");
+    }
+}
+
+#[test]
+fn bad_monitor_values_are_rejected_actionably() {
+    // a zero interval would make the sampler spin and the watchdog
+    // flag every healthy shard
+    let mut s = spec("local", 1);
+    s.monitor.interval_ms = 0;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("monitor.interval_ms"), "{err}");
+    assert!(err.contains("enabled = false"), "{err}");
+
+    // windowed rates difference adjacent samples: need at least two
+    for bad in [0usize, 1] {
+        let mut s = spec("local", 1);
+        s.monitor.history = bad;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("monitor.history"), "history {bad}: {err}");
+        assert!(err.contains("two samples"), "{err}");
+    }
+
+    // a malformed bind address fails at validation, not at launch
+    for bad in ["localhost", "127.0.0.1", "not-an-addr:xyz"] {
+        let mut s = spec("local", 1);
+        s.monitor.addr = bad.into();
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("monitor.addr"), "addr {bad:?}: {err}");
+    }
+
+    // an enabled [slo] or a bind address implies an active monitor even
+    // with [monitor] enabled left false
+    let mut s = spec("local", 1);
+    assert!(!s.monitor_active(), "defaults must keep the monitor off");
+    s.slo.enabled = true;
+    assert!(s.monitor_active(), "an enabled SLO needs the sampler");
+    let mut s = spec("local", 1);
+    s.monitor.addr = "127.0.0.1:0".into();
+    assert!(s.monitor_active(), "a scrape address needs the sampler");
 }
 
 #[test]
