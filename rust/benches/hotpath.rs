@@ -20,11 +20,13 @@
 //! sparse planned engine instead.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use grannite::bench::{banner, run_bench};
 use grannite::cli::Args;
 use grannite::coordinator::ModelState;
+use grannite::engine::pool::par_rows_timed;
 use grannite::engine::{kernels, PlanInstance, WorkerPool};
 use grannite::graph::datasets::synthesize;
 use grannite::graph::{DynamicGraph, Graph};
@@ -32,7 +34,7 @@ use grannite::ops::build::{self, Aggregation, GnnDims, QuantScales};
 use grannite::ops::exec::{self, Bindings};
 use grannite::ops::plan::ExecPlan;
 use grannite::telemetry::{SpanKind, Telemetry, TelemetryConfig};
-use grannite::tensor::{Mat, Tensor};
+use grannite::tensor::{DensityHint, Mat, Tensor};
 use grannite::util::timing::Stats;
 use grannite::util::{human_bytes, json_escape, Rng};
 
@@ -208,6 +210,90 @@ fn main() -> anyhow::Result<()> {
             }),
         );
     }
+
+    // 5b. SIMD microkernel vs scalar oracle: the same dense matmul
+    //     ({nodes}×256 @ 256×256, density hint NoSkip so neither path
+    //     probes) through both dispatch flags — register blocking and
+    //     k-panel tiling must pay for themselves, gated in CI.
+    let mk = 256usize;
+    let a = Mat::from_fn(nodes, mk, |i, j| ((i * 31 + j * 7) % 17) as f32 * 0.125 - 1.0);
+    let wmat = Mat::from_fn(mk, mk, |i, j| ((i * 13 + j * 3) % 11) as f32 * 0.25 - 1.25);
+    let mut mm_out = vec![0.0f32; nodes * mk];
+    let (w, n) = tier(2, 15);
+    let scalar_stats = run_bench(
+        &format!("scalar matmul {nodes}x{mk} @ {mk}x{mk}"),
+        w,
+        n,
+        || {
+            kernels::matmul_with(
+                &pool, &a.data, nodes, mk, &wmat.data, mk, &mut mm_out,
+                DensityHint::NoSkip, false,
+            );
+        },
+    );
+    record("scalar_matmul", scalar_stats.clone());
+    let simd_stats = run_bench(
+        &format!("SIMD matmul {nodes}x{mk} @ {mk}x{mk}"),
+        w,
+        n,
+        || {
+            kernels::matmul_with(
+                &pool, &a.data, nodes, mk, &wmat.data, mk, &mut mm_out,
+                DensityHint::NoSkip, true,
+            );
+        },
+    );
+    record("simd_matmul", simd_stats.clone());
+    let simd_speedup = scalar_stats.mean / simd_stats.mean;
+    println!("  SIMD microkernel: {simd_speedup:.2}x over the scalar oracle");
+
+    // 5c. degree-skew lane balance: a power-law row distribution (hub
+    //     rows up front, 1/i tail) driven through the row-count
+    //     dispenser vs the nnz-balanced one. worst-lane/mean busy time
+    //     is the wall-clock waste factor — binned must stay near 1.
+    let mut pl_indptr = vec![0u32];
+    let mut pl_nnz = 0usize;
+    for i in 0..nodes {
+        pl_nnz += (nodes / (i + 1)).clamp(1, 4096);
+        pl_indptr.push(pl_nnz as u32);
+    }
+    let busy: Vec<AtomicU64> =
+        (0..pool.threads()).map(|_| AtomicU64::new(0)).collect();
+    let skew_ratio = |indptr: Option<&[u32]>| -> f64 {
+        for b in &busy {
+            b.store(0, Ordering::Relaxed);
+        }
+        par_rows_timed(
+            &pool,
+            nodes,
+            1,
+            indptr,
+            kernels::DEGREE_BINS_DEFAULT,
+            &|r0, r1| {
+                // aggregation stand-in: work strictly ∝ row nnz
+                let mut acc = 0.0f32;
+                for r in r0..r1 {
+                    let deg = (pl_indptr[r + 1] - pl_indptr[r]) as usize;
+                    for t in 0..deg * 64 {
+                        acc += ((t ^ r) as f32).sqrt();
+                    }
+                }
+                std::hint::black_box(acc);
+            },
+            &busy,
+        );
+        let ns: Vec<f64> =
+            busy.iter().map(|b| b.load(Ordering::Relaxed) as f64).collect();
+        let mean = ns.iter().sum::<f64>() / ns.len().max(1) as f64;
+        let worst = ns.iter().cloned().fold(0.0, f64::max);
+        if mean <= 0.0 { 1.0 } else { worst / mean }
+    };
+    let skew_uniform = skew_ratio(None);
+    let skew_binned = skew_ratio(Some(&pl_indptr));
+    println!(
+        "  degree skew ({pl_nnz} nnz over {nodes} rows): worst-lane/mean \
+         {skew_uniform:.2}x row-balanced -> {skew_binned:.2}x nnz-balanced"
+    );
 
     // 6. THE HEADLINE: planned engine vs reference executor, GCN
     //    end-to-end inference (same graph, same bindings) — plus the
@@ -391,6 +477,13 @@ fn main() -> anyhow::Result<()> {
         }
         out.push_str(&format!(
             "  \"telemetry_overhead_ratio\": {telemetry_overhead:.4},\n"
+        ));
+        out.push_str(&format!("  \"simd_speedup\": {simd_speedup:.4},\n"));
+        out.push_str(&format!(
+            "  \"skew_balance_uniform\": {skew_uniform:.4},\n"
+        ));
+        out.push_str(&format!(
+            "  \"skew_balance_binned\": {skew_binned:.4},\n"
         ));
         if let Some(q) = int8_speedup {
             out.push_str(&format!(

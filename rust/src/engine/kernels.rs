@@ -7,12 +7,21 @@
 //! [`WorkerPool`]; each lane computes a disjoint block of output rows,
 //! which keeps within-row accumulation order identical to serial.
 
-use super::pool::{par_rows, SharedOut, WorkerPool};
-use crate::tensor::{matmul_block, sample_density, spmm_rows, SKIP_DENSITY_THRESHOLD};
+use super::pool::{par_rows, par_rows_nnz, SharedOut, WorkerPool};
+use crate::tensor::{
+    matmul_block, matmul_block_simd, spmm_rows, spmm_rows_simd, DensityHint,
+};
+
+/// Default chunks-per-lane granularity for the nnz-balanced SpMM
+/// dispenser (see [`crate::engine::pool::par_rows_nnz`]): enough bins
+/// that a straggler chunk overshoots the mean lane by ≲ 1/bins, few
+/// enough that CAS dispatch stays noise.
+pub const DEGREE_BINS_DEFAULT: usize = 8;
 
 /// `out = a(m×k) @ b(k×n)`, row-sharded; the zero-skip kernel is chosen
 /// from the lhs' sampled density (GraSp skip for sparse masks, branch-free
-/// for dense activations).
+/// for dense activations). SIMD register blocking on; plans with an
+/// explicit [`crate::ops::plan::KernelConfig`] go through [`matmul_with`].
 pub fn matmul(
     pool: &WorkerPool,
     a: &[f32],
@@ -22,17 +31,40 @@ pub fn matmul(
     n: usize,
     out: &mut [f32],
 ) {
+    matmul_with(pool, a, m, k, b, n, out, DensityHint::Sample, true);
+}
+
+/// [`matmul`] with an explicit density hint (skips the per-call probe
+/// when the plan already knows the operand class) and SIMD toggle. Both
+/// kernels and both skip modes agree bitwise, so the flags are pure
+/// throughput knobs.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_with(
+    pool: &WorkerPool,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    hint: DensityHint,
+    simd: bool,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    let skip = sample_density(a) < SKIP_DENSITY_THRESHOLD;
+    let skip = hint.resolve(a);
     let outp = SharedOut(out.as_mut_ptr());
     par_rows(pool, m, 4, &|r0, r1| {
         // SAFETY: row blocks are disjoint per lane.
         let ob = unsafe {
             std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
         };
-        matmul_block(&a[r0 * k..r1 * k], r1 - r0, k, b, n, ob, skip);
+        if simd {
+            matmul_block_simd(&a[r0 * k..r1 * k], r1 - r0, k, b, n, ob, skip);
+        } else {
+            matmul_block(&a[r0 * k..r1 * k], r1 - r0, k, b, n, ob, skip);
+        }
     });
 }
 
@@ -52,16 +84,53 @@ pub fn spmm(
     n: usize,
     out: &mut [f32],
 ) {
+    spmm_with(
+        pool,
+        indptr,
+        indices,
+        values,
+        m,
+        rhs,
+        n,
+        out,
+        DEGREE_BINS_DEFAULT,
+        true,
+    );
+}
+
+/// [`spmm`] with explicit scheduling and SIMD knobs: `bins` is the
+/// chunks-per-lane granularity of the nnz-balanced dispenser (row chunks
+/// carry equal stored-entry counts, so power-law hub rows stop being
+/// stragglers), `simd` selects the neighbor-blocked kernel. All
+/// combinations agree bitwise — per-row work and per-element
+/// accumulation order never change.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_with(
+    pool: &WorkerPool,
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    m: usize,
+    rhs: &[f32],
+    n: usize,
+    out: &mut [f32],
+    bins: usize,
+    simd: bool,
+) {
     debug_assert_eq!(indptr.len(), m + 1);
     debug_assert_eq!(indices.len(), values.len());
     debug_assert_eq!(out.len(), m * n);
     let outp = SharedOut(out.as_mut_ptr());
-    par_rows(pool, m, 8, &|r0, r1| {
+    par_rows_nnz(pool, indptr, 8, bins, &|r0, r1| {
         // SAFETY: row blocks are disjoint per lane.
         let ob = unsafe {
             std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
         };
-        spmm_rows(indptr, indices, values, r0, r1, rhs, n, ob);
+        if simd {
+            spmm_rows_simd(indptr, indices, values, r0, r1, rhs, n, ob);
+        } else {
+            spmm_rows(indptr, indices, values, r0, r1, rhs, n, ob);
+        }
     });
 }
 
@@ -80,11 +149,46 @@ pub fn spmm_i8(
     scale: f32,
     out: &mut [f32],
 ) {
+    spmm_i8_with(
+        pool,
+        indptr,
+        indices,
+        values,
+        m,
+        rhs,
+        n,
+        scale,
+        out,
+        DEGREE_BINS_DEFAULT,
+        true,
+    );
+}
+
+/// [`spmm_i8`] with scheduling and SIMD knobs. The SIMD variant streams
+/// whole rhs rows through 8-lane i32 accumulator blocks (the scalar path
+/// reads rhs column-strided, one element per neighbor); i32 addition is
+/// associative, so both variants produce identical accumulators and the
+/// same single f32 rescale.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_i8_with(
+    pool: &WorkerPool,
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[i8],
+    m: usize,
+    rhs: &[i8],
+    n: usize,
+    scale: f32,
+    out: &mut [f32],
+    bins: usize,
+    simd: bool,
+) {
+    const JW: usize = 8;
     debug_assert_eq!(indptr.len(), m + 1);
     debug_assert_eq!(indices.len(), values.len());
     debug_assert_eq!(out.len(), m * n);
     let outp = SharedOut(out.as_mut_ptr());
-    par_rows(pool, m, 8, &|r0, r1| {
+    par_rows_nnz(pool, indptr, 8, bins, &|r0, r1| {
         // SAFETY: row blocks are disjoint per lane.
         let ob = unsafe {
             std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
@@ -92,13 +196,33 @@ pub fn spmm_i8(
         for i in r0..r1 {
             let (a, b) = (indptr[i] as usize, indptr[i + 1] as usize);
             let orow = &mut ob[(i - r0) * n..(i - r0 + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let mut acc: i32 = 0;
-                for p in a..b {
-                    acc += values[p] as i32
-                        * rhs[indices[p] as usize * n + j] as i32;
+            if simd {
+                let mut j = 0usize;
+                while j < n {
+                    let w = (n - j).min(JW);
+                    let mut acc = [0i32; JW];
+                    for p in a..b {
+                        let v = values[p] as i32;
+                        let base = indices[p] as usize * n + j;
+                        let brow = &rhs[base..base + w];
+                        for (l, &bv) in brow.iter().enumerate() {
+                            acc[l] += v * bv as i32;
+                        }
+                    }
+                    for (l, o) in orow[j..j + w].iter_mut().enumerate() {
+                        *o = acc[l] as f32 * scale;
+                    }
+                    j += w;
                 }
-                *o = acc as f32 * scale;
+            } else {
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let mut acc: i32 = 0;
+                    for p in a..b {
+                        acc += values[p] as i32
+                            * rhs[indices[p] as usize * n + j] as i32;
+                    }
+                    *o = acc as f32 * scale;
+                }
             }
         }
     });
@@ -144,6 +268,25 @@ pub fn qmatmul_i8(
     scale: f32,
     out: &mut [f32],
 ) {
+    qmatmul_i8_with(pool, x, w, m, k, n, scale, out, true);
+}
+
+/// [`qmatmul_i8`] with a SIMD toggle. The SIMD variant register-blocks
+/// 4×16 i32 output tiles and streams weight rows (the scalar path reads
+/// `w` column-strided); i32 accumulation is associative, so both produce
+/// identical accumulators and rescales.
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_i8_with(
+    pool: &WorkerPool,
+    x: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    out: &mut [f32],
+    simd: bool,
+) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -153,17 +296,84 @@ pub fn qmatmul_i8(
         let ob = unsafe {
             std::slice::from_raw_parts_mut(outp.0.add(r0 * n), (r1 - r0) * n)
         };
-        for i in 0..r1 - r0 {
-            let xr = &x[(r0 + i) * k..(r0 + i) * k + k];
-            for j in 0..n {
+        if simd {
+            qmatmul_i8_rows_simd(x, w, r0, r1, k, n, scale, ob);
+        } else {
+            for i in 0..r1 - r0 {
+                let xr = &x[(r0 + i) * k..(r0 + i) * k + k];
+                for j in 0..n {
+                    let mut acc: i32 = 0;
+                    for (kk, &xv) in xr.iter().enumerate() {
+                        acc += xv as i32 * w[kk * n + j] as i32;
+                    }
+                    ob[i * n + j] = acc as f32 * scale;
+                }
+            }
+        }
+    });
+}
+
+/// Register-blocked i8 GEMM over a row block: 4×16 i32 accumulator tiles,
+/// weight rows streamed contiguously. Exact — integer accumulation.
+#[allow(clippy::too_many_arguments)]
+fn qmatmul_i8_rows_simd(
+    x: &[i8],
+    w: &[i8],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    ob: &mut [f32],
+) {
+    const IR: usize = 4;
+    const JW: usize = 16;
+    let rows = r1 - r0;
+    let mut i = 0usize;
+    while i + IR <= rows {
+        let mut j = 0usize;
+        while j + JW <= n {
+            let mut acc = [[0i32; JW]; IR];
+            for kk in 0..k {
+                let wp = &w[kk * n + j..kk * n + j + JW];
+                for (r, acc_row) in acc.iter_mut().enumerate() {
+                    let xv = x[(r0 + i + r) * k + kk] as i32;
+                    for (l, &wv) in wp.iter().enumerate() {
+                        acc_row[l] += xv * wv as i32;
+                    }
+                }
+            }
+            for (r, acc_row) in acc.iter().enumerate() {
+                for (l, &av) in acc_row.iter().enumerate() {
+                    ob[(i + r) * n + j + l] = av as f32 * scale;
+                }
+            }
+            j += JW;
+        }
+        while j < n {
+            for r in 0..IR {
+                let xr = &x[(r0 + i + r) * k..(r0 + i + r) * k + k];
                 let mut acc: i32 = 0;
                 for (kk, &xv) in xr.iter().enumerate() {
                     acc += xv as i32 * w[kk * n + j] as i32;
                 }
-                ob[i * n + j] = acc as f32 * scale;
+                ob[(i + r) * n + j] = acc as f32 * scale;
             }
+            j += 1;
         }
-    });
+        i += IR;
+    }
+    while i < rows {
+        let xr = &x[(r0 + i) * k..(r0 + i) * k + k];
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for (kk, &xv) in xr.iter().enumerate() {
+                acc += xv as i32 * w[kk * n + j] as i32;
+            }
+            ob[i * n + j] = acc as f32 * scale;
+        }
+        i += 1;
+    }
 }
 
 /// Fallback QMatMul for operands that are not provably int8: f64
@@ -637,6 +847,84 @@ mod tests {
             &mut slow,
         );
         assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn kernel_with_variants_agree_across_simd_and_bins() {
+        use crate::tensor::CsrMat;
+        let pool = WorkerPool::new(4);
+        let (m, k, n) = (29, 41, 19);
+        let a = Mat::from_fn(m, k, |i, j| ((i * 7 + j * 3) % 9) as f32 - 4.0);
+        let b = Mat::from_fn(k, n, |i, j| ((i * 5 + j) % 7) as f32 - 3.0);
+        let mut scalar = vec![0.0f32; m * n];
+        matmul_with(
+            &pool, &a.data, m, k, &b.data, n, &mut scalar,
+            DensityHint::Sample, false,
+        );
+        for hint in [DensityHint::Sample, DensityHint::Skip, DensityHint::NoSkip] {
+            let mut simd = vec![0.0f32; m * n];
+            matmul_with(&pool, &a.data, m, k, &b.data, n, &mut simd, hint, true);
+            assert_eq!(scalar, simd, "hint {hint:?}");
+        }
+        // spmm: skewed mask, every (bins, simd) combination bitwise-equal
+        let mask = Mat::from_fn(m, m, |i, j| {
+            if i == 0 || (i + j) % 11 == 0 {
+                ((i * j) % 5) as f32 - 2.0
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMat::from_dense(&mask);
+        let mut want = vec![0.0f32; m * n];
+        spmm_with(
+            &pool, &csr.indptr, &csr.indices, &csr.values, m, &b.data, n,
+            &mut want, 1, false,
+        );
+        for bins in [1usize, 4, 16] {
+            for simd in [false, true] {
+                let mut got = vec![0.0f32; m * n];
+                spmm_with(
+                    &pool, &csr.indptr, &csr.indices, &csr.values, m, &b.data,
+                    n, &mut got, bins, simd,
+                );
+                assert_eq!(got, want, "bins {bins} simd {simd}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_with_variants_agree_across_simd() {
+        use crate::tensor::CsrMat;
+        let pool = WorkerPool::new(3);
+        let (m, k, n) = (17, 23, 21);
+        let x8: Vec<i8> = (0..m * k).map(|i| ((i * 37) % 255) as i8).collect();
+        let w8: Vec<i8> = (0..k * n).map(|i| ((i * 91) % 255) as i8).collect();
+        let mut scalar = vec![0.0f32; m * n];
+        let mut simd = vec![0.0f32; m * n];
+        qmatmul_i8_with(&pool, &x8, &w8, m, k, n, 0.5, &mut scalar, false);
+        qmatmul_i8_with(&pool, &x8, &w8, m, k, n, 0.5, &mut simd, true);
+        assert_eq!(scalar, simd, "qmatmul i8 simd divergence");
+        let mask = Mat::from_fn(m, k, |i, j| {
+            if (i * 3 + j) % 4 == 0 {
+                ((i + j) % 253) as f32 - 126.0
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMat::from_dense(&mask);
+        let v8: Vec<i8> = csr.values.iter().map(|&v| v as i8).collect();
+        let rhs8: Vec<i8> = (0..k * n).map(|i| ((i * 53) % 255) as i8).collect();
+        let mut s_scalar = vec![0.0f32; m * n];
+        let mut s_simd = vec![0.0f32; m * n];
+        spmm_i8_with(
+            &pool, &csr.indptr, &csr.indices, &v8, m, &rhs8, n, 0.125,
+            &mut s_scalar, 1, false,
+        );
+        spmm_i8_with(
+            &pool, &csr.indptr, &csr.indices, &v8, m, &rhs8, n, 0.125,
+            &mut s_simd, 16, true,
+        );
+        assert_eq!(s_scalar, s_simd, "spmm i8 simd divergence");
     }
 
     #[test]

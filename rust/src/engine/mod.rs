@@ -30,7 +30,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::ops::exec::Bindings;
 use crate::ops::plan::{rc, Chain, ChainSrc, ExecPlan, FusedOp, PlanStep, StepKind, NO_SLOT};
 use crate::ops::{OpGraph, OpId, OpKind};
-use crate::tensor::{Mat, Tensor};
+use crate::tensor::{DensityHint, Mat, Tensor};
+use crate::util::aligned::AlignedBuf;
 
 pub use kernels::QOperand;
 pub use pool::{par_rows, WorkerPool};
@@ -69,6 +70,102 @@ impl RawView {
     }
 }
 
+/// One fused-chain stage applied to a single element at (i, j).
+#[inline]
+fn eval_fused(s: FusedOp, v: f32, views: &[RawView], i: usize, j: usize) -> f32 {
+    match s {
+        FusedOp::Scale(c) => v * c,
+        FusedOp::AddConst(c) => v + c,
+        FusedOp::Relu => v.max(0.0),
+        FusedOp::LeakyRelu(sl) => {
+            if v > 0.0 {
+                v
+            } else {
+                sl * v
+            }
+        }
+        FusedOp::Exp => v.exp(),
+        FusedOp::Quantize(sc) => (v / sc).round().clamp(-127.0, 127.0),
+        FusedOp::Broadcast => v,
+        FusedOp::Add(x) => v + views[1 + x as usize].at(i, j),
+        FusedOp::Sub(x) => v - views[1 + x as usize].at(i, j),
+        FusedOp::Mul(x) => v * views[1 + x as usize].at(i, j),
+    }
+}
+
+/// Fused-chain interpreter over a row block, evaluated in 8-wide column
+/// lanes: each stage is applied to a stack block of elements so the
+/// arithmetic stages vectorize. Elements are independent and each lane
+/// applies exactly the per-element math of [`eval_fused`], so results
+/// are bitwise identical to the scalar interpreter.
+fn chain_rows_simd(
+    views: &[RawView],
+    steps: &[FusedOp],
+    cols: usize,
+    r0: usize,
+    r1: usize,
+    outp: pool::SharedOut,
+) {
+    const JW: usize = 8;
+    let mut v = [0.0f32; JW];
+    for i in r0..r1 {
+        let mut j = 0usize;
+        while j < cols {
+            let w = (cols - j).min(JW);
+            for (l, vl) in v[..w].iter_mut().enumerate() {
+                *vl = views[0].at(i, j + l);
+            }
+            for s in steps {
+                match *s {
+                    FusedOp::Scale(c) => {
+                        for vl in &mut v[..w] {
+                            *vl *= c;
+                        }
+                    }
+                    FusedOp::AddConst(c) => {
+                        for vl in &mut v[..w] {
+                            *vl += c;
+                        }
+                    }
+                    FusedOp::Relu => {
+                        for vl in &mut v[..w] {
+                            *vl = vl.max(0.0);
+                        }
+                    }
+                    FusedOp::Add(x) => {
+                        let vw = &views[1 + x as usize];
+                        for (l, vl) in v[..w].iter_mut().enumerate() {
+                            *vl += vw.at(i, j + l);
+                        }
+                    }
+                    FusedOp::Sub(x) => {
+                        let vw = &views[1 + x as usize];
+                        for (l, vl) in v[..w].iter_mut().enumerate() {
+                            *vl -= vw.at(i, j + l);
+                        }
+                    }
+                    FusedOp::Mul(x) => {
+                        let vw = &views[1 + x as usize];
+                        for (l, vl) in v[..w].iter_mut().enumerate() {
+                            *vl *= vw.at(i, j + l);
+                        }
+                    }
+                    other => {
+                        for (l, vl) in v[..w].iter_mut().enumerate() {
+                            *vl = eval_fused(other, *vl, views, i, j + l);
+                        }
+                    }
+                }
+            }
+            for (l, &vl) in v[..w].iter().enumerate() {
+                // SAFETY: rows r0..r1 are exclusive to this lane.
+                unsafe { *outp.0.add(i * cols + j + l) = vl };
+            }
+            j += w;
+        }
+    }
+}
+
 /// Cached i8 conversion of one QMatMul weight input.
 struct CachedWeights {
     fingerprint: u64,
@@ -82,8 +179,8 @@ struct CachedWeights {
 pub struct PlanInstance {
     plan: Arc<ExecPlan>,
     pool: Arc<WorkerPool>,
-    slabs: Vec<Box<[f32]>>,
-    i8_slabs: Vec<Box<[i8]>>,
+    slabs: Vec<AlignedBuf<f32>>,
+    i8_slabs: Vec<AlignedBuf<i8>>,
     /// Per-op cached INT8 weights (QMatMul rhs only).
     w8: Vec<Option<CachedWeights>>,
     /// Reusable chain-operand scratch (capacity persists across runs).
@@ -97,18 +194,26 @@ pub struct PlanInstance {
 
 impl PlanInstance {
     pub fn new(plan: Arc<ExecPlan>, pool: Arc<WorkerPool>) -> PlanInstance {
-        let slabs = plan
-            .slab_elems
-            .iter()
-            .map(|&e| vec![0.0f32; e].into_boxed_slice())
-            .collect();
-        let i8_slabs = plan
-            .i8_slab_elems
-            .iter()
-            .map(|&e| vec![0i8; e].into_boxed_slice())
-            .collect();
+        let slabs = plan.slab_elems.iter().map(|&e| AlignedBuf::zeroed(e)).collect();
+        let i8_slabs =
+            plan.i8_slab_elems.iter().map(|&e| AlignedBuf::zeroed(e)).collect();
         let w8 = (0..plan.graph.ops.len()).map(|_| None).collect();
         PlanInstance { plan, pool, slabs, i8_slabs, w8, scratch: Vec::new(), profiler: None }
+    }
+
+    /// True when every non-empty arena slab starts on an `align`-byte
+    /// boundary — the SIMD-load contract `rust/tests/plan_alloc.rs` pins
+    /// (slabs come from [`crate::util::aligned::AlignedBuf`]).
+    pub fn arena_aligned(&self, align: usize) -> bool {
+        self.slabs
+            .iter()
+            .filter(|s| !s.is_empty())
+            .all(|s| s.as_ptr() as usize % align == 0)
+            && self
+                .i8_slabs
+                .iter()
+                .filter(|s| !s.is_empty())
+                .all(|s| s.as_ptr() as usize % align == 0)
     }
 
     pub fn plan(&self) -> &Arc<ExecPlan> {
@@ -293,39 +398,25 @@ impl PlanInstance {
             out.len() >= ch.rows * ch.cols,
             "arena slab {slot} too small for chain output"
         );
+        let simd = plan.kernels.simd.enabled();
         let eval = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let (rows, cols) = (ch.rows, ch.cols);
             let steps: &[FusedOp] = &ch.steps;
             let views: &[RawView] = &scratch;
             let outp = pool::SharedOut(out.as_mut_ptr());
             par_rows(&self.pool, rows, 32, &|r0, r1| {
-                for i in r0..r1 {
-                    for j in 0..cols {
-                        let mut v = views[0].at(i, j);
-                        for s in steps {
-                            v = match *s {
-                                FusedOp::Scale(c) => v * c,
-                                FusedOp::AddConst(c) => v + c,
-                                FusedOp::Relu => v.max(0.0),
-                                FusedOp::LeakyRelu(sl) => {
-                                    if v > 0.0 {
-                                        v
-                                    } else {
-                                        sl * v
-                                    }
-                                }
-                                FusedOp::Exp => v.exp(),
-                                FusedOp::Quantize(sc) => {
-                                    (v / sc).round().clamp(-127.0, 127.0)
-                                }
-                                FusedOp::Broadcast => v,
-                                FusedOp::Add(x) => v + views[1 + x as usize].at(i, j),
-                                FusedOp::Sub(x) => v - views[1 + x as usize].at(i, j),
-                                FusedOp::Mul(x) => v * views[1 + x as usize].at(i, j),
-                            };
+                if simd {
+                    chain_rows_simd(views, steps, cols, r0, r1, outp);
+                } else {
+                    for i in r0..r1 {
+                        for j in 0..cols {
+                            let mut v = views[0].at(i, j);
+                            for s in steps {
+                                v = eval_fused(*s, v, views, i, j);
+                            }
+                            // SAFETY: rows r0..r1 are exclusive to this lane.
+                            unsafe { *outp.0.add(i * cols + j) = v };
                         }
-                        // SAFETY: rows r0..r1 are exclusive to this lane.
-                        unsafe { *outp.0.add(i * cols + j) = v };
                     }
                 }
             });
@@ -438,11 +529,14 @@ impl PlanInstance {
         let res = (|| -> Result<()> {
             let out = &mut out_slab[..n_out];
             let pool = &self.pool;
+            let simd = plan.kernels.simd.enabled();
             match &op.kind {
                 OpKind::MatMul => {
                     let (a, m, k) = self.f32_of(plan, op.inputs[0], b)?;
                     let (w, _, nn) = self.f32_of(plan, op.inputs[1], b)?;
-                    kernels::matmul(pool, a, m, k, w, nn, out);
+                    kernels::matmul_with(
+                        pool, a, m, k, w, nn, out, plan.density_hint[id], simd,
+                    );
                 }
                 OpKind::SpMM => {
                     let (h, hr, nn) = self.f32_of(plan, op.inputs[1], b)?;
@@ -462,9 +556,9 @@ impl PlanInstance {
                                     lop.name, mat.rows, mat.cols, lr, lc
                                 );
                             }
-                            kernels::spmm(
+                            kernels::spmm_with(
                                 pool, &mat.indptr, &mat.indices, &mat.values,
-                                rows, h, nn, out,
+                                rows, h, nn, out, plan.kernels.degree_bins, simd,
                             );
                         }
                         // dense fallback: above the density threshold the
@@ -477,7 +571,10 @@ impl PlanInstance {
                                     lop.name, data.len(), lr, lc
                                 );
                             }
-                            kernels::matmul(pool, data, rows, hr, h, nn, out);
+                            kernels::matmul_with(
+                                pool, data, rows, hr, h, nn, out,
+                                DensityHint::Sample, simd,
+                            );
                         }
                         other => bail!(
                             "input {:?}: SpMM operand must be CSR or f32, got {:?}",
@@ -497,7 +594,7 @@ impl PlanInstance {
                     if lhs_slot != NO_SLOT && w8_ok {
                         let x8 = &self.i8_slabs[lhs_slot][..m * k];
                         let cw = self.w8[id].as_ref().unwrap();
-                        kernels::qmatmul_i8(pool, x8, &cw.data, m, k, nn, s, out);
+                        kernels::qmatmul_i8_with(pool, x8, &cw.data, m, k, nn, s, out, simd);
                     } else {
                         let lhs = if lhs_slot != NO_SLOT {
                             QOperand::I8(&self.i8_slabs[lhs_slot][..m * k])
@@ -720,6 +817,9 @@ pub struct TileRunner {
     /// When set, every tile's [`PlanInstance`] gets a profiler feeding
     /// this hub's per-shard calibration sink.
     telemetry: Option<(Arc<crate::telemetry::Telemetry>, usize)>,
+    /// Kernel knobs every tile plan is compiled with — tiles route
+    /// through the same microkernel dispatch as full plans.
+    kernels: crate::ops::plan::KernelConfig,
 }
 
 impl TileRunner {
@@ -740,7 +840,15 @@ impl TileRunner {
             max_ring,
             tiles: std::collections::BTreeMap::new(),
             telemetry: None,
+            kernels: crate::ops::plan::KernelConfig::default(),
         }
+    }
+
+    /// Set the kernel knobs future tiles compile with (SIMD dispatch,
+    /// degree bins). Call before the first [`TileRunner::tile`];
+    /// already-compiled tiles keep their plan.
+    pub fn set_kernels(&mut self, kernels: crate::ops::plan::KernelConfig) {
+        self.kernels = kernels;
     }
 
     /// Route per-step profiling of every tile (already-compiled and
@@ -773,7 +881,7 @@ impl TileRunner {
         let key = self.bucket(rows, ring);
         if !self.tiles.contains_key(&key) {
             let graph = (self.build)(key.0, key.1);
-            let plan = Arc::new(ExecPlan::compile(&graph)?);
+            let plan = Arc::new(ExecPlan::compile_with(&graph, self.kernels)?);
             let mut bindings = self.statics.clone();
             for op in &plan.graph.ops {
                 if op.kind == OpKind::Input && !bindings.contains_key(&op.name) {
@@ -888,6 +996,31 @@ mod tests {
         serial.run(&b).unwrap();
         par.run(&b).unwrap();
         assert_eq!(serial.output_mat(0).unwrap(), par.output_mat(0).unwrap());
+    }
+
+    #[test]
+    fn simd_off_plan_matches_default_bitwise() {
+        // the scalar-fallback configuration is the oracle path: a plan
+        // compiled with SIMD off must agree exactly with the default
+        use crate::ops::plan::{KernelConfig, SimdMode};
+        let g = build::gcn_stagr(dims(), "stagr");
+        let b = gcn_bindings(23);
+        let pool = Arc::new(WorkerPool::new(3));
+        let default_plan = Arc::new(ExecPlan::compile(&g).unwrap());
+        let scalar_plan = Arc::new(
+            ExecPlan::compile_with(
+                &g,
+                KernelConfig { simd: SimdMode::Off, ..KernelConfig::default() },
+            )
+            .unwrap(),
+        );
+        let mut simd = PlanInstance::new(default_plan, Arc::clone(&pool));
+        let mut scalar = PlanInstance::new(scalar_plan, pool);
+        simd.run(&b).unwrap();
+        scalar.run(&b).unwrap();
+        assert_eq!(simd.output_mat(0).unwrap(), scalar.output_mat(0).unwrap());
+        // the arena behind both instances is slab-aligned for SIMD loads
+        assert!(simd.arena_aligned(crate::util::aligned::SLAB_ALIGN));
     }
 
     #[test]

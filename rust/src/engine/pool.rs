@@ -203,6 +203,140 @@ pub fn par_rows(
     });
 }
 
+/// Degree-binned variant of [`par_rows`] for CSR row sharding: chunk
+/// boundaries are chosen by walking `indptr`, so each claimed chunk
+/// carries roughly `nnz / (lanes × bins)` stored entries instead of a
+/// fixed row count. On power-law graphs this is the difference between
+/// one lane draining a hub row while the rest idle, and every lane
+/// retiring equal aggregation work (the EnGN edge-vs-node dispatch
+/// insight). Allocation-free: chunks are claimed through a CAS cursor
+/// rather than precomputed bin arrays. `bins` is chunks-per-lane — more
+/// bins means finer rebalancing at slightly higher dispatch cost.
+pub fn par_rows_nnz(
+    pool: &WorkerPool,
+    indptr: &[u32],
+    min_chunk: usize,
+    bins: usize,
+    f: &(dyn Fn(usize, usize) + Sync),
+) {
+    let rows = indptr.len().saturating_sub(1);
+    if rows == 0 {
+        return;
+    }
+    let lanes = pool.threads();
+    if lanes <= 1 || rows < 2 * min_chunk.max(1) {
+        f(0, rows);
+        return;
+    }
+    let total = (indptr[rows] - indptr[0]) as usize;
+    let target = (total / (lanes * bins.max(1))).max(1);
+    let next = AtomicUsize::new(0);
+    pool.run(&|_lane| {
+        let mut r0 = next.load(Ordering::Relaxed);
+        while r0 < rows {
+            let r1 = nnz_chunk_end(indptr, r0, rows, target, min_chunk);
+            match next.compare_exchange_weak(r0, r1, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => {
+                    f(r0, r1);
+                    r0 = next.load(Ordering::Relaxed);
+                }
+                Err(cur) => r0 = cur,
+            }
+        }
+    });
+}
+
+/// Advance from `r0` until the chunk holds ≥ `target` stored entries
+/// (and ≥ `min_rows` rows, so degree-0 stretches don't degenerate to
+/// row-at-a-time dispatch).
+fn nnz_chunk_end(
+    indptr: &[u32],
+    r0: usize,
+    rows: usize,
+    target: usize,
+    min_rows: usize,
+) -> usize {
+    let mut r1 = r0;
+    let mut acc = 0usize;
+    while r1 < rows && (acc < target || r1 - r0 < min_rows.max(1)) {
+        acc += (indptr[r1 + 1] - indptr[r1]) as usize;
+        r1 += 1;
+    }
+    r1
+}
+
+/// [`par_rows`] / [`par_rows_nnz`] with per-lane busy-time accounting —
+/// the scheduling-skew probe behind the `skew_balance` bench gate.
+/// `lane_busy_ns[lane]` accumulates nanoseconds spent inside `f`;
+/// `indptr = None` uses the uniform row-count dispenser, `Some` the
+/// nnz-balanced one. The timed wrapper costs two clock reads per chunk,
+/// so this stays in benches and tests; production kernels call the
+/// untimed dispatchers.
+#[allow(clippy::too_many_arguments)]
+pub fn par_rows_timed(
+    pool: &WorkerPool,
+    rows: usize,
+    min_chunk: usize,
+    indptr: Option<&[u32]>,
+    bins: usize,
+    f: &(dyn Fn(usize, usize) + Sync),
+    lane_busy_ns: &[std::sync::atomic::AtomicU64],
+) {
+    assert!(lane_busy_ns.len() >= pool.threads(), "one timer slot per lane");
+    if let Some(ip) = indptr {
+        debug_assert_eq!(ip.len(), rows + 1, "indptr covers every row");
+    }
+    let timed = |lane: usize, r0: usize, r1: usize| {
+        let t0 = std::time::Instant::now();
+        f(r0, r1);
+        lane_busy_ns[lane]
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    };
+    if rows == 0 {
+        return;
+    }
+    let lanes = pool.threads();
+    if lanes <= 1 || rows < 2 * min_chunk.max(1) {
+        timed(0, 0, rows);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    match indptr {
+        None => {
+            let chunk = (rows / (lanes * 4)).max(min_chunk).max(1);
+            pool.run(&|lane| loop {
+                let r0 = next.fetch_add(chunk, Ordering::Relaxed);
+                if r0 >= rows {
+                    break;
+                }
+                timed(lane, r0, (r0 + chunk).min(rows));
+            });
+        }
+        Some(ip) => {
+            let total = (ip[rows] - ip[0]) as usize;
+            let target = (total / (lanes * bins.max(1))).max(1);
+            pool.run(&|lane| {
+                let mut r0 = next.load(Ordering::Relaxed);
+                while r0 < rows {
+                    let r1 = nnz_chunk_end(ip, r0, rows, target, min_chunk);
+                    match next.compare_exchange_weak(
+                        r0,
+                        r1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            timed(lane, r0, r1);
+                            r0 = next.load(Ordering::Relaxed);
+                        }
+                        Err(cur) => r0 = cur,
+                    }
+                }
+            });
+        }
+    }
+}
+
 /// Wrapper making a raw output pointer `Send + Sync` so parallel kernels
 /// can carve **disjoint** row blocks out of one output buffer.
 #[derive(Clone, Copy)]
@@ -338,5 +472,110 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    /// indptr for a synthetic degree sequence.
+    fn indptr_of(degrees: &[u32]) -> Vec<u32> {
+        let mut ip = vec![0u32];
+        for &d in degrees {
+            ip.push(ip.last().unwrap() + d);
+        }
+        ip
+    }
+
+    #[test]
+    fn par_rows_nnz_covers_every_row_once() {
+        let pool = WorkerPool::new(4);
+        // power-law-ish: one hub holding most entries, a zero-degree
+        // stretch, then a light tail
+        let mut degrees = vec![500u32, 0, 0, 0, 0];
+        degrees.extend(vec![2u32; 98]);
+        let ip = indptr_of(&degrees);
+        let counts: Vec<AtomicU64> =
+            (0..degrees.len()).map(|_| AtomicU64::new(0)).collect();
+        par_rows_nnz(&pool, &ip, 1, 8, &|r0, r1| {
+            assert!(r0 < r1, "chunks are non-empty");
+            for r in r0..r1 {
+                counts[r].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (r, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_rows_nnz_zero_nnz_graph_still_covers() {
+        // all-empty rows: the min_chunk floor keeps chunks from
+        // degenerating, and every row is still dispatched exactly once
+        let pool = WorkerPool::new(3);
+        let ip = indptr_of(&[0u32; 40]);
+        let counts: Vec<AtomicU64> = (0..40).map(|_| AtomicU64::new(0)).collect();
+        par_rows_nnz(&pool, &ip, 4, 8, &|r0, r1| {
+            for r in r0..r1 {
+                counts[r].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (r, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_rows_nnz_small_input_inline() {
+        let pool = WorkerPool::new(4);
+        let ip = indptr_of(&[3, 1, 2]);
+        let hits = AtomicU64::new(0);
+        par_rows_nnz(&pool, &ip, 16, 8, &|r0, r1| {
+            assert_eq!((r0, r1), (0, 3));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn par_rows_nnz_chunks_track_entry_counts() {
+        // hub rows must land in narrow chunks: no chunk may combine the
+        // hub with the whole tail (that is exactly the straggler the
+        // nnz dispenser exists to break up)
+        let pool = WorkerPool::new(4);
+        let mut degrees = vec![1000u32];
+        degrees.extend(vec![1u32; 200]);
+        let ip = indptr_of(&degrees);
+        let max_span = AtomicU64::new(0);
+        par_rows_nnz(&pool, &ip, 1, 8, &|r0, r1| {
+            if r0 == 0 {
+                max_span.fetch_max((r1 - r0) as u64, Ordering::Relaxed);
+            }
+        });
+        assert!(
+            max_span.load(Ordering::Relaxed) <= 2,
+            "hub chunk spanned {} rows",
+            max_span.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn par_rows_timed_accounts_all_lanes() {
+        let pool = WorkerPool::new(4);
+        let degrees: Vec<u32> = (0..120).map(|i| (i % 7) as u32).collect();
+        let ip = indptr_of(&degrees);
+        for indptr in [None, Some(ip.as_slice())] {
+            let busy: Vec<AtomicU64> =
+                (0..pool.threads()).map(|_| AtomicU64::new(0)).collect();
+            let counts: Vec<AtomicU64> =
+                (0..120).map(|_| AtomicU64::new(0)).collect();
+            par_rows_timed(&pool, 120, 1, indptr, 8, &|r0, r1| {
+                for r in r0..r1 {
+                    counts[r].fetch_add(1, Ordering::Relaxed);
+                    std::hint::black_box(r);
+                }
+            }, &busy);
+            for (r, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "row {r}");
+            }
+            let total: u64 = busy.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+            assert!(total > 0, "busy time recorded");
+        }
     }
 }

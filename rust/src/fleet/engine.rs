@@ -29,7 +29,7 @@ use crate::graph::datasets::Dataset;
 use crate::metrics::RoundStats;
 use crate::ops::build::{self, Aggregation, GnnDims};
 use crate::ops::exec::Bindings;
-use crate::ops::plan::ExecPlan;
+use crate::ops::plan::{ExecPlan, KernelConfig};
 use crate::server::{InferenceEngine, Update};
 use crate::tensor::{Mat, Tensor};
 use crate::util::Rng;
@@ -97,6 +97,18 @@ impl PlanEngine {
         capacity: usize,
         agg: Aggregation,
     ) -> Result<(Arc<ExecPlan>, Bindings)> {
+        PlanEngine::compile_parts_cfg(ds, capacity, agg, KernelConfig::default())
+    }
+
+    /// [`PlanEngine::compile_parts_with`] with explicit kernel knobs
+    /// (SIMD dispatch, degree-binned scheduling) baked into the plan —
+    /// what a `[kernels]` spec section lowers to.
+    pub fn compile_parts_cfg(
+        ds: &Dataset,
+        capacity: usize,
+        agg: Aggregation,
+        kernels: KernelConfig,
+    ) -> Result<(Arc<ExecPlan>, Bindings)> {
         let capacity = capacity.max(ds.num_nodes());
         let classes = ds.num_classes().max(2);
         let features = ds.num_features();
@@ -105,7 +117,7 @@ impl PlanEngine {
         // NodePad: compile at capacity so AddNode never changes shapes
         let dims = GnnDims::model(capacity, ds.graph.num_edges(), features, classes);
         let graph = build::gcn_stagr_with(dims, "grad", agg.resolve(density));
-        let plan = Arc::new(ExecPlan::compile(&graph)?);
+        let plan = Arc::new(ExecPlan::compile_with(&graph, kernels)?);
         Ok((plan, synthesize_weights(features, classes, capacity)))
     }
 
@@ -121,6 +133,17 @@ impl PlanEngine {
         ds: &Dataset,
         capacity: usize,
         agg: Aggregation,
+    ) -> Result<(Arc<ExecPlan>, Bindings)> {
+        PlanEngine::compile_quant_parts_cfg(ds, capacity, agg, KernelConfig::default())
+    }
+
+    /// [`PlanEngine::compile_quant_parts`] with explicit kernel knobs
+    /// baked into the INT8 plan.
+    pub fn compile_quant_parts_cfg(
+        ds: &Dataset,
+        capacity: usize,
+        agg: Aggregation,
+        kernels: KernelConfig,
     ) -> Result<(Arc<ExecPlan>, Bindings)> {
         use crate::quant::{calibrate, quantize, scale_for};
 
@@ -155,7 +178,7 @@ impl PlanEngine {
 
         let dims = GnnDims::model(capacity, ds.graph.num_edges(), features, classes);
         let graph = build::gcn_quant_with(dims, scales, agg.resolve(density));
-        let plan = Arc::new(ExecPlan::compile(&graph)?);
+        let plan = Arc::new(ExecPlan::compile_with(&graph, kernels)?);
         Ok((plan, bindings))
     }
 

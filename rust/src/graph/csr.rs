@@ -68,6 +68,85 @@ impl Csr {
     pub fn bytes(&self) -> usize {
         (self.indptr.len() + self.indices.len()) * 4
     }
+
+    /// [`degree_order`] over this adjacency.
+    pub fn degree_order(&self) -> Vec<u32> {
+        degree_order(&self.indptr)
+    }
+
+    /// [`rcm_order`] over this adjacency.
+    pub fn rcm_order(&self) -> Vec<u32> {
+        rcm_order(&self.indptr, &self.indices)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Node orderings — the CacheG locality pass
+// ---------------------------------------------------------------------------
+//
+// Free functions over raw indptr/indices slices so both this adjacency
+// and `tensor::CsrMat` operands (which carry values) can be ordered
+// without conversion. Every function returns a permutation in
+// `perm[new] = old` convention: position `new` of the reordered node
+// space holds original node `old`.
+
+/// Stable degree-descending node order (`perm[new] = old`). Hub rows
+/// come first, so nnz-balanced lane dispatch drains them while light
+/// tail rows are still plentiful — ties keep their original relative
+/// order, making the permutation deterministic across runs.
+pub fn degree_order(indptr: &[u32]) -> Vec<u32> {
+    let n = indptr.len().saturating_sub(1);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(indptr[i as usize + 1] - indptr[i as usize]));
+    order
+}
+
+/// Reverse Cuthill–McKee order (`perm[new] = old`): BFS from a
+/// minimum-degree seed per connected component, neighbors enqueued in
+/// ascending-degree order, final sequence reversed. Clusters every
+/// node's neighborhood into nearby row indices (bandwidth reduction), so
+/// SpMM's gather of neighbor feature rows walks memory near-sequentially
+/// — the CacheG locality effect, as a compile-time pass.
+pub fn rcm_order(indptr: &[u32], indices: &[u32]) -> Vec<u32> {
+    let n = indptr.len().saturating_sub(1);
+    let deg = |i: usize| indptr[i + 1] - indptr[i];
+    let mut seeds: Vec<u32> = (0..n as u32).collect();
+    seeds.sort_by_key(|&i| deg(i as usize));
+    let mut visited = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut nbuf: Vec<u32> = Vec::new();
+    for &s in &seeds {
+        if visited[s as usize] {
+            continue;
+        }
+        visited[s as usize] = true;
+        let mut head = order.len();
+        order.push(s);
+        while head < order.len() {
+            let u = order[head] as usize;
+            head += 1;
+            nbuf.clear();
+            for &v in &indices[indptr[u] as usize..indptr[u + 1] as usize] {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    nbuf.push(v);
+                }
+            }
+            nbuf.sort_by_key(|&v| deg(v as usize));
+            order.extend_from_slice(&nbuf);
+        }
+    }
+    order.reverse();
+    order
+}
+
+/// Inverse of a permutation: `perm[new] = old` ⇒ `inv[old] = new`.
+pub fn inverse_permutation(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old as usize] = new as u32;
+    }
+    inv
 }
 
 #[cfg(test)]
@@ -103,6 +182,82 @@ mod tests {
         let csr = Csr::from_graph(&Graph::new(3, &[]));
         assert_eq!(csr.nnz(), 0);
         assert_eq!(csr.neighbors(1), &[] as &[u32]);
+    }
+
+    fn assert_valid_permutation(perm: &[u32], n: usize) {
+        assert_eq!(perm.len(), n);
+        let mut seen = vec![false; n];
+        for &p in perm {
+            assert!(!seen[p as usize], "node {p} appears twice");
+            seen[p as usize] = true;
+        }
+    }
+
+    #[test]
+    fn degree_order_is_descending_and_stable() {
+        let g = Graph::new(6, &[(0, 1), (0, 2), (0, 3), (4, 5), (1, 2)]);
+        let csr = Csr::from_graph(&g);
+        let order = csr.degree_order();
+        assert_valid_permutation(&order, 6);
+        for w in order.windows(2) {
+            assert!(
+                csr.degree(w[0] as usize) >= csr.degree(w[1] as usize),
+                "degree order not descending"
+            );
+        }
+        // ties keep original node order: nodes 1 and 2 both have degree 2
+        let p1 = order.iter().position(|&v| v == 1).unwrap();
+        let p2 = order.iter().position(|&v| v == 2).unwrap();
+        assert!(p1 < p2, "stable tie-break violated");
+    }
+
+    /// Max |inv[u] - inv[v]| over edges — what RCM minimizes.
+    fn bandwidth(csr: &Csr, perm: &[u32]) -> usize {
+        let inv = inverse_permutation(perm);
+        let mut bw = 0usize;
+        for u in 0..csr.num_nodes() {
+            for &v in csr.neighbors(u) {
+                bw = bw.max((inv[u] as i64 - inv[v as usize] as i64).unsigned_abs() as usize);
+            }
+        }
+        bw
+    }
+
+    #[test]
+    fn rcm_reduces_bandwidth_on_shuffled_path() {
+        // a path graph relabeled by a stride permutation: identity order
+        // has bandwidth ~n/2, RCM must recover the chain layout
+        let n = 41usize;
+        let relabel: Vec<u32> = (0..n as u32).map(|i| (i * 17) % n as u32).collect();
+        let edges: Vec<(u32, u32)> =
+            (0..n - 1).map(|i| (relabel[i], relabel[i + 1])).collect();
+        let csr = Csr::from_graph(&Graph::new(n, &edges));
+        let identity: Vec<u32> = (0..n as u32).collect();
+        let rcm = csr.rcm_order();
+        assert_valid_permutation(&rcm, n);
+        let before = bandwidth(&csr, &identity);
+        let after = bandwidth(&csr, &rcm);
+        assert!(after < before, "rcm bandwidth {after} !< identity {before}");
+        assert_eq!(after, 1, "a path graph relabels to bandwidth 1");
+    }
+
+    #[test]
+    fn rcm_covers_disconnected_components_and_isolates() {
+        let g = Graph::new(9, &[(0, 1), (1, 2), (4, 5), (5, 6)]);
+        // nodes 3, 7, 8 are isolated
+        let csr = Csr::from_graph(&g);
+        let rcm = csr.rcm_order();
+        assert_valid_permutation(&rcm, 9);
+    }
+
+    #[test]
+    fn inverse_permutation_roundtrips() {
+        let perm = vec![3u32, 0, 4, 1, 2];
+        let inv = inverse_permutation(&perm);
+        for (new, &old) in perm.iter().enumerate() {
+            assert_eq!(inv[old as usize] as usize, new);
+        }
+        assert_eq!(inverse_permutation(&inv), perm);
     }
 
     #[test]

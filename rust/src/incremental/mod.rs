@@ -79,6 +79,10 @@ pub struct IncrementalConfig {
     /// capacity² dense mask), `Dense` reads the incrementally-maintained
     /// dense matrix, `Auto` resolves per round from the live density.
     pub aggregation: Aggregation,
+    /// Kernel dispatch knobs compiled into every tile plan (SIMD
+    /// microkernels, degree-binned scheduling) — frontier tiles route
+    /// through the same vectorized paths as the full planned engines.
+    pub kernels: crate::ops::plan::KernelConfig,
 }
 
 impl Default for IncrementalConfig {
@@ -89,6 +93,7 @@ impl Default for IncrementalConfig {
             cost_margin: 0.75,
             tile_min: 32,
             aggregation: Aggregation::Auto,
+            kernels: crate::ops::plan::KernelConfig::default(),
         }
     }
 }
@@ -226,14 +231,16 @@ impl IncrementalEngine {
             statics.insert("w".into(), w);
             statics.insert("b".into(), b);
             let (in_w, out_w, relu) = (spec.in_w, spec.out_w, spec.relu);
-            tiles.push(TileRunner::new(
+            let mut runner = TileRunner::new(
                 Arc::clone(&pool),
                 cfg.tile_min,
                 capacity,
                 capacity,
                 statics,
                 move |rows, ring| build::gcn_layer_tile(rows, ring, in_w, out_w, relu),
-            ));
+            );
+            runner.set_kernels(cfg.kernels);
+            tiles.push(runner);
         }
         Ok(IncrementalEngine {
             frontier: RefCell::new(Frontier::new(capacity)),
@@ -1026,6 +1033,35 @@ mod tests {
         // oracle agreement after churn
         let want = oracle(&sparse);
         assert!(want.max_abs_diff(&a) < 1e-4, "drift {}", want.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn scalar_kernel_tiles_match_default_bitwise() {
+        // tiles route through the same microkernel dispatch as the
+        // planned engines: the scalar-oracle configuration must agree
+        // exactly with the SIMD default, cold rounds and frontier rounds
+        use crate::ops::plan::{KernelConfig, SimdMode};
+        let ds = ds();
+        let mk = |simd: SimdMode| {
+            IncrementalEngine::full(
+                &ds,
+                48,
+                serial(),
+                IncrementalConfig {
+                    kernels: KernelConfig { simd, ..KernelConfig::default() },
+                    ..never_fall_back()
+                },
+            )
+            .unwrap()
+        };
+        let mut simd = mk(SimdMode::Auto);
+        let mut scalar = mk(SimdMode::Off);
+        assert_eq!(simd.infer().unwrap(), scalar.infer().unwrap());
+        for eng in [&mut simd, &mut scalar] {
+            eng.apply(&Update::RemoveEdge(0, 21)).unwrap();
+            eng.apply(&Update::AddEdge(0, 21)).unwrap();
+        }
+        assert_eq!(simd.infer().unwrap(), scalar.infer().unwrap());
     }
 
     #[test]

@@ -22,12 +22,12 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | PRNG, property-testing harness, tables, timing |
+//! | [`util`] | PRNG, property-testing harness, cache-line-aligned slabs ([`util::aligned`]), tables, timing |
 //! | [`config`] | TOML-subset parser + typed hardware/run configs |
 //! | [`tensor`] | dense [`tensor::Mat`], sparse [`tensor::CsrMat`] (the SpMM operand), dtype-tagged [`tensor::Tensor`] |
 //! | [`graph`] | graph substrate: CSR, PreG/SymG/NodePad/GrAd/GraSp, datasets |
-//! | [`ops`] | OpenVINO-like op IR, GNN graph builders (sparse or dense aggregation via [`ops::build::Aggregation`]), EffOp/GrAx rewrites, reference executor, [`ops::plan`] compile-once plans |
-//! | [`engine`] | planned executor: buffer arena, fused chains, INT8 + row-sharded SpMM kernels, worker pool, gather/scatter tile runner |
+//! | [`ops`] | OpenVINO-like op IR, GNN graph builders (sparse or dense aggregation via [`ops::build::Aggregation`]), EffOp/GrAx rewrites, reference executor, [`ops::plan`] compile-once plans with kernel dispatch knobs ([`ops::plan::KernelConfig`]) and CacheG node reordering ([`ops::plan::Reordering`]) |
+//! | [`engine`] | planned executor: aligned buffer arena, fused chains, SIMD microkernels (bit-comparable with the scalar oracle), nnz-balanced degree-binned SpMM dispatch, worker pool, gather/scatter tile runner |
 //! | [`incremental`] | delta-driven inference: dirty-frontier recompute over a layer-activation cache |
 //! | [`npu`] | NPU simulator: DPU/DSP/SRAM/DMA/energy; CPU & GPU device models |
 //! | [`quant`] | QuantGr: symmetric static INT8 |

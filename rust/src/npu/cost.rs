@@ -25,14 +25,27 @@ impl OpCost {
     }
 }
 
+/// Vector width of one DPU lane group (f32 elements per vector op) —
+/// mirrors the 8-wide register tiles the engine's SIMD microkernels
+/// commit per store ([`crate::tensor::matmul_block_simd`]).
+pub const DPU_VECTOR_LANES: usize = 8;
+
 /// DPU systolic-array utilization for an (m,k)@(k,n) MatMul: fraction of
 /// the MAC grid kept busy. Skinny operands (attention projections, (n,1)
 /// vectors) can't fill the array — the paper's "limited parallelism
 /// inherent in the GCN" (Fig. 21 discussion) comes from exactly this.
+/// The final factor models vector-lane fill: output columns are issued
+/// in [`DPU_VECTOR_LANES`]-wide groups, so an `n` that is not a lane
+/// multiple pays for the padded remainder lanes.
 pub fn matmul_utilization(m: usize, k: usize, n: usize) -> f64 {
     let fill = |d: usize, t: f64| (d as f64 / t).min(1.0);
+    let lane_fill = if n == 0 {
+        1.0
+    } else {
+        n as f64 / crate::util::round_up(n, DPU_VECTOR_LANES) as f64
+    };
     // 128-wide output stationarity per tile, 64-deep accumulation pipeline
-    fill(m, 128.0) * fill(n, 64.0).max(fill(k, 64.0) * fill(n, 8.0)).min(1.0)
+    fill(m, 128.0) * fill(n, 64.0).max(fill(k, 64.0) * fill(n, 8.0)).min(1.0) * lane_fill
 }
 
 /// Dense-MAC time on the DPU (or CPU/GPU compute core).
@@ -526,6 +539,22 @@ mod tests {
         let noop = op_cost_scaled(&g, 2, &hw(), Engine::Dpu,
                                   CostOpts::default(), &CostScales::default());
         assert_eq!(noop.us, base.us);
+    }
+
+    #[test]
+    fn utilization_reflects_vector_lane_fill() {
+        // lane-multiple widths fill the vector units completely...
+        let aligned = matmul_utilization(2048, 1024, 64);
+        // ...an off-by-one width pays for the padded remainder lanes
+        let ragged = matmul_utilization(2048, 1024, 65);
+        let expected = 65.0 / 72.0; // 65 columns issued as 9 groups of 8
+        let ratio = ragged / aligned;
+        assert!(
+            (ratio - expected).abs() < 1e-9,
+            "lane fill ratio {ratio} != {expected}"
+        );
+        // degenerate width keeps utilization finite and positive
+        assert!(matmul_utilization(16, 16, 0) >= 0.0);
     }
 
     #[test]

@@ -38,10 +38,209 @@ use anyhow::{bail, Result};
 
 use super::{OpGraph, OpId, OpKind};
 use crate::npu::sim::is_fusible;
-use crate::tensor::DType;
+use crate::tensor::{CsrMat, DType, DensityHint, Mat};
 
 /// Sentinel for "no arena slot" (inputs, fused interiors, i8 outputs).
 pub const NO_SLOT: usize = usize::MAX;
+
+/// SIMD dispatch mode for the engine's microkernels. `Auto` and `On`
+/// both select the register-blocked kernels today (they are
+/// bit-comparable with the scalar path, so there is no correctness
+/// reason to hold back); `Off` forces the scalar fallback — the oracle
+/// configuration, and an escape hatch for targets where the blocked
+/// kernels mis-tune.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Engine decides (currently: SIMD on).
+    #[default]
+    Auto,
+    /// Force the register-blocked kernels.
+    On,
+    /// Force the scalar fallback kernels.
+    Off,
+}
+
+impl SimdMode {
+    /// Whether the register-blocked kernels are dispatched.
+    #[inline]
+    pub fn enabled(self) -> bool {
+        !matches!(self, SimdMode::Off)
+    }
+
+    /// Parse a spec-file value (`auto|on|off`).
+    pub fn parse(s: &str) -> Result<SimdMode> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "on" => Ok(SimdMode::On),
+            "off" => Ok(SimdMode::Off),
+            other => bail!(
+                "kernels.simd must be \"auto\", \"on\" or \"off\", got {other:?} \
+                 — \"off\" is the scalar oracle path, \"auto\"/\"on\" dispatch \
+                 the register-blocked kernels"
+            ),
+        }
+    }
+
+    /// Canonical spec-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::On => "on",
+            SimdMode::Off => "off",
+        }
+    }
+}
+
+/// CacheG-style node-reordering mode, applied once at plan-compile time
+/// through [`Reordering`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReorderMode {
+    /// Keep original node ids (identity).
+    #[default]
+    None,
+    /// Stable degree-descending order — hubs first, pairs with
+    /// nnz-balanced lane dispatch.
+    Degree,
+    /// Reverse Cuthill–McKee — bandwidth reduction, near-sequential
+    /// neighbor gathers.
+    Rcm,
+}
+
+impl ReorderMode {
+    /// Parse a spec-file value (`none|degree|rcm`).
+    pub fn parse(s: &str) -> Result<ReorderMode> {
+        match s {
+            "none" => Ok(ReorderMode::None),
+            "degree" => Ok(ReorderMode::Degree),
+            "rcm" => Ok(ReorderMode::Rcm),
+            other => bail!(
+                "kernels.reorder must be \"none\", \"degree\" or \"rcm\", got \
+                 {other:?} — \"degree\" sorts hubs first for lane balance, \
+                 \"rcm\" minimizes bandwidth for cache locality"
+            ),
+        }
+    }
+
+    /// Canonical spec-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReorderMode::None => "none",
+            ReorderMode::Degree => "degree",
+            ReorderMode::Rcm => "rcm",
+        }
+    }
+}
+
+/// Kernel-layer knobs a plan is compiled with — carried on [`ExecPlan`]
+/// so every runner of that plan (engine instances, incremental tiles)
+/// dispatches identically. The serving layer lowers a validated
+/// `[kernels]` spec section into one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// SIMD microkernel dispatch.
+    pub simd: SimdMode,
+    /// Node-reordering pass (consumed by callers that own the bindings;
+    /// see [`Reordering`]).
+    pub reorder: ReorderMode,
+    /// Chunks-per-lane granularity of the nnz-balanced SpMM dispenser.
+    pub degree_bins: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            simd: SimdMode::Auto,
+            reorder: ReorderMode::None,
+            degree_bins: crate::engine::kernels::DEGREE_BINS_DEFAULT,
+        }
+    }
+}
+
+/// A CacheG-style stable node relabeling, computed **once** from the
+/// aggregation mask's structure and applied as a pure permutation:
+/// callers permute the CSR operand and every node-indexed binding before
+/// running, and apply the inverse to served outputs — numerics are
+/// untouched (each output row is the same dot products, just computed at
+/// a different row index), so reordered runs match unordered ones
+/// bitwise after [`Reordering::restore_rows`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Reordering {
+    /// `perm[new] = old`: position `new` holds original node `old`.
+    pub perm: Vec<u32>,
+    /// `inv[old] = new`.
+    pub inv: Vec<u32>,
+}
+
+impl Reordering {
+    /// Compute the ordering `mode` prescribes over a CSR adjacency.
+    /// Returns `None` for [`ReorderMode::None`] so callers skip the
+    /// permutation work entirely.
+    pub fn compute(mode: ReorderMode, indptr: &[u32], indices: &[u32]) -> Option<Reordering> {
+        let perm = match mode {
+            ReorderMode::None => return None,
+            ReorderMode::Degree => crate::graph::csr::degree_order(indptr),
+            ReorderMode::Rcm => crate::graph::csr::rcm_order(indptr, indices),
+        };
+        let inv = crate::graph::csr::inverse_permutation(&perm);
+        Some(Reordering { perm, inv })
+    }
+
+    /// Number of nodes the permutation covers.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True for the zero-node permutation.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Symmetric relabel of a square CSR operand: row `new` is original
+    /// row `perm[new]` with column ids mapped through `inv` and re-sorted
+    /// (sorted rows are what keeps SpMM bit-comparable to the dense
+    /// zero-skip kernel).
+    pub fn permute_csr(&self, m: &CsrMat) -> CsrMat {
+        assert_eq!(m.rows, m.cols, "node reordering needs a square operand");
+        assert_eq!(m.rows, self.len(), "permutation covers every node");
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = Vec::with_capacity(m.indices.len());
+        let mut values = Vec::with_capacity(m.values.len());
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        indptr.push(0u32);
+        for &old in &self.perm {
+            let (cols, vals) = m.row_entries(old as usize);
+            row.clear();
+            row.extend(
+                cols.iter()
+                    .zip(vals)
+                    .map(|(&c, &v)| (self.inv[c as usize], v)),
+            );
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in &row {
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrMat { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    /// Row permutation of a node-indexed matrix: `out.row(new) =
+    /// m.row(perm[new])`. Applied to feature bindings before a reordered
+    /// run.
+    pub fn permute_rows(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.len(), "permutation covers every row");
+        Mat::from_fn(m.rows, m.cols, |i, j| m[(self.perm[i] as usize, j)])
+    }
+
+    /// Inverse row permutation: `out.row(old) = m.row(inv[old])`.
+    /// Applied to a reordered run's output so callers see original node
+    /// order; `restore_rows(permute_rows(x)) == x` exactly.
+    pub fn restore_rows(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows, self.len(), "permutation covers every row");
+        Mat::from_fn(m.rows, m.cols, |i, j| m[(self.inv[i] as usize, j)])
+    }
+}
 
 /// Position transform from a chain's output coordinates to an upstream
 /// operand's coordinates: broadcasts later in the chain pin the earlier
@@ -135,6 +334,12 @@ pub struct ExecPlan {
     pub sparse_input: Vec<bool>,
     /// Ops folded away as fused-chain interiors.
     pub fused_away: usize,
+    /// Kernel-layer knobs this plan was compiled with.
+    pub kernels: KernelConfig,
+    /// Op id → lhs density class for `MatMul` steps: computed activations
+    /// are dense by construction ([`DensityHint::NoSkip`], no per-call
+    /// probe); graph-input operands stay [`DensityHint::Sample`].
+    pub density_hint: Vec<DensityHint>,
 }
 
 /// Normalized (rows, cols) of an op's output; rank-1 shapes are row
@@ -149,10 +354,17 @@ pub fn rc(shape: &[usize]) -> Result<(usize, usize)> {
 }
 
 impl ExecPlan {
-    /// Compile `g` into a plan. Fails on graphs the engine cannot run
-    /// steady-state (unvalidated shapes, rank > 2, integer inputs that
-    /// are not graph inputs, outputs that are raw inputs).
+    /// Compile `g` into a plan with default kernel knobs. Fails on graphs
+    /// the engine cannot run steady-state (unvalidated shapes, rank > 2,
+    /// integer inputs that are not graph inputs, outputs that are raw
+    /// inputs).
     pub fn compile(g: &OpGraph) -> Result<ExecPlan> {
+        ExecPlan::compile_with(g, KernelConfig::default())
+    }
+
+    /// [`ExecPlan::compile`] with explicit kernel-layer knobs — the entry
+    /// point the serving layer's `[kernels]` spec section lowers into.
+    pub fn compile_with(g: &OpGraph, kernels: KernelConfig) -> Result<ExecPlan> {
         g.validate()?;
         let n = g.ops.len();
         for op in &g.ops {
@@ -377,6 +589,15 @@ impl ExecPlan {
             }
         }
 
+        // --- density hints: computed MatMul lhs operands are arena
+        // activations, dense by construction — skip the per-run probe ---
+        let mut density_hint = vec![DensityHint::Sample; n];
+        for (id, op) in g.ops.iter().enumerate() {
+            if op.kind == OpKind::MatMul && g.ops[op.inputs[0]].kind != OpKind::Input {
+                density_hint[id] = DensityHint::NoSkip;
+            }
+        }
+
         Ok(ExecPlan {
             graph: g.clone(),
             steps,
@@ -386,6 +607,8 @@ impl ExecPlan {
             i8_slab_elems,
             sparse_input,
             fused_away,
+            kernels,
+            density_hint,
         })
     }
 
@@ -708,5 +931,79 @@ mod tests {
         let x = g.input("x", &[2, 2], DType::F32, Stage::Compute);
         g.set_output(x);
         assert!(ExecPlan::compile(&g).is_err());
+    }
+
+    #[test]
+    fn density_hints_mark_computed_matmul_lhs() {
+        // x@w1 has a graph-input lhs (probe per call); (relu(x@w1))@w2
+        // has a computed lhs — the plan must pin it dense
+        use crate::ops::Stage;
+        let mut g = OpGraph::new("hints");
+        let x = g.input("x", &[6, 4], DType::F32, Stage::Compute);
+        let w1 = g.input("w1", &[4, 3], DType::F32, Stage::Compute);
+        let w2 = g.input("w2", &[3, 2], DType::F32, Stage::Compute);
+        let h = g.op(OpKind::MatMul, &[x, w1], &[6, 3], Stage::Compute);
+        let r = g.op(OpKind::Relu, &[h], &[6, 3], Stage::Compute);
+        let o = g.op(OpKind::MatMul, &[r, w2], &[6, 2], Stage::Compute);
+        g.set_output(o);
+        let p = ExecPlan::compile(&g).unwrap();
+        assert_eq!(p.density_hint[h], crate::tensor::DensityHint::Sample);
+        assert_eq!(p.density_hint[o], crate::tensor::DensityHint::NoSkip);
+        assert_eq!(p.kernels, KernelConfig::default());
+        assert!(p.kernels.simd.enabled());
+    }
+
+    #[test]
+    fn kernel_modes_parse_and_reject() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("on").unwrap(), SimdMode::On);
+        assert_eq!(SimdMode::parse("off").unwrap(), SimdMode::Off);
+        assert!(!SimdMode::Off.enabled());
+        for m in [SimdMode::Auto, SimdMode::On, SimdMode::Off] {
+            assert_eq!(SimdMode::parse(m.name()).unwrap(), m);
+        }
+        let err = SimdMode::parse("avx").unwrap_err().to_string();
+        assert!(err.contains("kernels.simd"), "{err}");
+        for m in [ReorderMode::None, ReorderMode::Degree, ReorderMode::Rcm] {
+            assert_eq!(ReorderMode::parse(m.name()).unwrap(), m);
+        }
+        let err = ReorderMode::parse("hilbert").unwrap_err().to_string();
+        assert!(err.contains("kernels.reorder"), "{err}");
+    }
+
+    #[test]
+    fn reordering_permutes_and_restores_exactly() {
+        use crate::tensor::Mat;
+        let g = crate::graph::Graph::new(
+            13,
+            &(0..20u32).map(|i| (i % 13, (i * 5 + 1) % 13)).collect::<Vec<_>>(),
+        );
+        let norm = g.norm_csr(13);
+        assert!(
+            Reordering::compute(ReorderMode::None, &norm.indptr, &norm.indices).is_none()
+        );
+        for mode in [ReorderMode::Degree, ReorderMode::Rcm] {
+            let r = Reordering::compute(mode, &norm.indptr, &norm.indices).unwrap();
+            assert_eq!(r.len(), 13);
+            // perm ∘ inv = id
+            for old in 0..13u32 {
+                assert_eq!(r.perm[r.inv[old as usize] as usize], old);
+            }
+            // row permutation round-trips bitwise
+            let x = Mat::from_fn(13, 4, |i, j| (i * 31 + j * 7) as f32 * 0.5);
+            assert_eq!(r.restore_rows(&r.permute_rows(&x)), x, "{mode:?}");
+            // the permuted CSR is the dense-permuted matrix, rows sorted
+            let permuted = r.permute_csr(&norm);
+            let dense = norm.to_dense();
+            let want =
+                Mat::from_fn(13, 13, |i, j| {
+                    dense[(r.perm[i] as usize, r.perm[j] as usize)]
+                });
+            assert_eq!(permuted.to_dense(), want, "{mode:?}");
+            for i in 0..13 {
+                let (cols, _) = permuted.row_entries(i);
+                assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} unsorted");
+            }
+        }
     }
 }

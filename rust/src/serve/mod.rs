@@ -37,8 +37,8 @@ pub use registry::{
     BoxedEngine, EngineFactory, EngineInit, EngineRegistry, LaunchContext, ShardFactory,
 };
 pub use spec::{
-    BatchSpec, DeploymentSpec, EngineSpec, MonitorSpec, SloSpec, TelemetrySpec,
-    Topology, TuningSpec,
+    BatchSpec, DeploymentSpec, EngineSpec, KernelSpec, MonitorSpec, SloSpec,
+    TelemetrySpec, Topology, TuningSpec,
 };
 pub use tune::{Objective, TunedDeployment, TuningReport, TuningRow};
 

@@ -187,6 +187,30 @@ fn check_offline_model(engine: &str, spec: &DeploymentSpec) -> Result<()> {
     Ok(())
 }
 
+/// Lower the `[kernels]` section for a sharded serving engine. The
+/// SIMD/degree-bin knobs compile straight into the shared plan; a node
+/// reordering would have to permute every shard's live GrAd bindings and
+/// un-permute served outputs, which the sharded engines do not do —
+/// reject it here with a pointer at the paths that *do* reorder.
+fn serving_kernel_config(
+    engine: &str,
+    spec: &DeploymentSpec,
+) -> Result<crate::ops::plan::KernelConfig> {
+    let cfg = spec.kernels.kernel_config()?;
+    if cfg.reorder != crate::ops::plan::ReorderMode::None {
+        bail!(
+            "engine {engine:?} does not support kernels.reorder = {:?} — \
+             serving shards bind live GrAd-mutable graphs, which a \
+             compile-time permutation cannot follow; set reorder = \
+             \"none\" (the degree/rcm locality passes apply to static \
+             plan runs via ops::plan::Reordering, exercised by the \
+             spmm_scaling bench)",
+            spec.kernels.reorder
+        );
+    }
+    Ok(cfg)
+}
+
 fn shard_pool(parallel: bool) -> Arc<WorkerPool> {
     Arc::new(if parallel { WorkerPool::default_parallel() } else { WorkerPool::serial() })
 }
@@ -289,6 +313,7 @@ impl EngineFactory for PlanFactory {
     fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
         check_offline_model("plan", spec)?;
         check_known_options("plan", spec, &[])?;
+        serving_kernel_config("plan", spec)?;
         check_dense_budget("plan", spec.aggregation, spec.capacity)
     }
 
@@ -299,6 +324,7 @@ impl EngineFactory for PlanFactory {
             ctx.spec.aggregation,
             ctx.spec.quant,
             ctx.parallel_pool(),
+            serving_kernel_config("plan", ctx.spec)?,
         )
     }
 }
@@ -311,14 +337,15 @@ pub(crate) fn plan_shards(
     agg: Aggregation,
     quant: bool,
     parallel: bool,
+    kernels: crate::ops::plan::KernelConfig,
 ) -> Result<ShardFactory> {
     // an Auto that resolves dense on this graph pays the same mask
     // budget an explicit dense would
     check_dense_budget("plan", resolve_aggregation(agg, ds, capacity), capacity)?;
     let (plan, weights) = if quant {
-        PlanEngine::compile_quant_parts(ds, capacity, agg)?
+        PlanEngine::compile_quant_parts_cfg(ds, capacity, agg, kernels)?
     } else {
-        PlanEngine::compile_parts_with(ds, capacity, agg)?
+        PlanEngine::compile_parts_cfg(ds, capacity, agg, kernels)?
     };
     let ds = ds.clone();
     Ok(Box::new(move |spec: &ShardSpec| {
@@ -379,10 +406,12 @@ impl EngineFactory for IncrementalFactory {
 /// them to its inner incremental engine.
 const INCREMENTAL_OPTIONS: &[&str] = &["cost_margin", "tile_min"];
 
-/// `[engine]` options → [`IncrementalConfig`] (defaults preserved);
-/// shared by the `incremental` and `auto` factories.
+/// `[engine]` options + `[kernels]` section → [`IncrementalConfig`]
+/// (defaults preserved); shared by the `incremental` and `auto`
+/// factories.
 fn incremental_config(engine: &str, spec: &DeploymentSpec) -> Result<IncrementalConfig> {
     let mut cfg = IncrementalConfig { aggregation: spec.aggregation, ..Default::default() };
+    cfg.kernels = serving_kernel_config(engine, spec)?;
     if let Some(m) = spec.engine.f64_opt("cost_margin")? {
         cfg.cost_margin = m;
     }
@@ -458,9 +487,15 @@ impl EngineFactory for AutoFactory {
             ctx.capacity,
         )?;
         // compile the plan strategy once; every shard's inner PlanEngine
-        // shares it, exactly like the plain "plan" engine
-        let (plan, weights) =
-            PlanEngine::compile_parts_with(ctx.dataset, ctx.capacity, ctx.spec.aggregation)?;
+        // shares it, exactly like the plain "plan" engine — with the same
+        // kernel knobs as the incremental strategy, so a runtime switch
+        // never changes the dispatched microkernels
+        let (plan, weights) = PlanEngine::compile_parts_cfg(
+            ctx.dataset,
+            ctx.capacity,
+            ctx.spec.aggregation,
+            inc_cfg.kernels,
+        )?;
         let auto_cfg = AutoConfig::from_tuning(&ctx.spec.tuning);
         let ds = ctx.dataset.clone();
         let capacity = ctx.capacity;

@@ -363,13 +363,66 @@ impl Default for TuningSpec {
     }
 }
 
+/// Kernel-layer knobs (`[kernels]` in TOML): which microkernel paths the
+/// engines dispatch and how sparse rows are scheduled across lanes.
+/// Strings are kept verbatim here and only lowered (and therefore
+/// validated) by [`KernelSpec::kernel_config`], so an invalid value is
+/// reported with the parser's actionable message, not a silent default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelSpec {
+    /// SIMD microkernel dispatch: `"auto"`, `"on"` or `"off"` (`"off"`
+    /// is the scalar oracle path; the blocked kernels are bit-comparable
+    /// with it, so `"auto"` dispatches them).
+    pub simd: String,
+    /// CacheG-style node reordering computed at plan-compile time:
+    /// `"none"`, `"degree"` (hubs first, lane balance) or `"rcm"`
+    /// (bandwidth reduction, gather locality). The sharded serving
+    /// engines currently support `"none"` only — their factories reject
+    /// the rest at validation.
+    pub reorder: String,
+    /// Chunks-per-lane granularity of the nnz-balanced SpMM dispenser
+    /// (≥ 1; higher = finer work-stealing at more dispatch overhead).
+    pub degree_bins: usize,
+}
+
+impl KernelSpec {
+    /// Lower (and validate) to the plan compiler's [`KernelConfig`] —
+    /// the one place spec strings become typed kernel modes.
+    pub fn kernel_config(&self) -> Result<crate::ops::plan::KernelConfig> {
+        if self.degree_bins == 0 {
+            bail!(
+                "kernels.degree_bins must be ≥ 1 (got 0) — it is the \
+                 chunks-per-lane granularity of the nnz-balanced scheduler, \
+                 and the default ({}) is a good start",
+                crate::engine::kernels::DEGREE_BINS_DEFAULT
+            );
+        }
+        Ok(crate::ops::plan::KernelConfig {
+            simd: crate::ops::plan::SimdMode::parse(&self.simd)?,
+            reorder: crate::ops::plan::ReorderMode::parse(&self.reorder)?,
+            degree_bins: self.degree_bins,
+        })
+    }
+}
+
+impl Default for KernelSpec {
+    fn default() -> Self {
+        let d = crate::ops::plan::KernelConfig::default();
+        KernelSpec {
+            simd: d.simd.name().to_string(),
+            reorder: d.reorder.name().to_string(),
+            degree_bins: d.degree_bins,
+        }
+    }
+}
+
 /// One typed deployment: everything
 /// [`crate::serve::Deployment::launch`] needs to serve a graph, and
 /// nothing it has to re-parse per subsystem.
 ///
 /// The TOML shape mirrors the struct — top-level scalars plus
-/// `[engine]`, `[topology]`, `[batch]`, `[admission]`, `[telemetry]`,
-/// `[slo]`, `[monitor]`, `[tuning]` tables — and
+/// `[engine]`, `[kernels]`, `[topology]`, `[batch]`, `[admission]`,
+/// `[telemetry]`, `[slo]`, `[monitor]`, `[tuning]` tables — and
 /// `parse_toml(to_toml(spec)) == spec` holds for every spec that
 /// passes [`DeploymentSpec::validate`] (the subset has no string
 /// escapes, so validation rejects embedded quotes; tested in
@@ -391,6 +444,8 @@ pub struct DeploymentSpec {
     pub quant: bool,
     /// Which engine factory builds the per-shard workers.
     pub engine: EngineSpec,
+    /// Kernel dispatch + scheduling knobs compiled into every plan.
+    pub kernels: KernelSpec,
     /// Shard count + device roster.
     pub topology: Topology,
     /// Query-coalescing window.
@@ -417,6 +472,7 @@ impl Default for DeploymentSpec {
             aggregation: Aggregation::Auto,
             quant: false,
             engine: EngineSpec::default(),
+            kernels: KernelSpec::default(),
             topology: Topology::default(),
             batch: BatchSpec::default(),
             admission: AdmissionConfig::unbounded(),
@@ -448,6 +504,7 @@ impl DeploymentSpec {
         const SECTIONS: &[&str] = &[
             "",
             "engine",
+            "kernels",
             "topology",
             "batch",
             "admission",
@@ -460,7 +517,7 @@ impl DeploymentSpec {
             if !SECTIONS.contains(&section) {
                 bail!(
                     "unknown section [{section}] — a deployment spec has \
-                     [engine], [topology], [batch], [admission], \
+                     [engine], [kernels], [topology], [batch], [admission], \
                      [telemetry], [slo], [monitor], [tuning] and the \
                      top-level keys model, capacity, aggregation, quant"
                 );
@@ -492,6 +549,19 @@ impl DeploymentSpec {
                 }
             }
             spec.engine = engine;
+        }
+
+        if let Some(_table) = doc.section("kernels") {
+            check_keys(doc, "kernels", &["simd", "reorder", "degree_bins"])?;
+            if let Some(v) = doc.get("kernels", "simd") {
+                spec.kernels.simd = str_of(v, "kernels", "simd")?.to_string();
+            }
+            if let Some(v) = doc.get("kernels", "reorder") {
+                spec.kernels.reorder = str_of(v, "kernels", "reorder")?.to_string();
+            }
+            if let Some(v) = doc.get("kernels", "degree_bins") {
+                spec.kernels.degree_bins = usize_of(v, "kernels", "degree_bins")?;
+            }
         }
 
         if let Some(_table) = doc.section("topology") {
@@ -672,6 +742,10 @@ impl DeploymentSpec {
         for (key, value) in &self.engine.options {
             out.push_str(&format!("{key} = {}\n", emit_value(value)));
         }
+        out.push_str("\n[kernels]\n");
+        out.push_str(&format!("simd = \"{}\"\n", self.kernels.simd));
+        out.push_str(&format!("reorder = \"{}\"\n", self.kernels.reorder));
+        out.push_str(&format!("degree_bins = {}\n", self.kernels.degree_bins));
         out.push_str("\n[topology]\n");
         out.push_str(&format!("shards = {}\n", self.topology.shards));
         let devices: Vec<String> = self
@@ -759,6 +833,9 @@ impl DeploymentSpec {
         for d in &self.topology.devices {
             quote_free("topology.devices entry", d)?;
         }
+        // lowering validates the mode strings (actionable per-key
+        // messages from the kernel-mode parsers) and degree_bins ≥ 1
+        self.kernels.kernel_config()?;
         if self.topology.shards == 0 {
             bail!(
                 "topology.shards must be ≥ 1 (got 0) — the single-leader \

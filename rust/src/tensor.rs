@@ -257,6 +257,37 @@ pub fn sample_density(data: &[f32]) -> f64 {
     nonzero as f64 / count as f64
 }
 
+/// What the caller already knows about a matmul lhs' density — the
+/// planner records one of these per `MatMul` step so steady-state runs
+/// skip the per-call [`sample_density`] probe for operands whose density
+/// class is static (computed activations are dense by construction).
+///
+/// A wrong hint only costs throughput, never correctness: the zero-skip
+/// and branch-free kernels accumulate in the same per-element order and
+/// agree bitwise on identical inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DensityHint {
+    /// Density unknown (external inputs): probe per call.
+    #[default]
+    Sample,
+    /// Known-sparse operand: force the GraSp zero-skip kernel.
+    Skip,
+    /// Known-dense activation: force the branch-free kernel, no probe.
+    NoSkip,
+}
+
+impl DensityHint {
+    /// Resolve to the kernel's `skip` flag, probing only when unknown.
+    #[inline]
+    pub fn resolve(self, data: &[f32]) -> bool {
+        match self {
+            DensityHint::Sample => sample_density(data) < SKIP_DENSITY_THRESHOLD,
+            DensityHint::Skip => true,
+            DensityHint::NoSkip => false,
+        }
+    }
+}
+
 /// `out = a @ b` over raw row-major slices: `a` is `rows×k`, `b` is `k×n`,
 /// `out` is `rows×n`. Cache-blocked ikj loop; `skip` selects the
 /// GraSp-style zero-skip variant (identical accumulation order, so both
@@ -304,6 +335,121 @@ pub fn matmul_block(
                     }
                 }
             }
+        }
+        k0 = k1;
+    }
+}
+
+/// Register-tile height of [`matmul_block_simd`] (output rows held in
+/// accumulators at once).
+pub const MM_TILE_ROWS: usize = 4;
+/// Register-tile width of [`matmul_block_simd`] — two 8-wide vector
+/// lanes, matching the `f32x8` shape stable Rust auto-vectorizes.
+pub const MM_TILE_COLS: usize = 16;
+
+/// [`matmul_block`] with explicit SIMD-style register blocking: 4×16
+/// output tiles are loaded into stack accumulators (8 `f32x8` registers
+/// after vectorization), updated across a whole k-panel, then stored —
+/// cutting `out` load/store traffic 16× and reusing each `b` row across
+/// 4 lhs rows. Per output element the accumulation still runs in the
+/// same ascending-k order as [`matmul_block`], so the two kernels agree
+/// **bitwise**: SIMD is a throughput knob, never a numerics knob, and
+/// the scalar kernel stays a valid oracle fallback.
+pub fn matmul_block_simd(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+) {
+    assert_eq!(a.len(), rows * k, "matmul lhs size");
+    assert_eq!(b.len(), k * n, "matmul rhs size");
+    assert_eq!(out.len(), rows * n, "matmul out size");
+    out.fill(0.0);
+    const IR: usize = MM_TILE_ROWS;
+    const JW: usize = MM_TILE_COLS;
+    // Wider k-panel than the scalar kernel: the tile load/store is
+    // amortized over the panel, so longer panels win once out traffic
+    // is out of the inner loop.
+    const BK: usize = 128;
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + BK).min(k);
+        let mut i = 0usize;
+        while i + IR <= rows {
+            let mut j = 0usize;
+            while j + JW <= n {
+                let mut acc = [[0.0f32; JW]; IR];
+                for (r, acc_row) in acc.iter_mut().enumerate() {
+                    let o = (i + r) * n + j;
+                    acc_row.copy_from_slice(&out[o..o + JW]);
+                }
+                if skip {
+                    for kk in k0..k1 {
+                        let bp = &b[kk * n + j..kk * n + j + JW];
+                        for (r, acc_row) in acc.iter_mut().enumerate() {
+                            let av = a[(i + r) * k + kk];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            for (l, &bv) in bp.iter().enumerate() {
+                                acc_row[l] += av * bv;
+                            }
+                        }
+                    }
+                } else {
+                    for kk in k0..k1 {
+                        let bp = &b[kk * n + j..kk * n + j + JW];
+                        for (r, acc_row) in acc.iter_mut().enumerate() {
+                            let av = a[(i + r) * k + kk];
+                            for (l, &bv) in bp.iter().enumerate() {
+                                acc_row[l] += av * bv;
+                            }
+                        }
+                    }
+                }
+                for (r, acc_row) in acc.iter().enumerate() {
+                    let o = (i + r) * n + j;
+                    out[o..o + JW].copy_from_slice(acc_row);
+                }
+                j += JW;
+            }
+            // narrow column tail: scalar, same ascending-kk order
+            if j < n {
+                for r in 0..IR {
+                    let a_row = &a[(i + r) * k..(i + r) * k + k];
+                    let out_row = &mut out[(i + r) * n..(i + r) * n + n];
+                    for kk in k0..k1 {
+                        let av = a_row[kk];
+                        if skip && av == 0.0 {
+                            continue;
+                        }
+                        let b_row = &b[kk * n..kk * n + n];
+                        for jj in j..n {
+                            out_row[jj] += av * b_row[jj];
+                        }
+                    }
+                }
+            }
+            i += IR;
+        }
+        // short row tail: one row at a time, same ascending-kk order
+        while i < rows {
+            let a_row = &a[i * k..i * k + k];
+            let out_row = &mut out[i * n..i * n + n];
+            for kk in k0..k1 {
+                let av = a_row[kk];
+                if skip && av == 0.0 {
+                    continue;
+                }
+                let b_row = &b[kk * n..kk * n + n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+            i += 1;
         }
         k0 = k1;
     }
@@ -492,6 +638,77 @@ pub fn spmm_rows(
             for j in 0..n {
                 orow[j] += v * brow[j];
             }
+        }
+    }
+}
+
+/// [`spmm_rows`] with explicit SIMD-style blocking: neighbors are
+/// processed four at a time against an 8-wide accumulator block held on
+/// the stack, so each output cache line is loaded/stored once per four
+/// neighbors instead of once per neighbor — the output-traffic bound
+/// that dominates high-degree (hub) rows. Each output element is still
+/// updated by one add per neighbor in ascending column order, so results
+/// are **bitwise identical** to [`spmm_rows`].
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_rows_simd(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    r0: usize,
+    r1: usize,
+    rhs: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    const JW: usize = 8;
+    debug_assert!(r1 + 1 <= indptr.len());
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    for i in r0..r1 {
+        let (a, b) = (indptr[i] as usize, indptr[i + 1] as usize);
+        let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+        orow.fill(0.0);
+        let mut p = a;
+        while p + 4 <= b {
+            let (v0, v1, v2, v3) = (values[p], values[p + 1], values[p + 2], values[p + 3]);
+            let b0 = &rhs[indices[p] as usize * n..indices[p] as usize * n + n];
+            let b1 = &rhs[indices[p + 1] as usize * n..indices[p + 1] as usize * n + n];
+            let b2 = &rhs[indices[p + 2] as usize * n..indices[p + 2] as usize * n + n];
+            let b3 = &rhs[indices[p + 3] as usize * n..indices[p + 3] as usize * n + n];
+            let mut j = 0usize;
+            while j + JW <= n {
+                let mut t = [0.0f32; JW];
+                t.copy_from_slice(&orow[j..j + JW]);
+                for (l, tv) in t.iter_mut().enumerate() {
+                    *tv += v0 * b0[j + l];
+                }
+                for (l, tv) in t.iter_mut().enumerate() {
+                    *tv += v1 * b1[j + l];
+                }
+                for (l, tv) in t.iter_mut().enumerate() {
+                    *tv += v2 * b2[j + l];
+                }
+                for (l, tv) in t.iter_mut().enumerate() {
+                    *tv += v3 * b3[j + l];
+                }
+                orow[j..j + JW].copy_from_slice(&t);
+                j += JW;
+            }
+            while j < n {
+                orow[j] += v0 * b0[j];
+                orow[j] += v1 * b1[j];
+                orow[j] += v2 * b2[j];
+                orow[j] += v3 * b3[j];
+                j += 1;
+            }
+            p += 4;
+        }
+        while p < b {
+            let v = values[p];
+            let brow = &rhs[indices[p] as usize * n..indices[p] as usize * n + n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += v * bv;
+            }
+            p += 1;
         }
     }
 }
@@ -825,6 +1042,89 @@ mod tests {
             let bm = Mat::from_vec(k, n, b.clone());
             assert_eq!(am.matmul(&bm).data, dense_out);
         }
+    }
+
+    #[test]
+    fn simd_matmul_matches_scalar_bitwise() {
+        // register-blocked kernel preserves per-element accumulation
+        // order, so it must agree exactly — across ragged shapes (row and
+        // column tails, multi-panel k) and both skip modes
+        let mut rng_state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut rng = move || {
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            (rng_state % 1000) as f32 / 500.0 - 1.0
+        };
+        for (m, k, n) in [(1, 3, 1), (4, 16, 16), (7, 130, 19), (13, 257, 33)] {
+            for density in [0.1f32, 1.0] {
+                let a: Vec<f32> = (0..m * k)
+                    .map(|_| {
+                        let v = rng();
+                        if v.abs() > density {
+                            0.0
+                        } else {
+                            v
+                        }
+                    })
+                    .collect();
+                let b: Vec<f32> = (0..k * n).map(|_| rng()).collect();
+                for skip in [false, true] {
+                    let mut scalar = vec![0.0f32; m * n];
+                    let mut simd = vec![0.0f32; m * n];
+                    matmul_block(&a, m, k, &b, n, &mut scalar, skip);
+                    matmul_block_simd(&a, m, k, &b, n, &mut simd, skip);
+                    assert_eq!(scalar, simd, "{m}x{k}x{n} skip={skip}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_spmm_matches_scalar_bitwise() {
+        // neighbor-blocked kernel keeps ascending-p per-element order;
+        // exercise hub rows (≫4 neighbors), short rows, and empty rows
+        let mut rng_state = 0x2545_f491_4f6c_dd1du64;
+        let mut rng = move || {
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            (rng_state % 1000) as f32 / 500.0 - 1.0
+        };
+        for n in [1usize, 7, 8, 24, 37] {
+            let rows = 19usize;
+            let cols = 23usize;
+            let a = Mat::from_fn(rows, cols, |i, _| {
+                if i % 5 == 3 {
+                    return 0.0; // empty row
+                }
+                let v = rng();
+                // row 0 is a hub: keep everything
+                if i == 0 || v.abs() < 0.4 {
+                    v
+                } else {
+                    0.0
+                }
+            });
+            let csr = CsrMat::from_dense(&a);
+            let rhs: Vec<f32> = (0..cols * n).map(|_| rng()).collect();
+            let mut scalar = vec![0.0f32; rows * n];
+            let mut simd = vec![0.0f32; rows * n];
+            spmm_rows(&csr.indptr, &csr.indices, &csr.values, 0, rows, &rhs, n, &mut scalar);
+            spmm_rows_simd(&csr.indptr, &csr.indices, &csr.values, 0, rows, &rhs, n, &mut simd);
+            assert_eq!(scalar, simd, "n={n}");
+        }
+    }
+
+    #[test]
+    fn density_hint_resolution() {
+        let dense = Mat::filled(8, 8, 1.0);
+        let sparse = Mat::zeros(8, 8);
+        assert!(!DensityHint::Sample.resolve(&dense.data));
+        assert!(DensityHint::Sample.resolve(&sparse.data));
+        // static hints never probe: they answer the same for any operand
+        assert!(DensityHint::Skip.resolve(&dense.data));
+        assert!(!DensityHint::NoSkip.resolve(&sparse.data));
     }
 
     #[test]

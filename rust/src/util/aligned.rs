@@ -1,0 +1,151 @@
+//! 64-byte-aligned slab allocation for the engine arena.
+//!
+//! The SIMD microkernels stream arena slabs with 8-wide (32-byte)
+//! vector loads; a slab whose base address straddles a cache line turns
+//! every such load into two line fetches. `AlignedBuf` replaces the
+//! arena's `Box<[T]>` slabs with allocations pinned to [`SLAB_ALIGN`],
+//! so vector lane 0 of every row block starts on a cache-line boundary.
+//! Allocation happens once at plan-instance construction — the
+//! zero-steady-state-allocation contract (`rust/tests/plan_alloc.rs`)
+//! is unchanged.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
+
+/// Arena slab base alignment in bytes: one x86 cache line, and 8× the
+/// engine's 8-lane f32 vector width.
+pub const SLAB_ALIGN: usize = 64;
+
+mod private {
+    /// Seals [`super::Zeroed`]: only element types audited for the
+    /// all-zero bit pattern may back an [`super::AlignedBuf`].
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i8 {}
+}
+
+/// Element types whose all-zero byte pattern is a valid value, so
+/// `alloc_zeroed` yields an initialized buffer. Sealed — implemented for
+/// the arena's element types (`f32`, `i8`) only.
+pub trait Zeroed: Copy + private::Sealed {}
+impl Zeroed for f32 {}
+impl Zeroed for i8 {}
+
+/// A heap slab of `T` with [`SLAB_ALIGN`]-byte base alignment. Behaves
+/// like a fixed-size `Box<[T]>` (derefs to a slice); zero-length buffers
+/// allocate nothing.
+pub struct AlignedBuf<T: Zeroed> {
+    ptr: NonNull<T>,
+    len: usize,
+}
+
+impl<T: Zeroed> AlignedBuf<T> {
+    /// Zero-initialized slab of `len` elements.
+    pub fn zeroed(len: usize) -> AlignedBuf<T> {
+        if len == 0 {
+            return AlignedBuf { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: `layout` has nonzero size (len > 0, T is f32/i8);
+        // `Zeroed` guarantees the all-zero pattern is a valid T.
+        let raw = unsafe { alloc_zeroed(layout) } as *mut T;
+        let Some(ptr) = NonNull::new(raw) else {
+            handle_alloc_error(layout)
+        };
+        AlignedBuf { ptr, len }
+    }
+
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(
+            len * std::mem::size_of::<T>(),
+            SLAB_ALIGN.max(std::mem::align_of::<T>()),
+        )
+        .expect("slab layout overflow")
+    }
+
+    /// Base pointer (aligned to [`SLAB_ALIGN`] for non-empty buffers).
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr.as_ptr()
+    }
+}
+
+impl<T: Zeroed> Default for AlignedBuf<T> {
+    /// Empty buffer — no allocation; what `std::mem::take` leaves behind
+    /// when the engine temporarily moves a slab out of the arena.
+    fn default() -> Self {
+        AlignedBuf::zeroed(0)
+    }
+}
+
+impl<T: Zeroed> std::ops::Deref for AlignedBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // SAFETY: ptr is valid for len elements (or dangling with len 0,
+        // which from_raw_parts permits), initialized by alloc_zeroed.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Zeroed> std::ops::DerefMut for AlignedBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as in Deref; &mut self guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Zeroed> Drop for AlignedBuf<T> {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `zeroed` with this exact layout.
+            unsafe {
+                dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len));
+            }
+        }
+    }
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively, like Box<[T]>.
+unsafe impl<T: Zeroed + Send> Send for AlignedBuf<T> {}
+unsafe impl<T: Zeroed + Sync> Sync for AlignedBuf<T> {}
+
+impl<T: Zeroed + std::fmt::Debug> std::fmt::Debug for AlignedBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBuf").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slabs_are_aligned_and_zeroed() {
+        for len in [1usize, 7, 64, 1000] {
+            let buf: AlignedBuf<f32> = AlignedBuf::zeroed(len);
+            assert_eq!(buf.as_ptr() as usize % SLAB_ALIGN, 0, "len {len}");
+            assert_eq!(buf.len(), len);
+            assert!(buf.iter().all(|&v| v == 0.0));
+        }
+        let buf: AlignedBuf<i8> = AlignedBuf::zeroed(33);
+        assert_eq!(buf.as_ptr() as usize % SLAB_ALIGN, 0);
+        assert!(buf.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn mutation_roundtrips() {
+        let mut buf: AlignedBuf<f32> = AlignedBuf::zeroed(16);
+        for (i, v) in buf.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(buf[10], 10.0);
+        buf.fill(0.0);
+        assert!(buf.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_buffer_allocates_nothing_and_derefs() {
+        let buf: AlignedBuf<f32> = AlignedBuf::default();
+        assert!(buf.is_empty());
+        assert_eq!(&buf[..], &[] as &[f32]);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small substrates the offline environment forces us to own: a PRNG,
 //! a property-testing harness, report tables, and timing helpers.
 
+pub mod aligned;
 pub mod alloc;
 pub mod propcheck;
 pub mod reservoir;

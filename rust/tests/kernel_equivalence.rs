@@ -1,0 +1,284 @@
+//! Kernel-equivalence property suite: every dispatch configuration of
+//! the engine's microkernels — SIMD on/off, any degree-bin count, serial
+//! or parallel pool, any density hint — must agree **bitwise** with the
+//! scalar fallback, and the whole family must agree with the `ops::exec`
+//! interpreter oracle to ≤ 1e-4. The CacheG reordering pass is pure
+//! relabeling: a permuted run restored through the inverse permutation
+//! must match the unordered oracle too.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use grannite::engine::{kernels, PlanInstance, WorkerPool};
+use grannite::ops::build::{self, Aggregation, GnnDims};
+use grannite::ops::exec::{self, Bindings};
+use grannite::ops::plan::{ExecPlan, KernelConfig, ReorderMode, Reordering, SimdMode};
+use grannite::ops::{OpGraph, OpKind, Stage};
+use grannite::tensor::{CsrMat, DensityHint, Mat, Tensor};
+use grannite::util::propcheck::forall;
+use grannite::util::Rng;
+
+/// `ops::exec` result of one dense `(m,k) @ (k,n)` MatMul.
+fn exec_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut g = OpGraph::new("oracle");
+    let x = g.input("x", &[a.rows, a.cols], grannite::tensor::DType::F32, Stage::Compute);
+    let w = g.input("w", &[b.rows, b.cols], grannite::tensor::DType::F32, Stage::Compute);
+    let o = g.op(OpKind::MatMul, &[x, w], &[a.rows, b.cols], Stage::Compute);
+    g.set_output(o);
+    let mut bind: Bindings = BTreeMap::new();
+    bind.insert("x".into(), Tensor::from_mat(a));
+    bind.insert("w".into(), Tensor::from_mat(b));
+    exec::execute_mat(&g, &bind).unwrap()
+}
+
+fn pools() -> [Arc<WorkerPool>; 2] {
+    [Arc::new(WorkerPool::serial()), Arc::new(WorkerPool::new(4))]
+}
+
+#[test]
+fn prop_matmul_paths_agree_with_exec_oracle() {
+    let pools = pools();
+    forall("matmul dispatch equivalence", 24, |g| {
+        let m = g.dim(33);
+        let k = g.dim(40);
+        let n = g.dim(37);
+        let density = [0.05, 0.3, 1.0][g.usize(0, 3)];
+        let mut a = Mat::from_fn(m, k, |_, _| 0.0);
+        for v in a.data.iter_mut() {
+            if g.chance(density) {
+                *v = g.small_f32();
+            }
+        }
+        let b = Mat::from_fn(k, n, |i, j| ((i * 7 + j * 3) % 11) as f32 * 0.25 - 1.0);
+        let want = exec_matmul(&a, &b);
+
+        let mut reference: Option<Vec<f32>> = None;
+        for pool in &pools {
+            for simd in [false, true] {
+                for hint in [DensityHint::Sample, DensityHint::Skip, DensityHint::NoSkip] {
+                    let mut out = vec![0.0f32; m * n];
+                    kernels::matmul_with(
+                        pool, &a.data, m, k, &b.data, n, &mut out, hint, simd,
+                    );
+                    match &reference {
+                        None => reference = Some(out.clone()),
+                        Some(r) => assert_eq!(
+                            r, &out,
+                            "simd={simd} hint={hint:?} diverged bitwise"
+                        ),
+                    }
+                    let got = Mat::from_vec(m, n, out);
+                    let diff = want.max_abs_diff(&got);
+                    assert!(diff < 1e-4, "oracle diff {diff} (simd={simd})");
+                }
+            }
+        }
+    });
+}
+
+/// A power-law CSR: early rows are hubs (degree up to the full column
+/// count), the tail is sparse, and every 5th row is empty.
+fn power_law_csr(g: &mut grannite::util::propcheck::Gen, rows: usize, cols: usize) -> CsrMat {
+    let mut indptr = vec![0u32];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    for i in 0..rows {
+        if i % 5 != 3 {
+            // ~cols/(i+1) targets, deduped by stepping a stride
+            let degree = (cols / (i + 1)).clamp(1, cols);
+            let stride = (cols / degree).max(1);
+            let offset = g.usize(0, stride);
+            let mut c = offset;
+            while c < cols && (indices.len() - *indptr.last().unwrap() as usize) < degree {
+                indices.push(c as u32);
+                values.push((g.rng().f64() * 2.0 - 1.0) as f32);
+                c += stride;
+            }
+        }
+        indptr.push(indices.len() as u32);
+    }
+    CsrMat { rows, cols, indptr, indices, values }
+}
+
+#[test]
+fn prop_spmm_paths_agree_on_power_law_graphs() {
+    let pools = pools();
+    forall("spmm dispatch equivalence", 16, |g| {
+        let rows = g.usize(40, 120);
+        let cols = g.usize(20, 60);
+        let n = g.dim(33);
+        let csr = power_law_csr(g, rows, cols);
+        let rhs = Mat::from_fn(cols, n, |i, j| ((i * 13 + j * 5) % 9) as f32 * 0.5 - 2.0);
+        let want = exec_matmul(&csr.to_dense(), &rhs);
+
+        let mut reference: Option<Vec<f32>> = None;
+        for pool in &pools {
+            for simd in [false, true] {
+                for bins in [1usize, 4, 16] {
+                    let mut out = vec![0.0f32; rows * n];
+                    kernels::spmm_with(
+                        pool,
+                        &csr.indptr,
+                        &csr.indices,
+                        &csr.values,
+                        rows,
+                        &rhs.data,
+                        n,
+                        &mut out,
+                        bins,
+                        simd,
+                    );
+                    match &reference {
+                        None => reference = Some(out.clone()),
+                        Some(r) => assert_eq!(
+                            r, &out,
+                            "simd={simd} bins={bins} diverged bitwise"
+                        ),
+                    }
+                    let got = Mat::from_vec(rows, n, out);
+                    let diff = want.max_abs_diff(&got);
+                    assert!(diff < 1e-4, "oracle diff {diff} (simd={simd} bins={bins})");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_int8_paths_agree_bitwise() {
+    let pools = pools();
+    forall("int8 dispatch equivalence", 16, |g| {
+        let m = g.dim(22);
+        let k = g.dim(30);
+        let n = g.dim(26);
+        let x: Vec<i8> = (0..m * k).map(|_| (g.rng().usize(255) as i32 - 127) as i8).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| (g.rng().usize(255) as i32 - 127) as i8).collect();
+        let scale = 0.25f32;
+        let mut scalar = vec![0.0f32; m * n];
+        kernels::qmatmul_i8_with(&pools[0], &x, &w, m, k, n, scale, &mut scalar, false);
+        for pool in &pools {
+            let mut simd = vec![0.0f32; m * n];
+            kernels::qmatmul_i8_with(pool, &x, &w, m, k, n, scale, &mut simd, true);
+            assert_eq!(scalar, simd, "qmatmul_i8 SIMD diverged");
+        }
+
+        // i8 SpMM from the same operand interpreted sparsely (i32
+        // accumulation is associative, so every schedule is exact)
+        let mut indptr = vec![0u32];
+        let (mut indices, mut values) = (Vec::new(), Vec::new());
+        for row in x.chunks(k) {
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        let mut sp_scalar = vec![0.0f32; m * n];
+        kernels::spmm_i8_with(
+            &pools[0], &indptr, &indices, &values, m, &w, n, scale, &mut sp_scalar, 4, false,
+        );
+        assert_eq!(scalar, sp_scalar, "sparse i8 path diverged from dense");
+        for pool in &pools {
+            for bins in [1usize, 8] {
+                let mut sp = vec![0.0f32; m * n];
+                kernels::spmm_i8_with(
+                    pool, &indptr, &indices, &values, m, &w, n, scale, &mut sp, bins, true,
+                );
+                assert_eq!(sp_scalar, sp, "spmm_i8 SIMD/bins={bins} diverged");
+            }
+        }
+    });
+}
+
+#[test]
+fn reordered_plan_matches_exec_oracle_and_roundtrips() {
+    let d = GnnDims { n: 30, m: 55, f: 9, hidden: 7, classes: 4, k: 5, layers: 2 };
+    let ds = grannite::graph::datasets::synthesize("reorder", d.n, d.m, d.classes, d.f, 41);
+    let norm_dense = ds.graph.norm_adjacency(d.n);
+    let norm = CsrMat::from_dense(&norm_dense);
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
+    };
+    let (w1, b1) = (rand(d.f, d.hidden), rand(1, d.hidden));
+    let (w2, b2) = (rand(d.hidden, d.classes), rand(1, d.classes));
+
+    // unordered oracle: the interpreter over the dense graph
+    let g_dense = build::gcn_stagr(d, "stagr");
+    let mut b: Bindings = BTreeMap::new();
+    b.insert("x".into(), Tensor::from_mat(&ds.features));
+    b.insert("norm".into(), Tensor::from_mat(&norm_dense));
+    b.insert("w1".into(), Tensor::from_mat(&w1));
+    b.insert("b1".into(), Tensor::from_mat(&b1));
+    b.insert("w2".into(), Tensor::from_mat(&w2));
+    b.insert("b2".into(), Tensor::from_mat(&b2));
+    let want = exec::execute_mat(&g_dense, &b).unwrap();
+
+    let g_sparse = build::gcn_stagr_with(d, "stagr", Aggregation::Sparse);
+    for mode in [ReorderMode::Degree, ReorderMode::Rcm] {
+        let r = Reordering::compute(mode, &norm.indptr, &norm.indices).unwrap();
+        // node-indexed bindings permuted; weights/biases are not
+        // node-indexed and pass through untouched
+        let mut bp = b.clone();
+        bp.insert("x".into(), Tensor::from_mat(&r.permute_rows(&ds.features)));
+        bp.insert("norm".into(), Tensor::from_csr(r.permute_csr(&norm)));
+        let plan = Arc::new(
+            ExecPlan::compile_with(
+                &g_sparse,
+                KernelConfig { reorder: mode, ..KernelConfig::default() },
+            )
+            .unwrap(),
+        );
+        let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::new(3)));
+        inst.run(&bp).unwrap();
+        let permuted_out = inst.output_mat(0).unwrap();
+        let restored = r.restore_rows(&permuted_out);
+        let diff = want.max_abs_diff(&restored);
+        assert!(diff < 1e-4, "{mode:?}: reordered run drifted {diff}");
+        // permutation ∘ inverse = identity on served outputs, bitwise
+        assert_eq!(r.permute_rows(&restored), permuted_out, "{mode:?}");
+        assert_eq!(
+            r.restore_rows(&r.permute_rows(&want)),
+            want,
+            "{mode:?}: restore∘permute must be the identity"
+        );
+    }
+}
+
+#[test]
+fn simd_modes_dispatch_identically_through_plans() {
+    // compile the same graph at every SimdMode: Off is the oracle path,
+    // Auto/On must reproduce it bitwise end to end
+    let d = GnnDims { n: 21, m: 34, f: 8, hidden: 6, classes: 3, k: 4, layers: 2 };
+    let ds = grannite::graph::datasets::synthesize("modes", d.n, d.m, d.classes, d.f, 13);
+    let mut rng = Rng::new(99);
+    let mut rand = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 0.8 - 0.4) as f32)
+    };
+    let mut b: Bindings = BTreeMap::new();
+    b.insert("x".into(), Tensor::from_mat(&ds.features));
+    b.insert("norm".into(), Tensor::from_mat(&ds.graph.norm_adjacency(d.n)));
+    b.insert("w1".into(), Tensor::from_mat(&rand(d.f, d.hidden)));
+    b.insert("b1".into(), Tensor::from_mat(&rand(1, d.hidden)));
+    b.insert("w2".into(), Tensor::from_mat(&rand(d.hidden, d.classes)));
+    b.insert("b2".into(), Tensor::from_mat(&rand(1, d.classes)));
+    let g = build::gcn_stagr(d, "stagr");
+    let outs: Vec<Mat> = [SimdMode::Off, SimdMode::Auto, SimdMode::On]
+        .into_iter()
+        .map(|simd| {
+            let plan = Arc::new(
+                ExecPlan::compile_with(&g, KernelConfig { simd, ..KernelConfig::default() })
+                    .unwrap(),
+            );
+            let mut inst = PlanInstance::new(plan, Arc::new(WorkerPool::new(2)));
+            inst.run(&b).unwrap();
+            inst.output_mat(0).unwrap()
+        })
+        .collect();
+    assert_eq!(outs[0], outs[1], "auto diverged from the scalar oracle");
+    assert_eq!(outs[0], outs[2], "on diverged from the scalar oracle");
+    let want = exec::execute_mat(&g, &b).unwrap();
+    assert!(want.max_abs_diff(&outs[0]) < 1e-4);
+}

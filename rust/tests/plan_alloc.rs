@@ -81,6 +81,12 @@ fn steady_state_run_allocates_nothing() {
         inst.run(&bindings).unwrap();
         inst.run(&bindings).unwrap();
         let reference = inst.output_mat(0).unwrap();
+        // the slabs the steady state reuses are cache-line aligned — the
+        // base-address guarantee the SIMD microkernels stream against
+        assert!(
+            inst.arena_aligned(grannite::util::aligned::SLAB_ALIGN),
+            "{label}: arena slab misaligned"
+        );
 
         let before = allocation_count();
         for i in 0..10u64 {

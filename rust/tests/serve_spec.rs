@@ -12,8 +12,8 @@ use grannite::config::parse::Value;
 use grannite::graph::datasets::{synthesize, Dataset};
 use grannite::serve::{
     DataSource, Deployment, DeploymentSpec, EngineFactory, EngineInit,
-    EngineRegistry, EngineSpec, LaunchContext, Serving, ShardFactory,
-    TelemetrySpec, Topology,
+    EngineRegistry, EngineSpec, KernelSpec, LaunchContext, Serving,
+    ShardFactory, TelemetrySpec, Topology,
 };
 use grannite::server::{InferenceEngine, QueryResponse, Update};
 use grannite::tensor::Mat;
@@ -74,6 +74,11 @@ fn full_spec_round_trips_through_toml() {
     spec.monitor.interval_ms = 100;
     spec.monitor.history = 600;
     spec.monitor.addr = "127.0.0.1:9890".into();
+    spec.kernels = KernelSpec {
+        simd: "off".into(),
+        reorder: "rcm".into(),
+        degree_bins: 4,
+    };
 
     let text = spec.to_toml();
     let parsed = DeploymentSpec::parse_toml(&text).unwrap();
@@ -297,6 +302,83 @@ fn bad_monitor_values_are_rejected_actionably() {
     let mut s = spec("local", 1);
     s.monitor.addr = "127.0.0.1:0".into();
     assert!(s.monitor_active(), "a scrape address needs the sampler");
+}
+
+#[test]
+fn kernels_section_round_trips_and_lowers() {
+    let mut s = spec("plan", 2);
+    s.kernels = KernelSpec {
+        simd: "on".into(),
+        reorder: "none".into(),
+        degree_bins: 4,
+    };
+    let text = s.to_toml();
+    assert!(text.contains("[kernels]"), "{text}");
+    let parsed = DeploymentSpec::parse_toml(&text).unwrap();
+    assert_eq!(parsed, s, "to_toml → parse_toml must keep [kernels]:\n{text}");
+    parsed.validate_with(&EngineRegistry::builtin()).unwrap();
+
+    // the strings lower to the typed engine knobs exactly once, here
+    let cfg = parsed.kernels.kernel_config().unwrap();
+    assert_eq!(cfg.simd, grannite::ops::plan::SimdMode::On);
+    assert_eq!(cfg.reorder, grannite::ops::plan::ReorderMode::None);
+    assert_eq!(cfg.degree_bins, 4);
+}
+
+#[test]
+fn bad_kernel_values_are_rejected_actionably() {
+    // an unknown SIMD mode names all three and what each means
+    let mut s = spec("plan", 1);
+    s.kernels.simd = "fast".into();
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("kernels.simd"), "{err}");
+    assert!(err.contains("auto") && err.contains("off"), "{err}");
+    assert!(err.contains("oracle"), "must explain the off path: {err}");
+
+    // an unknown reorder mode names the two passes
+    let mut s = spec("plan", 1);
+    s.kernels.reorder = "cacheg".into();
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("kernels.reorder"), "{err}");
+    assert!(err.contains("degree") && err.contains("rcm"), "{err}");
+
+    // zero bins would starve the nnz-balanced dispenser
+    let mut s = spec("plan", 1);
+    s.kernels.degree_bins = 0;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("kernels.degree_bins must be ≥ 1 (got 0)"), "{err}");
+
+    // a typoed key inside [kernels] is loud, like every other section
+    let err = DeploymentSpec::parse_toml("[kernels]\nbins = 4")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("[kernels]"), "{err}");
+    assert!(err.contains("degree_bins"), "must list the valid keys: {err}");
+}
+
+#[test]
+fn serving_engines_reject_compile_time_reorder() {
+    // the degree/rcm locality passes permute node ids at plan-compile
+    // time; serving shards bind live mutable graphs, so every factory
+    // that dispatches microkernels must refuse — pointing at the
+    // static-plan API instead of silently ignoring the knob
+    for engine in ["plan", "incremental", "auto"] {
+        let mut s = spec(engine, 1);
+        s.kernels.reorder = "rcm".into();
+        let err =
+            format!("{:#}", s.validate_with(&EngineRegistry::builtin()).unwrap_err());
+        assert!(err.contains("kernels.reorder"), "{engine}: {err}");
+        assert!(err.contains("\"none\""), "{engine}: must point at the fix: {err}");
+        assert!(
+            err.contains("Reordering"),
+            "{engine}: must point at the static-plan API: {err}"
+        );
+    }
+
+    // engines with no microkernel dispatch ignore [kernels] entirely
+    let mut s = spec("local", 1);
+    s.kernels.reorder = "rcm".into();
+    s.validate_with(&EngineRegistry::builtin()).unwrap();
 }
 
 #[test]
