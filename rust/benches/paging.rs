@@ -1,0 +1,267 @@
+//! Out-of-core serving bench: memory vs paged feature backends (ISSUE 10
+//! acceptance bench).
+//!
+//! Two claims, two gates:
+//!
+//! 1. **Warm-cache throughput** — at Cora scale, a paged backend whose
+//!    cache holds the working set serves mutation+query rounds at
+//!    ≥ 0.8× the in-memory backend (`cora_warm_paged_vs_memory`).
+//! 2. **Peak RSS** — a 1M-node power-law graph served through
+//!    `Deployment::launch` with `[storage] backend = "paged"` peaks
+//!    under a RAM budget the in-memory backend arithmetically cannot
+//!    meet: in-memory needs the paged run's footprint *plus* the dense
+//!    feature matrix *plus* its NodePad-padded `x_pad` copy, minus the
+//!    page-cache arena. The features only ever exist in the store file
+//!    (streamed row-by-row at build time; the dataset is headless).
+//!
+//! ```sh
+//! cargo bench --bench paging                     # Cora + 1M point
+//! cargo bench --bench paging -- --quick          # CI smoke (same 1M)
+//! cargo bench --bench paging -- --json out.json  # artifact
+//! ```
+
+use std::sync::Arc;
+
+use grannite::bench::banner;
+use grannite::cli::Args;
+use grannite::engine::WorkerPool;
+use grannite::graph::datasets::{
+    power_law_feature_row, synthesize, synthesize_power_law_headless,
+};
+use grannite::incremental::{IncrementalConfig, IncrementalEngine};
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+};
+use grannite::server::{InferenceEngine, Update};
+use grannite::storage::{spill_path, PagedFeatures, PagedStore};
+use grannite::util::timing::Stats;
+use grannite::util::{human_bytes, human_us, Table};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Peak resident set of this process (VmHWM), in MB. Monotone over the
+/// process lifetime — the 1M point must run as the last/biggest phase.
+fn peak_rss_mb() -> f64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb * 1024.0 / MB;
+        }
+    }
+    0.0
+}
+
+/// Deterministic mutation+query rounds against one engine: per round,
+/// one `AddEdge` then a timed `infer` (the warm-path shape: small
+/// frontier ring gathered through whichever feature tier is configured).
+fn replay(
+    engine: &mut IncrementalEngine,
+    nodes: usize,
+    rounds: usize,
+    seed: u64,
+) -> anyhow::Result<(Stats, u64, u64)> {
+    let mut rng = grannite::util::Rng::new(seed);
+    let mut samples = Vec::with_capacity(rounds);
+    let (mut hits, mut faults) = (0u64, 0u64);
+    for _ in 0..rounds {
+        let u = rng.usize(nodes);
+        let mut v = rng.usize(nodes);
+        if v == u {
+            v = (v + 1) % nodes;
+        }
+        let _ = engine.apply(&Update::AddEdge(u, v));
+        let t0 = std::time::Instant::now();
+        let logits = engine.infer()?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        std::hint::black_box(logits);
+        if let Some(rs) = engine.round_stats() {
+            hits += rs.page_hits;
+            faults += rs.page_faults;
+        }
+    }
+    Ok((Stats::from_samples(&samples), hits, faults))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.has("quick");
+    let json_path = args.options.get("json").cloned();
+    banner(if quick {
+        "paged vs in-memory feature serving (quick)"
+    } else {
+        "paged vs in-memory feature serving"
+    });
+
+    // ------------------------------------------------------------------
+    // Part 1: Cora-scale warm-cache throughput, memory vs paged
+    // ------------------------------------------------------------------
+    let (n, m, f, classes) = if quick {
+        (600, 1500, 64, 7)
+    } else {
+        (2708, 5429, 1433, 7)
+    };
+    let cap = n + 64;
+    let rounds = if quick { 12 } else { 30 };
+    let ds = synthesize("paging", n, m, classes, f, 11);
+    let pool = Arc::new(WorkerPool::default_parallel());
+    let cfg = IncrementalConfig::default();
+
+    let mut mem = IncrementalEngine::full(&ds, cap, Arc::clone(&pool), cfg)?;
+    let _ = mem.infer()?; // warm: compile + first full round
+    let (mem_stats, _, _) = replay(&mut mem, n, rounds, 31)?;
+
+    // cache sized to the working set: every page resident after round one
+    let page_rows = 64;
+    let cache_pages = cap.div_ceil(page_rows);
+    let mut store =
+        PagedStore::create_from_mat(&spill_path("paging-cora"), &ds.features, cap)?;
+    store.set_delete_on_drop(true);
+    let features =
+        Box::new(PagedFeatures::new(Arc::new(store), page_rows, cache_pages));
+    let mut paged = IncrementalEngine::shard_with_source(
+        &ds, cap, 0..cap, Arc::clone(&pool), cfg, features,
+    )?;
+    let _ = paged.infer()?; // warm: faults every page exactly once
+    let _ = paged.round_stats();
+    let (paged_stats, hits, faults) = replay(&mut paged, n, rounds, 31)?;
+
+    // numerics + warmth: identical scripts must agree, and the replay
+    // rounds must have served from the cache, not the disk
+    let diff = mem.infer()?.max_abs_diff(&paged.infer()?);
+    let warm_hit_rate = if hits + faults == 0 {
+        1.0
+    } else {
+        hits as f64 / (hits + faults) as f64
+    };
+    let warm_ratio = mem_stats.mean / paged_stats.mean;
+
+    let mut t = Table::new(
+        format!("warm mutation+query rounds — {n} nodes, {f} features"),
+        &["backend", "mean", "p50", "p95"],
+    );
+    t.row(&["memory".into(), human_us(mem_stats.mean),
+            human_us(mem_stats.p50), human_us(mem_stats.p95)]);
+    t.row(&["paged".into(), human_us(paged_stats.mean),
+            human_us(paged_stats.p50), human_us(paged_stats.p95)]);
+    t.print();
+    println!(
+        "warm paged/memory throughput: {warm_ratio:.3}x   \
+         hit rate {warm_hit_rate:.3}   max|Δ| = {diff:.3e}"
+    );
+    drop(paged);
+    drop(mem);
+
+    // ------------------------------------------------------------------
+    // Part 2: 1M-node power-law graph through Deployment::launch, paged
+    // backend, features never resident (streamed into the store file)
+    // ------------------------------------------------------------------
+    let nodes = 1_000_000;
+    let (pl_f, pl_deg, pl_classes, pl_seed) = (64, 6, 7, 13);
+    let queries_1m = if quick { 4 } else { 10 };
+    println!("\nbuilding 1M-node power-law graph (avg degree {pl_deg}) …");
+    let pl = synthesize_power_law_headless("pl-1m", nodes, pl_deg, pl_classes, pl_f, pl_seed);
+    let store_path = spill_path("paging-1m");
+    let built = PagedStore::create(&store_path, nodes, pl_f, |row, out| {
+        power_law_feature_row(pl_seed, row, out);
+    })?;
+    let store_bytes = nodes * pl_f * 4;
+    println!(
+        "streamed {} of features into {} ({} rows, never resident)",
+        human_bytes(store_bytes),
+        store_path.display(),
+        built.rows(),
+    );
+    drop(built);
+
+    let (page_rows_1m, cache_pages_1m) = (256usize, 1024usize);
+    let mut spec = DeploymentSpec {
+        engine: EngineSpec::named("incremental"),
+        topology: Topology::homogeneous(1),
+        capacity: nodes,
+        ..DeploymentSpec::default()
+    };
+    spec.storage.backend = "paged".into();
+    spec.storage.page_rows = page_rows_1m;
+    spec.storage.cache_pages = cache_pages_1m;
+    spec.storage.path = store_path.display().to_string();
+
+    let t0 = std::time::Instant::now();
+    let fleet = Deployment::launch(&spec, &DataSource::Dataset(pl.clone()))?;
+    let launch_s = t0.elapsed().as_secs_f64();
+    let mut samples = Vec::with_capacity(queries_1m);
+    let mut rng = grannite::util::Rng::new(5);
+    for _ in 0..queries_1m {
+        fleet.update(Update::AddEdge(rng.usize(nodes), rng.usize(nodes)))?;
+        let node = rng.usize(nodes);
+        let tq = std::time::Instant::now();
+        let _ = fleet.query_wait(Some(node))?;
+        samples.push(tq.elapsed().as_secs_f64() * 1e6);
+    }
+    let q_stats = Stats::from_samples(&samples);
+    let snap = fleet.metrics();
+    fleet.shutdown()?;
+    let _ = std::fs::remove_file(&store_path);
+
+    let paged_peak_mb = peak_rss_mb();
+    // what switching this run to backend = "memory" would ADD, computed
+    // from geometry (never run — it is the budget-blowing case):
+    // the dense feature matrix the dataset would carry, plus the
+    // NodePad-padded x_pad copy MemoryFeatures binds, minus the page
+    // cache arena the paged run no longer needs
+    let cache_arena_mb = (cache_pages_1m * page_rows_1m * pl_f * 4) as f64 / MB;
+    let dense_features_mb = (nodes * pl_f * 4) as f64 / MB;
+    let xpad_mb = (nodes * pl_f * 4) as f64 / MB;
+    let inmem_min_mb = paged_peak_mb - cache_arena_mb + dense_features_mb + xpad_mb;
+    // the budget the paged run fits and the in-memory floor blows: the
+    // midpoint of the two footprints
+    let budget_mb = (paged_peak_mb + inmem_min_mb) / 2.0;
+
+    println!(
+        "1M-node paged deployment: launch+first-round {launch_s:.1}s   \
+         query mean {}   feature-cache hit rate {:.3}   disk read {}",
+        human_us(q_stats.mean),
+        snap.feature_cache_hit_rate(),
+        human_bytes(snap.storage_bytes_read as usize),
+    );
+    println!(
+        "peak RSS {paged_peak_mb:.0} MB (paged)   vs ≥ {inmem_min_mb:.0} MB \
+         (in-memory floor: +{dense_features_mb:.0} MB features \
+         +{xpad_mb:.0} MB x_pad −{cache_arena_mb:.0} MB cache arena)   \
+         budget {budget_mb:.0} MB"
+    );
+
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"paging\",\n");
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str(&format!("  \"cora_nodes\": {n},\n  \"cora_features\": {f},\n"));
+        out.push_str(&format!(
+            "  \"cora_warm_paged_vs_memory\": {warm_ratio:.4},\n"
+        ));
+        out.push_str(&format!("  \"cora_warm_hit_rate\": {warm_hit_rate:.4},\n"));
+        out.push_str(&format!("  \"cora_max_abs_diff\": {diff:.6e},\n"));
+        out.push_str(&format!("  \"pl_nodes\": {nodes},\n"));
+        out.push_str(&format!("  \"pl_query_mean_us\": {:.3},\n", q_stats.mean));
+        out.push_str(&format!(
+            "  \"pl_feature_cache_hit_rate\": {:.4},\n",
+            snap.feature_cache_hit_rate()
+        ));
+        out.push_str(&format!(
+            "  \"pl_storage_read_bytes\": {},\n",
+            snap.storage_bytes_read
+        ));
+        out.push_str(&format!("  \"paged_1m_peak_rss_mb\": {paged_peak_mb:.1},\n"));
+        out.push_str(&format!("  \"inmem_1m_min_mb\": {inmem_min_mb:.1},\n"));
+        out.push_str(&format!("  \"budget_mb\": {budget_mb:.1}\n"));
+        out.push_str("}\n");
+        std::fs::write(&path, out)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -271,6 +271,149 @@ pub fn fig4_graph(seed: u64) -> Dataset {
     synthesize("fig4", 1354, 5429, 7, 1433, seed)
 }
 
+/// Deterministic preferential-attachment generator for out-of-core
+/// sweeps (the `paging` bench drives this at 1M+ nodes; the pool-based
+/// sampler is O(edges), so 10M-node graphs stay tractable).
+///
+/// Each new node attaches `avg_degree / 2` edges to existing nodes with
+/// probability proportional to current degree, yielding the familiar
+/// heavy-tailed Barabási–Albert degree distribution that stresses page
+/// locality far harder than the planted-partition generator.
+pub fn synthesize_power_law(
+    name: &str,
+    nodes: usize,
+    avg_degree: usize,
+    classes: usize,
+    features: usize,
+    seed: u64,
+) -> Dataset {
+    power_law(name, nodes, avg_degree, classes, features, seed, true)
+}
+
+/// Same topology/labels/splits as [`synthesize_power_law`] but with an
+/// empty `[0, features]` feature matrix: `num_features()` still reports
+/// `features`, yet no RAM is spent on rows. Pair with
+/// [`power_law_feature_row`] to stream rows straight into a
+/// [`crate::storage::PagedStore`] — the out-of-core serving path never
+/// needs the matrix resident.
+pub fn synthesize_power_law_headless(
+    name: &str,
+    nodes: usize,
+    avg_degree: usize,
+    classes: usize,
+    features: usize,
+    seed: u64,
+) -> Dataset {
+    power_law(name, nodes, avg_degree, classes, features, seed, false)
+}
+
+/// The deterministic feature row the power-law generators assign to
+/// `node` — callable independently so disk stores can be built by
+/// streaming rows without ever materializing the matrix.
+pub fn power_law_feature_row(seed: u64, node: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    let features = out.len();
+    if features == 0 {
+        return;
+    }
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(node as u64 + 1));
+    let nnz = (features / 16).clamp(1, 32).min(features);
+    let w = 1.0 / nnz as f32;
+    for _ in 0..nnz {
+        out[rng.usize(features)] += w;
+    }
+}
+
+fn power_law(
+    name: &str,
+    nodes: usize,
+    avg_degree: usize,
+    classes: usize,
+    features: usize,
+    seed: u64,
+    materialize: bool,
+) -> Dataset {
+    assert!(classes >= 2 && nodes >= classes && avg_degree >= 2);
+    let m = (avg_degree / 2).max(1);
+    let mut rng = Rng::new(seed);
+    let seed_n = (m + 1).min(nodes);
+
+    // endpoint pool: one slot per degree unit, so uniform draws from it
+    // are degree-proportional attachment
+    let mut edge_list: Vec<(u32, u32)> = Vec::with_capacity(nodes.saturating_mul(m));
+    let mut pool: Vec<u32> = Vec::with_capacity(2 * nodes.saturating_mul(m));
+    for v in 1..seed_n {
+        edge_list.push(((v - 1) as u32, v as u32));
+        pool.push((v - 1) as u32);
+        pool.push(v as u32);
+    }
+    if seed_n == 1 {
+        pool.push(0);
+    }
+    let mut targets: Vec<u32> = Vec::with_capacity(m);
+    for v in seed_n..nodes {
+        targets.clear();
+        let want = m.min(v);
+        let mut attempts = 0usize;
+        while targets.len() < want && attempts < 16 * m {
+            attempts += 1;
+            let t = pool[rng.usize(pool.len())];
+            if t as usize != v && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            edge_list.push((t, v as u32));
+            pool.push(t);
+            pool.push(v as u32);
+        }
+        if targets.is_empty() {
+            pool.push(v as u32); // keep every node reachable by attachment
+        }
+    }
+    let graph = Graph::new(nodes, &edge_list);
+
+    // per-node deterministic labels + splits: independent of iteration
+    // order and of whether features are materialized
+    let mut labels = Vec::with_capacity(nodes);
+    let mut train_mask = vec![false; nodes];
+    let mut val_mask = vec![false; nodes];
+    let mut test_mask = vec![false; nodes];
+    for i in 0..nodes {
+        let mut nrng =
+            Rng::new(seed ^ 0xD6E8_FEB8_6659_FD93u64.wrapping_mul(i as u64 + 1));
+        labels.push(nrng.usize(classes) as i32);
+        match nrng.usize(100) {
+            0 | 1 => train_mask[i] = true,
+            2..=11 => val_mask[i] = true,
+            12..=21 => test_mask[i] = true,
+            _ => {}
+        }
+    }
+
+    let feats = if materialize {
+        let mut feats = Mat::zeros(nodes, features);
+        for i in 0..nodes {
+            power_law_feature_row(seed, i, feats.row_mut(i));
+        }
+        feats
+    } else {
+        Mat::zeros(0, features)
+    };
+
+    Dataset {
+        name: name.to_string(),
+        graph,
+        features: feats,
+        labels,
+        train_mask,
+        val_mask,
+        test_mask,
+        nbr_idx: None,
+        nbr_width: 0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,5 +500,60 @@ mod tests {
         let ds = fig4_graph(0);
         assert_eq!(ds.num_nodes(), 1354);
         assert_eq!(ds.graph.num_edges(), 5429);
+    }
+
+    #[test]
+    fn power_law_matches_requested_stats() {
+        let ds = synthesize_power_law("pl", 2000, 8, 5, 64, 42);
+        assert_eq!(ds.num_nodes(), 2000);
+        assert_eq!(ds.num_features(), 64);
+        assert_eq!(ds.num_classes(), 5);
+        let avg = 2.0 * ds.graph.num_edges() as f64 / ds.num_nodes() as f64;
+        assert!((avg - 8.0).abs() < 1.0, "avg degree {avg}");
+        assert!(ds.train_mask.iter().any(|&b| b));
+        assert!(ds.test_mask.iter().any(|&b| b));
+    }
+
+    #[test]
+    fn power_law_deterministic() {
+        let a = synthesize_power_law("pl", 500, 6, 4, 32, 9);
+        let b = synthesize_power_law("pl", 500, 6, 4, 32, 9);
+        assert_eq!(a.graph.edges(), b.graph.edges());
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn power_law_heavy_tail() {
+        let ds = synthesize_power_law("pl", 3000, 8, 4, 16, 3);
+        let mut degree = vec![0usize; ds.num_nodes()];
+        for &(s, d) in ds.graph.edges() {
+            degree[s as usize] += 1;
+            degree[d as usize] += 1;
+        }
+        let max = degree.iter().copied().max().unwrap();
+        let avg = 2.0 * ds.graph.num_edges() as f64 / ds.num_nodes() as f64;
+        // preferential attachment concentrates degree on early nodes far
+        // beyond anything the planted-partition generator produces
+        assert!(
+            max as f64 > 5.0 * avg,
+            "max degree {max} vs avg {avg} — no heavy tail"
+        );
+    }
+
+    #[test]
+    fn power_law_headless_matches_dense() {
+        let dense = synthesize_power_law("pl", 400, 6, 3, 48, 7);
+        let lean = synthesize_power_law_headless("pl", 400, 6, 3, 48, 7);
+        assert_eq!(dense.graph.edges(), lean.graph.edges());
+        assert_eq!(dense.labels, lean.labels);
+        assert_eq!(lean.features.rows, 0);
+        assert_eq!(lean.num_features(), 48);
+        // streaming rows reproduces the dense matrix exactly
+        let mut row = vec![0.0f32; 48];
+        for i in [0usize, 17, 399] {
+            power_law_feature_row(7, i, &mut row);
+            assert_eq!(&row[..], dense.features.row(i), "row {i}");
+        }
     }
 }

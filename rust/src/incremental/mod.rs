@@ -55,11 +55,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::ModelState;
 use crate::engine::{kernels, TileRunner, WorkerPool};
-use crate::graph::{datasets::Dataset, pad_features};
+use crate::graph::datasets::Dataset;
 use crate::metrics::RoundStats;
 use crate::ops::build::{self, Aggregation};
 use crate::ops::exec::Bindings;
 use crate::server::{InferenceEngine, Update};
+use crate::storage::{FeatureSource, MemoryFeatures, StorageStats};
 use crate::tensor::Mat;
 
 pub use cache::ActivationCache;
@@ -144,9 +145,11 @@ struct RoundPlan {
 /// See the module docs.
 pub struct IncrementalEngine {
     state: ModelState,
-    /// NodePad-padded features (capacity × f, zero rows for padding —
-    /// matches the `x_pad` binding the full plans consume).
-    x_pad: Mat,
+    /// Where layer-0 ring gathers read node features from: RAM (the
+    /// NodePad-padded `x_pad` matrix the full plans bind) or the paged
+    /// on-disk store — the engine cannot tell which (`[storage]` spec
+    /// section decides).
+    features: Box<dyn FeatureSource>,
     layers: Vec<LayerSpec>,
     /// One tile family per layer (geometry-bucketed compiled plans).
     tiles: Vec<TileRunner>,
@@ -188,6 +191,24 @@ impl IncrementalEngine {
         pool: Arc<WorkerPool>,
         cfg: IncrementalConfig,
     ) -> Result<IncrementalEngine> {
+        let features = Box::new(MemoryFeatures::padded(&state.dataset.features, state.capacity));
+        IncrementalEngine::from_state_with_source(state, weights, owned, pool, cfg, features)
+    }
+
+    /// [`IncrementalEngine::from_state`] with an explicit feature
+    /// backend — the out-of-core entry point: hand it a
+    /// [`crate::storage::PagedFeatures`] and layer-0 ring gathers read
+    /// from the page cache instead of a resident `x_pad` matrix. The
+    /// source must cover the NodePad capacity at the model's feature
+    /// width.
+    pub fn from_state_with_source(
+        state: ModelState,
+        weights: Bindings,
+        owned: Range<usize>,
+        pool: Arc<WorkerPool>,
+        cfg: IncrementalConfig,
+        features: Box<dyn FeatureSource>,
+    ) -> Result<IncrementalEngine> {
         let mut layers: Vec<LayerSpec> = Vec::new();
         loop {
             let Some(w) = weights.get(&format!("w{}", layers.len() + 1)) else {
@@ -212,7 +233,19 @@ impl IncrementalEngine {
             );
         }
         let capacity = state.capacity;
-        let x_pad = pad_features(&state.dataset.features, capacity);
+        if features.width() != layers[0].in_w {
+            bail!(
+                "feature source is {} wide, model w1 expects {}",
+                features.width(),
+                layers[0].in_w
+            );
+        }
+        if features.rows() < capacity {
+            bail!(
+                "feature source holds {} rows, NodePad capacity is {capacity}",
+                features.rows()
+            );
+        }
         let cache =
             ActivationCache::new(capacity, &layers.iter().map(|l| l.out_w).collect::<Vec<_>>());
         let mut tiles = Vec::with_capacity(k);
@@ -245,7 +278,7 @@ impl IncrementalEngine {
         Ok(IncrementalEngine {
             frontier: RefCell::new(Frontier::new(capacity)),
             state,
-            x_pad,
+            features,
             layers,
             tiles,
             cache,
@@ -278,6 +311,51 @@ impl IncrementalEngine {
         );
         let state = ModelState::from_dataset(ds.clone(), capacity)?;
         IncrementalEngine::from_state(state, weights, owned, pool, cfg)
+    }
+
+    /// [`IncrementalEngine::shard`] with an explicit feature backend
+    /// (the `[storage] backend = "paged"` lowering). The dataset's
+    /// feature matrix may be empty (0 rows at the model width): with an
+    /// on-disk source nothing forces features to ever be resident.
+    pub fn shard_with_source(
+        ds: &Dataset,
+        capacity: usize,
+        owned: Range<usize>,
+        pool: Arc<WorkerPool>,
+        cfg: IncrementalConfig,
+        features: Box<dyn FeatureSource>,
+    ) -> Result<IncrementalEngine> {
+        let capacity = capacity.max(ds.num_nodes());
+        let weights = crate::fleet::engine::synthesize_weights(
+            ds.num_features(),
+            ds.num_classes().max(2),
+            capacity,
+        );
+        let state = ModelState::from_dataset(ds.clone(), capacity)?;
+        IncrementalEngine::from_state_with_source(state, weights, owned, pool, cfg, features)
+    }
+
+    /// Overwrite one node's input features (GrAd feature churn). Writes
+    /// through the storage tier — on the paged backend this dirties
+    /// exactly one page, which is precisely invalidated — and seeds the
+    /// node so the next round recomputes its k-hop ball.
+    pub fn write_features(&mut self, node: usize, values: &[f32]) -> Result<()> {
+        if node >= self.active() {
+            bail!("write_features: node {node} is not active ({} live)", self.active());
+        }
+        self.features.write_row(node, values)?;
+        // a feature change dirties exactly B({node}, l) at layer l —
+        // the same seed geometry as a self-loop edge mutation
+        self.frontier.get_mut().note(&Update::AddEdge(node, node), None);
+        // the cached round layout assumed clean features
+        *self.plan_cache.get_mut() = None;
+        Ok(())
+    }
+
+    /// Materialize the feature matrix the engine is serving from
+    /// (oracle/debug path — allocates; gathers through the backend).
+    pub fn features_dense(&mut self) -> Result<Mat> {
+        self.features.to_mat()
     }
 
     /// Offline engine answering for every node (the single-leader
@@ -526,6 +604,12 @@ impl IncrementalEngine {
         let capacity = self.state.capacity;
         let sparse = self.gather_mode().lowers_sparse();
         self.last_dma = (0, 0);
+        // the layer-0 ring (frontier + halo imports) is known before any
+        // tile runs: hand it to the storage tier so a paged backend can
+        // read the pages while the norm gather and tile binding proceed
+        if let Some(l0) = plan.layers.first() {
+            self.features.stage(&l0.ring);
+        }
         for l in 0..self.num_layers() {
             let lr = &plan.layers[l];
             if !lr.stale.is_empty() {
@@ -539,7 +623,9 @@ impl IncrementalEngine {
             let ring_cap = tile.ring;
             let hbuf = tile.binding_mut("h_ring")?;
             if l == 0 {
-                kernels::gather_rows(&self.x_pad.data, spec.in_w, &lr.ring, hbuf);
+                self.features
+                    .gather(&lr.ring, &mut hbuf[..lr.ring.len() * spec.in_w])
+                    .context("layer-0 feature gather")?;
             } else {
                 let stale = self.cache.gather(l - 1, &lr.ring, hbuf);
                 if stale > 0 {
@@ -592,7 +678,7 @@ impl IncrementalEngine {
         Ok(())
     }
 
-    fn round_accounting(&self, plan: &RoundPlan) -> RoundStats {
+    fn round_accounting(&self, plan: &RoundPlan, storage: StorageStats) -> RoundStats {
         let eligible = self.owned_active().len();
         let (dma_bytes_dense, dma_bytes_shipped) = self.last_dma;
         match plan.mode {
@@ -604,6 +690,9 @@ impl IncrementalEngine {
                 cache_misses: 0,
                 dma_bytes_dense,
                 dma_bytes_shipped,
+                page_hits: storage.hits,
+                page_faults: storage.faults,
+                storage_bytes_read: storage.bytes_read,
                 ..Default::default()
             },
             RoundMode::Full | RoundMode::Incremental => {
@@ -628,6 +717,9 @@ impl IncrementalEngine {
                     cache_misses: misses,
                     dma_bytes_dense,
                     dma_bytes_shipped,
+                    page_hits: storage.hits,
+                    page_faults: storage.faults,
+                    storage_bytes_read: storage.bytes_read,
                     ..Default::default()
                 }
             }
@@ -736,6 +828,10 @@ impl InferenceEngine for IncrementalEngine {
             }
             Update::AddNode => {
                 let id = self.state.add_node()?;
+                // the activated row must never serve a stale cached
+                // feature page (pre-built stores may carry non-zero
+                // padding rows that a cache warmed before activation)
+                self.features.invalidate_rows(&[id]);
                 self.frontier.get_mut().note(update, Some(id));
             }
         }
@@ -762,7 +858,8 @@ impl InferenceEngine for IncrementalEngine {
                 self.seeded = true;
             }
         }
-        self.last_stats = Some(self.round_accounting(&plan));
+        let storage = self.features.take_stats();
+        self.last_stats = Some(self.round_accounting(&plan, storage));
         self.rounds += 1;
 
         // serve from the cache: active rows, zeros outside this shard's
@@ -834,7 +931,8 @@ mod tests {
 
     /// Reference logits via the full-graph oracle at the engine's exact
     /// bindings (same synthesized weights, snapshot-rebuilt norm).
-    fn oracle(eng: &IncrementalEngine) -> Mat {
+    fn oracle(eng: &mut IncrementalEngine) -> Mat {
+        let x = eng.features_dense().unwrap();
         let cap = eng.state.capacity;
         let ds = &eng.state.dataset;
         let classes = eng.layers.last().unwrap().out_w;
@@ -851,7 +949,7 @@ mod tests {
                 &eng.state.snapshot_graph().norm_adjacency(cap),
             ),
         );
-        b.insert("x".into(), crate::tensor::Tensor::from_mat(&eng.x_pad));
+        b.insert("x".into(), crate::tensor::Tensor::from_mat(&x));
         let full = exec::execute_mat(&g, &b).unwrap();
         let n = eng.active();
         Mat::from_fn(n, full.cols, |i, j| full[(i, j)])
@@ -871,7 +969,7 @@ mod tests {
         assert_eq!(rs.recomputed_rows, 0, "no churn → pure cache serve");
         assert_eq!(rs.cache_hits, 40);
         assert_eq!(a, b, "cached round must reproduce the full round");
-        let want = oracle(&eng);
+        let want = oracle(&mut eng);
         assert!(want.max_abs_diff(&a) < 1e-4, "drift {}", want.max_abs_diff(&a));
     }
 
@@ -893,7 +991,7 @@ mod tests {
         assert!(rs.recomputed_rows > 0);
         assert!(rs.frontier > 0 && rs.frontier < 40);
         assert!(rs.cache_hits > 0, "untouched rows must serve from cache");
-        let want = oracle(&eng);
+        let want = oracle(&mut eng);
         assert!(want.max_abs_diff(&got) < 1e-4, "drift {}", want.max_abs_diff(&got));
     }
 
@@ -907,7 +1005,7 @@ mod tests {
         eng.apply(&Update::AddEdge(40, 3)).unwrap();
         let got = eng.infer().unwrap();
         assert_eq!(got.rows, 41);
-        let want = oracle(&eng);
+        let want = oracle(&mut eng);
         assert!(want.max_abs_diff(&got) < 1e-4);
     }
 
@@ -925,7 +1023,7 @@ mod tests {
         let got = eng.infer().unwrap();
         let rs = eng.round_stats().unwrap();
         assert_eq!(rs.recomputed_rows, 40, "margin 0 must force full recompute");
-        let want = oracle(&eng);
+        let want = oracle(&mut eng);
         assert!(want.max_abs_diff(&got) < 1e-4);
     }
 
@@ -1031,7 +1129,7 @@ mod tests {
         let rd = dense.round_stats().unwrap();
         assert_eq!(rd.dma_bytes_shipped, rd.dma_bytes_dense, "dense ships dense");
         // oracle agreement after churn
-        let want = oracle(&sparse);
+        let want = oracle(&mut sparse);
         assert!(want.max_abs_diff(&a) < 1e-4, "drift {}", want.max_abs_diff(&a));
     }
 

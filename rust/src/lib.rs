@@ -33,6 +33,7 @@
 //! | [`quant`] | QuantGr: symmetric static INT8 |
 //! | [`coordinator`] | GraphSplit partitioner, planner, executor, batcher, CacheG |
 //! | [`runtime`] | PJRT client, artifact registry, `.gnnt` IO |
+//! | [`storage`] | out-of-core features: paged `.gnnt`-compatible store, TinyLFU-admission page cache with epoch invalidation, frontier-driven prefetch, all behind [`storage::FeatureSource`] |
 //! | [`serve`] | **the serving front door**: [`serve::DeploymentSpec`] + [`serve::Deployment`] + the object-safe [`serve::Serving`] trait + the engine registry |
 //! | [`server`] | the single-leader worker loop (the 1-shard [`serve::Serving`] topology) |
 //! | [`fleet`] | sharded multi-device serving: placement, halo exchange, routing, admission (the N-shard topology) |
@@ -123,6 +124,7 @@ pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod server;
+pub mod storage;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

@@ -256,6 +256,10 @@ one deployment spec:
   --aggregation dense|sparse|auto    --quant    --capacity N
   --max-pending N    per-shard admission bound (0 = unbounded)
   --events N --query-ratio Q         workload shape
+  [storage] in the spec picks the feature tier: backend = "memory"
+                     (default, fully resident) or "paged" (file-backed
+                     store + admission-controlled page cache; engine
+                     "incremental" only — see examples/specs/paged_10m.toml)
 
 common options: --dataset cora|citeseer  --hw series1|series2|cpu|gpu
                 --artifacts DIR
@@ -426,7 +430,7 @@ fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
     let mut pt = Table::new(
         "per-shard serving metrics",
         &["shard", "queries", "rejected", "p50", "p99", "halo bytes",
-          "recompute", "cache hit"],
+          "recompute", "cache hit", "pg hit"],
     );
     for snap in serving.shard_metrics() {
         let (p50, p99) = snap
@@ -442,6 +446,11 @@ fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
         } else {
             ("n/a".into(), "n/a".into())
         };
+        let pg = if snap.page_hits + snap.page_faults > 0 {
+            format!("{:.3}", snap.feature_cache_hit_rate())
+        } else {
+            "n/a".into()
+        };
         pt.row(&[
             snap.shard.map(|s| format!("#{s}")).unwrap_or_default(),
             snap.queries.to_string(),
@@ -451,6 +460,7 @@ fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
             grannite::util::human_bytes(snap.halo_bytes),
             recomp,
             hit,
+            pg,
         ]);
     }
     pt.print();
@@ -483,6 +493,15 @@ fn serving_demo(spec: &DeploymentSpec, data: &grannite::serve::DataSource,
              frontier mean/max {fr}",
             totals.recompute_ratio(),
             totals.cache_hit_rate()
+        );
+    }
+    if totals.page_hits + totals.page_faults > 0 {
+        println!(
+            "storage: feature-cache hit rate {:.3}  page faults {}  \
+             disk read {}",
+            totals.feature_cache_hit_rate(),
+            totals.page_faults,
+            grannite::util::human_bytes(totals.storage_bytes_read as usize)
         );
     }
     println!("applied version vector: {:?}", serving.sync()?);
@@ -723,6 +742,18 @@ fn top_demo(spec: &DeploymentSpec, ds: &grannite::graph::datasets::Dataset,
         std::thread::sleep(interval);
         monitor.sample_now();
         render_top(&monitor, tick, ticks);
+        // out-of-core footer (merged snapshot, exact counters): only
+        // paged deployments report feature-store traffic
+        let totals = serving.metrics();
+        if totals.page_hits + totals.page_faults > 0 {
+            println!(
+                "storage: feature-cache hit rate {:.3}  page faults {}  \
+                 disk read {}",
+                totals.feature_cache_hit_rate(),
+                totals.page_faults,
+                grannite::util::human_bytes(totals.storage_bytes_read as usize)
+            );
+        }
     }
     serving.shutdown()?;
     Ok(())

@@ -66,6 +66,15 @@ pub struct RoundStats {
     /// [`RoundStats::STRATEGY_PLAN`] / [`RoundStats::STRATEGY_INCREMENTAL`]
     /// from the adaptive `auto` engine.
     pub active_strategy: u8,
+    /// Feature-store page lookups served from the page cache this round
+    /// (0 for in-memory feature sources — see [`crate::storage`]).
+    pub page_hits: u64,
+    /// Feature-store page lookups that missed the cache (each one is a
+    /// disk read, foreground or drained from the prefetcher).
+    pub page_faults: u64,
+    /// Bytes the paged feature store read from disk this round
+    /// (foreground misses plus background prefetch reads).
+    pub storage_bytes_read: u64,
 }
 
 impl RoundStats {
@@ -94,7 +103,8 @@ impl RoundStats {
             "{{\"recomputed_rows\":{},\"eligible_rows\":{},\"frontier\":{},\
              \"cache_hits\":{},\"cache_misses\":{},\"dma_bytes_dense\":{},\
              \"dma_bytes_shipped\":{},\"engine_switches\":{},\
-             \"active_strategy\":{}}}",
+             \"active_strategy\":{},\"page_hits\":{},\"page_faults\":{},\
+             \"storage_bytes_read\":{}}}",
             self.recomputed_rows,
             self.eligible_rows,
             self.frontier,
@@ -104,6 +114,9 @@ impl RoundStats {
             self.dma_bytes_shipped,
             self.engine_switches,
             self.active_strategy,
+            self.page_hits,
+            self.page_faults,
+            self.storage_bytes_read,
         )
     }
 }
@@ -136,6 +149,10 @@ struct Inner {
     /// Adaptive-engine accounting (the `auto` engine's strategy gauges).
     engine_switches: usize,
     active_strategy: u8,
+    /// Out-of-core feature-store accounting (paged sources only).
+    page_hits: u64,
+    page_faults: u64,
+    storage_bytes_read: u64,
     started: Option<Instant>,
 }
 
@@ -164,6 +181,9 @@ impl Default for Inner {
             dma_bytes_shipped: 0,
             engine_switches: 0,
             active_strategy: RoundStats::STRATEGY_STATIC,
+            page_hits: 0,
+            page_faults: 0,
+            storage_bytes_read: 0,
             started: None,
         }
     }
@@ -198,6 +218,15 @@ pub struct Snapshot {
     /// Bytes actually shipped (CSR / ZVC / SymG-packed); see
     /// [`Snapshot::dma_bytes_saved`].
     pub dma_bytes_shipped: usize,
+    /// Feature-store page lookups served from the page cache (0 for
+    /// in-memory sources; see [`Snapshot::feature_cache_hit_rate`]).
+    pub page_hits: u64,
+    /// Feature-store page lookups that went to disk (plain counter —
+    /// sums exactly through [`Metrics::merged`] and [`Snapshot::merge`]).
+    pub page_faults: u64,
+    /// Bytes the paged feature store read from disk (foreground misses
+    /// plus background prefetch).
+    pub storage_bytes_read: u64,
     /// Strategy switches the adaptive `auto` engine performed (plain
     /// counter — sums exactly through [`Metrics::merged`] and
     /// [`Snapshot::merge`]).
@@ -268,6 +297,9 @@ impl Metrics {
         i.cache_row_misses += rs.cache_misses;
         i.dma_bytes_dense += rs.dma_bytes_dense;
         i.dma_bytes_shipped += rs.dma_bytes_shipped;
+        i.page_hits += rs.page_hits;
+        i.page_faults += rs.page_faults;
+        i.storage_bytes_read += rs.storage_bytes_read;
         i.engine_switches += rs.engine_switches;
         if rs.active_strategy != RoundStats::STRATEGY_STATIC {
             i.active_strategy = rs.active_strategy;
@@ -302,6 +334,9 @@ impl Metrics {
             cache_row_misses: i.cache_row_misses,
             dma_bytes_dense: i.dma_bytes_dense,
             dma_bytes_shipped: i.dma_bytes_shipped,
+            page_hits: i.page_hits,
+            page_faults: i.page_faults,
+            storage_bytes_read: i.storage_bytes_read,
             engine_switches: i.engine_switches,
             active_strategy: RoundStats::strategy_name(i.active_strategy)
                 .map(str::to_string),
@@ -338,6 +373,7 @@ impl Metrics {
         let (mut recomputed, mut eligible) = (0usize, 0usize);
         let (mut row_hits, mut row_misses) = (0usize, 0usize);
         let (mut dma_dense, mut dma_shipped) = (0usize, 0usize);
+        let (mut pg_hits, mut pg_faults, mut st_bytes) = (0u64, 0u64, 0u64);
         let mut switches = 0usize;
         let mut strategy: Option<String> = None;
         let mut elapsed = 1e-9f64;
@@ -359,6 +395,9 @@ impl Metrics {
             row_misses += i.cache_row_misses;
             dma_dense += i.dma_bytes_dense;
             dma_shipped += i.dma_bytes_shipped;
+            pg_hits += i.page_hits;
+            pg_faults += i.page_faults;
+            st_bytes += i.storage_bytes_read;
             switches += i.engine_switches;
             strategy = combine_strategy(
                 strategy.as_deref(),
@@ -382,6 +421,9 @@ impl Metrics {
             cache_row_misses: row_misses,
             dma_bytes_dense: dma_dense,
             dma_bytes_shipped: dma_shipped,
+            page_hits: pg_hits,
+            page_faults: pg_faults,
+            storage_bytes_read: st_bytes,
             engine_switches: switches,
             active_strategy: strategy,
             frontier: reservoir::merged_stats(&frontiers.iter().collect::<Vec<_>>()),
@@ -449,6 +491,20 @@ impl Snapshot {
         }
     }
 
+    /// Fraction of feature-store page lookups served from the page
+    /// cache (0 when no paged source reported — in-memory deployments
+    /// read 0, not 1.0, so dashboards can tell "no disk tier" from
+    /// "perfectly warm"). Exact through [`Metrics::merged`] and
+    /// [`Snapshot::merge`]: both sides are plain counters.
+    pub fn feature_cache_hit_rate(&self) -> f64 {
+        let total = self.page_hits + self.page_faults;
+        if total == 0 {
+            0.0
+        } else {
+            self.page_hits as f64 / total as f64
+        }
+    }
+
     /// DMA bytes the sparse/compressed aggregation operands saved vs
     /// shipping dense masks — the GraSp (ZVC) + SymG + CSR win as a real
     /// per-shard gauge (exact through [`Metrics::merged`]: both sides
@@ -488,6 +544,10 @@ impl Snapshot {
         out.push_str(&format!(
             ",\"dma_bytes_dense\":{},\"dma_bytes_shipped\":{}",
             self.dma_bytes_dense, self.dma_bytes_shipped
+        ));
+        out.push_str(&format!(
+            ",\"page_hits\":{},\"page_faults\":{},\"storage_bytes_read\":{}",
+            self.page_hits, self.page_faults, self.storage_bytes_read
         ));
         out.push_str(&format!(
             ",\"engine_switches\":{},\"active_strategy\":{}",
@@ -535,6 +595,9 @@ impl Snapshot {
             cache_row_misses: self.cache_row_misses + other.cache_row_misses,
             dma_bytes_dense: self.dma_bytes_dense + other.dma_bytes_dense,
             dma_bytes_shipped: self.dma_bytes_shipped + other.dma_bytes_shipped,
+            page_hits: self.page_hits + other.page_hits,
+            page_faults: self.page_faults + other.page_faults,
+            storage_bytes_read: self.storage_bytes_read + other.storage_bytes_read,
             engine_switches: self.engine_switches + other.engine_switches,
             active_strategy: combine_strategy(
                 self.active_strategy.as_deref(),
@@ -969,6 +1032,9 @@ mod tests {
             dma_bytes_shipped: 10,
             engine_switches: 1,
             active_strategy: RoundStats::STRATEGY_INCREMENTAL,
+            page_hits: 7,
+            page_faults: 2,
+            storage_bytes_read: 4096,
         }
         .to_json();
         assert_eq!(
@@ -976,8 +1042,42 @@ mod tests {
             "{\"recomputed_rows\":3,\"eligible_rows\":9,\"frontier\":2,\
              \"cache_hits\":5,\"cache_misses\":4,\"dma_bytes_dense\":100,\
              \"dma_bytes_shipped\":10,\"engine_switches\":1,\
-             \"active_strategy\":2}"
+             \"active_strategy\":2,\"page_hits\":7,\"page_faults\":2,\
+             \"storage_bytes_read\":4096}"
         );
+    }
+
+    #[test]
+    fn storage_gauges_exact_through_merged_and_merge() {
+        let a = Metrics::new_shard(0);
+        let b = Metrics::new_shard(1);
+        // shard 0: a cold round (8 faults) then a warm one (8 hits)
+        a.record_round(&RoundStats {
+            page_faults: 8,
+            storage_bytes_read: 8 * 64 * 4,
+            ..Default::default()
+        });
+        a.record_round(&RoundStats { page_hits: 8, ..Default::default() });
+        // shard 1: in-memory source — reports nothing
+        b.record_round(&RoundStats::default());
+        let sa = a.snapshot();
+        assert_eq!(sa.page_hits, 8);
+        assert_eq!(sa.page_faults, 8);
+        assert_eq!(sa.storage_bytes_read, 2048);
+        assert!((sa.feature_cache_hit_rate() - 0.5).abs() < 1e-12);
+        // "no disk tier" reads 0, not a perfect hit rate
+        assert_eq!(b.snapshot().feature_cache_hit_rate(), 0.0);
+        let merged = Metrics::merged([&a, &b]);
+        assert_eq!(merged.page_hits, 8);
+        assert_eq!(merged.page_faults, 8);
+        assert_eq!(merged.storage_bytes_read, 2048);
+        // aggregate-level merge keeps the counters exact too
+        let coarse = a.snapshot().merge(&b.snapshot());
+        assert_eq!(coarse.page_faults, 8);
+        assert!((coarse.feature_cache_hit_rate() - 0.5).abs() < 1e-12);
+        let j = merged.to_json();
+        assert!(j.contains("\"page_hits\":8"), "{j}");
+        assert!(j.contains("\"storage_bytes_read\":2048"), "{j}");
     }
 
     #[test]

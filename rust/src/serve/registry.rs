@@ -27,6 +27,7 @@ use crate::incremental::{IncrementalConfig, IncrementalEngine};
 use crate::ops::build::Aggregation;
 use crate::serve::spec::{dense_mask_bytes, DeploymentSpec, DENSE_MASK_BUDGET_BYTES};
 use crate::server::{CoordinatorEngine, InferenceEngine};
+use crate::storage::{spill_path, PagedFeatures, PagedStore};
 
 /// A shard engine behind the registry: the object-safe form every
 /// factory produces (`impl InferenceEngine for Box<dyn InferenceEngine>`
@@ -215,6 +216,60 @@ fn shard_pool(parallel: bool) -> Arc<WorkerPool> {
     Arc::new(if parallel { WorkerPool::default_parallel() } else { WorkerPool::serial() })
 }
 
+/// Engines that bind the full `x_pad` feature matrix into a compiled
+/// plan cannot serve from a page cache — reject `[storage] backend =
+/// "paged"` at validation with a pointer at the engine that can.
+fn check_memory_backend(engine: &str, spec: &DeploymentSpec) -> Result<()> {
+    if spec.storage.is_paged() {
+        bail!(
+            "engine {engine:?} binds the full feature matrix into its \
+             compiled plan and cannot serve [storage] backend = \"paged\" \
+             — use engine \"incremental\" (its layer-0 gather reads \
+             through the page cache), or backend = \"memory\""
+        );
+    }
+    Ok(())
+}
+
+/// Resolve `[storage]` for a paged launch: open the named store file
+/// (validating its geometry against the launched dataset), or spill the
+/// dataset's features to a temp store deleted when the last shard drops
+/// its handle.
+fn open_or_spill_store(ctx: &LaunchContext) -> Result<Arc<PagedStore>> {
+    let st = &ctx.spec.storage;
+    let width = ctx.dataset.num_features();
+    if st.path.is_empty() {
+        let path = spill_path(&format!("{}-features", ctx.dataset.name));
+        let mut store =
+            PagedStore::create_from_mat(&path, &ctx.dataset.features, ctx.capacity)?;
+        store.set_delete_on_drop(true);
+        Ok(Arc::new(store))
+    } else {
+        let store = PagedStore::open(std::path::Path::new(&st.path))?;
+        if store.width() != width {
+            bail!(
+                "[storage] path {:?} holds {}-wide feature rows but the \
+                 launched dataset has {} features — rebuild the store from \
+                 this dataset (PagedStore::create_from_mat) or fix the path",
+                st.path,
+                store.width(),
+                width
+            );
+        }
+        if store.rows() < ctx.capacity {
+            bail!(
+                "[storage] path {:?} holds {} rows but the deployment's \
+                 NodePad capacity is {} — rebuild the store at ≥ capacity \
+                 rows (GrAd node adds write into the padding region)",
+                st.path,
+                store.rows(),
+                ctx.capacity
+            );
+        }
+        Ok(Arc::new(store))
+    }
+}
+
 /// Engines with a closed option set reject anything else — the spec
 /// layer's "a typo'd knob must not silently become a default" contract,
 /// enforced uniformly across factories. A near-miss (edit distance ≤ 2,
@@ -271,6 +326,7 @@ impl EngineFactory for LocalFactory {
 
     fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
         check_offline_model("local", spec)?;
+        check_memory_backend("local", spec)?;
         check_known_options("local", spec, &[])?;
         if spec.quant {
             bail!(
@@ -312,6 +368,7 @@ impl EngineFactory for PlanFactory {
 
     fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
         check_offline_model("plan", spec)?;
+        check_memory_backend("plan", spec)?;
         check_known_options("plan", spec, &[])?;
         serving_kernel_config("plan", spec)?;
         check_dense_budget("plan", spec.aggregation, spec.capacity)
@@ -398,6 +455,20 @@ impl EngineFactory for IncrementalFactory {
             resolve_aggregation(cfg.aggregation, ctx.dataset, ctx.capacity),
             ctx.capacity,
         )?;
+        if ctx.spec.storage.is_paged() {
+            // one store file, one Arc'd pread handle; every shard gets a
+            // private page cache + prefetcher over it
+            let store = open_or_spill_store(ctx)?;
+            return Ok(incremental_paged_shards(
+                ctx.dataset,
+                ctx.capacity,
+                cfg,
+                ctx.parallel_pool(),
+                store,
+                ctx.spec.storage.page_rows,
+                ctx.spec.storage.cache_pages,
+            ));
+        }
         Ok(incremental_shards(ctx.dataset, ctx.capacity, cfg, ctx.parallel_pool()))
     }
 }
@@ -447,6 +518,35 @@ pub(crate) fn incremental_shards(
     })
 }
 
+/// Per-shard [`IncrementalEngine`] constructors reading features
+/// through a shared [`PagedStore`]: the shards share the file handle
+/// (`pread` needs no lock), not the cache — each shard's admission
+/// frequencies track its own owned region.
+pub(crate) fn incremental_paged_shards(
+    ds: &Dataset,
+    capacity: usize,
+    cfg: IncrementalConfig,
+    parallel: bool,
+    store: Arc<PagedStore>,
+    page_rows: usize,
+    cache_pages: usize,
+) -> ShardFactory {
+    let ds = ds.clone();
+    Box::new(move |spec: &ShardSpec| {
+        let ds = ds.clone();
+        let owned = spec.nodes.clone();
+        let store = Arc::clone(&store);
+        Box::new(move || {
+            let pool = shard_pool(parallel);
+            let features =
+                Box::new(PagedFeatures::new(store, page_rows, cache_pages).with_prefetch());
+            Ok(Box::new(IncrementalEngine::shard_with_source(
+                &ds, capacity, owned, pool, cfg, features,
+            )?) as BoxedEngine)
+        })
+    })
+}
+
 // ---------------------------------------------------------------------------
 // auto — runtime-adaptive plan/incremental switcher
 // ---------------------------------------------------------------------------
@@ -460,6 +560,7 @@ impl EngineFactory for AutoFactory {
 
     fn validate(&self, spec: &DeploymentSpec) -> Result<()> {
         check_offline_model("auto", spec)?;
+        check_memory_backend("auto", spec)?;
         check_dense_budget("auto", spec.aggregation, spec.capacity)?;
         if spec.quant {
             bail!(
@@ -543,6 +644,7 @@ impl EngineFactory for CoordinatorFactory {
                  artifact instead of setting quant = true"
             );
         }
+        check_memory_backend("coordinator", spec)?;
         check_known_options("coordinator", spec, self.options())?;
         if let Some(v) = spec.engine.options.get("artifact") {
             if v.as_str().is_none() {

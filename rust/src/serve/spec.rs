@@ -363,6 +363,64 @@ impl Default for TuningSpec {
     }
 }
 
+/// Out-of-core feature storage (`[storage]` in TOML): where a shard's
+/// node features live and how much of them stay resident.
+///
+/// `backend = "memory"` (the default) keeps the NodePad-padded feature
+/// matrix in RAM exactly as before. `backend = "paged"` puts it in a
+/// page-aligned `.gnnt`-compatible file (see [`crate::storage`]) and
+/// serves gathers through a fixed-capacity page cache with TinyLFU
+/// admission — resident footprint becomes `cache_pages × page_rows ×
+/// features × 4` bytes instead of `capacity × features × 4`, which is
+/// what lets a 10M-node graph serve inside single-digit-GiB RAM.
+/// Currently the `incremental` engine is the paged consumer; engines
+/// that materialize the full feature matrix reject `"paged"` at
+/// validation with a pointer here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageSpec {
+    /// `"memory"` (resident feature matrix) or `"paged"` (file-backed
+    /// store behind a page cache).
+    pub backend: String,
+    /// Rows per cache page (read granularity, not a file property —
+    /// the same store file serves any `page_rows`).
+    pub page_rows: usize,
+    /// Page-cache capacity **per shard**, in pages.
+    pub cache_pages: usize,
+    /// Pre-built store file to open (`""` = spill the launched
+    /// dataset's features to a temp store, deleted on shutdown). Lets
+    /// 10M-node deployments launch from a headless dataset whose
+    /// features exist only on disk.
+    pub path: String,
+}
+
+impl StorageSpec {
+    /// Is the file-backed paged tier selected?
+    pub fn is_paged(&self) -> bool {
+        self.backend == "paged"
+    }
+
+    /// Resident page-cache bytes per shard this spec allows for a
+    /// `width`-column feature matrix (the sizing number README's
+    /// guidance is written around).
+    pub fn cache_bytes(&self, width: usize) -> usize {
+        self.cache_pages
+            .saturating_mul(self.page_rows)
+            .saturating_mul(width)
+            .saturating_mul(4)
+    }
+}
+
+impl Default for StorageSpec {
+    fn default() -> Self {
+        StorageSpec {
+            backend: "memory".to_string(),
+            page_rows: 64,
+            cache_pages: 1024,
+            path: String::new(),
+        }
+    }
+}
+
 /// Kernel-layer knobs (`[kernels]` in TOML): which microkernel paths the
 /// engines dispatch and how sparse rows are scheduled across lanes.
 /// Strings are kept verbatim here and only lowered (and therefore
@@ -462,6 +520,8 @@ pub struct DeploymentSpec {
     pub monitor: MonitorSpec,
     /// Autotuner probes/objective + `auto` engine switching bands.
     pub tuning: TuningSpec,
+    /// Feature-storage tier: resident matrix or paged file-backed store.
+    pub storage: StorageSpec,
 }
 
 impl Default for DeploymentSpec {
@@ -480,6 +540,7 @@ impl Default for DeploymentSpec {
             slo: SloSpec::default(),
             monitor: MonitorSpec::default(),
             tuning: TuningSpec::default(),
+            storage: StorageSpec::default(),
         }
     }
 }
@@ -512,14 +573,15 @@ impl DeploymentSpec {
             "slo",
             "monitor",
             "tuning",
+            "storage",
         ];
         for section in doc.section_names() {
             if !SECTIONS.contains(&section) {
                 bail!(
                     "unknown section [{section}] — a deployment spec has \
                      [engine], [kernels], [topology], [batch], [admission], \
-                     [telemetry], [slo], [monitor], [tuning] and the \
-                     top-level keys model, capacity, aggregation, quant"
+                     [telemetry], [slo], [monitor], [tuning], [storage] and \
+                     the top-level keys model, capacity, aggregation, quant"
                 );
             }
         }
@@ -725,6 +787,26 @@ impl DeploymentSpec {
             }
         }
 
+        if let Some(_table) = doc.section("storage") {
+            check_keys(
+                doc,
+                "storage",
+                &["backend", "page_rows", "cache_pages", "path"],
+            )?;
+            if let Some(v) = doc.get("storage", "backend") {
+                spec.storage.backend = str_of(v, "storage", "backend")?.to_string();
+            }
+            if let Some(v) = doc.get("storage", "page_rows") {
+                spec.storage.page_rows = usize_of(v, "storage", "page_rows")?;
+            }
+            if let Some(v) = doc.get("storage", "cache_pages") {
+                spec.storage.cache_pages = usize_of(v, "storage", "cache_pages")?;
+            }
+            if let Some(v) = doc.get("storage", "path") {
+                spec.storage.path = str_of(v, "storage", "path")?.to_string();
+            }
+        }
+
         Ok(spec)
     }
 
@@ -810,6 +892,11 @@ impl DeploymentSpec {
             "cooldown_rounds = {}\n",
             self.tuning.cooldown_rounds
         ));
+        out.push_str("\n[storage]\n");
+        out.push_str(&format!("backend = \"{}\"\n", self.storage.backend));
+        out.push_str(&format!("page_rows = {}\n", self.storage.page_rows));
+        out.push_str(&format!("cache_pages = {}\n", self.storage.cache_pages));
+        out.push_str(&format!("path = \"{}\"\n", self.storage.path));
         out
     }
 
@@ -962,6 +1049,35 @@ impl DeploymentSpec {
                 "tuning hysteresis band must satisfy 0 ≤ hysteresis_low < \
                  hysteresis_high (got low = {lo}, high = {hi}) — the gap is \
                  the dead band that keeps the auto engine from flapping"
+            );
+        }
+        if !matches!(self.storage.backend.as_str(), "memory" | "paged") {
+            bail!(
+                "storage.backend must be \"memory\" (resident feature \
+                 matrix) or \"paged\" (file-backed page cache), got {:?}",
+                self.storage.backend
+            );
+        }
+        if self.storage.page_rows == 0 {
+            bail!(
+                "storage.page_rows must be ≥ 1 (got 0) — it is the rows-per-\
+                 page read granularity; 64 rows is a good default"
+            );
+        }
+        if self.storage.cache_pages == 0 {
+            bail!(
+                "storage.cache_pages must be ≥ 1 (got 0) — a zero-page cache \
+                 cannot serve a gather; use backend = \"memory\" to keep \
+                 features fully resident instead"
+            );
+        }
+        quote_free("[storage] path", &self.storage.path)?;
+        if !self.storage.path.is_empty() && !self.storage.is_paged() {
+            bail!(
+                "storage.path {:?} is set but storage.backend is \
+                 \"memory\" — a store file is only read by the paged \
+                 backend; set backend = \"paged\" or drop the path",
+                self.storage.path
             );
         }
         Ok(())
@@ -1152,6 +1268,35 @@ mod tests {
             .with_option("artifact", Value::Str("a'b".into()));
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("quote"), "{err}");
+    }
+
+    #[test]
+    fn storage_section_parses_and_validates() {
+        let spec = DeploymentSpec::parse_toml(
+            "[storage]\nbackend = \"paged\"\npage_rows = 16\n\
+             cache_pages = 8\npath = \"/tmp/feat.gnnt\"",
+        )
+        .unwrap();
+        assert!(spec.storage.is_paged());
+        assert_eq!(spec.storage.page_rows, 16);
+        assert_eq!(spec.storage.cache_bytes(10), 8 * 16 * 10 * 4);
+        spec.validate().unwrap();
+
+        let mut bad = DeploymentSpec::default();
+        bad.storage.backend = "disk".into();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("\"paged\""), "{err}");
+
+        let mut bad = DeploymentSpec::default();
+        bad.storage.path = "feat.gnnt".into();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("backend"), "{err}");
+
+        let mut bad = DeploymentSpec::default();
+        bad.storage.backend = "paged".into();
+        bad.storage.cache_pages = 0;
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("cache_pages"), "{err}");
     }
 
     #[test]

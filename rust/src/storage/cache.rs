@@ -1,0 +1,397 @@
+//! `cache` — fixed-capacity page cache with TinyLFU-lite admission and
+//! epoch-versioned invalidation.
+//!
+//! CacheG generalized to the storage tier: where `incremental::cache`
+//! versions *activation rows*, this caches *feature pages* (runs of
+//! `page_rows` contiguous rows) under the same epoch scheme — a slot is
+//! valid iff its stamp equals the cache epoch, `invalidate_all` is an
+//! O(1) epoch bump, and precise invalidation stamps single slots to 0
+//! (the never-valid epoch), so GrAd feature churn drops exactly the
+//! dirtied pages and nothing else.
+//!
+//! Admission is TinyLFU-lite: a 4-row count-min sketch of page access
+//! frequencies gates every fill. A missed page only displaces the clock
+//! victim when its estimated frequency is at least the victim's —
+//! one-touch scan pages cannot wash a hot working set out of a small
+//! cache (the classic LRU burst-pollution failure). Rejected fills are
+//! not errors: the caller reads around the cache and correctness is
+//! unaffected.
+//!
+//! Every post-construction operation is allocation-free — the warm-hit
+//! path (lookup + row copy) is on the zero-steady-state-allocation
+//! contract `tests/plan_alloc.rs` enforces.
+
+/// Empty/invalid sentinel for slot↔page maps.
+const EMPTY: u32 = u32::MAX;
+
+/// TinyLFU-lite frequency sketch: 4 hash rows of saturating 8-bit
+/// counters, halved every `sample` touches so stale popularity decays.
+#[derive(Debug)]
+pub struct FreqSketch {
+    counters: Vec<u8>,
+    mask: u64,
+    touches: u64,
+    sample: u64,
+}
+
+/// splitmix64 — cheap, well-mixed stateless hash for sketch rows.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+const ROW_SALTS: [u64; 4] = [0xA11C_E001, 0xA11C_E002, 0xA11C_E003, 0xA11C_E004];
+
+impl FreqSketch {
+    /// Sketch sized for `slots` cache entries (≥ 8× slots counters per
+    /// row, power of two for mask indexing).
+    pub fn new(slots: usize) -> FreqSketch {
+        let w = (slots.max(8) * 8).next_power_of_two();
+        FreqSketch {
+            counters: vec![0; w * 4],
+            mask: (w - 1) as u64,
+            touches: 0,
+            // decay period ≈ 8 accesses per counter column, the
+            // TinyLFU "sample size" that keeps estimates fresh
+            sample: (w as u64) * 8,
+        }
+    }
+
+    /// Record one access to `key`.
+    pub fn touch(&mut self, key: u64) {
+        let w = (self.mask + 1) as usize;
+        for (row, salt) in ROW_SALTS.iter().enumerate() {
+            let idx = row * w + (mix(key ^ salt) & self.mask) as usize;
+            self.counters[idx] = self.counters[idx].saturating_add(1);
+        }
+        self.touches += 1;
+        if self.touches >= self.sample {
+            self.touches = 0;
+            for c in &mut self.counters {
+                *c >>= 1;
+            }
+        }
+    }
+
+    /// Estimated access count (count-min: min over the hash rows).
+    pub fn estimate(&self, key: u64) -> u8 {
+        let w = (self.mask + 1) as usize;
+        ROW_SALTS
+            .iter()
+            .enumerate()
+            .map(|(row, salt)| self.counters[row * w + (mix(key ^ salt) & self.mask) as usize])
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// Fixed-capacity feature-page cache (see the module docs).
+///
+/// Geometry: the backing matrix has `num_rows × width` entries split
+/// into `⌈num_rows / page_rows⌉` pages; the cache holds at most `slots`
+/// of them, each in a preallocated arena segment.
+#[derive(Debug)]
+pub struct PageCache {
+    page_rows: usize,
+    width: usize,
+    num_rows: usize,
+    num_pages: usize,
+    slots: usize,
+    /// Page arena: `slots × page_rows × width`.
+    data: Vec<f32>,
+    /// Per slot: cached page id, or [`EMPTY`].
+    slot_page: Vec<u32>,
+    /// Per slot: epoch stamp (valid iff `== epoch`; 0 = never valid).
+    slot_epoch: Vec<u64>,
+    /// Per backing page: owning slot, or [`EMPTY`].
+    page_slot: Vec<u32>,
+    /// Current epoch; starts at 1 so stamp 0 is never valid.
+    epoch: u64,
+    /// Clock hand for victim selection.
+    hand: usize,
+    sketch: FreqSketch,
+}
+
+impl PageCache {
+    /// Cache for a `num_rows × width` backing matrix, `page_rows` rows
+    /// per page, at most `slots` resident pages.
+    pub fn new(num_rows: usize, width: usize, page_rows: usize, slots: usize) -> PageCache {
+        assert!(page_rows > 0, "page_rows must be ≥ 1");
+        assert!(slots > 0, "cache needs ≥ 1 page slot");
+        let num_pages = num_rows.div_ceil(page_rows);
+        let slots = slots.min(num_pages.max(1));
+        PageCache {
+            page_rows,
+            width,
+            num_rows,
+            num_pages,
+            slots,
+            data: vec![0.0; slots * page_rows * width],
+            slot_page: vec![EMPTY; slots],
+            slot_epoch: vec![0; slots],
+            page_slot: vec![EMPTY; num_pages],
+            epoch: 1,
+            hand: 0,
+            sketch: FreqSketch::new(slots),
+        }
+    }
+
+    /// Page holding `row`.
+    #[inline]
+    pub fn page_of(&self, row: usize) -> usize {
+        row / self.page_rows
+    }
+
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Total pages in the backing matrix.
+    pub fn num_pages(&self) -> usize {
+        self.num_pages
+    }
+
+    /// Resident-page capacity.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Currently valid resident pages (test/metrics gauge).
+    pub fn valid_pages(&self) -> usize {
+        (0..self.slots).filter(|&s| self.slot_valid(s)).count()
+    }
+
+    #[inline]
+    fn slot_valid(&self, slot: usize) -> bool {
+        self.slot_epoch[slot] == self.epoch && self.slot_page[slot] != EMPTY
+    }
+
+    /// Record an access for admission purposes (call once per page
+    /// touch, hit or miss).
+    #[inline]
+    pub fn touch(&mut self, page: usize) {
+        self.sketch.touch(page as u64);
+    }
+
+    /// The cached page, if resident and valid: `rows_in_page × width`
+    /// row-major floats. Allocation-free.
+    #[inline]
+    pub fn get(&self, page: usize) -> Option<&[f32]> {
+        let slot = self.page_slot[page];
+        if slot == EMPTY {
+            return None;
+        }
+        let slot = slot as usize;
+        if !self.slot_valid(slot) || self.slot_page[slot] != page as u32 {
+            return None;
+        }
+        let seg = self.page_rows * self.width;
+        Some(&self.data[slot * seg..(slot + 1) * seg])
+    }
+
+    /// One cached feature row, if its page is resident. Allocation-free.
+    #[inline]
+    pub fn row(&self, row: usize) -> Option<&[f32]> {
+        let page = self.page_of(row);
+        let pg = self.get(page)?;
+        let off = (row - page * self.page_rows) * self.width;
+        Some(&pg[off..off + self.width])
+    }
+
+    /// Rows actually present in `page` (the last page may be partial).
+    #[inline]
+    pub fn rows_in_page(&self, page: usize) -> usize {
+        self.page_rows.min(self.num_rows - page * self.page_rows)
+    }
+
+    /// Try to admit `page`, filling its arena segment via `fill`
+    /// (handed `rows_in_page × width` floats). Returns `Ok(false)` when
+    /// the TinyLFU duel rejects the page (caller reads around the
+    /// cache), `Ok(true)` on admission. A failed `fill` leaves the slot
+    /// invalid and propagates the error.
+    pub fn admit<E>(
+        &mut self,
+        page: usize,
+        fill: impl FnOnce(&mut [f32]) -> Result<(), E>,
+    ) -> Result<bool, E> {
+        debug_assert!(page < self.num_pages);
+        let slot = match self.pick_slot(page) {
+            Some(s) => s,
+            None => return Ok(false),
+        };
+        // unmap whatever the slot held; map the new page only when the
+        // fill lands, so an IO error cannot leave a valid garbage slot
+        let old = self.slot_page[slot];
+        if old != EMPTY {
+            self.page_slot[old as usize] = EMPTY;
+        }
+        self.slot_page[slot] = EMPTY;
+        self.slot_epoch[slot] = 0;
+        let seg = self.page_rows * self.width;
+        let live = self.rows_in_page(page) * self.width;
+        fill(&mut self.data[slot * seg..slot * seg + live])?;
+        self.slot_page[slot] = page as u32;
+        self.slot_epoch[slot] = self.epoch;
+        self.page_slot[page] = slot as u32;
+        Ok(true)
+    }
+
+    /// Choose the slot for `page`: a stale/free slot if any, else the
+    /// clock victim — admitted only if the candidate's sketch estimate
+    /// is at least the victim's.
+    fn pick_slot(&mut self, page: usize) -> Option<usize> {
+        // revalidating the page's own (invalidated) slot is free
+        let own = self.page_slot[page];
+        if own != EMPTY {
+            return Some(own as usize);
+        }
+        for i in 0..self.slots {
+            let s = (self.hand + i) % self.slots;
+            if !self.slot_valid(s) {
+                self.hand = (s + 1) % self.slots;
+                return Some(s);
+            }
+        }
+        let victim = self.hand;
+        self.hand = (self.hand + 1) % self.slots;
+        let vpage = self.slot_page[victim] as u64;
+        if self.sketch.estimate(page as u64) >= self.sketch.estimate(vpage) {
+            Some(victim)
+        } else {
+            None
+        }
+    }
+
+    /// Precisely invalidate the pages holding `rows` (GrAd churn: only
+    /// the dirtied pages drop; everything else stays warm).
+    pub fn invalidate_rows(&mut self, rows: &[usize]) {
+        for &row in rows {
+            let page = self.page_of(row);
+            let slot = self.page_slot[page];
+            if slot != EMPTY {
+                self.slot_epoch[slot as usize] = 0;
+            }
+        }
+    }
+
+    /// Drop every resident page at once (epoch bump, O(slots) only via
+    /// the lazy validity checks — no arena writes).
+    pub fn invalidate_all(&mut self) {
+        self.epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fill pattern: row-major value encodes (row, col).
+    fn fill_for(page: usize, page_rows: usize, width: usize) -> Vec<f32> {
+        let mut v = Vec::new();
+        for r in 0..page_rows {
+            for c in 0..width {
+                v.push((page * page_rows + r) as f32 * 100.0 + c as f32);
+            }
+        }
+        v
+    }
+
+    fn admit_ok(c: &mut PageCache, page: usize) -> bool {
+        let want = fill_for(page, c.page_rows(), 3);
+        c.admit::<()>(page, |dst| {
+            dst.copy_from_slice(&want[..dst.len()]);
+            Ok(())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn hit_returns_the_filled_rows_and_partial_last_page_is_short() {
+        let mut c = PageCache::new(10, 3, 4, 2); // pages: 4,4,2 rows
+        assert_eq!(c.num_pages(), 3);
+        c.touch(2);
+        assert!(admit_ok(&mut c, 2), "empty cache must admit");
+        assert_eq!(c.rows_in_page(2), 2);
+        assert_eq!(c.row(9).unwrap(), &[900.0, 901.0, 902.0]);
+        assert!(c.row(0).is_none(), "page 0 never admitted");
+    }
+
+    #[test]
+    fn eviction_is_admission_gated_by_frequency() {
+        let mut c = PageCache::new(16, 3, 4, 2); // 4 pages, 2 slots
+        for _ in 0..5 {
+            c.touch(0);
+            c.touch(1);
+        }
+        assert!(admit_ok(&mut c, 0));
+        assert!(admit_ok(&mut c, 1));
+        // a one-touch page must not displace the hot working set
+        c.touch(2);
+        assert!(!admit_ok(&mut c, 2), "cold page washed out a hot one");
+        assert!(c.get(0).is_some() && c.get(1).is_some());
+        // ...but once it gets hotter than the victim, it wins the duel
+        for _ in 0..9 {
+            c.touch(2);
+        }
+        assert!(admit_ok(&mut c, 2), "hot page must eventually be admitted");
+        assert!(c.get(2).is_some());
+        assert_eq!(c.valid_pages(), 2);
+    }
+
+    #[test]
+    fn invalidate_rows_drops_exactly_the_dirty_page() {
+        let mut c = PageCache::new(16, 3, 4, 4);
+        for p in 0..4 {
+            c.touch(p);
+            assert!(admit_ok(&mut c, p));
+        }
+        assert_eq!(c.valid_pages(), 4);
+        c.invalidate_rows(&[5]); // page 1
+        assert!(c.get(1).is_none(), "dirty page must drop");
+        assert!(c.get(0).is_some() && c.get(2).is_some() && c.get(3).is_some());
+        assert_eq!(c.valid_pages(), 3);
+        // the dropped page revalidates in place on the next fill
+        assert!(admit_ok(&mut c, 1));
+        assert_eq!(c.valid_pages(), 4);
+    }
+
+    #[test]
+    fn invalidate_all_is_an_epoch_bump() {
+        let mut c = PageCache::new(8, 2, 4, 2);
+        c.touch(0);
+        assert!(admit_ok(&mut c, 0));
+        c.invalidate_all();
+        assert!(c.get(0).is_none());
+        assert_eq!(c.valid_pages(), 0);
+        // slots are reusable immediately
+        c.touch(1);
+        assert!(admit_ok(&mut c, 1));
+        assert!(c.get(1).is_some());
+    }
+
+    #[test]
+    fn failed_fill_leaves_the_slot_invalid() {
+        let mut c = PageCache::new(8, 2, 4, 2);
+        c.touch(0);
+        let err = c.admit(0, |_| Err("disk gone")).unwrap_err();
+        assert_eq!(err, "disk gone");
+        assert!(c.get(0).is_none(), "half-filled slot must not serve");
+    }
+
+    #[test]
+    fn sketch_decays_and_estimates_monotonically() {
+        let mut s = FreqSketch::new(4);
+        for _ in 0..10 {
+            s.touch(7);
+        }
+        assert!(s.estimate(7) >= 8);
+        assert_eq!(s.estimate(8), 0);
+        for _ in 0..s.sample {
+            s.touch(1);
+        }
+        assert!(s.estimate(7) < 10, "decay never halved the counters");
+    }
+}

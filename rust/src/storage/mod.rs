@@ -1,0 +1,431 @@
+//! `storage` — out-of-core node features: a paged, file-backed store
+//! behind the [`FeatureSource`] trait.
+//!
+//! Every engine that consumes node features does so through a gather
+//! (`rows → row-major tile buffer`), so the storage tier hides behind
+//! one trait with exactly that shape: [`FeatureSource::gather`] fills a
+//! tile buffer from whatever holds the rows — RAM ([`MemoryFeatures`],
+//! the NodePad-padded `x_pad` matrix every plan binds today) or disk
+//! ([`PagedFeatures`], a page cache over a [`PagedStore`] file). The
+//! binding layer cannot tell them apart; the difference is that the
+//! paged backend's resident set is `cache_pages × page_rows` rows
+//! instead of the full `capacity × width` matrix, which is what lets a
+//! deployment serve graphs larger than host RAM.
+//!
+//! The tier's three pieces:
+//!
+//! - [`store`] — the on-disk layout (`.gnnt`-compatible, page-aligned
+//!   payload) and `pread`-style offset reads; one shared handle serves
+//!   every shard.
+//! - [`cache`] — CacheG generalized to pages: fixed-capacity,
+//!   TinyLFU-lite admission, epoch-versioned invalidation so GrAd churn
+//!   drops exactly the dirtied pages.
+//! - [`prefetch`] — frontier-driven background reads: the incremental
+//!   round plan and fleet halo lists are known before the gather runs,
+//!   so their pages are staged while the engine binds tiles.
+//!
+//! Selected per deployment by the `[storage]` spec section
+//! (`backend = "memory" | "paged"`); the warm-hit path of both backends
+//! is allocation-free (`tests/plan_alloc.rs` proves it under the
+//! counting allocator).
+
+pub mod cache;
+pub mod prefetch;
+pub mod store;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::engine::kernels;
+use crate::tensor::Mat;
+
+pub use cache::{FreqSketch, PageCache};
+pub use prefetch::Prefetcher;
+pub use store::{spill_path, PagedStore, PAGE_ALIGN};
+
+/// Cumulative storage-tier counters, drained per round into
+/// [`crate::metrics::RoundStats`] (feature-cache hits/faults and disk
+/// bytes read). The in-memory backend reports zeros — there is no
+/// storage tier to hit or miss.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorageStats {
+    /// Row gathers served from the resident page cache.
+    pub hits: u64,
+    /// Row gathers that had to touch the store file (page faults).
+    pub faults: u64,
+    /// Bytes read from the store file (direct + prefetched).
+    pub bytes_read: u64,
+}
+
+/// Where feature rows come from — RAM or a paged on-disk store. The
+/// consuming engines only ever gather, stage, and (under GrAd feature
+/// churn) write single rows, so that is the whole contract.
+pub trait FeatureSource: Send {
+    /// Total rows (the NodePad capacity).
+    fn rows(&self) -> usize;
+
+    /// Feature width per row.
+    fn width(&self) -> usize;
+
+    /// Gather `rows` into `out` (row-major, `rows.len() × width`); the
+    /// tile-buffer contract of [`kernels::gather_rows`]. Warm paths are
+    /// allocation-free.
+    fn gather(&mut self, rows: &[usize], out: &mut [f32]) -> Result<()>;
+
+    /// Prefetch hint: these rows will be gathered soon (the next
+    /// round's frontier ring / halo imports). Default no-op.
+    fn stage(&mut self, _rows: &[usize]) {}
+
+    /// Overwrite one row (GrAd feature churn), invalidating any cached
+    /// copy so the next gather sees the fresh values.
+    fn write_row(&mut self, row: usize, values: &[f32]) -> Result<()>;
+
+    /// Drop cached copies of `rows` without writing (e.g. a GrAd
+    /// `AddNode` activating a padding row). Default no-op.
+    fn invalidate_rows(&mut self, _rows: &[usize]) {}
+
+    /// Drain the counters accumulated since the last call.
+    fn take_stats(&mut self) -> StorageStats {
+        StorageStats::default()
+    }
+
+    /// Materialize the full matrix (oracle/debug path — allocates).
+    fn to_mat(&mut self) -> Result<Mat> {
+        let (rows, width) = (self.rows(), self.width());
+        let idx: Vec<usize> = (0..rows).collect();
+        let mut out = Mat::zeros(rows, width);
+        self.gather(&idx, &mut out.data)?;
+        Ok(out)
+    }
+}
+
+/// The in-RAM backend: the NodePad-padded feature matrix, gathered with
+/// the same SIMD-friendly kernel the plans bind directly.
+#[derive(Debug)]
+pub struct MemoryFeatures {
+    x_pad: Mat,
+}
+
+impl MemoryFeatures {
+    /// Wrap an already-padded `capacity × width` matrix.
+    pub fn new(x_pad: Mat) -> MemoryFeatures {
+        MemoryFeatures { x_pad }
+    }
+
+    /// Pad `features` with zero rows up to `capacity` (the `x_pad`
+    /// layout) and wrap it.
+    pub fn padded(features: &Mat, capacity: usize) -> MemoryFeatures {
+        MemoryFeatures { x_pad: crate::graph::pad_features(features, capacity) }
+    }
+}
+
+impl FeatureSource for MemoryFeatures {
+    fn rows(&self) -> usize {
+        self.x_pad.rows
+    }
+
+    fn width(&self) -> usize {
+        self.x_pad.cols
+    }
+
+    fn gather(&mut self, rows: &[usize], out: &mut [f32]) -> Result<()> {
+        kernels::gather_rows(&self.x_pad.data, self.x_pad.cols, rows, out);
+        Ok(())
+    }
+
+    fn write_row(&mut self, row: usize, values: &[f32]) -> Result<()> {
+        if row >= self.x_pad.rows {
+            bail!("write_row {row} past capacity {}", self.x_pad.rows);
+        }
+        if values.len() != self.x_pad.cols {
+            bail!("write_row got {} values, width is {}", values.len(), self.x_pad.cols);
+        }
+        self.x_pad.row_mut(row).copy_from_slice(values);
+        Ok(())
+    }
+
+    fn to_mat(&mut self) -> Result<Mat> {
+        Ok(self.x_pad.clone())
+    }
+}
+
+/// The out-of-core backend: an admission-controlled [`PageCache`] over
+/// a shared [`PagedStore`] file, with optional frontier-driven
+/// prefetch. Resident footprint is `cache_pages × page_rows × width`
+/// floats regardless of graph size.
+#[derive(Debug)]
+pub struct PagedFeatures {
+    store: Arc<PagedStore>,
+    cache: PageCache,
+    prefetch: Option<Prefetcher>,
+    /// Stamped page-dedup scratch for [`FeatureSource::stage`].
+    seen: Vec<u32>,
+    stamp: u32,
+    /// `pread` byte scratch (one page).
+    scratch: Vec<u8>,
+    hits: u64,
+    faults: u64,
+    bytes_read: u64,
+}
+
+impl PagedFeatures {
+    /// A paged source over `store` with `cache_pages` resident pages of
+    /// `page_rows` rows each.
+    pub fn new(store: Arc<PagedStore>, page_rows: usize, cache_pages: usize) -> PagedFeatures {
+        let cache = PageCache::new(store.rows(), store.width(), page_rows, cache_pages);
+        let num_pages = cache.num_pages();
+        let scratch = vec![0u8; page_rows * store.width() * 4];
+        PagedFeatures {
+            store,
+            cache,
+            prefetch: None,
+            seen: vec![0; num_pages],
+            stamp: 0,
+            scratch,
+            hits: 0,
+            faults: 0,
+            bytes_read: 0,
+        }
+    }
+
+    /// Enable the background prefetch worker (one thread per source,
+    /// i.e. per shard).
+    pub fn with_prefetch(mut self) -> PagedFeatures {
+        let page_rows = self.cache.page_rows();
+        self.prefetch = Some(Prefetcher::spawn(Arc::clone(&self.store), page_rows));
+        self
+    }
+
+    /// The shared backing store.
+    pub fn store(&self) -> &Arc<PagedStore> {
+        &self.store
+    }
+
+    /// Currently resident valid pages (test/metrics gauge).
+    pub fn resident_pages(&self) -> usize {
+        self.cache.valid_pages()
+    }
+
+    /// Next dedup stamp, handling wraparound.
+    fn next_stamp(&mut self) -> u32 {
+        if self.stamp == u32::MAX {
+            self.seen.fill(0);
+            self.stamp = 0;
+        }
+        self.stamp += 1;
+        self.stamp
+    }
+}
+
+impl FeatureSource for PagedFeatures {
+    fn rows(&self) -> usize {
+        self.store.rows()
+    }
+
+    fn width(&self) -> usize {
+        self.store.width()
+    }
+
+    fn gather(&mut self, rows: &[usize], out: &mut [f32]) -> Result<()> {
+        let width = self.store.width();
+        for (i, &row) in rows.iter().enumerate() {
+            let dst = &mut out[i * width..(i + 1) * width];
+            let page = self.cache.page_of(row);
+            self.cache.touch(page);
+            if let Some(cached) = self.cache.row(row) {
+                dst.copy_from_slice(cached);
+                self.hits += 1;
+                continue;
+            }
+            self.faults += 1;
+            // fill the page from staging if prefetched, else from disk
+            let store = &self.store;
+            let prefetch = self.prefetch.as_ref();
+            let scratch = &mut self.scratch;
+            let row0 = page * self.cache.page_rows();
+            let count = self.cache.rows_in_page(page);
+            let mut disk_bytes = 0u64;
+            let admitted = self.cache.admit(page, |buf| -> Result<()> {
+                if let Some(pf) = prefetch {
+                    if pf.take(page, buf).is_some() {
+                        return Ok(());
+                    }
+                }
+                disk_bytes = store.read_rows(row0, count, buf, scratch)? as u64;
+                Ok(())
+            })?;
+            self.bytes_read += disk_bytes;
+            if admitted {
+                let cached = self.cache.row(row).expect("admitted page must serve");
+                dst.copy_from_slice(cached);
+            } else {
+                // admission rejected (cold one-touch page): read around
+                // the cache, single row
+                self.bytes_read +=
+                    self.store.read_rows(row, 1, dst, &mut self.scratch)? as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn stage(&mut self, rows: &[usize]) {
+        if self.prefetch.is_none() || rows.is_empty() {
+            return;
+        }
+        let stamp = self.next_stamp();
+        // Vec::new is allocation-free until the first push, so a fully
+        // warm request (every page resident) stays on the zero-alloc
+        // contract
+        let mut misses: Vec<u32> = Vec::new();
+        for &row in rows {
+            let page = self.cache.page_of(row);
+            if self.seen[page] == stamp {
+                continue;
+            }
+            self.seen[page] = stamp;
+            if self.cache.get(page).is_none() {
+                misses.push(page as u32);
+            }
+        }
+        if !misses.is_empty() {
+            self.prefetch.as_ref().unwrap().request(misses);
+        }
+    }
+
+    fn write_row(&mut self, row: usize, values: &[f32]) -> Result<()> {
+        self.store.write_row(row, values, &mut self.scratch)?;
+        self.cache.invalidate_rows(&[row]);
+        Ok(())
+    }
+
+    fn invalidate_rows(&mut self, rows: &[usize]) {
+        self.cache.invalidate_rows(rows);
+    }
+
+    fn take_stats(&mut self) -> StorageStats {
+        if let Some(pf) = &self.prefetch {
+            self.bytes_read += pf.drain_bytes_read();
+        }
+        let stats = StorageStats {
+            hits: self.hits,
+            faults: self.faults,
+            bytes_read: self.bytes_read,
+        };
+        self.hits = 0;
+        self.faults = 0;
+        self.bytes_read = 0;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_mat(rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |i, j| (i * 17 + j) as f32 * 0.5 - 4.0)
+    }
+
+    fn paged(x: &Mat, capacity: usize, page_rows: usize, cache_pages: usize) -> PagedFeatures {
+        let path = spill_path("src-test");
+        let mut store = PagedStore::create_from_mat(&path, x, capacity).unwrap();
+        store.set_delete_on_drop(true);
+        PagedFeatures::new(Arc::new(store), page_rows, cache_pages)
+    }
+
+    fn gather_all(src: &mut dyn FeatureSource, rows: &[usize]) -> Vec<f32> {
+        let mut out = vec![0f32; rows.len() * src.width()];
+        src.gather(rows, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn memory_and_paged_gathers_agree_even_under_eviction() {
+        let x = demo_mat(30, 5);
+        let mut mem = MemoryFeatures::padded(&x, 32);
+        // 2-slot cache over 8 pages: every gather pattern evicts
+        let mut pg = paged(&x, 32, 4, 2);
+        let patterns: Vec<Vec<usize>> = vec![
+            (0..32).collect(),
+            vec![31, 0, 17, 17, 3, 29],
+            vec![5; 8],
+            (0..32).rev().collect(),
+        ];
+        for rows in &patterns {
+            assert_eq!(
+                gather_all(&mut mem, rows),
+                gather_all(&mut pg, rows),
+                "pattern {rows:?} diverged"
+            );
+        }
+        let st = pg.take_stats();
+        assert!(st.faults > 0, "2-slot cache must fault");
+        assert!(st.hits > 0, "repeated rows must hit");
+        assert!(st.bytes_read > 0);
+        // counters drained
+        assert_eq!(pg.take_stats(), StorageStats::default());
+    }
+
+    #[test]
+    fn warm_cache_serves_without_disk_reads() {
+        let x = demo_mat(16, 3);
+        let mut pg = paged(&x, 16, 4, 4); // whole matrix fits
+        let rows: Vec<usize> = (0..16).collect();
+        let _ = gather_all(&mut pg, &rows);
+        let _ = pg.take_stats();
+        let again = gather_all(&mut pg, &rows);
+        let st = pg.take_stats();
+        assert_eq!(st.faults, 0, "warm cache must not fault");
+        assert_eq!(st.bytes_read, 0, "warm cache must not touch the disk");
+        assert_eq!(st.hits, 16);
+        assert_eq!(again, gather_all(&mut MemoryFeatures::padded(&x, 16), &rows));
+    }
+
+    #[test]
+    fn write_row_invalidates_precisely_and_readers_see_fresh_values() {
+        let x = demo_mat(16, 3);
+        let mut a = paged(&x, 16, 4, 4);
+        let rows: Vec<usize> = (0..16).collect();
+        let _ = gather_all(&mut a, &rows); // warm every page
+        // a second source over the SAME file (another shard's cache)
+        let mut b = PagedFeatures::new(Arc::clone(a.store()), 4, 4);
+        let _ = gather_all(&mut b, &rows); // also warm
+        let stale = gather_all(&mut b, &[5]);
+        let fresh = [7.5f32, -2.0, 11.0];
+        a.write_row(5, &fresh).unwrap();
+        // the writer's own cache dropped exactly page 1
+        assert_eq!(a.resident_pages(), 3);
+        assert_eq!(&gather_all(&mut a, &[5])[..], &fresh);
+        // the other cache still holds the stale page — THE stale-read
+        // hazard — until it is told to invalidate (in a fleet, the same
+        // update fans out to every shard, which replays the write)
+        assert_eq!(gather_all(&mut b, &[5]), stale, "b unexpectedly saw the write");
+        b.invalidate_rows(&[5]);
+        assert_eq!(&gather_all(&mut b, &[5])[..], &fresh);
+    }
+
+    #[test]
+    fn to_mat_round_trips_through_the_trait() {
+        let x = demo_mat(10, 4);
+        let mut mem = MemoryFeatures::padded(&x, 12);
+        let mut pg = paged(&x, 12, 4, 1);
+        assert_eq!(mem.to_mat().unwrap(), pg.to_mat().unwrap());
+        assert_eq!((pg.rows(), pg.width()), (12, 4));
+    }
+
+    #[test]
+    fn stage_then_gather_uses_the_staged_pages() {
+        let x = demo_mat(64, 3);
+        let mut pg = paged(&x, 64, 4, 16).with_prefetch();
+        let rows: Vec<usize> = (0..64).collect();
+        pg.stage(&rows);
+        // give the worker a moment, then gather — correctness must not
+        // depend on the race, only the bytes accounting moves around
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let got = gather_all(&mut pg, &rows);
+        assert_eq!(got, gather_all(&mut MemoryFeatures::padded(&x, 64), &rows));
+        let st = pg.take_stats();
+        assert!(st.bytes_read > 0, "someone must have read the disk");
+    }
+}

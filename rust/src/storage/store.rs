@@ -1,0 +1,385 @@
+//! `store` — the page-aligned, file-backed node-feature store.
+//!
+//! On disk a store is a **valid `.gnnt` container** (the same format
+//! `runtime::io` reads and `python/compile/gnnt.py` writes) holding two
+//! tensors: a `U8` filler named `_pad` and the `F32` feature matrix
+//! `x_pad` of shape `capacity × width`. The filler is sized so the
+//! `x_pad` payload begins exactly on a [`PAGE_ALIGN`]-byte boundary —
+//! `runtime::io::read_gnnt` can still slurp the whole file (tooling,
+//! debugging), while the serving path never does: rows are fetched with
+//! `pread`-style [`std::os::unix::fs::FileExt::read_at`] offset reads,
+//! so one shared [`PagedStore`] handle serves every shard thread with no
+//! seek state and no locks.
+//!
+//! The payload is plain row-major `f32` little-endian, identical to the
+//! in-memory `x_pad` binding — a "page" is purely a *read granularity*
+//! (`page_rows` contiguous rows) chosen by the cache tier, not a file
+//! format property, so the same store file serves any page size.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Mat;
+
+/// Byte alignment of the feature payload inside the store file. 4 KiB
+/// matches the kernel page size the `pread` calls ultimately hit.
+pub const PAGE_ALIGN: u64 = 4096;
+
+/// Filler-tensor magic: the `_pad` tensor's first bytes carry this tag
+/// plus the store geometry, so `open` can validate a file was written
+/// by [`PagedStore::create`] (and not an arbitrary `.gnnt` artifact).
+const PAD_MAGIC: &[u8; 8] = b"GRNSTOR1";
+
+/// A file-backed `capacity × width` feature matrix read by offset.
+///
+/// Shared across shards behind an `Arc`: reads ([`PagedStore::read_rows`])
+/// and row write-through ([`PagedStore::write_row`]) both take `&self`
+/// (positioned IO needs no seek cursor).
+pub struct PagedStore {
+    file: File,
+    path: PathBuf,
+    data_offset: u64,
+    rows: usize,
+    width: usize,
+    delete_on_drop: bool,
+}
+
+/// Header bytes before the filler payload: magic(4) + version(4) +
+/// count(4) + `_pad` record prefix (name_len(2) + "_pad"(4) + dtype(1) +
+/// ndim(1) + shape(4)).
+const PAD_PREFIX: u64 = 12 + 2 + 4 + 1 + 1 + 4;
+/// `x_pad` record prefix after the filler payload: name_len(2) +
+/// "x_pad"(5) + dtype(1) + ndim(1) + shape(2×4).
+const XPAD_PREFIX: u64 = 2 + 5 + 1 + 1 + 8;
+
+/// Filler payload length so the `x_pad` data lands on [`PAGE_ALIGN`].
+fn pad_len() -> u64 {
+    let unpadded = PAD_PREFIX + XPAD_PREFIX;
+    let mut k = (PAGE_ALIGN - unpadded % PAGE_ALIGN) % PAGE_ALIGN;
+    // the filler must hold the magic + geometry (8 + 16 bytes)
+    while k < 24 {
+        k += PAGE_ALIGN;
+    }
+    k
+}
+
+impl PagedStore {
+    /// Create a store at `path`, streaming rows from `fill` (called once
+    /// per row with a zeroed `width`-wide scratch) — the full matrix is
+    /// **never materialized in RAM**, which is what lets benches build
+    /// million-row stores inside a budget the dense path would blow.
+    pub fn create(
+        path: &Path,
+        rows: usize,
+        width: usize,
+        mut fill: impl FnMut(usize, &mut [f32]),
+    ) -> Result<PagedStore> {
+        if rows == 0 || width == 0 {
+            bail!("paged store needs rows > 0 and width > 0 (got {rows}×{width})");
+        }
+        let k = pad_len();
+        {
+            let f = File::create(path)
+                .with_context(|| format!("creating feature store {}", path.display()))?;
+            let mut w = BufWriter::new(f);
+            // .gnnt container header: 2 tensors, `_pad` first
+            w.write_all(b"GNNT")?;
+            w.write_all(&1u32.to_le_bytes())?;
+            w.write_all(&2u32.to_le_bytes())?;
+            // `_pad`: U8 filler carrying the store tag + geometry
+            w.write_all(&4u16.to_le_bytes())?;
+            w.write_all(b"_pad")?;
+            w.write_all(&[3u8, 1u8])?; // dtype U8, 1-D
+            w.write_all(&(k as u32).to_le_bytes())?;
+            w.write_all(PAD_MAGIC)?;
+            w.write_all(&(rows as u64).to_le_bytes())?;
+            w.write_all(&(width as u64).to_le_bytes())?;
+            w.write_all(&vec![0u8; k as usize - 24])?;
+            // `x_pad`: F32 rows × width, payload page-aligned from here
+            w.write_all(&5u16.to_le_bytes())?;
+            w.write_all(b"x_pad")?;
+            w.write_all(&[0u8, 2u8])?; // dtype F32, 2-D
+            w.write_all(&(rows as u32).to_le_bytes())?;
+            w.write_all(&(width as u32).to_le_bytes())?;
+            let mut row = vec![0f32; width];
+            let mut raw = vec![0u8; width * 4];
+            for i in 0..rows {
+                row.fill(0.0);
+                fill(i, &mut row);
+                for (src, dst) in row.iter().zip(raw.chunks_exact_mut(4)) {
+                    dst.copy_from_slice(&src.to_le_bytes());
+                }
+                w.write_all(&raw)?;
+            }
+            w.flush()?;
+        }
+        PagedStore::open(path)
+    }
+
+    /// Create a store from an in-memory feature matrix, NodePad-padded
+    /// with zero rows up to `capacity` (the `x_pad` layout every engine
+    /// binds).
+    pub fn create_from_mat(path: &Path, x: &Mat, capacity: usize) -> Result<PagedStore> {
+        if capacity < x.rows {
+            bail!("store capacity {} < feature rows {}", capacity, x.rows);
+        }
+        PagedStore::create(path, capacity, x.cols, |i, out| {
+            if i < x.rows {
+                out.copy_from_slice(x.row(i));
+            }
+        })
+    }
+
+    /// Open an existing store file, recovering its geometry from the
+    /// header (rejects plain `.gnnt` artifacts with an actionable error).
+    pub fn open(path: &Path) -> Result<PagedStore> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening feature store {}", path.display()))?;
+        let mut head = vec![0u8; PAD_PREFIX as usize + 24];
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut head)
+            .with_context(|| format!("reading store header {}", path.display()))?;
+        if &head[0..4] != b"GNNT" {
+            bail!("{} is not a .gnnt container", path.display());
+        }
+        let u32_at = |b: &[u8], o: usize| {
+            u32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
+        };
+        let u64_at = |b: &[u8], o: usize| {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(&b[o..o + 8]);
+            u64::from_le_bytes(a)
+        };
+        let p = PAD_PREFIX as usize;
+        if &head[12..14] != 4u16.to_le_bytes().as_slice() || &head[14..18] != b"_pad" {
+            bail!(
+                "{} is a .gnnt container but not a paged feature store \
+                 (missing the `_pad` filler tensor; build one with \
+                 `PagedStore::create`)",
+                path.display()
+            );
+        }
+        let k = u32_at(&head, 18 + 2) as u64; // dtype+ndim skipped: shape at 20
+        if &head[p..p + 8] != PAD_MAGIC {
+            bail!(
+                "{} has a `_pad` tensor without the {:?} store tag",
+                path.display(),
+                std::str::from_utf8(PAD_MAGIC).unwrap()
+            );
+        }
+        let rows = u64_at(&head, p + 8) as usize;
+        let width = u64_at(&head, p + 16) as usize;
+        let data_offset = PAD_PREFIX + k + XPAD_PREFIX;
+        if data_offset % PAGE_ALIGN != 0 {
+            bail!("{}: payload offset {data_offset} is not page-aligned", path.display());
+        }
+        let need = data_offset + (rows * width * 4) as u64;
+        let have = file.metadata()?.len();
+        if have < need {
+            bail!(
+                "{}: truncated store — {rows}×{width} needs {need} bytes, file has {have}",
+                path.display()
+            );
+        }
+        Ok(PagedStore {
+            file,
+            path: path.to_path_buf(),
+            data_offset,
+            rows,
+            width,
+            delete_on_drop: false,
+        })
+    }
+
+    /// Remove the backing file when this handle drops (launch-time
+    /// spill files; pre-built stores opened by path keep theirs).
+    pub fn set_delete_on_drop(&mut self, yes: bool) {
+        self.delete_on_drop = yes;
+    }
+
+    /// Total rows (the NodePad capacity).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Feature width per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read `count` rows starting at `row0` into `dst` (row-major), via
+    /// one positioned read. `scratch` must hold `count·width·4` bytes.
+    /// Returns the bytes read. Allocation-free.
+    pub fn read_rows(
+        &self,
+        row0: usize,
+        count: usize,
+        dst: &mut [f32],
+        scratch: &mut [u8],
+    ) -> Result<usize> {
+        if row0 + count > self.rows {
+            bail!("read_rows {row0}+{count} past store end {}", self.rows);
+        }
+        let nbytes = count * self.width * 4;
+        let raw = &mut scratch[..nbytes];
+        let off = self.data_offset + (row0 * self.width * 4) as u64;
+        self.file
+            .read_exact_at(raw, off)
+            .with_context(|| format!("pread {nbytes}B at {off} from {}", self.path.display()))?;
+        for (src, dst) in raw.chunks_exact(4).zip(dst[..count * self.width].iter_mut()) {
+            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        }
+        Ok(nbytes)
+    }
+
+    /// Write one row through to the file (GrAd feature churn). `scratch`
+    /// must hold `width·4` bytes. Callers own cache invalidation: every
+    /// cache layered over this store must drop the row's page.
+    pub fn write_row(&self, row: usize, values: &[f32], scratch: &mut [u8]) -> Result<()> {
+        if row >= self.rows {
+            bail!("write_row {row} past store end {}", self.rows);
+        }
+        if values.len() != self.width {
+            bail!("write_row got {} values, store width is {}", values.len(), self.width);
+        }
+        let raw = &mut scratch[..self.width * 4];
+        for (src, dst) in values.iter().zip(raw.chunks_exact_mut(4)) {
+            dst.copy_from_slice(&src.to_le_bytes());
+        }
+        let off = self.data_offset + (row * self.width * 4) as u64;
+        self.file
+            .write_all_at(raw, off)
+            .with_context(|| format!("pwrite row {row} to {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+impl Drop for PagedStore {
+    fn drop(&mut self) {
+        if self.delete_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+impl std::fmt::Debug for PagedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedStore")
+            .field("path", &self.path)
+            .field("rows", &self.rows)
+            .field("width", &self.width)
+            .field("data_offset", &self.data_offset)
+            .finish()
+    }
+}
+
+/// A unique temp-file path for launch-time feature spills.
+pub fn spill_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "grannite_{tag}_{}_{seq}.gnnt",
+        std::process::id()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::io::read_gnnt;
+    use crate::tensor::Tensor;
+
+    fn demo_mat(rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |i, j| (i * 31 + j) as f32 * 0.25 - 3.0)
+    }
+
+    #[test]
+    fn payload_is_page_aligned_and_gnnt_readable() {
+        let x = demo_mat(13, 7);
+        let path = spill_path("store-test");
+        let store = PagedStore::create_from_mat(&path, &x, 20).unwrap();
+        assert_eq!(store.data_offset % PAGE_ALIGN, 0, "payload not page-aligned");
+        assert_eq!((store.rows(), store.width()), (20, 7));
+        // the whole file still parses as a standard .gnnt container
+        let tensors = read_gnnt(&path).unwrap();
+        match tensors.get("x_pad").unwrap() {
+            Tensor::F32 { shape, data } => {
+                assert_eq!(shape, &[20, 7]);
+                assert_eq!(&data[..13 * 7], &x.data[..]);
+                assert!(data[13 * 7..].iter().all(|&v| v == 0.0), "padding not zero");
+            }
+            other => panic!("x_pad stored as {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_rows_round_trips_and_open_recovers_geometry() {
+        let x = demo_mat(9, 5);
+        let path = spill_path("store-test");
+        {
+            PagedStore::create_from_mat(&path, &x, 9).unwrap();
+        }
+        let store = PagedStore::open(&path).unwrap();
+        assert_eq!((store.rows(), store.width()), (9, 5));
+        let mut dst = vec![0f32; 4 * 5];
+        let mut scratch = vec![0u8; 4 * 5 * 4];
+        let nb = store.read_rows(3, 4, &mut dst, &mut scratch).unwrap();
+        assert_eq!(nb, 4 * 5 * 4);
+        for r in 0..4 {
+            assert_eq!(&dst[r * 5..(r + 1) * 5], x.row(3 + r), "row {}", 3 + r);
+        }
+        assert!(store.read_rows(7, 4, &mut dst, &mut scratch).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_row_is_read_back() {
+        let x = demo_mat(6, 3);
+        let path = spill_path("store-test");
+        let store = PagedStore::create_from_mat(&path, &x, 6).unwrap();
+        let fresh = [9.5f32, -1.25, 0.5];
+        let mut scratch = vec![0u8; 3 * 4];
+        store.write_row(2, &fresh, &mut scratch).unwrap();
+        let mut dst = vec![0f32; 3];
+        store.read_rows(2, 1, &mut dst, &mut scratch).unwrap();
+        assert_eq!(dst, fresh);
+        assert!(store.write_row(6, &fresh, &mut scratch).is_err());
+        assert!(store.write_row(0, &[1.0], &mut scratch).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn plain_gnnt_artifacts_are_rejected_actionably() {
+        let path = spill_path("store-test");
+        let mut t = std::collections::BTreeMap::new();
+        t.insert("x".to_string(), Tensor::from_mat(&demo_mat(2, 2)));
+        crate::runtime::io::write_gnnt(&path, &t).unwrap();
+        let err = PagedStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("_pad"), "unhelpful error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn delete_on_drop_removes_the_spill() {
+        let path = spill_path("store-test");
+        {
+            let mut s = PagedStore::create_from_mat(&path, &demo_mat(2, 2), 2).unwrap();
+            s.set_delete_on_drop(true);
+        }
+        assert!(!path.exists(), "spill file survived drop");
+    }
+}

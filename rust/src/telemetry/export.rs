@@ -120,6 +120,33 @@ pub fn prometheus(shards: &[Snapshot], cal: &CalibrationReport) -> String {
             num(s.cache_hit_rate())
         ));
     }
+    header("grannite_feature_cache_hit_rate", "gauge",
+           "Fraction of feature-store page lookups served from the page cache.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_feature_cache_hit_rate{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            num(s.feature_cache_hit_rate())
+        ));
+    }
+    header("grannite_page_faults_total", "counter",
+           "Feature-store page lookups that went to disk.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_page_faults_total{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            s.page_faults
+        ));
+    }
+    header("grannite_storage_read_bytes_total", "counter",
+           "Bytes the paged feature store read from disk.", &mut out);
+    for s in shards {
+        out.push_str(&format!(
+            "grannite_storage_read_bytes_total{{shard=\"{}\"}} {}\n",
+            shard_label(s),
+            s.storage_bytes_read
+        ));
+    }
 
     header("grannite_cost_ratio", "gauge",
            "Observed/predicted per-op cost ratio (median).", &mut out);
@@ -333,6 +360,9 @@ mod tests {
         assert!(n >= 5, "expected several samples, got {n}:\n{text}");
         assert!(text.contains("grannite_queries_total{shard=\"0\"} 1"));
         assert!(text.contains("# TYPE grannite_latency_us summary"));
+        assert!(text.contains("grannite_feature_cache_hit_rate{shard=\"0\"} 0"));
+        assert!(text.contains("grannite_page_faults_total{shard=\"0\"} 0"));
+        assert!(text.contains("grannite_storage_read_bytes_total{shard=\"0\"} 0"));
     }
 
     #[test]

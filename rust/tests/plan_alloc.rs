@@ -20,6 +20,7 @@ use grannite::engine::{PlanInstance, WorkerPool};
 use grannite::ops::build::{self, GnnDims, QuantScales};
 use grannite::ops::exec::Bindings;
 use grannite::ops::plan::ExecPlan;
+use grannite::storage::{spill_path, FeatureSource, PagedFeatures, PagedStore};
 use grannite::tensor::{Mat, Tensor};
 use grannite::util::alloc::{allocation_count, CountingAlloc};
 use grannite::util::Rng;
@@ -114,4 +115,38 @@ fn steady_state_run_allocates_nothing() {
         );
         assert_eq!(inst.output_mat(0).unwrap(), reference, "{label} drifted");
     }
+
+    // --- fully-warm page cache: a zero-mutation round's layer-0 gather
+    // through the paged feature source is allocation-free too (cold
+    // misses are exempt — they fill the page slab). NON-prefetching
+    // source on purpose: the prefetch worker thread would race the
+    // global counter, and a warm cache hands it nothing anyway.
+    let feats = Mat::from_fn(64, 32, |i, j| (i * 31 + j) as f32 * 0.01);
+    let mut store =
+        PagedStore::create_from_mat(&spill_path("plan-alloc"), &feats, 64).unwrap();
+    store.set_delete_on_drop(true);
+    let mut src = PagedFeatures::new(Arc::new(store), 8, 64);
+    let ring: Vec<usize> = (0..64).collect();
+    let mut out = vec![0.0f32; 64 * 32];
+    src.stage(&ring);
+    src.gather(&ring, &mut out).unwrap(); // cold round: every page faults
+    let want = out.clone();
+    let _ = src.take_stats();
+
+    let before = allocation_count();
+    for _ in 0..10 {
+        src.stage(&ring);
+        src.gather(&ring, &mut out).unwrap();
+    }
+    let allocs = allocation_count() - before;
+    assert_eq!(
+        allocs, 0,
+        "warm paged gather: {allocs} allocations across 10 zero-mutation rounds"
+    );
+    let stats = src.take_stats();
+    assert!(
+        stats.hits > 0 && stats.faults == 0,
+        "rounds were not warm: {stats:?}"
+    );
+    assert_eq!(out, want, "warm paged gather drifted");
 }

@@ -97,6 +97,7 @@ fn checked_in_example_specs_parse_and_validate() {
         "int8_fleet.toml",
         "self_tuning_auto.toml",
         "monitored_fleet.toml",
+        "paged_10m.toml",
     ] {
         let path = std::path::Path::new("../examples/specs").join(name);
         let spec = DeploymentSpec::load(&path)
@@ -121,6 +122,35 @@ fn tuning_section_round_trips_and_validates() {
     let parsed = DeploymentSpec::parse_toml(&text).unwrap();
     assert_eq!(parsed, s, "to_toml → parse_toml must keep [tuning]:\n{text}");
     parsed.validate_with(&EngineRegistry::builtin()).unwrap();
+}
+
+#[test]
+fn storage_section_round_trips_and_validates() {
+    let mut s = spec("incremental", 2);
+    s.storage.backend = "paged".into();
+    s.storage.page_rows = 128;
+    s.storage.cache_pages = 256;
+    s.storage.path = "/tmp/features.gnnt".into();
+
+    let text = s.to_toml();
+    assert!(text.contains("[storage]"), "{text}");
+    let parsed = DeploymentSpec::parse_toml(&text).unwrap();
+    assert_eq!(parsed, s, "to_toml → parse_toml must keep [storage]:\n{text}");
+    parsed.validate_with(&EngineRegistry::builtin()).unwrap();
+}
+
+#[test]
+fn paged_backend_rejected_by_dense_engines() {
+    // engines that bind the full feature matrix into a compiled plan
+    // must refuse a disk tier up front, pointing at the one that works
+    let reg = EngineRegistry::builtin();
+    for engine in ["local", "plan", "auto"] {
+        let mut s = spec(engine, 1);
+        s.storage.backend = "paged".into();
+        let err = s.validate_with(&reg).unwrap_err().to_string();
+        assert!(err.contains("incremental"), "{engine}: {err}");
+        assert!(err.contains("paged"), "{engine}: {err}");
+    }
 }
 
 #[test]

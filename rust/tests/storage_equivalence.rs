@@ -1,0 +1,335 @@
+//! Out-of-core serving equivalence suite (ISSUE 10 acceptance):
+//!
+//! 1. **Property test** — over randomized interleavings of structure
+//!    churn (`AddEdge`/`RemoveEdge`/`AddNode`), feature churn
+//!    (`write_features`), and queries, the paged incremental engine
+//!    matches the in-memory incremental engine *and* a full `ops::exec`
+//!    recompute to ≤ 1e-4, across page/cache geometries that include
+//!    capacities small enough to force mid-round eviction.
+//! 2. **Stale-read check** — a fully-warm page cache must not serve a
+//!    page its own `write_features` dirtied; the warm round's storage
+//!    gauges must show genuine hits.
+//! 3. **Deployment equivalence** — `[storage] backend = "paged"` through
+//!    `Deployment::launch` answers identically to `backend = "memory"`
+//!    at 1 and 3 shards, on planted-partition and power-law graphs.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use grannite::coordinator::ModelState;
+use grannite::engine::WorkerPool;
+use grannite::fleet::synthesize_weights;
+use grannite::graph::datasets::{synthesize, synthesize_power_law, Dataset};
+use grannite::incremental::{IncrementalConfig, IncrementalEngine};
+use grannite::ops::build::{self, GnnDims};
+use grannite::ops::exec;
+use grannite::serve::{
+    DataSource, Deployment, DeploymentSpec, EngineSpec, Serving, Topology,
+};
+use grannite::server::{InferenceEngine, Update};
+use grannite::storage::{spill_path, PagedFeatures, PagedStore};
+use grannite::tensor::Mat;
+use grannite::util::propcheck::forall;
+
+fn serial() -> Arc<WorkerPool> {
+    Arc::new(WorkerPool::serial())
+}
+
+fn apply_state(state: &mut ModelState, u: &Update) -> Result<()> {
+    match u {
+        Update::AddEdge(a, b) => {
+            state.add_edge(*a, *b)?;
+        }
+        Update::RemoveEdge(a, b) => {
+            state.remove_edge(*a, *b)?;
+        }
+        Update::AddNode => {
+            state.add_node()?;
+        }
+    }
+    Ok(())
+}
+
+/// Full-recompute oracle with feature-churn support. `ModelState`
+/// caches the `x_pad` binding across structure changes, so a feature
+/// write rebuilds the state from the mutated base dataset and replays
+/// the structural history — the slow-but-obviously-correct path the
+/// page cache's epoch invalidation must agree with.
+struct Oracle {
+    base: Dataset,
+    applied: Vec<Update>,
+    state: ModelState,
+    weights: exec::Bindings,
+    capacity: usize,
+    classes: usize,
+}
+
+impl Oracle {
+    fn new(ds: &Dataset, capacity: usize) -> Oracle {
+        let capacity = capacity.max(ds.num_nodes());
+        let classes = ds.num_classes().max(2);
+        Oracle {
+            base: ds.clone(),
+            applied: Vec::new(),
+            state: ModelState::from_dataset(ds.clone(), capacity).unwrap(),
+            weights: synthesize_weights(ds.num_features(), classes, capacity),
+            capacity,
+            classes,
+        }
+    }
+
+    fn apply(&mut self, u: &Update) -> Result<()> {
+        self.applied.push(u.clone());
+        apply_state(&mut self.state, u)
+    }
+
+    fn write_features(&mut self, node: usize, values: &[f32]) -> Result<()> {
+        self.base.features.row_mut(node).copy_from_slice(values);
+        self.state = ModelState::from_dataset(self.base.clone(), self.capacity)?;
+        let applied = self.applied.clone();
+        for u in &applied {
+            apply_state(&mut self.state, u)?;
+        }
+        Ok(())
+    }
+
+    fn logits(&mut self) -> Mat {
+        let ds = &self.state.dataset;
+        let dims = GnnDims::model(
+            self.capacity,
+            ds.graph.num_edges(),
+            ds.num_features(),
+            self.classes,
+        );
+        let g = build::gcn_stagr(dims, "grad");
+        let mut b = self.weights.clone();
+        b.insert("norm".into(), self.state.binding("norm_pad", "gcn").unwrap());
+        b.insert("x".into(), self.state.binding("x_pad", "gcn").unwrap());
+        let full = exec::execute_mat(&g, &b).unwrap();
+        let n = self.state.num_active_nodes();
+        Mat::from_fn(n, full.cols, |i, j| full[(i, j)])
+    }
+}
+
+/// Build a paged engine over a fresh temp store holding `ds.features`
+/// zero-padded to `cap` rows.
+fn paged_engine(
+    ds: &Dataset,
+    cap: usize,
+    cfg: IncrementalConfig,
+    page_rows: usize,
+    cache_pages: usize,
+) -> IncrementalEngine {
+    let mut store =
+        PagedStore::create_from_mat(&spill_path("stor-eq"), &ds.features, cap).unwrap();
+    store.set_delete_on_drop(true);
+    let features = Box::new(PagedFeatures::new(Arc::new(store), page_rows, cache_pages));
+    IncrementalEngine::shard_with_source(ds, cap, 0..cap, serial(), cfg, features)
+        .unwrap()
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    Up(Update),
+    Write(usize, Vec<f32>),
+    Query,
+}
+
+#[test]
+fn prop_paged_matches_memory_and_oracle() {
+    forall("paged == memory == ops::exec", 10, |gen| {
+        let n0 = gen.usize(8, 20);
+        let m0 = gen.usize(n0 / 2, 2 * n0);
+        let spare = gen.usize(1, 4);
+        let cap = n0 + spare;
+        let f = 6;
+        let ds =
+            synthesize("stor-eq", n0, m0, 4, f, 2000 + n0 as u64 * 13 + m0 as u64);
+
+        // one event script, replayed against every cache geometry
+        let mut events: Vec<Ev> = Vec::new();
+        let mut nodes = n0;
+        for _ in 0..gen.usize(8, 20) {
+            match gen.usize(0, 12) {
+                0 if nodes < cap => {
+                    events.push(Ev::Up(Update::AddNode));
+                    nodes += 1;
+                }
+                1..=3 => {
+                    let u = gen.rng().usize(nodes);
+                    let v = gen.rng().usize(nodes);
+                    if u != v {
+                        events.push(Ev::Up(Update::AddEdge(u, v)));
+                    }
+                }
+                4..=5 => {
+                    let u = gen.rng().usize(nodes);
+                    let v = gen.rng().usize(nodes);
+                    if u != v {
+                        events.push(Ev::Up(Update::RemoveEdge(u, v)));
+                    }
+                }
+                6..=7 => {
+                    // feature churn against an original node: dirties one
+                    // page, which the cache must invalidate precisely
+                    let node = gen.rng().usize(n0);
+                    let vals: Vec<f32> =
+                        (0..f).map(|_| gen.rng().usize(100) as f32 / 100.0).collect();
+                    events.push(Ev::Write(node, vals));
+                }
+                _ => events.push(Ev::Query),
+            }
+        }
+        events.push(Ev::Query); // always end on a comparison
+
+        let cfg = IncrementalConfig::default();
+        // geometries: generous (everything resident after round one),
+        // one-slot (every admission duels, constant mid-round eviction),
+        // and single-row pages with a 2-slot cache
+        for (page_rows, cache_pages) in [(4usize, 64usize), (2, 1), (1, 2)] {
+            let mut paged = paged_engine(&ds, cap, cfg, page_rows, cache_pages);
+            let mut mem = IncrementalEngine::full(&ds, cap, serial(), cfg).unwrap();
+            let mut oracle = Oracle::new(&ds, cap);
+            for ev in &events {
+                match ev {
+                    Ev::Up(u) => {
+                        paged.apply(u).unwrap();
+                        mem.apply(u).unwrap();
+                        oracle.apply(u).unwrap();
+                    }
+                    Ev::Write(node, vals) => {
+                        paged.write_features(*node, vals).unwrap();
+                        mem.write_features(*node, vals).unwrap();
+                        oracle.write_features(*node, vals).unwrap();
+                    }
+                    Ev::Query => {
+                        let got_p = paged.infer().unwrap();
+                        let got_m = mem.infer().unwrap();
+                        let want = oracle.logits();
+                        let dp = want.max_abs_diff(&got_p);
+                        let dm = want.max_abs_diff(&got_m);
+                        assert!(
+                            dp < 1e-4,
+                            "paged ({page_rows}-row pages, {cache_pages} slots) \
+                             diverged from oracle by {dp}"
+                        );
+                        assert!(dm < 1e-4, "in-memory diverged from oracle by {dm}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn warm_page_writes_are_not_served_stale() {
+    // warm the whole cache, overwrite one node's features, and require
+    // the next round to see the new values — an unversioned cache would
+    // answer from the stale page
+    let ds = synthesize("stor-stale", 30, 70, 4, 8, 7);
+    let cap = 32;
+    let cfg = IncrementalConfig::default();
+    let mut paged = paged_engine(&ds, cap, cfg, 4, 64); // all pages fit
+    let mut mem = IncrementalEngine::full(&ds, cap, serial(), cfg).unwrap();
+
+    let cold = paged.infer().unwrap();
+    let warm = paged.infer().unwrap();
+    assert!(cold.max_abs_diff(&warm) < 1e-6, "warm replay must be stable");
+    let rs = paged.last_round().expect("round stats").clone();
+    assert!(rs.page_hits > 0, "warm round recorded no page hits");
+    assert_eq!(rs.page_faults, 0, "warm round faulted {} pages", rs.page_faults);
+    let _ = mem.infer().unwrap();
+
+    let vals = vec![0.5f32; 8];
+    paged.write_features(3, &vals).unwrap();
+    mem.write_features(3, &vals).unwrap();
+    let got_p = paged.infer().unwrap();
+    let got_m = mem.infer().unwrap();
+    assert!(
+        got_m.max_abs_diff(&got_p) < 1e-4,
+        "post-write paged answer diverged by {}",
+        got_m.max_abs_diff(&got_p)
+    );
+    assert!(
+        got_m.max_abs_diff(&cold) > 1e-6,
+        "the write changed nothing — stale-read check is vacuous"
+    );
+    let rs = paged.last_round().expect("round stats").clone();
+    assert!(rs.page_faults > 0, "the dirtied page was never re-read from disk");
+}
+
+/// Churn that crosses shard boundaries, interleaved with queries.
+fn churn_script(
+    n: usize,
+    mut apply: impl FnMut(Update),
+    mut query: impl FnMut(usize),
+) {
+    for i in 0..8 {
+        apply(Update::AddEdge(i, n - 1 - i));
+        query(i);
+        query(n - 1 - i);
+    }
+    apply(Update::RemoveEdge(0, n - 1));
+    apply(Update::AddNode);
+    for q in (0..n).step_by(5) {
+        query(q);
+    }
+}
+
+fn run_deployment(ds: &Dataset, shards: usize, backend: &str) -> Vec<(usize, i32)> {
+    let mut spec = DeploymentSpec {
+        engine: EngineSpec::named("incremental"),
+        topology: Topology::homogeneous(shards),
+        capacity: ds.num_nodes() + 4,
+        ..DeploymentSpec::default()
+    };
+    spec.storage.backend = backend.into();
+    // tiny cache (3 slots of 4-row pages) so every round evicts mid-gather
+    spec.storage.page_rows = 4;
+    spec.storage.cache_pages = 3;
+    let fleet = Deployment::launch(&spec, &DataSource::Dataset(ds.clone())).unwrap();
+    let mut preds = Vec::new();
+    churn_script(
+        ds.num_nodes(),
+        |u| fleet.update(u).unwrap(),
+        |n| preds.push((n, fleet.query_wait(Some(n)).unwrap().prediction)),
+    );
+    let agg = fleet.metrics();
+    if backend == "paged" {
+        assert!(
+            agg.page_hits + agg.page_faults > 0,
+            "paged deployment reported no storage traffic"
+        );
+        assert!(agg.storage_bytes_read > 0);
+    } else {
+        assert_eq!(agg.page_faults, 0, "memory backend touched the disk tier");
+    }
+    fleet.shutdown().unwrap();
+    preds
+}
+
+#[test]
+fn paged_deployment_matches_memory_at_1_and_3_shards() {
+    let ds = synthesize("stor-fleet", 60, 140, 4, 12, 29);
+    let reference = run_deployment(&ds, 1, "memory");
+    for shards in [1usize, 3] {
+        for backend in ["memory", "paged"] {
+            let got = run_deployment(&ds, shards, backend);
+            assert_eq!(
+                reference, got,
+                "{shards}-shard {backend} deployment diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn power_law_paged_deployment_matches_memory() {
+    // the heavy-tailed degree distribution concentrates gathers on hub
+    // pages — the admission sketch's favorite case — and must stay exact
+    let ds = synthesize_power_law("pl-paged", 400, 6, 4, 24, 11);
+    let mem = run_deployment(&ds, 2, "memory");
+    let paged = run_deployment(&ds, 2, "paged");
+    assert_eq!(mem, paged, "power-law paged deployment diverged");
+}
