@@ -239,6 +239,20 @@ fn open_or_spill_store(ctx: &LaunchContext) -> Result<Arc<PagedStore>> {
     let st = &ctx.spec.storage;
     let width = ctx.dataset.num_features();
     if st.path.is_empty() {
+        if ctx.dataset.features.rows < ctx.dataset.num_nodes() {
+            bail!(
+                "[storage] has no path but dataset {:?} is headless ({} \
+                 feature rows in RAM for {} nodes) — spilling would build \
+                 an all-zero store and every query would silently serve \
+                 zero features; pre-build the store (stream rows into \
+                 storage::PagedStore, e.g. via \
+                 graph::datasets::power_law_feature_row) and point \
+                 [storage] path at it",
+                ctx.dataset.name,
+                ctx.dataset.features.rows,
+                ctx.dataset.num_nodes()
+            );
+        }
         let path = spill_path(&format!("{}-features", ctx.dataset.name));
         let mut store =
             PagedStore::create_from_mat(&path, &ctx.dataset.features, ctx.capacity)?;

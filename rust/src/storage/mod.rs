@@ -130,6 +130,9 @@ impl FeatureSource for MemoryFeatures {
     }
 
     fn gather(&mut self, rows: &[usize], out: &mut [f32]) -> Result<()> {
+        if let Some(&bad) = rows.iter().find(|&&r| r >= self.x_pad.rows) {
+            bail!("gather row {bad} past capacity {} — rows are 0..capacity", self.x_pad.rows);
+        }
         kernels::gather_rows(&self.x_pad.data, self.x_pad.cols, rows, out);
         Ok(())
     }
@@ -229,7 +232,11 @@ impl FeatureSource for PagedFeatures {
 
     fn gather(&mut self, rows: &[usize], out: &mut [f32]) -> Result<()> {
         let width = self.store.width();
+        let capacity = self.store.rows();
         for (i, &row) in rows.iter().enumerate() {
+            if row >= capacity {
+                bail!("gather row {row} past store capacity {capacity} — rows are 0..capacity");
+            }
             let dst = &mut out[i * width..(i + 1) * width];
             let page = self.cache.page_of(row);
             self.cache.touch(page);
@@ -296,11 +303,27 @@ impl FeatureSource for PagedFeatures {
     fn write_row(&mut self, row: usize, values: &[f32]) -> Result<()> {
         self.store.write_row(row, values, &mut self.scratch)?;
         self.cache.invalidate_rows(&[row]);
+        // the staging pool may hold a pre-write copy of the page (staged
+        // but never taken, e.g. when admission read around the cache) —
+        // purge it or the next miss would re-admit stale values
+        if let Some(pf) = &self.prefetch {
+            pf.invalidate_page(self.cache.page_of(row));
+        }
         Ok(())
     }
 
     fn invalidate_rows(&mut self, rows: &[usize]) {
         self.cache.invalidate_rows(rows);
+        if let Some(pf) = &self.prefetch {
+            let mut last = usize::MAX;
+            for &row in rows {
+                let page = self.cache.page_of(row);
+                if page != last {
+                    pf.invalidate_page(page);
+                    last = page;
+                }
+            }
+        }
     }
 
     fn take_stats(&mut self) -> StorageStats {
@@ -403,6 +426,56 @@ mod tests {
         assert_eq!(gather_all(&mut b, &[5]), stale, "b unexpectedly saw the write");
         b.invalidate_rows(&[5]);
         assert_eq!(&gather_all(&mut b, &[5])[..], &fresh);
+    }
+
+    #[test]
+    fn write_row_purges_staged_prefetch_copies() {
+        let x = demo_mat(16, 3);
+        let mut pg = paged(&x, 16, 4, 4).with_prefetch();
+        let rows: Vec<usize> = (0..16).collect();
+        // stage every page but gather nothing — the staged copies sit
+        // in the pool untaken, exactly the stale-read hazard
+        pg.stage(&rows);
+        // prefetch bytes are accounted when a page installs, so the
+        // drained counter reaching the full store proves staging is done
+        let all_bytes = (16 * 3 * 4) as u64;
+        let mut total = 0u64;
+        for _ in 0..500 {
+            total += pg.take_stats().bytes_read;
+            if total >= all_bytes {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(total >= all_bytes, "staging never completed");
+        let fresh = [40.0f32, 41.0, 42.0];
+        pg.write_row(5, &fresh).unwrap();
+        // the miss path prefers staged pages — a stale staged copy of
+        // page 1 would be admitted and served here
+        assert_eq!(&gather_all(&mut pg, &[5])[..], &fresh, "gather served pre-write bytes");
+        // invalidate_rows must purge staging the same way
+        pg.stage(&rows);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut scratch = vec![0u8; 64];
+        pg.store().write_row(9, &[9.0, 9.5, 10.0], &mut scratch).unwrap();
+        pg.invalidate_rows(&[9]);
+        assert_eq!(&gather_all(&mut pg, &[9])[..], &[9.0, 9.5, 10.0]);
+    }
+
+    #[test]
+    fn out_of_bounds_gather_errors_instead_of_panicking() {
+        let x = demo_mat(10, 3);
+        let mut mem = MemoryFeatures::padded(&x, 12);
+        let mut pg = paged(&x, 12, 4, 2);
+        let mut out = vec![0f32; 2 * 3];
+        let err = mem.gather(&[0, 12], &mut out).unwrap_err();
+        assert!(err.to_string().contains("12"), "memory error names the row: {err}");
+        let err = pg.gather(&[0, 99], &mut out).unwrap_err();
+        assert!(err.to_string().contains("99"), "paged error names the row: {err}");
+        // in-bounds gathers still work after the failed call
+        let mut one = vec![0f32; 3];
+        pg.gather(&[3], &mut one).unwrap();
+        assert_eq!(one, x.row(3));
     }
 
     #[test]

@@ -41,6 +41,11 @@ struct Staging {
     cursor: usize,
     /// Bytes read from disk by the worker since the last drain.
     bytes_read: u64,
+    /// Invalidation fence: bumped by [`Prefetcher::invalidate_page`].
+    /// The worker snapshots it before a read and refuses to install the
+    /// bytes if it moved — a page read that raced a write can never be
+    /// staged, so staging never serves pre-write values.
+    epoch: u64,
 }
 
 enum Job {
@@ -70,6 +75,7 @@ impl Prefetcher {
                 .collect(),
             cursor: 0,
             bytes_read: 0,
+            epoch: 0,
         }));
         let (tx, rx): (Sender<Job>, Receiver<Job>) = mpsc::channel();
         let pool = Arc::clone(&staging);
@@ -77,6 +83,7 @@ impl Prefetcher {
             .name("grannite-prefetch".into())
             .spawn(move || {
                 let mut scratch = vec![0u8; page_rows * width * 4];
+                let mut local = vec![0f32; page_rows * width];
                 while let Ok(Job::Pages(pages)) = rx.recv() {
                     for &page in &pages {
                         let page = page as usize;
@@ -85,23 +92,35 @@ impl Prefetcher {
                             continue;
                         }
                         let count = page_rows.min(store.rows() - row0);
+                        // short lock: dedup + fence snapshot, no IO
+                        let epoch = {
+                            let pool = pool.lock().unwrap();
+                            if pool.slots.iter().any(|s| s.page == page as u32) {
+                                continue; // already staged
+                            }
+                            pool.epoch
+                        };
+                        // the blocking pread runs OUTSIDE the lock so
+                        // foreground take()/miss paths never serialize
+                        // behind background disk IO
+                        let dst = &mut local[..count * width];
+                        if store.read_rows(row0, count, dst, &mut scratch).is_err() {
+                            continue;
+                        }
                         let mut pool = pool.lock().unwrap();
-                        if pool.slots.iter().any(|s| s.page == page as u32) {
-                            continue; // already staged
+                        if pool.epoch != epoch {
+                            // an invalidation raced the read — these
+                            // bytes may predate a write; drop them and
+                            // let the miss path read the fresh store
+                            continue;
                         }
                         let cur = pool.cursor;
                         pool.cursor = (cur + 1) % STAGE_SLOTS;
                         let slot = &mut pool.slots[cur];
-                        slot.page = EMPTY; // never serve a half-read slot
-                        let dst_ok = {
-                            let dst = &mut slot.data[..count * width];
-                            store.read_rows(row0, count, dst, &mut scratch).is_ok()
-                        };
-                        if dst_ok {
-                            slot.page = page as u32;
-                            slot.rows = count as u32;
-                            pool.bytes_read += (count * width * 4) as u64;
-                        }
+                        slot.page = page as u32;
+                        slot.rows = count as u32;
+                        slot.data[..count * width].copy_from_slice(dst);
+                        pool.bytes_read += (count * width * 4) as u64;
                     }
                 }
             })
@@ -128,6 +147,21 @@ impl Prefetcher {
         dst[..live].copy_from_slice(&slot.data[..live]);
         slot.page = EMPTY;
         Some(rows)
+    }
+
+    /// Purge any staged copy of `page` and fence in-flight reads: a
+    /// read the worker started before this call will not be installed.
+    /// The owning source's write/invalidate paths call this so staging
+    /// can never re-serve pre-write bytes (the staged-then-never-taken
+    /// page would otherwise be admitted into the cache stale).
+    pub fn invalidate_page(&self, page: usize) {
+        let mut pool = self.staging.lock().unwrap();
+        pool.epoch += 1;
+        for s in pool.slots.iter_mut() {
+            if s.page == page as u32 {
+                s.page = EMPTY;
+            }
+        }
     }
 
     /// Bytes the worker has read from disk since the last call
@@ -185,5 +219,46 @@ mod tests {
         // taken pages are consumed
         assert!(pf.take(1, &mut buf).is_none());
         assert!(pf.drain_bytes_read() >= (4 * 3 * 4) as u64);
+    }
+
+    #[test]
+    fn invalidate_page_purges_the_staged_copy() {
+        let x = Mat::from_fn(20, 3, |i, j| (i * 10 + j) as f32);
+        let path = spill_path("prefetch-inval-test");
+        let mut store = PagedStore::create_from_mat(&path, &x, 20).unwrap();
+        store.set_delete_on_drop(true);
+        let store = Arc::new(store);
+        let pf = Prefetcher::spawn(Arc::clone(&store), 4);
+        pf.request(vec![2]);
+        // bytes are accounted in the same critical section that installs
+        // the slot, so observing them proves the page is staged
+        let page_bytes = (4 * 3 * 4) as u64;
+        let mut total = 0u64;
+        for _ in 0..500 {
+            total += pf.drain_bytes_read();
+            if total >= page_bytes {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(total >= page_bytes, "page 2 never staged");
+        pf.invalidate_page(2);
+        let mut buf = vec![0f32; 4 * 3];
+        assert!(pf.take(2, &mut buf).is_none(), "invalidated page still staged");
+        // the cleared slot defeats the worker's dedup, so a re-request
+        // re-reads the store instead of being skipped as already staged
+        pf.request(vec![2]);
+        let mut got = None;
+        for _ in 0..500 {
+            if let Some(rows) = pf.take(2, &mut buf) {
+                got = Some(rows);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(got, Some(4), "page 2 never re-staged after invalidation");
+        for r in 0..4 {
+            assert_eq!(&buf[r * 3..(r + 1) * 3], x.row(8 + r));
+        }
     }
 }

@@ -20,7 +20,9 @@ use anyhow::Result;
 use grannite::coordinator::ModelState;
 use grannite::engine::WorkerPool;
 use grannite::fleet::synthesize_weights;
-use grannite::graph::datasets::{synthesize, synthesize_power_law, Dataset};
+use grannite::graph::datasets::{
+    synthesize, synthesize_power_law, synthesize_power_law_headless, Dataset,
+};
 use grannite::incremental::{IncrementalConfig, IncrementalEngine};
 use grannite::ops::build::{self, GnnDims};
 use grannite::ops::exec;
@@ -322,6 +324,28 @@ fn paged_deployment_matches_memory_at_1_and_3_shards() {
             );
         }
     }
+}
+
+#[test]
+fn headless_dataset_with_empty_store_path_refuses_to_launch() {
+    // spilling a headless dataset would build an all-zero store and
+    // silently serve zero features — the launcher must refuse instead
+    let ds = synthesize_power_law_headless("pl-headless", 120, 6, 4, 24, 11);
+    let mut spec = DeploymentSpec {
+        engine: EngineSpec::named("incremental"),
+        topology: Topology::homogeneous(1),
+        capacity: ds.num_nodes() + 4,
+        ..DeploymentSpec::default()
+    };
+    spec.storage.backend = "paged".into();
+    spec.storage.page_rows = 4;
+    spec.storage.cache_pages = 3;
+    let err = Deployment::launch(&spec, &DataSource::Dataset(ds))
+        .err()
+        .expect("headless spill launch must fail");
+    let err = format!("{err:#}");
+    assert!(err.contains("headless"), "error not actionable: {err}");
+    assert!(err.contains("path"), "error should point at [storage] path: {err}");
 }
 
 #[test]
